@@ -1,0 +1,17 @@
+//! τ × α ablation sweep (paper Tables 6 & 7 shape) on a chosen config.
+//!
+//!     cargo run --release --example ablation_sweep [config] [steps]
+
+use anyhow::Result;
+use grades::exp::{ablation, ExpOptions};
+use grades::runtime::artifact::Client;
+
+fn main() -> Result<()> {
+    let config = std::env::args().nth(1).unwrap_or_else(|| "lm-tiny-fp".to_string());
+    let steps: Option<usize> = std::env::args().nth(2).and_then(|s| s.parse().ok());
+    let mut opts = ExpOptions::default();
+    opts.steps_override = steps;
+    opts.questions = 24;
+    let client = Client::cpu()?;
+    ablation::run(&client, &opts, &config)
+}

@@ -1,0 +1,56 @@
+//! Quickstart: fine-tune the tiny LM with GradES and watch components
+//! freeze.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Loads the AOT artifacts for `lm-tiny-fp`, trains with the GradES
+//! monitor, prints freeze events, and scores the 8 benchmark suites.
+
+use anyhow::Result;
+use grades::config::RepoConfig;
+use grades::coordinator::trainer::{self, StoppingMethod, TrainerOptions};
+use grades::data;
+use grades::eval::{benchmarks, harness};
+use grades::runtime::artifact::{Bundle, Client};
+
+fn main() -> Result<()> {
+    let config = "lm-tiny-fp";
+    let cfg = RepoConfig::by_name(config)?;
+    let client = Client::cpu()?;
+    let bundle = Bundle::by_name(&client, config)?;
+    println!(
+        "loaded {}: {} params, {} monitored components, state {:.1} MB",
+        config,
+        bundle.manifest.n_params_total,
+        bundle.manifest.n_components,
+        bundle.manifest.state_len as f64 * 4.0 / 1e6
+    );
+
+    let mut ds = data::build_lm(&cfg, &bundle.manifest)?;
+    let opts = TrainerOptions::from_config(&cfg, StoppingMethod::GradEs);
+    let trained =
+        trainer::run_and_keep(&bundle, &cfg, &opts, || ds.train.next_batch(), &ds.val)?;
+
+    let o = &trained.outcome;
+    println!(
+        "\ntrained {} steps in {:.2}s  (stop: {:?})",
+        o.steps_run, o.wall_secs, o.stop_cause
+    );
+    println!("train loss {:.4}  val loss {:.4}", o.log.final_train_loss(), o.final_val_loss);
+    for e in &o.freeze.events {
+        println!(
+            "  step {:>4}  froze {:<18} (metric {:.3})",
+            e.step, bundle.manifest.components[e.component].name, e.metric_value
+        );
+    }
+    if let Some(s) = o.variant_swap_step {
+        println!("  step {s:>4}  hot-swapped to the attn-frozen backward graph");
+    }
+
+    println!("\nbenchmarks:");
+    let suites = benchmarks::lm_suites(&ds.vocab, 0xbe9c, 32);
+    for (name, acc) in harness::score_suites(&trained.session, &suites)? {
+        println!("  {name:<12} {acc:5.1}%");
+    }
+    Ok(())
+}

@@ -1,0 +1,105 @@
+//! VLM demo: the paper's §6.3 observation — vision and language towers
+//! converge at different rates, motivating tower-specific thresholds τ
+//! (App. C Table 10).
+//!
+//!     cargo run --release --example vlm_two_tower
+
+use anyhow::Result;
+use grades::config::RepoConfig;
+use grades::coordinator::trainer::{self, StoppingMethod, TrainerOptions};
+use grades::data;
+use grades::eval::{benchmarks, harness};
+use grades::report::figures::ascii_chart;
+use grades::runtime::artifact::{Bundle, Client};
+
+fn main() -> Result<()> {
+    let config = "vlm-tiny-fp";
+    let cfg = RepoConfig::by_name(config)?;
+    let client = Client::cpu()?;
+    let bundle = Bundle::by_name(&client, config)?;
+    let m = &bundle.manifest;
+    println!(
+        "two-tower VLM: {} vision + {} language components, τ_vision={} τ_language={}",
+        m.components_where(|c| c.tower == "vision").len(),
+        m.components_where(|c| c.tower == "language").len(),
+        cfg.grades.tau_vision,
+        cfg.grades.tau_language
+    );
+
+    let ds = data::build_vlm(&cfg, m)?;
+    let batches = ds.train.clone();
+    let mut i = 0usize;
+    let opts = TrainerOptions::from_config(&cfg, StoppingMethod::GradEs);
+    let trained = trainer::run_and_keep(
+        &bundle,
+        &cfg,
+        &opts,
+        move || {
+            let b = batches[i % batches.len()].clone();
+            i += 1;
+            b
+        },
+        &ds.val,
+    )?;
+    let o = &trained.outcome;
+    println!(
+        "\ntrained {} steps in {:.2}s (stop {:?}), caption loss {:.3}",
+        o.steps_run,
+        o.wall_secs,
+        o.stop_cause,
+        o.log.final_train_loss()
+    );
+
+    // freeze order per tower
+    let mut vis_steps = Vec::new();
+    let mut lang_steps = Vec::new();
+    for e in &o.freeze.events {
+        let c = &m.components[e.component];
+        if c.tower == "vision" {
+            vis_steps.push(e.step);
+        } else {
+            lang_steps.push(e.step);
+        }
+    }
+    let mean = |v: &[usize]| v.iter().sum::<usize>() as f64 / v.len().max(1) as f64;
+    println!(
+        "mean freeze step: language {:.0} vs vision {:.0} ({} / {} frozen)",
+        mean(&lang_steps),
+        mean(&vis_steps),
+        lang_steps.len(),
+        vis_steps.len()
+    );
+
+    // tower grad-norm series
+    let vis = m.components_where(|c| c.tower == "vision");
+    let lang = m.components_where(|c| c.tower == "language");
+    let series = |idxs: &[usize]| -> Vec<(f64, f64)> {
+        o.log
+            .records
+            .iter()
+            .map(|r| {
+                (
+                    r.step as f64,
+                    idxs.iter().map(|&i| r.gabs[i] as f64).sum::<f64>() / idxs.len() as f64,
+                )
+            })
+            .collect()
+    };
+    println!(
+        "\n{}",
+        ascii_chart(
+            "mean |grad|_1 per tower",
+            &[("vision", series(&vis)), ("language", series(&lang))],
+            70,
+            12,
+            true
+        )
+    );
+
+    let suites = benchmarks::vlm_suites(&ds.scene_cfg, &ds.vocab, 0x33, 24);
+    println!("VLM benchmarks:");
+    for (name, acc) in harness::score_suites(&trained.session, &suites)? {
+        println!("  {name:<10} {acc:5.1}%");
+    }
+    Ok(())
+}

@@ -1,0 +1,180 @@
+"""AOT exporter: jax → HLO *text* artifacts + manifest.json per config.
+
+HLO text (never ``.serialize()``): xla_extension 0.5.1 rejects jax≥0.5
+protos with 64-bit instruction ids; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:
+  python -m compile.aot                 # export every configs/*.toml
+  python -m compile.aot --config lm-tiny-fp [--force]
+
+Exports are skipped when the artifact dir is newer than the config and the
+compile/ sources (make-style staleness check), so ``make artifacts`` is a
+no-op on an unchanged tree.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import configs, steps
+from .configs import Config
+from .layout import CTRL_PAD, METRIC_PAD, Layout, build_layout, flops_summary
+
+COMPILE_DIR = pathlib.Path(__file__).resolve().parent
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def _arg_specs(cfg: Config, layout: Layout, which: str):
+    m, t = cfg.model, cfg.train
+    f32, i32 = jnp.float32, jnp.int32
+    state = jax.ShapeDtypeStruct((layout.state_len,), f32)
+    tokens = jax.ShapeDtypeStruct((t.batch_size, t.seq_len), i32)
+    targets = jax.ShapeDtypeStruct((t.batch_size, t.seq_len), i32)
+    ctrl = jax.ShapeDtypeStruct((layout.ctrl_len,), f32)
+    patches = jax.ShapeDtypeStruct((t.batch_size, m.n_patches, m.patch_dim), f32)
+    if which == "init":
+        return [jax.ShapeDtypeStruct((1,), i32)]
+    if which == "probe":
+        return [state]
+    if which == "train":
+        if m.kind == "vlm":
+            return [state, tokens, targets, patches, ctrl]
+        return [state, tokens, targets, ctrl]
+    if which == "eval":
+        if m.kind == "vlm":
+            return [state, tokens, targets, patches]
+        return [state, tokens, targets]
+    raise ValueError(which)
+
+
+def build_manifest(cfg: Config, layout: Layout, executables: dict) -> dict:
+    m, t = cfg.model, cfg.train
+    input_names = {
+        "init": ["seed"],
+        "probe": ["state"],
+        "train": (["state", "tokens", "targets", "patches", "ctrl"]
+                  if m.kind == "vlm" else ["state", "tokens", "targets", "ctrl"]),
+        "eval": (["state", "tokens", "targets", "patches"]
+                 if m.kind == "vlm" else ["state", "tokens", "targets"]),
+    }
+    return {
+        "name": cfg.name,
+        "kind": m.kind,
+        "method": t.method,
+        "optimizer": t.optimizer,
+        "kernel_impl": t.kernel_impl,
+        "batch_size": t.batch_size,
+        "seq_len": t.seq_len,
+        "vocab_size": m.vocab_size,
+        "model": {
+            "d_model": m.d_model, "n_layers": m.n_layers, "n_heads": m.n_heads,
+            "d_ff": m.d_ff, "max_seq": m.max_seq,
+            "n_patches": m.n_patches, "patch_dim": m.patch_dim,
+            "d_vision": m.d_vision, "n_vision_layers": m.n_vision_layers,
+        },
+        "state_len": layout.state_len,
+        "metrics_len": layout.metrics_len,
+        "ctrl_len": layout.ctrl_len,
+        "n_components": layout.n_components,
+        "metrics": {
+            "loss_sum": 0, "token_count": 1, "global_gnorm": 2,
+            "gdiff_offset": METRIC_PAD,
+            "gabs_offset": layout.gabs_offset,
+        },
+        "ctrl": {"step": 0, "lr": 1, "wd_scale": 2, "mask_offset": CTRL_PAD},
+        "components": [
+            {
+                "idx": c.idx, "name": c.name, "layer": c.layer, "kind": c.kind,
+                "group": c.group, "tower": c.tower, "n_params": c.n_params,
+                "tensors": list(c.tensors),
+            }
+            for c in layout.components
+        ],
+        "params": [
+            {
+                "name": s.name, "shape": list(s.shape),
+                "offset": layout.param_offsets[s.name],
+                "trainable": s.trainable, "component": s.component,
+            }
+            for s in layout.specs
+        ],
+        "n_params_total": sum(s.size for s in layout.specs),
+        "n_params_trainable": sum(s.size for s in layout.trainable_specs()),
+        "flops": flops_summary(cfg, layout),
+        "executables": executables,
+        "inputs": input_names,
+    }
+
+
+def export_config(cfg: Config, force: bool = False) -> bool:
+    out_dir = cfg.artifact_dir
+    stamp = out_dir / "manifest.json"
+    src_mtime = max(
+        p.stat().st_mtime
+        for p in [*COMPILE_DIR.rglob("*.py"),
+                  configs.CONFIG_DIR / f"{cfg.name}.toml"]
+    )
+    if not force and stamp.exists() and stamp.stat().st_mtime >= src_mtime:
+        print(f"[aot] {cfg.name}: up to date")
+        return False
+    out_dir.mkdir(parents=True, exist_ok=True)
+    layout = build_layout(cfg)
+
+    fns = {
+        "init": steps.make_init(cfg, layout),
+        "train_step": steps.make_train_step(cfg, layout, "full"),
+        "train_step_attn_frozen": steps.make_train_step(cfg, layout, "attn_frozen"),
+        "eval_step": steps.make_eval_step(cfg, layout),
+        "eval_rows": steps.make_eval_rows(cfg, layout),
+        "probe": steps.make_probe(cfg, layout),
+    }
+    which = {"init": "init", "train_step": "train", "train_step_attn_frozen": "train",
+             "eval_step": "eval", "eval_rows": "eval", "probe": "probe"}
+    executables = {}
+    for name, fn in fns.items():
+        specs = _arg_specs(cfg, layout, which[name])
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        (out_dir / fname).write_text(text)
+        executables[name] = fname
+        print(f"[aot] {cfg.name}/{fname}: {len(text)/1e6:.2f} MB")
+
+    manifest = build_manifest(cfg, layout, executables)
+    stamp.write_text(json.dumps(manifest, indent=1))
+    print(f"[aot] {cfg.name}: state_len={layout.state_len} "
+          f"components={layout.n_components} params={manifest['n_params_total']}")
+    return True
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--config", help="config name (default: all)")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    if args.config:
+        cfgs = [configs.load_by_name(args.config)]
+    else:
+        cfgs = [configs.load_config(p) for p in configs.all_config_paths()]
+    for cfg in cfgs:
+        export_config(cfg, force=args.force)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

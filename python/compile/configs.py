@@ -1,0 +1,138 @@
+"""Config loading shared by the AOT exporter and tests.
+
+The same ``configs/*.toml`` files drive both the python compile path (model
+shapes, method, optimizer) and the rust coordinator ([run]/[grades]/[es]/
+[data] sections, which python ignores).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import pathlib
+import tomllib
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[2]
+CONFIG_DIR = REPO_ROOT / "configs"
+ARTIFACT_DIR = REPO_ROOT / "artifacts"
+
+ATTN_KINDS = ("q", "k", "v", "o")
+MLP_KINDS = ("gate", "up", "down")
+COMPONENT_KINDS = ATTN_KINDS + MLP_KINDS
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    kind: str  # "lm" | "vlm"
+    vocab_size: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    max_seq: int
+    # vlm-only (zero for lm)
+    n_patches: int = 0
+    patch_dim: int = 0
+    d_vision: int = 0
+    n_vision_layers: int = 0
+    n_vision_heads: int = 0
+    d_vision_ff: int = 0
+
+    def __post_init__(self):
+        assert self.kind in ("lm", "vlm"), self.kind
+        assert self.d_model % self.n_heads == 0
+        if self.kind == "vlm":
+            assert self.n_patches > 0 and self.patch_dim > 0
+            assert self.d_vision % self.n_vision_heads == 0
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def vision_head_dim(self) -> int:
+        return self.d_vision // self.n_vision_heads
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    batch_size: int
+    seq_len: int
+    optimizer: str  # "adamw" | "sgd"
+    method: str  # "fp" | "lora"
+    weight_decay: float = 0.01
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    momentum: float = 0.9  # sgd
+    lora_rank: int = 4
+    lora_alpha: float = 8.0
+    kernel_impl: str = "xla"  # "xla" | "pallas"
+
+    def __post_init__(self):
+        assert self.optimizer in ("adamw", "sgd"), self.optimizer
+        assert self.method in ("fp", "lora"), self.method
+        assert self.kernel_impl in ("xla", "pallas"), self.kernel_impl
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    name: str
+    model: ModelConfig
+    train: TrainConfig
+    raw: dict
+
+    @property
+    def artifact_dir(self) -> pathlib.Path:
+        return ARTIFACT_DIR / self.name
+
+
+def _model_from_dict(d: dict, v: dict | None) -> ModelConfig:
+    v = v or {}
+    return ModelConfig(
+        kind=d.get("kind", "lm"),
+        vocab_size=d["vocab_size"],
+        d_model=d["d_model"],
+        n_layers=d["n_layers"],
+        n_heads=d["n_heads"],
+        d_ff=d["d_ff"],
+        max_seq=d["max_seq"],
+        n_patches=v.get("n_patches", 0),
+        patch_dim=v.get("patch_dim", 0),
+        d_vision=v.get("d_vision", 0),
+        n_vision_layers=v.get("n_vision_layers", 0),
+        n_vision_heads=v.get("n_vision_heads", 1),
+        d_vision_ff=v.get("d_vision_ff", 0),
+    )
+
+
+def load_config(path: str | pathlib.Path) -> Config:
+    path = pathlib.Path(path)
+    with open(path, "rb") as f:
+        raw = tomllib.load(f)
+    model = _model_from_dict(raw["model"], raw.get("vlm"))
+    t = raw["train"]
+    train = TrainConfig(
+        batch_size=t["batch_size"],
+        seq_len=t["seq_len"],
+        optimizer=t.get("optimizer", "adamw"),
+        method=t.get("method", "fp"),
+        weight_decay=t.get("weight_decay", 0.01),
+        beta1=t.get("beta1", 0.9),
+        beta2=t.get("beta2", 0.999),
+        eps=t.get("eps", 1e-8),
+        momentum=t.get("momentum", 0.9),
+        lora_rank=t.get("lora_rank", 4),
+        lora_alpha=t.get("lora_alpha", 8.0),
+        kernel_impl=t.get("kernel_impl", "xla"),
+    )
+    name = raw.get("name", path.stem)
+    assert model.max_seq >= train.seq_len, "seq_len exceeds max_seq"
+    return Config(name=name, model=model, train=train, raw=raw)
+
+
+def load_by_name(name: str) -> Config:
+    return load_config(CONFIG_DIR / f"{name}.toml")
+
+
+def all_config_paths() -> list[pathlib.Path]:
+    return sorted(CONFIG_DIR.glob("*.toml"))

@@ -1,0 +1,33 @@
+"""L1 Pallas kernels (interpret=True) + pure-jnp oracles.
+
+``impl(kind)`` returns the kernel bundle selected by a config's
+``train.kernel_impl``: "pallas" (the TPU-shaped kernels, interpret mode on
+CPU) or "xla" (semantically identical jnp fast path that XLA fuses).
+Both are pytest-asserted equal to ``ref.py``.
+"""
+
+from . import grad_stats as _gs
+from . import masked_update as _mu
+from . import ref
+
+
+class _PallasImpl:
+    name = "pallas"
+    grad_stats = staticmethod(_gs.grad_stats)
+    masked_adamw = staticmethod(_mu.masked_adamw)
+    masked_sgd = staticmethod(_mu.masked_sgd)
+
+
+class _XlaImpl:
+    name = "xla"
+    grad_stats = staticmethod(_gs.grad_stats_xla)
+    masked_adamw = staticmethod(ref.masked_adamw_ref)
+    masked_sgd = staticmethod(ref.masked_sgd_ref)
+
+
+def impl(kind: str):
+    if kind == "pallas":
+        return _PallasImpl
+    if kind == "xla":
+        return _XlaImpl
+    raise ValueError(f"unknown kernel impl {kind!r}")

@@ -1,0 +1,91 @@
+"""Pallas kernel: fused GradES gradient statistics (the monitoring hot-spot).
+
+Computes, in ONE pass over HBM, both statistics GradES needs per monitored
+matrix (paper Eq. 1 + §3.1):
+
+    gdiff = Σᵢⱼ |g_t[i,j] − g_{t−1}[i,j]|     (convergence metric)
+    gabs  = Σᵢⱼ |g_t[i,j]|                    (§3.1 alternative metric)
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the paper reads gradients
+materialized by PyTorch autograd on GPU; here the reduction is tiled for
+VMEM — grid over row-tiles, both partial sums accumulated into (1,1)
+output blocks that map to the same block every grid step (the canonical
+TPU reduction pattern). Fusing the two stats halves HBM traffic vs two
+separate reductions; the kernel is VPU/bandwidth-bound (no MXU).
+
+``interpret=True`` everywhere: real-TPU lowering emits Mosaic custom-calls
+the CPU PJRT plugin cannot execute (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default row-tile. VMEM budget = 2 tensors · block_rows · n · 4B; for
+# n ≤ 2048 and block_rows = 128 that is ≤ 2 MiB — well inside the ~16 MiB
+# VMEM of a TPU core with headroom for double-buffering.
+DEFAULT_BLOCK_ROWS = 128
+
+
+def _grad_stats_kernel(g_ref, p_ref, diff_ref, abs_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        diff_ref[0, 0] = 0.0
+        abs_ref[0, 0] = 0.0
+
+    g = g_ref[...].astype(jnp.float32)
+    p = p_ref[...].astype(jnp.float32)
+    diff_ref[0, 0] += jnp.sum(jnp.abs(g - p))
+    abs_ref[0, 0] += jnp.sum(jnp.abs(g))
+
+
+def _as_2d(x):
+    if x.ndim == 1:
+        return x.reshape(1, -1)
+    if x.ndim == 2:
+        return x
+    return x.reshape(x.shape[0], -1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def grad_stats(g, g_prev, block_rows: int = DEFAULT_BLOCK_ROWS):
+    """Fused (‖g−g_prev‖₁, ‖g‖₁) via Pallas. Returns two f32 scalars."""
+    g2, p2 = _as_2d(g), _as_2d(g_prev)
+    assert g2.shape == p2.shape, (g2.shape, p2.shape)
+    m, n = g2.shape
+    bm = min(block_rows, m)
+    # Pad rows to a multiple of the tile: |0−0| contributes nothing.
+    if m % bm:
+        pad = bm - m % bm
+        g2 = jnp.pad(g2, ((0, pad), (0, 0)))
+        p2 = jnp.pad(p2, ((0, pad), (0, 0)))
+        m += pad
+    diff, gabs = pl.pallas_call(
+        _grad_stats_kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(g2, p2)
+    return diff[0, 0], gabs[0, 0]
+
+
+def grad_stats_xla(g, g_prev):
+    """Fast-path equivalent (XLA fuses this into one pass too)."""
+    g = g.astype(jnp.float32)
+    g_prev = g_prev.astype(jnp.float32)
+    return jnp.sum(jnp.abs(g - g_prev)), jnp.sum(jnp.abs(g))

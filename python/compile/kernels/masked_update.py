@@ -1,0 +1,116 @@
+"""Pallas kernel: fused freeze-aware optimizer update.
+
+One HBM pass applies the whole AdamW step — moment updates, bias
+correction, decoupled weight decay, and the GradES freeze mask — where an
+unfused implementation costs ~6 separate elementwise passes over p/g/m/v.
+
+Scalars (mask, lr, t, …) arrive as a small f32 vector broadcast to every
+grid step via a BlockSpec that revisits block (0,) — the TPU idiom for
+SMEM-resident scalars. ``interpret=True`` as everywhere (Mosaic
+custom-calls cannot run on the CPU plugin).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 128
+
+# scalar vector layout
+S_MASK, S_LR, S_BETA1, S_BETA2, S_EPS, S_WD, S_T, S_MOMENTUM = range(8)
+N_SCALARS = 8
+
+
+def _adamw_kernel(s_ref, p_ref, g_ref, m_ref, v_ref, po_ref, mo_ref, vo_ref):
+    mask = s_ref[S_MASK]
+    lr = s_ref[S_LR]
+    beta1 = s_ref[S_BETA1]
+    beta2 = s_ref[S_BETA2]
+    eps = s_ref[S_EPS]
+    wd = s_ref[S_WD]
+    t = s_ref[S_T]
+    p = p_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    m = m_ref[...]
+    v = v_ref[...]
+    m_new = beta1 * m + (1.0 - beta1) * g
+    v_new = beta2 * v + (1.0 - beta2) * g * g
+    m_hat = m_new / (1.0 - beta1**t)
+    v_hat = v_new / (1.0 - beta2**t)
+    p_new = p - lr * (m_hat / (jnp.sqrt(v_hat) + eps) + wd * p)
+    po_ref[...] = mask * p_new + (1.0 - mask) * p
+    mo_ref[...] = mask * m_new + (1.0 - mask) * m
+    vo_ref[...] = mask * v_new + (1.0 - mask) * v
+
+
+def _sgd_kernel(s_ref, p_ref, g_ref, mom_ref, po_ref, momo_ref):
+    mask = s_ref[S_MASK]
+    lr = s_ref[S_LR]
+    wd = s_ref[S_WD]
+    momentum = s_ref[S_MOMENTUM]
+    p = p_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    mom = mom_ref[...]
+    mom_new = momentum * mom + g
+    p_new = p - lr * (mom_new + wd * p)
+    po_ref[...] = mask * p_new + (1.0 - mask) * p
+    momo_ref[...] = mask * mom_new + (1.0 - mask) * mom
+
+
+def _as_2d(x):
+    if x.ndim == 1:
+        return x.reshape(1, -1)
+    if x.ndim == 2:
+        return x
+    return x.reshape(x.shape[0], -1)
+
+
+def _tiled_elementwise(kernel, scalars, tensors, n_out, block_rows):
+    """Run an elementwise kernel over row-tiles of same-shape 2D tensors."""
+    shape0 = tensors[0].shape
+    t2 = [_as_2d(t) for t in tensors]
+    m, n = t2[0].shape
+    bm = min(block_rows, m)
+    padded = m
+    if m % bm:
+        pad = bm - m % bm
+        t2 = [jnp.pad(t, ((0, pad), (0, 0))) for t in t2]
+        padded = m + pad
+    grid = (padded // bm,)
+    tile = pl.BlockSpec((bm, n), lambda i: (i, 0))
+    outs = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((N_SCALARS,), lambda i: (0,))] + [tile] * len(t2),
+        out_specs=[tile] * n_out,
+        out_shape=[jax.ShapeDtypeStruct((padded, n), jnp.float32)] * n_out,
+        interpret=True,
+    )(scalars, *t2)
+    return [o[:m].reshape(shape0) for o in outs]
+
+
+def _scalars(mask, lr, beta1=0.0, beta2=0.0, eps=0.0, wd=0.0, t=1.0, momentum=0.0):
+    return jnp.stack([
+        jnp.asarray(x, jnp.float32)
+        for x in (mask, lr, beta1, beta2, eps, wd, t, momentum)
+    ])
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def masked_adamw(p, g, m, v, mask, lr, beta1, beta2, eps, wd, t,
+                 block_rows: int = DEFAULT_BLOCK_ROWS):
+    """Fused freeze-aware AdamW via Pallas → (p', m', v')."""
+    s = _scalars(mask, lr, beta1, beta2, eps, wd, t)
+    po, mo, vo = _tiled_elementwise(_adamw_kernel, s, [p, g, m, v], 3, block_rows)
+    return po, mo, vo
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def masked_sgd(p, g, mom, mask, lr, momentum, wd,
+               block_rows: int = DEFAULT_BLOCK_ROWS):
+    """Fused freeze-aware SGD(+momentum) via Pallas → (p', mom')."""
+    s = _scalars(mask, lr, wd=wd, momentum=momentum)
+    po, momo = _tiled_elementwise(_sgd_kernel, s, [p, g, mom], 2, block_rows)
+    return po, momo

@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: pytest asserts both the Pallas
+(interpret=True) kernels and the fused-XLA fast path match these exactly
+(up to float tolerance) across shape/dtype sweeps.
+"""
+
+import jax.numpy as jnp
+
+
+def grad_stats_ref(g, g_prev):
+    """GradES Eq. 1 statistics for one gradient tensor.
+
+    Returns (gdiff, gabs) scalars:
+      gdiff = ‖g − g_prev‖₁  (element-wise L1 of the difference)
+      gabs  = ‖g‖₁           (element-wise L1)
+    """
+    g = g.astype(jnp.float32)
+    g_prev = g_prev.astype(jnp.float32)
+    return jnp.sum(jnp.abs(g - g_prev)), jnp.sum(jnp.abs(g))
+
+
+def masked_adamw_ref(p, g, m, v, mask, lr, beta1, beta2, eps, wd, t):
+    """Freeze-aware AdamW update for one tensor.
+
+    ``mask`` is 1.0 while the component is active, 0.0 once GradES froze it.
+    Frozen tensors keep p/m/v bit-identical — the same semantics as setting
+    ``requires_grad=False`` in the paper's PyTorch implementation (gradients
+    still flow *through* the weight; its own update is skipped).
+    """
+    p = p.astype(jnp.float32)
+    g = g.astype(jnp.float32)
+    m_new = beta1 * m + (1.0 - beta1) * g
+    v_new = beta2 * v + (1.0 - beta2) * g * g
+    m_hat = m_new / (1.0 - beta1**t)
+    v_hat = v_new / (1.0 - beta2**t)
+    update = m_hat / (jnp.sqrt(v_hat) + eps) + wd * p
+    p_new = p - lr * update
+    return (
+        mask * p_new + (1.0 - mask) * p,
+        mask * m_new + (1.0 - mask) * m,
+        mask * v_new + (1.0 - mask) * v,
+    )
+
+
+def masked_sgd_ref(p, g, mom, mask, lr, momentum, wd):
+    """Freeze-aware SGD(+momentum, +decoupled weight decay)."""
+    p = p.astype(jnp.float32)
+    g = g.astype(jnp.float32)
+    mom_new = momentum * mom + g
+    p_new = p - lr * (mom_new + wd * p)
+    return (
+        mask * p_new + (1.0 - mask) * p,
+        mask * mom_new + (1.0 - mask) * mom,
+    )

@@ -1,0 +1,239 @@
+"""State-vector layout: parameter specs, component registry, offsets.
+
+Everything the model owns lives in one flat ``f32[S]`` vector so the rust
+coordinator can keep it on-device across steps (see DESIGN.md — the xla
+crate returns multi-output tuples as one undecomposable buffer, so every
+executable is single-input-state → single-output-state):
+
+    state = [ metrics M | params | opt slot(s) | prev_grads ]
+
+* ``metrics`` = [loss_sum, token_count, global_gnorm, pad, Gdiff[C], Gabs[C]]
+* ``params``  = every tensor (trainable or frozen) in spec order
+* opt slots   = adamw: (m, v) per *trainable* tensor; sgd: momentum slot
+* prev_grads  = one slot per *monitored* tensor (GradES Eq. 1 carry)
+
+The GradES *component* is the paper's unit of freezing: one of the 7
+projection matrices {q,k,v,o,gate,up,down} in one layer (for LoRA, the
+(A, B) pair adapting that matrix — Eq. 3 sums both gradients).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from . import configs
+from .configs import ATTN_KINDS, COMPONENT_KINDS, Config
+
+METRIC_PAD = 4  # [loss_sum, token_count, global_gnorm, reserved]
+CTRL_PAD = 4  # [step, lr, wd_scale, reserved]
+
+
+@dataclasses.dataclass(frozen=True)
+class Component:
+    idx: int
+    name: str  # e.g. "language.3.up"
+    layer: int
+    kind: str  # q|k|v|o|gate|up|down
+    group: str  # "attention" | "mlp"
+    tower: str  # "language" | "vision"
+    tensors: tuple[str, ...]  # param names whose grads this component monitors
+    n_params: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    name: str
+    shape: tuple[int, ...]
+    trainable: bool
+    component: int | None  # component idx if monitored
+    init: str  # embed|matrix|ones|zeros|lora_a|lora_b|head
+
+    @property
+    def size(self) -> int:
+        return math.prod(self.shape)
+
+
+def _tower_specs(prefix: str, n_layers: int, d: int, d_ff: int, specs, comps, tower: str):
+    """Append one transformer tower's per-layer specs + components."""
+    kind_shapes = {
+        "q": (d, d),
+        "k": (d, d),
+        "v": (d, d),
+        "o": (d, d),
+        "gate": (d, d_ff),
+        "up": (d, d_ff),
+        "down": (d_ff, d),
+    }
+    for layer in range(n_layers):
+        specs.append(ParamSpec(f"{prefix}.{layer}.ln1", (d,), True, None, "ones"))
+        for kind in ("q", "k", "v", "o"):
+            cidx = len(comps)
+            name = f"{prefix}.{layer}.attn.{kind}"
+            comps.append(
+                Component(cidx, f"{tower}.{layer}.{kind}", layer, kind, "attention",
+                          tower, (name,), math.prod(kind_shapes[kind]))
+            )
+            specs.append(ParamSpec(name, kind_shapes[kind], True, cidx, "matrix"))
+        specs.append(ParamSpec(f"{prefix}.{layer}.ln2", (d,), True, None, "ones"))
+        for kind in ("gate", "up", "down"):
+            cidx = len(comps)
+            name = f"{prefix}.{layer}.mlp.{kind}"
+            comps.append(
+                Component(cidx, f"{tower}.{layer}.{kind}", layer, kind, "mlp",
+                          tower, (name,), math.prod(kind_shapes[kind]))
+            )
+            specs.append(ParamSpec(name, kind_shapes[kind], True, cidx, "matrix"))
+
+
+def base_param_specs(cfg: Config) -> tuple[list[ParamSpec], list[Component]]:
+    """Full-parameter specs + component registry for lm or vlm."""
+    m = cfg.model
+    specs: list[ParamSpec] = []
+    comps: list[Component] = []
+    if m.kind == "vlm":
+        specs.append(ParamSpec("vis_in", (m.patch_dim, m.d_vision), True, None, "matrix"))
+        specs.append(ParamSpec("vis_pos", (m.n_patches, m.d_vision), True, None, "embed"))
+        _tower_specs("vis", m.n_vision_layers, m.d_vision, m.d_vision_ff, specs, comps, "vision")
+        specs.append(ParamSpec("vis_ln_f", (m.d_vision,), True, None, "ones"))
+        specs.append(ParamSpec("vis_proj", (m.d_vision, m.d_model), True, None, "matrix"))
+    specs.append(ParamSpec("tok_emb", (m.vocab_size, m.d_model), True, None, "embed"))
+    total_seq = m.max_seq + (m.n_patches if m.kind == "vlm" else 0)
+    specs.append(ParamSpec("pos_emb", (total_seq, m.d_model), True, None, "embed"))
+    _tower_specs("lang", m.n_layers, m.d_model, m.d_ff, specs, comps, "language")
+    specs.append(ParamSpec("ln_f", (m.d_model,), True, None, "ones"))
+    specs.append(ParamSpec("lm_head", (m.d_model, m.vocab_size), True, None, "head"))
+    return specs, comps
+
+
+def lora_param_specs(cfg: Config) -> tuple[list[ParamSpec], list[Component]]:
+    """LoRA: base params frozen; per-component (A, B) adapters trainable.
+
+    For matrix W: [d_in, d_out], A: [d_in, r], B: [r, d_out]; the adapted
+    weight is W + (alpha/r) · A @ B (Eq. 2 transposed to x@W layout).
+    """
+    base, comps = base_param_specs(cfg)
+    r = cfg.train.lora_rank
+    specs = [dataclasses.replace(s, trainable=False, component=None) for s in base]
+    name_to_spec = {s.name: s for s in base}
+    new_comps: list[Component] = []
+    for c in comps:
+        (wname,) = c.tensors
+        d_in, d_out = name_to_spec[wname].shape
+        a_name, b_name = f"{wname}.lora_a", f"{wname}.lora_b"
+        new_comps.append(dataclasses.replace(
+            c, tensors=(a_name, b_name), n_params=r * (d_in + d_out)))
+        specs.append(ParamSpec(a_name, (d_in, r), True, c.idx, "lora_a"))
+        specs.append(ParamSpec(b_name, (r, d_out), True, c.idx, "lora_b"))
+    return specs, new_comps
+
+
+@dataclasses.dataclass(frozen=True)
+class Layout:
+    cfg: Config
+    specs: tuple[ParamSpec, ...]
+    components: tuple[Component, ...]
+    metrics_len: int
+    ctrl_len: int
+    param_offsets: dict  # name -> offset in flat state
+    opt_offsets: dict  # slot -> {name -> offset}; slots: "m","v" or "mom"
+    prev_offsets: dict  # name -> offset (monitored tensors only)
+    state_len: int
+
+    @property
+    def n_components(self) -> int:
+        return len(self.components)
+
+    @property
+    def gdiff_offset(self) -> int:
+        return METRIC_PAD
+
+    @property
+    def gabs_offset(self) -> int:
+        return METRIC_PAD + self.n_components
+
+    @property
+    def mask_offset(self) -> int:
+        return CTRL_PAD
+
+    def trainable_specs(self) -> list[ParamSpec]:
+        return [s for s in self.specs if s.trainable]
+
+    def monitored_specs(self) -> list[ParamSpec]:
+        return [s for s in self.specs if s.trainable and s.component is not None]
+
+    def spec(self, name: str) -> ParamSpec:
+        return next(s for s in self.specs if s.name == name)
+
+
+def build_layout(cfg: Config) -> Layout:
+    if cfg.train.method == "lora":
+        specs, comps = lora_param_specs(cfg)
+    else:
+        specs, comps = base_param_specs(cfg)
+    n_c = len(comps)
+    metrics_len = METRIC_PAD + 2 * n_c
+    ctrl_len = CTRL_PAD + n_c
+
+    off = metrics_len
+    param_offsets = {}
+    for s in specs:
+        param_offsets[s.name] = off
+        off += s.size
+
+    opt_slots = ("m", "v") if cfg.train.optimizer == "adamw" else ("mom",)
+    opt_offsets: dict = {slot: {} for slot in opt_slots}
+    for slot in opt_slots:
+        for s in specs:
+            if s.trainable:
+                opt_offsets[slot][s.name] = off
+                off += s.size
+
+    prev_offsets = {}
+    for s in specs:
+        if s.trainable and s.component is not None:
+            prev_offsets[s.name] = off
+            off += s.size
+
+    return Layout(
+        cfg=cfg,
+        specs=tuple(specs),
+        components=tuple(comps),
+        metrics_len=metrics_len,
+        ctrl_len=ctrl_len,
+        param_offsets=param_offsets,
+        opt_offsets=opt_offsets,
+        prev_offsets=prev_offsets,
+        state_len=off,
+    )
+
+
+def flops_summary(cfg: Config, layout: Layout) -> dict:
+    """Analytic per-token matmul FLOPs, component-resolved.
+
+    For x@W with W:[a,b]: fwd = 2ab/token, bwd dX = 2ab, bwd dW = 2ab.
+    Attention score/context matmuls add 4·T·d per layer per token. The rust
+    FLOPs model composes these with the live freeze state.
+    """
+    m = cfg.model
+    per_component_fwd = {}
+    for c in layout.components:
+        f = 0
+        for t in c.tensors:
+            f += 2 * layout.spec(t).size
+        per_component_fwd[c.name] = f
+    lang_attn_quad = 4 * cfg.train.seq_len * m.d_model * m.n_layers
+    vis_attn_quad = 0
+    if m.kind == "vlm":
+        vis_attn_quad = 4 * m.n_patches * m.d_vision * m.n_vision_layers
+    head = 2 * m.d_model * m.vocab_size
+    embed_proj = 2 * m.patch_dim * m.d_vision + 2 * m.d_vision * m.d_model if m.kind == "vlm" else 0
+    comp_total = sum(per_component_fwd.values())
+    fwd_per_token = comp_total + lang_attn_quad + vis_attn_quad + head + embed_proj
+    return {
+        "fwd_per_token": fwd_per_token,
+        "bwd_dx_per_token": fwd_per_token,  # symmetric estimate
+        "per_component_fwd": per_component_fwd,  # dW cost per token == this
+        "attn_quadratic_per_token": lang_attn_quad + vis_attn_quad,
+        "head_per_token": head,
+    }

@@ -1,0 +1,29 @@
+"""LoRA adaptation (paper §3.2).
+
+W_adapted = W_frozen + (alpha/r) · A @ B per monitored matrix (Eq. 2, in
+x@W layout). GradES monitors the *pair*: G = ‖∇A‖₁-stats + ‖∇B‖₁-stats
+(Eq. 3); freezing a component stops updates to both A and B while the
+merged weight still participates in the forward/backward graph.
+"""
+
+from __future__ import annotations
+
+from .configs import Config
+
+
+def merge_lora(trainable: dict, frozen: dict, cfg: Config, components) -> dict:
+    """Materialize adapted weights: frozen base + scaled A@B per component.
+
+    A/B are looked up in either dict: the attn_frozen graph variant moves
+    stop_gradient'ed adapters to the frozen side.
+    """
+    scale = cfg.train.lora_alpha / cfg.train.lora_rank
+    lookup = {**frozen, **trainable}
+    params = dict(frozen)
+    for c in components:
+        a_name, b_name = c.tensors
+        wname = a_name[: -len(".lora_a")]
+        params[wname] = frozen[wname] + scale * (lookup[a_name] @ lookup[b_name])
+        params.pop(a_name, None)
+        params.pop(b_name, None)
+    return params

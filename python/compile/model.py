@@ -1,0 +1,127 @@
+"""L2: decoder-only transformer with the paper's 7-matrix layer anatomy.
+
+Every layer owns exactly the matrices GradES monitors (paper Fig. 1):
+attention projections Wq, Wk, Wv, Wo and SwiGLU MLP Wgate, Wup, Wdown —
+the same anatomy as the Qwen3 family the paper fine-tunes. Pre-RMSNorm,
+learned positional embeddings, untied LM head.
+
+Parameters are a flat ``dict[name -> array]`` whose names/shapes come from
+``layout.base_param_specs`` so the python model, the manifest, and the rust
+coordinator all agree on one ordering.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .configs import Config
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * scale
+
+
+def attention(params, prefix: str, x, n_heads: int, causal: bool, layer: int):
+    """Multi-head attention using the per-matrix weights GradES monitors."""
+    B, T, D = x.shape
+    hd = D // n_heads
+    q = x @ params[f"{prefix}.{layer}.attn.q"]
+    k = x @ params[f"{prefix}.{layer}.attn.k"]
+    v = x @ params[f"{prefix}.{layer}.attn.v"]
+
+    def split(t):
+        return t.reshape(B, T, n_heads, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = split(q), split(k), split(v)
+    scores = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(jnp.float32(hd))
+    if causal:
+        mask = jnp.tril(jnp.ones((T, T), jnp.bool_))
+        scores = jnp.where(mask, scores, jnp.float32(-1e9))
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = (probs @ v).transpose(0, 2, 1, 3).reshape(B, T, D)
+    return ctx @ params[f"{prefix}.{layer}.attn.o"]
+
+
+def mlp(params, prefix: str, x, layer: int):
+    """SwiGLU: down( silu(x·Wgate) ⊙ (x·Wup) )."""
+    gate = jax.nn.silu(x @ params[f"{prefix}.{layer}.mlp.gate"])
+    up = x @ params[f"{prefix}.{layer}.mlp.up"]
+    return (gate * up) @ params[f"{prefix}.{layer}.mlp.down"]
+
+
+def tower(params, prefix: str, x, n_layers: int, n_heads: int, causal: bool):
+    for layer in range(n_layers):
+        h = rms_norm(x, params[f"{prefix}.{layer}.ln1"])
+        x = x + attention(params, prefix, h, n_heads, causal, layer)
+        h = rms_norm(x, params[f"{prefix}.{layer}.ln2"])
+        x = x + mlp(params, prefix, h, layer)
+    return x
+
+
+def lm_logits(params, cfg: Config, tokens):
+    """tokens i32[B,T] → logits f32[B,T,V]."""
+    m = cfg.model
+    T = tokens.shape[1]
+    x = params["tok_emb"][tokens] + params["pos_emb"][:T]
+    x = tower(params, "lang", x, m.n_layers, m.n_heads, causal=True)
+    x = rms_norm(x, params["ln_f"])
+    return x @ params["lm_head"]
+
+
+def vlm_logits(params, cfg: Config, patches, tokens):
+    """LLaVA-style two-tower: vision prefix tokens + causal text decoder.
+
+    patches f32[B,P,patch_dim], tokens i32[B,T] → logits f32[B,T,V] over the
+    text positions only. Vision tower is bidirectional (ViT-like); its 7
+    matrices per layer carry tower="vision" in the manifest, which is how
+    the coordinator reproduces the paper's §6.3 vision-vs-language
+    convergence split.
+    """
+    m = cfg.model
+    P = patches.shape[1]
+    T = tokens.shape[1]
+    v = patches @ params["vis_in"] + params["vis_pos"][:P]
+    v = tower(params, "vis", v, m.n_vision_layers, m.n_vision_heads, causal=False)
+    v = rms_norm(v, params["vis_ln_f"])
+    prefix = v @ params["vis_proj"]  # [B,P,D]
+
+    t = params["tok_emb"][tokens]
+    x = jnp.concatenate([prefix, t], axis=1) + params["pos_emb"][: P + T]
+    x = tower(params, "lang", x, m.n_layers, m.n_heads, causal=True)
+    x = rms_norm(x, params["ln_f"])
+    return x[:, P:] @ params["lm_head"]
+
+
+def token_loss(logits, targets):
+    """(Σ CE over valid targets, Σ valid count). targets < 0 are padding."""
+    valid = (targets >= 0).astype(jnp.float32)
+    safe = jnp.maximum(targets, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll * valid), jnp.sum(valid)
+
+
+def init_params(cfg: Config, specs, key):
+    """Seeded init per ParamSpec.init kind (B of LoRA starts at zero)."""
+    out = {}
+    for s in specs:
+        key, sub = jax.random.split(key)
+        if s.init in ("embed", "head"):
+            val = 0.02 * jax.random.normal(sub, s.shape, jnp.float32)
+        elif s.init == "matrix":
+            fan_in = s.shape[0]
+            val = jax.random.normal(sub, s.shape, jnp.float32) / jnp.sqrt(jnp.float32(fan_in))
+        elif s.init == "ones":
+            val = jnp.ones(s.shape, jnp.float32)
+        elif s.init == "zeros":
+            val = jnp.zeros(s.shape, jnp.float32)
+        elif s.init == "lora_a":
+            val = 0.05 * jax.random.normal(sub, s.shape, jnp.float32)
+        elif s.init == "lora_b":
+            val = jnp.zeros(s.shape, jnp.float32)
+        else:
+            raise ValueError(s.init)
+        out[s.name] = val
+    return out

@@ -1,0 +1,261 @@
+"""Step-function factory: the flat-state executables the coordinator runs.
+
+Builds, per config:
+  init(seed i32[1])                                   → state f32[S]
+  train_step(state, tokens, targets[, patches], ctrl) → state f32[S]
+  eval_step(state, tokens, targets[, patches])        → f32[2] (Σloss, Σcnt)
+  probe(state)                                        → f32[M] metrics prefix
+
+The train step embeds the full GradES data path (paper Alg. 1 lines 6–16):
+compute grads, per-component Eq.-1 stats via the L1 kernel, freeze-masked
+optimizer update, prev-grad carry — while the freeze *decisions* (lines
+7–11, grace period, τ, termination) live in the rust coordinator, which
+feeds the mask back through ``ctrl``.
+
+``variant="attn_frozen"`` wraps every attention weight in stop_gradient:
+XLA then genuinely omits those dW matmuls from the backward graph — the
+compute-saving tier the coordinator's scheduler switches to once GradES
+froze all attention components (the paper's Fig. 4a observation).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels, model
+from .configs import Config
+from .layout import CTRL_PAD, METRIC_PAD, Layout
+from .lora import merge_lora
+
+
+def unpack(state, layout: Layout, offsets: dict, names) -> dict:
+    out = {}
+    for name in names:
+        s = layout.spec(name)
+        off = offsets[name]
+        out[name] = state[off : off + s.size].reshape(s.shape)
+    return out
+
+
+def _forward_params(trainable: dict, frozen: dict, layout: Layout) -> dict:
+    cfg = layout.cfg
+    if cfg.train.method == "lora":
+        return merge_lora(trainable, frozen, cfg, layout.components)
+    return {**frozen, **trainable}
+
+
+def _logits_loss(params, cfg: Config, tokens, targets, patches):
+    if cfg.model.kind == "vlm":
+        logits = model.vlm_logits(params, cfg, patches, tokens)
+    else:
+        logits = model.lm_logits(params, cfg, tokens)
+    return model.token_loss(logits, targets)
+
+
+def make_init(cfg: Config, layout: Layout):
+    """Assemble the initial state by ONE concatenation in layout order.
+
+    (Perf: a dynamic-update-slice per tensor made XLA's compile of the init
+    graph super-linear in tensor count — 3–5 min for LoRA configs. The
+    layout is contiguous in spec order, so a single concat is equivalent
+    and compiles in seconds. See EXPERIMENTS.md §Perf.)
+    """
+
+    def init(seed):
+        # ONE fused RNG draw for every random parameter (a split + normal
+        # per tensor made XLA compile time super-linear in tensor count for
+        # LoRA layouts), then per-tensor deterministic scaling.
+        key = jax.random.PRNGKey(seed[0])
+        total_rand = sum(s.size for s in layout.specs)
+        noise = jax.random.normal(key, (total_rand,), jnp.float32)
+        parts = [jnp.zeros((layout.metrics_len,), jnp.float32)]
+        off = 0
+        for s in layout.specs:
+            chunk = noise[off : off + s.size]
+            off += s.size
+            if s.init in ("embed", "head"):
+                val = 0.02 * chunk
+            elif s.init == "matrix":
+                val = chunk / jnp.sqrt(jnp.float32(s.shape[0]))
+            elif s.init == "lora_a":
+                val = 0.05 * chunk
+            elif s.init == "ones":
+                val = jnp.ones((s.size,), jnp.float32)
+            elif s.init in ("zeros", "lora_b"):
+                val = jnp.zeros((s.size,), jnp.float32)
+            else:
+                raise ValueError(s.init)
+            parts.append(val)
+        tail = layout.state_len - layout.metrics_len - total_rand
+        parts.append(jnp.zeros((tail,), jnp.float32))  # opt slots + prev
+        return jnp.concatenate(parts)
+
+    return init
+
+
+def make_train_step(cfg: Config, layout: Layout, variant: str = "full"):
+    kern = kernels.impl(cfg.train.kernel_impl)
+    train_names = [s.name for s in layout.trainable_specs()]
+    frozen_names = [s.name for s in layout.specs if not s.trainable]
+    monitored = layout.monitored_specs()
+    comp_of = {s.name: s.component for s in monitored}
+
+    def step(state, tokens, targets, patches, ctrl):
+        t = ctrl[0]
+        lr = ctrl[1]
+        wd_scale = ctrl[2]
+        mask = ctrl[CTRL_PAD : CTRL_PAD + layout.n_components]
+
+        trainable = unpack(state, layout, layout.param_offsets, train_names)
+        frozen = unpack(state, layout, layout.param_offsets, frozen_names)
+
+        if variant == "attn_frozen":
+            # Backward graph genuinely skips attention dW matmuls.
+            for name in list(trainable):
+                spec = layout.spec(name)
+                if spec.component is not None and \
+                        layout.components[spec.component].group == "attention":
+                    frozen = {**frozen, name: jax.lax.stop_gradient(trainable[name])}
+                    del trainable[name]
+
+        def loss_fn(tr):
+            params = _forward_params({**tr, **{}}, {**frozen}, layout)
+            loss_sum, count = _logits_loss(params, cfg, tokens, targets, patches)
+            return loss_sum / jnp.maximum(count, 1.0), (loss_sum, count)
+
+        grads, (loss_sum, count) = jax.grad(loss_fn, has_aux=True)(trainable)
+
+        # --- GradES Eq. 1 statistics per component (L1 kernel) ---
+        prev = unpack(state, layout, layout.prev_offsets,
+                      [s.name for s in monitored if s.name in grads])
+        gdiff = jnp.zeros((layout.n_components,), jnp.float32)
+        gabs = jnp.zeros((layout.n_components,), jnp.float32)
+        for name, g in grads.items():
+            c = comp_of.get(name)
+            if c is None or name not in prev:
+                continue
+            d, a = kern.grad_stats(g, prev[name])
+            gdiff = gdiff.at[c].add(d)
+            gabs = gabs.at[c].add(a)
+
+        global_gnorm = sum(jnp.sum(jnp.abs(g)) for g in grads.values())
+
+        # --- freeze-masked optimizer update + prev-grad carry ---
+        # New values per tensor; the state is reassembled by ONE concat in
+        # layout order (a DUS per tensor made XLA compile super-linear in
+        # tensor count — see EXPERIMENTS.md §Perf).
+        new_params = {}
+        new_opt: dict = {slot: {} for slot in layout.opt_offsets}
+        new_prev = {}
+        for name, g in grads.items():
+            s = layout.spec(name)
+            c = comp_of.get(name)
+            mval = mask[c] if c is not None else jnp.float32(1.0)
+            p = trainable[name]
+            wd = cfg.train.weight_decay * wd_scale
+            if cfg.train.optimizer == "adamw":
+                moff = layout.opt_offsets["m"][name]
+                voff = layout.opt_offsets["v"][name]
+                m = state[moff : moff + s.size].reshape(s.shape)
+                v = state[voff : voff + s.size].reshape(s.shape)
+                pn, mn, vn = kern.masked_adamw(
+                    p, g, m, v, mval, lr, cfg.train.beta1, cfg.train.beta2,
+                    cfg.train.eps, wd, t)
+                new_opt["m"][name] = mn
+                new_opt["v"][name] = vn
+            else:
+                momoff = layout.opt_offsets["mom"][name]
+                mom = state[momoff : momoff + s.size].reshape(s.shape)
+                pn, momn = kern.masked_sgd(p, g, mom, mval, lr, cfg.train.momentum, wd)
+                new_opt["mom"][name] = momn
+            new_params[name] = pn
+            if name in prev:
+                # Store ∇W_t for the next step's Eq. 1 (Alg. 1 line 16);
+                # frozen components stop being monitored so keep theirs.
+                new_prev[name] = mval * g.reshape(-1) + (1.0 - mval) * state[
+                    layout.prev_offsets[name] : layout.prev_offsets[name] + s.size]
+
+        metrics = jnp.concatenate([
+            jnp.stack([loss_sum, count, global_gnorm, jnp.float32(0.0)]),
+            gdiff,
+            gabs,
+        ])
+        parts = [metrics]
+        for s in layout.specs:  # params region, spec order
+            if s.name in new_params:
+                parts.append(new_params[s.name].reshape(-1))
+            else:
+                off = layout.param_offsets[s.name]
+                parts.append(state[off : off + s.size])
+        for slot in layout.opt_offsets:  # opt slots, spec order per slot
+            for s in layout.specs:
+                if not s.trainable:
+                    continue
+                if s.name in new_opt[slot]:
+                    parts.append(new_opt[slot][s.name].reshape(-1))
+                else:
+                    off = layout.opt_offsets[slot][s.name]
+                    parts.append(state[off : off + s.size])
+        for s in layout.specs:  # prev-grad region, spec order
+            if s.trainable and s.component is not None:
+                if s.name in new_prev:
+                    parts.append(new_prev[s.name].reshape(-1))
+                else:
+                    off = layout.prev_offsets[s.name]
+                    parts.append(state[off : off + s.size])
+        return jnp.concatenate(parts)
+
+    if cfg.model.kind == "vlm":
+        return lambda state, tokens, targets, patches, ctrl: step(
+            state, tokens, targets, patches, ctrl)
+    return lambda state, tokens, targets, ctrl: step(state, tokens, targets, None, ctrl)
+
+
+def make_eval_step(cfg: Config, layout: Layout):
+    all_names = [s.name for s in layout.specs]
+
+    def ev(state, tokens, targets, patches):
+        stored = unpack(state, layout, layout.param_offsets, all_names)
+        trainable = {s.name: stored[s.name] for s in layout.trainable_specs()}
+        frozen = {s.name: stored[s.name] for s in layout.specs if not s.trainable}
+        params = _forward_params(trainable, frozen, layout)
+        loss_sum, count = _logits_loss(params, cfg, tokens, targets, patches)
+        return jnp.stack([loss_sum, count])
+
+    if cfg.model.kind == "vlm":
+        return lambda state, tokens, targets, patches: ev(state, tokens, targets, patches)
+    return lambda state, tokens, targets: ev(state, tokens, targets, None)
+
+
+def make_eval_rows(cfg: Config, layout: Layout):
+    """Per-row losses for multiple-choice scoring: → f32[2B] =
+    concat(per-row loss_sum, per-row valid count). Each row is one MC
+    option; the rust harness argmins mean NLL across an option group."""
+    all_names = [s.name for s in layout.specs]
+
+    def ev(state, tokens, targets, patches):
+        stored = unpack(state, layout, layout.param_offsets, all_names)
+        trainable = {s.name: stored[s.name] for s in layout.trainable_specs()}
+        frozen = {s.name: stored[s.name] for s in layout.specs if not s.trainable}
+        params = _forward_params(trainable, frozen, layout)
+        if cfg.model.kind == "vlm":
+            logits = model.vlm_logits(params, cfg, patches, tokens)
+        else:
+            logits = model.lm_logits(params, cfg, tokens)
+        valid = (targets >= 0).astype(jnp.float32)
+        safe = jnp.maximum(targets, 0)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+        return jnp.concatenate([jnp.sum(nll * valid, axis=1), jnp.sum(valid, axis=1)])
+
+    if cfg.model.kind == "vlm":
+        return lambda state, tokens, targets, patches: ev(state, tokens, targets, patches)
+    return lambda state, tokens, targets: ev(state, tokens, targets, None)
+
+
+def make_probe(cfg: Config, layout: Layout):
+    def probe(state):
+        return state[: layout.metrics_len]
+
+    return probe

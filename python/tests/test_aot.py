@@ -1,0 +1,73 @@
+"""AOT export invariants: manifests agree with layouts, HLO text loadable."""
+
+import json
+
+import pytest
+
+from compile import configs
+from compile.aot import build_manifest
+from compile.layout import build_layout
+
+
+@pytest.mark.parametrize("name", ["lm-tiny-fp", "lm-tiny-lora", "vlm-tiny-fp"])
+def test_manifest_matches_layout(name):
+    cfg = configs.load_by_name(name)
+    layout = build_layout(cfg)
+    man = build_manifest(cfg, layout, {})
+    assert man["state_len"] == layout.state_len
+    assert man["n_components"] == layout.n_components
+    assert man["metrics_len"] == layout.metrics_len
+    assert len(man["params"]) == len(layout.specs)
+    # param offsets strictly increasing and inside the state
+    offsets = [p["offset"] for p in man["params"]]
+    assert offsets == sorted(offsets)
+    assert offsets[0] == layout.metrics_len
+    for p in man["params"]:
+        import math
+        assert p["offset"] + math.prod(p["shape"]) <= layout.state_len
+
+
+def test_manifest_component_tensor_names_exist():
+    cfg = configs.load_by_name("lm-tiny-lora")
+    layout = build_layout(cfg)
+    man = build_manifest(cfg, layout, {})
+    param_names = {p["name"] for p in man["params"]}
+    for c in man["components"]:
+        for t in c["tensors"]:
+            assert t in param_names
+        assert c["tensors"][0].endswith(".lora_a")
+
+
+def test_flops_positive_and_monotone_in_scale():
+    tiny = configs.load_by_name("lm-tiny-fp")
+    small = configs.load_by_name("lm-small-fp")
+    ft = build_manifest(tiny, build_layout(tiny), {})["flops"]
+    fs = build_manifest(small, build_layout(small), {})["flops"]
+    assert 0 < ft["fwd_per_token"] < fs["fwd_per_token"]
+
+
+def test_exported_artifacts_consistent_with_source(tmp_path):
+    """If artifacts exist on disk, their manifests must round-trip as JSON
+    and agree with a freshly built layout."""
+    for name in ["lm-tiny-fp"]:
+        cfg = configs.load_by_name(name)
+        mpath = cfg.artifact_dir / "manifest.json"
+        if not mpath.exists():
+            pytest.skip("artifacts not built")
+        man = json.loads(mpath.read_text())
+        layout = build_layout(cfg)
+        assert man["state_len"] == layout.state_len
+        assert man["n_components"] == layout.n_components
+        for exe in man["executables"].values():
+            text = (cfg.artifact_dir / exe).read_text()
+            assert text.startswith("HloModule"), exe
+
+
+def test_vlm_manifest_has_towers():
+    cfg = configs.load_by_name("vlm-tiny-fp")
+    layout = build_layout(cfg)
+    man = build_manifest(cfg, layout, {})
+    towers = {c["tower"] for c in man["components"]}
+    assert towers == {"vision", "language"}
+    n_vis = sum(1 for c in man["components"] if c["tower"] == "vision")
+    assert n_vis == 7 * cfg.model.n_vision_layers

@@ -1,0 +1,137 @@
+"""L1 kernel correctness: Pallas (interpret) and fused-XLA vs ref oracles.
+
+Hypothesis sweeps shapes/dtypes; assert_allclose against ref.py. This is
+the core correctness signal for the kernel layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import grad_stats as gs
+from compile.kernels import masked_update as mu
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(rng, shape, dtype):
+    x = rng.standard_normal(shape).astype(dtype)
+    return jnp.asarray(x)
+
+
+shapes_2d = st.tuples(st.integers(1, 300), st.integers(1, 65))
+dtypes = st.sampled_from([np.float32, jnp.bfloat16])
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape=shapes_2d, dtype=dtypes, seed=st.integers(0, 2**31 - 1))
+def test_grad_stats_pallas_matches_ref(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    g = rand(rng, shape, dtype)
+    p = rand(rng, shape, dtype)
+    d_ref, a_ref = ref.grad_stats_ref(g, p)
+    d, a = gs.grad_stats(g, p)
+    np.testing.assert_allclose(d, d_ref, rtol=2e-5, atol=1e-5)
+    np.testing.assert_allclose(a, a_ref, rtol=2e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape=shapes_2d, seed=st.integers(0, 2**31 - 1))
+def test_grad_stats_xla_matches_ref(shape, seed):
+    rng = np.random.default_rng(seed)
+    g = rand(rng, shape, np.float32)
+    p = rand(rng, shape, np.float32)
+    d_ref, a_ref = ref.grad_stats_ref(g, p)
+    d, a = gs.grad_stats_xla(g, p)
+    np.testing.assert_allclose(d, d_ref, rtol=1e-6)
+    np.testing.assert_allclose(a, a_ref, rtol=1e-6)
+
+
+@pytest.mark.parametrize("shape", [(7,), (1, 1), (128, 64), (129, 3), (4, 2, 6)])
+def test_grad_stats_shape_classes(shape):
+    rng = np.random.default_rng(0)
+    g = rand(rng, shape, np.float32)
+    p = rand(rng, shape, np.float32)
+    d_ref, a_ref = ref.grad_stats_ref(g, p)
+    d, a = gs.grad_stats(g, p)
+    np.testing.assert_allclose(d, d_ref, rtol=2e-5)
+    np.testing.assert_allclose(a, a_ref, rtol=2e-5)
+
+
+def test_grad_stats_zero_diff():
+    g = jnp.ones((130, 7))  # forces row padding
+    d, a = gs.grad_stats(g, g)
+    assert float(d) == 0.0
+    np.testing.assert_allclose(a, 130 * 7, rtol=1e-6)
+
+
+@pytest.mark.parametrize("block_rows", [32, 128, 512])
+def test_grad_stats_block_shape_invariant(block_rows):
+    rng = np.random.default_rng(3)
+    g = rand(rng, (257, 33), np.float32)
+    p = rand(rng, (257, 33), np.float32)
+    d, a = gs.grad_stats(g, p, block_rows=block_rows)
+    d_ref, a_ref = ref.grad_stats_ref(g, p)
+    np.testing.assert_allclose(d, d_ref, rtol=2e-5)
+    np.testing.assert_allclose(a, a_ref, rtol=2e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    shape=shapes_2d,
+    mask=st.sampled_from([0.0, 1.0]),
+    t=st.integers(1, 1000),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_masked_adamw_matches_ref(shape, mask, t, seed):
+    rng = np.random.default_rng(seed)
+    p = rand(rng, shape, np.float32)
+    g = rand(rng, shape, np.float32)
+    m = rand(rng, shape, np.float32) * 0.1
+    v = jnp.abs(rand(rng, shape, np.float32)) * 0.01
+    args = (p, g, m, v, mask, 1e-3, 0.9, 0.999, 1e-8, 0.01, float(t))
+    p1, m1, v1 = mu.masked_adamw(*args)
+    p2, m2, v2 = ref.masked_adamw_ref(*args)
+    np.testing.assert_allclose(p1, p2, rtol=2e-5, atol=1e-6)
+    np.testing.assert_allclose(m1, m2, rtol=2e-5, atol=1e-6)
+    np.testing.assert_allclose(v1, v2, rtol=2e-5, atol=1e-6)
+
+
+def test_masked_adamw_frozen_is_identity():
+    rng = np.random.default_rng(1)
+    p = rand(rng, (65, 33), np.float32)
+    g = rand(rng, (65, 33), np.float32)
+    m = jnp.zeros_like(p)
+    v = jnp.zeros_like(p)
+    p1, m1, v1 = mu.masked_adamw(p, g, m, v, 0.0, 1e-2, 0.9, 0.999, 1e-8, 0.1, 1.0)
+    np.testing.assert_array_equal(p1, p)
+    np.testing.assert_array_equal(m1, m)
+    np.testing.assert_array_equal(v1, v)
+
+
+@settings(max_examples=15, deadline=None)
+@given(shape=shapes_2d, mask=st.sampled_from([0.0, 1.0]), seed=st.integers(0, 2**31 - 1))
+def test_masked_sgd_matches_ref(shape, mask, seed):
+    rng = np.random.default_rng(seed)
+    p = rand(rng, shape, np.float32)
+    g = rand(rng, shape, np.float32)
+    mom = rand(rng, shape, np.float32) * 0.1
+    args = (p, g, mom, mask, 1e-2, 0.9, 0.01)
+    p1, m1 = mu.masked_sgd(*args)
+    p2, m2 = ref.masked_sgd_ref(*args)
+    np.testing.assert_allclose(p1, p2, rtol=2e-5, atol=1e-6)
+    np.testing.assert_allclose(m1, m2, rtol=2e-5, atol=1e-6)
+
+
+def test_adamw_bias_correction_direction():
+    """First step with zero moments must move p against the gradient sign."""
+    p = jnp.zeros((8, 8))
+    g = jnp.ones((8, 8))
+    m = jnp.zeros_like(p)
+    v = jnp.zeros_like(p)
+    p1, _, _ = mu.masked_adamw(p, g, m, v, 1.0, 1e-3, 0.9, 0.999, 1e-8, 0.0, 1.0)
+    assert float(jnp.max(p1)) < 0.0
+    np.testing.assert_allclose(p1, -1e-3 * jnp.ones_like(p), rtol=1e-3)

@@ -1,0 +1,147 @@
+"""L2 model/layout correctness: shapes, loss, masking, LoRA, VLM."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, model, steps
+from compile.layout import build_layout
+from compile.lora import merge_lora
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return configs.load_by_name("lm-tiny-fp")
+
+
+@pytest.fixture(scope="module")
+def layout(cfg):
+    return build_layout(cfg)
+
+
+@pytest.fixture(scope="module")
+def params(cfg, layout):
+    return model.init_params(cfg, layout.specs, jax.random.PRNGKey(0))
+
+
+def test_layout_component_registry(cfg, layout):
+    assert layout.n_components == 7 * cfg.model.n_layers
+    kinds = [c.kind for c in layout.components[:7]]
+    assert kinds == ["q", "k", "v", "o", "gate", "up", "down"]
+    groups = {c.group for c in layout.components}
+    assert groups == {"attention", "mlp"}
+
+
+def test_layout_offsets_disjoint(layout):
+    """Every region occupies a unique, gap-free span of the state."""
+    spans = []
+    for s in layout.specs:
+        spans.append((layout.param_offsets[s.name], s.size))
+    for slot in layout.opt_offsets.values():
+        for name, off in slot.items():
+            spans.append((off, layout.spec(name).size))
+    for name, off in layout.prev_offsets.items():
+        spans.append((off, layout.spec(name).size))
+    spans.sort()
+    pos = layout.metrics_len
+    for off, size in spans:
+        assert off == pos, f"gap/overlap at {off} (expected {pos})"
+        pos += size
+    assert pos == layout.state_len
+
+
+def test_lm_logits_shape(cfg, params):
+    B, T = 3, 17
+    tokens = jnp.zeros((B, T), jnp.int32)
+    logits = model.lm_logits(params, cfg, tokens)
+    assert logits.shape == (B, T, cfg.model.vocab_size)
+
+
+def test_causality(cfg, params):
+    """Changing a future token must not affect past logits."""
+    T = 12
+    rng = np.random.default_rng(0)
+    t1 = jnp.asarray(rng.integers(0, cfg.model.vocab_size, (1, T)), jnp.int32)
+    t2 = t1.at[0, -1].set((int(t1[0, -1]) + 1) % cfg.model.vocab_size)
+    l1 = model.lm_logits(params, cfg, t1)
+    l2 = model.lm_logits(params, cfg, t2)
+    np.testing.assert_allclose(l1[:, : T - 1], l2[:, : T - 1], atol=1e-5)
+    assert not np.allclose(l1[:, -1], l2[:, -1])
+
+
+def test_token_loss_masks_padding():
+    logits = jnp.zeros((1, 4, 10))
+    targets = jnp.array([[1, 2, -1, -1]], jnp.int32)
+    loss, count = model.token_loss(logits, targets)
+    assert float(count) == 2.0
+    np.testing.assert_allclose(loss, 2 * np.log(10), rtol=1e-5)
+
+
+def test_loss_decreases_under_sgd_steps(cfg, layout):
+    """Full train step must reduce loss on a repeated batch."""
+    init = jax.jit(steps.make_init(cfg, layout))
+    step = jax.jit(steps.make_train_step(cfg, layout))
+    state = init(jnp.array([7], jnp.int32))
+    rng = np.random.default_rng(0)
+    B, T = cfg.train.batch_size, cfg.train.seq_len
+    tokens = jnp.asarray(rng.integers(0, cfg.model.vocab_size, (B, T)), jnp.int32)
+    ctrl = np.zeros(layout.ctrl_len, np.float32)
+    ctrl[1] = 3e-3
+    ctrl[2] = 1.0
+    ctrl[4:] = 1.0
+    losses = []
+    for t in range(1, 9):
+        ctrl[0] = t
+        state = step(state, tokens, tokens, jnp.asarray(ctrl))
+        losses.append(float(state[0] / state[1]))
+    assert losses[-1] < losses[0] - 0.5, losses
+
+
+def test_lora_merge_identity_when_b_zero(cfg, layout):
+    lcfg = dataclasses.replace(
+        cfg, train=dataclasses.replace(cfg.train, method="lora"))
+    llayout = build_layout(lcfg)
+    p = model.init_params(lcfg, llayout.specs, jax.random.PRNGKey(1))
+    trainable = {s.name: p[s.name] for s in llayout.trainable_specs()}
+    frozen = {s.name: p[s.name] for s in llayout.specs if not s.trainable}
+    merged = merge_lora(trainable, frozen, lcfg, llayout.components)
+    # B init = 0 → adapted weights equal the base weights
+    for c in llayout.components:
+        wname = c.tensors[0][: -len(".lora_a")]
+        np.testing.assert_array_equal(merged[wname], frozen[wname])
+    # adapters must not leak into the merged forward params
+    assert not any(k.endswith(".lora_a") or k.endswith(".lora_b") for k in merged)
+
+
+def test_vlm_logits_shape():
+    vcfg = configs.load_by_name("vlm-tiny-fp")
+    vlayout = build_layout(vcfg)
+    p = model.init_params(vcfg, vlayout.specs, jax.random.PRNGKey(2))
+    B, P, T = 2, vcfg.model.n_patches, 9
+    patches = jnp.zeros((B, P, vcfg.model.patch_dim))
+    tokens = jnp.zeros((B, T), jnp.int32)
+    logits = model.vlm_logits(p, vcfg, patches, tokens)
+    assert logits.shape == (B, T, vcfg.model.vocab_size)
+
+
+def test_vlm_vision_affects_text_logits():
+    vcfg = configs.load_by_name("vlm-tiny-fp")
+    vlayout = build_layout(vcfg)
+    p = model.init_params(vcfg, vlayout.specs, jax.random.PRNGKey(3))
+    B, P, T = 1, vcfg.model.n_patches, 5
+    tokens = jnp.zeros((B, T), jnp.int32)
+    l0 = model.vlm_logits(p, vcfg, jnp.zeros((B, P, vcfg.model.patch_dim)), tokens)
+    l1 = model.vlm_logits(p, vcfg, jnp.ones((B, P, vcfg.model.patch_dim)), tokens)
+    assert not np.allclose(l0, l1)
+
+
+def test_vocab_partition_matches_rust_expectations(cfg):
+    """vocab_size in configs must be >= 128 (rust Vocab::build contract)."""
+    for path in configs.all_config_paths():
+        c = configs.load_config(path)
+        assert c.model.vocab_size >= 128

@@ -1,0 +1,14 @@
+//! Scaled-down Tables 6 & 7 (τ × α grid) + design-choice ablations —
+//! `cargo bench` twin of `grades repro ablation`.
+
+use anyhow::Result;
+use grades::exp::{ablation, ExpOptions};
+use grades::runtime::artifact::Client;
+
+fn main() -> Result<()> {
+    let client = Client::cpu()?;
+    let mut opts = ExpOptions::quick(60, 8);
+    opts.out_dir = grades::config::repo_root().join("results").join("bench");
+    opts.verbose = true;
+    ablation::run(&client, &opts, "lm-tiny-fp")
+}

@@ -1,0 +1,54 @@
+//! Data-substrate throughput: corpus generation, packing, scene rendering,
+//! benchmark-suite construction. The data path must never bottleneck the
+//! trainer (it runs on the hot loop between steps).
+
+use anyhow::Result;
+use grades::data::{batcher, corpus, multimodal, vocab::Vocab};
+use grades::eval::benchmarks;
+use grades::util::timer::bench;
+
+fn main() -> Result<()> {
+    println!("## bench_data\n");
+    let v = Vocab::build(4096)?;
+
+    let t = bench(1, 5, || {
+        let s = corpus::generate(&v, 1, 2048);
+        std::hint::black_box(&s);
+    });
+    println!("corpus 2048 sentences        {:>9.3} ms  ({:.0} sent/s)", t.p50 * 1e3, 2048.0 / t.p50);
+
+    let sentences = corpus::generate(&v, 1, 2048);
+    let t = bench(1, 5, || {
+        let rows = batcher::pack_rows(&sentences, 128);
+        std::hint::black_box(&rows);
+    });
+    println!("pack 2048 sentences @T=128   {:>9.3} ms", t.p50 * 1e3);
+
+    let rows = batcher::pack_rows(&sentences, 128);
+    let mut it = batcher::BatchIter::new(rows, 8, 3);
+    let t = bench(10, 200, || {
+        let b = it.next_batch();
+        std::hint::black_box(&b);
+    });
+    println!("next_batch (B=8, T=128)      {:>9.3} ms", t.p50 * 1e3);
+
+    let scfg = multimodal::SceneConfig::for_model(16, 24, &v);
+    let t = bench(1, 5, || {
+        let ex = multimodal::generate(&scfg, &v, 2, 512);
+        std::hint::black_box(&ex);
+    });
+    println!("512 scenes render+caption    {:>9.3} ms  ({:.0} scenes/s)", t.p50 * 1e3, 512.0 / t.p50);
+
+    let t = bench(1, 3, || {
+        let s = benchmarks::lm_suites(&v, 9, 64);
+        std::hint::black_box(&s);
+    });
+    println!("8 LM suites x 64 questions   {:>9.3} ms", t.p50 * 1e3);
+
+    let t = bench(1, 3, || {
+        let s = benchmarks::nanovlm_suites(&scfg, &v, 9, 32);
+        std::hint::black_box(&s);
+    });
+    println!("6 VLM suites x 32 questions  {:>9.3} ms", t.p50 * 1e3);
+    Ok(())
+}

@@ -1,0 +1,12 @@
+//! Scaled-down Figures 1 & 4a — `cargo bench` twin of `grades repro fig1`.
+
+use anyhow::Result;
+use grades::exp::{fig1, ExpOptions};
+use grades::runtime::artifact::Client;
+
+fn main() -> Result<()> {
+    let client = Client::cpu()?;
+    let mut opts = ExpOptions::quick(80, 8);
+    opts.out_dir = grades::config::repo_root().join("results").join("bench");
+    fig1::run(&client, &opts, "lm-tiny-fp", 1)
+}

@@ -1,0 +1,16 @@
+//! Scaled-down Tables 1 & 4 + Figure 3 (tiny scale, short budget) — the
+//! `cargo bench` twin of `grades repro lm`.
+
+use anyhow::Result;
+use grades::exp::{lm_matrix, ExpOptions};
+use grades::runtime::artifact::Client;
+
+fn main() -> Result<()> {
+    let client = Client::cpu()?;
+    let mut opts = ExpOptions::quick(80, 12);
+    opts.out_dir = grades::config::repo_root().join("results").join("bench");
+    opts.verbose = true;
+    let scales = [("lm-tiny", "lm-tiny-fp", "lm-tiny-lora")];
+    lm_matrix::run(&client, &opts, &scales)?;
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! GradES monitoring overhead (paper §7 claims ~3%): identical training
+//! loops with the probe+monitor enabled every step vs fully disabled, and
+//! the classic-ES validation overhead for contrast (Table 4's "+ES slower
+//! than baseline" effect).
+
+use anyhow::Result;
+use grades::config::RepoConfig;
+use grades::coordinator::trainer::{self, StoppingMethod, TrainerOptions};
+use grades::data;
+use grades::runtime::artifact::{Bundle, Client};
+
+fn main() -> Result<()> {
+    let client = Client::cpu()?;
+    let config = "lm-small-fp";
+    let cfg = RepoConfig::by_name(config)?;
+    let bundle = Bundle::by_name(&client, config)?;
+    let steps = 80;
+
+    let mut run = |method: StoppingMethod, probe_every: usize| -> Result<(f64, f64, f64)> {
+        let mut ds = data::build_lm(&cfg, &bundle.manifest)?;
+        let mut opts = TrainerOptions::from_config(&cfg, method);
+        opts.total_steps = steps;
+        opts.probe_every = probe_every;
+        opts.final_validation = false;
+        // keep GradES from terminating early: measure pure overhead
+        let mut c2 = cfg.clone();
+        c2.grades.tau = 0.0;
+        let o = trainer::run(&bundle, &c2, &opts, || ds.train.next_batch(), &ds.val)?;
+        Ok((o.wall_secs, o.monitor_secs, o.validation_secs))
+    };
+
+    let (no_probe, _, _) = run(StoppingMethod::None, usize::MAX)?;
+    let (with_monitor, monitor_secs, _) = run(StoppingMethod::GradEs, 1)?;
+    let (with_es, _, val_secs) = run(StoppingMethod::ClassicEs, usize::MAX)?;
+
+    println!("## bench_monitor_overhead ({config}, {steps} steps)\n");
+    println!("baseline (no probe)        {no_probe:>8.3}s");
+    println!(
+        "GradES monitor every step  {with_monitor:>8.3}s  (+{:.2}% — paper §7 reports ~3%; probe itself {monitor_secs:.3}s)",
+        100.0 * (with_monitor - no_probe) / no_probe
+    );
+    println!(
+        "classic ES (5% validation) {with_es:>8.3}s  (+{:.2}% — validation passes {val_secs:.3}s)",
+        100.0 * (with_es - no_probe) / no_probe
+    );
+    Ok(())
+}

@@ -1,0 +1,73 @@
+//! Runtime hot-path latency: every executable across model scales, plus
+//! the attn-frozen variant delta (the variant scheduler's realized FLOPs
+//! saving) and the host→device batch-upload overhead.
+//!
+//! This is the L3 perf baseline recorded in EXPERIMENTS.md §Perf.
+
+use anyhow::Result;
+use grades::config::RepoConfig;
+use grades::data;
+use grades::runtime::artifact::{Bundle, Client};
+use grades::runtime::session::Session;
+use grades::util::timer::bench;
+
+fn main() -> Result<()> {
+    let client = Client::cpu()?;
+    println!("## bench_step_latency (ms per call)\n");
+    println!(
+        "{:<14} {:>10} {:>12} {:>10} {:>10} {:>10} {:>10}",
+        "config", "train", "train(attn0)", "probe", "eval", "eval_rows", "init"
+    );
+    for config in ["lm-tiny-fp", "lm-small-fp", "lm-base-fp", "lm-tiny-lora", "vlm-tiny-fp"] {
+        let cfg = RepoConfig::by_name(config)?;
+        let bundle = Bundle::by_name(&client, config)?;
+        let m = &bundle.manifest;
+        let mut session = Session::new(&bundle);
+        session.init(1)?;
+
+        let batch = if m.is_vlm() {
+            data::build_vlm(&cfg, m)?.train[0].clone()
+        } else {
+            data::build_lm(&cfg, m)?.train.next_batch()
+        };
+        let mut ctrl = vec![1f32; m.ctrl_len];
+        ctrl[0] = 1.0;
+        ctrl[1] = 1e-4;
+
+        let t_full = bench(3, 20, || {
+            session.train_step(&batch, &ctrl, false).unwrap();
+        });
+        let t_frozen = bench(3, 20, || {
+            session.train_step(&batch, &ctrl, true).unwrap();
+        });
+        let t_probe = bench(3, 50, || {
+            session.probe().unwrap();
+        });
+        let t_eval = bench(3, 20, || {
+            session.eval_batch(&batch).unwrap();
+        });
+        let t_rows = bench(3, 20, || {
+            session.eval_rows(&batch).unwrap();
+        });
+        let t_init = bench(1, 5, || {
+            let mut s2 = Session::new(&bundle);
+            s2.init(2).unwrap();
+        });
+        println!(
+            "{:<14} {:>10.3} {:>12.3} {:>10.3} {:>10.3} {:>10.3} {:>10.3}",
+            config,
+            t_full.p50 * 1e3,
+            t_frozen.p50 * 1e3,
+            t_probe.p50 * 1e3,
+            t_eval.p50 * 1e3,
+            t_rows.p50 * 1e3,
+            t_init.p50 * 1e3,
+        );
+        let saving = 100.0 * (1.0 - t_frozen.p50 / t_full.p50);
+        println!(
+            "{:<14} attn-frozen variant saves {saving:.1}% of step wallclock; probe = {:.2}% of step",
+            "", 100.0 * t_probe.p50 / t_full.p50
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,14 @@
+//! Scaled-down Tables 2/3/5 + Figure 4b — `cargo bench` twin of
+//! `grades repro vlm`.
+
+use anyhow::Result;
+use grades::exp::{vlm, ExpOptions};
+use grades::runtime::artifact::Client;
+
+fn main() -> Result<()> {
+    let client = Client::cpu()?;
+    let mut opts = ExpOptions::quick(60, 8);
+    opts.out_dir = grades::config::repo_root().join("results").join("bench");
+    opts.verbose = true;
+    vlm::run(&client, &opts)
+}

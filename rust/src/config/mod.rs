@@ -1,0 +1,187 @@
+//! Typed run configuration, loaded from the same `configs/*.toml` files the
+//! AOT exporter reads (python consumes [model]/[train]/[vlm]; rust consumes
+//! those plus [run]/[grades]/[es]/[data]).
+
+pub mod toml;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use self::toml::{Table, TomlDoc};
+
+fn get_f64(t: &Table, k: &str, default: f64) -> f64 {
+    t.get(k).and_then(|v| v.as_f64().ok()).unwrap_or(default)
+}
+
+fn get_usize(t: &Table, k: &str, default: usize) -> usize {
+    t.get(k).and_then(|v| v.as_usize().ok()).unwrap_or(default)
+}
+
+fn get_str(t: &Table, k: &str, default: &str) -> String {
+    t.get(k).and_then(|v| v.as_str().ok()).unwrap_or(default).to_string()
+}
+
+/// Training-run hyperparameters ([run]).
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub total_steps: usize,
+    pub lr: f64,
+    pub warmup_frac: f64,
+    pub seed: u64,
+}
+
+/// GradES monitor settings ([grades], paper Alg. 1 + App. C).
+#[derive(Debug, Clone)]
+pub struct GradesConfig {
+    /// "l1_diff" (Eq. 1) or "l1_abs" (§3.1 alternative).
+    pub metric: String,
+    /// Grace-period fraction α: monitoring starts at ⌈αT⌉.
+    pub alpha: f64,
+    /// Convergence threshold τ.
+    pub tau: f64,
+    /// Component-specific thresholds for VLM towers (paper Table 10);
+    /// NaN = fall back to `tau`.
+    pub tau_vision: f64,
+    pub tau_language: f64,
+    /// Consecutive sub-τ steps required before freezing (0 = freeze
+    /// immediately, the paper's "static freezing"; >0 = the patience
+    /// extension from §8 future work).
+    pub patience: usize,
+    /// Allow unfreezing when a frozen component's *observed* gradient
+    /// magnitude rebounds above `unfreeze_factor · τ` (§8 dynamic
+    /// freezing extension; 0.0 disables).
+    pub unfreeze_factor: f64,
+    /// Freeze granularity: "matrix" (GradES) or "layer" (AutoFreeze-style
+    /// ablation baseline — a layer freezes only when all 7 matrices agree).
+    pub granularity: String,
+}
+
+/// Classic validation-loss early stopping ([es], the paper's +ES baseline).
+#[derive(Debug, Clone)]
+pub struct EsConfig {
+    /// Validate every `check_interval_frac · T` steps (paper: 5%).
+    pub check_interval_frac: f64,
+    pub patience: usize,
+    pub min_delta: f64,
+}
+
+/// Synthetic-data settings ([data]).
+#[derive(Debug, Clone)]
+pub struct DataConfig {
+    pub corpus: String,
+    pub seed: u64,
+    pub train_sentences: usize,
+    pub val_sentences: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct RepoConfig {
+    pub name: String,
+    pub path: PathBuf,
+    pub run: RunConfig,
+    pub grades: GradesConfig,
+    pub es: EsConfig,
+    pub data: DataConfig,
+}
+
+impl RepoConfig {
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        let src = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}"))?;
+        let doc: TomlDoc = toml::parse(&src).with_context(|| format!("parsing {path:?}"))?;
+        let name = doc
+            .root
+            .get("name")
+            .and_then(|v| v.as_str().ok())
+            .map(str::to_string)
+            .or_else(|| {
+                path.file_stem().and_then(|s| s.to_str()).map(str::to_string)
+            })
+            .ok_or_else(|| anyhow!("config has no name"))?;
+
+        let run = doc.table_or_empty("run");
+        let grades = doc.table_or_empty("grades");
+        let es = doc.table_or_empty("es");
+        let data = doc.table_or_empty("data");
+        Ok(RepoConfig {
+            name,
+            path,
+            run: RunConfig {
+                total_steps: get_usize(&run, "total_steps", 200),
+                lr: get_f64(&run, "lr", 1e-3),
+                warmup_frac: get_f64(&run, "warmup_frac", 0.05),
+                seed: get_usize(&run, "seed", 42) as u64,
+            },
+            grades: GradesConfig {
+                metric: get_str(&grades, "metric", "l1_diff"),
+                alpha: get_f64(&grades, "alpha", 0.5),
+                tau: get_f64(&grades, "tau", 0.05),
+                tau_vision: get_f64(&grades, "tau_vision", f64::NAN),
+                tau_language: get_f64(&grades, "tau_language", f64::NAN),
+                patience: get_usize(&grades, "patience", 0),
+                unfreeze_factor: get_f64(&grades, "unfreeze_factor", 0.0),
+                granularity: get_str(&grades, "granularity", "matrix"),
+            },
+            es: EsConfig {
+                check_interval_frac: get_f64(&es, "check_interval_frac", 0.05),
+                patience: get_usize(&es, "patience", 3),
+                min_delta: get_f64(&es, "min_delta", 0.0005),
+            },
+            data: DataConfig {
+                corpus: get_str(&data, "corpus", "grammar"),
+                seed: get_usize(&data, "seed", 1234) as u64,
+                train_sentences: get_usize(&data, "train_sentences", 512),
+                val_sentences: get_usize(&data, "val_sentences", 128),
+            },
+        })
+    }
+
+    /// Load `configs/<name>.toml` relative to the repo root.
+    pub fn by_name(name: &str) -> Result<Self> {
+        Self::load(repo_root().join("configs").join(format!("{name}.toml")))
+    }
+
+    pub fn artifact_dir(&self) -> PathBuf {
+        repo_root().join("artifacts").join(&self.name)
+    }
+}
+
+/// Repo root: compiled-in manifest dir (this crate lives at the root).
+pub fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_tiny_config() {
+        let c = RepoConfig::by_name("lm-tiny-fp").unwrap();
+        assert_eq!(c.name, "lm-tiny-fp");
+        assert_eq!(c.run.total_steps, 300);
+        assert!((c.grades.alpha - 0.5).abs() < 1e-12);
+        assert_eq!(c.es.patience, 3);
+        assert_eq!(c.data.corpus, "grammar");
+    }
+
+    #[test]
+    fn vlm_config_has_tower_taus() {
+        let c = RepoConfig::by_name("vlm-tiny-fp").unwrap();
+        assert!(!c.grades.tau_vision.is_nan());
+        assert!(c.grades.tau_vision < c.grades.tau_language + 1.0);
+    }
+
+    #[test]
+    fn defaults_for_missing_tables() {
+        let dir = std::env::temp_dir().join("grades_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("min.toml");
+        std::fs::write(&p, "name = \"min\"\n").unwrap();
+        let c = RepoConfig::load(&p).unwrap();
+        assert_eq!(c.grades.granularity, "matrix");
+        assert_eq!(c.run.total_steps, 200);
+    }
+}

@@ -1,0 +1,256 @@
+//! Minimal TOML subset parser — enough for `configs/*.toml`.
+//!
+//! Supported: `[table]` headers (one level of nesting via dotted headers is
+//! not needed), `key = value` with strings, integers, floats, booleans and
+//! homogeneous arrays, `#` comments, blank lines.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            TomlValue::Int(i) => Ok(*i as f64),
+            TomlValue::Float(f) => Ok(*f),
+            _ => bail!("not a number: {self:?}"),
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<i64> {
+        match self {
+            TomlValue::Int(i) => Ok(*i),
+            _ => bail!("not an integer: {self:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let i = self.as_i64()?;
+        if i < 0 {
+            bail!("negative where usize expected: {i}");
+        }
+        Ok(i as usize)
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            _ => bail!("not a string: {self:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            _ => bail!("not a bool: {self:?}"),
+        }
+    }
+}
+
+pub type Table = BTreeMap<String, TomlValue>;
+
+/// Parsed document: top-level keys + named tables.
+#[derive(Debug, Default, Clone)]
+pub struct TomlDoc {
+    pub root: Table,
+    pub tables: BTreeMap<String, Table>,
+}
+
+impl TomlDoc {
+    pub fn table(&self, name: &str) -> Result<&Table> {
+        self.tables.get(name).ok_or_else(|| anyhow!("missing [{name}] table"))
+    }
+
+    pub fn table_or_empty(&self, name: &str) -> Table {
+        self.tables.get(name).cloned().unwrap_or_default()
+    }
+}
+
+pub fn parse(src: &str) -> Result<TomlDoc> {
+    let mut doc = TomlDoc::default();
+    let mut current: Option<String> = None;
+    for (lineno, raw) in src.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[') {
+            let name = name
+                .strip_suffix(']')
+                .ok_or_else(|| anyhow!("line {}: malformed table header", lineno + 1))?
+                .trim()
+                .to_string();
+            doc.tables.entry(name.clone()).or_default();
+            current = Some(name);
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+        let key = k.trim().to_string();
+        let val = parse_value(v.trim())
+            .map_err(|e| anyhow!("line {}: {e}", lineno + 1))?;
+        match &current {
+            Some(t) => {
+                doc.tables.get_mut(t).unwrap().insert(key, val);
+            }
+            None => {
+                doc.root.insert(key, val);
+            }
+        }
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or_else(|| anyhow!("unterminated string"))?;
+        return Ok(TomlValue::Str(unescape(inner)));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or_else(|| anyhow!("unterminated array"))?;
+        let mut out = Vec::new();
+        for part in split_top_level(inner) {
+            let part = part.trim();
+            if !part.is_empty() {
+                out.push(parse_value(part)?);
+            }
+        }
+        return Ok(TomlValue::Arr(out));
+    }
+    // number: int if it parses as i64 and has no float syntax
+    if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+        if let Ok(i) = s.replace('_', "").parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    if let Ok(f) = s.replace('_', "").parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("cannot parse value {s:?}")
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+fn unescape(s: &str) -> String {
+    let mut out = String::new();
+    let mut it = s.chars();
+    while let Some(c) = it.next() {
+        if c == '\\' {
+            match it.next() {
+                Some('n') => out.push('\n'),
+                Some('t') => out.push('\t'),
+                Some('"') => out.push('"'),
+                Some('\\') => out.push('\\'),
+                Some(other) => {
+                    out.push('\\');
+                    out.push(other);
+                }
+                None => out.push('\\'),
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_config_shape() {
+        let doc = parse(
+            r#"
+name = "x" # comment
+[model]
+d_model = 64
+lr = 2e-5
+flag = true
+arr = [1, 2, 3]
+[train]
+opt = "adamw"
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.root["name"].as_str().unwrap(), "x");
+        assert_eq!(doc.table("model").unwrap()["d_model"].as_usize().unwrap(), 64);
+        assert!((doc.table("model").unwrap()["lr"].as_f64().unwrap() - 2e-5).abs() < 1e-12);
+        assert!(doc.table("model").unwrap()["flag"].as_bool().unwrap());
+        assert_eq!(
+            doc.table("model").unwrap()["arr"],
+            TomlValue::Arr(vec![TomlValue::Int(1), TomlValue::Int(2), TomlValue::Int(3)])
+        );
+        assert_eq!(doc.table("train").unwrap()["opt"].as_str().unwrap(), "adamw");
+    }
+
+    #[test]
+    fn hash_inside_string() {
+        let doc = parse("k = \"a#b\"").unwrap();
+        assert_eq!(doc.root["k"].as_str().unwrap(), "a#b");
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(parse("[oops").is_err());
+        assert!(parse("novalue").is_err());
+    }
+
+    #[test]
+    fn parses_real_config_files() {
+        for entry in std::fs::read_dir(concat!(env!("CARGO_MANIFEST_DIR"), "/configs")).unwrap() {
+            let p = entry.unwrap().path();
+            if p.extension().and_then(|e| e.to_str()) == Some("toml") {
+                let src = std::fs::read_to_string(&p).unwrap();
+                parse(&src).unwrap_or_else(|e| panic!("{p:?}: {e}"));
+            }
+        }
+    }
+}

@@ -1,0 +1,116 @@
+//! Classic validation-loss early stopping — the paper's "+ES" baseline.
+//!
+//! Validation runs every `check_interval_frac·T` steps (the paper uses 5%)
+//! and requires a full forward pass over the whole validation set — the
+//! overhead that makes FP+ES *slower* than the no-ES baseline in Table 4.
+//! Training stops when the loss fails to improve by `min_delta` for
+//! `patience` consecutive checks.
+
+use crate::config::EsConfig;
+
+#[derive(Debug, Clone)]
+pub struct ClassicEs {
+    pub cfg: EsConfig,
+    pub check_interval: usize,
+    best: f64,
+    bad_checks: usize,
+    pub checks_run: usize,
+    /// Wall-clock seconds spent inside validation (Table 4 overhead).
+    pub validation_secs: f64,
+    pub enabled: bool,
+}
+
+impl ClassicEs {
+    pub fn new(cfg: &EsConfig, total_steps: usize) -> Self {
+        let check_interval =
+            ((total_steps as f64) * cfg.check_interval_frac).ceil().max(1.0) as usize;
+        ClassicEs {
+            cfg: cfg.clone(),
+            check_interval,
+            best: f64::INFINITY,
+            bad_checks: 0,
+            checks_run: 0,
+            validation_secs: 0.0,
+            enabled: true,
+        }
+    }
+
+    pub fn disabled(cfg: &EsConfig) -> Self {
+        let mut es = Self::new(cfg, usize::MAX / 2);
+        es.enabled = false;
+        es
+    }
+
+    /// Is step `t` a validation checkpoint?
+    pub fn due(&self, t: usize) -> bool {
+        self.enabled && t % self.check_interval == 0
+    }
+
+    /// Record a validation loss; returns true when training should stop.
+    pub fn record(&mut self, val_loss: f64, secs: f64) -> bool {
+        if !self.enabled {
+            return false;
+        }
+        self.checks_run += 1;
+        self.validation_secs += secs;
+        if val_loss < self.best - self.cfg.min_delta {
+            self.best = val_loss;
+            self.bad_checks = 0;
+        } else {
+            self.bad_checks += 1;
+        }
+        self.bad_checks >= self.cfg.patience
+    }
+
+    pub fn best_loss(&self) -> f64 {
+        self.best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> EsConfig {
+        EsConfig { check_interval_frac: 0.05, patience: 3, min_delta: 0.001 }
+    }
+
+    #[test]
+    fn interval_from_fraction() {
+        let es = ClassicEs::new(&cfg(), 200);
+        assert_eq!(es.check_interval, 10);
+        assert!(es.due(10));
+        assert!(!es.due(11));
+    }
+
+    #[test]
+    fn stops_after_patience_bad_checks() {
+        let mut es = ClassicEs::new(&cfg(), 100);
+        assert!(!es.record(1.0, 0.1));
+        assert!(!es.record(0.9, 0.1)); // improvement
+        assert!(!es.record(0.9, 0.1)); // bad 1 (< min_delta improvement)
+        assert!(!es.record(0.95, 0.1)); // bad 2
+        assert!(es.record(0.91, 0.1)); // bad 3 → stop
+        assert_eq!(es.checks_run, 5);
+        assert!((es.validation_secs - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn improvement_resets_patience() {
+        let mut es = ClassicEs::new(&cfg(), 100);
+        es.record(1.0, 0.0);
+        es.record(1.0, 0.0); // bad 1
+        es.record(1.0, 0.0); // bad 2
+        assert!(!es.record(0.5, 0.0)); // improvement resets
+        assert!(!es.record(0.51, 0.0)); // bad 1
+        assert!(!es.record(0.51, 0.0)); // bad 2
+        assert!(es.record(0.51, 0.0)); // bad 3
+    }
+
+    #[test]
+    fn disabled_never_stops() {
+        let mut es = ClassicEs::disabled(&cfg());
+        assert!(!es.due(10));
+        assert!(!es.record(1.0, 0.0));
+    }
+}

@@ -1,0 +1,173 @@
+//! Freeze-mask state: which components are frozen, when, and why.
+//!
+//! This is the coordinator's ground truth for Alg. 1's frozen set F. The
+//! mask is serialized into the `ctrl` vector every step (1.0 = active,
+//! 0.0 = frozen) and drives FLOPs accounting + the variant scheduler.
+
+use crate::runtime::manifest::Manifest;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FreezeReason {
+    /// G_W(t) < τ after the grace period (GradES).
+    Converged,
+    /// Frozen as part of a layer-granularity decision (AutoFreeze ablation).
+    LayerRule,
+    /// Manually frozen (tests/experiments).
+    Manual,
+}
+
+#[derive(Debug, Clone)]
+pub struct FreezeEvent {
+    pub step: usize,
+    pub component: usize,
+    pub frozen: bool, // false = unfreeze event
+    pub reason: FreezeReason,
+    pub metric_value: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct FreezeState {
+    frozen: Vec<bool>,
+    frozen_since: Vec<Option<usize>>,
+    pub events: Vec<FreezeEvent>,
+    mask: Vec<f32>,
+}
+
+impl FreezeState {
+    pub fn new(n_components: usize) -> Self {
+        Self {
+            frozen: vec![false; n_components],
+            frozen_since: vec![None; n_components],
+            events: Vec::new(),
+            mask: vec![1.0; n_components],
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.frozen.len()
+    }
+
+    pub fn is_frozen(&self, c: usize) -> bool {
+        self.frozen[c]
+    }
+
+    pub fn n_frozen(&self) -> usize {
+        self.frozen.iter().filter(|&&f| f).count()
+    }
+
+    pub fn all_frozen(&self) -> bool {
+        self.n_frozen() == self.n()
+    }
+
+    pub fn frozen_fraction(&self) -> f64 {
+        if self.n() == 0 {
+            return 0.0;
+        }
+        self.n_frozen() as f64 / self.n() as f64
+    }
+
+    pub fn freeze(&mut self, c: usize, step: usize, reason: FreezeReason, metric: f64) {
+        if !self.frozen[c] {
+            self.frozen[c] = true;
+            self.frozen_since[c] = Some(step);
+            self.mask[c] = 0.0;
+            self.events.push(FreezeEvent {
+                step,
+                component: c,
+                frozen: true,
+                reason,
+                metric_value: metric,
+            });
+        }
+    }
+
+    pub fn unfreeze(&mut self, c: usize, step: usize, metric: f64) {
+        if self.frozen[c] {
+            self.frozen[c] = false;
+            self.frozen_since[c] = None;
+            self.mask[c] = 1.0;
+            self.events.push(FreezeEvent {
+                step,
+                component: c,
+                frozen: false,
+                reason: FreezeReason::Converged,
+                metric_value: metric,
+            });
+        }
+    }
+
+    /// The mask slice to copy into ctrl.
+    pub fn mask(&self) -> &[f32] {
+        &self.mask
+    }
+
+    /// True when every component satisfying `pred` is frozen (and at least
+    /// one exists) — e.g. "all attention frozen" for the variant scheduler.
+    pub fn all_frozen_where<F: Fn(usize) -> bool>(&self, pred: F) -> bool {
+        let mut any = false;
+        for c in 0..self.n() {
+            if pred(c) {
+                any = true;
+                if !self.frozen[c] {
+                    return false;
+                }
+            }
+        }
+        any
+    }
+
+    /// Freeze-time per component (None = never froze).
+    pub fn frozen_since(&self, c: usize) -> Option<usize> {
+        self.frozen_since[c]
+    }
+}
+
+/// Group a mask decision at layer granularity (AutoFreeze-style baseline):
+/// a candidate component may freeze only when *all* components of its layer
+/// and tower are sub-threshold. Returns per-layer candidate lists.
+pub fn layer_groups(manifest: &Manifest) -> Vec<Vec<usize>> {
+    use std::collections::BTreeMap;
+    let mut groups: BTreeMap<(String, usize), Vec<usize>> = BTreeMap::new();
+    for c in &manifest.components {
+        groups.entry((c.tower.clone(), c.layer)).or_default().push(c.idx);
+    }
+    groups.into_values().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn freeze_unfreeze_roundtrip() {
+        let mut f = FreezeState::new(4);
+        assert_eq!(f.mask(), &[1.0; 4]);
+        f.freeze(2, 10, FreezeReason::Converged, 0.01);
+        assert!(f.is_frozen(2));
+        assert_eq!(f.mask()[2], 0.0);
+        assert_eq!(f.n_frozen(), 1);
+        assert_eq!(f.frozen_since(2), Some(10));
+        f.unfreeze(2, 12, 0.2);
+        assert!(!f.is_frozen(2));
+        assert_eq!(f.mask()[2], 1.0);
+        assert_eq!(f.events.len(), 2);
+    }
+
+    #[test]
+    fn double_freeze_is_idempotent() {
+        let mut f = FreezeState::new(2);
+        f.freeze(0, 1, FreezeReason::Converged, 0.0);
+        f.freeze(0, 2, FreezeReason::Converged, 0.0);
+        assert_eq!(f.events.len(), 1);
+    }
+
+    #[test]
+    fn all_frozen_where() {
+        let mut f = FreezeState::new(4);
+        f.freeze(0, 1, FreezeReason::Converged, 0.0);
+        f.freeze(1, 1, FreezeReason::Converged, 0.0);
+        assert!(f.all_frozen_where(|c| c < 2));
+        assert!(!f.all_frozen_where(|c| c < 3));
+        assert!(!f.all_frozen_where(|_| false)); // vacuous = false
+    }
+}

@@ -1,0 +1,401 @@
+//! The GradES monitor — paper Algorithm 1, lines 3–11 + extensions.
+//!
+//! Consumes the per-component gradient statistics the train step wrote into
+//! the metrics prefix (Eq. 1 `Gdiff[c] = ‖∇W_t − ∇W_{t−1}‖₁` and the §3.1
+//! alternative `Gabs[c] = ‖∇W_t‖₁`) and decides which components to freeze:
+//!
+//! * grace period: monitoring starts at `⌈α·T⌉` (Alg. 1 line 3),
+//! * τ per component — with tower-specific overrides for VLMs (App. C
+//!   Table 10: vision vs language thresholds),
+//! * optional patience (§8 future work): require `patience+1` consecutive
+//!   sub-τ observations before freezing,
+//! * optional dynamic unfreezing (§8): if a frozen component's observed
+//!   metric rebounds above `unfreeze_factor·τ`, reactivate it,
+//! * optional layer granularity (AutoFreeze-style ablation baseline).
+
+use crate::config::GradesConfig;
+use crate::coordinator::freeze::{layer_groups, FreezeReason, FreezeState};
+use crate::runtime::manifest::Manifest;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Metric {
+    L1Diff,
+    L1Abs,
+    /// Update-change metric: Eq. 1 scaled by lr(t)/lr_base and normalized
+    /// by the component's grace-period baseline — our usability extension
+    /// (§8 hints at automatic threshold selection). The paper's own Fig. 1
+    /// decay "reflects the cosine learning rate schedule" (§6.2): in its
+    /// fine-tuning regime raw gradients shrink with the schedule; training
+    /// from scratch they need not, so we measure the *parameter update*
+    /// change lr_t·∇W directly. τ becomes scale-free ("freeze when the
+    /// update-change falls to τ× its baseline"), transferable across model
+    /// sizes where the paper needed per-model manual τ (Table 9 spans
+    /// 0.001–6.4).
+    L1DiffRel,
+}
+
+pub struct GradesMonitor {
+    pub cfg: GradesConfig,
+    pub metric: Metric,
+    grace_steps: usize,
+    taus: Vec<f64>,
+    below_count: Vec<usize>,
+    layer_mode: bool,
+    layers: Vec<Vec<usize>>,
+    /// Per-component running mean of the metric over the second half of
+    /// the grace period (the L1DiffRel denominator).
+    baseline_sum: Vec<f64>,
+    baseline_n: usize,
+    pub enabled: bool,
+}
+
+impl GradesMonitor {
+    pub fn new(cfg: &GradesConfig, manifest: &Manifest, total_steps: usize) -> Self {
+        let metric = match cfg.metric.as_str() {
+            "l1_abs" => Metric::L1Abs,
+            "l1_diff_rel" => Metric::L1DiffRel,
+            _ => Metric::L1Diff,
+        };
+        // per-component τ with tower overrides (paper Table 10)
+        let taus = manifest
+            .components
+            .iter()
+            .map(|c| {
+                let t = match c.tower.as_str() {
+                    "vision" if !cfg.tau_vision.is_nan() => cfg.tau_vision,
+                    "language" if !cfg.tau_language.is_nan() && manifest.is_vlm() => {
+                        cfg.tau_language
+                    }
+                    _ => cfg.tau,
+                };
+                t
+            })
+            .collect();
+        GradesMonitor {
+            metric,
+            grace_steps: ((total_steps as f64) * cfg.alpha).ceil() as usize,
+            taus,
+            below_count: vec![0; manifest.n_components],
+            layer_mode: cfg.granularity == "layer",
+            layers: layer_groups(manifest),
+            baseline_sum: vec![0.0; manifest.n_components],
+            baseline_n: 0,
+            cfg: cfg.clone(),
+            enabled: true,
+        }
+    }
+
+    /// A disabled monitor (baseline methods run the same trainer loop).
+    pub fn disabled(manifest: &Manifest) -> Self {
+        let cfg = GradesConfig {
+            metric: "l1_diff".into(),
+            alpha: 1.0,
+            tau: 0.0,
+            tau_vision: f64::NAN,
+            tau_language: f64::NAN,
+            patience: 0,
+            unfreeze_factor: 0.0,
+            granularity: "matrix".into(),
+        };
+        let mut m = Self::new(&cfg, manifest, usize::MAX);
+        m.enabled = false;
+        m
+    }
+
+    pub fn grace_steps(&self) -> usize {
+        self.grace_steps
+    }
+
+    pub fn tau(&self, c: usize) -> f64 {
+        self.taus[c]
+    }
+
+    /// Select the raw metric vector from the probed metrics prefix.
+    pub fn metric_values<'m>(
+        &self,
+        manifest: &Manifest,
+        metrics: &'m [f32],
+    ) -> &'m [f32] {
+        let (off, n) = match self.metric {
+            Metric::L1Abs => (manifest.gabs_offset, manifest.n_components),
+            _ => (manifest.gdiff_offset, manifest.n_components),
+        };
+        &metrics[off..off + n]
+    }
+
+    /// Per-component baseline (L1DiffRel denominator; 1.0 otherwise).
+    pub fn baseline(&self, c: usize) -> f64 {
+        if self.metric == Metric::L1DiffRel && self.baseline_n > 0 {
+            (self.baseline_sum[c] / self.baseline_n as f64).max(1e-12)
+        } else {
+            1.0
+        }
+    }
+
+    /// Observe step `t`'s metrics and update the freeze state.
+    /// Returns the number of components newly frozen this step.
+    /// `lr_scale` = lr(t)/lr_base (used by the L1DiffRel update metric;
+    /// pass 1.0 for the raw-paper metrics).
+    pub fn observe(
+        &mut self,
+        t: usize,
+        manifest: &Manifest,
+        metrics: &[f32],
+        lr_scale: f64,
+        freeze: &mut FreezeState,
+    ) -> usize {
+        if !self.enabled {
+            return 0;
+        }
+        let scale = if self.metric == Metric::L1DiffRel { lr_scale } else { 1.0 };
+        // accumulate the rel-metric baseline over the grace period's
+        // second half (past warmup transients, before decisions start)
+        if t <= self.grace_steps {
+            if self.metric == Metric::L1DiffRel && 2 * t > self.grace_steps {
+                let raw = self.metric_values(manifest, metrics);
+                for c in 0..self.baseline_sum.len() {
+                    self.baseline_sum[c] += raw[c] as f64 * scale;
+                }
+                self.baseline_n += 1;
+            }
+            return 0;
+        }
+        let raw = self.metric_values(manifest, metrics);
+        let values: Vec<f64> = (0..raw.len())
+            .map(|c| raw[c] as f64 * scale / self.baseline(c))
+            .collect();
+        let mut newly = 0usize;
+
+        // dynamic unfreezing (extension; default off)
+        if self.cfg.unfreeze_factor > 0.0 {
+            for c in 0..freeze.n() {
+                if freeze.is_frozen(c)
+                    && values[c] > self.cfg.unfreeze_factor * self.taus[c]
+                    // Gdiff of a frozen component is stale (its prev-grad
+                    // carry stopped); use Gabs which is always fresh.
+                    && self.metric == Metric::L1Abs
+                {
+                    freeze.unfreeze(c, t, values[c]);
+                    self.below_count[c] = 0;
+                }
+            }
+        }
+
+        // per-component convergence test (Alg. 1 lines 8–11)
+        let mut candidates: Vec<usize> = Vec::new();
+        for c in 0..freeze.n() {
+            if freeze.is_frozen(c) {
+                continue;
+            }
+            if values[c] < self.taus[c] {
+                self.below_count[c] += 1;
+                if self.below_count[c] > self.cfg.patience {
+                    candidates.push(c);
+                }
+            } else {
+                self.below_count[c] = 0;
+            }
+        }
+
+        if self.layer_mode {
+            // AutoFreeze-style: a layer freezes only as a whole
+            for group in &self.layers {
+                let all_ready = group.iter().all(|&c| {
+                    freeze.is_frozen(c) || candidates.contains(&c)
+                });
+                if all_ready {
+                    for &c in group {
+                        if !freeze.is_frozen(c) {
+                            freeze.freeze(c, t, FreezeReason::LayerRule, values[c]);
+                            newly += 1;
+                        }
+                    }
+                }
+            }
+        } else {
+            for c in candidates {
+                freeze.freeze(c, t, FreezeReason::Converged, values[c]);
+                newly += 1;
+            }
+        }
+        newly
+    }
+
+    /// Alg. 1 line 17–18: stop when every monitored component is frozen.
+    pub fn should_terminate(&self, freeze: &FreezeState) -> bool {
+        self.enabled && freeze.n() > 0 && freeze.all_frozen()
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::config::GradesConfig;
+    use crate::runtime::manifest::{Component, FlopsInfo, Manifest};
+    use std::collections::BTreeMap;
+
+    pub fn fake_manifest(n_layers: usize) -> Manifest {
+        let kinds = ["q", "k", "v", "o", "gate", "up", "down"];
+        let mut components = Vec::new();
+        for l in 0..n_layers {
+            for k in kinds {
+                components.push(Component {
+                    idx: components.len(),
+                    name: format!("language.{l}.{k}"),
+                    layer: l,
+                    kind: k.to_string(),
+                    group: if matches!(k, "q" | "k" | "v" | "o") {
+                        "attention".into()
+                    } else {
+                        "mlp".into()
+                    },
+                    tower: "language".into(),
+                    n_params: 64,
+                    tensors: vec![format!("lang.{l}.{k}")],
+                });
+            }
+        }
+        let n = components.len();
+        Manifest {
+            name: "fake".into(),
+            kind: "lm".into(),
+            method: "fp".into(),
+            optimizer: "adamw".into(),
+            kernel_impl: "xla".into(),
+            batch_size: 8,
+            seq_len: 16,
+            vocab_size: 256,
+            n_patches: 0,
+            patch_dim: 0,
+            state_len: 1000,
+            metrics_len: 4 + 2 * n,
+            ctrl_len: 4 + n,
+            n_components: n,
+            gdiff_offset: 4,
+            gabs_offset: 4 + n,
+            ctrl_mask_offset: 4,
+            components,
+            params: vec![],
+            n_params_total: 0,
+            n_params_trainable: 0,
+            flops: FlopsInfo {
+                fwd_per_token: 0.0,
+                bwd_dx_per_token: 0.0,
+                per_component_fwd: BTreeMap::new(),
+                attn_quadratic_per_token: 0.0,
+                head_per_token: 0.0,
+            },
+            executables: BTreeMap::new(),
+        }
+    }
+
+    fn cfg(tau: f64, alpha: f64) -> GradesConfig {
+        GradesConfig {
+            metric: "l1_diff".into(),
+            alpha,
+            tau,
+            tau_vision: f64::NAN,
+            tau_language: f64::NAN,
+            patience: 0,
+            unfreeze_factor: 0.0,
+            granularity: "matrix".into(),
+        }
+    }
+
+    fn metrics_with_gdiff(m: &Manifest, values: &[f32]) -> Vec<f32> {
+        let mut out = vec![0f32; m.metrics_len];
+        out[m.gdiff_offset..m.gdiff_offset + values.len()].copy_from_slice(values);
+        out
+    }
+
+    #[test]
+    fn grace_period_blocks_freezing() {
+        let m = fake_manifest(1);
+        let mut mon = GradesMonitor::new(&cfg(1.0, 0.5), &m, 100);
+        let mut fs = FreezeState::new(m.n_components);
+        let metrics = metrics_with_gdiff(&m, &vec![0.0001; m.n_components]);
+        assert_eq!(mon.observe(50, &m, &metrics, 1.0, &mut fs), 0); // t <= 50
+        assert_eq!(mon.observe(51, &m, &metrics, 1.0, &mut fs), m.n_components);
+        assert!(mon.should_terminate(&fs));
+    }
+
+    #[test]
+    fn only_sub_tau_components_freeze() {
+        let m = fake_manifest(1);
+        let mut mon = GradesMonitor::new(&cfg(0.5, 0.0), &m, 100);
+        let mut fs = FreezeState::new(m.n_components);
+        let mut vals = vec![1.0f32; m.n_components];
+        vals[2] = 0.1;
+        vals[5] = 0.4;
+        let metrics = metrics_with_gdiff(&m, &vals);
+        assert_eq!(mon.observe(1, &m, &metrics, 1.0, &mut fs), 2);
+        assert!(fs.is_frozen(2) && fs.is_frozen(5));
+        assert!(!mon.should_terminate(&fs));
+    }
+
+    #[test]
+    fn patience_delays_freeze() {
+        let m = fake_manifest(1);
+        let mut c = cfg(0.5, 0.0);
+        c.patience = 2;
+        let mut mon = GradesMonitor::new(&c, &m, 100);
+        let mut fs = FreezeState::new(m.n_components);
+        let metrics = metrics_with_gdiff(&m, &vec![0.1; m.n_components]);
+        assert_eq!(mon.observe(1, &m, &metrics, 1.0, &mut fs), 0);
+        assert_eq!(mon.observe(2, &m, &metrics, 1.0, &mut fs), 0);
+        assert_eq!(mon.observe(3, &m, &metrics, 1.0, &mut fs), m.n_components);
+    }
+
+    #[test]
+    fn patience_resets_on_rebound() {
+        let m = fake_manifest(1);
+        let mut c = cfg(0.5, 0.0);
+        c.patience = 1;
+        let mut mon = GradesMonitor::new(&c, &m, 100);
+        let mut fs = FreezeState::new(m.n_components);
+        let low = metrics_with_gdiff(&m, &vec![0.1; m.n_components]);
+        let high = metrics_with_gdiff(&m, &vec![2.0; m.n_components]);
+        assert_eq!(mon.observe(1, &m, &low, 1.0, &mut fs), 0);
+        assert_eq!(mon.observe(2, &m, &high, 1.0, &mut fs), 0); // reset
+        assert_eq!(mon.observe(3, &m, &low, 1.0, &mut fs), 0); // count=1 again
+        assert_eq!(mon.observe(4, &m, &low, 1.0, &mut fs), m.n_components);
+    }
+
+    #[test]
+    fn layer_granularity_waits_for_whole_layer() {
+        let m = fake_manifest(2);
+        let mut c = cfg(0.5, 0.0);
+        c.granularity = "layer".into();
+        let mut mon = GradesMonitor::new(&c, &m, 100);
+        let mut fs = FreezeState::new(m.n_components);
+        // layer 0 fully below τ except component 3; layer 1 fully below
+        let mut vals = vec![0.1f32; m.n_components];
+        vals[3] = 2.0;
+        let metrics = metrics_with_gdiff(&m, &vals);
+        let newly = mon.observe(1, &m, &metrics, 1.0, &mut fs);
+        assert_eq!(newly, 7); // only layer 1 froze
+        assert!(!fs.is_frozen(0));
+        assert!(fs.is_frozen(7));
+    }
+
+    #[test]
+    fn disabled_monitor_never_freezes() {
+        let m = fake_manifest(1);
+        let mut mon = GradesMonitor::disabled(&m);
+        let mut fs = FreezeState::new(m.n_components);
+        let metrics = metrics_with_gdiff(&m, &vec![0.0; m.n_components]);
+        assert_eq!(mon.observe(1_000_000, &m, &metrics, 1.0, &mut fs), 0);
+        assert!(!mon.should_terminate(&fs));
+    }
+
+    #[test]
+    fn l1_abs_metric_selects_gabs() {
+        let m = fake_manifest(1);
+        let mut c = cfg(0.5, 0.0);
+        c.metric = "l1_abs".into();
+        let mon = GradesMonitor::new(&c, &m, 10);
+        let mut metrics = vec![0f32; m.metrics_len];
+        metrics[m.gabs_offset] = 7.0;
+        assert_eq!(mon.metric_values(&m, &metrics)[0], 7.0);
+    }
+}

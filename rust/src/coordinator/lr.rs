@@ -1,0 +1,67 @@
+//! Learning-rate schedules. The paper trains with linear warmup + cosine
+//! decay (§6.2 attributes the gradient-norm envelope to this schedule, and
+//! App. B's convergence proof assumes it).
+
+/// Warmup + cosine decay to zero.
+#[derive(Debug, Clone)]
+pub struct CosineSchedule {
+    pub base_lr: f64,
+    pub warmup_steps: usize,
+    pub total_steps: usize,
+}
+
+impl CosineSchedule {
+    pub fn new(base_lr: f64, warmup_frac: f64, total_steps: usize) -> Self {
+        let warmup_steps = ((total_steps as f64) * warmup_frac).ceil() as usize;
+        Self { base_lr, warmup_steps, total_steps }
+    }
+
+    /// LR at 1-based step t.
+    pub fn lr(&self, t: usize) -> f64 {
+        if self.total_steps == 0 {
+            return self.base_lr;
+        }
+        if t <= self.warmup_steps && self.warmup_steps > 0 {
+            return self.base_lr * t as f64 / self.warmup_steps as f64;
+        }
+        let progress = (t - self.warmup_steps) as f64
+            / (self.total_steps - self.warmup_steps).max(1) as f64;
+        let progress = progress.clamp(0.0, 1.0);
+        0.5 * self.base_lr * (1.0 + (std::f64::consts::PI * progress).cos())
+    }
+}
+
+/// Constant schedule (ablations).
+#[derive(Debug, Clone)]
+pub struct ConstantSchedule(pub f64);
+
+impl ConstantSchedule {
+    pub fn lr(&self, _t: usize) -> f64 {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_then_decay() {
+        let s = CosineSchedule::new(1.0, 0.1, 100);
+        assert!(s.lr(1) < s.lr(10));
+        assert!((s.lr(10) - 1.0).abs() < 1e-9); // warmup peak
+        assert!(s.lr(50) < 1.0);
+        assert!(s.lr(100) < 1e-3); // decayed to ~0
+    }
+
+    #[test]
+    fn monotone_decay_after_warmup() {
+        let s = CosineSchedule::new(3e-4, 0.05, 200);
+        let mut prev = f64::INFINITY;
+        for t in 10..=200 {
+            let lr = s.lr(t);
+            assert!(lr <= prev + 1e-12);
+            prev = lr;
+        }
+    }
+}

@@ -1,0 +1,151 @@
+//! Per-step training metrics log → CSV series for the paper's figures.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::runtime::manifest::Manifest;
+use crate::util::csv::CsvWriter;
+
+#[derive(Debug, Clone)]
+pub struct StepRecord {
+    pub step: usize,
+    pub loss: f64,
+    pub lr: f64,
+    pub global_gnorm: f64,
+    pub frozen_fraction: f64,
+    /// Eq. 1 per-component gradient-change norms (Fig. 1 series).
+    pub gdiff: Vec<f32>,
+    /// ‖∇W‖₁ per component (Fig. 4 series).
+    pub gabs: Vec<f32>,
+}
+
+#[derive(Debug, Default)]
+pub struct MetricsLog {
+    pub records: Vec<StepRecord>,
+    pub val_points: Vec<(usize, f64)>,
+}
+
+impl MetricsLog {
+    pub fn record(
+        &mut self,
+        step: usize,
+        lr: f64,
+        frozen_fraction: f64,
+        manifest: &Manifest,
+        metrics: &[f32],
+    ) {
+        let count = metrics[1].max(1.0) as f64;
+        self.records.push(StepRecord {
+            step,
+            loss: metrics[0] as f64 / count,
+            lr,
+            global_gnorm: metrics[2] as f64,
+            frozen_fraction,
+            gdiff: metrics[manifest.gdiff_offset..manifest.gdiff_offset + manifest.n_components]
+                .to_vec(),
+            gabs: metrics[manifest.gabs_offset..manifest.gabs_offset + manifest.n_components]
+                .to_vec(),
+        });
+    }
+
+    pub fn record_val(&mut self, step: usize, val_loss: f64) {
+        self.val_points.push((step, val_loss));
+    }
+
+    pub fn final_train_loss(&self) -> f64 {
+        self.records.last().map(|r| r.loss).unwrap_or(f64::NAN)
+    }
+
+    /// Loss curve CSV: step,loss,lr,frozen_fraction,gnorm.
+    pub fn write_loss_csv(&self, path: &Path) -> Result<()> {
+        let mut w = CsvWriter::create(path, &["step", "loss", "lr", "frozen_fraction", "gnorm"])?;
+        for r in &self.records {
+            w.row(&[r.step as f64, r.loss, r.lr, r.frozen_fraction, r.global_gnorm])?;
+        }
+        w.flush()
+    }
+
+    /// Fig. 1 CSV: per-component Eq. 1 series for one layer.
+    pub fn write_component_csv(
+        &self,
+        path: &Path,
+        manifest: &Manifest,
+        layer: usize,
+        tower: &str,
+    ) -> Result<()> {
+        let comps: Vec<_> = manifest
+            .components
+            .iter()
+            .filter(|c| c.layer == layer && c.tower == tower)
+            .collect();
+        let mut header = vec!["step".to_string()];
+        header.extend(comps.iter().map(|c| format!("{}_{}", c.kind, c.idx)));
+        let header_refs: Vec<&str> = header.iter().map(String::as_str).collect();
+        let mut w = CsvWriter::create(path, &header_refs)?;
+        for r in &self.records {
+            let mut row = vec![r.step as f64];
+            row.extend(comps.iter().map(|c| r.gdiff[c.idx] as f64));
+            w.row(&row)?;
+        }
+        w.flush()
+    }
+
+    /// Fig. 4 CSV: group-mean |∇W| series (attention vs mlp, or towers).
+    pub fn write_group_mean_csv(
+        &self,
+        path: &Path,
+        _manifest: &Manifest,
+        groups: &[(&str, Vec<usize>)],
+    ) -> Result<()> {
+        let mut header = vec!["step"];
+        header.extend(groups.iter().map(|(n, _)| *n));
+        let mut w = CsvWriter::create(path, &header)?;
+        for r in &self.records {
+            let mut row = vec![r.step as f64];
+            for (_, idxs) in groups {
+                let mean = if idxs.is_empty() {
+                    0.0
+                } else {
+                    idxs.iter().map(|&i| r.gabs[i] as f64).sum::<f64>() / idxs.len() as f64
+                };
+                row.push(mean);
+            }
+            w.row(&row)?;
+        }
+        w.flush()
+    }
+
+    /// Fig. 3 CSV: cumulative frozen fraction.
+    pub fn write_frozen_csv(&self, path: &Path) -> Result<()> {
+        let mut w = CsvWriter::create(path, &["step", "frozen_fraction"])?;
+        for r in &self.records {
+            w.row(&[r.step as f64, r.frozen_fraction])?;
+        }
+        w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::grades::tests::fake_manifest;
+
+    #[test]
+    fn records_and_serializes() {
+        let m = fake_manifest(1);
+        let mut log = MetricsLog::default();
+        let mut metrics = vec![0f32; m.metrics_len];
+        metrics[0] = 20.0;
+        metrics[1] = 10.0;
+        metrics[m.gdiff_offset] = 3.0;
+        log.record(1, 1e-3, 0.0, &m, &metrics);
+        assert!((log.final_train_loss() - 2.0).abs() < 1e-9);
+        let dir = std::env::temp_dir().join("grades_metrics_test");
+        log.write_loss_csv(&dir.join("loss.csv")).unwrap();
+        log.write_component_csv(&dir.join("comp.csv"), &m, 0, "language").unwrap();
+        let text = std::fs::read_to_string(dir.join("comp.csv")).unwrap();
+        assert!(text.starts_with("step,q_0,k_1,v_2,o_3,gate_4,up_5,down_6"));
+        assert!(text.contains("1,3"));
+    }
+}

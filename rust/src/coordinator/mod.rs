@@ -1,0 +1,13 @@
+//! The paper's L3 contribution: GradES monitoring + freeze coordination,
+//! the classic-ES baseline, and the training event loop that composes them
+//! with the AOT runtime.
+
+pub mod classic_es;
+pub mod flops;
+pub mod freeze;
+pub mod grades;
+pub mod lr;
+pub mod metrics;
+pub mod scheduler;
+pub mod trainer;
+pub mod warmstart;

@@ -1,0 +1,91 @@
+//! Executable-variant scheduler.
+//!
+//! A static XLA graph cannot skip a single matrix's dW matmul at runtime,
+//! so the compute tier of GradES's savings is realized by hot-swapping to
+//! pre-compiled graph variants. The shipped variant set exploits the
+//! paper's Fig. 4a observation (attention converges 2–3× earlier than
+//! MLP): once *every* attention component is frozen, switch to
+//! `train_step_attn_frozen`, whose backward pass genuinely omits all
+//! attention weight-gradient matmuls.
+
+use crate::coordinator::freeze::FreezeState;
+use crate::runtime::manifest::Manifest;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    Full,
+    AttnFrozen,
+}
+
+#[derive(Debug, Default)]
+pub struct VariantScheduler {
+    attn_components: Vec<usize>,
+    pub swapped_at: Option<usize>,
+    pub enabled: bool,
+}
+
+impl VariantScheduler {
+    pub fn new(manifest: &Manifest, enabled: bool) -> Self {
+        VariantScheduler {
+            attn_components: manifest.components_where(|c| c.group == "attention"),
+            swapped_at: None,
+            enabled,
+        }
+    }
+
+    /// Pick the variant for step `t` given the current freeze state.
+    /// Monotone: once swapped, never swaps back (frozen components with
+    /// the default config never unfreeze; the dynamic-unfreeze extension
+    /// disables the scheduler instead).
+    pub fn pick(&mut self, t: usize, freeze: &FreezeState) -> Variant {
+        if !self.enabled || self.attn_components.is_empty() {
+            return Variant::Full;
+        }
+        if self.swapped_at.is_some() {
+            return Variant::AttnFrozen;
+        }
+        let all_attn_frozen =
+            self.attn_components.iter().all(|&c| freeze.is_frozen(c));
+        if all_attn_frozen {
+            self.swapped_at = Some(t);
+            Variant::AttnFrozen
+        } else {
+            Variant::Full
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::freeze::FreezeReason;
+    use crate::coordinator::grades::tests::fake_manifest;
+
+    #[test]
+    fn swaps_when_all_attention_frozen() {
+        let m = fake_manifest(2);
+        let mut s = VariantScheduler::new(&m, true);
+        let mut fs = FreezeState::new(m.n_components);
+        assert_eq!(s.pick(1, &fs), Variant::Full);
+        for c in &m.components {
+            if c.group == "attention" {
+                fs.freeze(c.idx, 5, FreezeReason::Converged, 0.0);
+            }
+        }
+        assert_eq!(s.pick(6, &fs), Variant::AttnFrozen);
+        assert_eq!(s.swapped_at, Some(6));
+        // monotone
+        assert_eq!(s.pick(7, &fs), Variant::AttnFrozen);
+    }
+
+    #[test]
+    fn disabled_never_swaps() {
+        let m = fake_manifest(1);
+        let mut s = VariantScheduler::new(&m, false);
+        let mut fs = FreezeState::new(m.n_components);
+        for c in 0..m.n_components {
+            fs.freeze(c, 1, FreezeReason::Converged, 0.0);
+        }
+        assert_eq!(s.pick(2, &fs), Variant::Full);
+    }
+}

@@ -1,0 +1,216 @@
+//! The training event loop — Algorithm 1 end to end.
+//!
+//! One `Trainer::run` drives: batch sampling, ctrl assembly (LR schedule +
+//! freeze mask), the AOT train step, the metrics probe, the GradES monitor,
+//! the classic-ES baseline, the variant scheduler, FLOPs accounting and
+//! per-step logging. All six paper methods are this one loop with
+//! different `StoppingMethod` (the fp/lora split lives in the artifact).
+
+use anyhow::Result;
+
+use crate::config::RepoConfig;
+use crate::coordinator::classic_es::ClassicEs;
+use crate::coordinator::flops::FlopsCounter;
+use crate::coordinator::freeze::FreezeState;
+use crate::coordinator::grades::GradesMonitor;
+use crate::coordinator::lr::CosineSchedule;
+use crate::coordinator::metrics::MetricsLog;
+use crate::coordinator::scheduler::{Variant, VariantScheduler};
+use crate::runtime::artifact::Bundle;
+use crate::runtime::session::{Batch, Session};
+use crate::util::timer::Timer;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StoppingMethod {
+    /// Train all T steps (the paper's "Full Parameter"/"LoRA" baselines).
+    None,
+    /// Validation-loss early stopping (+ES).
+    ClassicEs,
+    /// Gradient-based component early stopping (+GradES).
+    GradEs,
+}
+
+impl StoppingMethod {
+    pub fn label(&self) -> &'static str {
+        match self {
+            StoppingMethod::None => "base",
+            StoppingMethod::ClassicEs => "es",
+            StoppingMethod::GradEs => "grades",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "base" | "none" => Some(Self::None),
+            "es" => Some(Self::ClassicEs),
+            "grades" => Some(Self::GradEs),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StopCause {
+    BudgetExhausted,
+    AllComponentsFrozen,
+    ValidationPatience,
+}
+
+pub struct TrainOutcome {
+    pub steps_run: usize,
+    pub stop_cause: StopCause,
+    pub wall_secs: f64,
+    /// Seconds spent in validation passes (classic-ES overhead).
+    pub validation_secs: f64,
+    /// Seconds spent in monitor probes + decisions (GradES overhead).
+    pub monitor_secs: f64,
+    pub flops: FlopsCounter,
+    pub log: MetricsLog,
+    pub freeze: FreezeState,
+    pub final_val_loss: f64,
+    pub variant_swap_step: Option<usize>,
+}
+
+pub struct TrainerOptions {
+    pub method: StoppingMethod,
+    pub total_steps: usize,
+    pub seed: i32,
+    /// Probe cadence before the grace period (monitoring needs every-step
+    /// probes only once freezing decisions are live).
+    pub probe_every: usize,
+    /// Enable the attn-frozen variant hot swap.
+    pub variant_scheduler: bool,
+    /// Also run a final validation pass at the end (for reporting).
+    pub final_validation: bool,
+    /// Pretrained base parameters applied after init (fine-tuning setting).
+    pub warm_start: Option<std::sync::Arc<crate::coordinator::warmstart::BaseCheckpoint>>,
+}
+
+impl TrainerOptions {
+    pub fn from_config(cfg: &RepoConfig, method: StoppingMethod) -> Self {
+        TrainerOptions {
+            method,
+            total_steps: cfg.run.total_steps,
+            seed: cfg.run.seed as i32,
+            probe_every: 1,
+            variant_scheduler: method == StoppingMethod::GradEs,
+            final_validation: true,
+            warm_start: None,
+        }
+    }
+}
+
+/// Run one training job. `next_batch` yields training batches;
+/// `val_batches` is the fixed validation set.
+pub fn run<F: FnMut() -> Batch>(
+    bundle: &Bundle,
+    cfg: &RepoConfig,
+    opts: &TrainerOptions,
+    next_batch: F,
+    val_batches: &[Batch],
+) -> Result<TrainOutcome> {
+    run_and_keep(bundle, cfg, opts, next_batch, val_batches).map(|t| t.outcome)
+}
+
+/// Run and leave the trained session alive for downstream evaluation.
+pub struct TrainedModel<'b> {
+    pub session: Session<'b>,
+    pub outcome: TrainOutcome,
+}
+
+pub fn run_and_keep<'b, F: FnMut() -> Batch>(
+    bundle: &'b Bundle,
+    cfg: &RepoConfig,
+    opts: &TrainerOptions,
+    mut next_batch: F,
+    val_batches: &[Batch],
+) -> Result<TrainedModel<'b>> {
+    // Re-run the same loop but keep the session. (Shared implementation via
+    // closure would tangle lifetimes; the loop body is identical.)
+    let m = &bundle.manifest;
+    let mut session = Session::new(bundle);
+    session.init(opts.seed)?;
+    if let Some(ck) = &opts.warm_start {
+        ck.apply(&mut session)?;
+    }
+
+    let schedule = CosineSchedule::new(cfg.run.lr, cfg.run.warmup_frac, opts.total_steps);
+    let mut monitor = match opts.method {
+        StoppingMethod::GradEs => GradesMonitor::new(&cfg.grades, m, opts.total_steps),
+        _ => GradesMonitor::disabled(m),
+    };
+    let mut es = match opts.method {
+        StoppingMethod::ClassicEs => ClassicEs::new(&cfg.es, opts.total_steps),
+        _ => ClassicEs::disabled(&cfg.es),
+    };
+    let mut freeze = FreezeState::new(m.n_components);
+    let mut scheduler = VariantScheduler::new(m, opts.variant_scheduler);
+    let mut flops = FlopsCounter::default();
+    let mut log = MetricsLog::default();
+    let mut ctrl = vec![0f32; m.ctrl_len];
+    let wall = Timer::new();
+    let mut monitor_secs = 0.0f64;
+    let mut validation_secs = 0.0f64;
+    let mut stop_cause = StopCause::BudgetExhausted;
+    let mut steps_run = 0usize;
+
+    for t in 1..=opts.total_steps {
+        ctrl[0] = t as f32;
+        ctrl[1] = schedule.lr(t) as f32;
+        ctrl[2] = 1.0;
+        ctrl[m.ctrl_mask_offset..m.ctrl_mask_offset + m.n_components]
+            .copy_from_slice(freeze.mask());
+        let variant = scheduler.pick(t, &freeze);
+        let batch = next_batch();
+        session.train_step(&batch, &ctrl, variant == Variant::AttnFrozen)?;
+        steps_run = t;
+        flops.record_step(m, &freeze);
+        let in_monitor_window = t > monitor.grace_steps();
+        if in_monitor_window || t % opts.probe_every == 0 || t == opts.total_steps {
+            let mt = Timer::new();
+            let metrics = session.probe()?;
+            let lr_scale = schedule.lr(t) / cfg.run.lr.max(1e-30);
+            monitor.observe(t, m, &metrics, lr_scale, &mut freeze);
+            monitor_secs += mt.secs();
+            log.record(t, schedule.lr(t) as f64, freeze.frozen_fraction(), m, &metrics);
+        }
+        if monitor.should_terminate(&freeze) {
+            stop_cause = StopCause::AllComponentsFrozen;
+            break;
+        }
+        if es.due(t) && !val_batches.is_empty() {
+            let vt = Timer::new();
+            let val_loss = session.eval_mean_loss(val_batches)?;
+            let secs = vt.secs();
+            validation_secs += secs;
+            flops.record_validation(m, val_batches.len());
+            log.record_val(t, val_loss);
+            if es.record(val_loss, secs) {
+                stop_cause = StopCause::ValidationPatience;
+                break;
+            }
+        }
+    }
+
+    let final_val_loss = if opts.final_validation && !val_batches.is_empty() {
+        session.eval_mean_loss(val_batches)?
+    } else {
+        f64::NAN
+    };
+
+    Ok(TrainedModel {
+        session,
+        outcome: TrainOutcome {
+            steps_run,
+            stop_cause,
+            wall_secs: wall.secs(),
+            validation_secs,
+            monitor_secs,
+            flops,
+            log,
+            freeze,
+            final_val_loss,
+            variant_swap_step: scheduler.swapped_at,
+        },
+    })
+}

@@ -1,0 +1,188 @@
+//! Warm-start substrate: pretrain a base model once, then fine-tune it
+//! under every method — the paper's setting (it fine-tunes pretrained
+//! checkpoints; LoRA on a random base is meaningless since the frozen
+//! embeddings carry no structure).
+//!
+//! A checkpoint is the host copy of a trained FP state vector. Fine-tuning
+//! runs (FP or LoRA, any stopping method) start from `init()` and then
+//! overwrite every *base* parameter present in the checkpoint, mapped **by
+//! parameter name** across manifests (the LoRA layout stores the same base
+//! tensors at different offsets, plus fresh A/B adapters).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::config::RepoConfig;
+use crate::coordinator::lr::CosineSchedule;
+use crate::coordinator::trainer::{run_and_keep, StoppingMethod, TrainerOptions};
+use crate::data;
+use crate::runtime::artifact::{Bundle, Client};
+use crate::runtime::manifest::Manifest;
+use crate::runtime::session::Session;
+
+/// Named parameter values extracted from a trained state.
+pub struct BaseCheckpoint {
+    pub params: HashMap<String, Vec<f32>>,
+    pub source: String,
+}
+
+impl BaseCheckpoint {
+    /// Extract all parameters from a state vector via its manifest.
+    pub fn from_state(manifest: &Manifest, state: &[f32]) -> Result<Self> {
+        ensure!(state.len() == manifest.state_len, "state length mismatch");
+        let mut params = HashMap::new();
+        for p in &manifest.params {
+            params.insert(p.name.clone(), state[p.offset..p.offset + p.size()].to_vec());
+        }
+        Ok(BaseCheckpoint { params, source: manifest.name.clone() })
+    }
+
+    /// Overwrite a session's matching base parameters (by name) in place.
+    /// Tensors absent from the checkpoint (LoRA A/B) keep their init.
+    pub fn apply(&self, session: &mut Session) -> Result<usize> {
+        let manifest = &session.bundle.manifest;
+        let mut state = session.state_to_host()?;
+        let mut applied = 0usize;
+        for p in &manifest.params {
+            if let Some(vals) = self.params.get(&p.name) {
+                ensure!(
+                    vals.len() == p.size(),
+                    "shape mismatch for {} ({} vs {})",
+                    p.name,
+                    vals.len(),
+                    p.size()
+                );
+                state[p.offset..p.offset + p.size()].copy_from_slice(vals);
+                applied += 1;
+            }
+        }
+        session.state_from_host(&state)?;
+        Ok(applied)
+    }
+}
+
+fn cache_path(config_name: &str, steps: usize) -> PathBuf {
+    crate::config::repo_root()
+        .join("results")
+        .join("checkpoints")
+        .join(format!("{config_name}_{steps}.bin"))
+}
+
+/// Pretrain (or load a cached) FP base checkpoint for `config_name`.
+/// Pretraining uses the *pretrain* corpus seed (the fine-tune corpus is a
+/// domain-shifted subset — see `data::build_lm_finetune`).
+pub fn pretrain_checkpoint(
+    client: &Client,
+    config_name: &str,
+    steps: usize,
+) -> Result<BaseCheckpoint> {
+    let path = cache_path(config_name, steps);
+    let bundle = Bundle::by_name(client, config_name)
+        .with_context(|| format!("pretrain artifact {config_name}"))?;
+    if path.exists() {
+        let bytes = std::fs::read(&path)?;
+        let state: Vec<f32> = bytes[8..]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        if state.len() == bundle.manifest.state_len {
+            let mut ck = BaseCheckpoint::from_state(&bundle.manifest, &state)?;
+            ck.source = format!("{config_name} (cached)");
+            return Ok(ck);
+        }
+        // stale cache (layout changed) — retrain below
+    }
+    let cfg = RepoConfig::by_name(config_name)?;
+    let mut ds = data::build_lm_pretrain(&cfg, &bundle.manifest)?;
+    let opts = TrainerOptions {
+        method: StoppingMethod::None,
+        total_steps: steps,
+        seed: cfg.run.seed as i32,
+        probe_every: usize::MAX,
+        variant_scheduler: false,
+        final_validation: false,
+        warm_start: None,
+    };
+    // reuse the same cosine schedule semantics as a real pretrain run
+    let _ = CosineSchedule::new(cfg.run.lr, cfg.run.warmup_frac, steps);
+    let trained = run_and_keep(&bundle, &cfg, &opts, || ds.train.next_batch(), &[])?;
+    trained.session.save_checkpoint(&path)?;
+    let state = trained.session.state_to_host()?;
+    BaseCheckpoint::from_state(&bundle.manifest, &state)
+}
+
+/// VLM variant of `pretrain_checkpoint`.
+pub fn pretrain_vlm_checkpoint(
+    client: &Client,
+    config_name: &str,
+    steps: usize,
+) -> Result<BaseCheckpoint> {
+    let path = cache_path(config_name, steps);
+    let bundle = Bundle::by_name(client, config_name)?;
+    if path.exists() {
+        let bytes = std::fs::read(&path)?;
+        let state: Vec<f32> = bytes[8..]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        if state.len() == bundle.manifest.state_len {
+            return BaseCheckpoint::from_state(&bundle.manifest, &state);
+        }
+    }
+    let cfg = RepoConfig::by_name(config_name)?;
+    let ds = data::build_vlm_pretrain(&cfg, &bundle.manifest)?;
+    let batches = ds.train.clone();
+    let mut i = 0usize;
+    let opts = TrainerOptions {
+        method: StoppingMethod::None,
+        total_steps: steps,
+        seed: cfg.run.seed as i32,
+        probe_every: usize::MAX,
+        variant_scheduler: false,
+        final_validation: false,
+        warm_start: None,
+    };
+    let trained = run_and_keep(
+        &bundle,
+        &cfg,
+        &opts,
+        move || {
+            let b = batches[i % batches.len()].clone();
+            i += 1;
+            b
+        },
+        &[],
+    )?;
+    trained.session.save_checkpoint(&path)?;
+    let state = trained.session.state_to_host()?;
+    BaseCheckpoint::from_state(&bundle.manifest, &state)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::grades::tests::fake_manifest;
+    use crate::runtime::manifest::ParamInfo;
+
+    #[test]
+    fn from_state_extracts_by_offset() {
+        let mut m = fake_manifest(1);
+        m.state_len = 10;
+        m.params = vec![
+            ParamInfo {
+                name: "a".into(),
+                shape: vec![2, 2],
+                offset: 2,
+                trainable: true,
+                component: None,
+            },
+            ParamInfo { name: "b".into(), shape: vec![3], offset: 6, trainable: false, component: None },
+        ];
+        let state: Vec<f32> = (0..10).map(|x| x as f32).collect();
+        let ck = BaseCheckpoint::from_state(&m, &state).unwrap();
+        assert_eq!(ck.params["a"], vec![2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(ck.params["b"], vec![6.0, 7.0, 8.0]);
+    }
+}

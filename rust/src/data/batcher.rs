@@ -1,0 +1,159 @@
+//! Sequence packing + epoch iteration: sentences → fixed-shape `Batch`es.
+
+use crate::data::corpus::Sentence;
+use crate::runtime::session::Batch;
+use crate::util::rng::Rng;
+
+/// Pack sentences densely into rows of `seq_len`; next-token targets.
+/// Rows are independent documents (no cross-row continuation); remainder
+/// positions are PAD (-1) in the targets so they don't contribute loss.
+pub fn pack_rows(sentences: &[Sentence], seq_len: usize) -> Vec<(Vec<i32>, Vec<i32>)> {
+    let mut rows = Vec::new();
+    let mut cur: Vec<i32> = Vec::with_capacity(seq_len + 1);
+    for s in sentences {
+        if cur.len() + s.ids.len() > seq_len + 1 {
+            if cur.len() >= 2 {
+                rows.push(finish_row(&cur, seq_len));
+            }
+            cur.clear();
+        }
+        // sentence longer than a row: truncate
+        if s.ids.len() > seq_len + 1 {
+            cur.extend(&s.ids[..seq_len + 1]);
+        } else {
+            cur.extend(&s.ids);
+        }
+    }
+    if cur.len() >= 2 {
+        rows.push(finish_row(&cur, seq_len));
+    }
+    rows
+}
+
+fn finish_row(ids: &[i32], seq_len: usize) -> (Vec<i32>, Vec<i32>) {
+    // tokens = ids[..-1], targets = ids[1..], padded to seq_len
+    let n = ids.len().min(seq_len + 1);
+    let mut tokens = vec![0i32; seq_len];
+    let mut targets = vec![-1i32; seq_len];
+    for i in 0..n - 1 {
+        tokens[i] = ids[i];
+        targets[i] = ids[i + 1];
+    }
+    (tokens, targets)
+}
+
+/// Infinite shuffled-epoch batch iterator over packed rows.
+pub struct BatchIter {
+    rows: Vec<(Vec<i32>, Vec<i32>)>,
+    order: Vec<usize>,
+    pos: usize,
+    batch_size: usize,
+    rng: Rng,
+    pub epoch: usize,
+}
+
+impl BatchIter {
+    pub fn new(rows: Vec<(Vec<i32>, Vec<i32>)>, batch_size: usize, seed: u64) -> Self {
+        assert!(!rows.is_empty(), "no rows to batch");
+        let order: Vec<usize> = (0..rows.len()).collect();
+        let mut it =
+            Self { rows, order, pos: 0, batch_size, rng: Rng::new(seed), epoch: 0 };
+        it.rng.shuffle(&mut it.order);
+        it
+    }
+
+    pub fn next_batch(&mut self) -> Batch {
+        let mut tokens = Vec::with_capacity(self.batch_size * self.rows[0].0.len());
+        let mut targets = Vec::with_capacity(tokens.capacity());
+        for _ in 0..self.batch_size {
+            if self.pos >= self.order.len() {
+                self.pos = 0;
+                self.epoch += 1;
+                self.rng.shuffle(&mut self.order);
+            }
+            let (t, y) = &self.rows[self.order[self.pos]];
+            tokens.extend_from_slice(t);
+            targets.extend_from_slice(y);
+            self.pos += 1;
+        }
+        Batch { tokens, targets, patches: Vec::new() }
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+}
+
+/// Fixed (non-shuffled) eval batches covering all rows once, zero-padding
+/// the last batch with fully-masked rows.
+pub fn eval_batches(
+    rows: &[(Vec<i32>, Vec<i32>)],
+    batch_size: usize,
+    seq_len: usize,
+) -> Vec<Batch> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < rows.len() {
+        let mut tokens = Vec::with_capacity(batch_size * seq_len);
+        let mut targets = Vec::with_capacity(batch_size * seq_len);
+        for b in 0..batch_size {
+            if let Some((t, y)) = rows.get(i + b) {
+                tokens.extend_from_slice(t);
+                targets.extend_from_slice(y);
+            } else {
+                tokens.extend(std::iter::repeat(0).take(seq_len));
+                targets.extend(std::iter::repeat(-1).take(seq_len));
+            }
+        }
+        out.push(Batch { tokens, targets, patches: Vec::new() });
+        i += batch_size;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::generate;
+    use crate::data::vocab::Vocab;
+
+    #[test]
+    fn packing_shapes() {
+        let v = Vocab::build(256).unwrap();
+        let ss = generate(&v, 1, 40);
+        let rows = pack_rows(&ss, 48);
+        assert!(!rows.is_empty());
+        for (t, y) in &rows {
+            assert_eq!(t.len(), 48);
+            assert_eq!(y.len(), 48);
+            // next-token alignment where targets valid
+            for i in 0..47 {
+                if y[i] >= 0 && y[i + 1] >= 0 {
+                    assert_eq!(t[i + 1], y[i]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batch_iter_cycles_epochs() {
+        let v = Vocab::build(256).unwrap();
+        let ss = generate(&v, 1, 10);
+        let rows = pack_rows(&ss, 32);
+        let n = rows.len();
+        let mut it = BatchIter::new(rows, 4, 9);
+        for _ in 0..(n + 3) {
+            let b = it.next_batch();
+            assert_eq!(b.tokens.len(), 4 * 32);
+        }
+        assert!(it.epoch >= 1);
+    }
+
+    #[test]
+    fn eval_batches_cover_all() {
+        let rows: Vec<_> = (0..5).map(|i| (vec![i; 8], vec![i; 8])).collect();
+        let bs = eval_batches(&rows, 2, 8);
+        assert_eq!(bs.len(), 3);
+        assert_eq!(bs[2].targets[8..], vec![-1i32; 8][..]); // padded row
+    }
+}

@@ -1,0 +1,271 @@
+//! Synthetic probabilistic-grammar corpus (the fine-tuning dataset).
+//!
+//! Sentences follow the template
+//!     DET ADJ? NOUN VERB DET ADJ? NOUN ADV? .
+//! with hard agreement rules a model must learn:
+//!   * determiner/adjective gender agrees with its noun (A vs B),
+//!   * verbs select the gender of their *object* noun,
+//!   * adverbs associate with the verb's class,
+//!   * lexical skew: Zipf-ish word frequencies within each class.
+//!
+//! The training split is intentionally small (config `[data]`) so extended
+//! training overfits — the regime where early stopping pays off.
+
+use crate::data::vocab::{Vocab, BOS, EOS, PERIOD};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct Sentence {
+    pub ids: Vec<i32>,
+}
+
+pub struct GrammarGen<'v> {
+    pub vocab: &'v Vocab,
+    /// Zipf exponent for intra-class word choice.
+    pub zipf: f64,
+}
+
+impl<'v> GrammarGen<'v> {
+    pub fn new(vocab: &'v Vocab) -> Self {
+        Self { vocab, zipf: 1.1 }
+    }
+
+    /// Tail-biased generator (rare-word suite): negative exponent inverts
+    /// the Zipf ranking so the long tail dominates.
+    pub fn rare(vocab: &'v Vocab) -> Self {
+        Self { vocab, zipf: -1.1 }
+    }
+
+    /// Head-only generator (frequent-word suite).
+    pub fn frequent(vocab: &'v Vocab) -> Self {
+        Self { vocab, zipf: 3.0 }
+    }
+
+    fn zipf_pick(&self, r: &mut Rng, range: crate::data::vocab::Range) -> i32 {
+        let n = range.len as usize;
+        let weights: Vec<f64> =
+            (0..n).map(|i| 1.0 / ((i + 1) as f64).powf(self.zipf)).collect();
+        range.get(r.weighted(&weights))
+    }
+
+    /// One grammatical sentence (token ids, starts with BOS, ends EOS).
+    pub fn sentence(&self, r: &mut Rng) -> Sentence {
+        let v = self.vocab;
+        let mut ids = vec![BOS];
+        // subject NP
+        let subj_gender = r.chance(0.5);
+        let (det_s, adj_s, noun_s) = if subj_gender {
+            (v.det_a, v.adj_a, v.noun_a)
+        } else {
+            (v.det_b, v.adj_b, v.noun_b)
+        };
+        ids.push(self.zipf_pick(r, det_s));
+        if r.chance(0.5) {
+            ids.push(self.zipf_pick(r, adj_s));
+        }
+        ids.push(self.zipf_pick(r, noun_s));
+        // verb selects object gender
+        let obj_gender_a = r.chance(0.5);
+        let verb_range = if obj_gender_a { v.verb_a } else { v.verb_b };
+        let verb = self.zipf_pick(r, verb_range);
+        ids.push(verb);
+        // object NP agrees with the verb's selectional class
+        let (det_o, adj_o, noun_o) = if obj_gender_a {
+            (v.det_a, v.adj_a, v.noun_a)
+        } else {
+            (v.det_b, v.adj_b, v.noun_b)
+        };
+        ids.push(self.zipf_pick(r, det_o));
+        if r.chance(0.5) {
+            ids.push(self.zipf_pick(r, adj_o));
+        }
+        ids.push(self.zipf_pick(r, noun_o));
+        // adverb associated with verb class: first half of adv for verb_a
+        if r.chance(0.4) {
+            let half = (v.adv.len / 2).max(1);
+            let idx = if obj_gender_a { r.below(half as usize) } else { half as usize + r.below((v.adv.len - half) as usize) };
+            ids.push(v.adv.get(idx));
+        }
+        ids.push(PERIOD);
+        ids.push(EOS);
+        Sentence { ids }
+    }
+
+    /// Corrupt one rule in a sentence (used by benchmark distractors).
+    /// `rule` ∈ {"det", "adj", "verb_obj", "adv"}.
+    pub fn corrupt(&self, r: &mut Rng, s: &Sentence, rule: &str) -> Sentence {
+        let v = self.vocab;
+        let mut ids = s.ids.clone();
+        match rule {
+            "det" => {
+                // swap a determiner to the opposite gender
+                for id in ids.iter_mut() {
+                    if v.det_a.contains(*id) {
+                        *id = self.zipf_pick(r, v.det_b);
+                        break;
+                    }
+                    if v.det_b.contains(*id) {
+                        *id = self.zipf_pick(r, v.det_a);
+                        break;
+                    }
+                }
+            }
+            "adj" => {
+                let mut done = false;
+                for id in ids.iter_mut() {
+                    if v.adj_a.contains(*id) {
+                        *id = self.zipf_pick(r, v.adj_b);
+                        done = true;
+                        break;
+                    }
+                    if v.adj_b.contains(*id) {
+                        *id = self.zipf_pick(r, v.adj_a);
+                        done = true;
+                        break;
+                    }
+                }
+                if !done {
+                    return self.corrupt(r, s, "det");
+                }
+            }
+            "verb_obj" => {
+                // swap the *object noun* gender, violating verb selection
+                let mut seen = 0;
+                for id in ids.iter_mut() {
+                    if v.noun_a.contains(*id) || v.noun_b.contains(*id) {
+                        seen += 1;
+                        if seen == 2 {
+                            *id = if v.noun_a.contains(*id) {
+                                self.zipf_pick(r, v.noun_b)
+                            } else {
+                                self.zipf_pick(r, v.noun_a)
+                            };
+                            break;
+                        }
+                    }
+                }
+            }
+            "det2" => {
+                // corrupt the *object* determiner — a long-range agreement
+                // violation (distance from the selecting verb).
+                let mut seen = 0;
+                for id in ids.iter_mut() {
+                    if v.det_a.contains(*id) || v.det_b.contains(*id) {
+                        seen += 1;
+                        if seen == 2 {
+                            *id = if v.det_a.contains(*id) {
+                                self.zipf_pick(r, v.det_b)
+                            } else {
+                                self.zipf_pick(r, v.det_a)
+                            };
+                            break;
+                        }
+                    }
+                }
+            }
+            "swap" => {
+                // word-order violation: swap two adjacent interior tokens
+                if ids.len() >= 5 {
+                    let i = 1 + r.below(ids.len() - 4);
+                    ids.swap(i, i + 1);
+                    if ids == s.ids {
+                        ids.swap(1, 2);
+                    }
+                }
+            }
+            "adv" => {
+                let half = (v.adv.len / 2).max(1);
+                let mut done = false;
+                for id in ids.iter_mut() {
+                    if v.adv.contains(*id) {
+                        let local = *id - v.adv.start;
+                        *id = if local < half {
+                            v.adv.get(half as usize + r.below((v.adv.len - half) as usize))
+                        } else {
+                            v.adv.get(r.below(half as usize))
+                        };
+                        done = true;
+                        break;
+                    }
+                }
+                if !done {
+                    return self.corrupt(r, s, "verb_obj");
+                }
+            }
+            _ => panic!("unknown corruption rule {rule}"),
+        }
+        Sentence { ids }
+    }
+}
+
+/// Generate `n` sentences from a fresh fork of `seed`.
+pub fn generate(vocab: &Vocab, seed: u64, n: usize) -> Vec<Sentence> {
+    let mut r = Rng::new(seed);
+    let g = GrammarGen::new(vocab);
+    (0..n).map(|_| g.sentence(&mut r)).collect()
+}
+
+/// Domain-shifted sample: same grammar rules, different lexical skew
+/// (the fine-tuning distribution).
+pub fn generate_shifted(vocab: &Vocab, seed: u64, n: usize, zipf: f64) -> Vec<Sentence> {
+    let mut r = Rng::new(seed);
+    let mut g = GrammarGen::new(vocab);
+    g.zipf = zipf;
+    (0..n).map(|_| g.sentence(&mut r)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vocab() -> Vocab {
+        Vocab::build(256).unwrap()
+    }
+
+    #[test]
+    fn sentences_well_formed() {
+        let v = vocab();
+        let ss = generate(&v, 7, 50);
+        for s in &ss {
+            assert_eq!(s.ids[0], BOS);
+            assert_eq!(*s.ids.last().unwrap(), EOS);
+            assert_eq!(s.ids[s.ids.len() - 2], PERIOD);
+            assert!(s.ids.len() >= 7 && s.ids.len() <= 11, "{:?}", s.ids);
+            assert!(s.ids.iter().all(|&id| id >= 0 && (id as usize) < v.vocab_size));
+        }
+    }
+
+    #[test]
+    fn agreement_holds() {
+        let v = vocab();
+        let ss = generate(&v, 9, 200);
+        for s in &ss {
+            // first det gender must match first noun gender
+            let det = s.ids.iter().find(|&&id| v.det_a.contains(id) || v.det_b.contains(id)).unwrap();
+            let noun = s.ids.iter().find(|&&id| v.noun_a.contains(id) || v.noun_b.contains(id)).unwrap();
+            assert_eq!(v.det_a.contains(*det), v.noun_a.contains(*noun));
+        }
+    }
+
+    #[test]
+    fn corruption_changes_exactly_one_token() {
+        let v = vocab();
+        let mut r = Rng::new(3);
+        let g = GrammarGen::new(&v);
+        for rule in ["det", "verb_obj"] {
+            let s = g.sentence(&mut r);
+            let c = g.corrupt(&mut r, &s, rule);
+            let diffs = s.ids.iter().zip(&c.ids).filter(|(a, b)| a != b).count();
+            assert_eq!(diffs, 1, "rule {rule}");
+        }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let v = vocab();
+        let a = generate(&v, 5, 10);
+        let b = generate(&v, 5, 10);
+        assert_eq!(a.iter().map(|s| s.ids.clone()).collect::<Vec<_>>(),
+                   b.iter().map(|s| s.ids.clone()).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,122 @@
+//! Synthetic data substrates: grammar corpus, scene images, batching.
+
+pub mod batcher;
+pub mod corpus;
+pub mod multimodal;
+pub mod vocab;
+
+use anyhow::Result;
+
+use crate::config::RepoConfig;
+use crate::runtime::manifest::Manifest;
+use crate::runtime::session::Batch;
+
+/// Everything a training run needs: train iterator + fixed val batches.
+pub struct Dataset {
+    pub train: batcher::BatchIter,
+    pub val: Vec<Batch>,
+    pub vocab: vocab::Vocab,
+}
+
+/// Build the *fine-tuning* LM dataset: a small, lexically domain-shifted
+/// corpus (flatter Zipf, fresh seed) — small enough to overfit, which is
+/// the regime where early stopping pays off. Benchmarks sample the general
+/// distribution, so overfitting here hurts measured accuracy.
+pub fn build_lm(cfg: &RepoConfig, manifest: &Manifest) -> Result<Dataset> {
+    let vocab = vocab::Vocab::build(manifest.vocab_size)?;
+    let train_s =
+        corpus::generate_shifted(&vocab, cfg.data.seed ^ 0xff17, cfg.data.train_sentences, 0.4);
+    let val_s =
+        corpus::generate_shifted(&vocab, cfg.data.seed ^ 0x5eed, cfg.data.val_sentences, 0.4);
+    let train_rows = batcher::pack_rows(&train_s, manifest.seq_len);
+    let val_rows = batcher::pack_rows(&val_s, manifest.seq_len);
+    Ok(Dataset {
+        train: batcher::BatchIter::new(train_rows, manifest.batch_size, cfg.run.seed ^ 0xba7c),
+        val: batcher::eval_batches(&val_rows, manifest.batch_size, manifest.seq_len),
+        vocab,
+    })
+}
+
+/// Build the *pretraining* LM dataset: the broad general-distribution
+/// corpus (4x the fine-tune size, no validation split needed).
+pub fn build_lm_pretrain(cfg: &RepoConfig, manifest: &Manifest) -> Result<Dataset> {
+    let vocab = vocab::Vocab::build(manifest.vocab_size)?;
+    let n = cfg.data.train_sentences * 4;
+    let train_s = corpus::generate(&vocab, cfg.data.seed, n);
+    let val_s = corpus::generate(&vocab, cfg.data.seed ^ 0x11, cfg.data.val_sentences);
+    let train_rows = batcher::pack_rows(&train_s, manifest.seq_len);
+    let val_rows = batcher::pack_rows(&val_s, manifest.seq_len);
+    Ok(Dataset {
+        train: batcher::BatchIter::new(train_rows, manifest.batch_size, cfg.run.seed ^ 0x9d),
+        val: batcher::eval_batches(&val_rows, manifest.batch_size, manifest.seq_len),
+        vocab,
+    })
+}
+
+/// VLM pretraining dataset (bigger scene sample, general distribution).
+pub fn build_vlm_pretrain(cfg: &RepoConfig, manifest: &Manifest) -> Result<VlmDataset> {
+    let mut big = cfg.clone();
+    big.data.train_sentences *= 4;
+    big.data.seed ^= 0x77;
+    build_vlm(&big, manifest)
+}
+
+/// VLM dataset: scene/caption pairs packed to fixed shapes.
+pub struct VlmDataset {
+    pub train: Vec<Batch>,
+    pub val: Vec<Batch>,
+    pub vocab: vocab::Vocab,
+    pub scene_cfg: multimodal::SceneConfig,
+}
+
+pub fn build_vlm(cfg: &RepoConfig, manifest: &Manifest) -> Result<VlmDataset> {
+    let vocab = vocab::Vocab::build(manifest.vocab_size)?;
+    let scene_cfg =
+        multimodal::SceneConfig::for_model(manifest.n_patches, manifest.patch_dim, &vocab);
+    let n_train = cfg.data.train_sentences;
+    let n_val = cfg.data.val_sentences;
+    let mk = |seed: u64, n: usize| -> Vec<Batch> {
+        let exs = multimodal::generate(&scene_cfg, &vocab, seed, n);
+        pack_vlm_batches(&exs, manifest)
+    };
+    Ok(VlmDataset {
+        train: mk(cfg.data.seed, n_train),
+        val: mk(cfg.data.seed ^ 0x5eed, n_val),
+        vocab,
+        scene_cfg,
+    })
+}
+
+/// Pack scene examples into fixed-shape VLM batches (one example per row;
+/// caption targets padded with -1).
+pub fn pack_vlm_batches(exs: &[multimodal::SceneExample], m: &Manifest) -> Vec<Batch> {
+    let (bsz, t) = (m.batch_size, m.seq_len);
+    let patch_len = m.n_patches * m.patch_dim;
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < exs.len() {
+        let mut batch = Batch::default();
+        for b in 0..bsz {
+            if let Some(ex) = exs.get(i + b) {
+                batch.patches.extend_from_slice(&ex.patches);
+                let ids = &ex.caption;
+                let n = ids.len().min(t + 1);
+                let mut tokens = vec![0i32; t];
+                let mut targets = vec![-1i32; t];
+                for k in 0..n.saturating_sub(1) {
+                    tokens[k] = ids[k];
+                    targets[k] = ids[k + 1];
+                }
+                batch.tokens.extend_from_slice(&tokens);
+                batch.targets.extend_from_slice(&targets);
+            } else {
+                batch.patches.extend(std::iter::repeat(0.0).take(patch_len));
+                batch.tokens.extend(std::iter::repeat(0).take(t));
+                batch.targets.extend(std::iter::repeat(-1).take(t));
+            }
+        }
+        out.push(batch);
+        i += bsz;
+    }
+    out
+}

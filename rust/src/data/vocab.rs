@@ -1,0 +1,132 @@
+//! Word-class vocabulary for the synthetic grammar (shared by the corpus
+//! generator and the benchmark suites).
+//!
+//! The vocabulary is partitioned into part-of-speech classes with two
+//! agreement genders (A/B). Token ids are assigned deterministically inside
+//! the model's vocab budget, so the same config always yields the same ids.
+
+use anyhow::{ensure, Result};
+
+pub const PAD: i32 = -1; // target padding (masked from the loss)
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const PERIOD: i32 = 3;
+pub const FIRST_WORD: i32 = 8; // ids below this are reserved/special
+
+/// A contiguous id range [start, start+len).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Range {
+    pub start: i32,
+    pub len: i32,
+}
+
+impl Range {
+    pub fn get(&self, i: usize) -> i32 {
+        assert!((i as i32) < self.len);
+        self.start + i as i32
+    }
+
+    pub fn contains(&self, id: i32) -> bool {
+        id >= self.start && id < self.start + self.len
+    }
+
+    pub fn ids(&self) -> impl Iterator<Item = i32> + '_ {
+        self.start..self.start + self.len
+    }
+}
+
+/// The word classes of the grammar. Gender A/B drives agreement rules.
+#[derive(Debug, Clone)]
+pub struct Vocab {
+    pub vocab_size: usize,
+    pub det_a: Range,
+    pub det_b: Range,
+    pub adj_a: Range,
+    pub adj_b: Range,
+    pub noun_a: Range,
+    pub noun_b: Range,
+    /// verbs preferring class-A / class-B objects (selectional restriction)
+    pub verb_a: Range,
+    pub verb_b: Range,
+    pub adv: Range,
+    /// VLM caption words
+    pub colors: Range,
+    pub shapes: Range,
+    pub positions: Range,
+}
+
+impl Vocab {
+    /// Partition `vocab_size` ids into the class ranges. Class sizes scale
+    /// with the budget so bigger configs get richer vocabularies.
+    pub fn build(vocab_size: usize) -> Result<Self> {
+        ensure!(vocab_size >= 128, "vocab_size must be >= 128, got {vocab_size}");
+        let budget = (vocab_size as i32) - FIRST_WORD;
+        // weights roughly proportional to natural class sizes
+        let unit = budget / 32;
+        let small = unit.max(2);
+        let big = (unit * 5).max(8);
+        let mut next = FIRST_WORD;
+        let mut take = |len: i32| {
+            let r = Range { start: next, len };
+            next += len;
+            r
+        };
+        let v = Vocab {
+            vocab_size,
+            det_a: take(small),
+            det_b: take(small),
+            adj_a: take(small * 2),
+            adj_b: take(small * 2),
+            noun_a: take(big),
+            noun_b: take(big),
+            verb_a: take(big / 2),
+            verb_b: take(big / 2),
+            adv: take(small * 2),
+            colors: take(small),
+            shapes: take(small),
+            positions: take(small),
+        };
+        ensure!(next <= vocab_size as i32, "vocab partition overflow: {next} > {vocab_size}");
+        Ok(v)
+    }
+
+    pub fn gender_of_noun(&self, id: i32) -> Option<char> {
+        if self.noun_a.contains(id) {
+            Some('a')
+        } else if self.noun_b.contains(id) {
+            Some('b')
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partitions_fit() {
+        for vs in [128, 256, 512, 1024, 4096] {
+            let v = Vocab::build(vs).unwrap();
+            assert!(v.positions.start + v.positions.len <= vs as i32);
+            // ranges are disjoint and ordered
+            assert!(v.det_a.start >= FIRST_WORD);
+            assert!(v.det_b.start >= v.det_a.start + v.det_a.len);
+            assert!(v.noun_a.len >= 8);
+        }
+    }
+
+    #[test]
+    fn gender_lookup() {
+        let v = Vocab::build(256).unwrap();
+        assert_eq!(v.gender_of_noun(v.noun_a.get(0)), Some('a'));
+        assert_eq!(v.gender_of_noun(v.noun_b.get(0)), Some('b'));
+        assert_eq!(v.gender_of_noun(BOS), None);
+    }
+
+    #[test]
+    fn rejects_tiny_vocab() {
+        assert!(Vocab::build(64).is_err());
+    }
+}

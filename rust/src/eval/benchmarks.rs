@@ -1,0 +1,315 @@
+//! Procedural benchmark suites — the repo's analogue of the paper's eight
+//! LM benchmarks (BoolQ…ARC-E), three VLM tasks (GQA/VQAv2/COCO-Cap) and
+//! the six nanoVLM categories (Table 3).
+//!
+//! Every suite is multiple-choice: one grammatical/faithful option + 3
+//! distractors corrupted under the suite's rule family. Accuracy = fraction
+//! of questions where the model assigns the lowest mean NLL to the truth —
+//! the same scoring harness shape as lm-eval.
+
+use crate::data::corpus::GrammarGen;
+use crate::data::multimodal::{self, SceneConfig};
+use crate::data::vocab::Vocab;
+use crate::util::rng::Rng;
+
+pub const N_OPTIONS: usize = 4;
+
+/// One multiple-choice question: N_OPTIONS token sequences (+ optional
+/// shared image patches); `correct` indexes the faithful option.
+pub struct McQuestion {
+    pub options: Vec<Vec<i32>>,
+    pub patches: Option<Vec<f32>>,
+    pub correct: usize,
+}
+
+pub struct Suite {
+    pub name: &'static str,
+    /// The paper benchmark this column stands in for.
+    pub paper_analogue: &'static str,
+    pub questions: Vec<McQuestion>,
+}
+
+fn mc_from_sentence(
+    g: &GrammarGen,
+    r: &mut Rng,
+    rule: &str,
+) -> McQuestion {
+    let truth = g.sentence(r);
+    let correct = r.below(N_OPTIONS);
+    let mut options = Vec::with_capacity(N_OPTIONS);
+    for i in 0..N_OPTIONS {
+        if i == correct {
+            options.push(truth.ids.clone());
+        } else {
+            // re-corrupt until distinct from the truth and prior options
+            let mut c = g.corrupt(r, &truth, rule);
+            for _ in 0..8 {
+                if c.ids != truth.ids && !options.contains(&c.ids) {
+                    break;
+                }
+                c = g.corrupt(r, &truth, rule);
+            }
+            options.push(c.ids);
+        }
+    }
+    McQuestion { options, patches: None, correct }
+}
+
+/// The eight LM suites (column order matches Table 1's benchmarks).
+pub fn lm_suites(vocab: &Vocab, seed: u64, n_questions: usize) -> Vec<Suite> {
+    let defs: [(&'static str, &'static str, &'static str, &'static str); 8] = [
+        ("AgreeDet", "BoolQ", "det", "std"),
+        ("AgreeAdj", "PIQA", "adj", "std"),
+        ("VerbSel", "SIQA", "verb_obj", "std"),
+        ("LongRange", "HellaSwag", "det2", "std"),
+        ("AdvAssoc", "WinoGrande", "adv", "std"),
+        ("WordOrder", "OpenBookQA", "swap", "std"),
+        ("RareComp", "ARC-C", "det", "rare"),
+        ("FreqComp", "ARC-E", "det", "freq"),
+    ];
+    defs.iter()
+        .enumerate()
+        .map(|(si, (name, analogue, rule, gen_kind))| {
+            let g = match *gen_kind {
+                "rare" => GrammarGen::rare(vocab),
+                "freq" => GrammarGen::frequent(vocab),
+                _ => GrammarGen::new(vocab),
+            };
+            let mut r = Rng::new(seed ^ ((si as u64 + 1) * 0x9e37));
+            let questions =
+                (0..n_questions).map(|_| mc_from_sentence(&g, &mut r, rule)).collect();
+            Suite { name, paper_analogue: analogue, questions }
+        })
+        .collect()
+}
+
+fn vlm_question(
+    cfg: &SceneConfig,
+    vocab: &Vocab,
+    r: &mut Rng,
+    what: &str,
+) -> McQuestion {
+    let scene = multimodal::gen_scene(cfg, r);
+    let patches = multimodal::render(cfg, &scene, r);
+    let truth = multimodal::caption(vocab, &scene);
+    let correct = r.below(N_OPTIONS);
+    let mut options = Vec::with_capacity(N_OPTIONS);
+    for i in 0..N_OPTIONS {
+        if i == correct {
+            options.push(truth.clone());
+        } else {
+            let mut c = multimodal::corrupt_caption(vocab, cfg, &scene, what, r);
+            for _ in 0..8 {
+                if c != truth && !options.contains(&c) {
+                    break;
+                }
+                c = multimodal::corrupt_caption(vocab, cfg, &scene, what, r);
+            }
+            options.push(c);
+        }
+    }
+    McQuestion { options, patches: Some(patches), correct }
+}
+
+/// The three VLM suites of Table 2 (GQA / VQAv2 / COCO-Cap analogues).
+pub fn vlm_suites(
+    cfg: &SceneConfig,
+    vocab: &Vocab,
+    seed: u64,
+    n_questions: usize,
+) -> Vec<Suite> {
+    let defs: [(&'static str, &'static str, &'static str); 3] = [
+        ("ColorQA", "GQA", "color"),
+        ("ShapeQA", "VQAv2", "shape"),
+        ("CapMatch", "COCO Cap", "position"),
+    ];
+    defs.iter()
+        .enumerate()
+        .map(|(si, (name, analogue, what))| {
+            let mut r = Rng::new(seed ^ ((si as u64 + 1) * 0x517c));
+            let questions =
+                (0..n_questions).map(|_| vlm_question(cfg, vocab, &mut r, what)).collect();
+            Suite { name, paper_analogue: analogue, questions }
+        })
+        .collect()
+}
+
+/// The six nanoVLM-style categories of Table 3.
+pub fn nanovlm_suites(
+    cfg: &SceneConfig,
+    vocab: &Vocab,
+    seed: u64,
+    n_questions: usize,
+) -> Vec<Suite> {
+    let defs: [(&'static str, &'static str, &'static str); 6] = [
+        ("CoarsePerc", "Coarse Perception", "shape"),
+        ("FinePerc", "Fine-grained Perception", "color"),
+        ("InstReason", "Instance Reasoning", "position"),
+        ("LogicReason", "Logical Reasoning", "order"),
+        ("Count", "Math", "count"),
+        ("SciTech", "Science & Technology", "combo"),
+    ];
+    defs.iter()
+        .enumerate()
+        .map(|(si, (name, analogue, what))| {
+            let mut r = Rng::new(seed ^ ((si as u64 + 7) * 0x2a65));
+            let questions = (0..n_questions)
+                .map(|_| match *what {
+                    "order" => vlm_order_question(cfg, vocab, &mut r),
+                    "count" => vlm_count_question(cfg, vocab, &mut r),
+                    "combo" => {
+                        let what = if r.chance(0.5) { "color" } else { "shape" };
+                        vlm_question(cfg, vocab, &mut r, what)
+                    }
+                    w => vlm_question(cfg, vocab, &mut r, w),
+                })
+                .collect();
+            Suite { name, paper_analogue: analogue, questions }
+        })
+        .collect()
+}
+
+/// Logical-order distractor: object clauses permuted out of raster order.
+fn vlm_order_question(cfg: &SceneConfig, vocab: &Vocab, r: &mut Rng) -> McQuestion {
+    // need >= 2 objects for an order violation
+    let (scene, patches) = loop {
+        let s = multimodal::gen_scene(cfg, r);
+        if s.objects.len() >= 2 {
+            let p = multimodal::render(cfg, &s, r);
+            break (s, p);
+        }
+    };
+    let truth = multimodal::caption(vocab, &scene);
+    let correct = r.below(N_OPTIONS);
+    let mut options = Vec::with_capacity(N_OPTIONS);
+    for i in 0..N_OPTIONS {
+        if i == correct {
+            options.push(truth.clone());
+        } else {
+            let mut s2 = scene.clone();
+            // permute object order => clause order violates raster order
+            loop {
+                r.shuffle(&mut s2.objects);
+                if s2.objects.iter().map(|o| o.cell).collect::<Vec<_>>()
+                    != scene.objects.iter().map(|o| o.cell).collect::<Vec<_>>()
+                {
+                    break;
+                }
+            }
+            // caption() sorts by cell; emit clauses manually to keep the
+            // violated order
+            let mut ids = vec![crate::data::vocab::BOS];
+            for o in &s2.objects {
+                ids.push(vocab.colors.get(o.color));
+                ids.push(vocab.shapes.get(o.shape));
+                ids.push(vocab.positions.get(multimodal::quadrant(o.cell, scene.grid)));
+                ids.push(crate::data::vocab::PERIOD);
+            }
+            ids.push(crate::data::vocab::EOS);
+            if ids == truth || options.contains(&ids) {
+                // degenerate (identical attrs) — fall back to color corrupt
+                options.push(multimodal::corrupt_caption(vocab, cfg, &scene, "color", r));
+            } else {
+                options.push(ids);
+            }
+        }
+    }
+    McQuestion { options, patches: Some(patches), correct }
+}
+
+/// Count distractor: a clause dropped or duplicated.
+fn vlm_count_question(cfg: &SceneConfig, vocab: &Vocab, r: &mut Rng) -> McQuestion {
+    let (scene, patches) = loop {
+        let s = multimodal::gen_scene(cfg, r);
+        if s.objects.len() >= 2 {
+            let p = multimodal::render(cfg, &s, r);
+            break (s, p);
+        }
+    };
+    let truth = multimodal::caption(vocab, &scene);
+    let correct = r.below(N_OPTIONS);
+    let mut options = Vec::with_capacity(N_OPTIONS);
+    for i in 0..N_OPTIONS {
+        if i == correct {
+            options.push(truth.clone());
+            continue;
+        }
+        let mut s2 = scene.clone();
+        if r.chance(0.5) {
+            let k = r.below(s2.objects.len());
+            s2.objects.remove(k);
+        } else {
+            let k = r.below(s2.objects.len());
+            let mut dup = s2.objects[k];
+            // duplicate into a free cell
+            for _ in 0..64 {
+                let cell = r.below(cfg.n_patches);
+                if !s2.objects.iter().any(|o| o.cell == cell) {
+                    dup.cell = cell;
+                    s2.objects.push(dup);
+                    break;
+                }
+            }
+        }
+        s2.objects.sort_by_key(|o| o.cell);
+        let ids = multimodal::caption(vocab, &s2);
+        if ids == truth || options.contains(&ids) {
+            options.push(multimodal::corrupt_caption(vocab, cfg, &scene, "shape", r));
+        } else {
+            options.push(ids);
+        }
+    }
+    McQuestion { options, patches: Some(patches), correct }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lm_suites_shape() {
+        let v = Vocab::build(256).unwrap();
+        let suites = lm_suites(&v, 42, 10);
+        assert_eq!(suites.len(), 8);
+        for s in &suites {
+            assert_eq!(s.questions.len(), 10);
+            for q in &s.questions {
+                assert_eq!(q.options.len(), N_OPTIONS);
+                assert!(q.correct < N_OPTIONS);
+                // distractors differ from the truth
+                let truth = &q.options[q.correct];
+                let distinct =
+                    q.options.iter().enumerate().filter(|(i, o)| *i != q.correct && *o != truth);
+                assert!(distinct.count() >= 2, "suite {}", s.name);
+            }
+        }
+    }
+
+    #[test]
+    fn vlm_suites_shape() {
+        let v = Vocab::build(256).unwrap();
+        let cfg = SceneConfig::for_model(16, 24, &v);
+        for suites in [vlm_suites(&cfg, &v, 1, 6), nanovlm_suites(&cfg, &v, 1, 6)] {
+            for s in &suites {
+                for q in &s.questions {
+                    assert!(q.patches.is_some());
+                    assert_eq!(q.patches.as_ref().unwrap().len(), 16 * 24);
+                    assert_eq!(q.options.len(), N_OPTIONS);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let v = Vocab::build(256).unwrap();
+        let a = lm_suites(&v, 7, 3);
+        let b = lm_suites(&v, 7, 3);
+        for (x, y) in a.iter().zip(&b) {
+            for (qa, qb) in x.questions.iter().zip(&y.questions) {
+                assert_eq!(qa.options, qb.options);
+                assert_eq!(qa.correct, qb.correct);
+            }
+        }
+    }
+}

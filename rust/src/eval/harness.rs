@@ -1,0 +1,110 @@
+//! Multiple-choice scoring harness: packs MC options into fixed-shape
+//! `eval_rows` batches and computes per-suite accuracy.
+
+use anyhow::{ensure, Result};
+
+use super::benchmarks::{McQuestion, Suite, N_OPTIONS};
+use crate::runtime::session::{Batch, Session};
+
+/// Convert a token sequence into an (tokens, targets) row of length T.
+fn seq_to_row(ids: &[i32], t: usize) -> (Vec<i32>, Vec<i32>) {
+    let n = ids.len().min(t + 1);
+    let mut tokens = vec![0i32; t];
+    let mut targets = vec![-1i32; t];
+    for i in 0..n.saturating_sub(1) {
+        tokens[i] = ids[i];
+        targets[i] = ids[i + 1];
+    }
+    (tokens, targets)
+}
+
+/// Score one suite. Packs `questions_per_batch = B / N_OPTIONS` questions
+/// per eval_rows call (each option one row; VLM rows replicate the
+/// question's patches).
+pub fn score_suite(session: &Session, suite: &Suite) -> Result<f64> {
+    let m = &session.bundle.manifest;
+    let b = m.batch_size;
+    let t = m.seq_len;
+    ensure!(b % N_OPTIONS == 0, "batch_size {b} must be a multiple of {N_OPTIONS}");
+    let qpb = b / N_OPTIONS;
+    let is_vlm = m.is_vlm();
+    let patch_len = m.n_patches * m.patch_dim;
+
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    let mut qi = 0usize;
+    while qi < suite.questions.len() {
+        let chunk: Vec<&McQuestion> =
+            suite.questions[qi..(qi + qpb).min(suite.questions.len())].iter().collect();
+        let mut batch = Batch::default();
+        for q in &chunk {
+            for opt in &q.options {
+                let (tok, tgt) = seq_to_row(opt, t);
+                batch.tokens.extend_from_slice(&tok);
+                batch.targets.extend_from_slice(&tgt);
+                if is_vlm {
+                    batch.patches.extend_from_slice(q.patches.as_ref().unwrap());
+                }
+            }
+        }
+        // pad out to full batch with masked rows
+        let rows = chunk.len() * N_OPTIONS;
+        for _ in rows..b {
+            batch.tokens.extend(std::iter::repeat(0).take(t));
+            batch.targets.extend(std::iter::repeat(-1).take(t));
+            if is_vlm {
+                batch.patches.extend(std::iter::repeat(0.0).take(patch_len));
+            }
+        }
+        let per_row = session.eval_rows(&batch)?;
+        for (ci, q) in chunk.iter().enumerate() {
+            let mut best = (f64::INFINITY, 0usize);
+            for o in 0..N_OPTIONS {
+                let (loss, count) = per_row[ci * N_OPTIONS + o];
+                let mean = if count > 0.0 { loss / count } else { f64::INFINITY };
+                if mean < best.0 {
+                    best = (mean, o);
+                }
+            }
+            if best.1 == q.correct {
+                correct += 1;
+            }
+            total += 1;
+        }
+        qi += chunk.len();
+    }
+    Ok(100.0 * correct as f64 / total.max(1) as f64)
+}
+
+/// Accuracy per suite, in order, plus the average — one Table-1 row.
+pub fn score_suites(session: &Session, suites: &[Suite]) -> Result<Vec<(String, f64)>> {
+    let mut out = Vec::new();
+    let mut sum = 0.0;
+    for s in suites {
+        let acc = score_suite(session, s)?;
+        sum += acc;
+        out.push((s.name.to_string(), acc));
+    }
+    out.push(("Avg.".to_string(), sum / suites.len().max(1) as f64));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seq_to_row_alignment() {
+        let (tok, tgt) = seq_to_row(&[1, 5, 7, 2], 6);
+        assert_eq!(tok, vec![1, 5, 7, 0, 0, 0]);
+        assert_eq!(tgt, vec![5, 7, 2, -1, -1, -1]);
+    }
+
+    #[test]
+    fn seq_to_row_truncates() {
+        let ids: Vec<i32> = (0..20).collect();
+        let (tok, tgt) = seq_to_row(&ids, 4);
+        assert_eq!(tok, vec![0, 1, 2, 3]);
+        assert_eq!(tgt, vec![1, 2, 3, 4]);
+    }
+}

@@ -1,0 +1,4 @@
+//! Benchmark suites + multiple-choice scoring harness.
+
+pub mod benchmarks;
+pub mod harness;

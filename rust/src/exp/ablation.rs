@@ -1,0 +1,108 @@
+//! Tables 6 & 7 — the τ × α ablation grid (accuracy and training time),
+//! plus two design-choice ablations DESIGN.md calls out: the convergence
+//! metric (Eq. 1 l1_diff vs §3.1 l1_abs) and freeze granularity
+//! (matrix-level GradES vs layer-level AutoFreeze-style).
+
+use anyhow::Result;
+
+use super::{write_result, ExpOptions};
+use crate::config::RepoConfig;
+use crate::coordinator::trainer::{self, StoppingMethod, TrainerOptions};
+use crate::data;
+use crate::eval::{benchmarks, harness};
+use crate::report::table::{pct, secs, Table};
+use crate::runtime::artifact::{Bundle, Client};
+
+pub const TAUS: [f64; 4] = [0.01, 0.05, 0.1, 0.2];
+pub const ALPHAS: [f64; 4] = [0.1, 0.3, 0.5, 0.6];
+
+fn run_one(
+    client: &Client,
+    config_name: &str,
+    opts: &ExpOptions,
+    mutate: impl FnOnce(&mut RepoConfig),
+) -> Result<(f64, f64, usize)> {
+    let mut cfg = RepoConfig::by_name(config_name)?;
+    mutate(&mut cfg);
+    let bundle = Bundle::by_name(client, config_name)?;
+    let mut dataset = data::build_lm(&cfg, &bundle.manifest)?;
+    let mut topts = TrainerOptions::from_config(&cfg, StoppingMethod::GradEs);
+    if let Some(s) = opts.steps_override {
+        topts.total_steps = s;
+    }
+    let trained = trainer::run_and_keep(
+        &bundle,
+        &cfg,
+        &topts,
+        || dataset.train.next_batch(),
+        &dataset.val,
+    )?;
+    let suites = benchmarks::lm_suites(&dataset.vocab, opts.bench_seed, opts.questions);
+    let accs = harness::score_suites(&trained.session, &suites)?;
+    let avg = accs.last().map(|a| a.1).unwrap_or(f64::NAN);
+    Ok((avg, trained.outcome.wall_secs, trained.outcome.steps_run))
+}
+
+pub fn run(client: &Client, opts: &ExpOptions, config_name: &str) -> Result<()> {
+    // ---- Tables 6 & 7: τ × α grid ----
+    let mut acc_t = Table::new(
+        std::iter::once("tau \\ alpha".to_string())
+            .chain(ALPHAS.iter().map(|a| format!("{a}")))
+            .collect::<Vec<_>>(),
+    );
+    let mut time_t = acc_t.clone();
+    for &tau in &TAUS {
+        let mut acc_row = vec![format!("{tau}")];
+        let mut time_row = vec![format!("{tau}")];
+        for &alpha in &ALPHAS {
+            let (avg, wall, steps) = run_one(client, config_name, opts, |c| {
+                c.grades.tau = tau;
+                c.grades.alpha = alpha;
+            })?;
+            if opts.verbose {
+                println!("[ablation tau={tau} alpha={alpha}] acc={avg:.2}% wall={wall:.2}s steps={steps}");
+            }
+            acc_row.push(pct(avg));
+            time_row.push(secs(wall));
+        }
+        acc_t.row(acc_row);
+        time_t.row(time_row);
+    }
+    let t6 = format!(
+        "## Table 6 — average accuracy (%) over the tau × alpha grid ({config_name})\n\n{}",
+        acc_t.render()
+    );
+    let t7 = format!(
+        "## Table 7 — fine-tuning time (s) over the tau × alpha grid ({config_name})\n\n{}",
+        time_t.render()
+    );
+
+    // ---- metric ablation: Eq. 1 diff vs |grad| ----
+    let mut metric_t = Table::new(vec!["Metric", "Avg. acc (%)", "Time (s)", "Steps"]);
+    for metric in ["l1_diff", "l1_abs"] {
+        let (avg, wall, steps) = run_one(client, config_name, opts, |c| {
+            c.grades.metric = metric.to_string();
+        })?;
+        metric_t.row(vec![metric.to_string(), pct(avg), secs(wall), steps.to_string()]);
+    }
+    // ---- granularity ablation: matrix vs layer (AutoFreeze-style) ----
+    let mut gran_t = Table::new(vec!["Granularity", "Avg. acc (%)", "Time (s)", "Steps"]);
+    for gran in ["matrix", "layer"] {
+        let (avg, wall, steps) = run_one(client, config_name, opts, |c| {
+            c.grades.granularity = gran.to_string();
+        })?;
+        gran_t.row(vec![gran.to_string(), pct(avg), secs(wall), steps.to_string()]);
+    }
+    let extra = format!(
+        "## Ablation — convergence metric (Eq. 1 vs §3.1)\n\n{}\n\
+         ## Ablation — freeze granularity (GradES matrix-level vs AutoFreeze layer-level)\n\n{}",
+        metric_t.render(),
+        gran_t.render()
+    );
+
+    println!("\n{t6}\n{t7}\n{extra}");
+    write_result(opts, "table6_ablation_accuracy.md", &t6)?;
+    write_result(opts, "table7_ablation_time.md", &t7)?;
+    write_result(opts, "ablation_design_choices.md", &extra)?;
+    Ok(())
+}

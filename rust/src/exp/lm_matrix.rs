@@ -1,0 +1,177 @@
+//! Tables 1 & 4 + Figure 3: the full LM method matrix.
+//!
+//! Runs {FP, LoRA} × {base, +ES, +GradES} across the three model scales,
+//! reporting per-suite accuracy (Table 1 shape), training time / speedup /
+//! FLOPs (Table 4 shape) and the cumulative frozen-fraction series
+//! (Figure 3 shape).
+
+use anyhow::Result;
+
+use super::{method_label, run_lm_job, write_result, ExpOptions, JobResult};
+use crate::coordinator::trainer::StoppingMethod;
+use crate::report::figures::ascii_chart;
+use crate::report::table::{pct, sci, secs, speedup, Table};
+use crate::runtime::artifact::Client;
+use crate::util::csv::CsvWriter;
+
+pub const SCALES: [(&str, &str, &str); 3] = [
+    // (display name, fp config, lora config)
+    ("lm-tiny (0.12M)", "lm-tiny-fp", "lm-tiny-lora"),
+    ("lm-small (0.9M)", "lm-small-fp", "lm-small-lora"),
+    ("lm-base (3.1M)", "lm-base-fp", "lm-base-lora"),
+];
+
+const METHODS: [StoppingMethod; 3] =
+    [StoppingMethod::None, StoppingMethod::ClassicEs, StoppingMethod::GradEs];
+
+pub struct MatrixResults {
+    /// (scale display, artifact method, job)
+    pub jobs: Vec<(String, String, JobResult)>,
+}
+
+pub fn run_matrix(client: &Client, opts: &ExpOptions, scales: &[(&str, &str, &str)]) -> Result<MatrixResults> {
+    let mut jobs = Vec::new();
+    for (display, fp_cfg, lora_cfg) in scales {
+        // one pretrained base per scale; every method fine-tunes from it
+        let pre_steps = opts.steps_override
+            .unwrap_or_else(|| crate::config::RepoConfig::by_name(fp_cfg)
+                .map(|c| c.run.total_steps).unwrap_or(300));
+        let warm = std::sync::Arc::new(
+            crate::coordinator::warmstart::pretrain_checkpoint(client, fp_cfg, pre_steps)?);
+        if opts.verbose {
+            println!("[{display}] pretrained base ready ({})", warm.source);
+        }
+        for (am, cfg_name) in [("fp", *fp_cfg), ("lora", *lora_cfg)] {
+            for method in METHODS {
+                let job = run_lm_job(client, cfg_name, method, Some(warm.clone()), opts)?;
+                jobs.push((display.to_string(), am.to_string(), job));
+            }
+        }
+    }
+    Ok(MatrixResults { jobs })
+}
+
+/// Render Table 1 (accuracy per suite) from matrix results.
+pub fn render_table1(res: &MatrixResults) -> String {
+    let suite_names: Vec<String> = res.jobs[0].2.accuracies.iter().map(|a| a.0.clone()).collect();
+    let mut header: Vec<String> = vec!["Model".into(), "Method".into()];
+    header.extend(suite_names);
+    let mut t = Table::new(header);
+    for (display, am, job) in &res.jobs {
+        let mut row = vec![display.clone(), method_label(am, job.method)];
+        row.extend(job.accuracies.iter().map(|a| pct(a.1)));
+        t.row(row);
+    }
+    let avg_col = t.header.len() - 1;
+    t.bold_best_by(0, avg_col);
+    format!(
+        "## Table 1 — accuracy (%) per method across model scales\n\n\
+         Suites are the paper-benchmark analogues: AgreeDet≈BoolQ, AgreeAdj≈PIQA, \
+         VerbSel≈SIQA, LongRange≈HellaSwag, AdvAssoc≈WinoGrande, WordOrder≈OpenBookQA, \
+         RareComp≈ARC-C, FreqComp≈ARC-E.\n\n{}",
+        t.render()
+    )
+}
+
+/// Render Table 4 (time/FLOPs/speedup) from the same runs.
+pub fn render_table4(res: &MatrixResults) -> String {
+    let mut t = Table::new(vec![
+        "Model", "Method", "Time (s)", "Speedup", "Steps", "FLOPs", "FLOPs Ratio", "Val (s)",
+        "Monitor (s)",
+    ]);
+    // baseline per scale = the FP base run
+    let mut base_time = std::collections::BTreeMap::new();
+    let mut base_flops = std::collections::BTreeMap::new();
+    for (display, am, job) in &res.jobs {
+        if am == "fp" && job.method == StoppingMethod::None {
+            base_time.insert(display.clone(), job.outcome.wall_secs);
+            base_flops.insert(display.clone(), job.outcome.flops.total());
+        }
+    }
+    for (display, am, job) in &res.jobs {
+        let bt = base_time.get(display).copied().unwrap_or(f64::NAN);
+        let bf = base_flops.get(display).copied().unwrap_or(f64::NAN);
+        t.row(vec![
+            display.clone(),
+            method_label(am, job.method),
+            secs(job.outcome.wall_secs),
+            speedup(bt / job.outcome.wall_secs),
+            job.outcome.steps_run.to_string(),
+            sci(job.outcome.flops.total()),
+            format!("{:.2}x", job.outcome.flops.total() / bf),
+            secs(job.outcome.validation_secs),
+            format!("{:.2}", job.outcome.monitor_secs),
+        ]);
+    }
+    format!(
+        "## Table 4 — training time & FLOPs (speedups relative to FP base per scale)\n\n{}",
+        t.render()
+    )
+}
+
+/// Figure 3: frozen-fraction curves of the FP+GradES runs across scales.
+pub fn render_fig3(res: &MatrixResults, opts: &ExpOptions) -> Result<String> {
+    let mut series = Vec::new();
+    for (display, am, job) in &res.jobs {
+        if am == "fp" && job.method == StoppingMethod::GradEs {
+            let pts: Vec<(f64, f64)> = job
+                .outcome
+                .log
+                .records
+                .iter()
+                .map(|r| (r.step as f64, r.frozen_fraction))
+                .collect();
+            series.push((display.clone(), pts));
+        }
+    }
+    // CSV
+    std::fs::create_dir_all(&opts.out_dir)?;
+    let mut w = CsvWriter::create(opts.out_dir.join("fig3_frozen_fraction.csv"),
+                                   &["scale", "step", "frozen_fraction"])?;
+    for (name, pts) in &series {
+        for (s, f) in pts {
+            w.row(&[name.clone(), s.to_string(), f.to_string()])?;
+        }
+    }
+    w.flush()?;
+    let borrowed: Vec<(&str, Vec<(f64, f64)>)> =
+        series.iter().map(|(n, p)| (n.as_str(), p.clone())).collect();
+    Ok(format!(
+        "## Figure 3 — cumulative frozen components during training\n\n```\n{}```\n",
+        ascii_chart("frozen fraction vs step (FP+GradES)", &borrowed, 70, 14, false)
+    ))
+}
+
+/// The combined driver: tables 1 & 4 + figure 3 from one set of runs.
+pub fn run(client: &Client, opts: &ExpOptions, scales: &[(&str, &str, &str)]) -> Result<MatrixResults> {
+    let res = run_matrix(client, opts, scales)?;
+    let t1 = render_table1(&res);
+    let t4 = render_table4(&res);
+    let f3 = render_fig3(&res, opts)?;
+    println!("\n{t1}\n{t4}\n{f3}");
+    write_result(opts, "table1_accuracy.md", &t1)?;
+    write_result(opts, "table4_efficiency.md", &t4)?;
+    write_result(opts, "fig3_frozen.md", &f3)?;
+    // Machine-readable dump for downstream analysis
+    let mut w = CsvWriter::create(
+        opts.out_dir.join("lm_matrix.csv"),
+        &["scale", "artifact_method", "stopping", "steps", "wall_secs", "val_secs",
+          "monitor_secs", "flops", "avg_acc"],
+    )?;
+    for (display, am, job) in &res.jobs {
+        let avg = job.accuracies.last().map(|a| a.1).unwrap_or(f64::NAN);
+        w.row(&[
+            display.clone(),
+            am.clone(),
+            job.method.label().to_string(),
+            job.outcome.steps_run.to_string(),
+            format!("{:.3}", job.outcome.wall_secs),
+            format!("{:.3}", job.outcome.validation_secs),
+            format!("{:.3}", job.outcome.monitor_secs),
+            format!("{:.3e}", job.outcome.flops.total()),
+            format!("{avg:.2}"),
+        ])?;
+    }
+    w.flush()?;
+    Ok(res)
+}

@@ -1,0 +1,183 @@
+//! Experiment drivers — one per paper table/figure family (DESIGN.md
+//! experiment index). Each driver runs real training jobs through the
+//! coordinator and renders the paper's table shape from our measurements.
+
+pub mod ablation;
+pub mod fig1;
+pub mod lm_matrix;
+pub mod vlm;
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use std::sync::Arc;
+
+use crate::config::RepoConfig;
+use crate::coordinator::trainer::{self, StoppingMethod, TrainerOptions, TrainedModel};
+use crate::coordinator::warmstart::BaseCheckpoint;
+use crate::data;
+use crate::eval::{benchmarks, harness};
+use crate::runtime::artifact::{Bundle, Client};
+
+/// Common knobs for all drivers (scaled down in `cargo bench`).
+#[derive(Debug, Clone)]
+pub struct ExpOptions {
+    /// Override [run].total_steps (None = use config).
+    pub steps_override: Option<usize>,
+    /// Questions per benchmark suite.
+    pub questions: usize,
+    /// Benchmark-suite RNG seed.
+    pub bench_seed: u64,
+    pub out_dir: PathBuf,
+    pub verbose: bool,
+}
+
+impl Default for ExpOptions {
+    fn default() -> Self {
+        ExpOptions {
+            steps_override: None,
+            questions: 32,
+            bench_seed: 0xbe9c,
+            out_dir: crate::config::repo_root().join("results"),
+            verbose: true,
+        }
+    }
+}
+
+impl ExpOptions {
+    pub fn quick(steps: usize, questions: usize) -> Self {
+        ExpOptions {
+            steps_override: Some(steps),
+            questions,
+            verbose: false,
+            ..Default::default()
+        }
+    }
+}
+
+/// Result of one (config, method) training + evaluation job.
+pub struct JobResult {
+    pub config: String,
+    pub method: StoppingMethod,
+    pub outcome: trainer::TrainOutcome,
+    /// (suite name, accuracy %) pairs ending with ("Avg.", …).
+    pub accuracies: Vec<(String, f64)>,
+}
+
+/// Train one LM config with one stopping method and score the 8 suites.
+pub fn run_lm_job(
+    client: &Client,
+    config_name: &str,
+    method: StoppingMethod,
+    warm: Option<Arc<BaseCheckpoint>>,
+    opts: &ExpOptions,
+) -> Result<JobResult> {
+    let cfg = RepoConfig::by_name(config_name)?;
+    let bundle = Bundle::by_name(client, config_name)
+        .with_context(|| format!("artifact {config_name} (run `make artifacts`)"))?;
+    let mut dataset = data::build_lm(&cfg, &bundle.manifest)?;
+    let mut topts = TrainerOptions::from_config(&cfg, method);
+    topts.warm_start = warm;
+    if let Some(s) = opts.steps_override {
+        topts.total_steps = s;
+    }
+    let trained: TrainedModel =
+        trainer::run_and_keep(&bundle, &cfg, &topts, || dataset.train.next_batch(), &dataset.val)?;
+    let suites = benchmarks::lm_suites(&dataset.vocab, opts.bench_seed, opts.questions);
+    let accuracies = harness::score_suites(&trained.session, &suites)?;
+    if opts.verbose {
+        let avg = accuracies.last().map(|a| a.1).unwrap_or(f64::NAN);
+        println!(
+            "[{config_name}/{}] steps={} wall={:.2}s val_loss={:.4} frozen={}/{} avg_acc={avg:.2}%",
+            method.label(),
+            trained.outcome.steps_run,
+            trained.outcome.wall_secs,
+            trained.outcome.final_val_loss,
+            trained.outcome.freeze.n_frozen(),
+            trained.outcome.freeze.n(),
+        );
+    }
+    Ok(JobResult { config: config_name.to_string(), method, outcome: trained.outcome, accuracies })
+}
+
+/// VLM job: train on scene/caption batches, score the requested suites.
+pub enum VlmSuiteKind {
+    /// Table 2: GQA/VQAv2/COCO analogues.
+    Main,
+    /// Table 3: six nanoVLM-style categories.
+    Nano,
+}
+
+pub fn run_vlm_job(
+    client: &Client,
+    config_name: &str,
+    method: StoppingMethod,
+    kind: VlmSuiteKind,
+    warm: Option<Arc<BaseCheckpoint>>,
+    opts: &ExpOptions,
+) -> Result<JobResult> {
+    let cfg = RepoConfig::by_name(config_name)?;
+    let bundle = Bundle::by_name(client, config_name)?;
+    let dataset = data::build_vlm(&cfg, &bundle.manifest)?;
+    let mut topts = TrainerOptions::from_config(&cfg, method);
+    topts.warm_start = warm;
+    if let Some(s) = opts.steps_override {
+        topts.total_steps = s;
+    }
+    let train_batches = dataset.train.clone();
+    let mut i = 0usize;
+    let trained = trainer::run_and_keep(
+        &bundle,
+        &cfg,
+        &topts,
+        move || {
+            let b = train_batches[i % train_batches.len()].clone();
+            i += 1;
+            b
+        },
+        &dataset.val,
+    )?;
+    let suites = match kind {
+        VlmSuiteKind::Main => {
+            benchmarks::vlm_suites(&dataset.scene_cfg, &dataset.vocab, opts.bench_seed, opts.questions)
+        }
+        VlmSuiteKind::Nano => benchmarks::nanovlm_suites(
+            &dataset.scene_cfg,
+            &dataset.vocab,
+            opts.bench_seed,
+            opts.questions,
+        ),
+    };
+    let accuracies = harness::score_suites(&trained.session, &suites)?;
+    if opts.verbose {
+        let avg = accuracies.last().map(|a| a.1).unwrap_or(f64::NAN);
+        println!(
+            "[{config_name}/{}] steps={} wall={:.2}s avg_acc={avg:.2}%",
+            method.label(),
+            trained.outcome.steps_run,
+            trained.outcome.wall_secs,
+        );
+    }
+    Ok(JobResult { config: config_name.to_string(), method, outcome: trained.outcome, accuracies })
+}
+
+/// Paper-style method label for a (artifact-method, stopping) pair.
+pub fn method_label(artifact_method: &str, stopping: StoppingMethod) -> String {
+    let base = if artifact_method == "lora" { "LoRA" } else { "Full Parameter" };
+    match stopping {
+        StoppingMethod::None => base.to_string(),
+        StoppingMethod::ClassicEs => format!("{}+ES", if artifact_method == "lora" { "LoRA" } else { "FP" }),
+        StoppingMethod::GradEs => {
+            format!("{}+GradES", if artifact_method == "lora" { "LoRA" } else { "FP" })
+        }
+    }
+}
+
+pub fn write_result(opts: &ExpOptions, name: &str, content: &str) -> Result<PathBuf> {
+    std::fs::create_dir_all(&opts.out_dir)?;
+    let path = opts.out_dir.join(name);
+    std::fs::write(&path, content)?;
+    println!("wrote {}", path.display());
+    Ok(path)
+}

@@ -1,0 +1,125 @@
+//! Tables 2, 3 & 5 + Figure 4b: the VLM experiments.
+//!
+//! Table 2: {FP, LoRA} × {base, +GradES} on the three VLM suites.
+//! Table 3: vlm-nano ± GradES across six nanoVLM-style categories.
+//! Table 5: time/FLOPs for the Table-2 runs.
+//! Fig 4b: vision- vs language-tower mean |∇W| series.
+
+use anyhow::Result;
+
+use super::{method_label, run_vlm_job, write_result, ExpOptions, VlmSuiteKind};
+use crate::coordinator::trainer::StoppingMethod;
+use crate::report::figures::ascii_chart;
+use crate::report::table::{pct, sci, secs, speedup, Table};
+use crate::runtime::artifact::{Bundle, Client};
+use crate::util::csv::CsvWriter;
+
+pub fn run(client: &Client, opts: &ExpOptions) -> Result<()> {
+    // ---- Table 2 + Table 5: vlm-tiny {fp, lora} × {base, grades} ----
+    let pre_steps = opts.steps_override.unwrap_or(300);
+    let warm = std::sync::Arc::new(
+        crate::coordinator::warmstart::pretrain_vlm_checkpoint(client, "vlm-tiny-fp", pre_steps)?);
+    let mut jobs = Vec::new();
+    for (am, cfg_name) in [("fp", "vlm-tiny-fp"), ("lora", "vlm-tiny-lora")] {
+        for method in [StoppingMethod::None, StoppingMethod::GradEs] {
+            let job = run_vlm_job(client, cfg_name, method, VlmSuiteKind::Main,
+                                  Some(warm.clone()), opts)?;
+            jobs.push((am.to_string(), job));
+        }
+    }
+    let suite_names: Vec<String> = jobs[0].1.accuracies.iter().map(|a| a.0.clone()).collect();
+    let mut header = vec!["Model".to_string(), "Method".to_string()];
+    header.extend(suite_names);
+    let mut t2 = Table::new(header);
+    for (am, job) in &jobs {
+        let mut row = vec!["vlm-tiny".to_string(), method_label(am, job.method)];
+        row.extend(job.accuracies.iter().map(|a| pct(a.1)));
+        t2.row(row);
+    }
+    let avg_col = t2.header.len() - 1;
+    t2.bold_best_by(0, avg_col);
+    let t2s = format!(
+        "## Table 2 — VLM accuracy (%). ColorQA≈GQA, ShapeQA≈VQAv2, CapMatch≈COCO Cap\n\n{}",
+        t2.render()
+    );
+
+    let mut t5 = Table::new(vec!["Model", "Method", "Time (s)", "Speedup", "FLOPs", "FLOPs Ratio"]);
+    let base = jobs
+        .iter()
+        .find(|(am, j)| am == "fp" && j.method == StoppingMethod::None)
+        .map(|(_, j)| (j.outcome.wall_secs, j.outcome.flops.total()))
+        .unwrap();
+    for (am, job) in &jobs {
+        t5.row(vec![
+            "vlm-tiny".to_string(),
+            method_label(am, job.method),
+            secs(job.outcome.wall_secs),
+            speedup(base.0 / job.outcome.wall_secs),
+            sci(job.outcome.flops.total()),
+            format!("{:.2}x", job.outcome.flops.total() / base.1),
+        ]);
+    }
+    let t5s = format!("## Table 5 — VLM training time & FLOPs\n\n{}", t5.render());
+
+    // ---- Fig 4b from the FP base run: vision vs language tower ----
+    let base_job = &jobs.iter().find(|(am, j)| am == "fp" && j.method == StoppingMethod::None).unwrap().1;
+    let bundle = Bundle::by_name(client, "vlm-tiny-fp")?;
+    let m = &bundle.manifest;
+    let vis = m.components_where(|c| c.tower == "vision");
+    let lang = m.components_where(|c| c.tower == "language");
+    let mean_series = |idxs: &[usize]| -> Vec<(f64, f64)> {
+        base_job
+            .outcome
+            .log
+            .records
+            .iter()
+            .map(|r| {
+                let mean =
+                    idxs.iter().map(|&i| r.gabs[i] as f64).sum::<f64>() / idxs.len().max(1) as f64;
+                (r.step as f64, mean)
+            })
+            .collect()
+    };
+    let vis_pts = mean_series(&vis);
+    let lang_pts = mean_series(&lang);
+    let f4b = format!(
+        "## Figure 4b — gradient-norm evolution: vision vs language towers\n\n```\n{}```\n",
+        ascii_chart(
+            "mean |grad|_1 per tower (FP, vlm-tiny)",
+            &[("vision", vis_pts.clone()), ("language", lang_pts.clone())],
+            70,
+            14,
+            true,
+        )
+    );
+    std::fs::create_dir_all(&opts.out_dir)?;
+    let mut w = CsvWriter::create(opts.out_dir.join("fig4b_towers.csv"),
+                                   &["step", "vision_mean_gabs", "language_mean_gabs"])?;
+    for ((s, v), (_, l)) in vis_pts.iter().zip(&lang_pts) {
+        w.row(&[*s, *v, *l])?;
+    }
+    w.flush()?;
+
+    // ---- Table 3: vlm-nano ± GradES on the six categories ----
+    let nano_warm = std::sync::Arc::new(
+        crate::coordinator::warmstart::pretrain_vlm_checkpoint(client, "vlm-nano", pre_steps)?);
+    let nano_base = run_vlm_job(client, "vlm-nano", StoppingMethod::None, VlmSuiteKind::Nano,
+                                Some(nano_warm.clone()), opts)?;
+    let nano_grades = run_vlm_job(client, "vlm-nano", StoppingMethod::GradEs, VlmSuiteKind::Nano,
+                                  Some(nano_warm), opts)?;
+    let mut t3 = Table::new(vec!["Benchmark", "Training", "Training+GradES"]);
+    for (b, g) in nano_base.accuracies.iter().zip(&nano_grades.accuracies) {
+        t3.row(vec![b.0.clone(), pct(b.1), pct(g.1)]);
+    }
+    let t3s = format!(
+        "## Table 3 — nanoVLM-style training ± GradES across six categories\n\n{}",
+        t3.render()
+    );
+
+    println!("\n{t2s}\n{t3s}\n{t5s}\n{f4b}");
+    write_result(opts, "table2_vlm_accuracy.md", &t2s)?;
+    write_result(opts, "table3_nanovlm.md", &t3s)?;
+    write_result(opts, "table5_vlm_efficiency.md", &t5s)?;
+    write_result(opts, "fig4b_towers.md", &f4b)?;
+    Ok(())
+}

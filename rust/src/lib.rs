@@ -1,0 +1,29 @@
+//! # GradES — gradient-based component-level early stopping
+//!
+//! A full-system reproduction of *GradES: Significantly Faster Training in
+//! Transformers with Gradient-Based Early Stopping* as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordinator: the GradES monitor (Alg. 1),
+//!   classic validation-ES baseline, executable-variant scheduler, LR
+//!   schedules, FLOPs accounting, synthetic data substrates, benchmark
+//!   harness and experiment drivers.
+//! * **L2 (`python/compile`)** — the transformer / LoRA / VLM compute
+//!   graphs, AOT-lowered once to HLO text.
+//! * **L1 (`python/compile/kernels`)** — Pallas kernels for the GradES
+//!   gradient statistics and the freeze-masked optimizer update.
+//!
+//! Python never runs at training time: the rust binary loads
+//! `artifacts/<config>/*.hlo.txt` through PJRT and keeps all training
+//! state on device between steps (see `runtime::session`).
+//!
+//! Quickstart: `make artifacts && cargo run --release --example quickstart`.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod exp;
+pub mod report;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,246 @@
+//! `grades` — CLI launcher for the GradES reproduction.
+//!
+//! Subcommands:
+//!   train     one training job: --config lm-tiny-fp --method grades
+//!   repro     regenerate paper tables/figures: lm | vlm | ablation | fig1 | all
+//!   info      print an artifact's manifest summary
+//!   list      list available configs
+//!
+//! (Arg parsing is hand-rolled: no clap offline — see DESIGN.md.)
+
+use anyhow::{anyhow, bail, Result};
+
+use grades::config::{repo_root, RepoConfig};
+use grades::coordinator::trainer::{self, StoppingMethod, TrainerOptions};
+use grades::data;
+use grades::eval::{benchmarks, harness};
+use grades::exp::{self, ExpOptions};
+use grades::runtime::artifact::{Bundle, Client};
+
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::BTreeMap<String, String>,
+}
+
+fn parse_args(argv: &[String]) -> Args {
+    let mut positional = Vec::new();
+    let mut flags = std::collections::BTreeMap::new();
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(name) = a.strip_prefix("--") {
+            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), argv[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            positional.push(a.clone());
+            i += 1;
+        }
+    }
+    Args { positional, flags }
+}
+
+impl Args {
+    fn get(&self, k: &str) -> Option<&str> {
+        self.flags.get(k).map(String::as_str)
+    }
+
+    fn usize_flag(&self, k: &str) -> Result<Option<usize>> {
+        self.get(k).map(|v| v.parse().map_err(|e| anyhow!("--{k}: {e}"))).transpose()
+    }
+}
+
+fn exp_options(args: &Args) -> Result<ExpOptions> {
+    let mut opts = ExpOptions::default();
+    if args.get("quick").is_some() {
+        opts = ExpOptions::quick(60, 16);
+        opts.verbose = true;
+    }
+    if let Some(s) = args.usize_flag("steps")? {
+        opts.steps_override = Some(s);
+    }
+    if let Some(q) = args.usize_flag("questions")? {
+        opts.questions = q;
+    }
+    if let Some(o) = args.get("out") {
+        opts.out_dir = o.into();
+    }
+    Ok(opts)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let config = args.get("config").ok_or_else(|| anyhow!("--config required"))?;
+    let method = StoppingMethod::parse(args.get("method").unwrap_or("grades"))
+        .ok_or_else(|| anyhow!("--method must be base|es|grades"))?;
+    let cfg = RepoConfig::by_name(config)?;
+    let client = Client::cpu()?;
+    let bundle = Bundle::by_name(&client, config)?;
+    let mut topts = TrainerOptions::from_config(&cfg, method);
+    if let Some(s) = args.usize_flag("steps")? {
+        topts.total_steps = s;
+    }
+    let is_vlm = bundle.manifest.is_vlm();
+    let trained = if is_vlm {
+        let ds = data::build_vlm(&cfg, &bundle.manifest)?;
+        let batches = ds.train.clone();
+        let mut i = 0usize;
+        trainer::run_and_keep(
+            &bundle,
+            &cfg,
+            &topts,
+            move || {
+                let b = batches[i % batches.len()].clone();
+                i += 1;
+                b
+            },
+            &ds.val,
+        )?
+    } else {
+        let mut ds = data::build_lm(&cfg, &bundle.manifest)?;
+        let val = ds.val.clone();
+        trainer::run_and_keep(&bundle, &cfg, &topts, move || ds.train.next_batch(), &val)?
+    };
+    let o = &trained.outcome;
+    println!(
+        "\nrun complete: steps={} stop={:?} wall={:.2}s (val {:.2}s, monitor {:.3}s)",
+        o.steps_run, o.stop_cause, o.wall_secs, o.validation_secs, o.monitor_secs
+    );
+    println!(
+        "final train loss={:.4} val loss={:.4} frozen={}/{} flops={:.3e}",
+        o.log.final_train_loss(),
+        o.final_val_loss,
+        o.freeze.n_frozen(),
+        o.freeze.n(),
+        o.flops.total()
+    );
+    if let Some(s) = o.variant_swap_step {
+        println!("variant scheduler: swapped to attn-frozen graph at step {s}");
+    }
+    for e in &o.freeze.events {
+        println!(
+            "  step {:>5}: {} component {} ({}) metric={:.4e}",
+            e.step,
+            if e.frozen { "froze " } else { "unfroze" },
+            e.component,
+            bundle.manifest.components[e.component].name,
+            e.metric_value
+        );
+    }
+    if args.get("bench").is_some() && !is_vlm {
+        let vocab = grades::data::vocab::Vocab::build(bundle.manifest.vocab_size)?;
+        let suites = benchmarks::lm_suites(&vocab, 0xbe9c, 32);
+        let accs = harness::score_suites(&trained.session, &suites)?;
+        for (name, acc) in accs {
+            println!("  {name:<12} {acc:.2}%");
+        }
+    }
+    if let Some(dir) = args.get("log-dir") {
+        let dir = std::path::Path::new(dir);
+        o.log.write_loss_csv(&dir.join(format!("{config}_{}_loss.csv", method.label())))?;
+        o.log.write_frozen_csv(&dir.join(format!("{config}_{}_frozen.csv", method.label())))?;
+        println!("logs written to {}", dir.display());
+    }
+    if let Some(ckpt) = args.get("save") {
+        trained.session.save_checkpoint(std::path::Path::new(ckpt))?;
+        println!("checkpoint saved to {ckpt}");
+    }
+    Ok(())
+}
+
+fn cmd_repro(args: &Args) -> Result<()> {
+    let what = args.positional.get(1).map(String::as_str).unwrap_or("all");
+    let opts = exp_options(args)?;
+    let client = Client::cpu()?;
+    match what {
+        "lm" | "table1" | "table4" | "fig3" => {
+            exp::lm_matrix::run(&client, &opts, &exp::lm_matrix::SCALES)?;
+        }
+        "vlm" | "table2" | "table3" | "table5" | "fig4b" => {
+            exp::vlm::run(&client, &opts)?;
+        }
+        "ablation" | "table6" | "table7" => {
+            let cfg = args.get("config").unwrap_or("lm-tiny-fp");
+            exp::ablation::run(&client, &opts, cfg)?;
+        }
+        "fig1" | "fig4a" => {
+            let cfg = args.get("config").unwrap_or("lm-tiny-fp");
+            let layer = args.usize_flag("layer")?.unwrap_or(1);
+            exp::fig1::run(&client, &opts, cfg, layer)?;
+        }
+        "all" => {
+            exp::fig1::run(&client, &opts, "lm-tiny-fp", 1)?;
+            exp::lm_matrix::run(&client, &opts, &exp::lm_matrix::SCALES)?;
+            exp::vlm::run(&client, &opts)?;
+            exp::ablation::run(&client, &opts, "lm-tiny-fp")?;
+        }
+        other => bail!("unknown repro target {other:?} (lm|vlm|ablation|fig1|all)"),
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let config = args.get("config").ok_or_else(|| anyhow!("--config required"))?;
+    let m = grades::runtime::manifest::Manifest::load(
+        &repo_root().join("artifacts").join(config).join("manifest.json"),
+    )?;
+    println!("name        {}", m.name);
+    println!(
+        "kind        {} method={} optimizer={} kernels={}",
+        m.kind, m.method, m.optimizer, m.kernel_impl
+    );
+    println!("batch/seq   {} x {}   vocab {}", m.batch_size, m.seq_len, m.vocab_size);
+    println!("params      {} total, {} trainable", m.n_params_total, m.n_params_trainable);
+    println!("state_len   {} f32 ({:.1} MB)", m.state_len, m.state_len as f64 * 4.0 / 1e6);
+    println!("components  {} monitored", m.n_components);
+    println!("flops/tok   fwd {:.3e}", m.flops.fwd_per_token);
+    for (k, v) in &m.executables {
+        println!("  exe {k:<24} {v}");
+    }
+    Ok(())
+}
+
+fn cmd_list() -> Result<()> {
+    let dir = repo_root().join("configs");
+    for entry in std::fs::read_dir(dir)? {
+        let p = entry?.path();
+        if p.extension().and_then(|e| e.to_str()) == Some("toml") {
+            let cfg = RepoConfig::load(&p)?;
+            let art = cfg.artifact_dir().join("manifest.json").exists();
+            println!(
+                "{:<16} steps={:<5} tau={:<8} alpha={:<4} artifacts={}",
+                cfg.name,
+                cfg.run.total_steps,
+                cfg.grades.tau,
+                cfg.grades.alpha,
+                if art { "yes" } else { "NO (run make artifacts)" }
+            );
+        }
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = parse_args(&argv);
+    match args.positional.first().map(String::as_str) {
+        Some("train") => cmd_train(&args),
+        Some("repro") => cmd_repro(&args),
+        Some("info") => cmd_info(&args),
+        Some("list") => cmd_list(),
+        _ => {
+            eprintln!(
+                "usage: grades <train|repro|info|list> [flags]\n\
+                 \n\
+                 grades train --config lm-tiny-fp --method grades [--steps N] [--bench] [--log-dir D] [--save ckpt]\n\
+                 grades repro <lm|vlm|ablation|fig1|all> [--quick] [--steps N] [--questions Q] [--out D]\n\
+                 grades info --config lm-tiny-fp\n\
+                 grades list"
+            );
+            std::process::exit(2);
+        }
+    }
+}

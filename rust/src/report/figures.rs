@@ -1,0 +1,90 @@
+//! ASCII line plots for figure drivers (the CSV twins are written by
+//! `coordinator::metrics`; these give an at-a-glance view in the terminal).
+
+/// Render multiple named series as an ascii chart (log-y optional).
+pub fn ascii_chart(
+    title: &str,
+    series: &[(&str, Vec<(f64, f64)>)],
+    width: usize,
+    height: usize,
+    log_y: bool,
+) -> String {
+    let marks = ['*', '+', 'o', 'x', '#', '@', '%', '&'];
+    let mut xs: Vec<f64> = Vec::new();
+    let mut ys: Vec<f64> = Vec::new();
+    for (_, pts) in series {
+        for (x, y) in pts {
+            if y.is_finite() && (!log_y || *y > 0.0) {
+                xs.push(*x);
+                ys.push(if log_y { y.log10() } else { *y });
+            }
+        }
+    }
+    if xs.is_empty() {
+        return format!("{title}\n(no data)\n");
+    }
+    let (x0, x1) = (fmin(&xs), fmax(&xs));
+    let (y0, y1) = (fmin(&ys), fmax(&ys));
+    let xspan = (x1 - x0).max(1e-12);
+    let yspan = (y1 - y0).max(1e-12);
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, pts)) in series.iter().enumerate() {
+        for (x, y) in pts {
+            if !y.is_finite() || (log_y && *y <= 0.0) {
+                continue;
+            }
+            let yy = if log_y { y.log10() } else { *y };
+            let col = (((x - x0) / xspan) * (width - 1) as f64).round() as usize;
+            let row = (((yy - y0) / yspan) * (height - 1) as f64).round() as usize;
+            grid[height - 1 - row][col.min(width - 1)] = marks[si % marks.len()];
+        }
+    }
+    let mut out = format!("{title}\n");
+    let ylab = |v: f64| if log_y { format!("1e{v:.1}") } else { format!("{v:.3}") };
+    out.push_str(&format!("{:>8} ┤\n", ylab(y1)));
+    for row in &grid {
+        out.push_str(&format!("{:8} │{}\n", "", row.iter().collect::<String>()));
+    }
+    out.push_str(&format!("{:>8} └{}\n", ylab(y0), "─".repeat(width)));
+    out.push_str(&format!("{:8}  {:<10} {:>w$.0}\n", "", x0, x1, w = width - 10));
+    let legend: Vec<String> = series
+        .iter()
+        .enumerate()
+        .map(|(i, (n, _))| format!("{} {}", marks[i % marks.len()], n))
+        .collect();
+    out.push_str(&format!("          {}\n", legend.join("   ")));
+    out
+}
+
+fn fmin(v: &[f64]) -> f64 {
+    v.iter().copied().fold(f64::INFINITY, f64::min)
+}
+
+fn fmax(v: &[f64]) -> f64 {
+    v.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chart_renders() {
+        let s = ascii_chart(
+            "test",
+            &[("a", vec![(0.0, 1.0), (1.0, 2.0)]), ("b", vec![(0.0, 2.0), (1.0, 1.0)])],
+            20,
+            5,
+            false,
+        );
+        assert!(s.contains("test"));
+        assert!(s.contains('*'));
+        assert!(s.contains('+'));
+    }
+
+    #[test]
+    fn empty_series_ok() {
+        let s = ascii_chart("x", &[("a", vec![])], 10, 4, true);
+        assert!(s.contains("no data"));
+    }
+}

@@ -1,0 +1,4 @@
+//! Rendering: markdown tables and ascii figures for experiment drivers.
+
+pub mod figures;
+pub mod table;

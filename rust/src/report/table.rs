@@ -1,0 +1,110 @@
+//! Markdown-ish table rendering with aligned columns and bold-best marks.
+
+/// A simple table builder.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        Table { header: header.into_iter().map(Into::into).collect(), rows: Vec::new() }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Bold the max numeric value in `col` among rows where `key_col`
+    /// matches each distinct key (paper-style per-category best marks).
+    pub fn bold_best_by(&mut self, key_col: usize, col: usize) {
+        use std::collections::BTreeMap;
+        let mut best: BTreeMap<String, (f64, usize)> = BTreeMap::new();
+        for (i, r) in self.rows.iter().enumerate() {
+            if let Ok(v) = r[col].parse::<f64>() {
+                let e = best.entry(r[key_col].clone()).or_insert((f64::NEG_INFINITY, i));
+                if v > e.0 {
+                    *e = (v, i);
+                }
+            }
+        }
+        for (_, (_, i)) in best {
+            let cell = &mut self.rows[i][col];
+            *cell = format!("**{cell}**");
+        }
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        for c in 0..ncol {
+            width[c] = self.header[c].len();
+            for r in &self.rows {
+                width[c] = width[c].max(r[c].len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], width: &[usize]| -> String {
+            let parts: Vec<String> = cells
+                .iter()
+                .zip(width)
+                .map(|(c, w)| format!("{c:<w$}", w = *w))
+                .collect();
+            format!("| {} |\n", parts.join(" | "))
+        };
+        out.push_str(&fmt_row(&self.header, &width));
+        let sep: Vec<String> = width.iter().map(|w| "-".repeat(*w)).collect();
+        out.push_str(&format!("|-{}-|\n", sep.join("-|-")));
+        for r in &self.rows {
+            out.push_str(&fmt_row(r, &width));
+        }
+        out
+    }
+}
+
+/// Format helpers matching the paper's precision conventions.
+pub fn pct(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+pub fn speedup(x: f64) -> String {
+    format!("{x:.2}x")
+}
+
+pub fn sci(x: f64) -> String {
+    format!("{x:.2e}")
+}
+
+pub fn secs(x: f64) -> String {
+    format!("{x:.1}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(vec!["a", "method"]);
+        t.row(vec!["1", "x"]);
+        t.row(vec!["22", "longer"]);
+        let s = t.render();
+        assert!(s.contains("| a  | method |"));
+        assert!(s.lines().count() == 4);
+    }
+
+    #[test]
+    fn bold_best_per_key() {
+        let mut t = Table::new(vec!["model", "acc"]);
+        t.row(vec!["m1", "90.0"]);
+        t.row(vec!["m1", "91.5"]);
+        t.row(vec!["m2", "80.0"]);
+        t.bold_best_by(0, 1);
+        assert_eq!(t.rows[1][1], "**91.5**");
+        assert_eq!(t.rows[2][1], "**80.0**");
+        assert_eq!(t.rows[0][1], "90.0");
+    }
+}

@@ -1,0 +1,91 @@
+//! Artifact bundle: one compiled PJRT executable per step function plus the
+//! manifest, all loaded from `artifacts/<config>/`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+use xla::{HloModuleProto, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::manifest::Manifest;
+use super::xerr;
+
+/// Shared PJRT CPU client. Creating a TfrtCpuClient is expensive; share one
+/// per process.
+#[derive(Clone)]
+pub struct Client(pub Arc<PjRtClient>);
+
+impl Client {
+    pub fn cpu() -> Result<Self> {
+        Ok(Client(Arc::new(PjRtClient::cpu().map_err(xerr)?)))
+    }
+
+    pub fn compile_file(&self, path: &Path) -> Result<PjRtLoadedExecutable> {
+        let proto = HloModuleProto::from_text_file(path)
+            .map_err(xerr)
+            .with_context(|| format!("loading HLO text {path:?}"))?;
+        self.0
+            .compile(&XlaComputation::from_proto(&proto))
+            .map_err(xerr)
+            .with_context(|| format!("compiling {path:?}"))
+    }
+}
+
+/// All executables for one config.
+pub struct Bundle {
+    pub manifest: Manifest,
+    pub dir: PathBuf,
+    pub client: Client,
+    pub init: PjRtLoadedExecutable,
+    pub train_step: PjRtLoadedExecutable,
+    /// Variant with attention dW matmuls removed from the backward graph —
+    /// the scheduler hot-swaps to this once GradES froze all attention.
+    pub train_step_attn_frozen: PjRtLoadedExecutable,
+    pub eval_step: PjRtLoadedExecutable,
+    /// Per-row losses for multiple-choice scoring → f32[2B].
+    pub eval_rows: PjRtLoadedExecutable,
+    pub probe: PjRtLoadedExecutable,
+}
+
+impl Bundle {
+    pub fn load(client: &Client, dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let exe = |key: &str| -> Result<PjRtLoadedExecutable> {
+            let fname = manifest
+                .executables
+                .get(key)
+                .ok_or_else(|| anyhow!("manifest has no executable {key:?}"))?;
+            client.compile_file(&dir.join(fname))
+        };
+        Ok(Bundle {
+            init: exe("init")?,
+            train_step: exe("train_step")?,
+            train_step_attn_frozen: exe("train_step_attn_frozen")?,
+            eval_step: exe("eval_step")?,
+            eval_rows: exe("eval_rows")?,
+            probe: exe("probe")?,
+            manifest,
+            dir: dir.to_path_buf(),
+            client: client.clone(),
+        })
+    }
+
+    /// Load by config name from the repo's `artifacts/` dir.
+    pub fn by_name(client: &Client, name: &str) -> Result<Self> {
+        let dir = crate::config::repo_root().join("artifacts").join(name);
+        Self::load(client, &dir)
+    }
+
+    /// Compilation timings for all executables (perf diagnostics).
+    pub fn compile_times(client: &Client, dir: &Path) -> Result<BTreeMap<String, f64>> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let mut out = BTreeMap::new();
+        for (key, fname) in &manifest.executables {
+            let t = std::time::Instant::now();
+            client.compile_file(&dir.join(fname))?;
+            out.insert(key.clone(), t.elapsed().as_secs_f64());
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,199 @@
+//! Typed view of `artifacts/<config>/manifest.json` — the contract between
+//! the python compile path and the rust coordinator.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// One GradES-monitored component (a projection matrix, or its LoRA pair).
+#[derive(Debug, Clone)]
+pub struct Component {
+    pub idx: usize,
+    pub name: String,
+    pub layer: usize,
+    /// q|k|v|o|gate|up|down
+    pub kind: String,
+    /// "attention" | "mlp"
+    pub group: String,
+    /// "language" | "vision"
+    pub tower: String,
+    pub n_params: usize,
+    pub tensors: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub trainable: bool,
+    pub component: Option<usize>,
+}
+
+impl ParamInfo {
+    pub fn size(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Analytic per-token FLOPs (python-side `flops_summary`).
+#[derive(Debug, Clone)]
+pub struct FlopsInfo {
+    pub fwd_per_token: f64,
+    pub bwd_dx_per_token: f64,
+    pub per_component_fwd: BTreeMap<String, f64>,
+    pub attn_quadratic_per_token: f64,
+    pub head_per_token: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub name: String,
+    pub kind: String, // "lm" | "vlm"
+    pub method: String,
+    pub optimizer: String,
+    pub kernel_impl: String,
+    pub batch_size: usize,
+    pub seq_len: usize,
+    pub vocab_size: usize,
+    pub n_patches: usize,
+    pub patch_dim: usize,
+    pub state_len: usize,
+    pub metrics_len: usize,
+    pub ctrl_len: usize,
+    pub n_components: usize,
+    pub gdiff_offset: usize,
+    pub gabs_offset: usize,
+    pub ctrl_mask_offset: usize,
+    pub components: Vec<Component>,
+    pub params: Vec<ParamInfo>,
+    pub n_params_total: usize,
+    pub n_params_trainable: usize,
+    pub flops: FlopsInfo,
+    pub executables: BTreeMap<String, String>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {path:?} (run `make artifacts`?)"))?;
+        let j = json::parse(&src).with_context(|| format!("parsing {path:?}"))?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let components = j
+            .get("components")?
+            .as_arr()?
+            .iter()
+            .map(|c| {
+                Ok(Component {
+                    idx: c.get("idx")?.as_usize()?,
+                    name: c.get("name")?.as_str()?.to_string(),
+                    layer: c.get("layer")?.as_usize()?,
+                    kind: c.get("kind")?.as_str()?.to_string(),
+                    group: c.get("group")?.as_str()?.to_string(),
+                    tower: c.get("tower")?.as_str()?.to_string(),
+                    n_params: c.get("n_params")?.as_usize()?,
+                    tensors: c
+                        .get("tensors")?
+                        .as_arr()?
+                        .iter()
+                        .map(|t| Ok(t.as_str()?.to_string()))
+                        .collect::<Result<_>>()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        for (i, c) in components.iter().enumerate() {
+            if c.idx != i {
+                bail!("component idx mismatch at {i}");
+            }
+        }
+        let params = j
+            .get("params")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                Ok(ParamInfo {
+                    name: p.get("name")?.as_str()?.to_string(),
+                    shape: p
+                        .get("shape")?
+                        .as_arr()?
+                        .iter()
+                        .map(|d| d.as_usize())
+                        .collect::<Result<_>>()?,
+                    offset: p.get("offset")?.as_usize()?,
+                    trainable: p.get("trainable")?.as_bool()?,
+                    component: match p.get("component")? {
+                        Json::Null => None,
+                        v => Some(v.as_usize()?),
+                    },
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let f = j.get("flops")?;
+        let per_component_fwd = match f.get("per_component_fwd")? {
+            Json::Obj(m) => m
+                .iter()
+                .map(|(k, v)| Ok((k.clone(), v.as_f64()?)))
+                .collect::<Result<BTreeMap<_, _>>>()?,
+            _ => bail!("per_component_fwd not an object"),
+        };
+        let model = j.get("model")?;
+        let metrics = j.get("metrics")?;
+        Ok(Manifest {
+            name: j.get("name")?.as_str()?.to_string(),
+            kind: j.get("kind")?.as_str()?.to_string(),
+            method: j.get("method")?.as_str()?.to_string(),
+            optimizer: j.get("optimizer")?.as_str()?.to_string(),
+            kernel_impl: j.get("kernel_impl")?.as_str()?.to_string(),
+            batch_size: j.get("batch_size")?.as_usize()?,
+            seq_len: j.get("seq_len")?.as_usize()?,
+            vocab_size: j.get("vocab_size")?.as_usize()?,
+            n_patches: model.get("n_patches")?.as_usize()?,
+            patch_dim: model.get("patch_dim")?.as_usize()?,
+            state_len: j.get("state_len")?.as_usize()?,
+            metrics_len: j.get("metrics_len")?.as_usize()?,
+            ctrl_len: j.get("ctrl_len")?.as_usize()?,
+            n_components: j.get("n_components")?.as_usize()?,
+            gdiff_offset: metrics.get("gdiff_offset")?.as_usize()?,
+            gabs_offset: metrics.get("gabs_offset")?.as_usize()?,
+            ctrl_mask_offset: j.get("ctrl")?.get("mask_offset")?.as_usize()?,
+            components,
+            params,
+            n_params_total: j.get("n_params_total")?.as_usize()?,
+            n_params_trainable: j.get("n_params_trainable")?.as_usize()?,
+            flops: FlopsInfo {
+                fwd_per_token: f.get("fwd_per_token")?.as_f64()?,
+                bwd_dx_per_token: f.get("bwd_dx_per_token")?.as_f64()?,
+                per_component_fwd,
+                attn_quadratic_per_token: f.get("attn_quadratic_per_token")?.as_f64()?,
+                head_per_token: f.get("head_per_token")?.as_f64()?,
+            },
+            executables: match j.get("executables")? {
+                Json::Obj(m) => m
+                    .iter()
+                    .map(|(k, v)| Ok((k.clone(), v.as_str()?.to_string())))
+                    .collect::<Result<_>>()?,
+                _ => bail!("executables not an object"),
+            },
+        })
+    }
+
+    pub fn is_vlm(&self) -> bool {
+        self.kind == "vlm"
+    }
+
+    pub fn param(&self, name: &str) -> Option<&ParamInfo> {
+        self.params.iter().find(|p| p.name == name)
+    }
+
+    /// Component indices belonging to a group ("attention"/"mlp") or tower.
+    pub fn components_where<F: Fn(&Component) -> bool>(&self, f: F) -> Vec<usize> {
+        self.components.iter().filter(|c| f(c)).map(|c| c.idx).collect()
+    }
+}

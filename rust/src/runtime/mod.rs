@@ -1,0 +1,13 @@
+//! PJRT runtime: load AOT HLO-text artifacts and run them from the rust
+//! hot path (adapted from /opt/xla-example/load_hlo/).
+
+pub mod artifact;
+pub mod manifest;
+pub mod session;
+
+use anyhow::anyhow;
+
+/// The `xla` crate's error doesn't implement `std::error::Error`; wrap it.
+pub fn xerr(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e:?}")
+}

@@ -1,0 +1,200 @@
+//! Training session: owns the on-device flat state buffer and drives the
+//! step/probe/eval executables. The state never round-trips to host between
+//! steps (the probe output is `metrics_len` floats).
+
+use anyhow::{ensure, Context, Result};
+use xla::PjRtBuffer;
+
+use super::artifact::Bundle;
+use super::xerr;
+
+pub struct Session<'b> {
+    pub bundle: &'b Bundle,
+    state: Option<PjRtBuffer>,
+    /// 1-based optimizer step (AdamW bias correction).
+    pub step: usize,
+}
+
+/// One training batch already flattened row-major.
+#[derive(Debug, Clone, Default)]
+pub struct Batch {
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+    /// VLM only: `[B, n_patches, patch_dim]` flattened.
+    pub patches: Vec<f32>,
+}
+
+impl<'b> Session<'b> {
+    pub fn new(bundle: &'b Bundle) -> Self {
+        Session { bundle, state: None, step: 0 }
+    }
+
+    fn client(&self) -> &xla::PjRtClient {
+        &self.bundle.client.0
+    }
+
+    /// Run the init executable, placing fresh params/opt state on device.
+    pub fn init(&mut self, seed: i32) -> Result<()> {
+        let seed_buf = self
+            .client()
+            .buffer_from_host_buffer::<i32>(&[seed], &[1], None)
+            .map_err(xerr)?;
+        let mut out = self.bundle.init.execute_b(&[&seed_buf]).map_err(xerr)?;
+        self.state = Some(out.remove(0).remove(0));
+        self.step = 0;
+        Ok(())
+    }
+
+    fn upload_batch(&self, batch: &Batch) -> Result<Vec<PjRtBuffer>> {
+        let m = &self.bundle.manifest;
+        let b = m.batch_size;
+        let t = m.seq_len;
+        ensure!(batch.tokens.len() == b * t, "tokens len {} != {}", batch.tokens.len(), b * t);
+        ensure!(batch.targets.len() == b * t, "targets len mismatch");
+        let mut bufs = vec![
+            self.client()
+                .buffer_from_host_buffer::<i32>(&batch.tokens, &[b, t], None)
+                .map_err(xerr)?,
+            self.client()
+                .buffer_from_host_buffer::<i32>(&batch.targets, &[b, t], None)
+                .map_err(xerr)?,
+        ];
+        if m.is_vlm() {
+            let want = b * m.n_patches * m.patch_dim;
+            ensure!(batch.patches.len() == want, "patches len {} != {want}", batch.patches.len());
+            bufs.push(
+                self.client()
+                    .buffer_from_host_buffer::<f32>(
+                        &batch.patches,
+                        &[b, m.n_patches, m.patch_dim],
+                        None,
+                    )
+                    .map_err(xerr)?,
+            );
+        }
+        Ok(bufs)
+    }
+
+    /// One optimizer step. `ctrl` is the full control vector (step, lr,
+    /// wd_scale, mask…); `attn_frozen` selects the reduced-backward variant.
+    pub fn train_step(&mut self, batch: &Batch, ctrl: &[f32], attn_frozen: bool) -> Result<()> {
+        let m = &self.bundle.manifest;
+        ensure!(ctrl.len() == m.ctrl_len, "ctrl len {} != {}", ctrl.len(), m.ctrl_len);
+        let state = self.state.as_ref().context("session not initialized")?;
+        let io = self.upload_batch(batch)?;
+        let ctrl_buf = self
+            .client()
+            .buffer_from_host_buffer::<f32>(ctrl, &[ctrl.len()], None)
+            .map_err(xerr)?;
+        let exe = if attn_frozen {
+            &self.bundle.train_step_attn_frozen
+        } else {
+            &self.bundle.train_step
+        };
+        let mut args: Vec<&PjRtBuffer> = vec![state];
+        args.extend(io.iter());
+        args.push(&ctrl_buf);
+        let mut out = exe.execute_b(&args).map_err(xerr)?;
+        self.state = Some(out.remove(0).remove(0));
+        self.step += 1;
+        Ok(())
+    }
+
+    /// Read the metrics prefix the last train step wrote into the state.
+    pub fn probe(&self) -> Result<Vec<f32>> {
+        let state = self.state.as_ref().context("session not initialized")?;
+        let out = self.bundle.probe.execute_b(&[state]).map_err(xerr)?;
+        out[0][0]
+            .to_literal_sync()
+            .map_err(xerr)?
+            .to_vec::<f32>()
+            .map_err(xerr)
+    }
+
+    /// Forward-only loss on one batch → (loss_sum, token_count).
+    pub fn eval_batch(&self, batch: &Batch) -> Result<(f64, f64)> {
+        let state = self.state.as_ref().context("session not initialized")?;
+        let io = self.upload_batch(batch)?;
+        let mut args: Vec<&PjRtBuffer> = vec![state];
+        args.extend(io.iter());
+        let out = self.bundle.eval_step.execute_b(&args).map_err(xerr)?;
+        let v = out[0][0]
+            .to_literal_sync()
+            .map_err(xerr)?
+            .to_vec::<f32>()
+            .map_err(xerr)?;
+        Ok((v[0] as f64, v[1] as f64))
+    }
+
+    /// Per-row (loss_sum, count) pairs — multiple-choice scoring.
+    pub fn eval_rows(&self, batch: &Batch) -> Result<Vec<(f64, f64)>> {
+        let state = self.state.as_ref().context("session not initialized")?;
+        let io = self.upload_batch(batch)?;
+        let mut args: Vec<&PjRtBuffer> = vec![state];
+        args.extend(io.iter());
+        let out = self.bundle.eval_rows.execute_b(&args).map_err(xerr)?;
+        let v = out[0][0]
+            .to_literal_sync()
+            .map_err(xerr)?
+            .to_vec::<f32>()
+            .map_err(xerr)?;
+        let b = v.len() / 2;
+        Ok((0..b).map(|i| (v[i] as f64, v[b + i] as f64)).collect())
+    }
+
+    /// Mean validation loss over many batches (the classic-ES hot cost).
+    pub fn eval_mean_loss(&self, batches: &[Batch]) -> Result<f64> {
+        let mut loss = 0.0;
+        let mut count = 0.0;
+        for b in batches {
+            let (l, c) = self.eval_batch(b)?;
+            loss += l;
+            count += c;
+        }
+        Ok(if count > 0.0 { loss / count } else { f64::NAN })
+    }
+
+    /// Download the full state (checkpointing / inspection).
+    pub fn state_to_host(&self) -> Result<Vec<f32>> {
+        let state = self.state.as_ref().context("session not initialized")?;
+        state.to_literal_sync().map_err(xerr)?.to_vec::<f32>().map_err(xerr)
+    }
+
+    /// Restore a previously downloaded state.
+    pub fn state_from_host(&mut self, host: &[f32]) -> Result<()> {
+        let m = &self.bundle.manifest;
+        ensure!(host.len() == m.state_len, "state len {} != {}", host.len(), m.state_len);
+        self.state = Some(
+            self.client()
+                .buffer_from_host_buffer::<f32>(host, &[host.len()], None)
+                .map_err(xerr)?,
+        );
+        Ok(())
+    }
+
+    /// Save / load binary checkpoints (f32 little-endian + step header).
+    pub fn save_checkpoint(&self, path: &std::path::Path) -> Result<()> {
+        let host = self.state_to_host()?;
+        let mut bytes = Vec::with_capacity(8 + host.len() * 4);
+        bytes.extend_from_slice(&(self.step as u64).to_le_bytes());
+        for x in &host {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        if let Some(p) = path.parent() {
+            std::fs::create_dir_all(p)?;
+        }
+        std::fs::write(path, bytes)?;
+        Ok(())
+    }
+
+    pub fn load_checkpoint(&mut self, path: &std::path::Path) -> Result<()> {
+        let bytes = std::fs::read(path)?;
+        ensure!(bytes.len() >= 8 && (bytes.len() - 8) % 4 == 0, "corrupt checkpoint");
+        self.step = u64::from_le_bytes(bytes[..8].try_into().unwrap()) as usize;
+        let host: Vec<f32> = bytes[8..]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        self.state_from_host(&host)
+    }
+}

@@ -1,0 +1,55 @@
+//! Tiny CSV writer for metrics logs and figure series.
+
+use std::fmt::Display;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use anyhow::Result;
+
+pub struct CsvWriter {
+    w: BufWriter<File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> Result<Self> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut w = BufWriter::new(File::create(path)?);
+        writeln!(w, "{}", header.join(","))?;
+        Ok(Self { w, cols: header.len() })
+    }
+
+    pub fn row<D: Display>(&mut self, values: &[D]) -> Result<()> {
+        assert_eq!(values.len(), self.cols, "csv row arity mismatch");
+        let line: Vec<String> = values.iter().map(|v| v.to_string()).collect();
+        writeln!(self.w, "{}", line.join(","))?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_rows() {
+        let dir = std::env::temp_dir().join("grades_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("x.csv");
+        {
+            let mut w = CsvWriter::create(&p, &["a", "b"]).unwrap();
+            w.row(&[1.5, 2.0]).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text, "a,b\n1.5,2\n");
+    }
+}

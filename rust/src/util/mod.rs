@@ -1,0 +1,7 @@
+//! Hand-rolled substrates (no external deps available offline).
+
+pub mod csv;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod timer;

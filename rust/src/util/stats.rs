@@ -1,0 +1,88 @@
+//! Small statistics helpers used by monitors and reports.
+
+/// Mean of a slice (0.0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Fixed-capacity rolling window with O(1) mean.
+#[derive(Debug, Clone)]
+pub struct Rolling {
+    buf: Vec<f64>,
+    cap: usize,
+    next: usize,
+    sum: f64,
+}
+
+impl Rolling {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0);
+        Self { buf: Vec::with_capacity(cap), cap, next: 0, sum: 0.0 }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if self.buf.len() < self.cap {
+            self.buf.push(x);
+            self.sum += x;
+        } else {
+            self.sum += x - self.buf[self.next];
+            self.buf[self.next] = x;
+            self.next = (self.next + 1) % self.cap;
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.buf.is_empty() {
+            0.0
+        } else {
+            self.sum / self.buf.len() as f64
+        }
+    }
+
+    pub fn full(&self) -> bool {
+        self.buf.len() == self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rolling_mean_window() {
+        let mut r = Rolling::new(3);
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            r.push(x);
+        }
+        assert!((r.mean() - 3.0).abs() < 1e-12); // window = [2,3,4]
+        assert!(r.full());
+    }
+
+    #[test]
+    fn basic_stats() {
+        assert_eq!(mean(&[]), 0.0);
+        assert!((mean(&[1.0, 3.0]) - 2.0).abs() < 1e-12);
+        assert!((std_dev(&[2.0, 4.0]) - 1.0).abs() < 1e-12);
+    }
+}

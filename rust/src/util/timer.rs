@@ -1,0 +1,94 @@
+//! Wall-clock timing helpers for the bench harness and trainer metrics.
+
+use std::time::Instant;
+
+/// Accumulating named timer: `let _g = t.scope();` style sections.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Timer {
+    pub fn new() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn millis(&self) -> f64 {
+        self.secs() * 1e3
+    }
+
+    pub fn reset(&mut self) {
+        self.start = Instant::now();
+    }
+}
+
+/// Measure a closure `iters` times, returning per-iteration stats in secs.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    BenchStats::from_samples(samples)
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub n: usize,
+}
+
+impl BenchStats {
+    pub fn from_samples(mut s: Vec<f64>) -> Self {
+        assert!(!s.is_empty());
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len();
+        let mean = s.iter().sum::<f64>() / n as f64;
+        let q = |p: f64| s[((n as f64 - 1.0) * p).round() as usize];
+        BenchStats { mean, min: s[0], max: s[n - 1], p50: q(0.5), p90: q(0.9), n }
+    }
+
+    pub fn fmt_ms(&self) -> String {
+        format!(
+            "mean {:.3} ms  p50 {:.3}  p90 {:.3}  min {:.3}  max {:.3}  (n={})",
+            self.mean * 1e3,
+            self.p50 * 1e3,
+            self.p90 * 1e3,
+            self.min * 1e3,
+            self.max * 1e3,
+            self.n
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_stats_ordering() {
+        let s = BenchStats::from_samples(vec![3.0, 1.0, 2.0]);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert_eq!(s.p50, 2.0);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,309 @@
+//! Integration tests over the real PJRT runtime + AOT artifacts.
+//!
+//! These need `make artifacts` to have run (skipped gracefully otherwise)
+//! and exercise the full L3→L2→L1 stack: init determinism, train-step
+//! semantics through the compiled graphs, freeze-mask behaviour, the
+//! attn-frozen variant, checkpoint round-trips, warm starts and the
+//! trainer's three stopping methods.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use grades::config::RepoConfig;
+use grades::coordinator::trainer::{self, StopCause, StoppingMethod, TrainerOptions};
+use grades::coordinator::warmstart::BaseCheckpoint;
+use grades::data;
+use grades::eval::{benchmarks, harness};
+use grades::runtime::artifact::{Bundle, Client};
+use grades::runtime::session::Session;
+
+// PjRtClient is !Send (Rc internals): cache per test thread.
+thread_local! {
+    static CLIENT: Client = Client::cpu().expect("PJRT CPU client");
+    static BUNDLES: RefCell<BTreeMap<String, Rc<Bundle>>> = RefCell::new(BTreeMap::new());
+}
+
+fn bundle(name: &str) -> Option<Rc<Bundle>> {
+    BUNDLES.with(|cell| {
+        let mut map = cell.borrow_mut();
+        if let Some(b) = map.get(name) {
+            return Some(b.clone());
+        }
+        let dir = grades::config::repo_root().join("artifacts").join(name);
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts/{name} missing (run `make artifacts`)");
+            return None;
+        }
+        let b = Rc::new(CLIENT.with(|c| Bundle::load(c, &dir)).expect("bundle"));
+        map.insert(name.to_string(), b.clone());
+        Some(b)
+    })
+}
+
+fn default_ctrl(b: &Bundle, t: f32, lr: f32) -> Vec<f32> {
+    let m = &b.manifest;
+    let mut ctrl = vec![0f32; m.ctrl_len];
+    ctrl[0] = t;
+    ctrl[1] = lr;
+    ctrl[2] = 1.0;
+    for c in ctrl.iter_mut().skip(m.ctrl_mask_offset) {
+        *c = 1.0;
+    }
+    ctrl
+}
+
+#[test]
+fn init_is_deterministic_per_seed() {
+    let Some(b) = bundle("lm-tiny-fp") else { return };
+    let b = &*b;
+    let mut s1 = Session::new(b);
+    let mut s2 = Session::new(b);
+    s1.init(7).unwrap();
+    s2.init(7).unwrap();
+    assert_eq!(s1.state_to_host().unwrap(), s2.state_to_host().unwrap());
+    s2.init(8).unwrap();
+    assert_ne!(s1.state_to_host().unwrap(), s2.state_to_host().unwrap());
+}
+
+#[test]
+fn train_step_reduces_loss_on_repeated_batch() {
+    let Some(b) = bundle("lm-tiny-fp") else { return };
+    let b = &*b;
+    let cfg = RepoConfig::by_name("lm-tiny-fp").unwrap();
+    let mut ds = data::build_lm(&cfg, &b.manifest).unwrap();
+    let batch = ds.train.next_batch();
+    let mut s = Session::new(b);
+    s.init(3).unwrap();
+    let mut first = f32::NAN;
+    let mut last = f32::NAN;
+    for t in 1..=10 {
+        s.train_step(&batch, &default_ctrl(b, t as f32, 3e-3), false).unwrap();
+        let m = s.probe().unwrap();
+        let loss = m[0] / m[1].max(1.0);
+        if t == 1 {
+            first = loss;
+        }
+        last = loss;
+    }
+    assert!(last < first - 0.5, "loss {first} -> {last}");
+}
+
+#[test]
+fn freeze_mask_freezes_component_params() {
+    let Some(b) = bundle("lm-tiny-fp") else { return };
+    let b = &*b;
+    let m = &b.manifest;
+    let cfg = RepoConfig::by_name("lm-tiny-fp").unwrap();
+    let mut ds = data::build_lm(&cfg, m).unwrap();
+    let batch = ds.train.next_batch();
+    let mut s = Session::new(b);
+    s.init(3).unwrap();
+    let before = s.state_to_host().unwrap();
+    let mut ctrl = default_ctrl(b, 1.0, 1e-3);
+    ctrl[m.ctrl_mask_offset] = 0.0; // freeze component 0
+    s.train_step(&batch, &ctrl, false).unwrap();
+    let after = s.state_to_host().unwrap();
+    let comp = &m.components[0];
+    for tname in &comp.tensors {
+        let p = m.param(tname).unwrap();
+        assert_eq!(
+            before[p.offset..p.offset + p.size()],
+            after[p.offset..p.offset + p.size()],
+            "frozen tensor {tname} moved"
+        );
+    }
+    // some other monitored tensor moved
+    let other = &m.components[1].tensors[0];
+    let p = m.param(other).unwrap();
+    assert_ne!(before[p.offset..p.offset + p.size()], after[p.offset..p.offset + p.size()]);
+}
+
+#[test]
+fn attn_frozen_variant_matches_masked_full_graph() {
+    let Some(b) = bundle("lm-tiny-fp") else { return };
+    let b = &*b;
+    let m = &b.manifest;
+    let cfg = RepoConfig::by_name("lm-tiny-fp").unwrap();
+    let mut ds = data::build_lm(&cfg, m).unwrap();
+    let batch = ds.train.next_batch();
+
+    let mut s1 = Session::new(b);
+    s1.init(5).unwrap();
+    let mut ctrl = default_ctrl(b, 1.0, 1e-3);
+    for c in &m.components {
+        if c.group == "attention" {
+            ctrl[m.ctrl_mask_offset + c.idx] = 0.0;
+        }
+    }
+    s1.train_step(&batch, &ctrl, false).unwrap();
+
+    let mut s2 = Session::new(b);
+    s2.init(5).unwrap();
+    s2.train_step(&batch, &default_ctrl(b, 1.0, 1e-3), true).unwrap();
+
+    let h1 = s1.state_to_host().unwrap();
+    let h2 = s2.state_to_host().unwrap();
+    // params + opt state agree (metrics prefix reports attn stats as 0 in
+    // the variant, so compare past the prefix)
+    let off = m.metrics_len;
+    let max_dev = h1[off..]
+        .iter()
+        .zip(&h2[off..])
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_dev < 2e-4, "variant deviates: {max_dev}");
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_state() {
+    let Some(b) = bundle("lm-tiny-fp") else { return };
+    let b = &*b;
+    let cfg = RepoConfig::by_name("lm-tiny-fp").unwrap();
+    let mut ds = data::build_lm(&cfg, &b.manifest).unwrap();
+    let mut s = Session::new(b);
+    s.init(9).unwrap();
+    for t in 1..=3 {
+        let batch = ds.train.next_batch();
+        s.train_step(&batch, &default_ctrl(b, t as f32, 1e-3), false).unwrap();
+    }
+    let host = s.state_to_host().unwrap();
+    let path = std::env::temp_dir().join("grades_it_ckpt.bin");
+    s.save_checkpoint(&path).unwrap();
+    let mut s2 = Session::new(b);
+    s2.load_checkpoint(&path).unwrap();
+    assert_eq!(s2.state_to_host().unwrap(), host);
+    assert_eq!(s2.step, 3); // step counter restored from the header
+}
+
+#[test]
+fn warm_start_transfers_base_params_to_lora() {
+    let (Some(fp), Some(lora)) = (bundle("lm-tiny-fp"), bundle("lm-tiny-lora")) else { return };
+    let (fp, lora) = (&*fp, &*lora);
+    let mut s = Session::new(fp);
+    s.init(11).unwrap();
+    let ck = BaseCheckpoint::from_state(&fp.manifest, &s.state_to_host().unwrap()).unwrap();
+    let mut sl = Session::new(lora);
+    sl.init(12).unwrap();
+    let applied = ck.apply(&mut sl).unwrap();
+    // every fp tensor exists in the lora layout as a frozen base tensor
+    assert_eq!(applied, fp.manifest.params.len());
+    let host = sl.state_to_host().unwrap();
+    let w_fp = fp.manifest.param("lang.0.attn.q").unwrap();
+    let w_lora = lora.manifest.param("lang.0.attn.q").unwrap();
+    assert_eq!(
+        ck.params["lang.0.attn.q"],
+        host[w_lora.offset..w_lora.offset + w_lora.size()].to_vec()
+    );
+    assert_eq!(w_fp.size(), w_lora.size());
+}
+
+#[test]
+fn trainer_grades_freezes_and_terminates_early() {
+    let Some(b) = bundle("lm-tiny-fp") else { return };
+    let b = &*b;
+    let mut cfg = RepoConfig::by_name("lm-tiny-fp").unwrap();
+    cfg.grades.alpha = 0.2;
+    cfg.grades.tau = 5.0; // generous: everything freezes right after grace
+    let mut ds = data::build_lm(&cfg, &b.manifest).unwrap();
+    let mut opts = TrainerOptions::from_config(&cfg, StoppingMethod::GradEs);
+    opts.total_steps = 60;
+    let o = trainer::run(b, &cfg, &opts, || ds.train.next_batch(), &ds.val).unwrap();
+    assert_eq!(o.stop_cause, StopCause::AllComponentsFrozen);
+    assert!(o.steps_run < 40, "terminated at {}", o.steps_run);
+    assert!(o.freeze.all_frozen());
+    // savings come mostly from termination: spent << full-budget dense cost
+    let full_budget = grades::coordinator::flops::FlopsCounter::dense_step(&b.manifest) * 60.0;
+    assert!(o.flops.total() < full_budget * 0.75);
+}
+
+#[test]
+fn trainer_classic_es_runs_validation() {
+    let Some(b) = bundle("lm-tiny-fp") else { return };
+    let b = &*b;
+    let cfg = RepoConfig::by_name("lm-tiny-fp").unwrap();
+    let mut ds = data::build_lm(&cfg, &b.manifest).unwrap();
+    let mut opts = TrainerOptions::from_config(&cfg, StoppingMethod::ClassicEs);
+    opts.total_steps = 40;
+    let o = trainer::run(b, &cfg, &opts, || ds.train.next_batch(), &ds.val).unwrap();
+    assert!(o.validation_secs > 0.0);
+    assert!(!o.log.val_points.is_empty());
+    assert!(o.flops.validation > 0.0);
+}
+
+#[test]
+fn mc_scoring_improves_with_training() {
+    let Some(b) = bundle("lm-tiny-fp") else { return };
+    let b = &*b;
+    let cfg = RepoConfig::by_name("lm-tiny-fp").unwrap();
+    let mut ds = data::build_lm(&cfg, &b.manifest).unwrap();
+    let suites = benchmarks::lm_suites(&ds.vocab, 0x77, 24);
+
+    let mut s = Session::new(b);
+    s.init(13).unwrap();
+    let acc_untrained = harness::score_suite(&s, &suites[7]).unwrap(); // FreqComp (easy)
+
+    let mut opts = TrainerOptions::from_config(&cfg, StoppingMethod::None);
+    opts.total_steps = 120;
+    opts.probe_every = usize::MAX;
+    let trained =
+        trainer::run_and_keep(b, &cfg, &opts, || ds.train.next_batch(), &[]).unwrap();
+    let acc_trained = harness::score_suite(&trained.session, &suites[7]).unwrap();
+    assert!(
+        acc_trained > acc_untrained + 10.0,
+        "training must lift easy-suite accuracy: {acc_untrained} -> {acc_trained}"
+    );
+}
+
+#[test]
+fn vlm_artifact_trains() {
+    let Some(b) = bundle("vlm-tiny-fp") else { return };
+    let b = &*b;
+    let cfg = RepoConfig::by_name("vlm-tiny-fp").unwrap();
+    let ds = data::build_vlm(&cfg, &b.manifest).unwrap();
+    let mut s = Session::new(b);
+    s.init(1).unwrap();
+    let mut first = f32::NAN;
+    let mut last = f32::NAN;
+    for t in 1..=8 {
+        let batch = &ds.train[(t - 1) % ds.train.len()];
+        s.train_step(batch, &default_ctrl(b, t as f32, 2e-3), false).unwrap();
+        let m = s.probe().unwrap();
+        let loss = m[0] / m[1].max(1.0);
+        if t == 1 {
+            first = loss;
+        }
+        last = loss;
+    }
+    assert!(last < first, "vlm loss {first} -> {last}");
+}
+
+#[test]
+fn sgd_artifact_trains() {
+    let Some(b) = bundle("lm-tiny-sgd") else { return };
+    let b = &*b;
+    let cfg = RepoConfig::by_name("lm-tiny-sgd").unwrap();
+    let mut ds = data::build_lm(&cfg, &b.manifest).unwrap();
+    let mut opts = TrainerOptions::from_config(&cfg, StoppingMethod::GradEs);
+    opts.total_steps = 30;
+    let o = trainer::run(b, &cfg, &opts, || ds.train.next_batch(), &ds.val).unwrap();
+    // GradES may legitimately terminate early once everything froze
+    assert!(o.steps_run <= 30 && o.steps_run >= 16, "steps {}", o.steps_run);
+    let loss = o.log.final_train_loss();
+    assert!(loss.is_finite() && loss < 5.6, "sgd loss {loss}");
+}
+
+#[test]
+fn runs_are_reproducible() {
+    let Some(b) = bundle("lm-tiny-fp") else { return };
+    let b = &*b;
+    let cfg = RepoConfig::by_name("lm-tiny-fp").unwrap();
+    let mut go = || {
+        let mut ds = data::build_lm(&cfg, &b.manifest).unwrap();
+        let mut opts = TrainerOptions::from_config(&cfg, StoppingMethod::GradEs);
+        opts.total_steps = 25;
+        let o = trainer::run(b, &cfg, &opts, || ds.train.next_batch(), &ds.val).unwrap();
+        (o.log.final_train_loss(), o.final_val_loss)
+    };
+    assert_eq!(go(), go());
+}

@@ -1,0 +1,310 @@
+//! Property-based tests on coordinator invariants.
+//!
+//! proptest is unavailable offline (DESIGN.md "Decisions & risks"); these
+//! are randomized sweeps driven by the repo's own deterministic RNG — same
+//! shape: generate many random instances, assert the invariant on each.
+
+use grades::config::{EsConfig, GradesConfig};
+use grades::coordinator::classic_es::ClassicEs;
+use grades::coordinator::flops::FlopsCounter;
+use grades::coordinator::freeze::{FreezeReason, FreezeState};
+use grades::coordinator::grades::GradesMonitor;
+use grades::coordinator::lr::CosineSchedule;
+use grades::data::batcher::{eval_batches, pack_rows, BatchIter};
+use grades::data::corpus::{generate, GrammarGen};
+use grades::data::vocab::{Vocab, EOS};
+use grades::util::json;
+use grades::util::rng::Rng;
+
+fn grades_cfg(tau: f64, alpha: f64, patience: usize) -> GradesConfig {
+    GradesConfig {
+        metric: "l1_diff".into(),
+        alpha,
+        tau,
+        tau_vision: f64::NAN,
+        tau_language: f64::NAN,
+        patience,
+        unfreeze_factor: 0.0,
+        granularity: "matrix".into(),
+    }
+}
+
+/// Build a manifest-shaped stand-in via the corpus of component metadata.
+fn manifest(n_layers: usize) -> grades::runtime::manifest::Manifest {
+    // reuse the shape the monitor tests in-crate use: 7 components/layer
+    use grades::runtime::manifest::{Component, FlopsInfo, Manifest};
+    let kinds = ["q", "k", "v", "o", "gate", "up", "down"];
+    let mut components = Vec::new();
+    for l in 0..n_layers {
+        for k in kinds {
+            components.push(Component {
+                idx: components.len(),
+                name: format!("language.{l}.{k}"),
+                layer: l,
+                kind: k.to_string(),
+                group: if matches!(k, "q" | "k" | "v" | "o") {
+                    "attention".into()
+                } else {
+                    "mlp".into()
+                },
+                tower: "language".into(),
+                n_params: 16,
+                tensors: vec![format!("lang.{l}.{k}")],
+            });
+        }
+    }
+    let n = components.len();
+    let mut per = std::collections::BTreeMap::new();
+    for c in &components {
+        per.insert(c.name.clone(), 10.0);
+    }
+    Manifest {
+        name: "prop".into(),
+        kind: "lm".into(),
+        method: "fp".into(),
+        optimizer: "adamw".into(),
+        kernel_impl: "xla".into(),
+        batch_size: 4,
+        seq_len: 8,
+        vocab_size: 256,
+        n_patches: 0,
+        patch_dim: 0,
+        state_len: 64,
+        metrics_len: 4 + 2 * n,
+        ctrl_len: 4 + n,
+        n_components: n,
+        gdiff_offset: 4,
+        gabs_offset: 4 + n,
+        ctrl_mask_offset: 4,
+        components,
+        params: vec![],
+        n_params_total: 0,
+        n_params_trainable: 0,
+        flops: FlopsInfo {
+            fwd_per_token: 100.0,
+            bwd_dx_per_token: 100.0,
+            per_component_fwd: per,
+            attn_quadratic_per_token: 0.0,
+            head_per_token: 0.0,
+        },
+        executables: Default::default(),
+    }
+}
+
+#[test]
+fn prop_monitor_never_freezes_during_grace_period() {
+    let mut rng = Rng::new(1);
+    for trial in 0..50 {
+        let m = manifest(1 + rng.below(4));
+        let alpha = rng.f64();
+        let total = 50 + rng.below(500);
+        let mut mon = GradesMonitor::new(&grades_cfg(1e9, alpha, 0), &m, total);
+        let mut fs = FreezeState::new(m.n_components);
+        let metrics = vec![0f32; m.metrics_len]; // all zero → below any τ
+        let grace = mon.grace_steps();
+        for t in 1..=grace {
+            assert_eq!(
+                mon.observe(t, &m, &metrics, 1.0, &mut fs),
+                0,
+                "trial {trial}: froze inside grace (t={t}, grace={grace})"
+            );
+        }
+        if grace < total {
+            assert!(mon.observe(grace + 1, &m, &metrics, 1.0, &mut fs) > 0);
+        }
+    }
+}
+
+#[test]
+fn prop_frozen_set_is_monotone_without_unfreeze() {
+    let mut rng = Rng::new(2);
+    for _ in 0..30 {
+        let m = manifest(2);
+        let mut mon = GradesMonitor::new(&grades_cfg(rng.f64() * 5.0, 0.0, rng.below(3)), &m, 100);
+        let mut fs = FreezeState::new(m.n_components);
+        let mut prev_frozen = 0;
+        for t in 1..=60 {
+            let mut metrics = vec![0f32; m.metrics_len];
+            for c in 0..m.n_components {
+                metrics[m.gdiff_offset + c] = (rng.f64() * 8.0) as f32;
+            }
+            mon.observe(t, &m, &metrics, 1.0, &mut fs);
+            assert!(fs.n_frozen() >= prev_frozen, "frozen count decreased");
+            prev_frozen = fs.n_frozen();
+        }
+        // every event metric was below τ at its freeze step
+        for e in &fs.events {
+            assert!(e.frozen);
+            assert!(e.metric_value < mon.tau(e.component) + 1e-9);
+        }
+    }
+}
+
+#[test]
+fn prop_flops_monotone_decreasing_in_frozen_set() {
+    let mut rng = Rng::new(3);
+    for _ in 0..30 {
+        let m = manifest(1 + rng.below(3));
+        let mut fs = FreezeState::new(m.n_components);
+        let mut order: Vec<usize> = (0..m.n_components).collect();
+        rng.shuffle(&mut order);
+        let mut prev = FlopsCounter::step_cost(&m, &fs);
+        assert_eq!(prev, FlopsCounter::dense_step(&m));
+        for c in order {
+            fs.freeze(c, 1, FreezeReason::Converged, 0.0);
+            let cur = FlopsCounter::step_cost(&m, &fs);
+            assert!(cur < prev, "cost must strictly drop per freeze");
+            prev = cur;
+        }
+        // floor: fwd + dX always remain (gradient-flow preservation)
+        let tokens = (m.batch_size * m.seq_len) as f64;
+        assert!((prev - tokens * 200.0).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn prop_classic_es_stops_iff_patience_exceeded() {
+    let mut rng = Rng::new(4);
+    for _ in 0..50 {
+        let patience = 1 + rng.below(5);
+        let cfg = EsConfig { check_interval_frac: 0.05, patience, min_delta: 0.01 };
+        let mut es = ClassicEs::new(&cfg, 100);
+        let mut bad_streak = 0usize;
+        let mut best = f64::INFINITY;
+        for _ in 0..40 {
+            let loss = rng.f64();
+            let stop = es.record(loss, 0.0);
+            if loss < best - cfg.min_delta {
+                best = loss;
+                bad_streak = 0;
+            } else {
+                bad_streak += 1;
+            }
+            assert_eq!(stop, bad_streak >= patience);
+            if stop {
+                break;
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_cosine_schedule_bounded_and_decaying() {
+    let mut rng = Rng::new(5);
+    for _ in 0..40 {
+        let base = rng.f64() * 0.1 + 1e-5;
+        let total = 20 + rng.below(1000);
+        let s = CosineSchedule::new(base, rng.f64() * 0.2, total);
+        for t in 1..=total {
+            let lr = s.lr(t);
+            assert!((0.0..=base * (1.0 + 1e-9)).contains(&lr), "lr out of range");
+        }
+        assert!(s.lr(total) <= s.lr(s.warmup_steps.max(1)));
+    }
+}
+
+#[test]
+fn prop_packing_preserves_next_token_alignment() {
+    let mut rng = Rng::new(6);
+    let v = Vocab::build(256).unwrap();
+    for trial in 0..20 {
+        let n = 5 + rng.below(60);
+        let t = 16 + rng.below(100);
+        let sentences = generate(&v, trial as u64, n);
+        let rows = pack_rows(&sentences, t);
+        for (tok, tgt) in &rows {
+            assert_eq!(tok.len(), t);
+            assert_eq!(tgt.len(), t);
+            for i in 0..t - 1 {
+                if tgt[i] >= 0 && tgt[i + 1] >= 0 {
+                    assert_eq!(tok[i + 1], tgt[i], "alignment broken");
+                }
+            }
+            // all ids in range
+            assert!(tok.iter().all(|&x| x >= 0 && (x as usize) < v.vocab_size));
+            assert!(tgt.iter().all(|&x| x >= -1 && (x as usize as i64) < v.vocab_size as i64 || x == -1));
+        }
+    }
+}
+
+#[test]
+fn prop_batch_iter_yields_constant_shape_and_covers_rows() {
+    let mut rng = Rng::new(7);
+    let v = Vocab::build(256).unwrap();
+    for trial in 0..10 {
+        let sentences = generate(&v, 100 + trial as u64, 20 + rng.below(40));
+        let rows = pack_rows(&sentences, 32);
+        let n = rows.len();
+        let bsz = 1 + rng.below(6);
+        let mut it = BatchIter::new(rows, bsz, trial as u64);
+        let mut seen_epoch = it.epoch;
+        for _ in 0..(3 * n / bsz + 2) {
+            let b = it.next_batch();
+            assert_eq!(b.tokens.len(), bsz * 32);
+            assert_eq!(b.targets.len(), bsz * 32);
+            assert!(it.epoch >= seen_epoch);
+            seen_epoch = it.epoch;
+        }
+        assert!(it.epoch >= 1, "must have cycled at least one epoch");
+    }
+}
+
+#[test]
+fn prop_eval_batches_mask_padding_rows() {
+    let mut rng = Rng::new(8);
+    for _ in 0..20 {
+        let nrows = 1 + rng.below(20);
+        let bsz = 1 + rng.below(8);
+        let t = 4 + rng.below(12);
+        let rows: Vec<_> = (0..nrows).map(|i| (vec![i as i32; t], vec![i as i32; t])).collect();
+        let batches = eval_batches(&rows, bsz, t);
+        assert_eq!(batches.len(), nrows.div_ceil(bsz));
+        let total_valid: usize = batches
+            .iter()
+            .flat_map(|b| b.targets.iter())
+            .filter(|&&x| x >= 0)
+            .count();
+        assert_eq!(total_valid, nrows * t, "padding must be fully masked");
+    }
+}
+
+#[test]
+fn prop_corruptions_always_produce_invalid_variant() {
+    let v = Vocab::build(512).unwrap();
+    let g = GrammarGen::new(&v);
+    let mut rng = Rng::new(9);
+    for _ in 0..200 {
+        let s = g.sentence(&mut rng);
+        for rule in ["det", "adj", "verb_obj", "det2", "swap", "adv"] {
+            let c = g.corrupt(&mut rng, &s, rule);
+            assert_ne!(c.ids, s.ids, "corruption {rule} was a no-op");
+            assert_eq!(c.ids.len(), s.ids.len());
+            assert_eq!(*c.ids.last().unwrap(), EOS);
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    let mut rng = Rng::new(10);
+    fn random_json(rng: &mut Rng, depth: usize) -> json::Json {
+        match if depth > 3 { rng.below(4) } else { rng.below(6) } {
+            0 => json::Json::Null,
+            1 => json::Json::Bool(rng.chance(0.5)),
+            2 => json::Json::Num((rng.f64() * 1e6).round()),
+            3 => json::Json::Str(format!("s{}-\"x\"\n", rng.below(1000))),
+            4 => json::Json::Arr((0..rng.below(5)).map(|_| random_json(rng, depth + 1)).collect()),
+            _ => json::Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth + 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for _ in 0..100 {
+        let v = random_json(&mut rng, 0);
+        let text = json::write(&v);
+        let back = json::parse(&text).unwrap_or_else(|e| panic!("{text}: {e}"));
+        assert_eq!(v, back);
+    }
+}
