@@ -9,7 +9,11 @@ from __future__ import annotations
 
 import dataclasses
 import pathlib
-import tomllib
+
+try:
+    import tomllib
+except ModuleNotFoundError:  # Python < 3.11
+    import tomli as tomllib  # type: ignore[no-redef]
 
 REPO_ROOT = pathlib.Path(__file__).resolve().parents[2]
 CONFIG_DIR = REPO_ROOT / "configs"

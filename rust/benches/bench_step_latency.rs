@@ -1,18 +1,76 @@
-//! Runtime hot-path latency: every executable across model scales, plus
-//! the attn-frozen variant delta (the variant scheduler's realized FLOPs
-//! saving) and the host→device batch-upload overhead.
+//! Runtime hot-path latency: every executable across model scales, the
+//! attn-frozen variant delta (the variant scheduler's realized FLOPs
+//! saving), and the pipelined-runtime A/B — synchronous vs. prefetched +
+//! upload-ahead steps/sec, upload-per-call vs. device-resident validation,
+//! sequential vs. parallel artifact compile — with an upload/exec/probe
+//! breakdown. Emits machine-readable `BENCH_step_latency.json` for the
+//! perf trajectory.
 //!
 //! This is the L3 perf baseline recorded in EXPERIMENTS.md §Perf.
 
+use std::collections::BTreeMap;
+
 use anyhow::Result;
-use grades::config::RepoConfig;
+use grades::config::{repo_root, RepoConfig};
 use grades::data;
 use grades::runtime::artifact::{Bundle, Client};
+use grades::runtime::pipeline::{BatchSource, DeviceBatchCache, FixedCycle, Prefetcher};
 use grades::runtime::session::Session;
-use grades::util::timer::bench;
+use grades::util::json::Json;
+use grades::util::timer::{bench, Timer};
+
+const STEP_ITERS: usize = 30;
+const EVAL_PASSES: usize = 10;
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+/// Steps/sec for the seed's synchronous loop: batch production + upload
+/// on the critical path, one batch at a time.
+fn sync_steps_per_sec(
+    session: &mut Session,
+    source: &mut dyn BatchSource,
+    ctrl: &[f32],
+) -> Result<f64> {
+    for _ in 0..5 {
+        let b = source.next_batch();
+        session.train_step(&b, ctrl, false)?;
+    }
+    let t = Timer::new();
+    for _ in 0..STEP_ITERS {
+        let b = source.next_batch();
+        session.train_step(&b, ctrl, false)?;
+    }
+    Ok(STEP_ITERS as f64 / t.secs())
+}
+
+/// Steps/sec for the pipelined loop: batches arrive from a prefetch
+/// thread and the next step's buffers are staged while the current step
+/// executes (mirrors `trainer::run_source`'s hot path).
+fn pipelined_steps_per_sec(
+    session: &mut Session,
+    source: &mut dyn BatchSource,
+    ctrl: &[f32],
+) -> Result<f64> {
+    let mut staged = Some(session.upload_batch(&source.next_batch())?);
+    for _ in 0..5 {
+        let io = staged.take().unwrap();
+        session.train_step_uploaded(io, ctrl, false)?;
+        staged = Some(session.upload_batch(&source.next_batch())?);
+    }
+    let t = Timer::new();
+    for _ in 0..STEP_ITERS {
+        let io = staged.take().unwrap();
+        session.train_step_uploaded(io, ctrl, false)?;
+        staged = Some(session.upload_batch(&source.next_batch())?);
+    }
+    Ok(STEP_ITERS as f64 / t.secs())
+}
 
 fn main() -> Result<()> {
     let client = Client::cpu()?;
+    let mut report: BTreeMap<String, Json> = BTreeMap::new();
     println!("## bench_step_latency (ms per call)\n");
     println!(
         "{:<14} {:>10} {:>12} {:>10} {:>10} {:>10} {:>10}",
@@ -20,7 +78,11 @@ fn main() -> Result<()> {
     );
     for config in ["lm-tiny-fp", "lm-small-fp", "lm-base-fp", "lm-tiny-lora", "vlm-tiny-fp"] {
         let cfg = RepoConfig::by_name(config)?;
-        let bundle = Bundle::by_name(&client, config)?;
+        let dir = repo_root().join("artifacts").join(config);
+        // compile A/B first (the bundle we keep comes from the parallel path)
+        let seq_secs = Bundle::load_with(&client, &dir, false)?.compile_secs;
+        let bundle = Bundle::load_with(&client, &dir, true)?;
+        let par_secs = bundle.compile_secs;
         let m = &bundle.manifest;
         let mut session = Session::new(&bundle);
         session.init(1)?;
@@ -68,6 +130,84 @@ fn main() -> Result<()> {
             "{:<14} attn-frozen variant saves {saving:.1}% of step wallclock; probe = {:.2}% of step",
             "", 100.0 * t_probe.p50 / t_full.p50
         );
+
+        // ---- pipelined vs synchronous steps/sec ----
+        let (sync_sps, pipe_sps) = if m.is_vlm() {
+            let ds = data::build_vlm(&cfg, m)?;
+            let mut sync_src = FixedCycle::new(ds.train.clone());
+            let sync = sync_steps_per_sec(&mut session, &mut sync_src, &ctrl)?;
+            let mut pre = Prefetcher::spawn(FixedCycle::new(ds.train), 2);
+            let pipe = pipelined_steps_per_sec(&mut session, &mut pre, &ctrl)?;
+            (sync, pipe)
+        } else {
+            let ds = data::build_lm(&cfg, m)?;
+            let mut sync_src = ds.train;
+            let sync = sync_steps_per_sec(&mut session, &mut sync_src, &ctrl)?;
+            let pre_src = data::build_lm(&cfg, m)?.train;
+            let mut pre = Prefetcher::spawn(pre_src, 2);
+            let pipe = pipelined_steps_per_sec(&mut session, &mut pre, &ctrl)?;
+            (sync, pipe)
+        };
+
+        // ---- validation: upload-per-call vs device-resident ----
+        let val = if m.is_vlm() {
+            data::build_vlm(&cfg, m)?.val
+        } else {
+            data::build_lm(&cfg, m)?.val
+        };
+        let t_uncached = bench(1, EVAL_PASSES, || {
+            session.eval_mean_loss(&val).unwrap();
+        });
+        let cache = DeviceBatchCache::upload(&session, &val)?;
+        let t_cached = bench(1, EVAL_PASSES, || {
+            session.eval_mean_loss_cached(&cache).unwrap();
+        });
+
+        println!(
+            "{:<14} steps/sec sync {sync_sps:.2} → pipelined {pipe_sps:.2} ({:+.1}%) | val pass {:.2} → {:.2} ms ({:.2}x) | compile {:.2} → {:.2} s",
+            "",
+            100.0 * (pipe_sps / sync_sps - 1.0),
+            t_uncached.p50 * 1e3,
+            t_cached.p50 * 1e3,
+            t_uncached.p50 / t_cached.p50,
+            seq_secs,
+            par_secs,
+        );
+        let tm = session.timings();
+        println!(
+            "{:<14} breakdown: upload {:.1} MB / {:.3}s ({} copies, {} staged) | exec {:.2}s | probe {:.2}s | eval {:.2}s\n",
+            "",
+            tm.upload_bytes as f64 / 1e6,
+            tm.upload_secs,
+            tm.uploads,
+            tm.staged_uploads,
+            tm.exec_secs,
+            tm.probe_secs,
+            tm.eval_secs,
+        );
+
+        let mut entry = BTreeMap::new();
+        entry.insert("train_ms".into(), num(t_full.p50 * 1e3));
+        entry.insert("train_attn_frozen_ms".into(), num(t_frozen.p50 * 1e3));
+        entry.insert("probe_ms".into(), num(t_probe.p50 * 1e3));
+        entry.insert("eval_ms".into(), num(t_eval.p50 * 1e3));
+        entry.insert("eval_rows_ms".into(), num(t_rows.p50 * 1e3));
+        entry.insert("init_ms".into(), num(t_init.p50 * 1e3));
+        entry.insert("sync_steps_per_sec".into(), num(sync_sps));
+        entry.insert("pipelined_steps_per_sec".into(), num(pipe_sps));
+        entry.insert("pipeline_speedup".into(), num(pipe_sps / sync_sps));
+        entry.insert("val_pass_uncached_ms".into(), num(t_uncached.p50 * 1e3));
+        entry.insert("val_pass_cached_ms".into(), num(t_cached.p50 * 1e3));
+        entry.insert("val_cache_speedup".into(), num(t_uncached.p50 / t_cached.p50));
+        entry.insert("compile_sequential_secs".into(), num(seq_secs));
+        entry.insert("compile_parallel_secs".into(), num(par_secs));
+        entry.insert("compile_speedup".into(), num(seq_secs / par_secs));
+        entry.insert("timings".into(), tm.to_json());
+        report.insert(config.to_string(), Json::Obj(entry));
     }
+
+    let out = repo_root().join("BENCH_step_latency.json");
+    std::fs::write(&out, grades::util::json::write(&Json::Obj(report)))?;
+    println!("wrote {}", out.display());
     Ok(())
 }

@@ -40,6 +40,9 @@ pub struct GradesMonitor {
     grace_steps: usize,
     taus: Vec<f64>,
     below_count: Vec<usize>,
+    /// Per-step freeze-candidate bitmap, reused across observe() calls
+    /// (indexed lookups keep the layer-granularity rule O(n), not O(n²)).
+    candidate: Vec<bool>,
     layer_mode: bool,
     layers: Vec<Vec<usize>>,
     /// Per-component running mean of the metric over the second half of
@@ -76,6 +79,7 @@ impl GradesMonitor {
             grace_steps: ((total_steps as f64) * cfg.alpha).ceil() as usize,
             taus,
             below_count: vec![0; manifest.n_components],
+            candidate: vec![false; manifest.n_components],
             layer_mode: cfg.granularity == "layer",
             layers: layer_groups(manifest),
             baseline_sum: vec![0.0; manifest.n_components],
@@ -182,7 +186,7 @@ impl GradesMonitor {
         }
 
         // per-component convergence test (Alg. 1 lines 8–11)
-        let mut candidates: Vec<usize> = Vec::new();
+        self.candidate.fill(false);
         for c in 0..freeze.n() {
             if freeze.is_frozen(c) {
                 continue;
@@ -190,7 +194,7 @@ impl GradesMonitor {
             if values[c] < self.taus[c] {
                 self.below_count[c] += 1;
                 if self.below_count[c] > self.cfg.patience {
-                    candidates.push(c);
+                    self.candidate[c] = true;
                 }
             } else {
                 self.below_count[c] = 0;
@@ -200,9 +204,7 @@ impl GradesMonitor {
         if self.layer_mode {
             // AutoFreeze-style: a layer freezes only as a whole
             for group in &self.layers {
-                let all_ready = group.iter().all(|&c| {
-                    freeze.is_frozen(c) || candidates.contains(&c)
-                });
+                let all_ready = group.iter().all(|&c| freeze.is_frozen(c) || self.candidate[c]);
                 if all_ready {
                     for &c in group {
                         if !freeze.is_frozen(c) {
@@ -213,9 +215,11 @@ impl GradesMonitor {
                 }
             }
         } else {
-            for c in candidates {
-                freeze.freeze(c, t, FreezeReason::Converged, values[c]);
-                newly += 1;
+            for (c, &ready) in self.candidate.iter().enumerate() {
+                if ready {
+                    freeze.freeze(c, t, FreezeReason::Converged, values[c]);
+                    newly += 1;
+                }
             }
         }
         newly
@@ -376,6 +380,32 @@ pub(crate) mod tests {
         assert_eq!(newly, 7); // only layer 1 froze
         assert!(!fs.is_frozen(0));
         assert!(fs.is_frozen(7));
+    }
+
+    #[test]
+    fn candidate_bitmap_resets_between_steps() {
+        // Regression for the per-step candidate state: a component that
+        // was sub-τ with patience pending must not stay a candidate after
+        // its metric rebounds (the bitmap is cleared every observe()).
+        let m = fake_manifest(2);
+        let mut c = cfg(0.5, 0.0);
+        c.granularity = "layer".into();
+        c.patience = 0;
+        let mut mon = GradesMonitor::new(&c, &m, 100);
+        let mut fs = FreezeState::new(m.n_components);
+        // step 1: layer 0 almost ready (comp 3 high) → nothing freezes
+        let mut vals = vec![0.1f32; m.n_components];
+        vals[3] = 2.0;
+        for v in vals.iter_mut().skip(7) {
+            *v = 2.0; // layer 1 all high
+        }
+        assert_eq!(mon.observe(1, &m, &metrics_with_gdiff(&m, &vals), 1.0, &mut fs), 0);
+        // step 2: only comp 3 is low — the layer must still not freeze,
+        // because step 1's candidates were discarded.
+        let mut vals2 = vec![2.0f32; m.n_components];
+        vals2[3] = 0.1;
+        assert_eq!(mon.observe(2, &m, &metrics_with_gdiff(&m, &vals2), 1.0, &mut fs), 0);
+        assert_eq!(fs.n_frozen(), 0);
     }
 
     #[test]

@@ -5,6 +5,7 @@ use std::path::Path;
 use anyhow::Result;
 
 use crate::runtime::manifest::Manifest;
+use crate::runtime::pipeline::StepTimings;
 use crate::util::csv::CsvWriter;
 
 #[derive(Debug, Clone)]
@@ -24,6 +25,9 @@ pub struct StepRecord {
 pub struct MetricsLog {
     pub records: Vec<StepRecord>,
     pub val_points: Vec<(usize, f64)>,
+    /// Cumulative runtime breakdown for the run (upload/exec/probe/eval),
+    /// filled in by the trainer when the run completes.
+    pub timings: StepTimings,
 }
 
 impl MetricsLog {
@@ -114,6 +118,16 @@ impl MetricsLog {
             w.row(&row)?;
         }
         w.flush()
+    }
+
+    /// Runtime-breakdown JSON (perf trajectory): upload bytes/secs, exec,
+    /// probe, eval — what the pipelined runtime is supposed to shrink.
+    pub fn write_timings_json(&self, path: &Path) -> Result<()> {
+        if let Some(p) = path.parent() {
+            std::fs::create_dir_all(p)?;
+        }
+        std::fs::write(path, crate::util::json::write(&self.timings.to_json()))?;
+        Ok(())
     }
 
     /// Fig. 3 CSV: cumulative frozen fraction.

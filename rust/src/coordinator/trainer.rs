@@ -5,6 +5,15 @@
 //! the classic-ES baseline, the variant scheduler, FLOPs accounting and
 //! per-step logging. All six paper methods are this one loop with
 //! different `StoppingMethod` (the fp/lora split lives in the artifact).
+//!
+//! The loop runs on the pipelined runtime (`runtime::pipeline`): batches
+//! come from any [`BatchSource`] (wrap it in a `Prefetcher` to overlap
+//! host-side packing with device execution), the next step's buffers are
+//! staged while the current step runs (`PipelineOptions::upload_ahead`),
+//! and the fixed validation set is uploaded once into a
+//! [`DeviceBatchCache`] instead of per check. None of this changes the
+//! trajectory: the batch consumed at step `t`, the ctrl vector, and every
+//! executable invocation are identical with the pipeline on or off.
 
 use anyhow::Result;
 
@@ -17,7 +26,10 @@ use crate::coordinator::lr::CosineSchedule;
 use crate::coordinator::metrics::MetricsLog;
 use crate::coordinator::scheduler::{Variant, VariantScheduler};
 use crate::runtime::artifact::Bundle;
-use crate::runtime::session::{Batch, Session};
+use crate::runtime::pipeline::{
+    BatchSource, DeviceBatchCache, FnSource, PipelineOptions, StepTimings,
+};
+use crate::runtime::session::{Batch, Session, UploadedBatch};
 use crate::util::timer::Timer;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -69,6 +81,8 @@ pub struct TrainOutcome {
     pub freeze: FreezeState,
     pub final_val_loss: f64,
     pub variant_swap_step: Option<usize>,
+    /// Runtime breakdown: upload bytes/secs, exec, probe, eval.
+    pub timings: StepTimings,
 }
 
 pub struct TrainerOptions {
@@ -84,6 +98,9 @@ pub struct TrainerOptions {
     pub final_validation: bool,
     /// Pretrained base parameters applied after init (fine-tuning setting).
     pub warm_start: Option<std::sync::Arc<crate::coordinator::warmstart::BaseCheckpoint>>,
+    /// Pipelined-runtime knobs (upload-ahead, prefetch depth used by
+    /// callers that wrap their source in a `Prefetcher`).
+    pub pipeline: PipelineOptions,
 }
 
 impl TrainerOptions {
@@ -96,6 +113,7 @@ impl TrainerOptions {
             variant_scheduler: method == StoppingMethod::GradEs,
             final_validation: true,
             warm_start: None,
+            pipeline: PipelineOptions::default(),
         }
     }
 }
@@ -122,17 +140,45 @@ pub fn run_and_keep<'b, F: FnMut() -> Batch>(
     bundle: &'b Bundle,
     cfg: &RepoConfig,
     opts: &TrainerOptions,
-    mut next_batch: F,
+    next_batch: F,
     val_batches: &[Batch],
 ) -> Result<TrainedModel<'b>> {
-    // Re-run the same loop but keep the session. (Shared implementation via
-    // closure would tangle lifetimes; the loop body is identical.)
+    run_source_and_keep(bundle, cfg, opts, &mut FnSource(next_batch), val_batches)
+}
+
+/// [`run`] over any [`BatchSource`] (e.g. a `Prefetcher`).
+pub fn run_source(
+    bundle: &Bundle,
+    cfg: &RepoConfig,
+    opts: &TrainerOptions,
+    source: &mut dyn BatchSource,
+    val_batches: &[Batch],
+) -> Result<TrainOutcome> {
+    run_source_and_keep(bundle, cfg, opts, source, val_batches).map(|t| t.outcome)
+}
+
+pub fn run_source_and_keep<'b>(
+    bundle: &'b Bundle,
+    cfg: &RepoConfig,
+    opts: &TrainerOptions,
+    source: &mut dyn BatchSource,
+    val_batches: &[Batch],
+) -> Result<TrainedModel<'b>> {
     let m = &bundle.manifest;
     let mut session = Session::new(bundle);
     session.init(opts.seed)?;
     if let Some(ck) = &opts.warm_start {
         ck.apply(&mut session)?;
     }
+    // The fixed validation set goes device-resident once; every ES check
+    // and the final pass below is then pure execution (no re-upload).
+    let needs_val = !val_batches.is_empty()
+        && (opts.final_validation || opts.method == StoppingMethod::ClassicEs);
+    let val_cache = if needs_val {
+        Some(DeviceBatchCache::upload(&session, val_batches)?)
+    } else {
+        None
+    };
 
     let schedule = CosineSchedule::new(cfg.run.lr, cfg.run.warmup_frac, opts.total_steps);
     let mut monitor = match opts.method {
@@ -153,6 +199,9 @@ pub fn run_and_keep<'b, F: FnMut() -> Batch>(
     let mut validation_secs = 0.0f64;
     let mut stop_cause = StopCause::BudgetExhausted;
     let mut steps_run = 0usize;
+    // Upload-ahead staging slot: batch t+1's device buffers, copied while
+    // step t executes. `None` ⇒ the upload happens on the critical path.
+    let mut staged: Option<UploadedBatch> = None;
 
     for t in 1..=opts.total_steps {
         ctrl[0] = t as f32;
@@ -161,8 +210,19 @@ pub fn run_and_keep<'b, F: FnMut() -> Batch>(
         ctrl[m.ctrl_mask_offset..m.ctrl_mask_offset + m.n_components]
             .copy_from_slice(freeze.mask());
         let variant = scheduler.pick(t, &freeze);
-        let batch = next_batch();
-        session.train_step(&batch, &ctrl, variant == Variant::AttnFrozen)?;
+        let io = match staged.take() {
+            Some(io) => io,
+            None => session.upload_batch(&source.next_batch())?,
+        };
+        session.train_step_uploaded(io, &ctrl, variant == Variant::AttnFrozen)?;
+        if opts.pipeline.upload_ahead && t < opts.total_steps {
+            // PJRT dispatch is asynchronous: step t may still be executing
+            // on device while this host→device copy proceeds. If the run
+            // stops early the staged batch is dropped unused — metrics and
+            // freeze decisions never see it.
+            staged = Some(session.upload_batch(&source.next_batch())?);
+            session.note_staged_upload();
+        }
         steps_run = t;
         flops.record_step(m, &freeze);
         let in_monitor_window = t > monitor.grace_steps();
@@ -178,26 +238,29 @@ pub fn run_and_keep<'b, F: FnMut() -> Batch>(
             stop_cause = StopCause::AllComponentsFrozen;
             break;
         }
-        if es.due(t) && !val_batches.is_empty() {
-            let vt = Timer::new();
-            let val_loss = session.eval_mean_loss(val_batches)?;
-            let secs = vt.secs();
-            validation_secs += secs;
-            flops.record_validation(m, val_batches.len());
-            log.record_val(t, val_loss);
-            if es.record(val_loss, secs) {
-                stop_cause = StopCause::ValidationPatience;
-                break;
+        if let Some(cache) = &val_cache {
+            if es.due(t) {
+                let vt = Timer::new();
+                let val_loss = session.eval_mean_loss_cached(cache)?;
+                let secs = vt.secs();
+                validation_secs += secs;
+                flops.record_validation(m, cache.len());
+                log.record_val(t, val_loss);
+                if es.record(val_loss, secs) {
+                    stop_cause = StopCause::ValidationPatience;
+                    break;
+                }
             }
         }
     }
 
-    let final_val_loss = if opts.final_validation && !val_batches.is_empty() {
-        session.eval_mean_loss(val_batches)?
-    } else {
-        f64::NAN
+    let final_val_loss = match (&val_cache, opts.final_validation) {
+        (Some(cache), true) => session.eval_mean_loss_cached(cache)?,
+        _ => f64::NAN,
     };
 
+    let timings = session.timings();
+    log.timings = timings;
     Ok(TrainedModel {
         session,
         outcome: TrainOutcome {
@@ -211,6 +274,7 @@ pub fn run_and_keep<'b, F: FnMut() -> Batch>(
             freeze,
             final_val_loss,
             variant_swap_step: scheduler.swapped_at,
+            timings,
         },
     })
 }

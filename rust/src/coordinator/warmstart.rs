@@ -16,11 +16,12 @@ use anyhow::{ensure, Context, Result};
 
 use crate::config::RepoConfig;
 use crate::coordinator::lr::CosineSchedule;
-use crate::coordinator::trainer::{run_and_keep, StoppingMethod, TrainerOptions};
+use crate::coordinator::trainer::{run_source_and_keep, StoppingMethod, TrainerOptions};
 use crate::data;
 use crate::runtime::artifact::{Bundle, Client};
 use crate::runtime::manifest::Manifest;
-use crate::runtime::session::Session;
+use crate::runtime::pipeline::{FixedCycle, PipelineOptions, Prefetcher};
+use crate::runtime::session::{decode_checkpoint, Session};
 
 /// Named parameter values extracted from a trained state.
 pub struct BaseCheckpoint {
@@ -82,20 +83,18 @@ pub fn pretrain_checkpoint(
     let bundle = Bundle::by_name(client, config_name)
         .with_context(|| format!("pretrain artifact {config_name}"))?;
     if path.exists() {
-        let bytes = std::fs::read(&path)?;
-        let state: Vec<f32> = bytes[8..]
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-            .collect();
-        if state.len() == bundle.manifest.state_len {
-            let mut ck = BaseCheckpoint::from_state(&bundle.manifest, &state)?;
-            ck.source = format!("{config_name} (cached)");
-            return Ok(ck);
+        // corrupt/stale caches (truncated write, layout change) are not
+        // fatal — fall through and retrain below
+        if let Ok((_, state)) = decode_checkpoint(&std::fs::read(&path)?) {
+            if state.len() == bundle.manifest.state_len {
+                let mut ck = BaseCheckpoint::from_state(&bundle.manifest, &state)?;
+                ck.source = format!("{config_name} (cached)");
+                return Ok(ck);
+            }
         }
-        // stale cache (layout changed) — retrain below
     }
     let cfg = RepoConfig::by_name(config_name)?;
-    let mut ds = data::build_lm_pretrain(&cfg, &bundle.manifest)?;
+    let ds = data::build_lm_pretrain(&cfg, &bundle.manifest)?;
     let opts = TrainerOptions {
         method: StoppingMethod::None,
         total_steps: steps,
@@ -104,10 +103,12 @@ pub fn pretrain_checkpoint(
         variant_scheduler: false,
         final_validation: false,
         warm_start: None,
+        pipeline: PipelineOptions::default(),
     };
     // reuse the same cosine schedule semantics as a real pretrain run
     let _ = CosineSchedule::new(cfg.run.lr, cfg.run.warmup_frac, steps);
-    let trained = run_and_keep(&bundle, &cfg, &opts, || ds.train.next_batch(), &[])?;
+    let mut source = Prefetcher::spawn(ds.train, opts.pipeline.prefetch_batches);
+    let trained = run_source_and_keep(&bundle, &cfg, &opts, &mut source, &[])?;
     trained.session.save_checkpoint(&path)?;
     let state = trained.session.state_to_host()?;
     BaseCheckpoint::from_state(&bundle.manifest, &state)
@@ -122,19 +123,14 @@ pub fn pretrain_vlm_checkpoint(
     let path = cache_path(config_name, steps);
     let bundle = Bundle::by_name(client, config_name)?;
     if path.exists() {
-        let bytes = std::fs::read(&path)?;
-        let state: Vec<f32> = bytes[8..]
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-            .collect();
-        if state.len() == bundle.manifest.state_len {
-            return BaseCheckpoint::from_state(&bundle.manifest, &state);
+        if let Ok((_, state)) = decode_checkpoint(&std::fs::read(&path)?) {
+            if state.len() == bundle.manifest.state_len {
+                return BaseCheckpoint::from_state(&bundle.manifest, &state);
+            }
         }
     }
     let cfg = RepoConfig::by_name(config_name)?;
     let ds = data::build_vlm_pretrain(&cfg, &bundle.manifest)?;
-    let batches = ds.train.clone();
-    let mut i = 0usize;
     let opts = TrainerOptions {
         method: StoppingMethod::None,
         total_steps: steps,
@@ -143,18 +139,11 @@ pub fn pretrain_vlm_checkpoint(
         variant_scheduler: false,
         final_validation: false,
         warm_start: None,
+        pipeline: PipelineOptions::default(),
     };
-    let trained = run_and_keep(
-        &bundle,
-        &cfg,
-        &opts,
-        move || {
-            let b = batches[i % batches.len()].clone();
-            i += 1;
-            b
-        },
-        &[],
-    )?;
+    let mut source =
+        Prefetcher::spawn(FixedCycle::new(ds.train), opts.pipeline.prefetch_batches);
+    let trained = run_source_and_keep(&bundle, &cfg, &opts, &mut source, &[])?;
     trained.session.save_checkpoint(&path)?;
     let state = trained.session.state_to_host()?;
     BaseCheckpoint::from_state(&bundle.manifest, &state)
@@ -178,7 +167,13 @@ mod tests {
                 trainable: true,
                 component: None,
             },
-            ParamInfo { name: "b".into(), shape: vec![3], offset: 6, trainable: false, component: None },
+            ParamInfo {
+                name: "b".into(),
+                shape: vec![3],
+                offset: 6,
+                trainable: false,
+                component: None,
+            },
         ];
         let state: Vec<f32> = (0..10).map(|x| x as f32).collect();
         let ck = BaseCheckpoint::from_state(&m, &state).unwrap();

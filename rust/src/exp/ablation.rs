@@ -2,6 +2,11 @@
 //! plus two design-choice ablations DESIGN.md calls out: the convergence
 //! metric (Eq. 1 l1_diff vs §3.1 l1_abs) and freeze granularity
 //! (matrix-level GradES vs layer-level AutoFreeze-style).
+//!
+//! The grid shares one compiled bundle and one device-resident benchmark
+//! set across all 20 runs: the artifact compiles once, the MC suites pack
+//! and upload once, and each cell only pays training + pure-execution
+//! scoring (`harness::DeviceSuite`).
 
 use anyhow::Result;
 
@@ -9,41 +14,51 @@ use super::{write_result, ExpOptions};
 use crate::config::RepoConfig;
 use crate::coordinator::trainer::{self, StoppingMethod, TrainerOptions};
 use crate::data;
-use crate::eval::{benchmarks, harness};
+use crate::eval::benchmarks::Suite;
+use crate::eval::harness::{self, DeviceSuite, PackedSuite};
 use crate::report::table::{pct, secs, Table};
 use crate::runtime::artifact::{Bundle, Client};
+use crate::runtime::pipeline::Prefetcher;
 
 pub const TAUS: [f64; 4] = [0.01, 0.05, 0.1, 0.2];
 pub const ALPHAS: [f64; 4] = [0.1, 0.3, 0.5, 0.6];
 
 fn run_one(
-    client: &Client,
+    bundle: &Bundle,
     config_name: &str,
+    device: &[DeviceSuite<'_>],
     opts: &ExpOptions,
     mutate: impl FnOnce(&mut RepoConfig),
 ) -> Result<(f64, f64, usize)> {
     let mut cfg = RepoConfig::by_name(config_name)?;
     mutate(&mut cfg);
-    let bundle = Bundle::by_name(client, config_name)?;
-    let mut dataset = data::build_lm(&cfg, &bundle.manifest)?;
+    let dataset = data::build_lm(&cfg, &bundle.manifest)?;
     let mut topts = TrainerOptions::from_config(&cfg, StoppingMethod::GradEs);
     if let Some(s) = opts.steps_override {
         topts.total_steps = s;
     }
-    let trained = trainer::run_and_keep(
-        &bundle,
-        &cfg,
-        &topts,
-        || dataset.train.next_batch(),
-        &dataset.val,
-    )?;
-    let suites = benchmarks::lm_suites(&dataset.vocab, opts.bench_seed, opts.questions);
-    let accs = harness::score_suites(&trained.session, &suites)?;
+    let mut source = Prefetcher::spawn(dataset.train, topts.pipeline.prefetch_batches);
+    let trained = trainer::run_source_and_keep(bundle, &cfg, &topts, &mut source, &dataset.val)?;
+    let accs = harness::score_device_suites(&trained.session, device)?;
     let avg = accs.last().map(|a| a.1).unwrap_or(f64::NAN);
     Ok((avg, trained.outcome.wall_secs, trained.outcome.steps_run))
 }
 
 pub fn run(client: &Client, opts: &ExpOptions, config_name: &str) -> Result<()> {
+    // one compile + one suite build for the whole grid
+    let bundle = Bundle::by_name(client, config_name)?;
+    let cfg = RepoConfig::by_name(config_name)?;
+    let dataset = data::build_lm(&cfg, &bundle.manifest)?;
+    let suites: Vec<Suite> =
+        crate::eval::benchmarks::lm_suites(&dataset.vocab, opts.bench_seed, opts.questions);
+    let packed: Vec<PackedSuite> =
+        suites.iter().map(|s| PackedSuite::pack(&bundle.manifest, s)).collect::<Result<_>>()?;
+    // upload once through a stateless loader session: the buffers belong
+    // to the client and serve every trained session in the grid
+    let loader = crate::runtime::session::Session::new(&bundle);
+    let device: Vec<DeviceSuite> =
+        packed.iter().map(|p| p.upload(&loader)).collect::<Result<_>>()?;
+
     // ---- Tables 6 & 7: τ × α grid ----
     let mut acc_t = Table::new(
         std::iter::once("tau \\ alpha".to_string())
@@ -55,7 +70,7 @@ pub fn run(client: &Client, opts: &ExpOptions, config_name: &str) -> Result<()> 
         let mut acc_row = vec![format!("{tau}")];
         let mut time_row = vec![format!("{tau}")];
         for &alpha in &ALPHAS {
-            let (avg, wall, steps) = run_one(client, config_name, opts, |c| {
+            let (avg, wall, steps) = run_one(&bundle, config_name, &device, opts, |c| {
                 c.grades.tau = tau;
                 c.grades.alpha = alpha;
             })?;
@@ -80,7 +95,7 @@ pub fn run(client: &Client, opts: &ExpOptions, config_name: &str) -> Result<()> 
     // ---- metric ablation: Eq. 1 diff vs |grad| ----
     let mut metric_t = Table::new(vec!["Metric", "Avg. acc (%)", "Time (s)", "Steps"]);
     for metric in ["l1_diff", "l1_abs"] {
-        let (avg, wall, steps) = run_one(client, config_name, opts, |c| {
+        let (avg, wall, steps) = run_one(&bundle, config_name, &device, opts, |c| {
             c.grades.metric = metric.to_string();
         })?;
         metric_t.row(vec![metric.to_string(), pct(avg), secs(wall), steps.to_string()]);
@@ -88,7 +103,7 @@ pub fn run(client: &Client, opts: &ExpOptions, config_name: &str) -> Result<()> 
     // ---- granularity ablation: matrix vs layer (AutoFreeze-style) ----
     let mut gran_t = Table::new(vec!["Granularity", "Avg. acc (%)", "Time (s)", "Steps"]);
     for gran in ["matrix", "layer"] {
-        let (avg, wall, steps) = run_one(client, config_name, opts, |c| {
+        let (avg, wall, steps) = run_one(&bundle, config_name, &device, opts, |c| {
             c.grades.granularity = gran.to_string();
         })?;
         gran_t.row(vec![gran.to_string(), pct(avg), secs(wall), steps.to_string()]);

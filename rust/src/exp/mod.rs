@@ -19,6 +19,7 @@ use crate::coordinator::warmstart::BaseCheckpoint;
 use crate::data;
 use crate::eval::{benchmarks, harness};
 use crate::runtime::artifact::{Bundle, Client};
+use crate::runtime::pipeline::{FixedCycle, Prefetcher};
 
 /// Common knobs for all drivers (scaled down in `cargo bench`).
 #[derive(Debug, Clone)]
@@ -76,14 +77,17 @@ pub fn run_lm_job(
     let cfg = RepoConfig::by_name(config_name)?;
     let bundle = Bundle::by_name(client, config_name)
         .with_context(|| format!("artifact {config_name} (run `make artifacts`)"))?;
-    let mut dataset = data::build_lm(&cfg, &bundle.manifest)?;
+    let dataset = data::build_lm(&cfg, &bundle.manifest)?;
     let mut topts = TrainerOptions::from_config(&cfg, method);
     topts.warm_start = warm;
     if let Some(s) = opts.steps_override {
         topts.total_steps = s;
     }
+    // packing + epoch shuffling runs on the prefetch thread, overlapped
+    // with device execution (same batch stream as draining inline)
+    let mut source = Prefetcher::spawn(dataset.train, topts.pipeline.prefetch_batches);
     let trained: TrainedModel =
-        trainer::run_and_keep(&bundle, &cfg, &topts, || dataset.train.next_batch(), &dataset.val)?;
+        trainer::run_source_and_keep(&bundle, &cfg, &topts, &mut source, &dataset.val)?;
     let suites = benchmarks::lm_suites(&dataset.vocab, opts.bench_seed, opts.questions);
     let accuracies = harness::score_suites(&trained.session, &suites)?;
     if opts.verbose {
@@ -125,19 +129,11 @@ pub fn run_vlm_job(
     if let Some(s) = opts.steps_override {
         topts.total_steps = s;
     }
-    let train_batches = dataset.train.clone();
-    let mut i = 0usize;
-    let trained = trainer::run_and_keep(
-        &bundle,
-        &cfg,
-        &topts,
-        move || {
-            let b = train_batches[i % train_batches.len()].clone();
-            i += 1;
-            b
-        },
-        &dataset.val,
-    )?;
+    let mut source = Prefetcher::spawn(
+        FixedCycle::new(dataset.train.clone()),
+        topts.pipeline.prefetch_batches,
+    );
+    let trained = trainer::run_source_and_keep(&bundle, &cfg, &topts, &mut source, &dataset.val)?;
     let suites = match kind {
         VlmSuiteKind::Main => {
             benchmarks::vlm_suites(&dataset.scene_cfg, &dataset.vocab, opts.bench_seed, opts.questions)

@@ -16,6 +16,7 @@ use grades::data;
 use grades::eval::{benchmarks, harness};
 use grades::exp::{self, ExpOptions};
 use grades::runtime::artifact::{Bundle, Client};
+use grades::runtime::pipeline::{BatchSource, FixedCycle, PipelineOptions, Prefetcher};
 
 struct Args {
     positional: Vec<String>,
@@ -83,26 +84,27 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(s) = args.usize_flag("steps")? {
         topts.total_steps = s;
     }
+    if args.get("no-pipeline").is_some() {
+        topts.pipeline = PipelineOptions::off();
+    }
     let is_vlm = bundle.manifest.is_vlm();
+    let depth = topts.pipeline.prefetch_batches;
     let trained = if is_vlm {
         let ds = data::build_vlm(&cfg, &bundle.manifest)?;
-        let batches = ds.train.clone();
-        let mut i = 0usize;
-        trainer::run_and_keep(
-            &bundle,
-            &cfg,
-            &topts,
-            move || {
-                let b = batches[i % batches.len()].clone();
-                i += 1;
-                b
-            },
-            &ds.val,
-        )?
+        let mut source: Box<dyn BatchSource> = if depth > 0 {
+            Box::new(Prefetcher::spawn(FixedCycle::new(ds.train), depth))
+        } else {
+            Box::new(FixedCycle::new(ds.train))
+        };
+        trainer::run_source_and_keep(&bundle, &cfg, &topts, &mut *source, &ds.val)?
     } else {
-        let mut ds = data::build_lm(&cfg, &bundle.manifest)?;
-        let val = ds.val.clone();
-        trainer::run_and_keep(&bundle, &cfg, &topts, move || ds.train.next_batch(), &val)?
+        let ds = data::build_lm(&cfg, &bundle.manifest)?;
+        let mut source: Box<dyn BatchSource> = if depth > 0 {
+            Box::new(Prefetcher::spawn(ds.train, depth))
+        } else {
+            Box::new(ds.train)
+        };
+        trainer::run_source_and_keep(&bundle, &cfg, &topts, &mut *source, &ds.val)?
     };
     let o = &trained.outcome;
     println!(
@@ -116,6 +118,18 @@ fn cmd_train(args: &Args) -> Result<()> {
         o.freeze.n_frozen(),
         o.freeze.n(),
         o.flops.total()
+    );
+    let tm = &o.timings;
+    println!(
+        "runtime: compile {:.2}s | upload {:.1} MB in {:.3}s ({} copies, {} staged) | exec {:.2}s | probe {:.2}s | eval {:.2}s",
+        bundle.compile_secs,
+        tm.upload_bytes as f64 / 1e6,
+        tm.upload_secs,
+        tm.uploads,
+        tm.staged_uploads,
+        tm.exec_secs,
+        tm.probe_secs,
+        tm.eval_secs,
     );
     if let Some(s) = o.variant_swap_step {
         println!("variant scheduler: swapped to attn-frozen graph at step {s}");
@@ -142,6 +156,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         let dir = std::path::Path::new(dir);
         o.log.write_loss_csv(&dir.join(format!("{config}_{}_loss.csv", method.label())))?;
         o.log.write_frozen_csv(&dir.join(format!("{config}_{}_frozen.csv", method.label())))?;
+        o.log.write_timings_json(&dir.join(format!("{config}_{}_timings.json", method.label())))?;
         println!("logs written to {}", dir.display());
     }
     if let Some(ckpt) = args.get("save") {
@@ -235,7 +250,7 @@ fn main() -> Result<()> {
             eprintln!(
                 "usage: grades <train|repro|info|list> [flags]\n\
                  \n\
-                 grades train --config lm-tiny-fp --method grades [--steps N] [--bench] [--log-dir D] [--save ckpt]\n\
+                 grades train --config lm-tiny-fp --method grades [--steps N] [--bench] [--log-dir D] [--save ckpt] [--no-pipeline]\n\
                  grades repro <lm|vlm|ablation|fig1|all> [--quick] [--steps N] [--questions Q] [--out D]\n\
                  grades info --config lm-tiny-fp\n\
                  grades list"

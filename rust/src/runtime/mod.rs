@@ -3,6 +3,7 @@
 
 pub mod artifact;
 pub mod manifest;
+pub mod pipeline;
 pub mod session;
 
 use anyhow::anyhow;

@@ -1,18 +1,31 @@
 //! Training session: owns the on-device flat state buffer and drives the
 //! step/probe/eval executables. The state never round-trips to host between
 //! steps (the probe output is `metrics_len` floats).
+//!
+//! Uploads are split from execution (`upload_batch` → `train_step_uploaded`
+//! / `eval_batch_uploaded`) so the pipelined trainer can stage the next
+//! step's buffers while the current step runs, and so the fixed validation
+//! set can live on device (`runtime::pipeline::DeviceBatchCache`). Every
+//! host↔device interaction is accounted in [`StepTimings`].
+
+use std::cell::RefCell;
+use std::io::Write as _;
 
 use anyhow::{ensure, Context, Result};
 use xla::PjRtBuffer;
 
 use super::artifact::Bundle;
+use super::pipeline::{DeviceBatchCache, StepTimings};
 use super::xerr;
+use crate::util::timer::Timer;
 
 pub struct Session<'b> {
     pub bundle: &'b Bundle,
     state: Option<PjRtBuffer>,
     /// 1-based optimizer step (AdamW bias correction).
     pub step: usize,
+    /// Cumulative runtime instrumentation (RefCell: eval/probe take &self).
+    timings: RefCell<StepTimings>,
 }
 
 /// One training batch already flattened row-major.
@@ -24,13 +37,37 @@ pub struct Batch {
     pub patches: Vec<f32>,
 }
 
+impl Batch {
+    /// Host bytes this batch occupies (== bytes a device upload copies).
+    pub fn nbytes(&self) -> usize {
+        4 * (self.tokens.len() + self.targets.len() + self.patches.len())
+    }
+}
+
+/// A batch already resident on device, ready to feed an executable.
+pub struct UploadedBatch {
+    pub(crate) bufs: Vec<PjRtBuffer>,
+    pub bytes: usize,
+}
+
 impl<'b> Session<'b> {
     pub fn new(bundle: &'b Bundle) -> Self {
-        Session { bundle, state: None, step: 0 }
+        Session { bundle, state: None, step: 0, timings: RefCell::new(StepTimings::default()) }
     }
 
     fn client(&self) -> &xla::PjRtClient {
         &self.bundle.client.0
+    }
+
+    /// Snapshot of the cumulative upload/exec/probe/eval instrumentation.
+    pub fn timings(&self) -> StepTimings {
+        *self.timings.borrow()
+    }
+
+    /// Count an already-performed upload as staged (overlapped with the
+    /// previous step's execution) — called by the pipelined trainer.
+    pub fn note_staged_upload(&self) {
+        self.timings.borrow_mut().staged_uploads += 1;
     }
 
     /// Run the init executable, placing fresh params/opt state on device.
@@ -45,12 +82,16 @@ impl<'b> Session<'b> {
         Ok(())
     }
 
-    fn upload_batch(&self, batch: &Batch) -> Result<Vec<PjRtBuffer>> {
+    /// Copy one host batch to device (shape-checked against the manifest).
+    /// Separated from execution so uploads can be staged ahead of their
+    /// step and so fixed eval sets can be uploaded once.
+    pub fn upload_batch(&self, batch: &Batch) -> Result<UploadedBatch> {
         let m = &self.bundle.manifest;
         let b = m.batch_size;
         let t = m.seq_len;
         ensure!(batch.tokens.len() == b * t, "tokens len {} != {}", batch.tokens.len(), b * t);
         ensure!(batch.targets.len() == b * t, "targets len mismatch");
+        let timer = Timer::new();
         let mut bufs = vec![
             self.client()
                 .buffer_from_host_buffer::<i32>(&batch.tokens, &[b, t], None)
@@ -72,29 +113,57 @@ impl<'b> Session<'b> {
                     .map_err(xerr)?,
             );
         }
-        Ok(bufs)
+        let bytes = batch.nbytes();
+        let mut tm = self.timings.borrow_mut();
+        tm.upload_secs += timer.secs();
+        tm.upload_bytes += bytes as u64;
+        tm.uploads += 1;
+        Ok(UploadedBatch { bufs, bytes })
     }
 
     /// One optimizer step. `ctrl` is the full control vector (step, lr,
     /// wd_scale, mask…); `attn_frozen` selects the reduced-backward variant.
     pub fn train_step(&mut self, batch: &Batch, ctrl: &[f32], attn_frozen: bool) -> Result<()> {
+        let io = self.upload_batch(batch)?;
+        self.train_step_uploaded(io, ctrl, attn_frozen)
+    }
+
+    /// One optimizer step over buffers already on device (the pipelined
+    /// path: the upload happened while the previous step executed).
+    pub fn train_step_uploaded(
+        &mut self,
+        io: UploadedBatch,
+        ctrl: &[f32],
+        attn_frozen: bool,
+    ) -> Result<()> {
         let m = &self.bundle.manifest;
         ensure!(ctrl.len() == m.ctrl_len, "ctrl len {} != {}", ctrl.len(), m.ctrl_len);
         let state = self.state.as_ref().context("session not initialized")?;
-        let io = self.upload_batch(batch)?;
+        let ct = Timer::new();
         let ctrl_buf = self
             .client()
             .buffer_from_host_buffer::<f32>(ctrl, &[ctrl.len()], None)
             .map_err(xerr)?;
+        {
+            let mut tm = self.timings.borrow_mut();
+            tm.upload_secs += ct.secs();
+            tm.upload_bytes += 4 * ctrl.len() as u64;
+        }
         let exe = if attn_frozen {
             &self.bundle.train_step_attn_frozen
         } else {
             &self.bundle.train_step
         };
         let mut args: Vec<&PjRtBuffer> = vec![state];
-        args.extend(io.iter());
+        args.extend(io.bufs.iter());
         args.push(&ctrl_buf);
+        let et = Timer::new();
         let mut out = exe.execute_b(&args).map_err(xerr)?;
+        {
+            let mut tm = self.timings.borrow_mut();
+            tm.exec_secs += et.secs();
+            tm.execs += 1;
+        }
         self.state = Some(out.remove(0).remove(0));
         self.step += 1;
         Ok(())
@@ -103,51 +172,90 @@ impl<'b> Session<'b> {
     /// Read the metrics prefix the last train step wrote into the state.
     pub fn probe(&self) -> Result<Vec<f32>> {
         let state = self.state.as_ref().context("session not initialized")?;
+        let t = Timer::new();
         let out = self.bundle.probe.execute_b(&[state]).map_err(xerr)?;
-        out[0][0]
+        let v = out[0][0]
             .to_literal_sync()
             .map_err(xerr)?
             .to_vec::<f32>()
-            .map_err(xerr)
+            .map_err(xerr);
+        let mut tm = self.timings.borrow_mut();
+        tm.probe_secs += t.secs();
+        tm.probes += 1;
+        v
     }
 
     /// Forward-only loss on one batch → (loss_sum, token_count).
     pub fn eval_batch(&self, batch: &Batch) -> Result<(f64, f64)> {
-        let state = self.state.as_ref().context("session not initialized")?;
         let io = self.upload_batch(batch)?;
+        self.eval_batch_uploaded(&io)
+    }
+
+    /// Forward-only loss over device-resident buffers (the cached path —
+    /// numerically identical to `eval_batch`, same executable + data).
+    pub fn eval_batch_uploaded(&self, io: &UploadedBatch) -> Result<(f64, f64)> {
+        let state = self.state.as_ref().context("session not initialized")?;
+        let t = Timer::new();
         let mut args: Vec<&PjRtBuffer> = vec![state];
-        args.extend(io.iter());
+        args.extend(io.bufs.iter());
         let out = self.bundle.eval_step.execute_b(&args).map_err(xerr)?;
         let v = out[0][0]
             .to_literal_sync()
             .map_err(xerr)?
             .to_vec::<f32>()
             .map_err(xerr)?;
+        let mut tm = self.timings.borrow_mut();
+        tm.eval_secs += t.secs();
+        tm.evals += 1;
         Ok((v[0] as f64, v[1] as f64))
     }
 
     /// Per-row (loss_sum, count) pairs — multiple-choice scoring.
     pub fn eval_rows(&self, batch: &Batch) -> Result<Vec<(f64, f64)>> {
-        let state = self.state.as_ref().context("session not initialized")?;
         let io = self.upload_batch(batch)?;
+        self.eval_rows_uploaded(&io)
+    }
+
+    /// Per-row scoring over device-resident buffers (cached MC harness).
+    pub fn eval_rows_uploaded(&self, io: &UploadedBatch) -> Result<Vec<(f64, f64)>> {
+        let state = self.state.as_ref().context("session not initialized")?;
+        let t = Timer::new();
         let mut args: Vec<&PjRtBuffer> = vec![state];
-        args.extend(io.iter());
+        args.extend(io.bufs.iter());
         let out = self.bundle.eval_rows.execute_b(&args).map_err(xerr)?;
         let v = out[0][0]
             .to_literal_sync()
             .map_err(xerr)?
             .to_vec::<f32>()
             .map_err(xerr)?;
+        let mut tm = self.timings.borrow_mut();
+        tm.eval_secs += t.secs();
+        tm.evals += 1;
         let b = v.len() / 2;
         Ok((0..b).map(|i| (v[i] as f64, v[b + i] as f64)).collect())
     }
 
-    /// Mean validation loss over many batches (the classic-ES hot cost).
+    /// Mean validation loss over many host batches, uploading each call
+    /// (the classic-ES hot cost the device cache removes).
     pub fn eval_mean_loss(&self, batches: &[Batch]) -> Result<f64> {
         let mut loss = 0.0;
         let mut count = 0.0;
         for b in batches {
             let (l, c) = self.eval_batch(b)?;
+            loss += l;
+            count += c;
+        }
+        Ok(if count > 0.0 { loss / count } else { f64::NAN })
+    }
+
+    /// Mean validation loss over a device-resident cache: pure execution,
+    /// zero upload. Returns the same value as `eval_mean_loss` on the
+    /// batches the cache was built from.
+    pub fn eval_mean_loss_cached(&self, cache: &DeviceBatchCache) -> Result<f64> {
+        let mut loss = 0.0;
+        let mut count = 0.0;
+        for io in cache.iter() {
+            let (l, c) = self.eval_batch_uploaded(io)?;
             loss += l;
             count += c;
         }
@@ -172,29 +280,114 @@ impl<'b> Session<'b> {
         Ok(())
     }
 
-    /// Save / load binary checkpoints (f32 little-endian + step header).
+    /// Save a binary checkpoint (u64-LE step header + f32-LE state),
+    /// streamed through a buffered writer in fixed-size chunks.
     pub fn save_checkpoint(&self, path: &std::path::Path) -> Result<()> {
         let host = self.state_to_host()?;
-        let mut bytes = Vec::with_capacity(8 + host.len() * 4);
-        bytes.extend_from_slice(&(self.step as u64).to_le_bytes());
-        for x in &host {
-            bytes.extend_from_slice(&x.to_le_bytes());
-        }
         if let Some(p) = path.parent() {
             std::fs::create_dir_all(p)?;
         }
-        std::fs::write(path, bytes)?;
+        let file = std::fs::File::create(path)?;
+        let mut w = std::io::BufWriter::with_capacity(1 << 20, file);
+        write_checkpoint(&mut w, self.step as u64, &host)?;
+        w.flush()?;
         Ok(())
     }
 
     pub fn load_checkpoint(&mut self, path: &std::path::Path) -> Result<()> {
         let bytes = std::fs::read(path)?;
-        ensure!(bytes.len() >= 8 && (bytes.len() - 8) % 4 == 0, "corrupt checkpoint");
-        self.step = u64::from_le_bytes(bytes[..8].try_into().unwrap()) as usize;
-        let host: Vec<f32> = bytes[8..]
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-            .collect();
+        let (step, host) = decode_checkpoint(&bytes)?;
+        self.step = step as usize;
         self.state_from_host(&host)
+    }
+}
+
+/// Floats converted per encode chunk (256 KiB of output at a time keeps
+/// the scratch buffer cache-resident while amortizing writer calls).
+const CKPT_CHUNK: usize = 64 * 1024;
+
+/// Stream `step` + `state` in the checkpoint wire format. Chunked
+/// little-endian encode: the seed implementation pushed 4 bytes per float
+/// through `extend_from_slice`, which bottlenecked multi-MB states.
+pub fn write_checkpoint<W: std::io::Write>(w: &mut W, step: u64, state: &[f32]) -> Result<()> {
+    w.write_all(&step.to_le_bytes())?;
+    let mut scratch = vec![0u8; CKPT_CHUNK * 4];
+    for chunk in state.chunks(CKPT_CHUNK) {
+        for (i, x) in chunk.iter().enumerate() {
+            scratch[i * 4..i * 4 + 4].copy_from_slice(&x.to_le_bytes());
+        }
+        w.write_all(&scratch[..chunk.len() * 4])?;
+    }
+    Ok(())
+}
+
+/// Encode to an in-memory byte vector (tests / golden files).
+pub fn encode_checkpoint(step: u64, state: &[f32]) -> Vec<u8> {
+    let mut bytes = Vec::with_capacity(8 + state.len() * 4);
+    write_checkpoint(&mut bytes, step, state).expect("Vec write is infallible");
+    bytes
+}
+
+/// Inverse of [`write_checkpoint`]. Validates the header + alignment.
+pub fn decode_checkpoint(bytes: &[u8]) -> Result<(u64, Vec<f32>)> {
+    ensure!(bytes.len() >= 8 && (bytes.len() - 8) % 4 == 0, "corrupt checkpoint");
+    let step = u64::from_le_bytes(bytes[..8].try_into().unwrap());
+    let host: Vec<f32> = bytes[8..]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Ok((step, host))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkpoint_roundtrip_exact() {
+        let state: Vec<f32> = (0..CKPT_CHUNK + 137)
+            .map(|i| (i as f32).sin() * 1e3 + f32::MIN_POSITIVE)
+            .collect();
+        let bytes = encode_checkpoint(42, &state);
+        assert_eq!(bytes.len(), 8 + state.len() * 4);
+        let (step, back) = decode_checkpoint(&bytes).unwrap();
+        assert_eq!(step, 42);
+        // bitwise round trip, including non-finite values
+        assert_eq!(back.len(), state.len());
+        for (a, b) in state.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_specials() {
+        let state = vec![f32::NAN, f32::INFINITY, f32::NEG_INFINITY, -0.0, 0.0];
+        let (step, back) = decode_checkpoint(&encode_checkpoint(7, &state)).unwrap();
+        assert_eq!(step, 7);
+        for (a, b) in state.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn checkpoint_wire_format_is_stable() {
+        // Seed-format compatibility: u64-LE step, then f32-LE values.
+        let bytes = encode_checkpoint(3, &[1.0]);
+        let mut want = 3u64.to_le_bytes().to_vec();
+        want.extend_from_slice(&1.0f32.to_le_bytes());
+        assert_eq!(bytes, want);
+    }
+
+    #[test]
+    fn decode_rejects_corrupt() {
+        assert!(decode_checkpoint(&[1, 2, 3]).is_err()); // short header
+        assert!(decode_checkpoint(&[0; 10]).is_err()); // misaligned body
+        assert!(decode_checkpoint(&[0; 8]).is_ok()); // empty state is fine
+    }
+
+    #[test]
+    fn batch_nbytes_counts_all_fields() {
+        let b = Batch { tokens: vec![0; 6], targets: vec![0; 6], patches: vec![0.0; 5] };
+        assert_eq!(b.nbytes(), 4 * 17);
     }
 }

@@ -1,10 +1,13 @@
 //! Integration tests over the real PJRT runtime + AOT artifacts.
 //!
-//! These need `make artifacts` to have run (skipped gracefully otherwise)
-//! and exercise the full L3→L2→L1 stack: init determinism, train-step
-//! semantics through the compiled graphs, freeze-mask behaviour, the
-//! attn-frozen variant, checkpoint round-trips, warm starts and the
-//! trainer's three stopping methods.
+//! These need Python-built artifacts, so they are opt-in: set
+//! `GRADES_ARTIFACTS=1` (after `make artifacts`) to run them; otherwise
+//! every test here skips with a message and `cargo test -q` stays green
+//! on a fresh checkout. They exercise the full L3→L2→L1 stack: init
+//! determinism, train-step semantics through the compiled graphs,
+//! freeze-mask behaviour, the attn-frozen variant, checkpoint
+//! round-trips, warm starts, the trainer's three stopping methods, and
+//! the pipelined runtime's equivalence guarantees.
 
 use std::cell::RefCell;
 use std::collections::BTreeMap;
@@ -16,6 +19,7 @@ use grades::coordinator::warmstart::BaseCheckpoint;
 use grades::data;
 use grades::eval::{benchmarks, harness};
 use grades::runtime::artifact::{Bundle, Client};
+use grades::runtime::pipeline::{DeviceBatchCache, PipelineOptions, Prefetcher};
 use grades::runtime::session::Session;
 
 // PjRtClient is !Send (Rc internals): cache per test thread.
@@ -24,7 +28,18 @@ thread_local! {
     static BUNDLES: RefCell<BTreeMap<String, Rc<Bundle>>> = RefCell::new(BTreeMap::new());
 }
 
+/// Artifact-dependent tests are env-gated so a checkout without the
+/// Python toolchain still gets a meaningful (green) tier-1 run instead of
+/// a wall of expected failures masking real regressions.
+fn artifacts_enabled() -> bool {
+    matches!(std::env::var("GRADES_ARTIFACTS"), Ok(v) if !v.is_empty() && v != "0")
+}
+
 fn bundle(name: &str) -> Option<Rc<Bundle>> {
+    if !artifacts_enabled() {
+        eprintln!("skipping: set GRADES_ARTIFACTS=1 (after `make artifacts`) to run artifact tests");
+        return None;
+    }
     BUNDLES.with(|cell| {
         let mut map = cell.borrow_mut();
         if let Some(b) = map.get(name) {
@@ -291,6 +306,118 @@ fn sgd_artifact_trains() {
     assert!(o.steps_run <= 30 && o.steps_run >= 16, "steps {}", o.steps_run);
     let loss = o.log.final_train_loss();
     assert!(loss.is_finite() && loss < 5.6, "sgd loss {loss}");
+}
+
+#[test]
+fn pipeline_on_off_trajectories_are_bitwise_identical() {
+    // Acceptance gate for the pipelined runtime: upload-ahead + prefetch
+    // + device-resident validation must not change a single recorded
+    // metric or freeze decision for a fixed seed.
+    let Some(b) = bundle("lm-tiny-fp") else { return };
+    let b = &*b;
+    let cfg = RepoConfig::by_name("lm-tiny-fp").unwrap();
+    let run_with = |pipeline: PipelineOptions| {
+        let mut ds = data::build_lm(&cfg, &b.manifest).unwrap();
+        let mut opts = TrainerOptions::from_config(&cfg, StoppingMethod::GradEs);
+        opts.total_steps = 30;
+        opts.pipeline = pipeline;
+        trainer::run(b, &cfg, &opts, || ds.train.next_batch(), &ds.val).unwrap()
+    };
+    let off = run_with(PipelineOptions::off());
+    let on = run_with(PipelineOptions::default());
+    assert_eq!(off.steps_run, on.steps_run);
+    assert_eq!(off.stop_cause, on.stop_cause);
+    assert_eq!(off.final_val_loss.to_bits(), on.final_val_loss.to_bits());
+    assert_eq!(off.log.records.len(), on.log.records.len());
+    for (a, c) in off.log.records.iter().zip(&on.log.records) {
+        assert_eq!(a.step, c.step);
+        assert_eq!(a.loss.to_bits(), c.loss.to_bits(), "loss diverges at step {}", a.step);
+        assert_eq!(a.gdiff, c.gdiff, "gdiff diverges at step {}", a.step);
+    }
+    assert_eq!(off.log.val_points.len(), on.log.val_points.len());
+    for ((s1, v1), (s2, v2)) in off.log.val_points.iter().zip(&on.log.val_points) {
+        assert_eq!(s1, s2);
+        assert_eq!(v1.to_bits(), v2.to_bits());
+    }
+    assert_eq!(off.freeze.events.len(), on.freeze.events.len());
+    for (e1, e2) in off.freeze.events.iter().zip(&on.freeze.events) {
+        assert_eq!((e1.step, e1.component, e1.frozen), (e2.step, e2.component, e2.frozen));
+    }
+    // and the pipelined run actually overlapped its uploads
+    assert!(on.timings.staged_uploads > 0);
+    assert_eq!(off.timings.staged_uploads, 0);
+}
+
+#[test]
+fn prefetched_source_matches_inline_closure() {
+    let Some(b) = bundle("lm-tiny-fp") else { return };
+    let b = &*b;
+    let cfg = RepoConfig::by_name("lm-tiny-fp").unwrap();
+    let mut opts = TrainerOptions::from_config(&cfg, StoppingMethod::GradEs);
+    opts.total_steps = 25;
+
+    let mut ds1 = data::build_lm(&cfg, &b.manifest).unwrap();
+    let inline = trainer::run(b, &cfg, &opts, || ds1.train.next_batch(), &ds1.val).unwrap();
+
+    let ds2 = data::build_lm(&cfg, &b.manifest).unwrap();
+    let mut source = Prefetcher::spawn(ds2.train, 2);
+    let pre = trainer::run_source(b, &cfg, &opts, &mut source, &ds2.val).unwrap();
+
+    assert_eq!(inline.steps_run, pre.steps_run);
+    assert_eq!(
+        inline.log.final_train_loss().to_bits(),
+        pre.log.final_train_loss().to_bits()
+    );
+    assert_eq!(inline.final_val_loss.to_bits(), pre.final_val_loss.to_bits());
+}
+
+#[test]
+fn device_cached_eval_matches_upload_per_call() {
+    let Some(b) = bundle("lm-tiny-fp") else { return };
+    let b = &*b;
+    let cfg = RepoConfig::by_name("lm-tiny-fp").unwrap();
+    let mut ds = data::build_lm(&cfg, &b.manifest).unwrap();
+    let mut s = Session::new(b);
+    s.init(21).unwrap();
+    for t in 1..=5 {
+        let batch = ds.train.next_batch();
+        s.train_step(&batch, &default_ctrl(b, t as f32, 1e-3), false).unwrap();
+    }
+    let uncached = s.eval_mean_loss(&ds.val).unwrap();
+    let cache = DeviceBatchCache::upload(&s, &ds.val).unwrap();
+    assert_eq!(cache.len(), ds.val.len());
+    // repeated cached passes: all identical to the uncached value (same
+    // executable, same data; only the upload disappears)
+    for _ in 0..3 {
+        let cached = s.eval_mean_loss_cached(&cache).unwrap();
+        assert_eq!(uncached.to_bits(), cached.to_bits());
+    }
+    // per-row path equality too (the harness's cached scoring)
+    let io = s.upload_batch(&ds.val[0]).unwrap();
+    assert_eq!(s.eval_rows(&ds.val[0]).unwrap(), s.eval_rows_uploaded(&io).unwrap());
+}
+
+#[test]
+fn parallel_bundle_load_matches_sequential() {
+    if bundle("lm-tiny-fp").is_none() {
+        return; // env gate / artifacts missing
+    }
+    let dir = grades::config::repo_root().join("artifacts").join("lm-tiny-fp");
+    CLIENT.with(|c| {
+        let seq = Bundle::load_with(c, &dir, false).unwrap();
+        let par = Bundle::load_with(c, &dir, true).unwrap();
+        let mut s1 = Session::new(&seq);
+        let mut s2 = Session::new(&par);
+        s1.init(17).unwrap();
+        s2.init(17).unwrap();
+        assert_eq!(s1.state_to_host().unwrap(), s2.state_to_host().unwrap());
+        let cfg = RepoConfig::by_name("lm-tiny-fp").unwrap();
+        let mut ds = data::build_lm(&cfg, &seq.manifest).unwrap();
+        let batch = ds.train.next_batch();
+        s1.train_step(&batch, &default_ctrl(&seq, 1.0, 1e-3), false).unwrap();
+        s2.train_step(&batch, &default_ctrl(&par, 1.0, 1e-3), false).unwrap();
+        assert_eq!(s1.state_to_host().unwrap(), s2.state_to_host().unwrap());
+    });
 }
 
 #[test]
