@@ -1,14 +1,107 @@
 //! Scaled-down Tables 6 & 7 (τ × α grid) + design-choice ablations —
-//! `cargo bench` twin of `grades repro ablation`.
+//! `cargo bench` twin of `grades repro ablation` — plus the scheduler
+//! A/B: the same grid executed sequentially (`--jobs 1`) and on a worker
+//! pool (`--jobs 4`) against one warmed runner, verifying the result sets
+//! are identical and emitting `BENCH_scheduler.json` (jobs/sec + total
+//! wall per mode) for the perf trajectory.
 
-use anyhow::Result;
-use grades::exp::{ablation, ExpOptions};
+use std::collections::BTreeMap;
+
+use anyhow::{ensure, Result};
+use grades::config::repo_root;
+use grades::exp::ablation::{self, ALPHAS, TAUS};
+use grades::exp::{plan, scheduler, ExpOptions};
+use grades::exp::scheduler::JobStatus;
 use grades::runtime::artifact::Client;
+use grades::util::json::{self, Json};
+use grades::util::timer::Timer;
+
+const CONC_WORKERS: usize = 4;
+
+/// id → average accuracy for every completed job (the equality check).
+fn result_set(
+    graph: &plan::JobGraph,
+    report: &scheduler::RunReport,
+) -> BTreeMap<String, String> {
+    let mut out = BTreeMap::new();
+    for (i, s) in report.statuses.iter().enumerate() {
+        if let JobStatus::Done { result: Some(r), .. } = s {
+            let avg = r.accuracies.last().map(|a| a.1).unwrap_or(f64::NAN);
+            out.insert(graph.get(i).id.clone(), format!("{avg:.6}"));
+        }
+    }
+    out
+}
 
 fn main() -> Result<()> {
+    if !repo_root().join("artifacts").join("lm-tiny-fp").join("manifest.json").exists() {
+        eprintln!("bench_ablation: artifacts/lm-tiny-fp missing (run `make artifacts`); skipping");
+        return Ok(());
+    }
     let client = Client::cpu()?;
+
+    // The rendered-tables twin of `grades repro ablation` (sequential).
     let mut opts = ExpOptions::quick(60, 8);
-    opts.out_dir = grades::config::repo_root().join("results").join("bench");
+    opts.out_dir = repo_root().join("results").join("bench");
     opts.verbose = true;
-    ablation::run(&client, &opts, "lm-tiny-fp")
+    opts.resume = false;
+    ablation::run(&client, &opts, "lm-tiny-fp")?;
+
+    // --- scheduler A/B over the same grid shape ---
+    let mut qopts = ExpOptions::quick(40, 8);
+    qopts.out_dir = repo_root().join("results").join("bench");
+    qopts.verbose = false;
+    let runner = scheduler::DeviceRunner::new(&client, &qopts);
+    let sopts = |jobs: usize| scheduler::SchedulerOptions {
+        jobs,
+        manifest_path: None, // no resume: every pass runs every cell
+        resume: false,
+        ..Default::default()
+    };
+    // Warm the shared caches (compile, dataset rows, device suites) with
+    // one cell so the A/B measures scheduling, not cold start.
+    let (warm_graph, _) = plan::ablation_plan("lm-tiny-fp", &TAUS[..1], &ALPHAS[..1])?;
+    scheduler::execute(&warm_graph, &sopts(1), &runner)?.require_ok(&warm_graph)?;
+
+    let (graph, _) = plan::ablation_plan("lm-tiny-fp", &TAUS, &ALPHAS)?;
+    let n = graph.len() as f64;
+
+    let t = Timer::new();
+    let seq = scheduler::execute(&graph, &sopts(1), &runner)?;
+    let seq_wall = t.secs();
+    seq.require_ok(&graph)?;
+
+    let t = Timer::new();
+    let conc = scheduler::execute(&graph, &sopts(CONC_WORKERS), &runner)?;
+    let conc_wall = t.secs();
+    conc.require_ok(&graph)?;
+
+    // jobs=1 and jobs=N must emit identical accuracy cells.
+    let (a, b) = (result_set(&graph, &seq), result_set(&graph, &conc));
+    ensure!(a == b, "sequential and concurrent grids diverged: {a:?} vs {b:?}");
+
+    println!(
+        "scheduler A/B over {} jobs: seq {:.2}s ({:.2} jobs/s) | {} workers {:.2}s ({:.2} jobs/s) | speedup {:.2}x | tables identical",
+        graph.len(),
+        seq_wall,
+        n / seq_wall,
+        CONC_WORKERS,
+        conc_wall,
+        n / conc_wall,
+        seq_wall / conc_wall,
+    );
+
+    let mut m = BTreeMap::new();
+    m.insert("grid_jobs".to_string(), Json::Num(n));
+    m.insert("seq_wall_secs".to_string(), Json::Num(seq_wall));
+    m.insert("seq_jobs_per_sec".to_string(), Json::Num(n / seq_wall));
+    m.insert("conc_workers".to_string(), Json::Num(CONC_WORKERS as f64));
+    m.insert("conc_wall_secs".to_string(), Json::Num(conc_wall));
+    m.insert("conc_jobs_per_sec".to_string(), Json::Num(n / conc_wall));
+    m.insert("speedup".to_string(), Json::Num(seq_wall / conc_wall));
+    m.insert("identical_tables".to_string(), Json::Bool(true));
+    let out = repo_root().join("BENCH_scheduler.json");
+    std::fs::write(&out, json::write(&Json::Obj(m)))?;
+    println!("wrote {}", out.display());
+    Ok(())
 }

@@ -10,5 +10,7 @@ fn main() -> Result<()> {
     let mut opts = ExpOptions::quick(60, 8);
     opts.out_dir = grades::config::repo_root().join("results").join("bench");
     opts.verbose = true;
+    // a bench must measure real runs, never resume cells from a prior one
+    opts.resume = false;
     vlm::run(&client, &opts)
 }

@@ -21,7 +21,7 @@ pub struct StepRecord {
     pub gabs: Vec<f32>,
 }
 
-#[derive(Debug, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct MetricsLog {
     pub records: Vec<StepRecord>,
     pub val_points: Vec<(usize, f64)>,

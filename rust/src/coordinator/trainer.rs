@@ -14,6 +14,15 @@
 //! [`DeviceBatchCache`] instead of per check. None of this changes the
 //! trajectory: the batch consumed at step `t`, the ctrl vector, and every
 //! executable invocation are identical with the pipeline on or off.
+//!
+//! A run is single-threaded with respect to the device: the session, its
+//! bundle and every buffer stay on the calling thread (only host-side
+//! batch production moves to the prefetch worker). When the experiment
+//! scheduler runs jobs on a worker pool, the *whole* call into this
+//! module happens while that worker holds the shared client's device
+//! token — see `runtime::session`'s thread-safety contract. Warm starts
+//! arrive as `Arc<BaseCheckpoint>` (plain host data), which is what lets
+//! one pretrain job hand its checkpoint to concurrent dependents.
 
 use anyhow::Result;
 
@@ -68,6 +77,7 @@ pub enum StopCause {
     ValidationPatience,
 }
 
+#[derive(Debug, Clone)]
 pub struct TrainOutcome {
     pub steps_run: usize,
     pub stop_cause: StopCause,

@@ -79,9 +79,20 @@ pub fn pretrain_checkpoint(
     config_name: &str,
     steps: usize,
 ) -> Result<BaseCheckpoint> {
-    let path = cache_path(config_name, steps);
     let bundle = Bundle::by_name(client, config_name)
         .with_context(|| format!("pretrain artifact {config_name}"))?;
+    pretrain_checkpoint_with(&bundle, config_name, steps)
+}
+
+/// [`pretrain_checkpoint`] over an already-compiled bundle — the
+/// scheduler path, where bundles come from a shared [`BundleCache`] and
+/// must not be recompiled per pretrain job.
+pub fn pretrain_checkpoint_with(
+    bundle: &Bundle,
+    config_name: &str,
+    steps: usize,
+) -> Result<BaseCheckpoint> {
+    let path = cache_path(config_name, steps);
     if path.exists() {
         // corrupt/stale caches (truncated write, layout change) are not
         // fatal — fall through and retrain below
@@ -108,7 +119,7 @@ pub fn pretrain_checkpoint(
     // reuse the same cosine schedule semantics as a real pretrain run
     let _ = CosineSchedule::new(cfg.run.lr, cfg.run.warmup_frac, steps);
     let mut source = Prefetcher::spawn(ds.train, opts.pipeline.prefetch_batches);
-    let trained = run_source_and_keep(&bundle, &cfg, &opts, &mut source, &[])?;
+    let trained = run_source_and_keep(bundle, &cfg, &opts, &mut source, &[])?;
     trained.session.save_checkpoint(&path)?;
     let state = trained.session.state_to_host()?;
     BaseCheckpoint::from_state(&bundle.manifest, &state)
@@ -120,8 +131,18 @@ pub fn pretrain_vlm_checkpoint(
     config_name: &str,
     steps: usize,
 ) -> Result<BaseCheckpoint> {
-    let path = cache_path(config_name, steps);
     let bundle = Bundle::by_name(client, config_name)?;
+    pretrain_vlm_checkpoint_with(&bundle, config_name, steps)
+}
+
+/// [`pretrain_vlm_checkpoint`] over an already-compiled bundle (the
+/// scheduler path — see [`pretrain_checkpoint_with`]).
+pub fn pretrain_vlm_checkpoint_with(
+    bundle: &Bundle,
+    config_name: &str,
+    steps: usize,
+) -> Result<BaseCheckpoint> {
+    let path = cache_path(config_name, steps);
     if path.exists() {
         if let Ok((_, state)) = decode_checkpoint(&std::fs::read(&path)?) {
             if state.len() == bundle.manifest.state_len {
@@ -143,7 +164,7 @@ pub fn pretrain_vlm_checkpoint(
     };
     let mut source =
         Prefetcher::spawn(FixedCycle::new(ds.train), opts.pipeline.prefetch_batches);
-    let trained = run_source_and_keep(&bundle, &cfg, &opts, &mut source, &[])?;
+    let trained = run_source_and_keep(bundle, &cfg, &opts, &mut source, &[])?;
     trained.session.save_checkpoint(&path)?;
     let state = trained.session.state_to_host()?;
     BaseCheckpoint::from_state(&bundle.manifest, &state)

@@ -18,11 +18,24 @@ pub struct Dataset {
     pub vocab: vocab::Vocab,
 }
 
-/// Build the *fine-tuning* LM dataset: a small, lexically domain-shifted
+/// The reusable (config, data-section)-determined part of an LM dataset:
+/// packed training rows + fixed validation batches + vocab. Everything
+/// here depends only on `cfg.data` and the manifest shapes, so one build
+/// serves every grid cell that mutates other config sections (τ, α,
+/// metric, granularity, …); each run takes a *fresh* shuffled iterator
+/// via [`lm_train_iter`], which is what keeps cached and uncached builds
+/// on identical batch streams.
+pub struct LmRows {
+    pub train_rows: Vec<(Vec<i32>, Vec<i32>)>,
+    pub val: Vec<Batch>,
+    pub vocab: vocab::Vocab,
+}
+
+/// Build the *fine-tuning* LM rows: a small, lexically domain-shifted
 /// corpus (flatter Zipf, fresh seed) — small enough to overfit, which is
 /// the regime where early stopping pays off. Benchmarks sample the general
 /// distribution, so overfitting here hurts measured accuracy.
-pub fn build_lm(cfg: &RepoConfig, manifest: &Manifest) -> Result<Dataset> {
+pub fn build_lm_rows(cfg: &RepoConfig, manifest: &Manifest) -> Result<LmRows> {
     let vocab = vocab::Vocab::build(manifest.vocab_size)?;
     let train_s =
         corpus::generate_shifted(&vocab, cfg.data.seed ^ 0xff17, cfg.data.train_sentences, 0.4);
@@ -30,11 +43,29 @@ pub fn build_lm(cfg: &RepoConfig, manifest: &Manifest) -> Result<Dataset> {
         corpus::generate_shifted(&vocab, cfg.data.seed ^ 0x5eed, cfg.data.val_sentences, 0.4);
     let train_rows = batcher::pack_rows(&train_s, manifest.seq_len);
     let val_rows = batcher::pack_rows(&val_s, manifest.seq_len);
-    Ok(Dataset {
-        train: batcher::BatchIter::new(train_rows, manifest.batch_size, cfg.run.seed ^ 0xba7c),
+    Ok(LmRows {
+        train_rows,
         val: batcher::eval_batches(&val_rows, manifest.batch_size, manifest.seq_len),
         vocab,
     })
+}
+
+/// A fresh epoch-shuffled training iterator over prebuilt rows — the
+/// single source of truth for the train-stream seed, shared by the
+/// one-shot [`build_lm`] path and the scheduler's per-config row cache.
+pub fn lm_train_iter(
+    rows: &LmRows,
+    cfg: &RepoConfig,
+    manifest: &Manifest,
+) -> batcher::BatchIter {
+    batcher::BatchIter::new(rows.train_rows.clone(), manifest.batch_size, cfg.run.seed ^ 0xba7c)
+}
+
+/// Build the *fine-tuning* LM dataset (rows + fresh iterator in one call).
+pub fn build_lm(cfg: &RepoConfig, manifest: &Manifest) -> Result<Dataset> {
+    let rows = build_lm_rows(cfg, manifest)?;
+    let train = lm_train_iter(&rows, cfg, manifest);
+    Ok(Dataset { train, val: rows.val, vocab: rows.vocab })
 }
 
 /// Build the *pretraining* LM dataset: the broad general-distribution

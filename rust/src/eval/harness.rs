@@ -81,14 +81,17 @@ impl PackedSuite {
     }
 
     /// Pin this suite's batches on device (once per client); scoring
-    /// through the result skips both packing and upload.
-    pub fn upload(&self, session: &Session) -> Result<DeviceSuite<'_>> {
+    /// through the result skips both packing and upload. The returned
+    /// [`DeviceSuite`] is self-contained (it copies the small name /
+    /// correct-answer tables), so caches can keep it without holding the
+    /// `PackedSuite` alive.
+    pub fn upload(&self, session: &Session) -> Result<DeviceSuite> {
         let ios = self
             .batches
             .iter()
             .map(|b| session.upload_batch(b))
             .collect::<Result<Vec<_>>>()?;
-        Ok(DeviceSuite { packed: self, ios })
+        Ok(DeviceSuite { name: self.name.clone(), corrects: self.corrects.clone(), ios })
     }
 
     /// Score with per-call uploads (one-shot use).
@@ -101,22 +104,26 @@ impl PackedSuite {
     }
 }
 
-/// A [`PackedSuite`] resident on device.
-pub struct DeviceSuite<'p> {
-    packed: &'p PackedSuite,
+/// A [`PackedSuite`] resident on device. Owns its device buffers and the
+/// (small) host-side scoring tables; the session state is a separate
+/// executable argument, so one `DeviceSuite` serves any number of trained
+/// sessions on the same client.
+pub struct DeviceSuite {
+    name: String,
+    corrects: Vec<Vec<usize>>,
     ios: Vec<UploadedBatch>,
 }
 
-impl DeviceSuite<'_> {
+impl DeviceSuite {
     pub fn name(&self) -> &str {
-        &self.packed.name
+        &self.name
     }
 
     /// Pure-execution scoring — identical result to `PackedSuite::score`
     /// (same executable, same rows).
     pub fn score(&self, session: &Session) -> Result<f64> {
         let mut acc = Accuracy::default();
-        for (io, corrects) in self.ios.iter().zip(&self.packed.corrects) {
+        for (io, corrects) in self.ios.iter().zip(&self.corrects) {
             acc.tally(&session.eval_rows_uploaded(io)?, corrects);
         }
         Ok(acc.pct())
@@ -174,7 +181,7 @@ pub fn score_suites(session: &Session, suites: &[Suite]) -> Result<Vec<(String, 
 /// Device-cached variant of [`score_suites`] for repeated scoring runs.
 pub fn score_device_suites(
     session: &Session,
-    suites: &[DeviceSuite<'_>],
+    suites: &[DeviceSuite],
 ) -> Result<Vec<(String, f64)>> {
     let mut out = Vec::new();
     let mut sum = 0.0;

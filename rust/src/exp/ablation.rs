@@ -3,61 +3,34 @@
 //! metric (Eq. 1 l1_diff vs §3.1 l1_abs) and freeze granularity
 //! (matrix-level GradES vs layer-level AutoFreeze-style).
 //!
-//! The grid shares one compiled bundle and one device-resident benchmark
-//! set across all 20 runs: the artifact compiles once, the MC suites pack
-//! and upload once, and each cell only pays training + pure-execution
-//! scoring (`harness::DeviceSuite`).
+//! The grid is a [`plan::ablation_plan`] job graph run by the scheduler:
+//! all cells share one compiled bundle, one set of dataset rows and one
+//! device-resident benchmark set through the scheduler's per-config
+//! caches (the artifact compiles once, the data section builds once, the
+//! MC suites pack and upload once), every completed cell lands in the run
+//! manifest so an interrupted grid resumes where it stopped, and
+//! `--jobs N` runs cells' host phases concurrently. Cells are rendered in
+//! grid order, so the tables are identical for any job count.
 
 use anyhow::Result;
 
-use super::{write_result, ExpOptions};
-use crate::config::RepoConfig;
-use crate::coordinator::trainer::{self, StoppingMethod, TrainerOptions};
-use crate::data;
-use crate::eval::benchmarks::Suite;
-use crate::eval::harness::{self, DeviceSuite, PackedSuite};
+use super::{plan, scheduler, write_result, ExpOptions, JobResult};
 use crate::report::table::{pct, secs, Table};
-use crate::runtime::artifact::{Bundle, Client};
-use crate::runtime::pipeline::Prefetcher;
+use crate::runtime::artifact::Client;
 
 pub const TAUS: [f64; 4] = [0.01, 0.05, 0.1, 0.2];
 pub const ALPHAS: [f64; 4] = [0.1, 0.3, 0.5, 0.6];
 
-fn run_one(
-    bundle: &Bundle,
-    config_name: &str,
-    device: &[DeviceSuite<'_>],
-    opts: &ExpOptions,
-    mutate: impl FnOnce(&mut RepoConfig),
-) -> Result<(f64, f64, usize)> {
-    let mut cfg = RepoConfig::by_name(config_name)?;
-    mutate(&mut cfg);
-    let dataset = data::build_lm(&cfg, &bundle.manifest)?;
-    let mut topts = TrainerOptions::from_config(&cfg, StoppingMethod::GradEs);
-    if let Some(s) = opts.steps_override {
-        topts.total_steps = s;
-    }
-    let mut source = Prefetcher::spawn(dataset.train, topts.pipeline.prefetch_batches);
-    let trained = trainer::run_source_and_keep(bundle, &cfg, &topts, &mut source, &dataset.val)?;
-    let accs = harness::score_device_suites(&trained.session, device)?;
-    let avg = accs.last().map(|a| a.1).unwrap_or(f64::NAN);
-    Ok((avg, trained.outcome.wall_secs, trained.outcome.steps_run))
+fn cell(r: &JobResult) -> (f64, f64, usize) {
+    let avg = r.accuracies.last().map(|a| a.1).unwrap_or(f64::NAN);
+    (avg, r.outcome.wall_secs, r.outcome.steps_run)
 }
 
 pub fn run(client: &Client, opts: &ExpOptions, config_name: &str) -> Result<()> {
-    // one compile + one suite build for the whole grid
-    let bundle = Bundle::by_name(client, config_name)?;
-    let cfg = RepoConfig::by_name(config_name)?;
-    let dataset = data::build_lm(&cfg, &bundle.manifest)?;
-    let suites: Vec<Suite> =
-        crate::eval::benchmarks::lm_suites(&dataset.vocab, opts.bench_seed, opts.questions);
-    let packed: Vec<PackedSuite> =
-        suites.iter().map(|s| PackedSuite::pack(&bundle.manifest, s)).collect::<Result<_>>()?;
-    // upload once through a stateless loader session: the buffers belong
-    // to the client and serve every trained session in the grid
-    let loader = crate::runtime::session::Session::new(&bundle);
-    let device: Vec<DeviceSuite> =
-        packed.iter().map(|p| p.upload(&loader)).collect::<Result<_>>()?;
+    let (graph, slots) = plan::ablation_plan(config_name, &TAUS, &ALPHAS)?;
+    let runner = scheduler::DeviceRunner::new(client, opts);
+    let report = scheduler::execute(&graph, &opts.scheduler(), &runner)?;
+    report.require_ok(&graph)?;
 
     // ---- Tables 6 & 7: τ × α grid ----
     let mut acc_t = Table::new(
@@ -66,19 +39,18 @@ pub fn run(client: &Client, opts: &ExpOptions, config_name: &str) -> Result<()> 
             .collect::<Vec<_>>(),
     );
     let mut time_t = acc_t.clone();
+    let mut k = 0;
     for &tau in &TAUS {
         let mut acc_row = vec![format!("{tau}")];
         let mut time_row = vec![format!("{tau}")];
         for &alpha in &ALPHAS {
-            let (avg, wall, steps) = run_one(&bundle, config_name, &device, opts, |c| {
-                c.grades.tau = tau;
-                c.grades.alpha = alpha;
-            })?;
+            let (avg, wall, steps) = cell(report.result(slots.grid[k])?);
             if opts.verbose {
                 println!("[ablation tau={tau} alpha={alpha}] acc={avg:.2}% wall={wall:.2}s steps={steps}");
             }
             acc_row.push(pct(avg));
             time_row.push(secs(wall));
+            k += 1;
         }
         acc_t.row(acc_row);
         time_t.row(time_row);
@@ -94,19 +66,15 @@ pub fn run(client: &Client, opts: &ExpOptions, config_name: &str) -> Result<()> 
 
     // ---- metric ablation: Eq. 1 diff vs |grad| ----
     let mut metric_t = Table::new(vec!["Metric", "Avg. acc (%)", "Time (s)", "Steps"]);
-    for metric in ["l1_diff", "l1_abs"] {
-        let (avg, wall, steps) = run_one(&bundle, config_name, &device, opts, |c| {
-            c.grades.metric = metric.to_string();
-        })?;
-        metric_t.row(vec![metric.to_string(), pct(avg), secs(wall), steps.to_string()]);
+    for (metric, id) in &slots.metric {
+        let (avg, wall, steps) = cell(report.result(*id)?);
+        metric_t.row(vec![metric.clone(), pct(avg), secs(wall), steps.to_string()]);
     }
     // ---- granularity ablation: matrix vs layer (AutoFreeze-style) ----
     let mut gran_t = Table::new(vec!["Granularity", "Avg. acc (%)", "Time (s)", "Steps"]);
-    for gran in ["matrix", "layer"] {
-        let (avg, wall, steps) = run_one(&bundle, config_name, &device, opts, |c| {
-            c.grades.granularity = gran.to_string();
-        })?;
-        gran_t.row(vec![gran.to_string(), pct(avg), secs(wall), steps.to_string()]);
+    for (gran, id) in &slots.granularity {
+        let (avg, wall, steps) = cell(report.result(*id)?);
+        gran_t.row(vec![gran.clone(), pct(avg), secs(wall), steps.to_string()]);
     }
     let extra = format!(
         "## Ablation — convergence metric (Eq. 1 vs §3.1)\n\n{}\n\

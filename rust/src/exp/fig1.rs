@@ -5,30 +5,30 @@
 //! Fig 4a: mean |∇W|₁ for attention vs MLP groups over training — the
 //! observation (MLP 2–3× higher, attention converges first) that motivates
 //! component-level stopping.
+//!
+//! One monitor-off job (probe every step) through the scheduler. The job
+//! is *ephemeral*: its value is the full per-step metrics log, which the
+//! run manifest doesn't persist, so it always re-runs. Component metadata
+//! comes from the artifact's manifest.json directly — no bundle compile
+//! just to read the layer table.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
-use super::{write_result, ExpOptions};
+use super::{plan, scheduler, write_result, ExpOptions};
 use crate::config::RepoConfig;
-use crate::coordinator::trainer::{self, StoppingMethod, TrainerOptions};
-use crate::data;
 use crate::report::figures::ascii_chart;
-use crate::runtime::artifact::{Bundle, Client};
+use crate::runtime::artifact::Client;
+use crate::runtime::manifest::Manifest;
 
 pub fn run(client: &Client, opts: &ExpOptions, config_name: &str, layer: usize) -> Result<()> {
     let cfg = RepoConfig::by_name(config_name)?;
-    let bundle = Bundle::by_name(client, config_name)?;
-    let m = &bundle.manifest;
-    let mut dataset = data::build_lm(&cfg, m)?;
-    // Monitor-off run so every component trains the full budget (the
-    // figure shows raw dynamics, not the intervened run).
-    let mut topts = TrainerOptions::from_config(&cfg, StoppingMethod::None);
-    topts.probe_every = 1;
-    if let Some(s) = opts.steps_override {
-        topts.total_steps = s;
-    }
-    let outcome =
-        trainer::run(&bundle, &cfg, &topts, || dataset.train.next_batch(), &dataset.val)?;
+    let m = Manifest::load(&cfg.artifact_dir().join("manifest.json"))
+        .with_context(|| format!("artifact {config_name} (run `make artifacts`)"))?;
+    let (graph, job) = plan::fig1_plan(config_name)?;
+    let runner = scheduler::DeviceRunner::new(client, opts);
+    let mut report = scheduler::execute(&graph, &opts.scheduler(), &runner)?;
+    report.require_ok(&graph)?;
+    let outcome = report.take_result(job)?.outcome;
 
     // --- Fig 1: the 7 matrices of `layer` + τ line ---
     let comps: Vec<_> = m
@@ -63,7 +63,7 @@ pub fn run(client: &Client, opts: &ExpOptions, config_name: &str, layer: usize) 
     );
     outcome.log.write_component_csv(
         &opts.out_dir.join("fig1_components.csv"),
-        m,
+        &m,
         layer,
         "language",
     )?;
@@ -110,7 +110,7 @@ pub fn run(client: &Client, opts: &ExpOptions, config_name: &str, layer: usize) 
     );
     outcome.log.write_group_mean_csv(
         &opts.out_dir.join("fig4a_groups.csv"),
-        m,
+        &m,
         &[("attention", attn), ("mlp", mlp)],
     )?;
 

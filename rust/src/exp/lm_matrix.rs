@@ -3,11 +3,15 @@
 //! Runs {FP, LoRA} × {base, +ES, +GradES} across the three model scales,
 //! reporting per-suite accuracy (Table 1 shape), training time / speedup /
 //! FLOPs (Table 4 shape) and the cumulative frozen-fraction series
-//! (Figure 3 shape).
+//! (Figure 3 shape). The matrix is a [`plan::lm_matrix_plan`] job graph:
+//! one pretrain job per scale feeds its checkpoint (`Arc`'d host data) to
+//! the six fine-tuning jobs of that scale, completed cells persist to the
+//! run manifest, and the Figure 3 series renders from the persisted
+//! per-job summaries so a resumed matrix still draws complete curves.
 
 use anyhow::Result;
 
-use super::{method_label, run_lm_job, write_result, ExpOptions, JobResult};
+use super::{method_label, plan, scheduler, write_result, ExpOptions, JobResult};
 use crate::coordinator::trainer::StoppingMethod;
 use crate::report::figures::ascii_chart;
 use crate::report::table::{pct, sci, secs, speedup, Table};
@@ -21,34 +25,37 @@ pub const SCALES: [(&str, &str, &str); 3] = [
     ("lm-base (3.1M)", "lm-base-fp", "lm-base-lora"),
 ];
 
-const METHODS: [StoppingMethod; 3] =
-    [StoppingMethod::None, StoppingMethod::ClassicEs, StoppingMethod::GradEs];
-
 pub struct MatrixResults {
     /// (scale display, artifact method, job)
     pub jobs: Vec<(String, String, JobResult)>,
+    /// (scale display, frozen-fraction series) for the FP+GradES runs.
+    pub fig3_series: Vec<(String, Vec<(f64, f64)>)>,
 }
 
-pub fn run_matrix(client: &Client, opts: &ExpOptions, scales: &[(&str, &str, &str)]) -> Result<MatrixResults> {
-    let mut jobs = Vec::new();
-    for (display, fp_cfg, lora_cfg) in scales {
-        // one pretrained base per scale; every method fine-tunes from it
-        let pre_steps = opts.steps_override
-            .unwrap_or_else(|| crate::config::RepoConfig::by_name(fp_cfg)
-                .map(|c| c.run.total_steps).unwrap_or(300));
-        let warm = std::sync::Arc::new(
-            crate::coordinator::warmstart::pretrain_checkpoint(client, fp_cfg, pre_steps)?);
-        if opts.verbose {
-            println!("[{display}] pretrained base ready ({})", warm.source);
-        }
-        for (am, cfg_name) in [("fp", *fp_cfg), ("lora", *lora_cfg)] {
-            for method in METHODS {
-                let job = run_lm_job(client, cfg_name, method, Some(warm.clone()), opts)?;
-                jobs.push((display.to_string(), am.to_string(), job));
-            }
+pub fn run_matrix(
+    client: &Client,
+    opts: &ExpOptions,
+    scales: &[(&str, &str, &str)],
+) -> Result<MatrixResults> {
+    let (graph, slots) = plan::lm_matrix_plan(scales)?;
+    let runner = scheduler::DeviceRunner::new(client, opts);
+    let mut report = scheduler::execute(&graph, &opts.scheduler(), &runner)?;
+    report.require_ok(&graph)?;
+    // Figure 3 series come from the persisted summaries (exact for both
+    // freshly-run and resumed jobs — the in-memory log is not persisted).
+    let mut fig3_series = Vec::new();
+    for (display, am, id) in &slots.jobs {
+        if am == "fp" && graph.get(*id).method == StoppingMethod::GradEs {
+            let s = report.summary(*id)?;
+            let pts = s.frozen_series.iter().map(|&(t, f)| (t as f64, f)).collect();
+            fig3_series.push((display.clone(), pts));
         }
     }
-    Ok(MatrixResults { jobs })
+    let mut jobs = Vec::new();
+    for (display, am, id) in slots.jobs {
+        jobs.push((display, am, report.take_result(id)?));
+    }
+    Ok(MatrixResults { jobs, fig3_series })
 }
 
 /// Render Table 1 (accuracy per suite) from matrix results.
@@ -111,31 +118,18 @@ pub fn render_table4(res: &MatrixResults) -> String {
 
 /// Figure 3: frozen-fraction curves of the FP+GradES runs across scales.
 pub fn render_fig3(res: &MatrixResults, opts: &ExpOptions) -> Result<String> {
-    let mut series = Vec::new();
-    for (display, am, job) in &res.jobs {
-        if am == "fp" && job.method == StoppingMethod::GradEs {
-            let pts: Vec<(f64, f64)> = job
-                .outcome
-                .log
-                .records
-                .iter()
-                .map(|r| (r.step as f64, r.frozen_fraction))
-                .collect();
-            series.push((display.clone(), pts));
-        }
-    }
     // CSV
     std::fs::create_dir_all(&opts.out_dir)?;
     let mut w = CsvWriter::create(opts.out_dir.join("fig3_frozen_fraction.csv"),
                                    &["scale", "step", "frozen_fraction"])?;
-    for (name, pts) in &series {
+    for (name, pts) in &res.fig3_series {
         for (s, f) in pts {
             w.row(&[name.clone(), s.to_string(), f.to_string()])?;
         }
     }
     w.flush()?;
     let borrowed: Vec<(&str, Vec<(f64, f64)>)> =
-        series.iter().map(|(n, p)| (n.as_str(), p.clone())).collect();
+        res.fig3_series.iter().map(|(n, p)| (n.as_str(), p.clone())).collect();
     Ok(format!(
         "## Figure 3 — cumulative frozen components during training\n\n```\n{}```\n",
         ascii_chart("frozen fraction vs step (FP+GradES)", &borrowed, 70, 14, false)

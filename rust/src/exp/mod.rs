@@ -1,25 +1,25 @@
 //! Experiment drivers — one per paper table/figure family (DESIGN.md
-//! experiment index). Each driver runs real training jobs through the
-//! coordinator and renders the paper's table shape from our measurements.
+//! experiment index). Each driver *declares* its jobs as a
+//! [`plan::JobGraph`] (configs, stopping methods, config patches,
+//! dependency edges) and hands the graph to the [`scheduler`], which runs
+//! ready jobs on a bounded worker pool over one shared client, persists
+//! completed cells to a resumable run manifest under `--out`, and returns
+//! per-job results the driver renders into the paper's table shapes.
+//! Rendering iterates plan order, so tables are identical for any
+//! `--jobs` value.
 
 pub mod ablation;
 pub mod fig1;
 pub mod lm_matrix;
+pub mod plan;
+pub mod scheduler;
 pub mod vlm;
 
 use std::path::PathBuf;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
-use std::sync::Arc;
-
-use crate::config::RepoConfig;
-use crate::coordinator::trainer::{self, StoppingMethod, TrainerOptions, TrainedModel};
-use crate::coordinator::warmstart::BaseCheckpoint;
-use crate::data;
-use crate::eval::{benchmarks, harness};
-use crate::runtime::artifact::{Bundle, Client};
-use crate::runtime::pipeline::{FixedCycle, Prefetcher};
+use crate::coordinator::trainer::{self, StoppingMethod};
 
 /// Common knobs for all drivers (scaled down in `cargo bench`).
 #[derive(Debug, Clone)]
@@ -32,6 +32,10 @@ pub struct ExpOptions {
     pub bench_seed: u64,
     pub out_dir: PathBuf,
     pub verbose: bool,
+    /// Scheduler worker count (`--jobs` / `GRADES_JOBS`; 1 = sequential).
+    pub jobs: usize,
+    /// Resume from the run manifest under `out_dir` (`--fresh` disables).
+    pub resume: bool,
 }
 
 impl Default for ExpOptions {
@@ -42,6 +46,8 @@ impl Default for ExpOptions {
             bench_seed: 0xbe9c,
             out_dir: crate::config::repo_root().join("results"),
             verbose: true,
+            jobs: 1,
+            resume: true,
         }
     }
 }
@@ -55,107 +61,39 @@ impl ExpOptions {
             ..Default::default()
         }
     }
+
+    /// Fingerprint of the run-wide settings that change a job's numbers.
+    /// Recorded in every persisted job summary; a manifest entry resumes
+    /// only when its fingerprint matches, so `--quick`/`--steps N` cells
+    /// are never silently reused by a run with different settings.
+    pub fn settings_fingerprint(&self) -> String {
+        format!(
+            "steps_override={:?};questions={};bench_seed={:#x}",
+            self.steps_override, self.questions, self.bench_seed
+        )
+    }
+
+    /// Scheduler knobs derived from these options (the run manifest lives
+    /// next to the rendered tables under `out_dir`).
+    pub fn scheduler(&self) -> scheduler::SchedulerOptions {
+        scheduler::SchedulerOptions {
+            jobs: self.jobs.max(1),
+            manifest_path: Some(self.out_dir.join("run_manifest.json")),
+            resume: self.resume,
+            settings: self.settings_fingerprint(),
+            verbose: self.verbose,
+        }
+    }
 }
 
 /// Result of one (config, method) training + evaluation job.
+#[derive(Debug, Clone)]
 pub struct JobResult {
     pub config: String,
     pub method: StoppingMethod,
     pub outcome: trainer::TrainOutcome,
     /// (suite name, accuracy %) pairs ending with ("Avg.", …).
     pub accuracies: Vec<(String, f64)>,
-}
-
-/// Train one LM config with one stopping method and score the 8 suites.
-pub fn run_lm_job(
-    client: &Client,
-    config_name: &str,
-    method: StoppingMethod,
-    warm: Option<Arc<BaseCheckpoint>>,
-    opts: &ExpOptions,
-) -> Result<JobResult> {
-    let cfg = RepoConfig::by_name(config_name)?;
-    let bundle = Bundle::by_name(client, config_name)
-        .with_context(|| format!("artifact {config_name} (run `make artifacts`)"))?;
-    let dataset = data::build_lm(&cfg, &bundle.manifest)?;
-    let mut topts = TrainerOptions::from_config(&cfg, method);
-    topts.warm_start = warm;
-    if let Some(s) = opts.steps_override {
-        topts.total_steps = s;
-    }
-    // packing + epoch shuffling runs on the prefetch thread, overlapped
-    // with device execution (same batch stream as draining inline)
-    let mut source = Prefetcher::spawn(dataset.train, topts.pipeline.prefetch_batches);
-    let trained: TrainedModel =
-        trainer::run_source_and_keep(&bundle, &cfg, &topts, &mut source, &dataset.val)?;
-    let suites = benchmarks::lm_suites(&dataset.vocab, opts.bench_seed, opts.questions);
-    let accuracies = harness::score_suites(&trained.session, &suites)?;
-    if opts.verbose {
-        let avg = accuracies.last().map(|a| a.1).unwrap_or(f64::NAN);
-        println!(
-            "[{config_name}/{}] steps={} wall={:.2}s val_loss={:.4} frozen={}/{} avg_acc={avg:.2}%",
-            method.label(),
-            trained.outcome.steps_run,
-            trained.outcome.wall_secs,
-            trained.outcome.final_val_loss,
-            trained.outcome.freeze.n_frozen(),
-            trained.outcome.freeze.n(),
-        );
-    }
-    Ok(JobResult { config: config_name.to_string(), method, outcome: trained.outcome, accuracies })
-}
-
-/// VLM job: train on scene/caption batches, score the requested suites.
-pub enum VlmSuiteKind {
-    /// Table 2: GQA/VQAv2/COCO analogues.
-    Main,
-    /// Table 3: six nanoVLM-style categories.
-    Nano,
-}
-
-pub fn run_vlm_job(
-    client: &Client,
-    config_name: &str,
-    method: StoppingMethod,
-    kind: VlmSuiteKind,
-    warm: Option<Arc<BaseCheckpoint>>,
-    opts: &ExpOptions,
-) -> Result<JobResult> {
-    let cfg = RepoConfig::by_name(config_name)?;
-    let bundle = Bundle::by_name(client, config_name)?;
-    let dataset = data::build_vlm(&cfg, &bundle.manifest)?;
-    let mut topts = TrainerOptions::from_config(&cfg, method);
-    topts.warm_start = warm;
-    if let Some(s) = opts.steps_override {
-        topts.total_steps = s;
-    }
-    let mut source = Prefetcher::spawn(
-        FixedCycle::new(dataset.train.clone()),
-        topts.pipeline.prefetch_batches,
-    );
-    let trained = trainer::run_source_and_keep(&bundle, &cfg, &topts, &mut source, &dataset.val)?;
-    let suites = match kind {
-        VlmSuiteKind::Main => {
-            benchmarks::vlm_suites(&dataset.scene_cfg, &dataset.vocab, opts.bench_seed, opts.questions)
-        }
-        VlmSuiteKind::Nano => benchmarks::nanovlm_suites(
-            &dataset.scene_cfg,
-            &dataset.vocab,
-            opts.bench_seed,
-            opts.questions,
-        ),
-    };
-    let accuracies = harness::score_suites(&trained.session, &suites)?;
-    if opts.verbose {
-        let avg = accuracies.last().map(|a| a.1).unwrap_or(f64::NAN);
-        println!(
-            "[{config_name}/{}] steps={} wall={:.2}s avg_acc={avg:.2}%",
-            method.label(),
-            trained.outcome.steps_run,
-            trained.outcome.wall_secs,
-        );
-    }
-    Ok(JobResult { config: config_name.to_string(), method, outcome: trained.outcome, accuracies })
 }
 
 /// Paper-style method label for a (artifact-method, stopping) pair.

@@ -1,0 +1,535 @@
+//! Declarative experiment plans: jobs as data.
+//!
+//! A [`JobSpec`] names *what* to run — config, stopping method, config
+//! mutations (τ/α overrides, metric/granularity swaps), eval-suite kind —
+//! and a [`JobGraph`] wires specs together with dependency edges (a
+//! pretrain job feeding its `BaseCheckpoint` to the fine-tuning jobs that
+//! consume it). The graph is pure host data: building and validating one
+//! touches no client, which is what makes the scheduler's ordering,
+//! resume and equality properties testable without artifacts.
+//!
+//! Invariant: a job's dependencies must already be in the graph when the
+//! job is added, so `deps[i] < i` always holds — insertion order is a
+//! topological order, cycles are unrepresentable, and the `--jobs 1`
+//! executor can simply walk the vector.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::config::RepoConfig;
+use crate::coordinator::trainer::StoppingMethod;
+
+/// Index of a job inside its [`JobGraph`].
+pub type JobId = usize;
+
+/// A single config mutation applied on top of the named config before a
+/// job runs (the ablation grid's τ×α cells, the design-choice swaps).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ConfigPatch {
+    Tau(f64),
+    Alpha(f64),
+    Metric(String),
+    Granularity(String),
+}
+
+impl ConfigPatch {
+    pub fn apply(&self, cfg: &mut RepoConfig) {
+        match self {
+            ConfigPatch::Tau(v) => cfg.grades.tau = *v,
+            ConfigPatch::Alpha(v) => cfg.grades.alpha = *v,
+            ConfigPatch::Metric(s) => cfg.grades.metric = s.clone(),
+            ConfigPatch::Granularity(s) => cfg.grades.granularity = s.clone(),
+        }
+    }
+
+    /// Stable key fragment for job ids ("tau=0.05").
+    pub fn key(&self) -> String {
+        match self {
+            ConfigPatch::Tau(v) => format!("tau={v}"),
+            ConfigPatch::Alpha(v) => format!("alpha={v}"),
+            ConfigPatch::Metric(s) => format!("metric={s}"),
+            ConfigPatch::Granularity(s) => format!("granularity={s}"),
+        }
+    }
+
+    /// Does this patch change what the *dataset* looks like? Every patch
+    /// today targets `[grades]`, so per-config datasets can be shared
+    /// across all cells of a grid; any future patch touching `[data]` or
+    /// the model shapes must return true here so the scheduler bypasses
+    /// its row cache for that job.
+    pub fn affects_data(&self) -> bool {
+        match self {
+            ConfigPatch::Tau(_)
+            | ConfigPatch::Alpha(_)
+            | ConfigPatch::Metric(_)
+            | ConfigPatch::Granularity(_) => false,
+        }
+    }
+}
+
+/// Which benchmark suites to score a trained job on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EvalKind {
+    /// The 8 LM paper-benchmark analogues (Table 1 row shape).
+    LmSuites,
+    /// Table 2: GQA/VQAv2/COCO analogues.
+    VlmMain,
+    /// Table 3: six nanoVLM-style categories.
+    VlmNano,
+    /// No scoring (pretrain jobs, figure-only runs).
+    None,
+}
+
+/// What a job fundamentally does.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobKind {
+    /// Produce a base checkpoint for dependents (LM or VLM is decided by
+    /// the artifact's manifest at execution time).
+    Pretrain,
+    /// Fine-tune (optionally from a warm checkpoint) and score.
+    Train,
+}
+
+/// One experiment job, declared as data.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    /// Unique, stable id — the run-manifest key a resumed run matches on.
+    pub id: String,
+    /// Config / artifact name (`configs/<name>.toml`, `artifacts/<name>/`).
+    pub config: String,
+    pub method: StoppingMethod,
+    pub patches: Vec<ConfigPatch>,
+    pub eval: EvalKind,
+    pub kind: JobKind,
+    /// Jobs that must complete before this one starts.
+    pub deps: Vec<JobId>,
+    /// Dependency whose checkpoint warm-starts this job (must be in `deps`).
+    pub warm_from: Option<JobId>,
+    /// Per-job total-steps override; takes precedence over the global
+    /// `ExpOptions::steps_override`.
+    pub steps: Option<usize>,
+    /// Probe-cadence override (figure jobs probe every step).
+    pub probe_every: Option<usize>,
+    /// Persist the result to the run manifest and skip the job when a
+    /// resumed run already has it. Figure-series jobs opt out: their value
+    /// is the full in-memory metrics log, which the manifest doesn't keep.
+    pub persist: bool,
+}
+
+impl JobSpec {
+    pub fn pretrain(id: impl Into<String>, config: impl Into<String>) -> Self {
+        JobSpec {
+            id: id.into(),
+            config: config.into(),
+            method: StoppingMethod::None,
+            patches: Vec::new(),
+            eval: EvalKind::None,
+            kind: JobKind::Pretrain,
+            deps: Vec::new(),
+            warm_from: None,
+            steps: None,
+            probe_every: None,
+            persist: false,
+        }
+    }
+
+    pub fn train(
+        id: impl Into<String>,
+        config: impl Into<String>,
+        method: StoppingMethod,
+        eval: EvalKind,
+    ) -> Self {
+        JobSpec {
+            id: id.into(),
+            config: config.into(),
+            method,
+            patches: Vec::new(),
+            eval,
+            kind: JobKind::Train,
+            deps: Vec::new(),
+            warm_from: None,
+            steps: None,
+            probe_every: None,
+            persist: true,
+        }
+    }
+
+    pub fn with_patches(mut self, patches: Vec<ConfigPatch>) -> Self {
+        self.patches = patches;
+        self
+    }
+
+    /// Warm-start from `dep`'s checkpoint (also records the edge).
+    pub fn warm(mut self, dep: JobId) -> Self {
+        if !self.deps.contains(&dep) {
+            self.deps.push(dep);
+        }
+        self.warm_from = Some(dep);
+        self
+    }
+
+    pub fn after(mut self, dep: JobId) -> Self {
+        if !self.deps.contains(&dep) {
+            self.deps.push(dep);
+        }
+        self
+    }
+
+    pub fn with_steps(mut self, steps: usize) -> Self {
+        self.steps = Some(steps);
+        self
+    }
+
+    pub fn with_probe_every(mut self, every: usize) -> Self {
+        self.probe_every = Some(every);
+        self
+    }
+
+    /// Never persist/resume this job (see [`JobSpec::persist`]).
+    pub fn ephemeral(mut self) -> Self {
+        self.persist = false;
+        self
+    }
+
+    /// Do any of this job's patches invalidate a shared per-config dataset?
+    pub fn needs_fresh_data(&self) -> bool {
+        self.patches.iter().any(|p| p.affects_data())
+    }
+}
+
+/// A dependency-ordered set of jobs.
+#[derive(Debug, Default)]
+pub struct JobGraph {
+    pub jobs: Vec<JobSpec>,
+}
+
+impl JobGraph {
+    pub fn new() -> Self {
+        JobGraph::default()
+    }
+
+    /// Add a spec; its deps must already be present (acyclic by
+    /// construction) and its id unique.
+    pub fn add(&mut self, spec: JobSpec) -> Result<JobId> {
+        let idx = self.jobs.len();
+        for &d in &spec.deps {
+            ensure!(d < idx, "job {:?}: dependency {d} not yet in graph", spec.id);
+        }
+        if let Some(w) = spec.warm_from {
+            ensure!(spec.deps.contains(&w), "job {:?}: warm_from {w} missing from deps", spec.id);
+        }
+        if self.jobs.iter().any(|j| j.id == spec.id) {
+            bail!("duplicate job id {:?}", spec.id);
+        }
+        self.jobs.push(spec);
+        Ok(idx)
+    }
+
+    pub fn get(&self, id: JobId) -> &JobSpec {
+        &self.jobs[id]
+    }
+
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+
+    /// Direct dependents of each job.
+    pub fn children(&self) -> Vec<Vec<JobId>> {
+        let mut out = vec![Vec::new(); self.jobs.len()];
+        for (i, j) in self.jobs.iter().enumerate() {
+            for &d in &j.deps {
+                out[d].push(i);
+            }
+        }
+        out
+    }
+
+    /// Re-check the construction invariants (defense for hand-built specs).
+    pub fn validate(&self) -> Result<()> {
+        let mut seen = std::collections::BTreeSet::new();
+        for (i, j) in self.jobs.iter().enumerate() {
+            ensure!(seen.insert(&j.id), "duplicate job id {:?}", j.id);
+            for &d in &j.deps {
+                ensure!(d < i, "job {:?} depends forward on {d}", j.id);
+            }
+            if let Some(w) = j.warm_from {
+                ensure!(j.deps.contains(&w), "job {:?}: warm_from not a dep", j.id);
+            }
+        }
+        Ok(())
+    }
+
+    /// Unique config names in first-use order.
+    pub fn configs(&self) -> Vec<String> {
+        let mut out: Vec<String> = Vec::new();
+        for j in &self.jobs {
+            if !out.iter().any(|c| *c == j.config) {
+                out.push(j.config.clone());
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Plan builders — one per experiment driver.
+// ---------------------------------------------------------------------------
+
+/// Slots mapping LM-matrix jobs back to their table positions.
+pub struct MatrixSlots {
+    /// (scale display name, artifact method "fp"/"lora", job).
+    pub jobs: Vec<(String, String, JobId)>,
+}
+
+const MATRIX_METHODS: [StoppingMethod; 3] =
+    [StoppingMethod::None, StoppingMethod::ClassicEs, StoppingMethod::GradEs];
+
+/// Tables 1 & 4 + Figure 3: per scale, one pretrain feeding
+/// {fp, lora} × {base, +ES, +GradES}.
+pub fn lm_matrix_plan(scales: &[(&str, &str, &str)]) -> Result<(JobGraph, MatrixSlots)> {
+    let mut g = JobGraph::new();
+    let mut slots = MatrixSlots { jobs: Vec::new() };
+    for (display, fp_cfg, lora_cfg) in scales {
+        let pre = g.add(JobSpec::pretrain(format!("lm/{fp_cfg}/pretrain"), *fp_cfg))?;
+        for (am, cfg_name) in [("fp", *fp_cfg), ("lora", *lora_cfg)] {
+            for method in MATRIX_METHODS {
+                let id = g.add(
+                    JobSpec::train(
+                        format!("lm/{cfg_name}/{}", method.label()),
+                        cfg_name,
+                        method,
+                        EvalKind::LmSuites,
+                    )
+                    .warm(pre),
+                )?;
+                slots.jobs.push((display.to_string(), am.to_string(), id));
+            }
+        }
+    }
+    Ok((g, slots))
+}
+
+/// Slots for the VLM driver (Tables 2/3/5, Figure 4b).
+pub struct VlmSlots {
+    /// Table 2/5 jobs: (artifact method, job), in render order.
+    pub main: Vec<(String, JobId)>,
+    pub nano_base: JobId,
+    pub nano_grades: JobId,
+}
+
+/// Tables 2/5 on vlm-tiny {fp, lora} × {base, +GradES}, plus the
+/// vlm-nano ± GradES pair for Table 3. `pre_steps` is the pretrain budget
+/// (the driver passes `steps_override.unwrap_or(300)`, matching the
+/// pre-scheduler behaviour).
+pub fn vlm_plan(pre_steps: usize) -> Result<(JobGraph, VlmSlots)> {
+    let mut g = JobGraph::new();
+    let pre =
+        g.add(JobSpec::pretrain("vlm/vlm-tiny-fp/pretrain", "vlm-tiny-fp").with_steps(pre_steps))?;
+    let mut main = Vec::new();
+    for (am, cfg_name) in [("fp", "vlm-tiny-fp"), ("lora", "vlm-tiny-lora")] {
+        for method in [StoppingMethod::None, StoppingMethod::GradEs] {
+            let id = g.add(
+                JobSpec::train(
+                    format!("vlm/{cfg_name}/{}", method.label()),
+                    cfg_name,
+                    method,
+                    EvalKind::VlmMain,
+                )
+                .warm(pre),
+            )?;
+            main.push((am.to_string(), id));
+        }
+    }
+    let nano_pre =
+        g.add(JobSpec::pretrain("vlm/vlm-nano/pretrain", "vlm-nano").with_steps(pre_steps))?;
+    let nano_base = g.add(
+        JobSpec::train("vlm/vlm-nano/base", "vlm-nano", StoppingMethod::None, EvalKind::VlmNano)
+            .warm(nano_pre),
+    )?;
+    let nano_grades = g.add(
+        JobSpec::train("vlm/vlm-nano/grades", "vlm-nano", StoppingMethod::GradEs, EvalKind::VlmNano)
+            .warm(nano_pre),
+    )?;
+    Ok((g, VlmSlots { main, nano_base, nano_grades }))
+}
+
+/// Slots for the ablation driver (Tables 6 & 7 + design-choice tables).
+pub struct AblationSlots {
+    /// Row-major τ×α grid job ids (τ outer, α inner).
+    pub grid: Vec<JobId>,
+    /// (metric name, job) pairs.
+    pub metric: Vec<(String, JobId)>,
+    /// (granularity name, job) pairs.
+    pub granularity: Vec<(String, JobId)>,
+}
+
+/// The τ×α grid plus the metric / granularity design ablations, all on
+/// one config with GradES stopping. Every cell shares the config's
+/// compiled bundle, dataset rows and device-resident suites through the
+/// scheduler's per-config caches.
+pub fn ablation_plan(
+    config_name: &str,
+    taus: &[f64],
+    alphas: &[f64],
+) -> Result<(JobGraph, AblationSlots)> {
+    let mut g = JobGraph::new();
+    let mut grid = Vec::new();
+    for &tau in taus {
+        for &alpha in alphas {
+            let patches = vec![ConfigPatch::Tau(tau), ConfigPatch::Alpha(alpha)];
+            let id = format!(
+                "ablation/{config_name}/{}",
+                patches.iter().map(ConfigPatch::key).collect::<Vec<_>>().join(",")
+            );
+            grid.push(g.add(
+                JobSpec::train(id, config_name, StoppingMethod::GradEs, EvalKind::LmSuites)
+                    .with_patches(patches),
+            )?);
+        }
+    }
+    let mut metric = Vec::new();
+    for m in ["l1_diff", "l1_abs"] {
+        let patch = ConfigPatch::Metric(m.to_string());
+        let id = format!("ablation/{config_name}/{}", patch.key());
+        metric.push((
+            m.to_string(),
+            g.add(
+                JobSpec::train(id, config_name, StoppingMethod::GradEs, EvalKind::LmSuites)
+                    .with_patches(vec![patch]),
+            )?,
+        ));
+    }
+    let mut granularity = Vec::new();
+    for gr in ["matrix", "layer"] {
+        let patch = ConfigPatch::Granularity(gr.to_string());
+        let id = format!("ablation/{config_name}/{}", patch.key());
+        granularity.push((
+            gr.to_string(),
+            g.add(
+                JobSpec::train(id, config_name, StoppingMethod::GradEs, EvalKind::LmSuites)
+                    .with_patches(vec![patch]),
+            )?,
+        ));
+    }
+    Ok((g, AblationSlots { grid, metric, granularity }))
+}
+
+/// Figures 1 & 4a: a single monitor-off run probing every step. The job
+/// is ephemeral — its value is the full per-step metrics log, which the
+/// run manifest doesn't persist.
+pub fn fig1_plan(config_name: &str) -> Result<(JobGraph, JobId)> {
+    let mut g = JobGraph::new();
+    let id = g.add(
+        JobSpec::train(
+            format!("fig1/{config_name}"),
+            config_name,
+            StoppingMethod::None,
+            EvalKind::None,
+        )
+        .with_probe_every(1)
+        .ephemeral(),
+    )?;
+    Ok((g, id))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn patches_apply_and_key() {
+        let mut cfg = RepoConfig::by_name("lm-tiny-fp").unwrap();
+        ConfigPatch::Tau(0.2).apply(&mut cfg);
+        ConfigPatch::Alpha(0.6).apply(&mut cfg);
+        ConfigPatch::Metric("l1_abs".into()).apply(&mut cfg);
+        ConfigPatch::Granularity("layer".into()).apply(&mut cfg);
+        assert!((cfg.grades.tau - 0.2).abs() < 1e-12);
+        assert!((cfg.grades.alpha - 0.6).abs() < 1e-12);
+        assert_eq!(cfg.grades.metric, "l1_abs");
+        assert_eq!(cfg.grades.granularity, "layer");
+        assert_eq!(ConfigPatch::Tau(0.05).key(), "tau=0.05");
+        assert!(!ConfigPatch::Tau(0.05).affects_data());
+    }
+
+    #[test]
+    fn graph_rejects_forward_deps_and_dup_ids() {
+        let mut g = JobGraph::new();
+        let a = g.add(JobSpec::pretrain("pre", "lm-tiny-fp")).unwrap();
+        assert!(g
+            .add(JobSpec::train("t", "lm-tiny-fp", StoppingMethod::GradEs, EvalKind::LmSuites)
+                .warm(5))
+            .is_err());
+        g.add(JobSpec::train("t", "lm-tiny-fp", StoppingMethod::GradEs, EvalKind::LmSuites)
+            .warm(a))
+            .unwrap();
+        assert!(g.add(JobSpec::pretrain("pre", "lm-tiny-fp")).is_err());
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn children_mirror_deps() {
+        let mut g = JobGraph::new();
+        let pre = g.add(JobSpec::pretrain("pre", "c")).unwrap();
+        let a = g
+            .add(JobSpec::train("a", "c", StoppingMethod::None, EvalKind::None).warm(pre))
+            .unwrap();
+        let b = g
+            .add(JobSpec::train("b", "c", StoppingMethod::None, EvalKind::None).warm(pre))
+            .unwrap();
+        assert_eq!(g.children()[pre], vec![a, b]);
+        assert!(g.children()[a].is_empty());
+    }
+
+    #[test]
+    fn lm_matrix_plan_shape() {
+        let scales = [("tiny", "lm-tiny-fp", "lm-tiny-lora"), ("small", "lm-small-fp", "lm-small-lora")];
+        let (g, slots) = lm_matrix_plan(&scales).unwrap();
+        // per scale: 1 pretrain + 6 train jobs
+        assert_eq!(g.len(), 2 * 7);
+        assert_eq!(slots.jobs.len(), 2 * 6);
+        g.validate().unwrap();
+        for (_, _, id) in &slots.jobs {
+            let spec = g.get(*id);
+            assert_eq!(spec.kind, JobKind::Train);
+            let w = spec.warm_from.expect("matrix jobs warm-start");
+            assert_eq!(g.get(w).kind, JobKind::Pretrain);
+        }
+        // ids are unique and stable
+        assert_eq!(g.get(slots.jobs[0].2).id, "lm/lm-tiny-fp/base");
+    }
+
+    #[test]
+    fn ablation_plan_shape() {
+        let taus = [0.01, 0.05];
+        let alphas = [0.1, 0.3, 0.5];
+        let (g, slots) = ablation_plan("lm-tiny-fp", &taus, &alphas).unwrap();
+        assert_eq!(slots.grid.len(), 6);
+        assert_eq!(g.len(), 6 + 2 + 2);
+        g.validate().unwrap();
+        assert_eq!(g.get(slots.grid[1]).id, "ablation/lm-tiny-fp/tau=0.01,alpha=0.3");
+        // no dependencies anywhere: the whole grid is ready at once
+        assert!(g.jobs.iter().all(|j| j.deps.is_empty()));
+    }
+
+    #[test]
+    fn vlm_plan_shape() {
+        let (g, slots) = vlm_plan(300).unwrap();
+        assert_eq!(g.len(), 2 + 4 + 2);
+        assert_eq!(slots.main.len(), 4);
+        g.validate().unwrap();
+        assert_eq!(g.get(slots.nano_base).eval, EvalKind::VlmNano);
+        assert_eq!(g.get(g.get(slots.nano_base).warm_from.unwrap()).steps, Some(300));
+    }
+
+    #[test]
+    fn fig1_plan_is_ephemeral_full_probe() {
+        let (g, id) = fig1_plan("lm-tiny-fp").unwrap();
+        assert_eq!(g.len(), 1);
+        assert!(!g.get(id).persist);
+        assert_eq!(g.get(id).probe_every, Some(1));
+        assert_eq!(g.get(id).eval, EvalKind::None);
+    }
+}

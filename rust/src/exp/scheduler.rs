@@ -1,0 +1,1286 @@
+//! The experiment-job scheduler: runs a [`JobGraph`] on a bounded worker
+//! pool over one shared PJRT client, with resumable results.
+//!
+//! # Execution model
+//!
+//! Ready jobs (all dependencies resolved) are pulled from a queue by up
+//! to `--jobs` workers. Each job has a **host phase** — dataset rows,
+//! benchmark packing, config patching, all plain data — and a **device
+//! phase** — compile/train/score through the client. Host phases of
+//! different jobs run concurrently; device phases are serialized behind
+//! one exclusive *device token* (a mutex around [`DeviceArena`]): the
+//! `xla` binding's client handles carry non-atomic refcounts that every
+//! upload, execution and buffer drop touches, so two threads may never
+//! drive the same client at once (see `runtime::session`'s thread-safety
+//! contract — this is the Send audit's conclusion). On the CPU backend
+//! this costs little: a single train step already saturates the cores
+//! through PJRT's own thread pool, so the scheduler's wins are overlap of
+//! host-side work, shared compiles/datasets/suites, and resumability.
+//!
+//! Behind the token live the per-config caches: a [`BundleCache`]
+//! (compile once — the token doubles as the compile lock) and the
+//! device-resident benchmark suites (upload once per config). Outside it
+//! live the host caches: per-config dataset rows and packed suites.
+//!
+//! # Determinism
+//!
+//! A job's trajectory depends only on its spec (config + patches + seed +
+//! warm checkpoint), never on scheduling order, and drivers render tables
+//! in *plan* order — so `--jobs 1` and `--jobs N` produce byte-identical
+//! tables, and `--jobs 1` reproduces the pre-scheduler sequential loops.
+//!
+//! # Resume
+//!
+//! Every completed persistent job is summarized into a run-manifest JSON
+//! under `--out` (atomic tmp+rename after each completion). A re-run
+//! loads the manifest and skips finished jobs, reconstructing their table
+//! rows from the summaries; pretrain jobs resume through the checkpoint
+//! disk cache in `coordinator::warmstart` instead, and are elided
+//! entirely when every dependent is already done.
+//!
+//! # Failure isolation
+//!
+//! Worker panics and job errors are caught per job: the job is marked
+//! failed, its transitive dependents are skipped, and the rest of the
+//! graph keeps running. Failed jobs are not persisted, so a re-run
+//! retries exactly them.
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use super::plan::{EvalKind, JobGraph, JobId, JobKind, JobSpec};
+use super::{ExpOptions, JobResult};
+use crate::config::RepoConfig;
+use crate::coordinator::freeze::{FreezeReason, FreezeState};
+use crate::coordinator::metrics::{MetricsLog, StepRecord};
+use crate::coordinator::trainer::{self, StopCause, StoppingMethod, TrainOutcome, TrainerOptions};
+use crate::coordinator::warmstart::{self, BaseCheckpoint};
+use crate::data;
+use crate::eval::benchmarks;
+use crate::eval::harness::{self, DeviceSuite, PackedSuite};
+use crate::runtime::artifact::{BundleCache, Client};
+use crate::runtime::manifest::Manifest;
+use crate::runtime::pipeline::{FixedCycle, Prefetcher};
+use crate::runtime::session::Session;
+use crate::util::json::{self, Json};
+
+// ---------------------------------------------------------------------------
+// Options
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct SchedulerOptions {
+    /// Worker count (1 = run inline on the calling thread, in plan order).
+    pub jobs: usize,
+    /// Run-manifest path for persistence/resume (None = no persistence).
+    pub manifest_path: Option<PathBuf>,
+    /// Skip completed jobs found in the manifest. Off (`--fresh`), the
+    /// manifest is still loaded and rewritten — entries from *other*
+    /// targets sharing the file are preserved — it just never skips.
+    pub resume: bool,
+    /// Fingerprint of the run-wide settings that shape a job's numbers
+    /// (steps override, question count, bench seed — see
+    /// `ExpOptions::settings_fingerprint`). A manifest entry only resumes
+    /// when its recorded fingerprint matches, so cells produced under
+    /// `--quick`/`--steps` are never silently reused by a full run.
+    pub settings: String,
+    pub verbose: bool,
+}
+
+impl Default for SchedulerOptions {
+    fn default() -> Self {
+        SchedulerOptions {
+            jobs: 1,
+            manifest_path: None,
+            resume: true,
+            settings: String::new(),
+            verbose: false,
+        }
+    }
+}
+
+/// The full settings fingerprint for one job: the run-wide part plus the
+/// spec's own overrides. Must be identical between the run that wrote a
+/// summary and the run trying to resume from it.
+pub fn job_settings(spec: &JobSpec, global: &str) -> String {
+    format!("{global}|steps={:?}|probe={:?}", spec.steps, spec.probe_every)
+}
+
+/// Effective worker count: `--jobs` flag wins, then the `GRADES_JOBS`
+/// environment value, then 1 (sequential). Always at least 1.
+pub fn resolve_jobs(flag: Option<usize>, env: Option<&str>) -> usize {
+    flag.or_else(|| env.and_then(|v| v.trim().parse().ok())).unwrap_or(1).max(1)
+}
+
+// ---------------------------------------------------------------------------
+// Run manifest: persisted per-job summaries
+// ---------------------------------------------------------------------------
+
+/// Everything the drivers need to re-render a completed job's table cells
+/// (and the small figure series) without re-running it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSummary {
+    pub id: String,
+    pub config: String,
+    /// Settings fingerprint the job ran under (see [`job_settings`]).
+    pub settings: String,
+    /// `StoppingMethod::label()` string.
+    pub method: String,
+    pub steps_run: usize,
+    /// "budget" | "frozen" | "patience".
+    pub stop_cause: String,
+    pub wall_secs: f64,
+    pub validation_secs: f64,
+    pub monitor_secs: f64,
+    pub final_val_loss: f64,
+    pub variant_swap_step: Option<usize>,
+    pub flops_spent: f64,
+    pub flops_dense: f64,
+    pub flops_validation: f64,
+    pub flops_steps: usize,
+    pub n_components: usize,
+    /// Component indices frozen at the end of the run.
+    pub frozen: Vec<usize>,
+    /// (suite name, accuracy %) pairs ending with ("Avg.", …).
+    pub accuracies: Vec<(String, f64)>,
+    /// (step, frozen fraction) — the Figure 3 series.
+    pub frozen_series: Vec<(usize, f64)>,
+    /// VLM only: (vision, language) mean |∇W|₁ series — the Figure 4b
+    /// series, precomputed so a resumed run can still render the chart.
+    pub tower_gabs: Option<(Vec<(f64, f64)>, Vec<(f64, f64)>)>,
+}
+
+fn stop_cause_str(c: StopCause) -> &'static str {
+    match c {
+        StopCause::BudgetExhausted => "budget",
+        StopCause::AllComponentsFrozen => "frozen",
+        StopCause::ValidationPatience => "patience",
+    }
+}
+
+fn parse_stop_cause(s: &str) -> Result<StopCause> {
+    match s {
+        "budget" => Ok(StopCause::BudgetExhausted),
+        "frozen" => Ok(StopCause::AllComponentsFrozen),
+        "patience" => Ok(StopCause::ValidationPatience),
+        other => bail!("unknown stop cause {other:?}"),
+    }
+}
+
+/// Mean |∇W|₁ over a component subset per logged step.
+fn tower_mean_series(log: &MetricsLog, idxs: &[usize]) -> Vec<(f64, f64)> {
+    if idxs.is_empty() {
+        return Vec::new();
+    }
+    log.records
+        .iter()
+        .filter(|r| !r.gabs.is_empty())
+        .map(|r| {
+            let sum: f64 =
+                idxs.iter().map(|&i| r.gabs.get(i).copied().unwrap_or(0.0) as f64).sum();
+            (r.step as f64, sum / idxs.len() as f64)
+        })
+        .collect()
+}
+
+/// NaN/±inf survive the JSON round trip as null.
+fn num_or_null(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else {
+        Json::Null
+    }
+}
+
+fn f64_or_nan(j: &Json) -> f64 {
+    j.as_f64().unwrap_or(f64::NAN)
+}
+
+fn series_to_json(s: &[(f64, f64)]) -> Json {
+    Json::Arr(s.iter().map(|&(a, b)| Json::Arr(vec![Json::Num(a), Json::Num(b)])).collect())
+}
+
+fn series_from_json(j: &Json) -> Result<Vec<(f64, f64)>> {
+    j.as_arr()?
+        .iter()
+        .map(|p| {
+            let p = p.as_arr()?;
+            ensure!(p.len() == 2, "series point is not a pair");
+            Ok((p[0].as_f64()?, p[1].as_f64()?))
+        })
+        .collect()
+}
+
+impl JobSummary {
+    /// Summarize a live result (called right after the job completes).
+    /// `settings` is the run-wide fingerprint (see [`job_settings`]).
+    pub fn from_result(
+        spec: &JobSpec,
+        r: &JobResult,
+        manifest: &Manifest,
+        settings: &str,
+    ) -> Self {
+        let o = &r.outcome;
+        let frozen = (0..o.freeze.n()).filter(|&c| o.freeze.is_frozen(c)).collect();
+        let frozen_series =
+            o.log.records.iter().map(|rec| (rec.step, rec.frozen_fraction)).collect();
+        let tower_gabs = if manifest.is_vlm() {
+            let vis = manifest.components_where(|c| c.tower == "vision");
+            let lang = manifest.components_where(|c| c.tower == "language");
+            Some((tower_mean_series(&o.log, &vis), tower_mean_series(&o.log, &lang)))
+        } else {
+            None
+        };
+        JobSummary {
+            id: spec.id.clone(),
+            config: r.config.clone(),
+            settings: job_settings(spec, settings),
+            method: r.method.label().to_string(),
+            steps_run: o.steps_run,
+            stop_cause: stop_cause_str(o.stop_cause).to_string(),
+            wall_secs: o.wall_secs,
+            validation_secs: o.validation_secs,
+            monitor_secs: o.monitor_secs,
+            final_val_loss: o.final_val_loss,
+            variant_swap_step: o.variant_swap_step,
+            flops_spent: o.flops.spent,
+            flops_dense: o.flops.dense_equivalent,
+            flops_validation: o.flops.validation,
+            flops_steps: o.flops.steps,
+            n_components: o.freeze.n(),
+            frozen,
+            accuracies: r.accuracies.clone(),
+            frozen_series,
+            tower_gabs,
+        }
+    }
+
+    /// Rebuild the driver-facing [`JobResult`] a resumed run renders from.
+    /// Table cells and figure series are exact; the full per-step metrics
+    /// log and runtime timings are not persisted and come back empty.
+    pub fn to_result(&self) -> Result<JobResult> {
+        let method = StoppingMethod::parse(&self.method)
+            .ok_or_else(|| anyhow!("unknown stopping method {:?}", self.method))?;
+        let mut freeze = FreezeState::new(self.n_components);
+        for &c in &self.frozen {
+            ensure!(c < self.n_components, "frozen index {c} out of range");
+            freeze.freeze(c, self.steps_run, FreezeReason::Converged, 0.0);
+        }
+        let mut log = MetricsLog::default();
+        for &(step, frac) in &self.frozen_series {
+            log.records.push(StepRecord {
+                step,
+                loss: f64::NAN,
+                lr: f64::NAN,
+                global_gnorm: f64::NAN,
+                frozen_fraction: frac,
+                gdiff: Vec::new(),
+                gabs: Vec::new(),
+            });
+        }
+        let outcome = TrainOutcome {
+            steps_run: self.steps_run,
+            stop_cause: parse_stop_cause(&self.stop_cause)?,
+            wall_secs: self.wall_secs,
+            validation_secs: self.validation_secs,
+            monitor_secs: self.monitor_secs,
+            flops: crate::coordinator::flops::FlopsCounter {
+                spent: self.flops_spent,
+                dense_equivalent: self.flops_dense,
+                validation: self.flops_validation,
+                steps: self.flops_steps,
+            },
+            log,
+            freeze,
+            final_val_loss: self.final_val_loss,
+            variant_swap_step: self.variant_swap_step,
+            timings: Default::default(),
+        };
+        Ok(JobResult {
+            config: self.config.clone(),
+            method,
+            outcome,
+            accuracies: self.accuracies.clone(),
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("id".to_string(), Json::Str(self.id.clone()));
+        m.insert("config".to_string(), Json::Str(self.config.clone()));
+        m.insert("settings".to_string(), Json::Str(self.settings.clone()));
+        m.insert("method".to_string(), Json::Str(self.method.clone()));
+        m.insert("steps_run".to_string(), Json::Num(self.steps_run as f64));
+        m.insert("stop_cause".to_string(), Json::Str(self.stop_cause.clone()));
+        m.insert("wall_secs".to_string(), num_or_null(self.wall_secs));
+        m.insert("validation_secs".to_string(), num_or_null(self.validation_secs));
+        m.insert("monitor_secs".to_string(), num_or_null(self.monitor_secs));
+        m.insert("final_val_loss".to_string(), num_or_null(self.final_val_loss));
+        if let Some(s) = self.variant_swap_step {
+            m.insert("variant_swap_step".to_string(), Json::Num(s as f64));
+        }
+        m.insert("flops_spent".to_string(), num_or_null(self.flops_spent));
+        m.insert("flops_dense".to_string(), num_or_null(self.flops_dense));
+        m.insert("flops_validation".to_string(), num_or_null(self.flops_validation));
+        m.insert("flops_steps".to_string(), Json::Num(self.flops_steps as f64));
+        m.insert("n_components".to_string(), Json::Num(self.n_components as f64));
+        m.insert(
+            "frozen".to_string(),
+            Json::Arr(self.frozen.iter().map(|&c| Json::Num(c as f64)).collect()),
+        );
+        m.insert(
+            "accuracies".to_string(),
+            Json::Arr(
+                self.accuracies
+                    .iter()
+                    .map(|(n, v)| Json::Arr(vec![Json::Str(n.clone()), num_or_null(*v)]))
+                    .collect(),
+            ),
+        );
+        m.insert(
+            "frozen_series".to_string(),
+            Json::Arr(
+                self.frozen_series
+                    .iter()
+                    .map(|&(s, f)| Json::Arr(vec![Json::Num(s as f64), num_or_null(f)]))
+                    .collect(),
+            ),
+        );
+        if let Some((vis, lang)) = &self.tower_gabs {
+            let mut t = BTreeMap::new();
+            t.insert("vision".to_string(), series_to_json(vis));
+            t.insert("language".to_string(), series_to_json(lang));
+            m.insert("tower_gabs".to_string(), Json::Obj(t));
+        }
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let accuracies = j
+            .get("accuracies")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                let p = p.as_arr()?;
+                ensure!(p.len() == 2, "accuracy entry is not a pair");
+                Ok((p[0].as_str()?.to_string(), f64_or_nan(&p[1])))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let frozen = j
+            .get("frozen")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_usize())
+            .collect::<Result<Vec<_>>>()?;
+        let frozen_series = j
+            .get("frozen_series")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                let p = p.as_arr()?;
+                ensure!(p.len() == 2, "frozen-series point is not a pair");
+                Ok((p[0].as_usize()?, f64_or_nan(&p[1])))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let tower_gabs = match j.opt("tower_gabs") {
+            Some(t) => Some((
+                series_from_json(t.get("vision")?)?,
+                series_from_json(t.get("language")?)?,
+            )),
+            None => None,
+        };
+        Ok(JobSummary {
+            id: j.get("id")?.as_str()?.to_string(),
+            config: j.get("config")?.as_str()?.to_string(),
+            // pre-fingerprint manifests deserialize to a value that can
+            // never match a live fingerprint, so their entries just re-run
+            settings: match j.opt("settings") {
+                Some(v) => v.as_str()?.to_string(),
+                None => "<unrecorded>".to_string(),
+            },
+            method: j.get("method")?.as_str()?.to_string(),
+            steps_run: j.get("steps_run")?.as_usize()?,
+            stop_cause: j.get("stop_cause")?.as_str()?.to_string(),
+            wall_secs: f64_or_nan(j.get("wall_secs")?),
+            validation_secs: f64_or_nan(j.get("validation_secs")?),
+            monitor_secs: f64_or_nan(j.get("monitor_secs")?),
+            final_val_loss: f64_or_nan(j.get("final_val_loss")?),
+            variant_swap_step: match j.opt("variant_swap_step") {
+                Some(v) => Some(v.as_usize()?),
+                None => None,
+            },
+            flops_spent: f64_or_nan(j.get("flops_spent")?),
+            flops_dense: f64_or_nan(j.get("flops_dense")?),
+            flops_validation: f64_or_nan(j.get("flops_validation")?),
+            flops_steps: j.get("flops_steps")?.as_usize()?,
+            n_components: j.get("n_components")?.as_usize()?,
+            frozen,
+            accuracies,
+            frozen_series,
+            tower_gabs,
+        })
+    }
+}
+
+/// The on-disk record of completed jobs, keyed by job id. One file serves
+/// every repro target (ids are namespaced: `lm/…`, `vlm/…`, `ablation/…`).
+#[derive(Debug, Default)]
+pub struct RunManifest {
+    pub jobs: BTreeMap<String, JobSummary>,
+}
+
+impl RunManifest {
+    /// Load tolerantly: a missing or unreadable manifest is an empty one
+    /// (a resumed run should never be blocked by a corrupt file — it just
+    /// re-runs everything and rewrites it).
+    pub fn load(path: &Path) -> Self {
+        let src = match std::fs::read_to_string(path) {
+            Ok(s) => s,
+            Err(_) => return RunManifest::default(),
+        };
+        match Self::parse(&src) {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!("[scheduler] ignoring unreadable run manifest {path:?}: {e:#}");
+                RunManifest::default()
+            }
+        }
+    }
+
+    pub fn parse(src: &str) -> Result<Self> {
+        let j = json::parse(src)?;
+        ensure!(j.get("version")?.as_usize()? == 1, "unsupported run-manifest version");
+        let mut jobs = BTreeMap::new();
+        if let Json::Obj(entries) = j.get("jobs")? {
+            for (id, entry) in entries {
+                match JobSummary::from_json(entry) {
+                    Ok(s) => {
+                        jobs.insert(id.clone(), s);
+                    }
+                    Err(e) => eprintln!("[scheduler] skipping manifest entry {id:?}: {e:#}"),
+                }
+            }
+        }
+        Ok(RunManifest { jobs })
+    }
+
+    pub fn render(&self) -> String {
+        let mut jobs = BTreeMap::new();
+        for (k, v) in &self.jobs {
+            jobs.insert(k.clone(), v.to_json());
+        }
+        let mut root = BTreeMap::new();
+        root.insert("version".to_string(), Json::Num(1.0));
+        root.insert("jobs".to_string(), Json::Obj(jobs));
+        json::write(&Json::Obj(root))
+    }
+
+    /// Atomic save: write a sibling tmp file, then rename over the target.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(p) = path.parent() {
+            std::fs::create_dir_all(p)?;
+        }
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, self.render()).with_context(|| format!("writing {tmp:?}"))?;
+        std::fs::rename(&tmp, path).with_context(|| format!("renaming {tmp:?}"))?;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Executor
+// ---------------------------------------------------------------------------
+
+/// How a job ended up, in the report handed back to the driver.
+#[derive(Debug)]
+pub enum JobStatus {
+    /// Ran (or was resumed/elided). Pretrain jobs carry no table result.
+    Done { result: Option<JobResult>, summary: Option<JobSummary>, resumed: bool },
+    Failed(String),
+    /// A transitive dependency failed; the job never ran.
+    Skipped(String),
+}
+
+/// Per-job statuses, indexed by [`JobId`] (plan order).
+#[derive(Debug)]
+pub struct RunReport {
+    pub statuses: Vec<JobStatus>,
+}
+
+impl RunReport {
+    pub fn result(&self, id: JobId) -> Result<&JobResult> {
+        match &self.statuses[id] {
+            JobStatus::Done { result: Some(r), .. } => Ok(r),
+            JobStatus::Done { result: None, .. } => {
+                bail!("job {id} carries no table result (pretrain job, or already taken)")
+            }
+            JobStatus::Failed(e) => bail!("job {id} failed: {e}"),
+            JobStatus::Skipped(e) => bail!("job {id} skipped: {e}"),
+        }
+    }
+
+    /// Move a result out of the report (drivers that build owned tables).
+    pub fn take_result(&mut self, id: JobId) -> Result<JobResult> {
+        match &mut self.statuses[id] {
+            JobStatus::Done { result, .. } => result
+                .take()
+                .ok_or_else(|| anyhow!("job {id} carries no table result (pretrain or taken)")),
+            JobStatus::Failed(e) => bail!("job {id} failed: {e}"),
+            JobStatus::Skipped(e) => bail!("job {id} skipped: {e}"),
+        }
+    }
+
+    pub fn summary(&self, id: JobId) -> Result<&JobSummary> {
+        match &self.statuses[id] {
+            JobStatus::Done { summary: Some(s), .. } => Ok(s),
+            JobStatus::Done { summary: None, .. } => bail!("job {id} has no summary"),
+            JobStatus::Failed(e) => bail!("job {id} failed: {e}"),
+            JobStatus::Skipped(e) => bail!("job {id} skipped: {e}"),
+        }
+    }
+
+    /// Fail loudly (listing every broken job) if anything did not finish.
+    pub fn require_ok(&self, graph: &JobGraph) -> Result<()> {
+        let mut broken = Vec::new();
+        for (i, s) in self.statuses.iter().enumerate() {
+            match s {
+                JobStatus::Done { .. } => {}
+                JobStatus::Failed(e) => broken.push(format!("{}: FAILED: {e}", graph.get(i).id)),
+                JobStatus::Skipped(e) => broken.push(format!("{}: skipped: {e}", graph.get(i).id)),
+            }
+        }
+        if !broken.is_empty() {
+            bail!(
+                "{} of {} jobs did not complete (completed cells are saved in the run \
+                 manifest; re-run to retry only the rest):\n  {}",
+                broken.len(),
+                self.statuses.len(),
+                broken.join("\n  ")
+            );
+        }
+        Ok(())
+    }
+
+    pub fn counts(&self) -> (usize, usize, usize, usize) {
+        let (mut ran, mut resumed, mut failed, mut skipped) = (0, 0, 0, 0);
+        for s in &self.statuses {
+            match s {
+                JobStatus::Done { resumed: true, .. } => resumed += 1,
+                JobStatus::Done { resumed: false, .. } => ran += 1,
+                JobStatus::Failed(_) => failed += 1,
+                JobStatus::Skipped(_) => skipped += 1,
+            }
+        }
+        (ran, resumed, failed, skipped)
+    }
+}
+
+/// What a runner hands back for one executed job.
+pub struct RunnerOutput {
+    /// Table-facing result (None for pretrain jobs).
+    pub result: Option<JobResult>,
+    /// Persisted summary (None when the spec is ephemeral or pretrain).
+    pub summary: Option<JobSummary>,
+    /// Checkpoint for dependents (pretrain jobs).
+    pub checkpoint: Option<Arc<BaseCheckpoint>>,
+}
+
+/// Executes a single job. The executor isolates panics, so a runner may
+/// panic without poisoning the pool. `Sync` because one runner instance
+/// is shared by every worker.
+pub trait JobRunner: Sync {
+    fn run(&self, spec: &JobSpec, warm: Option<Arc<BaseCheckpoint>>) -> Result<RunnerOutput>;
+}
+
+struct ExecState {
+    statuses: Vec<Option<JobStatus>>,
+    /// Unresolved-dependency count per job (resolved = any final status).
+    waiting: Vec<usize>,
+    ready: VecDeque<JobId>,
+    checkpoints: HashMap<JobId, Arc<BaseCheckpoint>>,
+    /// Jobs without a final status yet (0 ⇒ the run is over).
+    remaining: usize,
+    manifest: RunManifest,
+}
+
+struct ExecCore<'g, 'o> {
+    graph: &'g JobGraph,
+    children: Vec<Vec<JobId>>,
+    opts: &'o SchedulerOptions,
+    state: Mutex<ExecState>,
+    cv: Condvar,
+}
+
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+impl ExecCore<'_, '_> {
+    fn lock_state(&self) -> MutexGuard<'_, ExecState> {
+        // A panicking job poisons nothing semantically: state mutations
+        // are all single complete()/next_ready() critical sections.
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Block until a job is ready or the run is over.
+    fn next_ready(&self) -> Option<JobId> {
+        let mut st = self.lock_state();
+        loop {
+            if let Some(id) = st.ready.pop_front() {
+                return Some(id);
+            }
+            if st.remaining == 0 {
+                return None;
+            }
+            // Some unresolved job is running on another worker (every
+            // unresolved, unready job waits on one) — completion notifies.
+            st = self.cv.wait(st).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    fn take_warm(&self, spec: &JobSpec) -> Result<Option<Arc<BaseCheckpoint>>> {
+        match spec.warm_from {
+            None => Ok(None),
+            Some(d) => self
+                .lock_state()
+                .checkpoints
+                .get(&d)
+                .cloned()
+                .map(Some)
+                .ok_or_else(|| {
+                    anyhow!(
+                        "job {:?}: warm-start checkpoint from {:?} unavailable",
+                        spec.id,
+                        self.graph.get(d).id
+                    )
+                }),
+        }
+    }
+
+    /// Record a finished job, persist it, and unblock/skip dependents.
+    fn complete(&self, id: JobId, outcome: std::result::Result<RunnerOutput, String>) {
+        let spec = self.graph.get(id);
+        let mut st = self.lock_state();
+        debug_assert!(st.statuses[id].is_none(), "job resolved twice");
+        match outcome {
+            Ok(out) => {
+                if let Some(ck) = out.checkpoint {
+                    st.checkpoints.insert(id, ck);
+                }
+                if spec.persist {
+                    if let Some(sm) = &out.summary {
+                        st.manifest.jobs.insert(spec.id.clone(), sm.clone());
+                        if let Some(p) = &self.opts.manifest_path {
+                            if let Err(e) = st.manifest.save(p) {
+                                eprintln!("[scheduler] run-manifest save failed: {e:#}");
+                            }
+                        }
+                    }
+                }
+                st.statuses[id] =
+                    Some(JobStatus::Done { result: out.result, summary: out.summary, resumed: false });
+                st.remaining -= 1;
+                for &c in &self.children[id] {
+                    if st.statuses[c].is_none() {
+                        st.waiting[c] -= 1;
+                        if st.waiting[c] == 0 {
+                            st.ready.push_back(c);
+                        }
+                    }
+                }
+            }
+            Err(msg) => {
+                eprintln!("[{}] FAILED: {msg}", spec.id);
+                st.statuses[id] = Some(JobStatus::Failed(msg));
+                st.remaining -= 1;
+                // One failed job must not poison the pool: skip only its
+                // transitive dependents, keep everything else running.
+                let mut stack = self.children[id].clone();
+                while let Some(c) = stack.pop() {
+                    if st.statuses[c].is_none() {
+                        st.statuses[c] = Some(JobStatus::Skipped(format!(
+                            "dependency {:?} failed",
+                            spec.id
+                        )));
+                        st.remaining -= 1;
+                        stack.extend(self.children[c].iter().copied());
+                    }
+                }
+            }
+        }
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Run one job with panic isolation.
+    fn run_one(&self, runner: &dyn JobRunner, id: JobId) {
+        let spec = self.graph.get(id);
+        let warm = match self.take_warm(spec) {
+            Ok(w) => w,
+            Err(e) => {
+                self.complete(id, Err(format!("{e:#}")));
+                return;
+            }
+        };
+        let caught = catch_unwind(AssertUnwindSafe(move || runner.run(spec, warm)));
+        let outcome = match caught {
+            Ok(Ok(out)) => Ok(out),
+            Ok(Err(e)) => Err(format!("{e:#}")),
+            Err(p) => Err(format!("job panicked: {}", panic_msg(p.as_ref()))),
+        };
+        self.complete(id, outcome);
+    }
+}
+
+/// Execute a graph: resolve resumable jobs from the run manifest, then
+/// drive the rest on `opts.jobs` workers (or inline, in plan order, for
+/// `--jobs 1`).
+pub fn execute(
+    graph: &JobGraph,
+    opts: &SchedulerOptions,
+    runner: &dyn JobRunner,
+) -> Result<RunReport> {
+    graph.validate()?;
+    let n = graph.len();
+    let children = graph.children();
+    // Always load the existing manifest when one is configured: even with
+    // resume off (`--fresh`), saves rewrite the whole file, and entries
+    // belonging to *other* repro targets must survive. `opts.resume` only
+    // controls whether entries may skip jobs (the pre-pass below).
+    let manifest = match &opts.manifest_path {
+        Some(p) => RunManifest::load(p),
+        None => RunManifest::default(),
+    };
+
+    // Resume pre-pass: completed persistent jobs come back from their
+    // summaries; pretrain jobs whose dependents are all done are elided
+    // (otherwise they run and hit the warmstart disk cache).
+    let mut statuses: Vec<Option<JobStatus>> = (0..n).map(|_| None).collect();
+    for (i, spec) in graph.jobs.iter().enumerate() {
+        if spec.kind == JobKind::Train && spec.persist && opts.resume {
+            if let Some(s) = manifest.jobs.get(&spec.id) {
+                let want = job_settings(spec, &opts.settings);
+                if s.settings != want {
+                    eprintln!(
+                        "[scheduler] not resuming {:?}: recorded under different settings \
+                         ({:?} vs {want:?}); re-running",
+                        spec.id, s.settings
+                    );
+                    continue;
+                }
+                match s.to_result() {
+                    Ok(r) => {
+                        statuses[i] = Some(JobStatus::Done {
+                            result: Some(r),
+                            summary: Some(s.clone()),
+                            resumed: true,
+                        });
+                    }
+                    Err(e) => eprintln!(
+                        "[scheduler] manifest entry {:?} unusable ({e:#}); re-running",
+                        spec.id
+                    ),
+                }
+            }
+        }
+    }
+    for (i, spec) in graph.jobs.iter().enumerate() {
+        if spec.kind == JobKind::Pretrain
+            && !children[i].is_empty()
+            && children[i].iter().all(|&c| statuses[c].is_some())
+        {
+            statuses[i] = Some(JobStatus::Done { result: None, summary: None, resumed: true });
+        }
+    }
+
+    let resolved = statuses.iter().filter(|s| s.is_some()).count();
+    let remaining = n - resolved;
+    let mut waiting = vec![0usize; n];
+    let mut ready = VecDeque::new();
+    for (i, spec) in graph.jobs.iter().enumerate() {
+        if statuses[i].is_some() {
+            continue;
+        }
+        waiting[i] = spec.deps.iter().filter(|&&d| statuses[d].is_none()).count();
+        if waiting[i] == 0 {
+            ready.push_back(i);
+        }
+    }
+
+    let workers = opts.jobs.max(1).min(remaining.max(1));
+    if opts.verbose {
+        println!(
+            "[scheduler] {n} job(s): {remaining} to run, {resolved} resumed, {workers} worker(s)"
+        );
+    }
+
+    let core = ExecCore {
+        graph,
+        children,
+        opts,
+        state: Mutex::new(ExecState {
+            statuses,
+            waiting,
+            ready,
+            checkpoints: HashMap::new(),
+            remaining,
+            manifest,
+        }),
+        cv: Condvar::new(),
+    };
+
+    if workers <= 1 {
+        // Strict plan order — today's sequential driver loops, exactly.
+        for id in 0..n {
+            if core.lock_state().statuses[id].is_some() {
+                continue;
+            }
+            core.run_one(runner, id);
+        }
+    } else {
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| {
+                    while let Some(id) = core.next_ready() {
+                        core.run_one(runner, id);
+                    }
+                });
+            }
+        });
+    }
+
+    let st = core.state.into_inner().unwrap_or_else(|p| p.into_inner());
+    let statuses: Vec<JobStatus> =
+        st.statuses.into_iter().map(|s| s.expect("every job resolved")).collect();
+    let report = RunReport { statuses };
+    if opts.verbose {
+        let (ran, resumed, failed, skipped) = report.counts();
+        println!("[scheduler] done: {ran} ran, {resumed} resumed, {failed} failed, {skipped} skipped");
+    }
+    Ok(report)
+}
+
+// ---------------------------------------------------------------------------
+// The real runner: jobs over one shared client
+// ---------------------------------------------------------------------------
+
+/// Host-side resources for one config — everything derived from the
+/// config's `[data]` section and the manifest shapes. Built once per
+/// config and shared by every grid cell (plain data, freely `Sync`).
+struct HostRes {
+    cfg: RepoConfig,
+    manifest: Manifest,
+    lm: Option<data::LmRows>,
+    vlm: Option<data::VlmDataset>,
+}
+
+impl HostRes {
+    fn build(cfg: RepoConfig) -> Result<Self> {
+        let manifest_path = cfg.artifact_dir().join("manifest.json");
+        let manifest = Manifest::load(&manifest_path)
+            .with_context(|| format!("artifact {} (run `make artifacts`)", cfg.name))?;
+        let (lm, vlm) = if manifest.is_vlm() {
+            (None, Some(data::build_vlm(&cfg, &manifest)?))
+        } else {
+            (Some(data::build_lm_rows(&cfg, &manifest)?), None)
+        };
+        Ok(HostRes { cfg, manifest, lm, vlm })
+    }
+}
+
+/// Device-side per-config caches. Everything in here holds PJRT handles
+/// with non-atomic refcounts, so access is serialized by the mutex around
+/// [`DeviceShared`] — the scheduler's device token.
+struct DeviceArena {
+    bundles: BundleCache,
+    /// Device-resident benchmark suites, uploaded once per (config, kind).
+    suites: HashMap<(String, EvalKind), Vec<DeviceSuite>>,
+}
+
+/// Move-permission wrapper for the device arena.
+///
+/// SAFETY CONTRACT: the arena's contents (client, compiled executables,
+/// device buffers) are `!Send`/`!Sync` because the `xla` binding's
+/// handles carry non-atomic refcounts. They are only ever dereferenced
+/// while the owning `Mutex` is held, and every object created from them
+/// during a job (sessions, uploads, caches) is dropped before that guard
+/// is released — so no two threads ever touch the binding concurrently,
+/// which is the only invariant the missing `Send` bound protects.
+struct DeviceShared(DeviceArena);
+unsafe impl Send for DeviceShared {}
+
+/// [`JobRunner`] over real artifacts: one shared client, per-config
+/// bundle/dataset/suite caches, warmstart handoff via `Arc`.
+pub struct DeviceRunner<'a> {
+    opts: &'a ExpOptions,
+    device: Mutex<DeviceShared>,
+    hosts: Mutex<HashMap<String, Arc<HostRes>>>,
+    packed: Mutex<HashMap<(String, EvalKind), Arc<Vec<PackedSuite>>>>,
+}
+
+impl<'a> DeviceRunner<'a> {
+    pub fn new(client: &Client, opts: &'a ExpOptions) -> Self {
+        DeviceRunner {
+            opts,
+            device: Mutex::new(DeviceShared(DeviceArena {
+                bundles: BundleCache::new(client),
+                suites: HashMap::new(),
+            })),
+            hosts: Mutex::new(HashMap::new()),
+            packed: Mutex::new(HashMap::new()),
+        }
+    }
+
+    fn lock_device(&self) -> MutexGuard<'_, DeviceShared> {
+        self.device.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Per-config host resources (datasets). The map lock is held across
+    /// a build: concurrent first-touch of *different* configs serializes,
+    /// which is fine — builds are short next to training and this keeps
+    /// the cache trivially race-free.
+    fn host_res(&self, config: &str) -> Result<Arc<HostRes>> {
+        let mut map = self.hosts.lock().unwrap_or_else(|p| p.into_inner());
+        if let Some(h) = map.get(config) {
+            return Ok(h.clone());
+        }
+        let h = Arc::new(HostRes::build(RepoConfig::by_name(config)?)?);
+        map.insert(config.to_string(), h.clone());
+        Ok(h)
+    }
+
+    /// Packed (host-side) benchmark suites per (config, kind).
+    fn packed_suites(
+        &self,
+        config: &str,
+        kind: EvalKind,
+        host: &HostRes,
+    ) -> Result<Arc<Vec<PackedSuite>>> {
+        let key = (config.to_string(), kind);
+        let mut map = self.packed.lock().unwrap_or_else(|p| p.into_inner());
+        if let Some(p) = map.get(&key) {
+            return Ok(p.clone());
+        }
+        let suites = match kind {
+            EvalKind::LmSuites => {
+                let lm = host
+                    .lm
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("{config}: LM suites requested for a VLM artifact"))?;
+                benchmarks::lm_suites(&lm.vocab, self.opts.bench_seed, self.opts.questions)
+            }
+            EvalKind::VlmMain | EvalKind::VlmNano => {
+                let v = host
+                    .vlm
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("{config}: VLM suites requested for an LM artifact"))?;
+                if kind == EvalKind::VlmMain {
+                    benchmarks::vlm_suites(
+                        &v.scene_cfg,
+                        &v.vocab,
+                        self.opts.bench_seed,
+                        self.opts.questions,
+                    )
+                } else {
+                    benchmarks::nanovlm_suites(
+                        &v.scene_cfg,
+                        &v.vocab,
+                        self.opts.bench_seed,
+                        self.opts.questions,
+                    )
+                }
+            }
+            EvalKind::None => Vec::new(),
+        };
+        let packed = Arc::new(
+            suites
+                .iter()
+                .map(|s| PackedSuite::pack(&host.manifest, s))
+                .collect::<Result<Vec<_>>>()?,
+        );
+        map.insert(key, packed.clone());
+        Ok(packed)
+    }
+
+    fn run_pretrain(&self, spec: &JobSpec) -> Result<RunnerOutput> {
+        let steps = match spec.steps.or(self.opts.steps_override) {
+            Some(s) => s,
+            None => RepoConfig::by_name(&spec.config)?.run.total_steps,
+        };
+        let guard = self.lock_device();
+        let arena = &guard.0;
+        let bundle = arena.bundles.get(&spec.config)?;
+        let ck = if bundle.manifest.is_vlm() {
+            warmstart::pretrain_vlm_checkpoint_with(&bundle, &spec.config, steps)?
+        } else {
+            warmstart::pretrain_checkpoint_with(&bundle, &spec.config, steps)?
+        };
+        if self.opts.verbose {
+            println!("[{}] base checkpoint ready ({})", spec.id, ck.source);
+        }
+        Ok(RunnerOutput { result: None, summary: None, checkpoint: Some(Arc::new(ck)) })
+    }
+
+    fn run_train(
+        &self,
+        spec: &JobSpec,
+        warm: Option<Arc<BaseCheckpoint>>,
+    ) -> Result<RunnerOutput> {
+        // --- host phase: config, datasets, packed suites (no client) ---
+        let mut cfg = RepoConfig::by_name(&spec.config)?;
+        for p in &spec.patches {
+            p.apply(&mut cfg);
+        }
+        let host = if spec.needs_fresh_data() {
+            // A patch invalidated the shared dataset — build privately.
+            Arc::new(HostRes::build(cfg.clone())?)
+        } else {
+            self.host_res(&spec.config)?
+        };
+        let packed = match spec.eval {
+            EvalKind::None => None,
+            kind => Some(self.packed_suites(&spec.config, kind, &host)?),
+        };
+
+        // --- device phase: everything below holds the device token ---
+        let mut guard = self.lock_device();
+        let arena = &mut guard.0;
+        let bundle = arena.bundles.get(&spec.config)?;
+        let mut topts = TrainerOptions::from_config(&cfg, spec.method);
+        topts.warm_start = warm;
+        if let Some(s) = spec.steps.or(self.opts.steps_override) {
+            topts.total_steps = s;
+        }
+        if let Some(p) = spec.probe_every {
+            topts.probe_every = p;
+        }
+        let trained = if bundle.manifest.is_vlm() {
+            let v = host
+                .vlm
+                .as_ref()
+                .ok_or_else(|| anyhow!("{}: VLM artifact without VLM dataset", spec.config))?;
+            let mut source = Prefetcher::spawn(
+                FixedCycle::new(v.train.clone()),
+                topts.pipeline.prefetch_batches,
+            );
+            trainer::run_source_and_keep(&bundle, &cfg, &topts, &mut source, &v.val)?
+        } else {
+            let rows = host
+                .lm
+                .as_ref()
+                .ok_or_else(|| anyhow!("{}: LM artifact without LM dataset", spec.config))?;
+            let mut source = Prefetcher::spawn(
+                data::lm_train_iter(rows, &cfg, &bundle.manifest),
+                topts.pipeline.prefetch_batches,
+            );
+            trainer::run_source_and_keep(&bundle, &cfg, &topts, &mut source, &rows.val)?
+        };
+        let accuracies = match spec.eval {
+            EvalKind::None => Vec::new(),
+            kind => {
+                let key = (spec.config.clone(), kind);
+                if !arena.suites.contains_key(&key) {
+                    // Upload once per config through a stateless loader
+                    // session; the buffers then serve every cell's scoring.
+                    let loader = Session::new(&bundle);
+                    let packed = packed.as_ref().expect("packed suites built above");
+                    let dev: Vec<DeviceSuite> =
+                        packed.iter().map(|p| p.upload(&loader)).collect::<Result<_>>()?;
+                    arena.suites.insert(key.clone(), dev);
+                }
+                harness::score_device_suites(&trained.session, &arena.suites[&key])?
+            }
+        };
+        if self.opts.verbose {
+            let o = &trained.outcome;
+            let avg = accuracies.last().map(|a| a.1).unwrap_or(f64::NAN);
+            println!(
+                "[{}] steps={} wall={:.2}s val_loss={:.4} frozen={}/{} avg_acc={avg:.2}%",
+                spec.id,
+                o.steps_run,
+                o.wall_secs,
+                o.final_val_loss,
+                o.freeze.n_frozen(),
+                o.freeze.n(),
+            );
+        }
+        let result = JobResult {
+            config: spec.config.clone(),
+            method: spec.method,
+            outcome: trained.outcome,
+            accuracies,
+        };
+        let summary = spec.persist.then(|| {
+            JobSummary::from_result(
+                spec,
+                &result,
+                &bundle.manifest,
+                &self.opts.settings_fingerprint(),
+            )
+        });
+        Ok(RunnerOutput { result: Some(result), summary, checkpoint: None })
+    }
+}
+
+impl JobRunner for DeviceRunner<'_> {
+    fn run(&self, spec: &JobSpec, warm: Option<Arc<BaseCheckpoint>>) -> Result<RunnerOutput> {
+        match spec.kind {
+            JobKind::Pretrain => self.run_pretrain(spec),
+            JobKind::Train => self.run_train(spec, warm),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_summary() -> JobSummary {
+        JobSummary {
+            id: "ablation/x/tau=0.05,alpha=0.3".into(),
+            config: "lm-tiny-fp".into(),
+            settings: "g|steps=None|probe=None".into(),
+            method: "grades".into(),
+            steps_run: 120,
+            stop_cause: "frozen".into(),
+            wall_secs: 3.25,
+            validation_secs: 0.5,
+            monitor_secs: 0.1,
+            final_val_loss: 2.75,
+            variant_swap_step: Some(80),
+            flops_spent: 1.5e9,
+            flops_dense: 2.0e9,
+            flops_validation: 1.0e8,
+            flops_steps: 120,
+            n_components: 14,
+            frozen: vec![0, 3, 7],
+            accuracies: vec![("AgreeDet".into(), 61.5), ("Avg.".into(), 58.25)],
+            frozen_series: vec![(10, 0.0), (120, 0.9)],
+            tower_gabs: None,
+        }
+    }
+
+    #[test]
+    fn summary_json_round_trip() {
+        let s = sample_summary();
+        let back = JobSummary::from_json(&json::parse(&json::write(&s.to_json())).unwrap())
+            .unwrap();
+        assert_eq!(s, back);
+    }
+
+    #[test]
+    fn summary_round_trip_with_nan_and_towers() {
+        let mut s = sample_summary();
+        s.final_val_loss = f64::NAN;
+        s.variant_swap_step = None;
+        s.tower_gabs = Some((vec![(1.0, 0.5)], vec![(1.0, 1.25)]));
+        let back = JobSummary::from_json(&json::parse(&json::write(&s.to_json())).unwrap())
+            .unwrap();
+        assert!(back.final_val_loss.is_nan());
+        assert_eq!(back.variant_swap_step, None);
+        assert_eq!(back.tower_gabs, s.tower_gabs);
+    }
+
+    #[test]
+    fn summary_reconstructs_result() {
+        let s = sample_summary();
+        let r = s.to_result().unwrap();
+        assert_eq!(r.method, StoppingMethod::GradEs);
+        assert_eq!(r.outcome.steps_run, 120);
+        assert_eq!(r.outcome.stop_cause, StopCause::AllComponentsFrozen);
+        assert_eq!(r.outcome.freeze.n_frozen(), 3);
+        assert_eq!(r.outcome.freeze.n(), 14);
+        assert!((r.outcome.flops.total() - 1.5e9).abs() < 1.0);
+        assert_eq!(r.accuracies.last().unwrap().1, 58.25);
+        // the fig3 series survives as log records
+        let pts: Vec<(usize, f64)> =
+            r.outcome.log.records.iter().map(|x| (x.step, x.frozen_fraction)).collect();
+        assert_eq!(pts, vec![(10, 0.0), (120, 0.9)]);
+    }
+
+    #[test]
+    fn manifest_parse_rejects_bad_version_and_tolerates_bad_entries() {
+        assert!(RunManifest::parse(r#"{"version": 2, "jobs": {}}"#).is_err());
+        // one broken entry is skipped, the good one survives
+        let good = sample_summary();
+        let mut m = RunManifest::default();
+        m.jobs.insert(good.id.clone(), good.clone());
+        let mut src = m.render();
+        src = src.replace("\"jobs\":{", "\"jobs\":{\"broken\":{\"id\":\"broken\"},");
+        let parsed = RunManifest::parse(&src).unwrap();
+        assert_eq!(parsed.jobs.len(), 1);
+        assert_eq!(parsed.jobs[&good.id], good);
+    }
+
+    #[test]
+    fn manifest_load_missing_is_empty() {
+        let m = RunManifest::load(Path::new("/nonexistent/definitely/run_manifest.json"));
+        assert!(m.jobs.is_empty());
+    }
+
+    #[test]
+    fn manifest_save_then_load_round_trips() {
+        let dir = std::env::temp_dir().join("grades_sched_manifest_test");
+        let path = dir.join("run_manifest.json");
+        let mut m = RunManifest::default();
+        let s = sample_summary();
+        m.jobs.insert(s.id.clone(), s.clone());
+        m.save(&path).unwrap();
+        let back = RunManifest::load(&path);
+        assert_eq!(back.jobs[&s.id], s);
+        // tmp file is gone after the atomic rename
+        assert!(!path.with_extension("json.tmp").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn summary_without_settings_field_cannot_match_a_fingerprint() {
+        let s = sample_summary();
+        let mut j = s.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.remove("settings");
+        }
+        let back = JobSummary::from_json(&j).unwrap();
+        assert_eq!(back.settings, "<unrecorded>");
+    }
+
+    #[test]
+    fn job_settings_composes_global_and_spec_overrides() {
+        let spec =
+            JobSpec::train("x", "c", StoppingMethod::GradEs, EvalKind::None).with_steps(40);
+        assert_eq!(job_settings(&spec, "G"), "G|steps=Some(40)|probe=None");
+        let plain = JobSpec::train("y", "c", StoppingMethod::GradEs, EvalKind::None);
+        assert_eq!(job_settings(&plain, ""), "|steps=None|probe=None");
+    }
+
+    #[test]
+    fn resolve_jobs_precedence() {
+        assert_eq!(resolve_jobs(None, None), 1);
+        assert_eq!(resolve_jobs(None, Some("6")), 6);
+        assert_eq!(resolve_jobs(Some(3), Some("6")), 3);
+        assert_eq!(resolve_jobs(Some(0), None), 1);
+        assert_eq!(resolve_jobs(None, Some("junk")), 1);
+    }
+
+    #[test]
+    fn stop_cause_round_trip() {
+        for c in [
+            StopCause::BudgetExhausted,
+            StopCause::AllComponentsFrozen,
+            StopCause::ValidationPatience,
+        ] {
+            assert_eq!(parse_stop_cause(stop_cause_str(c)).unwrap(), c);
+        }
+        assert!(parse_stop_cause("nope").is_err());
+    }
+}

@@ -4,28 +4,47 @@
 //! Table 3: vlm-nano ± GradES across six nanoVLM-style categories.
 //! Table 5: time/FLOPs for the Table-2 runs.
 //! Fig 4b: vision- vs language-tower mean |∇W| series.
+//!
+//! Jobs come from [`plan::vlm_plan`]: one pretrain per VLM config feeds
+//! the fine-tuning jobs, and the Figure 4b tower series are precomputed
+//! into each job's persisted summary (the scheduler knows the manifest's
+//! tower split), so resumed runs render the chart without the in-memory
+//! metrics log and nothing recompiles the bundle just to read components.
 
 use anyhow::Result;
 
-use super::{method_label, run_vlm_job, write_result, ExpOptions, VlmSuiteKind};
+use super::{method_label, plan, scheduler, write_result, ExpOptions};
 use crate::coordinator::trainer::StoppingMethod;
 use crate::report::figures::ascii_chart;
 use crate::report::table::{pct, sci, secs, speedup, Table};
-use crate::runtime::artifact::{Bundle, Client};
+use crate::runtime::artifact::Client;
 use crate::util::csv::CsvWriter;
 
 pub fn run(client: &Client, opts: &ExpOptions) -> Result<()> {
-    // ---- Table 2 + Table 5: vlm-tiny {fp, lora} × {base, grades} ----
     let pre_steps = opts.steps_override.unwrap_or(300);
-    let warm = std::sync::Arc::new(
-        crate::coordinator::warmstart::pretrain_vlm_checkpoint(client, "vlm-tiny-fp", pre_steps)?);
+    let (graph, slots) = plan::vlm_plan(pre_steps)?;
+    let runner = scheduler::DeviceRunner::new(client, opts);
+    let mut report = scheduler::execute(&graph, &opts.scheduler(), &runner)?;
+    report.require_ok(&graph)?;
+
+    // ---- Fig 4b data: tower series of the FP base run (from the
+    // persisted summary — exact on resume too) ----
+    let fp_base_id = slots
+        .main
+        .iter()
+        .find(|(am, id)| am == "fp" && graph.get(*id).method == StoppingMethod::None)
+        .map(|(_, id)| *id)
+        .expect("plan contains the FP base job");
+    let (vis_pts, lang_pts) = report
+        .summary(fp_base_id)?
+        .tower_gabs
+        .clone()
+        .ok_or_else(|| anyhow::anyhow!("VLM job summary missing tower series"))?;
+
+    // ---- Table 2 + Table 5: vlm-tiny {fp, lora} × {base, grades} ----
     let mut jobs = Vec::new();
-    for (am, cfg_name) in [("fp", "vlm-tiny-fp"), ("lora", "vlm-tiny-lora")] {
-        for method in [StoppingMethod::None, StoppingMethod::GradEs] {
-            let job = run_vlm_job(client, cfg_name, method, VlmSuiteKind::Main,
-                                  Some(warm.clone()), opts)?;
-            jobs.push((am.to_string(), job));
-        }
+    for (am, id) in &slots.main {
+        jobs.push((am.clone(), report.take_result(*id)?));
     }
     let suite_names: Vec<String> = jobs[0].1.accuracies.iter().map(|a| a.0.clone()).collect();
     let mut header = vec!["Model".to_string(), "Method".to_string()];
@@ -61,27 +80,7 @@ pub fn run(client: &Client, opts: &ExpOptions) -> Result<()> {
     }
     let t5s = format!("## Table 5 — VLM training time & FLOPs\n\n{}", t5.render());
 
-    // ---- Fig 4b from the FP base run: vision vs language tower ----
-    let base_job = &jobs.iter().find(|(am, j)| am == "fp" && j.method == StoppingMethod::None).unwrap().1;
-    let bundle = Bundle::by_name(client, "vlm-tiny-fp")?;
-    let m = &bundle.manifest;
-    let vis = m.components_where(|c| c.tower == "vision");
-    let lang = m.components_where(|c| c.tower == "language");
-    let mean_series = |idxs: &[usize]| -> Vec<(f64, f64)> {
-        base_job
-            .outcome
-            .log
-            .records
-            .iter()
-            .map(|r| {
-                let mean =
-                    idxs.iter().map(|&i| r.gabs[i] as f64).sum::<f64>() / idxs.len().max(1) as f64;
-                (r.step as f64, mean)
-            })
-            .collect()
-    };
-    let vis_pts = mean_series(&vis);
-    let lang_pts = mean_series(&lang);
+    // ---- Fig 4b: vision vs language tower ----
     let f4b = format!(
         "## Figure 4b — gradient-norm evolution: vision vs language towers\n\n```\n{}```\n",
         ascii_chart(
@@ -101,12 +100,8 @@ pub fn run(client: &Client, opts: &ExpOptions) -> Result<()> {
     w.flush()?;
 
     // ---- Table 3: vlm-nano ± GradES on the six categories ----
-    let nano_warm = std::sync::Arc::new(
-        crate::coordinator::warmstart::pretrain_vlm_checkpoint(client, "vlm-nano", pre_steps)?);
-    let nano_base = run_vlm_job(client, "vlm-nano", StoppingMethod::None, VlmSuiteKind::Nano,
-                                Some(nano_warm.clone()), opts)?;
-    let nano_grades = run_vlm_job(client, "vlm-nano", StoppingMethod::GradEs, VlmSuiteKind::Nano,
-                                  Some(nano_warm), opts)?;
+    let nano_base = report.take_result(slots.nano_base)?;
+    let nano_grades = report.take_result(slots.nano_grades)?;
     let mut t3 = Table::new(vec!["Benchmark", "Training", "Training+GradES"]);
     for (b, g) in nano_base.accuracies.iter().zip(&nano_grades.accuracies) {
         t3.row(vec![b.0.clone(), pct(b.1), pct(g.1)]);

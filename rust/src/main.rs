@@ -70,6 +70,11 @@ fn exp_options(args: &Args) -> Result<ExpOptions> {
     if let Some(o) = args.get("out") {
         opts.out_dir = o.into();
     }
+    // Scheduler knobs: --jobs beats GRADES_JOBS beats sequential; --fresh
+    // ignores the run manifest (completed cells re-run and are rewritten).
+    let env_jobs = std::env::var("GRADES_JOBS").ok();
+    opts.jobs = grades::exp::scheduler::resolve_jobs(args.usize_flag("jobs")?, env_jobs.as_deref());
+    opts.resume = args.get("fresh").is_none();
     Ok(opts)
 }
 
@@ -121,12 +126,13 @@ fn cmd_train(args: &Args) -> Result<()> {
     );
     let tm = &o.timings;
     println!(
-        "runtime: compile {:.2}s | upload {:.1} MB in {:.3}s ({} copies, {} staged) | exec {:.2}s | probe {:.2}s | eval {:.2}s",
+        "runtime: compile {:.2}s | upload {:.1} MB in {:.3}s ({} copies, {} staged, {} ctrl skips) | exec {:.2}s | probe {:.2}s | eval {:.2}s",
         bundle.compile_secs,
         tm.upload_bytes as f64 / 1e6,
         tm.upload_secs,
         tm.uploads,
         tm.staged_uploads,
+        tm.ctrl_skips,
         tm.exec_secs,
         tm.probe_secs,
         tm.eval_secs,
@@ -251,7 +257,9 @@ fn main() -> Result<()> {
                 "usage: grades <train|repro|info|list> [flags]\n\
                  \n\
                  grades train --config lm-tiny-fp --method grades [--steps N] [--bench] [--log-dir D] [--save ckpt] [--no-pipeline]\n\
-                 grades repro <lm|vlm|ablation|fig1|all> [--quick] [--steps N] [--questions Q] [--out D]\n\
+                 grades repro <lm|vlm|ablation|fig1|all> [--quick] [--steps N] [--questions Q] [--out D] [--jobs N] [--fresh]\n\
+                 \x20   --jobs N   run experiment jobs on N workers (or GRADES_JOBS=N); 1 = sequential\n\
+                 \x20   --fresh    ignore the resumable run manifest under --out and re-run every job\n\
                  grades info --config lm-tiny-fp\n\
                  grades list"
             );

@@ -10,8 +10,10 @@
 //! be touched concurrently. Set `GRADES_SERIAL_COMPILE=1` to fall back
 //! to the seed's fully sequential loop.
 
-use std::collections::BTreeMap;
+use std::cell::RefCell;
+use std::collections::{BTreeMap, HashMap};
 use std::path::{Path, PathBuf};
+use std::rc::Rc;
 use std::sync::Arc;
 
 use anyhow::{anyhow, Context, Result};
@@ -152,6 +154,49 @@ impl Bundle {
             out.insert(key.clone(), t.elapsed().as_secs_f64());
         }
         Ok(out)
+    }
+}
+
+/// Per-config compiled-bundle cache over one shared client: each config
+/// compiles at most once per process and the resulting [`Bundle`] is
+/// shared (`Rc`) by every job that trains or evaluates it.
+///
+/// Not thread-safe by itself — like everything client-owned, the bundles
+/// hold handles with non-atomic refcounts. The experiment scheduler wraps
+/// the cache in its exclusive device-token mutex, which doubles as the
+/// **compile lock**: backend compilation stays single-threaded behind the
+/// cache while other workers run host-side stages.
+pub struct BundleCache {
+    client: Client,
+    map: RefCell<HashMap<String, Rc<Bundle>>>,
+}
+
+impl BundleCache {
+    pub fn new(client: &Client) -> Self {
+        BundleCache { client: client.clone(), map: RefCell::new(HashMap::new()) }
+    }
+
+    /// The compiled bundle for `name`, compiling on first use.
+    pub fn get(&self, name: &str) -> Result<Rc<Bundle>> {
+        if let Some(b) = self.map.borrow().get(name) {
+            return Ok(b.clone());
+        }
+        let bundle = Rc::new(Bundle::by_name(&self.client, name)?);
+        self.map.borrow_mut().insert(name.to_string(), bundle.clone());
+        Ok(bundle)
+    }
+
+    /// Number of configs compiled so far.
+    pub fn len(&self) -> usize {
+        self.map.borrow().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.borrow().is_empty()
+    }
+
+    pub fn client(&self) -> &Client {
+        &self.client
     }
 }
 

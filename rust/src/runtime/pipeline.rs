@@ -174,6 +174,9 @@ pub struct StepTimings {
     pub uploads: usize,
     /// Uploads that were staged ahead of their step (overlapped).
     pub staged_uploads: usize,
+    /// Per-step ctrl uploads skipped because the device-resident ctrl
+    /// buffer was still valid (see `Session`'s persistent ctrl cache).
+    pub ctrl_skips: usize,
     /// Train-step dispatch+execute seconds (as observed by the host).
     pub exec_secs: f64,
     pub execs: usize,
@@ -191,6 +194,7 @@ impl StepTimings {
         self.upload_secs += o.upload_secs;
         self.uploads += o.uploads;
         self.staged_uploads += o.staged_uploads;
+        self.ctrl_skips += o.ctrl_skips;
         self.exec_secs += o.exec_secs;
         self.execs += o.execs;
         self.probe_secs += o.probe_secs;
@@ -211,6 +215,7 @@ impl StepTimings {
         m.insert("upload_secs".into(), Json::Num(self.upload_secs));
         m.insert("uploads".into(), Json::Num(self.uploads as f64));
         m.insert("staged_uploads".into(), Json::Num(self.staged_uploads as f64));
+        m.insert("ctrl_skips".into(), Json::Num(self.ctrl_skips as f64));
         m.insert("exec_secs".into(), Json::Num(self.exec_secs));
         m.insert("execs".into(), Json::Num(self.execs as f64));
         m.insert("probe_secs".into(), Json::Num(self.probe_secs));

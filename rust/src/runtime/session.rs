@@ -7,6 +7,27 @@
 //! step's buffers while the current step runs, and so the fixed validation
 //! set can live on device (`runtime::pipeline::DeviceBatchCache`). Every
 //! host↔device interaction is accounted in [`StepTimings`].
+//!
+//! The ctrl vector is also device-resident: the last uploaded ctrl buffer
+//! is cached and reused when a step's ctrl is equivalent to it (see
+//! [`ctrl_upload_skippable`]), skipping the per-step 4·`ctrl_len` copy.
+//! Skips are counted in `StepTimings::ctrl_skips`.
+//!
+//! # Thread-safety contract (Send audit for the experiment scheduler)
+//!
+//! `Session` is `!Send` and must stay that way: every PJRT object it owns
+//! (`PjRtBuffer` state, the cached ctrl buffer) holds a handle whose
+//! refcount in the `xla` binding is **non-atomic** and is cloned/dropped
+//! by uploads, executions and buffer drops. Two threads touching objects
+//! of the same client concurrently — even *different* sessions — race
+//! those refcounts. The experiment scheduler (`exp::scheduler`) therefore
+//! never runs two sessions of one client at the same time: all device
+//! work is serialized behind a single exclusive "device token" mutex, and
+//! sessions cross threads only while that token is held (jobs overlap in
+//! their host-side stages — data generation, packing, rendering — which
+//! touch no PJRT state). Code outside the scheduler keeps the simpler
+//! rule: a client and everything created from it live and die on one
+//! thread.
 
 use std::cell::RefCell;
 use std::io::Write as _;
@@ -26,6 +47,38 @@ pub struct Session<'b> {
     pub step: usize,
     /// Cumulative runtime instrumentation (RefCell: eval/probe take &self).
     timings: RefCell<StepTimings>,
+    /// Device-resident ctrl vector from the last train step, reused when
+    /// the next step's ctrl is equivalent (see [`ctrl_upload_skippable`]).
+    ctrl_cache: RefCell<Option<CtrlCache>>,
+}
+
+/// The last uploaded ctrl vector: host copy for the equivalence check,
+/// device buffer for reuse.
+struct CtrlCache {
+    host: Vec<f32>,
+    buf: PjRtBuffer,
+}
+
+/// Can a cached device ctrl buffer stand in for `next` without changing
+/// the trajectory?
+///
+/// * Bitwise-equal vectors are always reusable.
+/// * If the compiled graph never reads `ctrl[0]` (`step_sensitive ==
+///   false` — the SGD update takes no step input, unlike AdamW whose bias
+///   correction consumes it), a vector differing *only* at `ctrl[0]` is
+///   also reusable: the stale step on device is dead data.
+///
+/// AdamW graphs can therefore only skip when lr and mask both repeat
+/// exactly; under a cosine schedule that makes skips rare, which is why
+/// the count is surfaced in `StepTimings::ctrl_skips` rather than assumed.
+pub fn ctrl_upload_skippable(cached: &[f32], next: &[f32], step_sensitive: bool) -> bool {
+    if cached.len() != next.len() || cached.is_empty() {
+        return false;
+    }
+    if cached == next {
+        return true;
+    }
+    !step_sensitive && cached[1..] == next[1..]
 }
 
 /// One training batch already flattened row-major.
@@ -52,7 +105,13 @@ pub struct UploadedBatch {
 
 impl<'b> Session<'b> {
     pub fn new(bundle: &'b Bundle) -> Self {
-        Session { bundle, state: None, step: 0, timings: RefCell::new(StepTimings::default()) }
+        Session {
+            bundle,
+            state: None,
+            step: 0,
+            timings: RefCell::new(StepTimings::default()),
+            ctrl_cache: RefCell::new(None),
+        }
     }
 
     fn client(&self) -> &xla::PjRtClient {
@@ -79,6 +138,7 @@ impl<'b> Session<'b> {
         let mut out = self.bundle.init.execute_b(&[&seed_buf]).map_err(xerr)?;
         self.state = Some(out.remove(0).remove(0));
         self.step = 0;
+        *self.ctrl_cache.borrow_mut() = None;
         Ok(())
     }
 
@@ -139,16 +199,31 @@ impl<'b> Session<'b> {
         let m = &self.bundle.manifest;
         ensure!(ctrl.len() == m.ctrl_len, "ctrl len {} != {}", ctrl.len(), m.ctrl_len);
         let state = self.state.as_ref().context("session not initialized")?;
-        let ct = Timer::new();
-        let ctrl_buf = self
-            .client()
-            .buffer_from_host_buffer::<f32>(ctrl, &[ctrl.len()], None)
-            .map_err(xerr)?;
-        {
-            let mut tm = self.timings.borrow_mut();
-            tm.upload_secs += ct.secs();
-            tm.upload_bytes += 4 * ctrl.len() as u64;
+        // Persistent ctrl buffer: reuse the device copy when this step's
+        // ctrl is equivalent to it. AdamW graphs read ctrl[0] for bias
+        // correction, so only an exact repeat may skip there; SGD graphs
+        // never read the step and may skip whenever lr+mask repeat.
+        let step_sensitive = m.optimizer == "adamw";
+        let mut cache = self.ctrl_cache.borrow_mut();
+        let reuse = cache
+            .as_ref()
+            .map_or(false, |c| ctrl_upload_skippable(&c.host, ctrl, step_sensitive));
+        if reuse {
+            self.timings.borrow_mut().ctrl_skips += 1;
+        } else {
+            let ct = Timer::new();
+            let buf = self
+                .client()
+                .buffer_from_host_buffer::<f32>(ctrl, &[ctrl.len()], None)
+                .map_err(xerr)?;
+            {
+                let mut tm = self.timings.borrow_mut();
+                tm.upload_secs += ct.secs();
+                tm.upload_bytes += 4 * ctrl.len() as u64;
+            }
+            *cache = Some(CtrlCache { host: ctrl.to_vec(), buf });
         }
+        let ctrl_buf = &cache.as_ref().expect("ctrl cache populated above").buf;
         let exe = if attn_frozen {
             &self.bundle.train_step_attn_frozen
         } else {
@@ -156,7 +231,7 @@ impl<'b> Session<'b> {
         };
         let mut args: Vec<&PjRtBuffer> = vec![state];
         args.extend(io.bufs.iter());
-        args.push(&ctrl_buf);
+        args.push(ctrl_buf);
         let et = Timer::new();
         let mut out = exe.execute_b(&args).map_err(xerr)?;
         {
@@ -389,5 +464,33 @@ mod tests {
     fn batch_nbytes_counts_all_fields() {
         let b = Batch { tokens: vec![0; 6], targets: vec![0; 6], patches: vec![0.0; 5] };
         assert_eq!(b.nbytes(), 4 * 17);
+    }
+
+    #[test]
+    fn ctrl_skip_exact_repeat_always_allowed() {
+        let a = vec![3.0, 1e-3, 1.0, 1.0, 0.0];
+        assert!(ctrl_upload_skippable(&a, &a.clone(), true));
+        assert!(ctrl_upload_skippable(&a, &a.clone(), false));
+    }
+
+    #[test]
+    fn ctrl_skip_step_only_change_needs_step_insensitive_graph() {
+        let cached = vec![3.0, 1e-3, 1.0, 1.0, 0.0];
+        let next = vec![4.0, 1e-3, 1.0, 1.0, 0.0];
+        // SGD never reads ctrl[0]: the stale device step is dead data.
+        assert!(ctrl_upload_skippable(&cached, &next, false));
+        // AdamW bias correction consumes ctrl[0]: must re-upload.
+        assert!(!ctrl_upload_skippable(&cached, &next, true));
+    }
+
+    #[test]
+    fn ctrl_skip_rejects_lr_mask_or_shape_changes() {
+        let cached = vec![3.0, 1e-3, 1.0, 1.0, 0.0];
+        let lr = vec![4.0, 2e-3, 1.0, 1.0, 0.0];
+        let mask = vec![4.0, 1e-3, 1.0, 0.0, 0.0];
+        assert!(!ctrl_upload_skippable(&cached, &lr, false));
+        assert!(!ctrl_upload_skippable(&cached, &mask, false));
+        assert!(!ctrl_upload_skippable(&cached, &cached[..4], false));
+        assert!(!ctrl_upload_skippable(&[], &[], false));
     }
 }

@@ -1,0 +1,357 @@
+//! Host-side tests for the experiment scheduler — no PJRT artifacts
+//! needed, so these always run under tier-1 `cargo test`.
+//!
+//! The executor is generic over [`JobRunner`], so a mock runner exercises
+//! the scheduling properties the device runner relies on: dependency
+//! ordering, `--jobs 1` vs `--jobs N` result equality, resume from a run
+//! manifest, and worker-panic isolation. (The with-artifacts half —
+//! `--jobs 1` vs `--jobs 4` producing identical table cells through real
+//! training — rides on the same determinism argument: each job's
+//! trajectory depends only on its spec, which these tests pin down.)
+
+use std::collections::{BTreeMap, HashSet};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Result};
+
+use grades::coordinator::flops::FlopsCounter;
+use grades::coordinator::freeze::FreezeState;
+use grades::coordinator::metrics::MetricsLog;
+use grades::coordinator::trainer::{StopCause, StoppingMethod, TrainOutcome};
+use grades::coordinator::warmstart::BaseCheckpoint;
+use grades::exp::plan::{EvalKind, JobGraph, JobSpec};
+use grades::exp::scheduler::{
+    execute, job_settings, JobRunner, JobStatus, JobSummary, RunManifest, RunnerOutput,
+    SchedulerOptions,
+};
+use grades::exp::JobResult;
+
+/// Deterministic fake accuracy per job id (so result-set comparisons are
+/// meaningful across executions and worker counts).
+fn fake_acc(id: &str) -> f64 {
+    id.bytes().map(|b| b as f64).sum::<f64>() % 100.0
+}
+
+fn fake_result(spec: &JobSpec) -> JobResult {
+    JobResult {
+        config: spec.config.clone(),
+        method: spec.method,
+        outcome: TrainOutcome {
+            steps_run: 10,
+            stop_cause: StopCause::BudgetExhausted,
+            wall_secs: 1.0,
+            validation_secs: 0.0,
+            monitor_secs: 0.0,
+            flops: FlopsCounter::default(),
+            log: MetricsLog::default(),
+            freeze: FreezeState::new(4),
+            final_val_loss: 2.0,
+            variant_swap_step: None,
+            timings: Default::default(),
+        },
+        accuracies: vec![("Suite".to_string(), fake_acc(&spec.id)), ("Avg.".to_string(), fake_acc(&spec.id))],
+    }
+}
+
+fn fake_summary(spec: &JobSpec, r: &JobResult) -> JobSummary {
+    JobSummary {
+        id: spec.id.clone(),
+        config: r.config.clone(),
+        // matches the default SchedulerOptions fingerprint ("")
+        settings: job_settings(spec, ""),
+        method: r.method.label().to_string(),
+        steps_run: r.outcome.steps_run,
+        stop_cause: "budget".to_string(),
+        wall_secs: r.outcome.wall_secs,
+        validation_secs: 0.0,
+        monitor_secs: 0.0,
+        final_val_loss: 2.0,
+        variant_swap_step: None,
+        flops_spent: 0.0,
+        flops_dense: 0.0,
+        flops_validation: 0.0,
+        flops_steps: r.outcome.steps_run,
+        n_components: 4,
+        frozen: Vec::new(),
+        accuracies: r.accuracies.clone(),
+        frozen_series: Vec::new(),
+        tower_gabs: None,
+    }
+}
+
+/// Artifact-free runner: records start order, panics/fails on demand,
+/// hands out fake checkpoints and deterministic fake results.
+#[derive(Default)]
+struct MockRunner {
+    log: Mutex<Vec<String>>,
+    panic_on: HashSet<String>,
+    fail_on: HashSet<String>,
+}
+
+impl MockRunner {
+    fn started(&self) -> Vec<String> {
+        self.log.lock().unwrap().clone()
+    }
+}
+
+impl JobRunner for MockRunner {
+    fn run(&self, spec: &JobSpec, warm: Option<Arc<BaseCheckpoint>>) -> Result<RunnerOutput> {
+        self.log.lock().unwrap().push(spec.id.clone());
+        if self.panic_on.contains(&spec.id) {
+            panic!("mock panic in {}", spec.id);
+        }
+        if self.fail_on.contains(&spec.id) {
+            bail!("mock failure in {}", spec.id);
+        }
+        if spec.warm_from.is_some() && warm.is_none() {
+            bail!("{}: warm checkpoint was not delivered", spec.id);
+        }
+        match spec.kind {
+            grades::exp::plan::JobKind::Pretrain => Ok(RunnerOutput {
+                result: None,
+                summary: None,
+                checkpoint: Some(Arc::new(BaseCheckpoint {
+                    params: Default::default(),
+                    source: spec.id.clone(),
+                })),
+            }),
+            grades::exp::plan::JobKind::Train => {
+                let result = fake_result(spec);
+                let summary = spec.persist.then(|| fake_summary(spec, &result));
+                Ok(RunnerOutput { result: Some(result), summary, checkpoint: None })
+            }
+        }
+    }
+}
+
+fn train(id: &str) -> JobSpec {
+    JobSpec::train(id, "fake-cfg", StoppingMethod::GradEs, EvalKind::None)
+}
+
+/// pretrain → 4 dependents, plus an independent pretrain → 2 dependents.
+fn two_family_graph() -> JobGraph {
+    let mut g = JobGraph::new();
+    let pre_a = g.add(JobSpec::pretrain("pre-a", "fake-cfg")).unwrap();
+    for i in 0..4 {
+        g.add(train(&format!("a{i}")).warm(pre_a)).unwrap();
+    }
+    let pre_b = g.add(JobSpec::pretrain("pre-b", "fake-cfg")).unwrap();
+    for i in 0..2 {
+        g.add(train(&format!("b{i}")).warm(pre_b)).unwrap();
+    }
+    g
+}
+
+fn opts(jobs: usize) -> SchedulerOptions {
+    SchedulerOptions { jobs, ..Default::default() }
+}
+
+/// Map of job id → final "Avg." accuracy for every Done-with-result job.
+fn result_set(graph: &JobGraph, statuses: &[JobStatus]) -> BTreeMap<String, f64> {
+    let mut out = BTreeMap::new();
+    for (i, s) in statuses.iter().enumerate() {
+        if let JobStatus::Done { result: Some(r), .. } = s {
+            out.insert(graph.get(i).id.clone(), r.accuracies.last().unwrap().1);
+        }
+    }
+    out
+}
+
+#[test]
+fn dependencies_run_before_dependents_concurrently() {
+    let g = two_family_graph();
+    for jobs in [2, 4, 8] {
+        let runner = MockRunner::default();
+        let report = execute(&g, &opts(jobs), &runner).unwrap();
+        report.require_ok(&g).unwrap();
+        let order = runner.started();
+        assert_eq!(order.len(), g.len(), "every job ran exactly once");
+        let pos = |id: &str| order.iter().position(|x| x == id).unwrap();
+        for i in 0..4 {
+            assert!(pos("pre-a") < pos(&format!("a{i}")), "pretrain precedes a{i}");
+        }
+        for i in 0..2 {
+            assert!(pos("pre-b") < pos(&format!("b{i}")), "pretrain precedes b{i}");
+        }
+    }
+}
+
+#[test]
+fn jobs_1_and_jobs_n_produce_identical_result_sets() {
+    let g = two_family_graph();
+    let seq_runner = MockRunner::default();
+    let seq = execute(&g, &opts(1), &seq_runner).unwrap();
+    // sequential execution is strict plan order
+    assert_eq!(
+        seq_runner.started(),
+        g.jobs.iter().map(|j| j.id.clone()).collect::<Vec<_>>()
+    );
+    let conc = execute(&g, &opts(4), &MockRunner::default()).unwrap();
+    assert_eq!(result_set(&g, &seq.statuses), result_set(&g, &conc.statuses));
+}
+
+#[test]
+fn resume_skips_completed_jobs() {
+    let dir = std::env::temp_dir().join("grades_sched_resume_test");
+    std::fs::remove_dir_all(&dir).ok();
+    let manifest = dir.join("run_manifest.json");
+    let sopts = SchedulerOptions {
+        jobs: 1,
+        manifest_path: Some(manifest.clone()),
+        ..Default::default()
+    };
+    let g = two_family_graph();
+
+    // First run executes everything and persists the train jobs.
+    let first = MockRunner::default();
+    execute(&g, &sopts, &first).unwrap().require_ok(&g).unwrap();
+    assert_eq!(first.started().len(), g.len());
+    assert!(manifest.exists());
+
+    // Second run: all train jobs resume from the manifest, and the
+    // pretrains are elided because every dependent is already done.
+    let second = MockRunner::default();
+    let report = execute(&g, &sopts, &second).unwrap();
+    report.require_ok(&g).unwrap();
+    assert!(second.started().is_empty(), "nothing re-ran: {:?}", second.started());
+    let (ran, resumed, failed, skipped) = report.counts();
+    assert_eq!((ran, resumed, failed, skipped), (0, g.len(), 0, 0));
+    // resumed results still render table cells
+    assert_eq!(result_set(&g, &report.statuses).len(), g.len() - 2);
+
+    // Simulate a killed grid: drop one completed cell from the manifest.
+    let mut m = RunManifest::load(&manifest);
+    assert!(m.jobs.remove("a2").is_some());
+    m.save(&manifest).unwrap();
+    let third = MockRunner::default();
+    execute(&g, &sopts, &third).unwrap().require_ok(&g).unwrap();
+    // only the missing cell re-runs, plus its (cache-backed) pretrain
+    assert_eq!(third.started(), vec!["pre-a".to_string(), "a2".to_string()]);
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn resume_rejects_entries_recorded_under_different_settings() {
+    let dir = std::env::temp_dir().join("grades_sched_settings_test");
+    std::fs::remove_dir_all(&dir).ok();
+    let manifest = dir.join("run_manifest.json");
+    let g = two_family_graph();
+    let sopts = SchedulerOptions {
+        jobs: 1,
+        manifest_path: Some(manifest.clone()),
+        ..Default::default()
+    };
+    execute(&g, &sopts, &MockRunner::default()).unwrap().require_ok(&g).unwrap();
+
+    // Same graph, different run-wide settings (e.g. a full run after
+    // --quick): nothing may resume from the quick-mode cells.
+    let quickless = SchedulerOptions { settings: "steps_override=None".to_string(), ..sopts };
+    let runner = MockRunner::default();
+    execute(&g, &quickless, &runner).unwrap();
+    assert_eq!(runner.started().len(), g.len(), "mismatched settings must re-run all jobs");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn fresh_mode_preserves_other_targets_manifest_entries() {
+    let dir = std::env::temp_dir().join("grades_sched_preserve_test");
+    std::fs::remove_dir_all(&dir).ok();
+    let manifest = dir.join("run_manifest.json");
+    // Another repro target's completed cell already lives in the file.
+    let other_spec = train("other-target/cell");
+    let other = fake_summary(&other_spec, &fake_result(&other_spec));
+    let mut m = RunManifest::default();
+    m.jobs.insert(other.id.clone(), other.clone());
+    m.save(&manifest).unwrap();
+
+    let g = two_family_graph();
+    let fresh = SchedulerOptions {
+        jobs: 1,
+        manifest_path: Some(manifest.clone()),
+        resume: false,
+        ..Default::default()
+    };
+    execute(&g, &fresh, &MockRunner::default()).unwrap().require_ok(&g).unwrap();
+    let back = RunManifest::load(&manifest);
+    assert_eq!(back.jobs.get(&other.id), Some(&other), "--fresh must not erase other targets");
+    assert!(back.jobs.contains_key("a0"), "this run's cells are persisted too");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn fresh_mode_ignores_the_manifest() {
+    let dir = std::env::temp_dir().join("grades_sched_fresh_test");
+    std::fs::remove_dir_all(&dir).ok();
+    let manifest = dir.join("run_manifest.json");
+    let g = two_family_graph();
+    let resume_opts = SchedulerOptions {
+        jobs: 1,
+        manifest_path: Some(manifest.clone()),
+        ..Default::default()
+    };
+    execute(&g, &resume_opts, &MockRunner::default()).unwrap();
+    let fresh_opts = SchedulerOptions { resume: false, ..resume_opts };
+    let runner = MockRunner::default();
+    execute(&g, &fresh_opts, &runner).unwrap().require_ok(&g).unwrap();
+    assert_eq!(runner.started().len(), g.len(), "--fresh re-runs everything");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn one_panicking_job_does_not_poison_the_pool() {
+    let mut g = JobGraph::new();
+    let a = g.add(train("a")).unwrap();
+    g.add(train("b")).unwrap();
+    let _c = g.add(train("c").after(a)).unwrap();
+    g.add(train("d")).unwrap();
+
+    for jobs in [1, 3] {
+        let runner = MockRunner {
+            panic_on: ["a".to_string()].into_iter().collect(),
+            ..Default::default()
+        };
+        let report = execute(&g, &opts(jobs), &runner).unwrap();
+        let ids = |pred: &dyn Fn(&JobStatus) -> bool| -> Vec<String> {
+            report
+                .statuses
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| pred(s))
+                .map(|(i, _)| g.get(i).id.clone())
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(ids(&|s| matches!(s, JobStatus::Failed(_))), vec!["a"]);
+        assert_eq!(ids(&|s| matches!(s, JobStatus::Skipped(_))), vec!["c"]);
+        assert_eq!(ids(&|s| matches!(s, JobStatus::Done { .. })), vec!["b", "d"]);
+        assert!(report.require_ok(&g).is_err());
+        assert!(report.result(a).is_err());
+    }
+}
+
+#[test]
+fn failed_jobs_are_not_persisted_and_retry_on_resume() {
+    let dir = std::env::temp_dir().join("grades_sched_retry_test");
+    std::fs::remove_dir_all(&dir).ok();
+    let manifest = dir.join("run_manifest.json");
+    let sopts = SchedulerOptions {
+        jobs: 2,
+        manifest_path: Some(manifest.clone()),
+        ..Default::default()
+    };
+    let mut g = JobGraph::new();
+    g.add(train("good")).unwrap();
+    g.add(train("flaky")).unwrap();
+
+    let runner = MockRunner {
+        fail_on: ["flaky".to_string()].into_iter().collect(),
+        ..Default::default()
+    };
+    assert!(execute(&g, &sopts, &runner).unwrap().require_ok(&g).is_err());
+
+    // Re-run without the failure: only the flaky job executes.
+    let retry = MockRunner::default();
+    execute(&g, &sopts, &retry).unwrap().require_ok(&g).unwrap();
+    assert_eq!(retry.started(), vec!["flaky".to_string()]);
+    std::fs::remove_dir_all(&dir).ok();
+}
