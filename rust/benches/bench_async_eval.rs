@@ -1,0 +1,198 @@
+//! Blocked vs overlapped evaluation: the classic-ES validation tax, and
+//! how much of it the async-eval runtime claws back.
+//!
+//! Two A/Bs, both emitting into `BENCH_async_eval.json`:
+//!
+//! 1. **Trainer-level** — for each stopping method, one run with the
+//!    blocked baseline (every check is a full synchronous pass) and one
+//!    with chunked background validation (`--async-eval` semantics:
+//!    chunk 1, unbounded staleness). Wall time, validation seconds,
+//!    steps, final val loss and benchmark accuracy per mode. The
+//!    headline number is classic-ES's wall-time delta: base and grades
+//!    run no validation checks, so their delta is noise by construction.
+//!    Also asserts the `--staleness 0` contract: a k = 0 run's val-point
+//!    series and step count are bitwise-identical to the blocked run.
+//! 2. **Scheduler-level** — a two-cell graph run twice: scoring fused
+//!    into the train jobs (PR-2 shape) vs split into standalone eval
+//!    jobs that receive the final weights as host payloads and share the
+//!    worker pool (`JobKind::Eval`).
+//!
+//! Needs artifacts (`make artifacts`), like every bench.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+use grades::config::{repo_root, RepoConfig};
+use grades::coordinator::trainer::{self, StoppingMethod, TrainerOptions, TrainOutcome};
+use grades::data;
+use grades::eval::harness;
+use grades::exp::plan::{EvalKind, JobGraph, JobSpec};
+use grades::exp::scheduler::{execute, DeviceRunner, SchedulerOptions};
+use grades::exp::ExpOptions;
+use grades::runtime::artifact::{Bundle, Client};
+use grades::runtime::async_eval::AsyncEvalOptions;
+use grades::runtime::pipeline::Prefetcher;
+use grades::util::json::Json;
+
+const CONFIG: &str = "lm-tiny-fp";
+const STEPS: usize = 120;
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+/// One full training run + benchmark scoring under the given eval mode.
+fn run_once(
+    bundle: &Bundle,
+    cfg: &RepoConfig,
+    method: StoppingMethod,
+    async_eval: AsyncEvalOptions,
+) -> Result<(TrainOutcome, f64)> {
+    let ds = data::build_lm(cfg, &bundle.manifest)?;
+    let mut opts = TrainerOptions::from_config(cfg, method);
+    opts.total_steps = STEPS;
+    opts.async_eval = async_eval;
+    let mut source = Prefetcher::spawn(ds.train, opts.pipeline.prefetch_batches);
+    let trained = trainer::run_source_and_keep(bundle, cfg, &opts, &mut source, &ds.val)?;
+    let suites = grades::eval::benchmarks::lm_suites(&ds.vocab, 0xbe9c, 24);
+    let accs = harness::score_suites(&trained.session, &suites)?;
+    let avg = accs.last().map(|a| a.1).unwrap_or(f64::NAN);
+    Ok((trained.outcome, avg))
+}
+
+fn trainer_ab(client: &Client, report: &mut BTreeMap<String, Json>) -> Result<()> {
+    let cfg = RepoConfig::by_name(CONFIG)?;
+    let bundle = Bundle::by_name(client, CONFIG)?;
+    println!("## bench_async_eval — trainer A/B ({CONFIG}, {STEPS} steps)\n");
+    println!(
+        "{:<8} {:>12} {:>12} {:>9} {:>10} {:>10} {:>8} {:>8}",
+        "method", "blocked(s)", "overlap(s)", "delta", "val_blk(s)", "val_ovl(s)", "acc_blk", "acc_ovl"
+    );
+    for method in [StoppingMethod::None, StoppingMethod::ClassicEs, StoppingMethod::GradEs] {
+        let (blocked, acc_b) =
+            run_once(&bundle, &cfg, method, AsyncEvalOptions::synchronous())?;
+        let (overlapped, acc_o) =
+            run_once(&bundle, &cfg, method, AsyncEvalOptions::overlapped(1, usize::MAX))?;
+
+        // --staleness 0 contract: bitwise-identical to the blocked run.
+        let (k0, _) = run_once(&bundle, &cfg, method, AsyncEvalOptions::overlapped(4, 0))?;
+        assert_eq!(blocked.steps_run, k0.steps_run, "{method:?}: k=0 steps diverged");
+        assert_eq!(
+            blocked.final_val_loss.to_bits(),
+            k0.final_val_loss.to_bits(),
+            "{method:?}: k=0 final val loss diverged"
+        );
+        assert_eq!(
+            blocked.log.val_points.len(),
+            k0.log.val_points.len(),
+            "{method:?}: k=0 check count diverged"
+        );
+        for ((s1, v1), (s2, v2)) in blocked.log.val_points.iter().zip(&k0.log.val_points) {
+            assert_eq!(s1, s2);
+            assert_eq!(v1.to_bits(), v2.to_bits(), "{method:?}: k=0 val series diverged at {s1}");
+        }
+
+        let delta = 100.0 * (1.0 - overlapped.wall_secs / blocked.wall_secs);
+        println!(
+            "{:<8} {:>12.3} {:>12.3} {:>8.1}% {:>10.3} {:>10.3} {:>7.2}% {:>7.2}%",
+            method.label(),
+            blocked.wall_secs,
+            overlapped.wall_secs,
+            delta,
+            blocked.validation_secs,
+            overlapped.validation_secs,
+            acc_b,
+            acc_o,
+        );
+        let mut entry = BTreeMap::new();
+        entry.insert("blocked_wall_secs".into(), num(blocked.wall_secs));
+        entry.insert("overlapped_wall_secs".into(), num(overlapped.wall_secs));
+        entry.insert("wall_delta_pct".into(), num(delta));
+        entry.insert("blocked_validation_secs".into(), num(blocked.validation_secs));
+        entry.insert("overlapped_validation_secs".into(), num(overlapped.validation_secs));
+        entry.insert("blocked_steps".into(), num(blocked.steps_run as f64));
+        entry.insert("overlapped_steps".into(), num(overlapped.steps_run as f64));
+        entry.insert("blocked_final_val_loss".into(), num(blocked.final_val_loss));
+        entry.insert("overlapped_final_val_loss".into(), num(overlapped.final_val_loss));
+        entry.insert("blocked_avg_acc".into(), num(acc_b));
+        entry.insert("overlapped_avg_acc".into(), num(acc_o));
+        entry.insert("checks_issued".into(), num(overlapped.async_eval.issued as f64));
+        entry.insert("chunk_evals".into(), num(overlapped.async_eval.chunk_evals as f64));
+        entry.insert(
+            "staleness0_bitwise_identical".into(),
+            Json::Bool(true), // the asserts above would have aborted otherwise
+        );
+        report.insert(format!("trainer/{}", method.label()), Json::Obj(entry));
+    }
+    println!();
+    Ok(())
+}
+
+fn scheduler_ab(client: &Client, report: &mut BTreeMap<String, Json>) -> Result<()> {
+    let mut opts = ExpOptions::quick(STEPS, 16);
+    opts.jobs = 2;
+    let sopts = SchedulerOptions {
+        jobs: 2,
+        manifest_path: None,
+        resume: false,
+        settings: opts.settings_fingerprint(),
+        verbose: false,
+    };
+
+    // fused: two train jobs that also score (the PR-2 shape)
+    let mut fused = JobGraph::new();
+    for m in [StoppingMethod::ClassicEs, StoppingMethod::GradEs] {
+        fused.add(
+            JobSpec::train(format!("bench/fused/{}", m.label()), CONFIG, m, EvalKind::LmSuites)
+                .ephemeral(),
+        )?;
+    }
+    // split: training and scoring as separate pool-scheduled jobs
+    let mut split = JobGraph::new();
+    for m in [StoppingMethod::ClassicEs, StoppingMethod::GradEs] {
+        let t = split.add(
+            JobSpec::train(format!("bench/split/{}", m.label()), CONFIG, m, EvalKind::None)
+                .ephemeral(),
+        )?;
+        split.add(JobSpec::score(
+            format!("bench/split/{}/eval", m.label()),
+            CONFIG,
+            EvalKind::LmSuites,
+            t,
+        ))?;
+    }
+
+    let t0 = std::time::Instant::now();
+    let runner = DeviceRunner::new(client, &opts);
+    let rep = execute(&fused, &sopts, &runner)?;
+    rep.require_ok(&fused)?;
+    let fused_secs = t0.elapsed().as_secs_f64();
+
+    let t1 = std::time::Instant::now();
+    let runner = DeviceRunner::new(client, &opts);
+    let rep = execute(&split, &sopts, &runner)?;
+    rep.require_ok(&split)?;
+    let split_secs = t1.elapsed().as_secs_f64();
+
+    println!(
+        "scheduler A/B: fused train+score {fused_secs:.2}s vs split eval jobs {split_secs:.2}s \
+         ({:+.1}%)",
+        100.0 * (split_secs / fused_secs - 1.0)
+    );
+    let mut entry = BTreeMap::new();
+    entry.insert("fused_secs".into(), num(fused_secs));
+    entry.insert("split_secs".into(), num(split_secs));
+    report.insert("scheduler/fused_vs_split".into(), Json::Obj(entry));
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let client = Client::cpu()?;
+    let mut report: BTreeMap<String, Json> = BTreeMap::new();
+    trainer_ab(&client, &mut report)?;
+    scheduler_ab(&client, &mut report)?;
+    let out = repo_root().join("BENCH_async_eval.json");
+    std::fs::write(&out, grades::util::json::write(&Json::Obj(report)))?;
+    println!("wrote {}", out.display());
+    Ok(())
+}

@@ -1,6 +1,6 @@
 //! Typed run configuration, loaded from the same `configs/*.toml` files the
-//! AOT exporter reads (python consumes [model]/[train]/[vlm]; rust consumes
-//! those plus [run]/[grades]/[es]/[data]).
+//! AOT exporter reads (python consumes `[model]`/`[train]`/`[vlm]`; rust consumes
+//! those plus `[run]`/`[grades]`/`[es]`/`[data]`).
 
 pub mod toml;
 
@@ -22,16 +22,20 @@ fn get_str(t: &Table, k: &str, default: &str) -> String {
     t.get(k).and_then(|v| v.as_str().ok()).unwrap_or(default).to_string()
 }
 
-/// Training-run hyperparameters ([run]).
+/// Training-run hyperparameters (`[run]`).
 #[derive(Debug, Clone)]
 pub struct RunConfig {
+    /// Total optimizer-step budget T.
     pub total_steps: usize,
+    /// Peak learning rate of the cosine schedule.
     pub lr: f64,
+    /// Linear-warmup fraction of the budget.
     pub warmup_frac: f64,
+    /// Parameter-init RNG seed.
     pub seed: u64,
 }
 
-/// GradES monitor settings ([grades], paper Alg. 1 + App. C).
+/// GradES monitor settings (`[grades]`, paper Alg. 1 + App. C).
 #[derive(Debug, Clone)]
 pub struct GradesConfig {
     /// "l1_diff" (Eq. 1) or "l1_abs" (§3.1 alternative).
@@ -43,6 +47,7 @@ pub struct GradesConfig {
     /// Component-specific thresholds for VLM towers (paper Table 10);
     /// NaN = fall back to `tau`.
     pub tau_vision: f64,
+    /// Language-tower τ override (VLMs; NaN = fall back to `tau`).
     pub tau_language: f64,
     /// Consecutive sub-τ steps required before freezing (0 = freeze
     /// immediately, the paper's "static freezing"; >0 = the patience
@@ -57,35 +62,51 @@ pub struct GradesConfig {
     pub granularity: String,
 }
 
-/// Classic validation-loss early stopping ([es], the paper's +ES baseline).
+/// Classic validation-loss early stopping (`[es]`, the paper's +ES baseline).
 #[derive(Debug, Clone)]
 pub struct EsConfig {
     /// Validate every `check_interval_frac · T` steps (paper: 5%).
     pub check_interval_frac: f64,
+    /// Consecutive non-improving checks before stopping.
     pub patience: usize,
+    /// Required improvement over the best loss to reset patience.
     pub min_delta: f64,
 }
 
-/// Synthetic-data settings ([data]).
+/// Synthetic-data settings (`[data]`).
 #[derive(Debug, Clone)]
 pub struct DataConfig {
+    /// Corpus family (only "grammar" is implemented).
     pub corpus: String,
+    /// Data-generation RNG seed.
     pub seed: u64,
+    /// Sentences generated for the training split.
     pub train_sentences: usize,
+    /// Sentences generated for the fixed validation split.
     pub val_sentences: usize,
 }
 
 #[derive(Debug, Clone)]
+/// One config file's complete typed contents — everything a run,
+/// an artifact load and a dataset build need.
 pub struct RepoConfig {
+    /// Config/artifact name (`configs/<name>.toml`, `artifacts/<name>/`).
     pub name: String,
+    /// Path the config was loaded from.
     pub path: PathBuf,
+    /// `[run]` — step budget, LR schedule, seed.
     pub run: RunConfig,
+    /// `[grades]` — monitor thresholds and extensions.
     pub grades: GradesConfig,
+    /// `[es]` — classic early-stopping baseline settings.
     pub es: EsConfig,
+    /// `[data]` — synthetic-corpus settings.
     pub data: DataConfig,
 }
 
 impl RepoConfig {
+    /// Load and type a config file; missing tables/keys get the
+    /// documented defaults.
     pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
         let path = path.as_ref().to_path_buf();
         let src = std::fs::read_to_string(&path)
@@ -143,6 +164,7 @@ impl RepoConfig {
         Self::load(repo_root().join("configs").join(format!("{name}.toml")))
     }
 
+    /// `artifacts/<name>/` under the repo root.
     pub fn artifact_dir(&self) -> PathBuf {
         repo_root().join("artifacts").join(&self.name)
     }

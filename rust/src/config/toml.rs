@@ -9,15 +9,22 @@ use std::collections::BTreeMap;
 use anyhow::{anyhow, bail, Result};
 
 #[derive(Debug, Clone, PartialEq)]
+/// One parsed TOML value.
 pub enum TomlValue {
+    /// A quoted string.
     Str(String),
+    /// An integer literal.
     Int(i64),
+    /// A float literal.
     Float(f64),
+    /// `true` / `false`.
     Bool(bool),
+    /// A `[...]` array.
     Arr(Vec<TomlValue>),
 }
 
 impl TomlValue {
+    /// Numeric view (ints widen to f64).
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             TomlValue::Int(i) => Ok(*i as f64),
@@ -26,6 +33,7 @@ impl TomlValue {
         }
     }
 
+    /// Integer view.
     pub fn as_i64(&self) -> Result<i64> {
         match self {
             TomlValue::Int(i) => Ok(*i),
@@ -33,6 +41,7 @@ impl TomlValue {
         }
     }
 
+    /// Non-negative integer view.
     pub fn as_usize(&self) -> Result<usize> {
         let i = self.as_i64()?;
         if i < 0 {
@@ -41,6 +50,7 @@ impl TomlValue {
         Ok(i as usize)
     }
 
+    /// String view.
     pub fn as_str(&self) -> Result<&str> {
         match self {
             TomlValue::Str(s) => Ok(s),
@@ -48,6 +58,7 @@ impl TomlValue {
         }
     }
 
+    /// Boolean view.
     pub fn as_bool(&self) -> Result<bool> {
         match self {
             TomlValue::Bool(b) => Ok(*b),
@@ -56,25 +67,31 @@ impl TomlValue {
     }
 }
 
+/// One `[table]`'s key → value map.
 pub type Table = BTreeMap<String, TomlValue>;
 
 /// Parsed document: top-level keys + named tables.
 #[derive(Debug, Default, Clone)]
 pub struct TomlDoc {
+    /// Keys above the first table header.
     pub root: Table,
+    /// Named `[table]` sections, in name order.
     pub tables: BTreeMap<String, Table>,
 }
 
 impl TomlDoc {
+    /// The named table, or an error when absent.
     pub fn table(&self, name: &str) -> Result<&Table> {
         self.tables.get(name).ok_or_else(|| anyhow!("missing [{name}] table"))
     }
 
+    /// The named table, or an empty one (defaults apply).
     pub fn table_or_empty(&self, name: &str) -> Table {
         self.tables.get(name).cloned().unwrap_or_default()
     }
 }
 
+/// Parse a TOML document (the supported subset above).
 pub fn parse(src: &str) -> Result<TomlDoc> {
     let mut doc = TomlDoc::default();
     let mut current: Option<String> = None;

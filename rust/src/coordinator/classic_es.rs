@@ -9,18 +9,24 @@
 use crate::config::EsConfig;
 
 #[derive(Debug, Clone)]
+/// Patience-based validation-loss early stopping state.
 pub struct ClassicEs {
+    /// The `[es]` settings this rule runs under.
     pub cfg: EsConfig,
+    /// Steps between checks (⌈check_interval_frac·T⌉).
     pub check_interval: usize,
     best: f64,
     bad_checks: usize,
+    /// Validation checks recorded so far.
     pub checks_run: usize,
     /// Wall-clock seconds spent inside validation (Table 4 overhead).
     pub validation_secs: f64,
+    /// False for non-ES runs (due() is then never true).
     pub enabled: bool,
 }
 
 impl ClassicEs {
+    /// Early stopping over a `total_steps` budget.
     pub fn new(cfg: &EsConfig, total_steps: usize) -> Self {
         let check_interval =
             ((total_steps as f64) * cfg.check_interval_frac).ceil().max(1.0) as usize;
@@ -35,6 +41,7 @@ impl ClassicEs {
         }
     }
 
+    /// A rule that never checks and never stops (baseline runs).
     pub fn disabled(cfg: &EsConfig) -> Self {
         let mut es = Self::new(cfg, usize::MAX / 2);
         es.enabled = false;
@@ -62,6 +69,7 @@ impl ClassicEs {
         self.bad_checks >= self.cfg.patience
     }
 
+    /// Best validation loss seen so far.
     pub fn best_loss(&self) -> f64 {
         self.best
     }

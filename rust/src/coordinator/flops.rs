@@ -17,6 +17,7 @@ use crate::coordinator::freeze::FreezeState;
 use crate::runtime::manifest::Manifest;
 
 #[derive(Debug, Clone, Default)]
+/// Cumulative FLOPs ledger for one training run.
 pub struct FlopsCounter {
     /// Accounted FLOPs actually spent (frozen-aware).
     pub spent: f64,
@@ -24,6 +25,7 @@ pub struct FlopsCounter {
     pub dense_equivalent: f64,
     /// FLOPs spent inside validation passes (classic-ES overhead).
     pub validation: f64,
+    /// Train steps recorded.
     pub steps: usize,
 }
 
@@ -59,18 +61,21 @@ impl FlopsCounter {
         (n_batches * m.batch_size * m.seq_len) as f64 * m.flops.fwd_per_token
     }
 
+    /// Account one train step under the current freeze state.
     pub fn record_step(&mut self, m: &Manifest, freeze: &FreezeState) {
         self.spent += Self::step_cost(m, freeze);
         self.dense_equivalent += Self::dense_step(m);
         self.steps += 1;
     }
 
+    /// Account one validation pass of `n_batches` forward-only batches.
     pub fn record_validation(&mut self, m: &Manifest, n_batches: usize) {
         let c = Self::eval_cost(m, n_batches);
         self.validation += c;
         self.spent += c;
     }
 
+    /// Total accounted FLOPs (train + validation).
     pub fn total(&self) -> f64 {
         self.spent
     }

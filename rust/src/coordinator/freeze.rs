@@ -7,6 +7,7 @@
 use crate::runtime::manifest::Manifest;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Why a component's mask bit flipped.
 pub enum FreezeReason {
     /// G_W(t) < τ after the grace period (GradES).
     Converged,
@@ -17,23 +18,32 @@ pub enum FreezeReason {
 }
 
 #[derive(Debug, Clone)]
+/// One mask transition, kept for event logs and tests.
 pub struct FreezeEvent {
+    /// Step the transition happened at.
     pub step: usize,
+    /// Component index (manifest order).
     pub component: usize,
+    /// New state: true = froze, false = unfroze.
     pub frozen: bool, // false = unfreeze event
+    /// What triggered the transition.
     pub reason: FreezeReason,
+    /// The monitored metric value at decision time.
     pub metric_value: f64,
 }
 
 #[derive(Debug, Clone)]
+/// The frozen set F plus its ctrl-vector mask form.
 pub struct FreezeState {
     frozen: Vec<bool>,
     frozen_since: Vec<Option<usize>>,
+    /// Every freeze/unfreeze transition, in step order.
     pub events: Vec<FreezeEvent>,
     mask: Vec<f32>,
 }
 
 impl FreezeState {
+    /// All-active state over `n_components` components.
     pub fn new(n_components: usize) -> Self {
         Self {
             frozen: vec![false; n_components],
@@ -43,22 +53,27 @@ impl FreezeState {
         }
     }
 
+    /// Number of monitored components.
     pub fn n(&self) -> usize {
         self.frozen.len()
     }
 
+    /// Is component `c` currently frozen?
     pub fn is_frozen(&self, c: usize) -> bool {
         self.frozen[c]
     }
 
+    /// Currently frozen component count.
     pub fn n_frozen(&self) -> usize {
         self.frozen.iter().filter(|&&f| f).count()
     }
 
+    /// True when every component is frozen (Alg. 1 termination).
     pub fn all_frozen(&self) -> bool {
         self.n_frozen() == self.n()
     }
 
+    /// Frozen share in [0, 1] (the Figure 3 series).
     pub fn frozen_fraction(&self) -> f64 {
         if self.n() == 0 {
             return 0.0;
@@ -66,6 +81,7 @@ impl FreezeState {
         self.n_frozen() as f64 / self.n() as f64
     }
 
+    /// Freeze `c` (idempotent; records an event on the first call).
     pub fn freeze(&mut self, c: usize, step: usize, reason: FreezeReason, metric: f64) {
         if !self.frozen[c] {
             self.frozen[c] = true;
@@ -81,6 +97,7 @@ impl FreezeState {
         }
     }
 
+    /// Reactivate `c` (idempotent; §8 dynamic-unfreezing extension).
     pub fn unfreeze(&mut self, c: usize, step: usize, metric: f64) {
         if self.frozen[c] {
             self.frozen[c] = false;

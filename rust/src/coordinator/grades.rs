@@ -18,8 +18,11 @@ use crate::coordinator::freeze::{layer_groups, FreezeReason, FreezeState};
 use crate::runtime::manifest::Manifest;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Which gradient statistic drives freezing decisions.
 pub enum Metric {
+    /// Eq. 1: ‖∇W_t − ∇W_{t−1}‖₁ (the paper's default).
     L1Diff,
+    /// §3.1 alternative: ‖∇W_t‖₁.
     L1Abs,
     /// Update-change metric: Eq. 1 scaled by lr(t)/lr_base and normalized
     /// by the component's grace-period baseline — our usability extension
@@ -34,8 +37,12 @@ pub enum Metric {
     L1DiffRel,
 }
 
+/// Algorithm 1's monitoring loop: per-component convergence tests
+/// over the probed gradient statistics.
 pub struct GradesMonitor {
+    /// The `[grades]` settings this monitor runs under.
     pub cfg: GradesConfig,
+    /// Parsed `cfg.metric`.
     pub metric: Metric,
     grace_steps: usize,
     taus: Vec<f64>,
@@ -49,10 +56,12 @@ pub struct GradesMonitor {
     /// the grace period (the L1DiffRel denominator).
     baseline_sum: Vec<f64>,
     baseline_n: usize,
+    /// False for baseline runs (observe() is then a no-op).
     pub enabled: bool,
 }
 
 impl GradesMonitor {
+    /// Monitor over the manifest's components for a `total_steps` run.
     pub fn new(cfg: &GradesConfig, manifest: &Manifest, total_steps: usize) -> Self {
         let metric = match cfg.metric.as_str() {
             "l1_abs" => Metric::L1Abs,
@@ -106,10 +115,12 @@ impl GradesMonitor {
         m
     }
 
+    /// ⌈α·T⌉ — no decisions before this step (Alg. 1 line 3).
     pub fn grace_steps(&self) -> usize {
         self.grace_steps
     }
 
+    /// Component `c`'s effective threshold (tower overrides applied).
     pub fn tau(&self, c: usize) -> f64 {
         self.taus[c]
     }

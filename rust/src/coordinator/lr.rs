@@ -5,12 +5,16 @@
 /// Warmup + cosine decay to zero.
 #[derive(Debug, Clone)]
 pub struct CosineSchedule {
+    /// Peak LR reached at the end of warmup.
     pub base_lr: f64,
+    /// Linear-warmup step count (⌈warmup_frac·T⌉).
     pub warmup_steps: usize,
+    /// Budget T the cosine decays over.
     pub total_steps: usize,
 }
 
 impl CosineSchedule {
+    /// Schedule over `total_steps` with `warmup_frac` linear warmup.
     pub fn new(base_lr: f64, warmup_frac: f64, total_steps: usize) -> Self {
         let warmup_steps = ((total_steps as f64) * warmup_frac).ceil() as usize;
         Self { base_lr, warmup_steps, total_steps }
@@ -36,6 +40,7 @@ impl CosineSchedule {
 pub struct ConstantSchedule(pub f64);
 
 impl ConstantSchedule {
+    /// The constant LR, for any step.
     pub fn lr(&self, _t: usize) -> f64 {
         self.0
     }

@@ -9,11 +9,17 @@ use crate::runtime::pipeline::StepTimings;
 use crate::util::csv::CsvWriter;
 
 #[derive(Debug, Clone)]
+/// One logged step's metrics.
 pub struct StepRecord {
+    /// 1-based optimizer step.
     pub step: usize,
+    /// Mean train loss of the step's batch.
     pub loss: f64,
+    /// Learning rate at the step.
     pub lr: f64,
+    /// Global gradient norm from the probe.
     pub global_gnorm: f64,
+    /// Share of components frozen after the step.
     pub frozen_fraction: f64,
     /// Eq. 1 per-component gradient-change norms (Fig. 1 series).
     pub gdiff: Vec<f32>,
@@ -22,8 +28,12 @@ pub struct StepRecord {
 }
 
 #[derive(Debug, Clone, Default)]
+/// The full per-step + per-check log of one run.
 pub struct MetricsLog {
+    /// Probed steps, in order.
     pub records: Vec<StepRecord>,
+    /// (check step, val loss) — for async checks the step is the
+    /// *issue* step, whose parameters the loss describes.
     pub val_points: Vec<(usize, f64)>,
     /// Cumulative runtime breakdown for the run (upload/exec/probe/eval),
     /// filled in by the trainer when the run completes.
@@ -31,6 +41,7 @@ pub struct MetricsLog {
 }
 
 impl MetricsLog {
+    /// Log one probed step from the raw metrics prefix.
     pub fn record(
         &mut self,
         step: usize,
@@ -53,10 +64,12 @@ impl MetricsLog {
         });
     }
 
+    /// Log one validation result against its check step.
     pub fn record_val(&mut self, step: usize, val_loss: f64) {
         self.val_points.push((step, val_loss));
     }
 
+    /// Loss of the last probed step (NaN when none).
     pub fn final_train_loss(&self) -> f64 {
         self.records.last().map(|r| r.loss).unwrap_or(f64::NAN)
     }

@@ -12,19 +12,26 @@ use crate::coordinator::freeze::FreezeState;
 use crate::runtime::manifest::Manifest;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Which pre-compiled train-step graph a step executes.
 pub enum Variant {
+    /// The full backward graph (every dW matmul present).
     Full,
+    /// Backward graph with all attention dW matmuls removed.
     AttnFrozen,
 }
 
 #[derive(Debug, Default)]
+/// Hot-swaps the train-step executable once attention froze.
 pub struct VariantScheduler {
     attn_components: Vec<usize>,
+    /// Step the swap happened at (None = still on the full graph).
     pub swapped_at: Option<usize>,
+    /// Swapping enabled (GradES runs only; off for baselines).
     pub enabled: bool,
 }
 
 impl VariantScheduler {
+    /// Scheduler over the manifest's attention components.
     pub fn new(manifest: &Manifest, enabled: bool) -> Self {
         VariantScheduler {
             attn_components: manifest.components_where(|c| c.group == "attention"),

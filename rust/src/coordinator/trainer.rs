@@ -35,12 +35,14 @@ use crate::coordinator::lr::CosineSchedule;
 use crate::coordinator::metrics::MetricsLog;
 use crate::coordinator::scheduler::{Variant, VariantScheduler};
 use crate::runtime::artifact::Bundle;
+use crate::runtime::async_eval::{AsyncEvalOptions, AsyncEvalStats, AsyncValidator, EvalSnapshot};
 use crate::runtime::pipeline::{
     BatchSource, DeviceBatchCache, FnSource, PipelineOptions, StepTimings,
 };
 use crate::runtime::session::{Batch, Session, UploadedBatch};
 use crate::util::timer::Timer;
 
+/// Which of the paper's stopping rules a run trains under.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum StoppingMethod {
     /// Train all T steps (the paper's "Full Parameter"/"LoRA" baselines).
@@ -52,6 +54,7 @@ pub enum StoppingMethod {
 }
 
 impl StoppingMethod {
+    /// The short id used in job ids, file names and the run manifest.
     pub fn label(&self) -> &'static str {
         match self {
             StoppingMethod::None => "base",
@@ -60,6 +63,7 @@ impl StoppingMethod {
         }
     }
 
+    /// Inverse of [`StoppingMethod::label`] (also accepts "none").
     pub fn parse(s: &str) -> Option<Self> {
         match s {
             "base" | "none" => Some(Self::None),
@@ -70,34 +74,54 @@ impl StoppingMethod {
     }
 }
 
+/// Why a training run ended.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum StopCause {
+    /// The full step budget ran out (no early stop fired).
     BudgetExhausted,
+    /// GradES froze every monitored component (Alg. 1 termination).
     AllComponentsFrozen,
+    /// Classic ES: validation loss stalled for `patience` checks.
     ValidationPatience,
 }
 
+/// Everything one training run reports back to its driver.
 #[derive(Debug, Clone)]
 pub struct TrainOutcome {
+    /// Optimizer steps actually executed (≤ the budget).
     pub steps_run: usize,
+    /// Why the run ended.
     pub stop_cause: StopCause,
+    /// Total wall-clock seconds of the run.
     pub wall_secs: f64,
     /// Seconds spent in validation passes (classic-ES overhead).
     pub validation_secs: f64,
     /// Seconds spent in monitor probes + decisions (GradES overhead).
     pub monitor_secs: f64,
+    /// FLOPs accounting (spent vs dense-equivalent vs validation).
     pub flops: FlopsCounter,
+    /// Per-step metrics log (loss/lr/gdiff/gabs series + val points).
     pub log: MetricsLog,
+    /// Final per-component freeze state.
     pub freeze: FreezeState,
+    /// Mean validation loss of the final parameters (NaN when skipped).
     pub final_val_loss: f64,
+    /// Step the variant scheduler swapped to the attn-frozen graph, if it did.
     pub variant_swap_step: Option<usize>,
     /// Runtime breakdown: upload bytes/secs, exec, probe, eval.
     pub timings: StepTimings,
+    /// Asynchronous-validation counters (passes issued / completed /
+    /// force-drained / abandoned — see `runtime::async_eval`).
+    pub async_eval: AsyncEvalStats,
 }
 
+/// Per-run knobs the drivers thread into [`run`] / [`run_source`].
 pub struct TrainerOptions {
+    /// Stopping rule this run trains under.
     pub method: StoppingMethod,
+    /// Step budget T.
     pub total_steps: usize,
+    /// Init RNG seed (the artifact's init executable consumes it).
     pub seed: i32,
     /// Probe cadence before the grace period (monitoring needs every-step
     /// probes only once freezing decisions are live).
@@ -111,9 +135,15 @@ pub struct TrainerOptions {
     /// Pipelined-runtime knobs (upload-ahead, prefetch depth used by
     /// callers that wrap their source in a `Prefetcher`).
     pub pipeline: PipelineOptions,
+    /// Asynchronous chunked-validation knobs (`runtime::async_eval`).
+    /// The default is [`AsyncEvalOptions::synchronous`], which drains
+    /// every classic-ES check at its issue step — trajectories bitwise
+    /// identical to the pre-async trainer.
+    pub async_eval: AsyncEvalOptions,
 }
 
 impl TrainerOptions {
+    /// The standard options for one (config, stopping-method) run.
     pub fn from_config(cfg: &RepoConfig, method: StoppingMethod) -> Self {
         TrainerOptions {
             method,
@@ -124,6 +154,7 @@ impl TrainerOptions {
             final_validation: true,
             warm_start: None,
             pipeline: PipelineOptions::default(),
+            async_eval: AsyncEvalOptions::default(),
         }
     }
 }
@@ -142,10 +173,13 @@ pub fn run<F: FnMut() -> Batch>(
 
 /// Run and leave the trained session alive for downstream evaluation.
 pub struct TrainedModel<'b> {
+    /// The live session holding the final device state.
     pub session: Session<'b>,
+    /// The run's report.
     pub outcome: TrainOutcome,
 }
 
+/// [`run`], returning the live session alongside the outcome.
 pub fn run_and_keep<'b, F: FnMut() -> Batch>(
     bundle: &'b Bundle,
     cfg: &RepoConfig,
@@ -167,6 +201,7 @@ pub fn run_source(
     run_source_and_keep(bundle, cfg, opts, source, val_batches).map(|t| t.outcome)
 }
 
+/// [`run_source`], returning the live session alongside the outcome.
 pub fn run_source_and_keep<'b>(
     bundle: &'b Bundle,
     cfg: &RepoConfig,
@@ -201,6 +236,13 @@ pub fn run_source_and_keep<'b>(
     };
     let mut freeze = FreezeState::new(m.n_components);
     let mut scheduler = VariantScheduler::new(m, opts.variant_scheduler);
+    // Chunked validation runtime: classic-ES checks pin a snapshot and
+    // advance `chunk` eval batches per train step instead of stalling
+    // the loop for a full pass. With the default synchronous options
+    // every pass drains at its issue step — the pre-async behaviour,
+    // bitwise (see `runtime::async_eval`).
+    let mut validator: AsyncValidator<EvalSnapshot> =
+        AsyncValidator::new(opts.async_eval, val_cache.as_ref().map_or(0, |c| c.len()));
     let mut flops = FlopsCounter::default();
     let mut log = MetricsLog::default();
     let mut ctrl = vec![0f32; m.ctrl_len];
@@ -249,20 +291,49 @@ pub fn run_source_and_keep<'b>(
             break;
         }
         if let Some(cache) = &val_cache {
-            if es.due(t) {
+            let due = es.due(t);
+            if due || validator.in_flight().is_some() {
                 let vt = Timer::new();
-                let val_loss = session.eval_mean_loss_cached(cache)?;
-                let secs = vt.secs();
+                let evals_before = validator.stats.chunk_evals;
+                // Issue a pass when due, and advance any in-flight pass
+                // by one chunk; results come back in issue order, each
+                // evaluated against the snapshot pinned at its check
+                // step (not the parameters training has since reached).
+                let results = validator.on_step(
+                    t,
+                    due,
+                    || session.snapshot(),
+                    |snap, i| session.eval_batch_snapshot(snap, cache.get(i)),
+                )?;
+                let mut secs = vt.secs();
                 validation_secs += secs;
-                flops.record_validation(m, cache.len());
-                log.record_val(t, val_loss);
-                if es.record(val_loss, secs) {
+                // FLOPs track the chunk evals actually executed this step
+                // (not per applied result), so time and FLOPs agree even
+                // when a pass is later abandoned. Synchronous checks run
+                // the whole pass here — identical to the old accounting.
+                flops.record_validation(m, validator.stats.chunk_evals - evals_before);
+                let mut stop = false;
+                for r in &results {
+                    log.record_val(r.issued_at, r.val_loss);
+                    if es.record(r.val_loss, secs) {
+                        stop = true;
+                    }
+                    secs = 0.0;
+                }
+                if stop {
+                    // Applied at step t ≤ issued_at + k: the bounded
+                    // staleness the `--staleness` knob makes explicit.
                     stop_cause = StopCause::ValidationPatience;
                     break;
                 }
             }
         }
     }
+
+    // A pass still in flight here was overtaken by the end of training —
+    // budget exhausted, or the monitor froze the whole matrix before the
+    // stop signal arrived. Its result is discarded, never applied.
+    validator.abandon();
 
     let final_val_loss = match (&val_cache, opts.final_validation) {
         (Some(cache), true) => session.eval_mean_loss_cached(cache)?,
@@ -285,6 +356,7 @@ pub fn run_source_and_keep<'b>(
             final_val_loss,
             variant_swap_step: scheduler.swapped_at,
             timings,
+            async_eval: validator.stats,
         },
     })
 }

@@ -25,7 +25,9 @@ use crate::runtime::session::{decode_checkpoint, Session};
 
 /// Named parameter values extracted from a trained state.
 pub struct BaseCheckpoint {
+    /// Tensor name → values to copy into a fresh state.
     pub params: HashMap<String, Vec<f32>>,
+    /// Where the checkpoint came from (logging only).
     pub source: String,
 }
 
@@ -115,6 +117,7 @@ pub fn pretrain_checkpoint_with(
         final_validation: false,
         warm_start: None,
         pipeline: PipelineOptions::default(),
+        async_eval: Default::default(),
     };
     // reuse the same cosine schedule semantics as a real pretrain run
     let _ = CosineSchedule::new(cfg.run.lr, cfg.run.warmup_frac, steps);
@@ -161,6 +164,7 @@ pub fn pretrain_vlm_checkpoint_with(
         final_validation: false,
         warm_start: None,
         pipeline: PipelineOptions::default(),
+        async_eval: Default::default(),
     };
     let mut source =
         Prefetcher::spawn(FixedCycle::new(ds.train), opts.pipeline.prefetch_batches);

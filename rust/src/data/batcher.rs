@@ -49,10 +49,12 @@ pub struct BatchIter {
     pos: usize,
     batch_size: usize,
     rng: Rng,
+    /// Completed passes over the row set.
     pub epoch: usize,
 }
 
 impl BatchIter {
+    /// Iterator over `rows` with a seeded shuffle per epoch.
     pub fn new(rows: Vec<(Vec<i32>, Vec<i32>)>, batch_size: usize, seed: u64) -> Self {
         assert!(!rows.is_empty(), "no rows to batch");
         let order: Vec<usize> = (0..rows.len()).collect();
@@ -62,6 +64,7 @@ impl BatchIter {
         it
     }
 
+    /// Next `batch_size` rows (reshuffling at epoch boundaries).
     pub fn next_batch(&mut self) -> Batch {
         let mut tokens = Vec::with_capacity(self.batch_size * self.rows[0].0.len());
         let mut targets = Vec::with_capacity(tokens.capacity());
@@ -79,6 +82,7 @@ impl BatchIter {
         Batch { tokens, targets, patches: Vec::new() }
     }
 
+    /// Packed row count (one epoch = this many rows).
     pub fn n_rows(&self) -> usize {
         self.rows.len()
     }

@@ -15,17 +15,22 @@ use crate::data::vocab::{Vocab, BOS, EOS, PERIOD};
 use crate::util::rng::Rng;
 
 #[derive(Debug, Clone)]
+/// One generated sentence as token ids (BOS … EOS).
 pub struct Sentence {
+    /// Token ids including BOS/period/EOS.
     pub ids: Vec<i32>,
 }
 
+/// Sentence generator over a [`Vocab`]'s class ranges.
 pub struct GrammarGen<'v> {
+    /// The word classes sentences draw from.
     pub vocab: &'v Vocab,
     /// Zipf exponent for intra-class word choice.
     pub zipf: f64,
 }
 
 impl<'v> GrammarGen<'v> {
+    /// The default head-skewed generator (zipf 1.1).
     pub fn new(vocab: &'v Vocab) -> Self {
         Self { vocab, zipf: 1.1 }
     }

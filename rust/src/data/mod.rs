@@ -13,8 +13,11 @@ use crate::runtime::session::Batch;
 
 /// Everything a training run needs: train iterator + fixed val batches.
 pub struct Dataset {
+    /// Shuffled-epoch training iterator.
     pub train: batcher::BatchIter,
+    /// Fixed validation batches.
     pub val: Vec<Batch>,
+    /// The vocabulary both splits draw from.
     pub vocab: vocab::Vocab,
 }
 
@@ -26,8 +29,11 @@ pub struct Dataset {
 /// via [`lm_train_iter`], which is what keeps cached and uncached builds
 /// on identical batch streams.
 pub struct LmRows {
+    /// Packed training rows (pre-shuffle).
     pub train_rows: Vec<(Vec<i32>, Vec<i32>)>,
+    /// Fixed validation batches.
     pub val: Vec<Batch>,
+    /// The vocabulary both splits draw from.
     pub vocab: vocab::Vocab,
 }
 
@@ -94,12 +100,17 @@ pub fn build_vlm_pretrain(cfg: &RepoConfig, manifest: &Manifest) -> Result<VlmDa
 
 /// VLM dataset: scene/caption pairs packed to fixed shapes.
 pub struct VlmDataset {
+    /// Pre-packed training batches (cycled in order).
     pub train: Vec<Batch>,
+    /// Fixed validation batches.
     pub val: Vec<Batch>,
+    /// The caption vocabulary.
     pub vocab: vocab::Vocab,
+    /// Scene shape parameters (benchmarks reuse them).
     pub scene_cfg: multimodal::SceneConfig,
 }
 
+/// Build the VLM fine-tuning dataset (scenes + captions, packed).
 pub fn build_vlm(cfg: &RepoConfig, manifest: &Manifest) -> Result<VlmDataset> {
     let vocab = vocab::Vocab::build(manifest.vocab_size)?;
     let scene_cfg =

@@ -14,39 +14,55 @@ use crate::data::vocab::{Vocab, BOS, EOS, PERIOD};
 use crate::util::rng::Rng;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// One placed object: (color, shape) at a grid cell.
 pub struct Object {
+    /// Color index (< `SceneConfig::n_colors`).
     pub color: usize,
+    /// Shape index (< `SceneConfig::n_shapes`).
     pub shape: usize,
+    /// Patch-grid cell the object occupies.
     pub cell: usize,
 }
 
 #[derive(Debug, Clone)]
+/// A full scene: objects in raster order on a G×G grid.
 pub struct Scene {
+    /// Objects, sorted by cell (raster order).
     pub objects: Vec<Object>,
+    /// Grid side length G.
     pub grid: usize,
 }
 
 #[derive(Debug, Clone)]
+/// Scene-generation shape parameters, derived from the manifest.
 pub struct SceneConfig {
+    /// Patches per image (G²).
     pub n_patches: usize,
+    /// Feature size of one patch vector.
     pub patch_dim: usize,
+    /// Distinct colors (≤ caption color words).
     pub n_colors: usize,
+    /// Distinct shapes (≤ caption shape words).
     pub n_shapes: usize,
+    /// Additive patch noise amplitude.
     pub noise: f32,
 }
 
 impl SceneConfig {
+    /// Config fitting the manifest's patch shape and the vocab's caption words.
     pub fn for_model(n_patches: usize, patch_dim: usize, vocab: &Vocab) -> Self {
         let n_colors = (vocab.colors.len as usize).min(patch_dim / 3).max(2);
         let n_shapes = (vocab.shapes.len as usize).min(patch_dim / 3).max(2);
         SceneConfig { n_patches, patch_dim, n_colors, n_shapes, noise: 0.05 }
     }
 
+    /// Grid side length G = √n_patches.
     pub fn grid(&self) -> usize {
         (self.n_patches as f64).sqrt() as usize
     }
 }
 
+/// Sample a scene with 1–3 objects in distinct cells.
 pub fn gen_scene(cfg: &SceneConfig, r: &mut Rng) -> Scene {
     let n_obj = 1 + r.below(3.min(cfg.n_patches));
     let mut cells: Vec<usize> = (0..cfg.n_patches).collect();
@@ -145,11 +161,15 @@ pub fn corrupt_caption(
 
 /// A full (patches, caption) example.
 pub struct SceneExample {
+    /// Rendered patch features `[n_patches * patch_dim]`.
     pub patches: Vec<f32>,
+    /// Ground-truth caption token ids.
     pub caption: Vec<i32>,
+    /// The underlying scene (for corruptions).
     pub scene: Scene,
 }
 
+/// Generate `n` (patches, caption) examples from `seed`.
 pub fn generate(cfg: &SceneConfig, vocab: &Vocab, seed: u64, n: usize) -> Vec<SceneExample> {
     let mut r = Rng::new(seed);
     (0..n)

@@ -7,29 +7,39 @@
 
 use anyhow::{ensure, Result};
 
+/// Target padding id (masked from the loss).
 pub const PAD: i32 = -1; // target padding (masked from the loss)
+/// Beginning-of-sentence id.
 pub const BOS: i32 = 1;
+/// End-of-sentence id.
 pub const EOS: i32 = 2;
+/// Sentence-final period id.
 pub const PERIOD: i32 = 3;
+/// First non-reserved word id.
 pub const FIRST_WORD: i32 = 8; // ids below this are reserved/special
 
 /// A contiguous id range [start, start+len).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Range {
+    /// First id in the range.
     pub start: i32,
+    /// Number of ids.
     pub len: i32,
 }
 
 impl Range {
+    /// The `i`-th id (panics past the end).
     pub fn get(&self, i: usize) -> i32 {
         assert!((i as i32) < self.len);
         self.start + i as i32
     }
 
+    /// Is `id` inside the range?
     pub fn contains(&self, id: i32) -> bool {
         id >= self.start && id < self.start + self.len
     }
 
+    /// All ids, in order.
     pub fn ids(&self) -> impl Iterator<Item = i32> + '_ {
         self.start..self.start + self.len
     }
@@ -38,20 +48,31 @@ impl Range {
 /// The word classes of the grammar. Gender A/B drives agreement rules.
 #[derive(Debug, Clone)]
 pub struct Vocab {
+    /// The model's vocab budget the classes were fit into.
     pub vocab_size: usize,
+    /// Class-A determiners.
     pub det_a: Range,
+    /// Class-B determiners.
     pub det_b: Range,
+    /// Class-A adjectives.
     pub adj_a: Range,
+    /// Class-B adjectives.
     pub adj_b: Range,
+    /// Class-A (gender-A) nouns.
     pub noun_a: Range,
+    /// Class-B (gender-B) nouns.
     pub noun_b: Range,
     /// verbs preferring class-A / class-B objects (selectional restriction)
     pub verb_a: Range,
+    /// Verbs selecting class-B objects.
     pub verb_b: Range,
+    /// Adverbs (halves associate with the two verb classes).
     pub adv: Range,
     /// VLM caption words
     pub colors: Range,
+    /// VLM caption shape words.
     pub shapes: Range,
+    /// VLM caption position words.
     pub positions: Range,
 }
 
@@ -90,6 +111,7 @@ impl Vocab {
         Ok(v)
     }
 
+    /// 'a'/'b' for noun ids, None otherwise.
     pub fn gender_of_noun(&self, id: i32) -> Option<char> {
         if self.noun_a.contains(id) {
             Some('a')

@@ -12,20 +12,27 @@ use crate::data::multimodal::{self, SceneConfig};
 use crate::data::vocab::Vocab;
 use crate::util::rng::Rng;
 
+/// Options per multiple-choice question.
 pub const N_OPTIONS: usize = 4;
 
 /// One multiple-choice question: N_OPTIONS token sequences (+ optional
 /// shared image patches); `correct` indexes the faithful option.
 pub struct McQuestion {
+    /// Candidate token sequences (exactly `N_OPTIONS`).
     pub options: Vec<Vec<i32>>,
+    /// VLM: the image all options share.
     pub patches: Option<Vec<f32>>,
+    /// Index of the faithful option.
     pub correct: usize,
 }
 
+/// A named set of questions — one accuracy column.
 pub struct Suite {
+    /// Column name used in the tables.
     pub name: &'static str,
     /// The paper benchmark this column stands in for.
     pub paper_analogue: &'static str,
+    /// The suite's questions.
     pub questions: Vec<McQuestion>,
 }
 

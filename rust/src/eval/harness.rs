@@ -29,6 +29,7 @@ fn seq_to_row(ids: &[i32], t: usize) -> (Vec<i32>, Vec<i32>) {
 /// One suite packed into fixed-shape `eval_rows` batches (done once; the
 /// per-call packing cost was previously paid on every scoring pass).
 pub struct PackedSuite {
+    /// Suite name (table column).
     pub name: String,
     batches: Vec<Batch>,
     /// Correct-option index for each question, chunked per batch.
@@ -115,6 +116,7 @@ pub struct DeviceSuite {
 }
 
 impl DeviceSuite {
+    /// Suite name (table column).
     pub fn name(&self) -> &str {
         &self.name
     }

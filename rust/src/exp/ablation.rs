@@ -18,7 +18,9 @@ use super::{plan, scheduler, write_result, ExpOptions, JobResult};
 use crate::report::table::{pct, secs, Table};
 use crate::runtime::artifact::Client;
 
+/// τ grid of Tables 6/7.
 pub const TAUS: [f64; 4] = [0.01, 0.05, 0.1, 0.2];
+/// α grid of Tables 6/7.
 pub const ALPHAS: [f64; 4] = [0.1, 0.3, 0.5, 0.6];
 
 fn cell(r: &JobResult) -> (f64, f64, usize) {
@@ -26,6 +28,7 @@ fn cell(r: &JobResult) -> (f64, f64, usize) {
     (avg, r.outcome.wall_secs, r.outcome.steps_run)
 }
 
+/// Run the τ×α grid + design ablations and render Tables 6/7.
 pub fn run(client: &Client, opts: &ExpOptions, config_name: &str) -> Result<()> {
     let (graph, slots) = plan::ablation_plan(config_name, &TAUS, &ALPHAS)?;
     let runner = scheduler::DeviceRunner::new(client, opts);

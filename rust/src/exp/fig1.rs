@@ -20,6 +20,7 @@ use crate::report::figures::ascii_chart;
 use crate::runtime::artifact::Client;
 use crate::runtime::manifest::Manifest;
 
+/// Run the monitor-off probe-every-step job and render Figures 1/4a.
 pub fn run(client: &Client, opts: &ExpOptions, config_name: &str, layer: usize) -> Result<()> {
     let cfg = RepoConfig::by_name(config_name)?;
     let m = Manifest::load(&cfg.artifact_dir().join("manifest.json"))

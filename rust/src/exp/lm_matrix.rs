@@ -18,6 +18,7 @@ use crate::report::table::{pct, sci, secs, speedup, Table};
 use crate::runtime::artifact::Client;
 use crate::util::csv::CsvWriter;
 
+/// The three model scales of Tables 1/4 (display, fp config, lora config).
 pub const SCALES: [(&str, &str, &str); 3] = [
     // (display name, fp config, lora config)
     ("lm-tiny (0.12M)", "lm-tiny-fp", "lm-tiny-lora"),
@@ -25,6 +26,7 @@ pub const SCALES: [(&str, &str, &str); 3] = [
     ("lm-base (3.1M)", "lm-base-fp", "lm-base-lora"),
 ];
 
+/// Everything the LM-matrix renderers consume.
 pub struct MatrixResults {
     /// (scale display, artifact method, job)
     pub jobs: Vec<(String, String, JobResult)>,
@@ -32,6 +34,7 @@ pub struct MatrixResults {
     pub fig3_series: Vec<(String, Vec<(f64, f64)>)>,
 }
 
+/// Execute the matrix plan and collect per-cell results.
 pub fn run_matrix(
     client: &Client,
     opts: &ExpOptions,

@@ -24,13 +24,15 @@ use crate::coordinator::trainer::{self, StoppingMethod};
 /// Common knobs for all drivers (scaled down in `cargo bench`).
 #[derive(Debug, Clone)]
 pub struct ExpOptions {
-    /// Override [run].total_steps (None = use config).
+    /// Override `[run].total_steps` (None = use config).
     pub steps_override: Option<usize>,
     /// Questions per benchmark suite.
     pub questions: usize,
     /// Benchmark-suite RNG seed.
     pub bench_seed: u64,
+    /// Directory tables/figures/manifest are written under.
     pub out_dir: PathBuf,
+    /// Per-job progress lines on stdout.
     pub verbose: bool,
     /// Scheduler worker count (`--jobs` / `GRADES_JOBS`; 1 = sequential).
     pub jobs: usize,
@@ -53,6 +55,7 @@ impl Default for ExpOptions {
 }
 
 impl ExpOptions {
+    /// Scaled-down options for benches and smoke runs.
     pub fn quick(steps: usize, questions: usize) -> Self {
         ExpOptions {
             steps_override: Some(steps),
@@ -89,8 +92,11 @@ impl ExpOptions {
 /// Result of one (config, method) training + evaluation job.
 #[derive(Debug, Clone)]
 pub struct JobResult {
+    /// Config the job ran.
     pub config: String,
+    /// Stopping rule it trained under.
     pub method: StoppingMethod,
+    /// The training run's report.
     pub outcome: trainer::TrainOutcome,
     /// (suite name, accuracy %) pairs ending with ("Avg.", …).
     pub accuracies: Vec<(String, f64)>,
@@ -108,6 +114,7 @@ pub fn method_label(artifact_method: &str, stopping: StoppingMethod) -> String {
     }
 }
 
+/// Write one rendered artifact under `out_dir` and echo its path.
 pub fn write_result(opts: &ExpOptions, name: &str, content: &str) -> Result<PathBuf> {
     std::fs::create_dir_all(&opts.out_dir)?;
     let path = opts.out_dir.join(name);

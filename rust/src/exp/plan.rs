@@ -25,13 +25,18 @@ pub type JobId = usize;
 /// job runs (the ablation grid's τ×α cells, the design-choice swaps).
 #[derive(Debug, Clone, PartialEq)]
 pub enum ConfigPatch {
+    /// Override `[grades].tau`.
     Tau(f64),
+    /// Override `[grades].alpha` (grace fraction).
     Alpha(f64),
+    /// Override the monitored metric (l1_diff / l1_abs / l1_diff_rel).
     Metric(String),
+    /// Override freeze granularity ("matrix" / "layer").
     Granularity(String),
 }
 
 impl ConfigPatch {
+    /// Apply the mutation to a loaded config.
     pub fn apply(&self, cfg: &mut RepoConfig) {
         match self {
             ConfigPatch::Tau(v) => cfg.grades.tau = *v,
@@ -87,6 +92,14 @@ pub enum JobKind {
     Pretrain,
     /// Fine-tune (optionally from a warm checkpoint) and score.
     Train,
+    /// Score a finished [`JobKind::Train`] job's final weights on its
+    /// benchmark suites, as a job of its own. Decouples scoring from
+    /// training on the worker pool: the train job releases the device
+    /// token as soon as training ends and hands its weights across
+    /// threads as plain host data (the scheduler's `EvalPayload`), so
+    /// the eval chunk can run — and even outlive — the training job on
+    /// any worker (the async-eval runtime's scheduler-level half).
+    Eval,
 }
 
 /// One experiment job, declared as data.
@@ -96,14 +109,25 @@ pub struct JobSpec {
     pub id: String,
     /// Config / artifact name (`configs/<name>.toml`, `artifacts/<name>/`).
     pub config: String,
+    /// Stopping rule the job trains under.
     pub method: StoppingMethod,
+    /// Config mutations applied before the run.
     pub patches: Vec<ConfigPatch>,
+    /// Benchmark suites to score (None = skip scoring).
     pub eval: EvalKind,
+    /// Pretrain / train / standalone eval.
     pub kind: JobKind,
     /// Jobs that must complete before this one starts.
     pub deps: Vec<JobId>,
     /// Dependency whose checkpoint warm-starts this job (must be in `deps`).
     pub warm_from: Option<JobId>,
+    /// [`JobKind::Eval`] only: the train job whose final weights this
+    /// job scores (must be in `deps`).
+    pub eval_src: Option<JobId>,
+    /// Export this job's final weights as an `EvalPayload` for dependent
+    /// [`JobKind::Eval`] jobs. Set automatically by [`JobGraph::add`]
+    /// when an eval job names this job as its source.
+    pub export_state: bool,
     /// Per-job total-steps override; takes precedence over the global
     /// `ExpOptions::steps_override`.
     pub steps: Option<usize>,
@@ -116,6 +140,8 @@ pub struct JobSpec {
 }
 
 impl JobSpec {
+    /// A base-checkpoint job feeding dependents (never persisted: resume
+    /// goes through the warmstart disk cache instead).
     pub fn pretrain(id: impl Into<String>, config: impl Into<String>) -> Self {
         JobSpec {
             id: id.into(),
@@ -126,12 +152,16 @@ impl JobSpec {
             kind: JobKind::Pretrain,
             deps: Vec::new(),
             warm_from: None,
+            eval_src: None,
+            export_state: false,
             steps: None,
             probe_every: None,
             persist: false,
         }
     }
 
+    /// A fine-tune-and-score job (the grid-cell workhorse; persisted to
+    /// the run manifest by default).
     pub fn train(
         id: impl Into<String>,
         config: impl Into<String>,
@@ -147,12 +177,43 @@ impl JobSpec {
             kind: JobKind::Train,
             deps: Vec::new(),
             warm_from: None,
+            eval_src: None,
+            export_state: false,
             steps: None,
             probe_every: None,
             persist: true,
         }
     }
 
+    /// A standalone benchmark-evaluation job scoring `src`'s final
+    /// weights on the `eval` suites (see [`JobKind::Eval`]). `src` must
+    /// be a [`JobSpec::train`] job already in the graph; [`JobGraph::add`]
+    /// marks it to export its weights. Not persisted: the scoring is
+    /// cheap next to training and its inputs live only in memory.
+    pub fn score(
+        id: impl Into<String>,
+        config: impl Into<String>,
+        eval: EvalKind,
+        src: JobId,
+    ) -> Self {
+        JobSpec {
+            id: id.into(),
+            config: config.into(),
+            method: StoppingMethod::None,
+            patches: Vec::new(),
+            eval,
+            kind: JobKind::Eval,
+            deps: vec![src],
+            warm_from: None,
+            eval_src: Some(src),
+            export_state: false,
+            steps: None,
+            probe_every: None,
+            persist: false,
+        }
+    }
+
+    /// Set the config mutations.
     pub fn with_patches(mut self, patches: Vec<ConfigPatch>) -> Self {
         self.patches = patches;
         self
@@ -167,6 +228,7 @@ impl JobSpec {
         self
     }
 
+    /// Add a plain ordering dependency.
     pub fn after(mut self, dep: JobId) -> Self {
         if !self.deps.contains(&dep) {
             self.deps.push(dep);
@@ -174,11 +236,13 @@ impl JobSpec {
         self
     }
 
+    /// Per-job total-steps override.
     pub fn with_steps(mut self, steps: usize) -> Self {
         self.steps = Some(steps);
         self
     }
 
+    /// Probe-cadence override.
     pub fn with_probe_every(mut self, every: usize) -> Self {
         self.probe_every = Some(every);
         self
@@ -197,18 +261,41 @@ impl JobSpec {
 }
 
 /// A dependency-ordered set of jobs.
+///
+/// ```
+/// use grades::coordinator::trainer::StoppingMethod;
+/// use grades::exp::plan::{EvalKind, JobGraph, JobSpec};
+///
+/// let mut g = JobGraph::new();
+/// let pre = g.add(JobSpec::pretrain("pre", "lm-tiny-fp")).unwrap();
+/// let ft = g
+///     .add(
+///         JobSpec::train("ft", "lm-tiny-fp", StoppingMethod::GradEs, EvalKind::LmSuites)
+///             .warm(pre),
+///     )
+///     .unwrap();
+/// let eval = g.add(JobSpec::score("ft/eval", "lm-tiny-fp", EvalKind::LmSuites, ft)).unwrap();
+/// assert_eq!(g.children()[pre], vec![ft]);
+/// assert_eq!(g.children()[ft], vec![eval]);
+/// assert!(g.get(ft).export_state, "the eval job marked its source");
+/// g.validate().unwrap();
+/// ```
 #[derive(Debug, Default)]
 pub struct JobGraph {
+    /// Specs in insertion (= topological) order.
     pub jobs: Vec<JobSpec>,
 }
 
 impl JobGraph {
+    /// An empty graph.
     pub fn new() -> Self {
         JobGraph::default()
     }
 
     /// Add a spec; its deps must already be present (acyclic by
-    /// construction) and its id unique.
+    /// construction) and its id unique. Adding a [`JobKind::Eval`] job
+    /// flips `export_state` on its source train job so the runner knows
+    /// to hand the final weights across.
     pub fn add(&mut self, spec: JobSpec) -> Result<JobId> {
         let idx = self.jobs.len();
         for &d in &spec.deps {
@@ -217,21 +304,41 @@ impl JobGraph {
         if let Some(w) = spec.warm_from {
             ensure!(spec.deps.contains(&w), "job {:?}: warm_from {w} missing from deps", spec.id);
         }
+        if spec.kind == JobKind::Eval {
+            ensure!(spec.eval != EvalKind::None, "eval job {:?} scores no suites", spec.id);
+            let s = match spec.eval_src {
+                Some(s) => s,
+                None => bail!("eval job {:?} names no source train job", spec.id),
+            };
+            ensure!(spec.deps.contains(&s), "job {:?}: eval_src {s} missing from deps", spec.id);
+            ensure!(
+                self.jobs[s].kind == JobKind::Train,
+                "job {:?}: eval_src {:?} is not a train job",
+                spec.id,
+                self.jobs[s].id
+            );
+        }
         if self.jobs.iter().any(|j| j.id == spec.id) {
             bail!("duplicate job id {:?}", spec.id);
+        }
+        if let (JobKind::Eval, Some(s)) = (spec.kind, spec.eval_src) {
+            self.jobs[s].export_state = true;
         }
         self.jobs.push(spec);
         Ok(idx)
     }
 
+    /// The spec at `id`.
     pub fn get(&self, id: JobId) -> &JobSpec {
         &self.jobs[id]
     }
 
+    /// Job count.
     pub fn len(&self) -> usize {
         self.jobs.len()
     }
 
+    /// True when no jobs were added.
     pub fn is_empty(&self) -> bool {
         self.jobs.is_empty()
     }
@@ -257,6 +364,18 @@ impl JobGraph {
             }
             if let Some(w) = j.warm_from {
                 ensure!(j.deps.contains(&w), "job {:?}: warm_from not a dep", j.id);
+            }
+            if j.kind == JobKind::Eval {
+                let s = j.eval_src;
+                ensure!(s.is_some(), "eval job {:?} names no source", j.id);
+                let s = s.unwrap();
+                ensure!(j.deps.contains(&s), "job {:?}: eval_src not a dep", j.id);
+                ensure!(
+                    self.jobs[s].kind == JobKind::Train && self.jobs[s].export_state,
+                    "job {:?}: eval_src does not export its weights",
+                    j.id
+                );
+                ensure!(j.eval != EvalKind::None, "eval job {:?} scores no suites", j.id);
             }
         }
         Ok(())
@@ -316,7 +435,9 @@ pub fn lm_matrix_plan(scales: &[(&str, &str, &str)]) -> Result<(JobGraph, Matrix
 pub struct VlmSlots {
     /// Table 2/5 jobs: (artifact method, job), in render order.
     pub main: Vec<(String, JobId)>,
+    /// Table 3's vlm-nano baseline job.
     pub nano_base: JobId,
+    /// Table 3's vlm-nano +GradES job.
     pub nano_grades: JobId,
 }
 
@@ -522,6 +643,27 @@ mod tests {
         g.validate().unwrap();
         assert_eq!(g.get(slots.nano_base).eval, EvalKind::VlmNano);
         assert_eq!(g.get(g.get(slots.nano_base).warm_from.unwrap()).steps, Some(300));
+    }
+
+    #[test]
+    fn eval_jobs_validate_and_mark_their_source() {
+        let mut g = JobGraph::new();
+        let t = g
+            .add(JobSpec::train("t", "c", StoppingMethod::GradEs, EvalKind::None))
+            .unwrap();
+        assert!(!g.get(t).export_state);
+        let e = g.add(JobSpec::score("t/eval", "c", EvalKind::LmSuites, t)).unwrap();
+        assert!(g.get(t).export_state, "adding the eval job marks its source");
+        assert_eq!(g.get(e).kind, JobKind::Eval);
+        assert_eq!(g.get(e).eval_src, Some(t));
+        assert!(!g.get(e).persist);
+        assert_eq!(g.children()[t], vec![e]);
+        g.validate().unwrap();
+        // an eval job may not score nothing, nor a non-train source
+        assert!(g.add(JobSpec::score("bad", "c", EvalKind::None, t)).is_err());
+        let mut g2 = JobGraph::new();
+        let pre = g2.add(JobSpec::pretrain("pre", "c")).unwrap();
+        assert!(g2.add(JobSpec::score("bad2", "c", EvalKind::LmSuites, pre)).is_err());
     }
 
     #[test]

@@ -73,6 +73,7 @@ use crate::util::json::{self, Json};
 // ---------------------------------------------------------------------------
 
 #[derive(Debug, Clone)]
+/// Executor knobs, derived from `ExpOptions::scheduler`.
 pub struct SchedulerOptions {
     /// Worker count (1 = run inline on the calling thread, in plan order).
     pub jobs: usize,
@@ -88,6 +89,7 @@ pub struct SchedulerOptions {
     /// when its recorded fingerprint matches, so cells produced under
     /// `--quick`/`--steps` are never silently reused by a full run.
     pub settings: String,
+    /// Progress lines on stdout.
     pub verbose: bool,
 }
 
@@ -112,8 +114,41 @@ pub fn job_settings(spec: &JobSpec, global: &str) -> String {
 
 /// Effective worker count: `--jobs` flag wins, then the `GRADES_JOBS`
 /// environment value, then 1 (sequential). Always at least 1.
+///
+/// A malformed or zero `GRADES_JOBS` used to fall back to sequential
+/// *silently* — an easy way to believe a grid ran concurrently when it
+/// didn't. It still falls back (never fail a run over an env var), but
+/// now warns once on stderr. Accepted values: a positive integer;
+/// unset/empty means 1.
 pub fn resolve_jobs(flag: Option<usize>, env: Option<&str>) -> usize {
-    flag.or_else(|| env.and_then(|v| v.trim().parse().ok())).unwrap_or(1).max(1)
+    if let Some(n) = flag {
+        if n == 0 {
+            static WARNED_FLAG: std::sync::Once = std::sync::Once::new();
+            WARNED_FLAG.call_once(|| {
+                eprintln!(
+                    "[scheduler] --jobs 0 is not a worker count; running \
+                     sequentially (--jobs 1)"
+                );
+            });
+        }
+        return n.max(1);
+    }
+    match env.map(str::trim) {
+        None | Some("") => 1,
+        Some(v) => match v.parse::<usize>() {
+            Ok(n) if n >= 1 => n,
+            _ => {
+                static WARNED: std::sync::Once = std::sync::Once::new();
+                WARNED.call_once(|| {
+                    eprintln!(
+                        "[scheduler] ignoring GRADES_JOBS={v:?}: expected a positive \
+                         integer worker count; running sequentially (--jobs 1)"
+                    );
+                });
+                1
+            }
+        },
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -124,24 +159,37 @@ pub fn resolve_jobs(flag: Option<usize>, env: Option<&str>) -> usize {
 /// (and the small figure series) without re-running it.
 #[derive(Debug, Clone, PartialEq)]
 pub struct JobSummary {
+    /// Job id (the manifest key).
     pub id: String,
+    /// Config the job ran.
     pub config: String,
     /// Settings fingerprint the job ran under (see [`job_settings`]).
     pub settings: String,
     /// `StoppingMethod::label()` string.
     pub method: String,
+    /// Steps the run executed.
     pub steps_run: usize,
     /// "budget" | "frozen" | "patience".
     pub stop_cause: String,
+    /// Total wall seconds.
     pub wall_secs: f64,
+    /// Seconds inside validation passes.
     pub validation_secs: f64,
+    /// Seconds inside monitor probes.
     pub monitor_secs: f64,
+    /// Final validation loss.
     pub final_val_loss: f64,
+    /// Attn-frozen swap step, if any.
     pub variant_swap_step: Option<usize>,
+    /// Accounted FLOPs actually spent.
     pub flops_spent: f64,
+    /// Dense-equivalent FLOPs of the same steps.
     pub flops_dense: f64,
+    /// FLOPs inside validation.
     pub flops_validation: f64,
+    /// Steps the FLOPs counter recorded.
     pub flops_steps: usize,
+    /// Monitored component count.
     pub n_components: usize,
     /// Component indices frozen at the end of the run.
     pub frozen: Vec<usize>,
@@ -299,6 +347,7 @@ impl JobSummary {
             final_val_loss: self.final_val_loss,
             variant_swap_step: self.variant_swap_step,
             timings: Default::default(),
+            async_eval: Default::default(),
         };
         Ok(JobResult {
             config: self.config.clone(),
@@ -308,6 +357,7 @@ impl JobSummary {
         })
     }
 
+    /// Serialize for the run manifest.
     pub fn to_json(&self) -> Json {
         let mut m = BTreeMap::new();
         m.insert("id".to_string(), Json::Str(self.id.clone()));
@@ -359,6 +409,7 @@ impl JobSummary {
         Json::Obj(m)
     }
 
+    /// Deserialize one manifest entry.
     pub fn from_json(j: &Json) -> Result<Self> {
         let accuracies = j
             .get("accuracies")?
@@ -430,6 +481,7 @@ impl JobSummary {
 /// every repro target (ids are namespaced: `lm/…`, `vlm/…`, `ablation/…`).
 #[derive(Debug, Default)]
 pub struct RunManifest {
+    /// Completed-job summaries by job id.
     pub jobs: BTreeMap<String, JobSummary>,
 }
 
@@ -451,6 +503,7 @@ impl RunManifest {
         }
     }
 
+    /// Parse a manifest document (bad entries are skipped with a warning).
     pub fn parse(src: &str) -> Result<Self> {
         let j = json::parse(src)?;
         ensure!(j.get("version")?.as_usize()? == 1, "unsupported run-manifest version");
@@ -468,6 +521,7 @@ impl RunManifest {
         Ok(RunManifest { jobs })
     }
 
+    /// Serialize the whole manifest to JSON text.
     pub fn render(&self) -> String {
         let mut jobs = BTreeMap::new();
         for (k, v) in &self.jobs {
@@ -500,6 +554,7 @@ impl RunManifest {
 pub enum JobStatus {
     /// Ran (or was resumed/elided). Pretrain jobs carry no table result.
     Done { result: Option<JobResult>, summary: Option<JobSummary>, resumed: bool },
+    /// The runner returned an error or panicked.
     Failed(String),
     /// A transitive dependency failed; the job never ran.
     Skipped(String),
@@ -508,10 +563,12 @@ pub enum JobStatus {
 /// Per-job statuses, indexed by [`JobId`] (plan order).
 #[derive(Debug)]
 pub struct RunReport {
+    /// One status per job, in plan order.
     pub statuses: Vec<JobStatus>,
 }
 
 impl RunReport {
+    /// The job's table result, or why it has none.
     pub fn result(&self, id: JobId) -> Result<&JobResult> {
         match &self.statuses[id] {
             JobStatus::Done { result: Some(r), .. } => Ok(r),
@@ -534,6 +591,7 @@ impl RunReport {
         }
     }
 
+    /// The job's persisted summary, or why it has none.
     pub fn summary(&self, id: JobId) -> Result<&JobSummary> {
         match &self.statuses[id] {
             JobStatus::Done { summary: Some(s), .. } => Ok(s),
@@ -565,6 +623,7 @@ impl RunReport {
         Ok(())
     }
 
+    /// (ran, resumed, failed, skipped) tallies.
     pub fn counts(&self) -> (usize, usize, usize, usize) {
         let (mut ran, mut resumed, mut failed, mut skipped) = (0, 0, 0, 0);
         for s in &self.statuses {
@@ -579,6 +638,23 @@ impl RunReport {
     }
 }
 
+/// A finished training job's weights in cross-thread form, handed to
+/// dependent [`JobKind::Eval`] jobs.
+///
+/// Plain host data (`Send`): device snapshots can't cross workers — the
+/// `xla` binding's handles carry non-atomic refcounts — so the runner
+/// downloads the final state once and the eval job rehydrates it into a
+/// fresh session under its own hold of the device token. This is what
+/// lets an eval chunk outlive the training job that produced it.
+pub struct EvalPayload {
+    /// Config the weights belong to (must match the eval job's config).
+    pub config: String,
+    /// Full flat state (`manifest.state_len` f32s).
+    pub state: Vec<f32>,
+    /// Optimizer step the training run ended at.
+    pub step: usize,
+}
+
 /// What a runner hands back for one executed job.
 pub struct RunnerOutput {
     /// Table-facing result (None for pretrain jobs).
@@ -587,13 +663,23 @@ pub struct RunnerOutput {
     pub summary: Option<JobSummary>,
     /// Checkpoint for dependents (pretrain jobs).
     pub checkpoint: Option<Arc<BaseCheckpoint>>,
+    /// Final weights for dependent eval jobs (train jobs with
+    /// `export_state`).
+    pub eval_payload: Option<Arc<EvalPayload>>,
 }
 
 /// Executes a single job. The executor isolates panics, so a runner may
 /// panic without poisoning the pool. `Sync` because one runner instance
 /// is shared by every worker.
 pub trait JobRunner: Sync {
-    fn run(&self, spec: &JobSpec, warm: Option<Arc<BaseCheckpoint>>) -> Result<RunnerOutput>;
+    /// Run `spec`. `warm` is the checkpoint from `spec.warm_from` (when
+    /// set), `eval_src` the weights from `spec.eval_src` (eval jobs).
+    fn run(
+        &self,
+        spec: &JobSpec,
+        warm: Option<Arc<BaseCheckpoint>>,
+        eval_src: Option<Arc<EvalPayload>>,
+    ) -> Result<RunnerOutput>;
 }
 
 struct ExecState {
@@ -602,6 +688,14 @@ struct ExecState {
     waiting: Vec<usize>,
     ready: VecDeque<JobId>,
     checkpoints: HashMap<JobId, Arc<BaseCheckpoint>>,
+    /// Exported final weights, keyed by the producing train job — what a
+    /// dependent eval job consumes (host data, so freely `Send`). Entries
+    /// are dropped once the last consumer has claimed (or forfeited) its
+    /// copy, so full flat states don't accumulate across a grid run.
+    payloads: HashMap<JobId, Arc<EvalPayload>>,
+    /// Eval jobs still entitled to each train job's payload; at 0 the
+    /// payload is removed from `payloads`.
+    payload_consumers: Vec<usize>,
     /// Jobs without a final status yet (0 ⇒ the run is over).
     remaining: usize,
     manifest: RunManifest,
@@ -613,6 +707,15 @@ struct ExecCore<'g, 'o> {
     opts: &'o SchedulerOptions,
     state: Mutex<ExecState>,
     cv: Condvar,
+}
+
+/// Drop one consumer's claim on job `d`'s payload, freeing the shared
+/// entry (a full flat state) once no claimant remains.
+fn release_payload_claim(st: &mut ExecState, d: JobId) {
+    st.payload_consumers[d] = st.payload_consumers[d].saturating_sub(1);
+    if st.payload_consumers[d] == 0 {
+        st.payloads.remove(&d);
+    }
 }
 
 fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
@@ -667,6 +770,28 @@ impl ExecCore<'_, '_> {
         }
     }
 
+    fn take_eval_src(&self, spec: &JobSpec) -> Result<Option<Arc<EvalPayload>>> {
+        match spec.eval_src {
+            None => Ok(None),
+            Some(d) => {
+                let mut st = self.lock_state();
+                let p = st.payloads.get(&d).cloned().ok_or_else(|| {
+                    anyhow!(
+                        "job {:?}: final weights from {:?} unavailable (the source \
+                         resumed from the manifest, or did not export its state)",
+                        spec.id,
+                        self.graph.get(d).id
+                    )
+                })?;
+                // This consumer now holds its own Arc; once the last one
+                // has claimed its copy the shared entry can be dropped —
+                // payloads are full flat states and must not pile up.
+                release_payload_claim(&mut st, d);
+                Ok(Some(p))
+            }
+        }
+    }
+
     /// Record a finished job, persist it, and unblock/skip dependents.
     fn complete(&self, id: JobId, outcome: std::result::Result<RunnerOutput, String>) {
         let spec = self.graph.get(id);
@@ -676,6 +801,14 @@ impl ExecCore<'_, '_> {
             Ok(out) => {
                 if let Some(ck) = out.checkpoint {
                     st.checkpoints.insert(id, ck);
+                }
+                if let Some(p) = out.eval_payload {
+                    // A consumer may already have forfeited its claim (an
+                    // eval job skipped via another failed dep): only keep
+                    // the state while someone is still entitled to it.
+                    if st.payload_consumers[id] > 0 {
+                        st.payloads.insert(id, p);
+                    }
                 }
                 if spec.persist {
                     if let Some(sm) = &out.summary {
@@ -713,6 +846,14 @@ impl ExecCore<'_, '_> {
                             spec.id
                         )));
                         st.remaining -= 1;
+                        // A skipped eval job will never claim its source's
+                        // payload: forfeit its claim so the state can drop.
+                        let cs = self.graph.get(c);
+                        if cs.kind == JobKind::Eval {
+                            if let Some(s) = cs.eval_src {
+                                release_payload_claim(&mut st, s);
+                            }
+                        }
                         stack.extend(self.children[c].iter().copied());
                     }
                 }
@@ -732,7 +873,14 @@ impl ExecCore<'_, '_> {
                 return;
             }
         };
-        let caught = catch_unwind(AssertUnwindSafe(move || runner.run(spec, warm)));
+        let eval_src = match self.take_eval_src(spec) {
+            Ok(p) => p,
+            Err(e) => {
+                self.complete(id, Err(format!("{e:#}")));
+                return;
+            }
+        };
+        let caught = catch_unwind(AssertUnwindSafe(move || runner.run(spec, warm, eval_src)));
         let outcome = match caught {
             Ok(Ok(out)) => Ok(out),
             Ok(Err(e)) => Err(format!("{e:#}")),
@@ -767,7 +915,11 @@ pub fn execute(
     // (otherwise they run and hit the warmstart disk cache).
     let mut statuses: Vec<Option<JobStatus>> = (0..n).map(|_| None).collect();
     for (i, spec) in graph.jobs.iter().enumerate() {
-        if spec.kind == JobKind::Train && spec.persist && opts.resume {
+        // A train job feeding an eval job never resumes: the payload its
+        // dependent needs (the final weights) is not persisted, and eval
+        // jobs themselves are never in the manifest, so both re-run.
+        let feeds_eval = children[i].iter().any(|&c| graph.get(c).kind == JobKind::Eval);
+        if spec.kind == JobKind::Train && spec.persist && opts.resume && !feeds_eval {
             if let Some(s) = manifest.jobs.get(&spec.id) {
                 let want = job_settings(spec, &opts.settings);
                 if s.settings != want {
@@ -805,6 +957,12 @@ pub fn execute(
 
     let resolved = statuses.iter().filter(|s| s.is_some()).count();
     let remaining = n - resolved;
+    let mut payload_consumers = vec![0usize; n];
+    for spec in &graph.jobs {
+        if let Some(s) = spec.eval_src {
+            payload_consumers[s] += 1;
+        }
+    }
     let mut waiting = vec![0usize; n];
     let mut ready = VecDeque::new();
     for (i, spec) in graph.jobs.iter().enumerate() {
@@ -833,6 +991,8 @@ pub fn execute(
             waiting,
             ready,
             checkpoints: HashMap::new(),
+            payloads: HashMap::new(),
+            payload_consumers,
             remaining,
             manifest,
         }),
@@ -929,6 +1089,7 @@ pub struct DeviceRunner<'a> {
 }
 
 impl<'a> DeviceRunner<'a> {
+    /// Runner over one shared client with empty caches.
     pub fn new(client: &Client, opts: &'a ExpOptions) -> Self {
         DeviceRunner {
             opts,
@@ -1012,6 +1173,25 @@ impl<'a> DeviceRunner<'a> {
         Ok(packed)
     }
 
+    /// Device-resident suites for `key`, uploading `packed` once through
+    /// a stateless loader session on first use (the device token, held by
+    /// the caller, doubles as the upload lock). Shared by train-job
+    /// scoring and standalone eval jobs so the cache policy can't diverge.
+    fn device_suites<'r>(
+        arena: &'r mut DeviceArena,
+        bundle: &Bundle,
+        key: (String, EvalKind),
+        packed: &[PackedSuite],
+    ) -> Result<&'r Vec<DeviceSuite>> {
+        if !arena.suites.contains_key(&key) {
+            let loader = Session::new(bundle);
+            let dev: Vec<DeviceSuite> =
+                packed.iter().map(|p| p.upload(&loader)).collect::<Result<_>>()?;
+            arena.suites.insert(key.clone(), dev);
+        }
+        Ok(&arena.suites[&key])
+    }
+
     fn run_pretrain(&self, spec: &JobSpec) -> Result<RunnerOutput> {
         let steps = match spec.steps.or(self.opts.steps_override) {
             Some(s) => s,
@@ -1028,7 +1208,7 @@ impl<'a> DeviceRunner<'a> {
         if self.opts.verbose {
             println!("[{}] base checkpoint ready ({})", spec.id, ck.source);
         }
-        Ok(RunnerOutput { result: None, summary: None, checkpoint: Some(Arc::new(ck)) })
+        Ok(RunnerOutput { result: None, summary: None, checkpoint: Some(Arc::new(ck)), eval_payload: None })
     }
 
     fn run_train(
@@ -1089,16 +1269,9 @@ impl<'a> DeviceRunner<'a> {
             EvalKind::None => Vec::new(),
             kind => {
                 let key = (spec.config.clone(), kind);
-                if !arena.suites.contains_key(&key) {
-                    // Upload once per config through a stateless loader
-                    // session; the buffers then serve every cell's scoring.
-                    let loader = Session::new(&bundle);
-                    let packed = packed.as_ref().expect("packed suites built above");
-                    let dev: Vec<DeviceSuite> =
-                        packed.iter().map(|p| p.upload(&loader)).collect::<Result<_>>()?;
-                    arena.suites.insert(key.clone(), dev);
-                }
-                harness::score_device_suites(&trained.session, &arena.suites[&key])?
+                let packed = packed.as_ref().expect("packed suites built above");
+                let suites = Self::device_suites(arena, &bundle, key, packed)?;
+                harness::score_device_suites(&trained.session, suites)?
             }
         };
         if self.opts.verbose {
@@ -1114,6 +1287,17 @@ impl<'a> DeviceRunner<'a> {
                 o.freeze.n(),
             );
         }
+        // Dependent eval jobs consume the final weights as host data —
+        // downloaded once here, while we still hold the device token.
+        let eval_payload = if spec.export_state {
+            Some(Arc::new(EvalPayload {
+                config: spec.config.clone(),
+                step: trained.session.step,
+                state: trained.session.state_to_host()?,
+            }))
+        } else {
+            None
+        };
         let result = JobResult {
             config: spec.config.clone(),
             method: spec.method,
@@ -1128,15 +1312,82 @@ impl<'a> DeviceRunner<'a> {
                 &self.opts.settings_fingerprint(),
             )
         });
-        Ok(RunnerOutput { result: Some(result), summary, checkpoint: None })
+        Ok(RunnerOutput { result: Some(result), summary, checkpoint: None, eval_payload })
+    }
+
+    /// A [`JobKind::Eval`] job: rehydrate the source train job's final
+    /// weights into a fresh session and score the benchmark suites. The
+    /// device token is held only for the (cheap) scoring pass — training
+    /// wall time and scoring wall time decouple on the worker pool.
+    fn run_eval(
+        &self,
+        spec: &JobSpec,
+        src: Option<Arc<EvalPayload>>,
+    ) -> Result<RunnerOutput> {
+        let payload =
+            src.ok_or_else(|| anyhow!("{}: eval job without source weights", spec.id))?;
+        ensure!(
+            payload.config == spec.config,
+            "{}: source weights are for config {:?}, not {:?}",
+            spec.id,
+            payload.config,
+            spec.config
+        );
+        // --- host phase: packed suites (no client) ---
+        let host = self.host_res(&spec.config)?;
+        let packed = self.packed_suites(&spec.config, spec.eval, &host)?;
+
+        // --- device phase ---
+        let mut guard = self.lock_device();
+        let arena = &mut guard.0;
+        let bundle = arena.bundles.get(&spec.config)?;
+        let mut session = Session::new(&bundle);
+        session.state_from_host(&payload.state)?;
+        session.step = payload.step;
+        let key = (spec.config.clone(), spec.eval);
+        let suites = Self::device_suites(arena, &bundle, key, &packed)?;
+        let accuracies = harness::score_device_suites(&session, suites)?;
+        if self.opts.verbose {
+            let avg = accuracies.last().map(|a| a.1).unwrap_or(f64::NAN);
+            println!("[{}] scored at step {}: avg_acc={avg:.2}%", spec.id, payload.step);
+        }
+        // A minimal outcome: eval jobs train nothing, so only the
+        // accuracies (and the source step) carry information.
+        let outcome = TrainOutcome {
+            steps_run: payload.step,
+            stop_cause: StopCause::BudgetExhausted,
+            wall_secs: f64::NAN,
+            validation_secs: 0.0,
+            monitor_secs: 0.0,
+            flops: crate::coordinator::flops::FlopsCounter::default(),
+            log: MetricsLog::default(),
+            freeze: FreezeState::new(0),
+            final_val_loss: f64::NAN,
+            variant_swap_step: None,
+            timings: Default::default(),
+            async_eval: Default::default(),
+        };
+        let result = JobResult {
+            config: spec.config.clone(),
+            method: spec.method,
+            outcome,
+            accuracies,
+        };
+        Ok(RunnerOutput { result: Some(result), summary: None, checkpoint: None, eval_payload: None })
     }
 }
 
 impl JobRunner for DeviceRunner<'_> {
-    fn run(&self, spec: &JobSpec, warm: Option<Arc<BaseCheckpoint>>) -> Result<RunnerOutput> {
+    fn run(
+        &self,
+        spec: &JobSpec,
+        warm: Option<Arc<BaseCheckpoint>>,
+        eval_src: Option<Arc<EvalPayload>>,
+    ) -> Result<RunnerOutput> {
         match spec.kind {
             JobKind::Pretrain => self.run_pretrain(spec),
             JobKind::Train => self.run_train(spec, warm),
+            JobKind::Eval => self.run_eval(spec, eval_src),
         }
     }
 }

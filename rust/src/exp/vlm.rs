@@ -20,6 +20,7 @@ use crate::report::table::{pct, sci, secs, speedup, Table};
 use crate::runtime::artifact::Client;
 use crate::util::csv::CsvWriter;
 
+/// Run the VLM matrix and render Tables 2/3/5 + Figure 4b.
 pub fn run(client: &Client, opts: &ExpOptions) -> Result<()> {
     let pre_steps = opts.steps_override.unwrap_or(300);
     let (graph, slots) = plan::vlm_plan(pre_steps)?;

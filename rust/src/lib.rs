@@ -18,6 +18,11 @@
 //! state on device between steps (see `runtime::session`).
 //!
 //! Quickstart: `make artifacts && cargo run --release --example quickstart`.
+//! The full onboarding story lives in the repo's `README.md`; the module
+//! map, the pipelined runtime, the experiment scheduler and the
+//! async-eval design are documented in `docs/ARCHITECTURE.md`.
+
+#![warn(missing_docs)]
 
 pub mod config;
 pub mod coordinator;

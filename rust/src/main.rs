@@ -16,6 +16,7 @@ use grades::data;
 use grades::eval::{benchmarks, harness};
 use grades::exp::{self, ExpOptions};
 use grades::runtime::artifact::{Bundle, Client};
+use grades::runtime::async_eval::{AsyncEvalOptions, StalenessBound};
 use grades::runtime::pipeline::{BatchSource, FixedCycle, PipelineOptions, Prefetcher};
 
 struct Args {
@@ -92,6 +93,21 @@ fn cmd_train(args: &Args) -> Result<()> {
     if args.get("no-pipeline").is_some() {
         topts.pipeline = PipelineOptions::off();
     }
+    // Async chunked validation: --async-eval turns it on; --eval-chunk
+    // sets batches per train step (default 1); --staleness bounds how
+    // many steps late the stopping decision may land (default: whenever
+    // the chunked pass finishes; 0 = synchronous, bitwise-identical).
+    if args.get("async-eval").is_some()
+        || args.get("eval-chunk").is_some()
+        || args.get("staleness").is_some()
+    {
+        let chunk = args.usize_flag("eval-chunk")?.unwrap_or(1);
+        let staleness = match args.usize_flag("staleness")? {
+            Some(k) => StalenessBound { max_steps: k },
+            None => StalenessBound::unbounded(),
+        };
+        topts.async_eval = AsyncEvalOptions { chunk: chunk.max(1), staleness };
+    }
     let is_vlm = bundle.manifest.is_vlm();
     let depth = topts.pipeline.prefetch_batches;
     let trained = if is_vlm {
@@ -137,6 +153,19 @@ fn cmd_train(args: &Args) -> Result<()> {
         tm.probe_secs,
         tm.eval_secs,
     );
+    let ae = &o.async_eval;
+    if ae.issued > 0 {
+        println!(
+            "async eval: {} check(s) issued, {} applied ({} forced drains, {} displaced, {} abandoned) over {} chunk evals / {} snapshots",
+            ae.issued,
+            ae.completed,
+            ae.forced_drains,
+            ae.displaced,
+            ae.abandoned,
+            ae.chunk_evals,
+            tm.snapshots,
+        );
+    }
     if let Some(s) = o.variant_swap_step {
         println!("variant scheduler: swapped to attn-frozen graph at step {s}");
     }
@@ -257,6 +286,10 @@ fn main() -> Result<()> {
                 "usage: grades <train|repro|info|list> [flags]\n\
                  \n\
                  grades train --config lm-tiny-fp --method grades [--steps N] [--bench] [--log-dir D] [--save ckpt] [--no-pipeline]\n\
+                 \x20            [--async-eval] [--eval-chunk B] [--staleness K]\n\
+                 \x20   --async-eval    chunk classic-ES validation between train steps instead of blocking\n\
+                 \x20   --eval-chunk B  val batches evaluated per train step while a pass is in flight (default 1)\n\
+                 \x20   --staleness K   apply a check's stop decision at most K steps late (0 = synchronous)\n\
                  grades repro <lm|vlm|ablation|fig1|all> [--quick] [--steps N] [--questions Q] [--out D] [--jobs N] [--fresh]\n\
                  \x20   --jobs N   run experiment jobs on N workers (or GRADES_JOBS=N); 1 = sequential\n\
                  \x20   --fresh    ignore the resumable run manifest under --out and re-run every job\n\

@@ -3,15 +3,19 @@
 /// A simple table builder.
 #[derive(Debug, Default, Clone)]
 pub struct Table {
+    /// Column headers.
     pub header: Vec<String>,
+    /// Body rows (header arity each).
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// Table with the given header.
     pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
         Table { header: header.into_iter().map(Into::into).collect(), rows: Vec::new() }
     }
 
+    /// Append a row; panics on arity mismatch.
     pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) {
         let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
         assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
@@ -37,6 +41,7 @@ impl Table {
         }
     }
 
+    /// Render as an aligned markdown table.
     pub fn render(&self) -> String {
         let ncol = self.header.len();
         let mut width = vec![0usize; ncol];
@@ -70,14 +75,17 @@ pub fn pct(x: f64) -> String {
     format!("{x:.2}")
 }
 
+/// "1.57x"-style ratio.
 pub fn speedup(x: f64) -> String {
     format!("{x:.2}x")
 }
 
+/// Scientific notation with 2 decimals.
 pub fn sci(x: f64) -> String {
     format!("{x:.2e}")
 }
 
+/// Seconds with 1 decimal.
 pub fn secs(x: f64) -> String {
     format!("{x:.1}")
 }

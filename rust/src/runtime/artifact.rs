@@ -28,10 +28,12 @@ use super::xerr;
 pub struct Client(pub Arc<PjRtClient>);
 
 impl Client {
+    /// Create the shared CPU client.
     pub fn cpu() -> Result<Self> {
         Ok(Client(Arc::new(PjRtClient::cpu().map_err(xerr)?)))
     }
 
+    /// Parse + compile one HLO text file.
     pub fn compile_file(&self, path: &Path) -> Result<PjRtLoadedExecutable> {
         self.compile_proto(&load_proto(path)?, path)
     }
@@ -64,23 +66,47 @@ fn load_proto(path: &Path) -> Result<HloModuleProto> {
 struct SendCell<T>(T);
 unsafe impl<T> Send for SendCell<T> {}
 
+/// Accepted `GRADES_SERIAL_COMPILE` values: `1` forces the sequential
+/// compile loop; `0`, empty or unset keep the pipelined default. Anything
+/// else used to silently mean "pipelined" — now it warns once on stderr.
 fn serial_compile_forced() -> bool {
-    std::env::var("GRADES_SERIAL_COMPILE").map(|v| v == "1").unwrap_or(false)
+    match std::env::var("GRADES_SERIAL_COMPILE") {
+        Err(_) => false,
+        Ok(v) if v == "1" => true,
+        Ok(v) if v.is_empty() || v == "0" => false,
+        Ok(v) => {
+            static WARNED: std::sync::Once = std::sync::Once::new();
+            WARNED.call_once(|| {
+                eprintln!(
+                    "[artifact] ignoring GRADES_SERIAL_COMPILE={v:?}: expected 1 \
+                     (serial) or 0/unset (pipelined); using the pipelined load"
+                );
+            });
+            false
+        }
+    }
 }
 
 /// All executables for one config.
 pub struct Bundle {
+    /// The artifact's manifest.
     pub manifest: Manifest,
+    /// Artifact directory the bundle was loaded from.
     pub dir: PathBuf,
+    /// The client every executable was compiled on.
     pub client: Client,
+    /// Parameter/optimizer-state initializer (seed → state).
     pub init: PjRtLoadedExecutable,
+    /// The full fwd+bwd+update step.
     pub train_step: PjRtLoadedExecutable,
     /// Variant with attention dW matmuls removed from the backward graph —
     /// the scheduler hot-swaps to this once GradES froze all attention.
     pub train_step_attn_frozen: PjRtLoadedExecutable,
+    /// Forward-only loss → (loss_sum, count).
     pub eval_step: PjRtLoadedExecutable,
     /// Per-row losses for multiple-choice scoring → f32[2B].
     pub eval_rows: PjRtLoadedExecutable,
+    /// Metrics-prefix reader (no state change).
     pub probe: PjRtLoadedExecutable,
     /// Wall seconds the compile phase took (parallel or sequential).
     pub compile_secs: f64,
@@ -91,6 +117,7 @@ const EXE_KEYS: [&str; 6] =
     ["init", "train_step", "train_step_attn_frozen", "eval_step", "eval_rows", "probe"];
 
 impl Bundle {
+    /// Load + compile every executable of an artifact dir.
     pub fn load(client: &Client, dir: &Path) -> Result<Self> {
         Self::load_with(client, dir, !serial_compile_forced())
     }
@@ -172,6 +199,7 @@ pub struct BundleCache {
 }
 
 impl BundleCache {
+    /// Empty cache over `client`.
     pub fn new(client: &Client) -> Self {
         BundleCache { client: client.clone(), map: RefCell::new(HashMap::new()) }
     }
@@ -191,10 +219,12 @@ impl BundleCache {
         self.map.borrow().len()
     }
 
+    /// True before the first compile.
     pub fn is_empty(&self) -> bool {
         self.map.borrow().is_empty()
     }
 
+    /// The shared client the cache compiles on.
     pub fn client(&self) -> &Client {
         &self.client
     }

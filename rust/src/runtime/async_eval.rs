@@ -1,0 +1,551 @@
+//! Asynchronous chunked evaluation: validation passes that time-slice
+//! between train steps instead of stalling the loop.
+//!
+//! Classic early stopping pays for full validation passes on the step
+//! loop's critical path — the overhead that makes FP+ES *slower* than the
+//! no-ES baseline in the paper's Table 4, and the cost GradES's whole
+//! pitch is about avoiding. This module decouples the stopping signal
+//! from synchronous full-set inference (ISSUE 3 tentpole):
+//!
+//! * An [`EvalSnapshot`] pins the parameters a check evaluates: a
+//!   zero-copy `Rc` handle to the device-resident state buffer, taken at
+//!   the check step. The train loop keeps updating the *current* state —
+//!   every train step produces a fresh buffer — while the pinned buffer
+//!   stays alive for the in-flight pass.
+//! * An [`AsyncValidator`] runs the pass in *chunks*: each train step
+//!   advances the pass by [`AsyncEvalOptions::chunk`] batches of the
+//!   device-resident validation set ([`DeviceBatchCache`]), interleaving
+//!   eval executions between train steps so the prefetch / upload-ahead
+//!   pipeline never drains.
+//! * A [`StalenessBound`] makes the resulting lag explicit: the check
+//!   issued at step *t* must be applied by step *t + k*. `k = 0` drains
+//!   the pass at the issue step and reproduces today's synchronous
+//!   trajectories bitwise (the same batches, evaluated in the same order,
+//!   summed in the same order — see `must_drain`). `k > 0` lets the
+//!   decision land late in exchange for an unblocked step loop.
+//!
+//! The validator is generic over the snapshot type and evaluates through
+//! caller-supplied closures, so all of its scheduling policy is testable
+//! host-only (`rust/tests/async_eval.rs`); the trainer instantiates it
+//! with [`EvalSnapshot`] and [`Session::eval_batch_snapshot`].
+//!
+//! Threading: nothing here spawns a thread. "Background" means *behind
+//! the step loop*, not *on another thread* — the `xla` binding's client
+//! handles carry non-atomic refcounts, so all device work stays
+//! serialized on the thread that holds the device token (see the
+//! thread-safety contract in [`crate::runtime::session`] and
+//! `docs/ARCHITECTURE.md`). Chunked interleaving is what an exclusive
+//! device gives us instead of true overlap; host-resident weight copies
+//! ([`EvalSnapshot::to_host`], the scheduler's `EvalPayload`) are how
+//! evaluation crosses threads when it must.
+//!
+//! [`DeviceBatchCache`]: crate::runtime::pipeline::DeviceBatchCache
+//! [`Session::eval_batch_snapshot`]: crate::runtime::session::Session::eval_batch_snapshot
+
+use std::rc::Rc;
+
+use anyhow::Result;
+use xla::PjRtBuffer;
+
+use super::xerr;
+
+// ---------------------------------------------------------------------------
+// Policy types
+// ---------------------------------------------------------------------------
+
+/// How stale an asynchronous stopping decision may be.
+///
+/// A validation pass issued at step `t` must have its result applied —
+/// recorded by the stopping rule, possibly ending training — no later
+/// than step `t + max_steps`. The validator force-drains an unfinished
+/// pass when the bound is hit.
+///
+/// ```
+/// use grades::runtime::async_eval::StalenessBound;
+/// let k = StalenessBound { max_steps: 3 };
+/// assert!(!k.must_drain(10, 12)); // 2 steps old: may keep chunking
+/// assert!(k.must_drain(10, 13));  // 3 steps old: drain and apply now
+/// assert!(StalenessBound::sync().must_drain(10, 10)); // k = 0 ⇒ synchronous
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StalenessBound {
+    /// Maximum steps between issuing a check and applying its result.
+    /// `0` reproduces the synchronous (blocked) behaviour exactly.
+    pub max_steps: usize,
+}
+
+impl StalenessBound {
+    /// `k = 0`: every pass drains at its issue step (the blocked
+    /// baseline; trajectories are bitwise-identical to the pre-async
+    /// trainer).
+    pub fn sync() -> Self {
+        StalenessBound { max_steps: 0 }
+    }
+
+    /// No forced drain: a pass completes at its natural chunked pace
+    /// (⌈n_batches / chunk⌉ steps), bounded only by the next check
+    /// displacing it.
+    pub fn unbounded() -> Self {
+        StalenessBound { max_steps: usize::MAX }
+    }
+
+    /// Must a pass issued at `issued_at` be fully drained at step `now`?
+    pub fn must_drain(&self, issued_at: usize, now: usize) -> bool {
+        now.saturating_sub(issued_at) >= self.max_steps
+    }
+}
+
+/// Knobs for the asynchronous evaluation runtime, threaded through
+/// `TrainerOptions::async_eval`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AsyncEvalOptions {
+    /// Validation batches evaluated per train step while a pass is in
+    /// flight (clamped to ≥ 1). `usize::MAX` evaluates the whole set in
+    /// one slice.
+    pub chunk: usize,
+    /// When the pass's result must be applied (see [`StalenessBound`]).
+    pub staleness: StalenessBound,
+}
+
+impl AsyncEvalOptions {
+    /// The blocked baseline: the whole pass runs at the check step.
+    /// This is the default, and reproduces the pre-async trainer's
+    /// trajectories bitwise.
+    pub fn synchronous() -> Self {
+        AsyncEvalOptions { chunk: usize::MAX, staleness: StalenessBound::sync() }
+    }
+
+    /// Chunked background validation: `chunk` batches per step, result
+    /// applied within `max_steps` of the check (`--async-eval`).
+    pub fn overlapped(chunk: usize, max_steps: usize) -> Self {
+        AsyncEvalOptions {
+            chunk: chunk.max(1),
+            staleness: StalenessBound { max_steps },
+        }
+    }
+
+    /// Does this configuration ever leave a pass in flight?
+    pub fn is_synchronous(&self) -> bool {
+        self.staleness.max_steps == 0
+    }
+}
+
+impl Default for AsyncEvalOptions {
+    fn default() -> Self {
+        AsyncEvalOptions::synchronous()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Snapshots
+// ---------------------------------------------------------------------------
+
+/// Parameters pinned at a past step for asynchronous evaluation.
+///
+/// Device-resident and zero-copy: train steps never mutate a state buffer
+/// in place (each step's executable returns a *new* buffer), so pinning
+/// the weights a check evaluates is just keeping the old buffer's `Rc`
+/// alive while `Session::state` moves on. For the cross-thread /
+/// host-resident path — an eval job scoring a finished training job on
+/// another scheduler worker — downgrade to plain host data with
+/// [`EvalSnapshot::to_host`] and rehydrate with
+/// [`Session::upload_snapshot`].
+///
+/// [`Session::upload_snapshot`]: crate::runtime::session::Session::upload_snapshot
+pub struct EvalSnapshot {
+    pub(crate) state: Rc<PjRtBuffer>,
+    /// Optimizer step the snapshot pins (1-based, like `Session::step`).
+    pub step: usize,
+}
+
+impl EvalSnapshot {
+    pub(crate) fn new(state: Rc<PjRtBuffer>, step: usize) -> Self {
+        EvalSnapshot { state, step }
+    }
+
+    /// Download the pinned state to host (plain `Send` data — the only
+    /// form in which evaluation state may cross threads).
+    pub fn to_host(&self) -> Result<Vec<f32>> {
+        self.state.to_literal_sync().map_err(xerr)?.to_vec::<f32>().map_err(xerr)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Results + instrumentation
+// ---------------------------------------------------------------------------
+
+/// The outcome of one (possibly chunked) validation pass.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvalResult {
+    /// Step the check was issued at — the step whose parameters the
+    /// loss describes (and the step `MetricsLog::record_val` logs it at).
+    pub issued_at: usize,
+    /// Step the result is applied at; `applied_at - issued_at ≤ k`.
+    pub applied_at: usize,
+    /// Mean validation loss over the full pass (NaN for an empty set),
+    /// summed in cache order — bitwise-identical to
+    /// `Session::eval_mean_loss_cached` on the same batches.
+    pub val_loss: f64,
+    /// Batches evaluated (the full cache length).
+    pub batches: usize,
+    /// True when the pass was drained early — the staleness bound was
+    /// hit, or a newer check displaced it — rather than finishing at
+    /// its natural chunked pace.
+    pub forced: bool,
+}
+
+/// Counters describing how the asynchronous runtime behaved in one run.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AsyncEvalStats {
+    /// Validation passes issued (= checks that came due).
+    pub issued: usize,
+    /// Passes whose result was applied.
+    pub completed: usize,
+    /// Passes drained early because the staleness bound was hit.
+    pub forced_drains: usize,
+    /// Passes drained because a newer check displaced them.
+    pub displaced: usize,
+    /// Passes abandoned because training ended for another reason (e.g.
+    /// the monitored matrix froze before the stop signal arrived).
+    pub abandoned: usize,
+    /// Individual batch evaluations executed across all passes.
+    pub chunk_evals: usize,
+}
+
+/// Progress of the pass currently in flight (see
+/// [`AsyncValidator::in_flight`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InFlight {
+    /// Step the pass was issued at.
+    pub issued_at: usize,
+    /// Batches already evaluated.
+    pub batches_done: usize,
+    /// Batches in the full pass.
+    pub batches_total: usize,
+}
+
+// ---------------------------------------------------------------------------
+// The validator
+// ---------------------------------------------------------------------------
+
+/// One in-flight chunked pass: the pinned snapshot plus partial sums.
+struct PendingPass<S> {
+    snapshot: S,
+    issued_at: usize,
+    cursor: usize,
+    loss_sum: f64,
+    count_sum: f64,
+}
+
+impl<S> PendingPass<S> {
+    fn new(snapshot: S, issued_at: usize) -> Self {
+        PendingPass { snapshot, issued_at, cursor: 0, loss_sum: 0.0, count_sum: 0.0 }
+    }
+
+    fn finish(self, applied_at: usize, forced: bool) -> EvalResult {
+        EvalResult {
+            issued_at: self.issued_at,
+            applied_at,
+            // Same reduction as `eval_mean_loss_cached`: sum in cache
+            // order, divide once — bitwise-equal for equal inputs.
+            val_loss: if self.count_sum > 0.0 {
+                self.loss_sum / self.count_sum
+            } else {
+                f64::NAN
+            },
+            batches: self.cursor,
+            forced,
+        }
+    }
+}
+
+/// Drives chunked validation passes against pinned snapshots.
+///
+/// Generic over the snapshot type `S` and fed by closures, so the whole
+/// scheduling policy — chunk pacing, forced drains, displacement, k = 0
+/// equivalence — is testable without a device. The trainer instantiates
+/// `AsyncValidator<EvalSnapshot>` with `Session::snapshot` /
+/// `Session::eval_batch_snapshot` over the device-resident val cache.
+///
+/// Results come back in issue order; at most two per step (an in-flight
+/// pass displaced by a new check, then the new check's own k = 0 drain).
+pub struct AsyncValidator<S> {
+    opts: AsyncEvalOptions,
+    n_batches: usize,
+    pass: Option<PendingPass<S>>,
+    /// Runtime counters (reported through `TrainOutcome::async_eval`).
+    pub stats: AsyncEvalStats,
+}
+
+impl<S> AsyncValidator<S> {
+    /// A validator over a fixed validation set of `n_batches` batches.
+    pub fn new(opts: AsyncEvalOptions, n_batches: usize) -> Self {
+        AsyncValidator { opts, n_batches, pass: None, stats: AsyncEvalStats::default() }
+    }
+
+    /// The pass currently in flight, if any.
+    pub fn in_flight(&self) -> Option<InFlight> {
+        self.pass.as_ref().map(|p| InFlight {
+            issued_at: p.issued_at,
+            batches_done: p.cursor,
+            batches_total: self.n_batches,
+        })
+    }
+
+    /// Run `eval` over `p`'s batches up to `target` (the single place
+    /// chunks execute and accumulate, so the k = 0 and chunked paths
+    /// cannot diverge). `target = n_batches` drains the pass fully.
+    fn advance_to<E>(&mut self, p: &mut PendingPass<S>, target: usize, eval: &mut E) -> Result<()>
+    where
+        E: FnMut(&S, usize) -> Result<(f64, f64)>,
+    {
+        while p.cursor < target {
+            let (l, c) = eval(&p.snapshot, p.cursor)?;
+            p.loss_sum += l;
+            p.count_sum += c;
+            p.cursor += 1;
+            self.stats.chunk_evals += 1;
+        }
+        Ok(())
+    }
+
+    /// Advance the runtime at train step `t`.
+    ///
+    /// `due` says whether the stopping rule wants a new check issued at
+    /// this step (`ClassicEs::due`). `snap` pins the current parameters
+    /// (called at most once, only when `due`); `eval` evaluates one
+    /// validation batch against a pinned snapshot, returning the batch's
+    /// `(loss_sum, token_count)` exactly like `Session::eval_batch`.
+    ///
+    /// Returns the results that became applicable at this step, in issue
+    /// order. The caller records each into the stopping rule — and, if
+    /// one triggers a stop, training ends at step `t` = `applied_at`,
+    /// which the staleness bound keeps within `k` of `issued_at`.
+    pub fn on_step<F, E>(
+        &mut self,
+        t: usize,
+        due: bool,
+        snap: F,
+        mut eval: E,
+    ) -> Result<Vec<EvalResult>>
+    where
+        F: FnOnce() -> Result<S>,
+        E: FnMut(&S, usize) -> Result<(f64, f64)>,
+    {
+        let mut out = Vec::new();
+
+        // 1. Advance the in-flight pass by one chunk; complete it if it
+        //    reaches the end, or force-drain when the bound is hit.
+        if let Some(mut p) = self.pass.take() {
+            let forced = self.opts.staleness.must_drain(p.issued_at, t);
+            let budget = self.opts.chunk.max(1);
+            // saturating: `chunk` may be usize::MAX (whole set per slice)
+            let natural_finish = p.cursor.saturating_add(budget) >= self.n_batches;
+            let target = if forced {
+                self.n_batches
+            } else {
+                p.cursor.saturating_add(budget).min(self.n_batches)
+            };
+            self.advance_to(&mut p, target, &mut eval)?;
+            if p.cursor >= self.n_batches {
+                let was_forced = forced && !natural_finish;
+                if was_forced {
+                    self.stats.forced_drains += 1;
+                }
+                self.stats.completed += 1;
+                out.push(p.finish(t, was_forced));
+            } else {
+                self.pass = Some(p);
+            }
+        }
+
+        // 2. A new check came due. A still-unfinished older pass is
+        //    displaced: drained now so results apply in issue order.
+        if due {
+            if let Some(mut p) = self.pass.take() {
+                self.advance_to(&mut p, self.n_batches, &mut eval)?;
+                self.stats.displaced += 1;
+                self.stats.completed += 1;
+                out.push(p.finish(t, true));
+            }
+            let mut p = PendingPass::new(snap()?, t);
+            self.stats.issued += 1;
+            if self.opts.staleness.max_steps == 0 || self.n_batches == 0 {
+                // k = 0 (or an empty set): the synchronous path — evaluate
+                // the whole pass at the issue step, exactly like the
+                // blocked baseline.
+                self.advance_to(&mut p, self.n_batches, &mut eval)?;
+                self.stats.completed += 1;
+                out.push(p.finish(t, false));
+            } else {
+                self.pass = Some(p);
+            }
+        }
+
+        Ok(out)
+    }
+
+    /// Discard the in-flight pass: training ended for another reason
+    /// (budget exhausted, or the GradES monitor froze the whole matrix
+    /// before the stop signal arrived). Returns the abandoned pass's
+    /// issue step.
+    pub fn abandon(&mut self) -> Option<usize> {
+        self.pass.take().map(|p| {
+            self.stats.abandoned += 1;
+            p.issued_at
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Synthetic per-batch losses; snapshots are just the issue step, and
+    /// eval checks the pinned step to prove chunks use the snapshot, not
+    /// the advancing step counter.
+    fn losses(n: usize) -> Vec<(f64, f64)> {
+        (0..n).map(|i| (1.0 + (i as f64) * 0.5, 2.0)).collect()
+    }
+
+    #[test]
+    fn k0_drains_at_issue_step_with_cache_order_sum() {
+        let data = losses(4);
+        let mut v = AsyncValidator::new(AsyncEvalOptions::synchronous(), data.len());
+        let results = v
+            .on_step(10, true, || Ok(10usize), |&s, i| {
+                assert_eq!(s, 10);
+                Ok(data[i])
+            })
+            .unwrap();
+        assert_eq!(results.len(), 1);
+        let r = results[0];
+        assert_eq!((r.issued_at, r.applied_at, r.batches, r.forced), (10, 10, 4, false));
+        // same reduction as the inline loop
+        let (mut ls, mut cs) = (0.0, 0.0);
+        for &(l, c) in &data {
+            ls += l;
+            cs += c;
+        }
+        assert_eq!(r.val_loss.to_bits(), (ls / cs).to_bits());
+        assert!(v.in_flight().is_none());
+        assert_eq!(v.stats.issued, 1);
+        assert_eq!(v.stats.completed, 1);
+        assert_eq!(v.stats.forced_drains, 0);
+    }
+
+    #[test]
+    fn chunked_pass_completes_at_natural_pace() {
+        let data = losses(5);
+        let mut v = AsyncValidator::new(AsyncEvalOptions::overlapped(2, usize::MAX), data.len());
+        let mut eval_calls = 0usize;
+        let mut run = |v: &mut AsyncValidator<usize>, t: usize, due: bool| {
+            v.on_step(t, due, || Ok(t), |_, i| {
+                eval_calls += 1;
+                Ok(data[i])
+            })
+            .unwrap()
+        };
+        assert!(run(&mut v, 10, true).is_empty()); // issued, 0 evaluated
+        assert_eq!(v.in_flight().unwrap().batches_done, 0);
+        assert!(run(&mut v, 11, false).is_empty()); // 2 evaluated
+        assert_eq!(v.in_flight().unwrap().batches_done, 2);
+        assert!(run(&mut v, 12, false).is_empty()); // 4 evaluated
+        let done = run(&mut v, 13, false); // 5th evaluated → complete
+        assert_eq!(done.len(), 1);
+        assert_eq!((done[0].issued_at, done[0].applied_at), (10, 13));
+        assert!(!done[0].forced);
+        assert_eq!(eval_calls, 5);
+        assert_eq!(v.stats.chunk_evals, 5);
+    }
+
+    #[test]
+    fn staleness_bound_forces_the_drain() {
+        let data = losses(8);
+        // chunk 1, k = 2: issued at 10, advances at 11 and 12; at 12 the
+        // bound hits and the remaining 6 batches drain in one slice.
+        let mut v = AsyncValidator::new(AsyncEvalOptions::overlapped(1, 2), data.len());
+        let mut run = |v: &mut AsyncValidator<usize>, t: usize, due: bool| {
+            v.on_step(t, due, || Ok(t), |_, i| Ok(data[i])).unwrap()
+        };
+        assert!(run(&mut v, 10, true).is_empty());
+        assert!(run(&mut v, 11, false).is_empty());
+        let done = run(&mut v, 12, false);
+        assert_eq!(done.len(), 1);
+        assert_eq!((done[0].issued_at, done[0].applied_at), (10, 12));
+        assert!(done[0].forced);
+        assert_eq!(done[0].batches, 8);
+        assert_eq!(v.stats.forced_drains, 1);
+    }
+
+    #[test]
+    fn new_check_displaces_the_inflight_pass_in_issue_order() {
+        let data = losses(6);
+        let mut v = AsyncValidator::new(AsyncEvalOptions::overlapped(1, usize::MAX), data.len());
+        let mut run = |v: &mut AsyncValidator<usize>, t: usize, due: bool| {
+            v.on_step(t, due, || Ok(t), |_, i| Ok(data[i])).unwrap()
+        };
+        assert!(run(&mut v, 10, true).is_empty());
+        assert!(run(&mut v, 11, false).is_empty());
+        // check due at 12 while the pass from 10 has 1/6 done: the old
+        // pass drains first, then the new one starts chunking.
+        let done = run(&mut v, 12, true);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].issued_at, 10);
+        assert!(done[0].forced);
+        assert_eq!(v.stats.displaced, 1);
+        let inflight = v.in_flight().unwrap();
+        assert_eq!(inflight.issued_at, 12);
+        assert_eq!(inflight.batches_done, 0);
+    }
+
+    #[test]
+    fn empty_validation_set_completes_immediately_with_nan() {
+        let mut v: AsyncValidator<usize> =
+            AsyncValidator::new(AsyncEvalOptions::overlapped(1, 5), 0);
+        let done = v.on_step(3, true, || Ok(3), |_, _| unreachable!("no batches")).unwrap();
+        assert_eq!(done.len(), 1);
+        assert!(done[0].val_loss.is_nan());
+        assert_eq!(done[0].batches, 0);
+    }
+
+    #[test]
+    fn abandon_discards_the_pass_and_counts_it() {
+        let data = losses(4);
+        let mut v = AsyncValidator::new(AsyncEvalOptions::overlapped(1, usize::MAX), data.len());
+        v.on_step(5, true, || Ok(5usize), |_, i| Ok(data[i])).unwrap();
+        assert!(v.in_flight().is_some());
+        assert_eq!(v.abandon(), Some(5));
+        assert!(v.in_flight().is_none());
+        assert_eq!(v.abandon(), None);
+        assert_eq!(v.stats.abandoned, 1);
+        assert_eq!(v.stats.completed, 0);
+    }
+
+    #[test]
+    fn snapshot_is_pinned_across_chunks() {
+        // Each eval sees the snapshot from the *issue* step even though
+        // the step counter keeps advancing — the whole point of pinning.
+        let data = losses(3);
+        let mut v = AsyncValidator::new(AsyncEvalOptions::overlapped(1, usize::MAX), data.len());
+        for t in 10..=13 {
+            let due = t == 10;
+            v.on_step(t, due, || Ok(10usize), |&s, i| {
+                assert_eq!(s, 10, "chunk at t={} must see the pinned snapshot", i);
+                Ok(data[i])
+            })
+            .unwrap();
+        }
+        assert_eq!(v.stats.completed, 1);
+    }
+
+    #[test]
+    fn options_defaults_are_synchronous() {
+        let d = AsyncEvalOptions::default();
+        assert!(d.is_synchronous());
+        assert_eq!(d, AsyncEvalOptions::synchronous());
+        assert!(!AsyncEvalOptions::overlapped(1, 8).is_synchronous());
+        // chunk is clamped to ≥ 1
+        assert_eq!(AsyncEvalOptions::overlapped(0, 8).chunk, 1);
+    }
+}

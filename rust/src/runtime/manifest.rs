@@ -11,8 +11,11 @@ use crate::util::json::{self, Json};
 /// One GradES-monitored component (a projection matrix, or its LoRA pair).
 #[derive(Debug, Clone)]
 pub struct Component {
+    /// Index in manifest order (= ctrl-mask / metrics slot).
     pub idx: usize,
+    /// Stable name, e.g. `language.3.q`.
     pub name: String,
+    /// Transformer block index.
     pub layer: usize,
     /// q|k|v|o|gate|up|down
     pub kind: String,
@@ -20,20 +23,29 @@ pub struct Component {
     pub group: String,
     /// "language" | "vision"
     pub tower: String,
+    /// Parameters this component owns.
     pub n_params: usize,
+    /// Underlying tensor names (two for a LoRA pair).
     pub tensors: Vec<String>,
 }
 
 #[derive(Debug, Clone)]
+/// One flat-state tensor's location and metadata.
 pub struct ParamInfo {
+    /// Tensor name.
     pub name: String,
+    /// Logical shape.
     pub shape: Vec<usize>,
+    /// Offset (in f32s) into the flat state buffer.
     pub offset: usize,
+    /// False for buffers the optimizer never updates.
     pub trainable: bool,
+    /// Owning monitored component, if any.
     pub component: Option<usize>,
 }
 
 impl ParamInfo {
+    /// Element count (product of the shape).
     pub fn size(&self) -> usize {
         self.shape.iter().product()
     }
@@ -42,41 +54,72 @@ impl ParamInfo {
 /// Analytic per-token FLOPs (python-side `flops_summary`).
 #[derive(Debug, Clone)]
 pub struct FlopsInfo {
+    /// Forward matmul FLOPs per token.
     pub fwd_per_token: f64,
+    /// Backward input-gradient (dX) FLOPs per token.
     pub bwd_dx_per_token: f64,
+    /// Per-component forward FLOPs (≈ its dW backward cost).
     pub per_component_fwd: BTreeMap<String, f64>,
+    /// Sequence-quadratic attention term per token.
     pub attn_quadratic_per_token: f64,
+    /// LM-head matmul FLOPs per token.
     pub head_per_token: f64,
 }
 
 #[derive(Debug, Clone)]
+/// Everything the coordinator needs to know about one compiled
+/// artifact: shapes, components, buffer layouts, FLOPs, executables.
 pub struct Manifest {
+    /// Config/artifact name.
     pub name: String,
+    /// "lm" or "vlm".
     pub kind: String, // "lm" | "vlm"
+    /// "fp" (full parameter) or "lora".
     pub method: String,
+    /// "adamw" or "sgd" (decides ctrl[0] step-sensitivity).
     pub optimizer: String,
+    /// Kernel backend the graphs were lowered with ("xla"/"pallas").
     pub kernel_impl: String,
+    /// Fixed batch size B every executable was compiled for.
     pub batch_size: usize,
+    /// Fixed sequence length T.
     pub seq_len: usize,
+    /// Tokenizer vocabulary size.
     pub vocab_size: usize,
+    /// VLM: image patches per example (0 for LMs).
     pub n_patches: usize,
+    /// VLM: flattened patch feature size (0 for LMs).
     pub patch_dim: usize,
+    /// Flat device-state length in f32s (params + opt state + metrics).
     pub state_len: usize,
+    /// Length of the probe's metrics prefix.
     pub metrics_len: usize,
+    /// Length of the per-step ctrl vector.
     pub ctrl_len: usize,
+    /// Monitored component count.
     pub n_components: usize,
+    /// Offset of the Gdiff block inside the metrics prefix.
     pub gdiff_offset: usize,
+    /// Offset of the Gabs block inside the metrics prefix.
     pub gabs_offset: usize,
+    /// Offset of the freeze mask inside the ctrl vector.
     pub ctrl_mask_offset: usize,
+    /// Monitored components, in index order.
     pub components: Vec<Component>,
+    /// Flat-state layout.
     pub params: Vec<ParamInfo>,
+    /// Total parameter count.
     pub n_params_total: usize,
+    /// Trainable parameter count (≠ total under LoRA).
     pub n_params_trainable: usize,
+    /// Analytic per-token FLOPs.
     pub flops: FlopsInfo,
+    /// Executable key → HLO file name.
     pub executables: BTreeMap<String, String>,
 }
 
 impl Manifest {
+    /// Load and validate `manifest.json`.
     pub fn load(path: &Path) -> Result<Self> {
         let src = std::fs::read_to_string(path)
             .with_context(|| format!("reading manifest {path:?} (run `make artifacts`?)"))?;
@@ -84,6 +127,7 @@ impl Manifest {
         Self::from_json(&j)
     }
 
+    /// Typed view of an already-parsed manifest document.
     pub fn from_json(j: &Json) -> Result<Self> {
         let components = j
             .get("components")?
@@ -184,10 +228,12 @@ impl Manifest {
         })
     }
 
+    /// Is this a two-tower VLM artifact?
     pub fn is_vlm(&self) -> bool {
         self.kind == "vlm"
     }
 
+    /// Look up a tensor by name.
     pub fn param(&self, name: &str) -> Option<&ParamInfo> {
         self.params.iter().find(|p| p.name == name)
     }

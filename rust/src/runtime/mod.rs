@@ -2,6 +2,7 @@
 //! hot path (adapted from /opt/xla-example/load_hlo/).
 
 pub mod artifact;
+pub mod async_eval;
 pub mod manifest;
 pub mod pipeline;
 pub mod session;

@@ -35,6 +35,8 @@ use crate::data::batcher::BatchIter;
 /// vectors ([`FixedCycle`]) and ad-hoc closures ([`FnSource`]), and is what
 /// [`Prefetcher`] moves onto its worker thread.
 pub trait BatchSource {
+    /// Produce the next batch (sources are infinite: epoch wrap-around
+    /// is the source's own business).
     fn next_batch(&mut self) -> Batch;
 }
 
@@ -61,19 +63,23 @@ impl<F: FnMut() -> Batch> BatchSource for FnSource<F> {
 pub struct FixedCycle {
     batches: Vec<Batch>,
     pos: usize,
+    /// Completed passes over the batch vector.
     pub epoch: usize,
 }
 
 impl FixedCycle {
+    /// Cycle over a non-empty batch vector.
     pub fn new(batches: Vec<Batch>) -> Self {
         assert!(!batches.is_empty(), "no batches to cycle");
         FixedCycle { batches, pos: 0, epoch: 0 }
     }
 
+    /// Batches per epoch.
     pub fn len(&self) -> usize {
         self.batches.len()
     }
 
+    /// Always false (construction rejects empty vectors).
     pub fn is_empty(&self) -> bool {
         self.batches.is_empty()
     }
@@ -113,6 +119,15 @@ impl Default for PipelineOptions {
 
 impl PipelineOptions {
     /// The seed runtime's synchronous behaviour (baseline / A-B tests).
+    ///
+    /// ```
+    /// use grades::runtime::pipeline::PipelineOptions;
+    /// let off = PipelineOptions::off();
+    /// assert_eq!(off.prefetch_batches, 0);
+    /// assert!(!off.upload_ahead);
+    /// // the default is the pipelined double-buffered configuration
+    /// assert_eq!(PipelineOptions::default().prefetch_batches, 2);
+    /// ```
     pub fn off() -> Self {
         PipelineOptions { prefetch_batches: 0, upload_ahead: false }
     }
@@ -170,31 +185,42 @@ impl Drop for Prefetcher {
 pub struct StepTimings {
     /// Host→device batch/ctrl bytes copied.
     pub upload_bytes: u64,
+    /// Seconds inside host→device copies.
     pub upload_secs: f64,
+    /// Individual upload calls.
     pub uploads: usize,
     /// Uploads that were staged ahead of their step (overlapped).
     pub staged_uploads: usize,
     /// Per-step ctrl uploads skipped because the device-resident ctrl
     /// buffer was still valid (see `Session`'s persistent ctrl cache).
     pub ctrl_skips: usize,
+    /// Parameter snapshots pinned for asynchronous evaluation (see
+    /// `runtime::async_eval` — zero-copy for device snapshots, one
+    /// upload for rehydrated host snapshots).
+    pub snapshots: usize,
     /// Train-step dispatch+execute seconds (as observed by the host).
     pub exec_secs: f64,
+    /// Train-step executions.
     pub execs: usize,
     /// Metrics-probe seconds (device round trip for the GradES monitor).
     pub probe_secs: f64,
+    /// Probe executions.
     pub probes: usize,
     /// Forward-only eval seconds (classic-ES validation + harness).
     pub eval_secs: f64,
+    /// Forward-only eval executions.
     pub evals: usize,
 }
 
 impl StepTimings {
+    /// Accumulate another run's counters into this one.
     pub fn merge(&mut self, o: &StepTimings) {
         self.upload_bytes += o.upload_bytes;
         self.upload_secs += o.upload_secs;
         self.uploads += o.uploads;
         self.staged_uploads += o.staged_uploads;
         self.ctrl_skips += o.ctrl_skips;
+        self.snapshots += o.snapshots;
         self.exec_secs += o.exec_secs;
         self.execs += o.execs;
         self.probe_secs += o.probe_secs;
@@ -208,6 +234,7 @@ impl StepTimings {
         self.upload_bytes as f64 / 1e9 / self.upload_secs
     }
 
+    /// Serialize for timing reports.
     pub fn to_json(&self) -> crate::util::json::Json {
         use crate::util::json::Json;
         let mut m = std::collections::BTreeMap::new();
@@ -216,6 +243,7 @@ impl StepTimings {
         m.insert("uploads".into(), Json::Num(self.uploads as f64));
         m.insert("staged_uploads".into(), Json::Num(self.staged_uploads as f64));
         m.insert("ctrl_skips".into(), Json::Num(self.ctrl_skips as f64));
+        m.insert("snapshots".into(), Json::Num(self.snapshots as f64));
         m.insert("exec_secs".into(), Json::Num(self.exec_secs));
         m.insert("execs".into(), Json::Num(self.execs as f64));
         m.insert("probe_secs".into(), Json::Num(self.probe_secs));
@@ -233,6 +261,7 @@ impl StepTimings {
 /// pass of a run (and even multiple sessions on the same client).
 pub struct DeviceBatchCache {
     batches: Vec<super::session::UploadedBatch>,
+    /// Total bytes the cache uploaded.
     pub bytes: u64,
 }
 
@@ -250,12 +279,22 @@ impl DeviceBatchCache {
         Ok(DeviceBatchCache { batches: out, bytes })
     }
 
+    /// Number of cached batches (one chunked-eval slice evaluates some
+    /// prefix of `0..len()` per train step).
     pub fn len(&self) -> usize {
         self.batches.len()
     }
 
+    /// True when nothing is cached.
     pub fn is_empty(&self) -> bool {
         self.batches.is_empty()
+    }
+
+    /// The `i`-th cached batch, in upload order — the async validator's
+    /// chunks index the cache directly so a pass sums losses in exactly
+    /// the order `Session::eval_mean_loss_cached` does.
+    pub(crate) fn get(&self, i: usize) -> &super::session::UploadedBatch {
+        &self.batches[i]
     }
 
     pub(crate) fn iter(&self) -> impl Iterator<Item = &super::session::UploadedBatch> {

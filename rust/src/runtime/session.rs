@@ -31,18 +31,26 @@
 
 use std::cell::RefCell;
 use std::io::Write as _;
+use std::rc::Rc;
 
 use anyhow::{ensure, Context, Result};
 use xla::PjRtBuffer;
 
 use super::artifact::Bundle;
+use super::async_eval::EvalSnapshot;
 use super::pipeline::{DeviceBatchCache, StepTimings};
 use super::xerr;
 use crate::util::timer::Timer;
 
+/// One training run's device-side state: the flat parameter/optimizer
+/// buffer plus the compiled executables that read and write it.
 pub struct Session<'b> {
+    /// The compiled executables + manifest this session runs.
     pub bundle: &'b Bundle,
-    state: Option<PjRtBuffer>,
+    /// The current state buffer. `Rc` so an [`EvalSnapshot`] can pin a
+    /// past step's buffer at zero cost while training moves on (train
+    /// steps return a *new* buffer; nothing mutates one in place).
+    state: Option<Rc<PjRtBuffer>>,
     /// 1-based optimizer step (AdamW bias correction).
     pub step: usize,
     /// Cumulative runtime instrumentation (RefCell: eval/probe take &self).
@@ -84,7 +92,9 @@ pub fn ctrl_upload_skippable(cached: &[f32], next: &[f32], step_sensitive: bool)
 /// One training batch already flattened row-major.
 #[derive(Debug, Clone, Default)]
 pub struct Batch {
+    /// `[B, T]` input token ids, row-major.
     pub tokens: Vec<i32>,
+    /// `[B, T]` next-token targets (-1 = masked).
     pub targets: Vec<i32>,
     /// VLM only: `[B, n_patches, patch_dim]` flattened.
     pub patches: Vec<f32>,
@@ -100,10 +110,12 @@ impl Batch {
 /// A batch already resident on device, ready to feed an executable.
 pub struct UploadedBatch {
     pub(crate) bufs: Vec<PjRtBuffer>,
+    /// Host bytes the upload copied.
     pub bytes: usize,
 }
 
 impl<'b> Session<'b> {
+    /// Uninitialized session over a bundle (call [`Session::init`]).
     pub fn new(bundle: &'b Bundle) -> Self {
         Session {
             bundle,
@@ -136,7 +148,7 @@ impl<'b> Session<'b> {
             .buffer_from_host_buffer::<i32>(&[seed], &[1], None)
             .map_err(xerr)?;
         let mut out = self.bundle.init.execute_b(&[&seed_buf]).map_err(xerr)?;
-        self.state = Some(out.remove(0).remove(0));
+        self.state = Some(Rc::new(out.remove(0).remove(0)));
         self.step = 0;
         *self.ctrl_cache.borrow_mut() = None;
         Ok(())
@@ -229,7 +241,7 @@ impl<'b> Session<'b> {
         } else {
             &self.bundle.train_step
         };
-        let mut args: Vec<&PjRtBuffer> = vec![state];
+        let mut args: Vec<&PjRtBuffer> = vec![&**state];
         args.extend(io.bufs.iter());
         args.push(ctrl_buf);
         let et = Timer::new();
@@ -239,7 +251,7 @@ impl<'b> Session<'b> {
             tm.exec_secs += et.secs();
             tm.execs += 1;
         }
-        self.state = Some(out.remove(0).remove(0));
+        self.state = Some(Rc::new(out.remove(0).remove(0)));
         self.step += 1;
         Ok(())
     }
@@ -248,7 +260,7 @@ impl<'b> Session<'b> {
     pub fn probe(&self) -> Result<Vec<f32>> {
         let state = self.state.as_ref().context("session not initialized")?;
         let t = Timer::new();
-        let out = self.bundle.probe.execute_b(&[state]).map_err(xerr)?;
+        let out = self.bundle.probe.execute_b(&[&**state]).map_err(xerr)?;
         let v = out[0][0]
             .to_literal_sync()
             .map_err(xerr)?
@@ -270,6 +282,13 @@ impl<'b> Session<'b> {
     /// numerically identical to `eval_batch`, same executable + data).
     pub fn eval_batch_uploaded(&self, io: &UploadedBatch) -> Result<(f64, f64)> {
         let state = self.state.as_ref().context("session not initialized")?;
+        self.eval_uploaded_with(&**state, io)
+    }
+
+    /// Forward-only loss of an explicit state buffer over device-resident
+    /// buffers — the shared core of the current-state and snapshot paths
+    /// (same executable, same data ⇒ same value for the same state).
+    fn eval_uploaded_with(&self, state: &PjRtBuffer, io: &UploadedBatch) -> Result<(f64, f64)> {
         let t = Timer::new();
         let mut args: Vec<&PjRtBuffer> = vec![state];
         args.extend(io.bufs.iter());
@@ -285,6 +304,48 @@ impl<'b> Session<'b> {
         Ok((v[0] as f64, v[1] as f64))
     }
 
+    /// Pin the current parameters for asynchronous evaluation: a
+    /// zero-copy [`EvalSnapshot`] that stays valid while training
+    /// advances (see `runtime::async_eval`).
+    pub fn snapshot(&self) -> Result<EvalSnapshot> {
+        let state = self.state.as_ref().context("session not initialized")?;
+        self.timings.borrow_mut().snapshots += 1;
+        Ok(EvalSnapshot::new(Rc::clone(state), self.step))
+    }
+
+    /// Rehydrate a host-resident weight copy into a device snapshot (the
+    /// cross-thread path: an eval job scoring another job's final
+    /// weights — host vectors are the only `Send` form of a snapshot).
+    pub fn upload_snapshot(&self, host: &[f32], step: usize) -> Result<EvalSnapshot> {
+        let m = &self.bundle.manifest;
+        ensure!(host.len() == m.state_len, "state len {} != {}", host.len(), m.state_len);
+        let timer = Timer::new();
+        let buf = self
+            .client()
+            .buffer_from_host_buffer::<f32>(host, &[host.len()], None)
+            .map_err(xerr)?;
+        {
+            let mut tm = self.timings.borrow_mut();
+            tm.upload_secs += timer.secs();
+            tm.upload_bytes += 4 * host.len() as u64;
+            tm.uploads += 1;
+            tm.snapshots += 1;
+        }
+        Ok(EvalSnapshot::new(Rc::new(buf), step))
+    }
+
+    /// Forward-only loss of a pinned snapshot on one device-resident
+    /// batch — what the async validator's chunks execute. Identical to
+    /// [`Session::eval_batch_uploaded`] when the snapshot pins the
+    /// current step.
+    pub fn eval_batch_snapshot(
+        &self,
+        snap: &EvalSnapshot,
+        io: &UploadedBatch,
+    ) -> Result<(f64, f64)> {
+        self.eval_uploaded_with(&*snap.state, io)
+    }
+
     /// Per-row (loss_sum, count) pairs — multiple-choice scoring.
     pub fn eval_rows(&self, batch: &Batch) -> Result<Vec<(f64, f64)>> {
         let io = self.upload_batch(batch)?;
@@ -295,7 +356,7 @@ impl<'b> Session<'b> {
     pub fn eval_rows_uploaded(&self, io: &UploadedBatch) -> Result<Vec<(f64, f64)>> {
         let state = self.state.as_ref().context("session not initialized")?;
         let t = Timer::new();
-        let mut args: Vec<&PjRtBuffer> = vec![state];
+        let mut args: Vec<&PjRtBuffer> = vec![&**state];
         args.extend(io.bufs.iter());
         let out = self.bundle.eval_rows.execute_b(&args).map_err(xerr)?;
         let v = out[0][0]
@@ -347,11 +408,11 @@ impl<'b> Session<'b> {
     pub fn state_from_host(&mut self, host: &[f32]) -> Result<()> {
         let m = &self.bundle.manifest;
         ensure!(host.len() == m.state_len, "state len {} != {}", host.len(), m.state_len);
-        self.state = Some(
+        self.state = Some(Rc::new(
             self.client()
                 .buffer_from_host_buffer::<f32>(host, &[host.len()], None)
                 .map_err(xerr)?,
-        );
+        ));
         Ok(())
     }
 
@@ -369,6 +430,7 @@ impl<'b> Session<'b> {
         Ok(())
     }
 
+    /// Restore a checkpoint written by [`Session::save_checkpoint`].
     pub fn load_checkpoint(&mut self, path: &std::path::Path) -> Result<()> {
         let bytes = std::fs::read(path)?;
         let (step, host) = decode_checkpoint(&bytes)?;

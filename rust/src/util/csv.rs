@@ -7,12 +7,14 @@ use std::path::Path;
 
 use anyhow::Result;
 
+/// Buffered CSV writer with a fixed, arity-checked column count.
 pub struct CsvWriter {
     w: BufWriter<File>,
     cols: usize,
 }
 
 impl CsvWriter {
+    /// Create (directories included) and write the header row.
     pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> Result<Self> {
         if let Some(parent) = path.as_ref().parent() {
             std::fs::create_dir_all(parent)?;
@@ -22,6 +24,7 @@ impl CsvWriter {
         Ok(Self { w, cols: header.len() })
     }
 
+    /// Write one row; panics if the arity differs from the header.
     pub fn row<D: Display>(&mut self, values: &[D]) -> Result<()> {
         assert_eq!(values.len(), self.cols, "csv row arity mismatch");
         let line: Vec<String> = values.iter().map(|v| v.to_string()).collect();
@@ -29,6 +32,7 @@ impl CsvWriter {
         Ok(())
     }
 
+    /// Flush buffered rows to disk.
     pub fn flush(&mut self) -> Result<()> {
         self.w.flush()?;
         Ok(())

@@ -11,15 +11,22 @@ use anyhow::{anyhow, bail, Result};
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (f64-backed).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object with sorted keys.
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Required object member.
     pub fn get(&self, key: &str) -> Result<&Json> {
         match self {
             Json::Obj(m) => m.get(key).ok_or_else(|| anyhow!("missing key {key:?}")),
@@ -27,6 +34,7 @@ impl Json {
         }
     }
 
+    /// Optional object member.
     pub fn opt(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -34,6 +42,7 @@ impl Json {
         }
     }
 
+    /// Numeric view.
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Json::Num(n) => Ok(*n),
@@ -41,6 +50,7 @@ impl Json {
         }
     }
 
+    /// Non-negative integer view.
     pub fn as_usize(&self) -> Result<usize> {
         let n = self.as_f64()?;
         if n < 0.0 || n.fract() != 0.0 {
@@ -49,10 +59,12 @@ impl Json {
         Ok(n as usize)
     }
 
+    /// Integer view (truncating).
     pub fn as_i64(&self) -> Result<i64> {
         Ok(self.as_f64()? as i64)
     }
 
+    /// String view.
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Json::Str(s) => Ok(s),
@@ -60,6 +72,7 @@ impl Json {
         }
     }
 
+    /// Boolean view.
     pub fn as_bool(&self) -> Result<bool> {
         match self {
             Json::Bool(b) => Ok(*b),
@@ -67,6 +80,7 @@ impl Json {
         }
     }
 
+    /// Array view.
     pub fn as_arr(&self) -> Result<&[Json]> {
         match self {
             Json::Arr(a) => Ok(a),
@@ -74,11 +88,13 @@ impl Json {
         }
     }
 
+    /// Is this `null`?
     pub fn is_null(&self) -> bool {
         matches!(self, Json::Null)
     }
 }
 
+/// Parse a complete JSON document.
 pub fn parse(src: &str) -> Result<Json> {
     let mut p = Parser { b: src.as_bytes(), i: 0 };
     p.ws();

@@ -18,6 +18,7 @@ fn splitmix64(x: &mut u64) -> u64 {
 }
 
 impl Rng {
+    /// Seed deterministically (same seed ⇒ same stream).
     pub fn new(seed: u64) -> Self {
         let mut x = seed;
         Self { s: [splitmix64(&mut x), splitmix64(&mut x), splitmix64(&mut x), splitmix64(&mut x)] }
@@ -28,6 +29,7 @@ impl Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9e3779b97f4a7c15))
     }
 
+    /// Next raw 64-bit draw.
     pub fn next_u64(&mut self) -> u64 {
         let r = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
         let t = self.s[1] << 17;
@@ -45,6 +47,7 @@ impl Rng {
         (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
     }
 
+    /// Uniform f32 in [0, 1).
     pub fn f32(&mut self) -> f32 {
         self.f64() as f32
     }
@@ -55,10 +58,12 @@ impl Rng {
         ((self.next_u64() as u128 * n as u128) >> 64) as usize
     }
 
+    /// Uniform integer in [lo, hi).
     pub fn range(&mut self, lo: usize, hi: usize) -> usize {
         lo + self.below(hi - lo)
     }
 
+    /// True with probability `p`.
     pub fn chance(&mut self, p: f64) -> bool {
         self.f64() < p
     }
@@ -70,6 +75,7 @@ impl Rng {
         (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
     }
 
+    /// Uniform element of a non-empty slice.
     pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
         &xs[self.below(xs.len())]
     }
@@ -87,6 +93,7 @@ impl Rng {
         weights.len() - 1
     }
 
+    /// In-place Fisher–Yates shuffle.
     pub fn shuffle<T>(&mut self, xs: &mut [T]) {
         for i in (1..xs.len()).rev() {
             xs.swap(i, self.below(i + 1));

@@ -28,11 +28,13 @@ pub struct Rolling {
 }
 
 impl Rolling {
+    /// Window of capacity `cap` (> 0).
     pub fn new(cap: usize) -> Self {
         assert!(cap > 0);
         Self { buf: Vec::with_capacity(cap), cap, next: 0, sum: 0.0 }
     }
 
+    /// Append, evicting the oldest value once full.
     pub fn push(&mut self, x: f64) {
         if self.buf.len() < self.cap {
             self.buf.push(x);
@@ -44,6 +46,7 @@ impl Rolling {
         }
     }
 
+    /// Mean of the current window (0.0 when empty).
     pub fn mean(&self) -> f64 {
         if self.buf.is_empty() {
             0.0
@@ -52,14 +55,17 @@ impl Rolling {
         }
     }
 
+    /// Has the window reached capacity?
     pub fn full(&self) -> bool {
         self.buf.len() == self.cap
     }
 
+    /// Values currently held.
     pub fn len(&self) -> usize {
         self.buf.len()
     }
 
+    /// True before the first push.
     pub fn is_empty(&self) -> bool {
         self.buf.is_empty()
     }

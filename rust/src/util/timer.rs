@@ -15,18 +15,22 @@ impl Default for Timer {
 }
 
 impl Timer {
+    /// Start timing now.
     pub fn new() -> Self {
         Self { start: Instant::now() }
     }
 
+    /// Seconds elapsed since construction/reset.
     pub fn secs(&self) -> f64 {
         self.start.elapsed().as_secs_f64()
     }
 
+    /// Milliseconds elapsed.
     pub fn millis(&self) -> f64 {
         self.secs() * 1e3
     }
 
+    /// Restart the clock.
     pub fn reset(&mut self) {
         self.start = Instant::now();
     }
@@ -47,16 +51,24 @@ pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> BenchStats {
 }
 
 #[derive(Debug, Clone)]
+/// Per-iteration timing distribution from [`bench`].
 pub struct BenchStats {
+    /// Mean seconds per iteration.
     pub mean: f64,
+    /// Fastest iteration.
     pub min: f64,
+    /// Slowest iteration.
     pub max: f64,
+    /// Median.
     pub p50: f64,
+    /// 90th percentile.
     pub p90: f64,
+    /// Sample count.
     pub n: usize,
 }
 
 impl BenchStats {
+    /// Summarize raw per-iteration samples (seconds).
     pub fn from_samples(mut s: Vec<f64>) -> Self {
         assert!(!s.is_empty());
         s.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -66,6 +78,7 @@ impl BenchStats {
         BenchStats { mean, min: s[0], max: s[n - 1], p50: q(0.5), p90: q(0.9), n }
     }
 
+    /// Human-readable one-liner in milliseconds.
     pub fn fmt_ms(&self) -> String {
         format!(
             "mean {:.3} ms  p50 {:.3}  p90 {:.3}  min {:.3}  max {:.3}  (n={})",

@@ -1,0 +1,188 @@
+//! Host-side tests for the asynchronous chunked-evaluation runtime — no
+//! PJRT artifacts needed, so these always run under tier-1 `cargo test`.
+//!
+//! The validator is generic over the snapshot type and fed by closures,
+//! so the full decision pipeline — `ClassicEs` checks issued through an
+//! `AsyncValidator`, results applied under a `StalenessBound` — runs here
+//! against synthetic losses. The device-equivalence half (async k = 0
+//! trajectories == the synchronous trainer through real artifacts) lives
+//! in `integration.rs` behind `GRADES_ARTIFACTS=1`.
+
+use grades::config::EsConfig;
+use grades::coordinator::classic_es::ClassicEs;
+use grades::runtime::async_eval::{AsyncEvalOptions, AsyncValidator};
+
+const N_BATCHES: usize = 7;
+const TOTAL_STEPS: usize = 200;
+
+fn es_cfg() -> EsConfig {
+    EsConfig { check_interval_frac: 0.05, patience: 2, min_delta: 0.01 }
+}
+
+/// Synthetic per-batch loss for the parameters at `snapshot_step`:
+/// improves, then stalls — so classic ES stops mid-run. Deliberately
+/// awkward floats so bitwise comparisons are meaningful.
+fn loss(snapshot_step: usize, batch: usize) -> (f64, f64) {
+    let base = if snapshot_step <= 60 {
+        3.0 - (snapshot_step as f64) * 0.031
+    } else {
+        1.14 + (snapshot_step as f64) * 1e-4
+    };
+    let count = 2.0 + (batch % 3) as f64;
+    ((base + (batch as f64) * 0.0173) * count, count)
+}
+
+struct Run {
+    /// (issued_at, val_loss bits) in application order.
+    val_points: Vec<(usize, u64)>,
+    /// Step the loop ended at.
+    stop_step: usize,
+    /// True when classic ES fired (vs budget exhaustion).
+    stopped: bool,
+}
+
+/// The pre-async trainer's synchronous semantics, hand-rolled: a full
+/// pass (summed in batch order) on the critical path of every check step.
+fn run_sync() -> Run {
+    let mut es = ClassicEs::new(&es_cfg(), TOTAL_STEPS);
+    let mut val_points = Vec::new();
+    for t in 1..=TOTAL_STEPS {
+        if es.due(t) {
+            let (mut ls, mut cs) = (0.0, 0.0);
+            for i in 0..N_BATCHES {
+                let (l, c) = loss(t, i);
+                ls += l;
+                cs += c;
+            }
+            let v = ls / cs;
+            val_points.push((t, v.to_bits()));
+            if es.record(v, 0.0) {
+                return Run { val_points, stop_step: t, stopped: true };
+            }
+        }
+    }
+    Run { val_points, stop_step: TOTAL_STEPS, stopped: false }
+}
+
+/// The async trainer loop shape: issue on due, advance chunks each step,
+/// apply completed results to the same `ClassicEs`. `break_at` simulates
+/// another stop cause (e.g. the GradES monitor freezing the matrix)
+/// ending the loop regardless of validation.
+fn run_async_with(
+    opts: AsyncEvalOptions,
+    break_at: Option<usize>,
+) -> (Run, AsyncValidator<usize>) {
+    let mut es = ClassicEs::new(&es_cfg(), TOTAL_STEPS);
+    let mut v: AsyncValidator<usize> = AsyncValidator::new(opts, N_BATCHES);
+    let mut val_points = Vec::new();
+    for t in 1..=TOTAL_STEPS {
+        if break_at == Some(t) {
+            v.abandon();
+            return (Run { val_points, stop_step: t, stopped: false }, v);
+        }
+        let due = es.due(t);
+        if due || v.in_flight().is_some() {
+            let results = v
+                .on_step(t, due, || Ok(t), |&s, i| Ok(loss(s, i)))
+                .expect("synthetic eval cannot fail");
+            let mut stop = false;
+            for r in &results {
+                val_points.push((r.issued_at, r.val_loss.to_bits()));
+                if es.record(r.val_loss, 0.0) {
+                    stop = true;
+                }
+            }
+            if stop {
+                return (Run { val_points, stop_step: t, stopped: true }, v);
+            }
+        }
+    }
+    v.abandon();
+    (Run { val_points, stop_step: TOTAL_STEPS, stopped: false }, v)
+}
+
+fn run_async(opts: AsyncEvalOptions) -> (Run, AsyncValidator<usize>) {
+    run_async_with(opts, None)
+}
+
+#[test]
+fn staleness_zero_is_bitwise_identical_to_the_synchronous_loop() {
+    let sync = run_sync();
+    assert!(sync.stopped, "the synthetic losses must trigger classic ES");
+    let (async0, v) = run_async(AsyncEvalOptions::synchronous());
+    assert_eq!(async0.val_points, sync.val_points, "val series must match bitwise");
+    assert_eq!(async0.stop_step, sync.stop_step);
+    assert_eq!(async0.stopped, sync.stopped);
+    assert_eq!(v.stats.forced_drains, 0);
+    assert_eq!(v.stats.abandoned, 0);
+    assert_eq!(v.stats.issued, v.stats.completed);
+}
+
+#[test]
+fn unbounded_staleness_same_decisions_applied_at_natural_completion() {
+    // chunk 1 over 7 batches, checks every 10 steps: each pass completes
+    // 7 steps after its check, before the next check comes due. The loss
+    // *series* is identical to the synchronous run (snapshots pin the
+    // check step's parameters); only the application step shifts.
+    let sync = run_sync();
+    let (a, v) = run_async(AsyncEvalOptions::overlapped(1, usize::MAX));
+    assert_eq!(a.val_points, sync.val_points);
+    assert!(a.stopped);
+    assert_eq!(a.stop_step, sync.stop_step + N_BATCHES, "decision lands the pass length late");
+    assert_eq!(v.stats.forced_drains, 0);
+    assert_eq!(v.stats.displaced, 0);
+}
+
+#[test]
+fn staleness_bound_caps_the_decision_lag() {
+    let sync = run_sync();
+    for k in [1usize, 3, 5] {
+        let (a, v) = run_async(AsyncEvalOptions::overlapped(1, k));
+        assert_eq!(a.val_points, sync.val_points, "k={k}");
+        assert!(a.stopped, "k={k}");
+        assert_eq!(a.stop_step, sync.stop_step + k, "k={k}: applied exactly k steps late");
+        assert!(v.stats.forced_drains > 0, "k={k} < pass length forces drains");
+    }
+}
+
+#[test]
+fn chunk_size_trades_lag_without_changing_the_series() {
+    let sync = run_sync();
+    // chunk 4 over 7 batches: passes complete 2 steps after issue.
+    let (a, _) = run_async(AsyncEvalOptions::overlapped(4, usize::MAX));
+    assert_eq!(a.val_points, sync.val_points);
+    assert_eq!(a.stop_step, sync.stop_step + 2);
+}
+
+#[test]
+fn stop_signal_arriving_after_the_matrix_froze_is_discarded() {
+    // The sync run stops at some check step T. Simulate GradES freezing
+    // the whole matrix (loop break) one step after that check was issued
+    // asynchronously: the in-flight pass must be abandoned, its stop
+    // signal never applied, and nothing panics.
+    let sync = run_sync();
+    let freeze_step = sync.stop_step + 1;
+    let (a, v) = run_async_with(AsyncEvalOptions::overlapped(1, usize::MAX), Some(freeze_step));
+    assert!(!a.stopped, "validation must not have fired");
+    assert_eq!(a.stop_step, freeze_step);
+    assert_eq!(v.stats.abandoned, 1);
+    assert!(v.in_flight().is_none());
+    // every result that *was* applied matches the synchronous series
+    assert_eq!(a.val_points, sync.val_points[..a.val_points.len()]);
+}
+
+#[test]
+fn checks_run_and_best_loss_agree_across_modes() {
+    let mut es_sync = ClassicEs::new(&es_cfg(), TOTAL_STEPS);
+    let mut es_async = ClassicEs::new(&es_cfg(), TOTAL_STEPS);
+    let sync = run_sync();
+    for &(_, bits) in &sync.val_points {
+        es_sync.record(f64::from_bits(bits), 0.0);
+    }
+    let (a, _) = run_async(AsyncEvalOptions::overlapped(2, usize::MAX));
+    for &(_, bits) in &a.val_points {
+        es_async.record(f64::from_bits(bits), 0.0);
+    }
+    assert_eq!(es_sync.checks_run, es_async.checks_run);
+    assert_eq!(es_sync.best_loss().to_bits(), es_async.best_loss().to_bits());
+}

@@ -19,6 +19,7 @@ use grades::coordinator::warmstart::BaseCheckpoint;
 use grades::data;
 use grades::eval::{benchmarks, harness};
 use grades::runtime::artifact::{Bundle, Client};
+use grades::runtime::async_eval::{AsyncEvalOptions, StalenessBound};
 use grades::runtime::pipeline::{DeviceBatchCache, PipelineOptions, Prefetcher};
 use grades::runtime::session::Session;
 
@@ -346,6 +347,91 @@ fn pipeline_on_off_trajectories_are_bitwise_identical() {
     // and the pipelined run actually overlapped its uploads
     assert!(on.timings.staged_uploads > 0);
     assert_eq!(off.timings.staged_uploads, 0);
+}
+
+#[test]
+fn async_eval_staleness_zero_is_bitwise_identical_to_synchronous() {
+    // Acceptance gate for the async-eval runtime: with `--staleness 0`
+    // every chunked pass drains at its issue step, and the trajectory —
+    // steps, stop cause, every validation point — must match the
+    // synchronous trainer bitwise. Overlapped runs must produce the same
+    // val-loss *series* (snapshots pin the check step's parameters);
+    // only the application step may shift.
+    let Some(b) = bundle("lm-tiny-fp") else { return };
+    let b = &*b;
+    let cfg = RepoConfig::by_name("lm-tiny-fp").unwrap();
+    let run_with = |async_eval: AsyncEvalOptions| {
+        let mut ds = data::build_lm(&cfg, &b.manifest).unwrap();
+        let mut opts = TrainerOptions::from_config(&cfg, StoppingMethod::ClassicEs);
+        opts.total_steps = 30;
+        opts.async_eval = async_eval;
+        trainer::run(b, &cfg, &opts, || ds.train.next_batch(), &ds.val).unwrap()
+    };
+    let sync = run_with(AsyncEvalOptions::synchronous());
+    assert!(!sync.log.val_points.is_empty(), "ES checks must fire in 30 steps");
+    // chunk size is irrelevant at k = 0: every pass drains at its issue step
+    let k0 = run_with(AsyncEvalOptions { chunk: 1, staleness: StalenessBound::sync() });
+    assert_eq!(sync.steps_run, k0.steps_run);
+    assert_eq!(sync.stop_cause, k0.stop_cause);
+    assert_eq!(sync.final_val_loss.to_bits(), k0.final_val_loss.to_bits());
+    assert_eq!(sync.log.val_points.len(), k0.log.val_points.len());
+    for ((s1, v1), (s2, v2)) in sync.log.val_points.iter().zip(&k0.log.val_points) {
+        assert_eq!(s1, s2);
+        assert_eq!(v1.to_bits(), v2.to_bits(), "k=0 diverged at check step {s1}");
+    }
+    assert_eq!(k0.async_eval.issued, k0.async_eval.completed);
+    assert_eq!(k0.async_eval.forced_drains, 0);
+
+    let over = run_with(AsyncEvalOptions::overlapped(1, 4));
+    assert!(over.async_eval.issued > 0);
+    for ((s1, v1), (s2, v2)) in sync.log.val_points.iter().zip(&over.log.val_points) {
+        assert_eq!(s1, s2);
+        assert_eq!(v1.to_bits(), v2.to_bits(), "overlapped series diverged at check {s1}");
+    }
+}
+
+#[test]
+fn snapshot_eval_matches_current_state_eval() {
+    // A snapshot of the current step must score exactly like the live
+    // state, and a snapshot pinned *before* further training must keep
+    // scoring the old parameters.
+    let Some(b) = bundle("lm-tiny-fp") else { return };
+    let b = &*b;
+    let cfg = RepoConfig::by_name("lm-tiny-fp").unwrap();
+    let mut ds = data::build_lm(&cfg, &b.manifest).unwrap();
+    let mut s = Session::new(b);
+    s.init(9).unwrap();
+    for t in 1..=4 {
+        let batch = ds.train.next_batch();
+        s.train_step(&batch, &default_ctrl(b, t as f32, 1e-3), false).unwrap();
+    }
+    let cache = DeviceBatchCache::upload(&s, &ds.val).unwrap();
+    let live = s.eval_mean_loss_cached(&cache).unwrap();
+    let snap = s.snapshot().unwrap();
+    let (mut ls, mut cs) = (0.0, 0.0);
+    for i in 0..cache.len() {
+        // the trainer's chunk path, driven manually via the public API
+        let io = s.upload_batch(&ds.val[i]).unwrap();
+        let (l, c) = s.eval_batch_snapshot(&snap, &io).unwrap();
+        ls += l;
+        cs += c;
+    }
+    assert_eq!((ls / cs).to_bits(), live.to_bits(), "snapshot == live state at pin time");
+    // advance training; the pinned snapshot must not move
+    for t in 5..=8 {
+        let batch = ds.train.next_batch();
+        s.train_step(&batch, &default_ctrl(b, t as f32, 1e-3), false).unwrap();
+    }
+    let io = s.upload_batch(&ds.val[0]).unwrap();
+    let (l_snap, _) = s.eval_batch_snapshot(&snap, &io).unwrap();
+    let (l_live, _) = s.eval_batch_uploaded(&io).unwrap();
+    let (l_snap2, _) = s.eval_batch_snapshot(&snap, &io).unwrap();
+    assert_eq!(l_snap.to_bits(), l_snap2.to_bits(), "snapshot eval is stable");
+    assert_ne!(l_snap.to_bits(), l_live.to_bits(), "training moved the live state");
+    // host round trip: rehydrated snapshots score identically
+    let rehydrated = s.upload_snapshot(&snap.to_host().unwrap(), snap.step).unwrap();
+    let (l_re, _) = s.eval_batch_snapshot(&rehydrated, &io).unwrap();
+    assert_eq!(l_snap.to_bits(), l_re.to_bits());
 }
 
 #[test]

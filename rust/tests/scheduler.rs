@@ -19,10 +19,10 @@ use grades::coordinator::freeze::FreezeState;
 use grades::coordinator::metrics::MetricsLog;
 use grades::coordinator::trainer::{StopCause, StoppingMethod, TrainOutcome};
 use grades::coordinator::warmstart::BaseCheckpoint;
-use grades::exp::plan::{EvalKind, JobGraph, JobSpec};
+use grades::exp::plan::{EvalKind, JobGraph, JobKind, JobSpec};
 use grades::exp::scheduler::{
-    execute, job_settings, JobRunner, JobStatus, JobSummary, RunManifest, RunnerOutput,
-    SchedulerOptions,
+    execute, job_settings, EvalPayload, JobRunner, JobStatus, JobSummary, RunManifest,
+    RunnerOutput, SchedulerOptions,
 };
 use grades::exp::JobResult;
 
@@ -48,6 +48,7 @@ fn fake_result(spec: &JobSpec) -> JobResult {
             final_val_loss: 2.0,
             variant_swap_step: None,
             timings: Default::default(),
+            async_eval: Default::default(),
         },
         accuracies: vec![("Suite".to_string(), fake_acc(&spec.id)), ("Avg.".to_string(), fake_acc(&spec.id))],
     }
@@ -95,7 +96,12 @@ impl MockRunner {
 }
 
 impl JobRunner for MockRunner {
-    fn run(&self, spec: &JobSpec, warm: Option<Arc<BaseCheckpoint>>) -> Result<RunnerOutput> {
+    fn run(
+        &self,
+        spec: &JobSpec,
+        warm: Option<Arc<BaseCheckpoint>>,
+        eval_src: Option<Arc<EvalPayload>>,
+    ) -> Result<RunnerOutput> {
         self.log.lock().unwrap().push(spec.id.clone());
         if self.panic_on.contains(&spec.id) {
             panic!("mock panic in {}", spec.id);
@@ -107,18 +113,42 @@ impl JobRunner for MockRunner {
             bail!("{}: warm checkpoint was not delivered", spec.id);
         }
         match spec.kind {
-            grades::exp::plan::JobKind::Pretrain => Ok(RunnerOutput {
+            JobKind::Pretrain => Ok(RunnerOutput {
                 result: None,
                 summary: None,
                 checkpoint: Some(Arc::new(BaseCheckpoint {
                     params: Default::default(),
                     source: spec.id.clone(),
                 })),
+                eval_payload: None,
             }),
-            grades::exp::plan::JobKind::Train => {
+            JobKind::Train => {
                 let result = fake_result(spec);
                 let summary = spec.persist.then(|| fake_summary(spec, &result));
-                Ok(RunnerOutput { result: Some(result), summary, checkpoint: None })
+                // The weights an eval job will score, as plain host data.
+                let eval_payload = spec.export_state.then(|| {
+                    Arc::new(EvalPayload {
+                        config: spec.config.clone(),
+                        state: vec![fake_acc(&spec.id) as f32; 4],
+                        step: 10,
+                    })
+                });
+                Ok(RunnerOutput { result: Some(result), summary, checkpoint: None, eval_payload })
+            }
+            JobKind::Eval => {
+                let payload = match eval_src {
+                    Some(p) => p,
+                    None => bail!("{}: eval payload was not delivered", spec.id),
+                };
+                if payload.config != spec.config {
+                    bail!("{}: payload config mismatch", spec.id);
+                }
+                // Score = a function of the delivered weights, so the
+                // test can assert the payload really flowed through.
+                let mut result = fake_result(spec);
+                let acc = payload.state[0] as f64;
+                result.accuracies = vec![("Suite".into(), acc), ("Avg.".into(), acc)];
+                Ok(RunnerOutput { result: Some(result), summary: None, checkpoint: None, eval_payload: None })
             }
         }
     }
@@ -295,6 +325,76 @@ fn fresh_mode_ignores_the_manifest() {
     let runner = MockRunner::default();
     execute(&g, &fresh_opts, &runner).unwrap().require_ok(&g).unwrap();
     assert_eq!(runner.started().len(), g.len(), "--fresh re-runs everything");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn eval_jobs_outlive_their_training_job_and_receive_its_weights() {
+    // train jobs a/b export their final weights; standalone eval jobs
+    // score them later on the worker pool — possibly long after the
+    // training job completed and released its (mock) device resources.
+    let mut g = JobGraph::new();
+    let a = g.add(train("a")).unwrap();
+    let b = g.add(train("b")).unwrap();
+    let ea = g.add(JobSpec::score("a/eval", "fake-cfg", EvalKind::LmSuites, a)).unwrap();
+    let eb = g.add(JobSpec::score("b/eval", "fake-cfg", EvalKind::LmSuites, b)).unwrap();
+    g.validate().unwrap();
+    for jobs in [1, 4] {
+        let runner = MockRunner::default();
+        let report = execute(&g, &opts(jobs), &runner).unwrap();
+        report.require_ok(&g).unwrap();
+        let order = runner.started();
+        let pos = |id: &str| order.iter().position(|x| x == id).unwrap();
+        assert!(pos("a") < pos("a/eval"));
+        assert!(pos("b") < pos("b/eval"));
+        // the delivered payload (not some fresh state) determined the score
+        let accs = result_set(&g, &report.statuses);
+        assert_eq!(accs["a/eval"], fake_acc("a") as f32 as f64);
+        assert_eq!(accs["b/eval"], fake_acc("b") as f32 as f64);
+        // eval jobs also carry a result for the drivers
+        assert!(report.result(ea).is_ok());
+        assert!(report.result(eb).is_ok());
+    }
+}
+
+#[test]
+fn failed_training_job_skips_its_eval_job() {
+    let mut g = JobGraph::new();
+    let a = g.add(train("a")).unwrap();
+    g.add(JobSpec::score("a/eval", "fake-cfg", EvalKind::LmSuites, a)).unwrap();
+    let b = g.add(train("b")).unwrap();
+    let runner = MockRunner {
+        fail_on: ["a".to_string()].into_iter().collect(),
+        ..Default::default()
+    };
+    let report = execute(&g, &opts(2), &runner).unwrap();
+    assert!(matches!(report.statuses[a], JobStatus::Failed(_)));
+    assert!(matches!(report.statuses[a + 1], JobStatus::Skipped(_)));
+    assert!(matches!(report.statuses[b], JobStatus::Done { .. }));
+}
+
+#[test]
+fn train_jobs_feeding_eval_jobs_never_resume_from_the_manifest() {
+    // The eval payload (final weights) is not persisted, so a resumed
+    // train job could never feed its eval dependent — both must re-run.
+    let dir = std::env::temp_dir().join("grades_sched_eval_resume_test");
+    std::fs::remove_dir_all(&dir).ok();
+    let manifest = dir.join("run_manifest.json");
+    let sopts = SchedulerOptions {
+        jobs: 1,
+        manifest_path: Some(manifest.clone()),
+        ..Default::default()
+    };
+    let mut g = JobGraph::new();
+    let a = g.add(train("a")).unwrap();
+    g.add(JobSpec::score("a/eval", "fake-cfg", EvalKind::LmSuites, a)).unwrap();
+    g.add(train("plain")).unwrap();
+
+    execute(&g, &sopts, &MockRunner::default()).unwrap().require_ok(&g).unwrap();
+    let second = MockRunner::default();
+    execute(&g, &sopts, &second).unwrap().require_ok(&g).unwrap();
+    // "plain" resumed; the exporting train job and its eval re-ran
+    assert_eq!(second.started(), vec!["a".to_string(), "a/eval".to_string()]);
     std::fs::remove_dir_all(&dir).ok();
 }
 
