@@ -4,7 +4,6 @@
 
 use anyhow::Result;
 use grades::exp::{ablation, ExpOptions};
-use grades::runtime::artifact::Client;
 
 fn main() -> Result<()> {
     let config = std::env::args().nth(1).unwrap_or_else(|| "lm-tiny-fp".to_string());
@@ -12,6 +11,7 @@ fn main() -> Result<()> {
     let mut opts = ExpOptions::default();
     opts.steps_override = steps;
     opts.questions = 24;
-    let client = Client::cpu()?;
-    ablation::run(&client, &opts, &config)
+    // backend resolution is per config: compiled artifacts when present,
+    // the pure-Rust host engine otherwise (ExpOptions::backend = Auto)
+    ablation::run(&opts, &config)
 }

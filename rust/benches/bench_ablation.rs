@@ -12,7 +12,6 @@ use grades::config::repo_root;
 use grades::exp::ablation::{self, ALPHAS, TAUS};
 use grades::exp::{plan, scheduler, ExpOptions};
 use grades::exp::scheduler::JobStatus;
-use grades::runtime::artifact::Client;
 use grades::util::json::{self, Json};
 use grades::util::timer::Timer;
 
@@ -38,20 +37,18 @@ fn main() -> Result<()> {
         eprintln!("bench_ablation: artifacts/lm-tiny-fp missing (run `make artifacts`); skipping");
         return Ok(());
     }
-    let client = Client::cpu()?;
-
     // The rendered-tables twin of `grades repro ablation` (sequential).
     let mut opts = ExpOptions::quick(60, 8);
     opts.out_dir = repo_root().join("results").join("bench");
     opts.verbose = true;
     opts.resume = false;
-    ablation::run(&client, &opts, "lm-tiny-fp")?;
+    ablation::run(&opts, "lm-tiny-fp")?;
 
     // --- scheduler A/B over the same grid shape ---
     let mut qopts = ExpOptions::quick(40, 8);
     qopts.out_dir = repo_root().join("results").join("bench");
     qopts.verbose = false;
-    let runner = scheduler::DeviceRunner::new(&client, &qopts);
+    let runner = scheduler::DeviceRunner::new(&qopts);
     let sopts = |jobs: usize| scheduler::SchedulerOptions {
         jobs,
         manifest_path: None, // no resume: every pass runs every cell

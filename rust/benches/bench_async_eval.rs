@@ -163,13 +163,13 @@ fn scheduler_ab(client: &Client, report: &mut BTreeMap<String, Json>) -> Result<
     }
 
     let t0 = std::time::Instant::now();
-    let runner = DeviceRunner::new(client, &opts);
+    let runner = DeviceRunner::with_client(client, &opts);
     let rep = execute(&fused, &sopts, &runner)?;
     rep.require_ok(&fused)?;
     let fused_secs = t0.elapsed().as_secs_f64();
 
     let t1 = std::time::Instant::now();
-    let runner = DeviceRunner::new(client, &opts);
+    let runner = DeviceRunner::with_client(client, &opts);
     let rep = execute(&split, &sopts, &runner)?;
     rep.require_ok(&split)?;
     let split_secs = t1.elapsed().as_secs_f64();

@@ -2,11 +2,9 @@
 
 use anyhow::Result;
 use grades::exp::{fig1, ExpOptions};
-use grades::runtime::artifact::Client;
 
 fn main() -> Result<()> {
-    let client = Client::cpu()?;
     let mut opts = ExpOptions::quick(80, 8);
     opts.out_dir = grades::config::repo_root().join("results").join("bench");
-    fig1::run(&client, &opts, "lm-tiny-fp", 1)
+    fig1::run(&opts, "lm-tiny-fp", 1)
 }

@@ -1,0 +1,149 @@
+//! Host-backend performance + fidelity: pure-Rust steps/sec vs the
+//! compiled XLA path, and the cross-backend trajectory divergence the
+//! differential tests bound. Emits `BENCH_host_backend.json` for the
+//! perf trajectory.
+//!
+//! Always measures the host engine (no artifacts needed). When
+//! `artifacts/lm-tiny-fp` exists it also measures the XLA engine, runs
+//! the same GradES trajectory from shared initial parameters on both,
+//! reports per-step loss divergence — and **fails** (non-zero exit) if
+//! the per-matrix freeze steps disagree, so CI catches a physics drift
+//! between the engines, not just a slowdown.
+//!
+//! `--quick` shortens the measured loops (CI smoke mode).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{ensure, Result};
+use grades::config::{repo_root, RepoConfig};
+use grades::coordinator::trainer::{self, StoppingMethod, TrainOutcome, TrainerOptions};
+use grades::coordinator::warmstart::BaseCheckpoint;
+use grades::data;
+use grades::runtime::artifact::{Bundle, Client};
+use grades::runtime::backend::Backend;
+use grades::runtime::host_backend::HostBackend;
+use grades::runtime::session::Session;
+use grades::util::json::{self, Json};
+use grades::util::timer::Timer;
+
+const CONFIG: &str = "lm-tiny-fp";
+
+fn steps_per_sec(backend: &dyn Backend, iters: usize) -> Result<f64> {
+    let cfg = RepoConfig::by_name(CONFIG)?;
+    let mut ds = data::build_lm(&cfg, backend.manifest())?;
+    let batch = ds.train.next_batch();
+    let m = backend.manifest();
+    let mut ctrl = vec![1f32; m.ctrl_len];
+    ctrl[1] = 1e-4;
+    let mut session = Session::new(backend);
+    session.init(1)?;
+    for t in 0..3 {
+        ctrl[0] = (t + 1) as f32;
+        session.train_step(&batch, &ctrl, false)?;
+    }
+    let t0 = Timer::new();
+    for t in 0..iters {
+        ctrl[0] = (t + 4) as f32;
+        session.train_step(&batch, &ctrl, false)?;
+    }
+    Ok(iters as f64 / t0.secs())
+}
+
+/// One monitored GradES run from shared initial parameters (generous τ
+/// after a short grace: deterministic freezing on both engines).
+fn grades_run(
+    backend: &dyn Backend,
+    steps: usize,
+    warm: Arc<BaseCheckpoint>,
+) -> Result<TrainOutcome> {
+    let mut cfg = RepoConfig::by_name(CONFIG)?;
+    cfg.grades.alpha = 0.2;
+    cfg.grades.tau = 5.0;
+    let mut ds = data::build_lm(&cfg, backend.manifest())?;
+    let val: Vec<_> = ds.val.iter().take(2).cloned().collect();
+    let mut opts = TrainerOptions::from_config(&cfg, StoppingMethod::GradEs);
+    opts.total_steps = steps;
+    opts.probe_every = 1;
+    opts.warm_start = Some(warm);
+    trainer::run(backend, &cfg, &opts, || ds.train.next_batch(), &val)
+}
+
+fn main() -> Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let iters = if quick { 8 } else { 30 };
+    let traj_steps = if quick { 12 } else { 30 };
+    let mut report: BTreeMap<String, Json> = BTreeMap::new();
+    report.insert("quick".into(), Json::Bool(quick));
+
+    let cfg = RepoConfig::by_name(CONFIG)?;
+    let host = HostBackend::for_config(&cfg)?;
+    let host_sps = steps_per_sec(&host, iters)?;
+    println!("## bench_host_backend ({CONFIG})\n");
+    println!("host  backend: {host_sps:8.2} steps/s");
+    report.insert("host_steps_per_sec".into(), Json::Num(host_sps));
+
+    let art = repo_root().join("artifacts").join(CONFIG);
+    let loaded = if art.join("manifest.json").exists() {
+        // A compile failure (stale artifacts, mismatched XLA extension)
+        // downgrades to the host-only report rather than failing the
+        // bench — only *divergence between working engines* is fatal.
+        match Client::cpu().and_then(|c| Bundle::load(&c, &art)) {
+            Ok(b) => Some(b),
+            Err(e) => {
+                println!("xla   backend: unavailable ({e:#}); host-only report");
+                None
+            }
+        }
+    } else {
+        println!("xla   backend: skipped (artifacts/{CONFIG} missing — run `make artifacts`)");
+        None
+    };
+    if loaded.is_none() {
+        report.insert("xla_available".into(), Json::Bool(false));
+    }
+    if let Some(bundle) = loaded {
+        let xla_sps = steps_per_sec(&bundle, iters)?;
+        println!("xla   backend: {xla_sps:8.2} steps/s ({:.2}x of host)", xla_sps / host_sps);
+        report.insert("xla_available".into(), Json::Bool(true));
+        report.insert("xla_steps_per_sec".into(), Json::Num(xla_sps));
+        report.insert("xla_over_host_speedup".into(), Json::Num(xla_sps / host_sps));
+
+        // --- trajectory divergence from shared initial parameters ---
+        let mut s = Session::new(&bundle);
+        s.init(42)?;
+        let warm =
+            Arc::new(BaseCheckpoint::from_state(&bundle.manifest, &s.state_to_host()?)?);
+        let x = grades_run(&bundle, traj_steps, warm.clone())?;
+        let h = grades_run(&host, traj_steps, warm)?;
+        let mut max_rel = 0f64;
+        for (rx, rh) in x.log.records.iter().zip(&h.log.records) {
+            let rel = (rx.loss - rh.loss).abs() / rx.loss.abs().max(1e-8);
+            max_rel = max_rel.max(rel);
+        }
+        let ev = |o: &TrainOutcome| -> Vec<(usize, usize)> {
+            o.freeze.events.iter().map(|e| (e.step, e.component)).collect()
+        };
+        let identical = ev(&x) == ev(&h) && x.steps_run == h.steps_run;
+        println!(
+            "trajectory over {} logged steps: max per-step loss divergence {:.3e}; \
+             freeze steps identical: {identical}",
+            x.log.records.len().min(h.log.records.len()),
+            max_rel,
+        );
+        report.insert("trajectory_steps".into(), Json::Num(traj_steps as f64));
+        report.insert("max_rel_loss_divergence".into(), Json::Num(max_rel));
+        report.insert("freeze_steps_identical".into(), Json::Bool(identical));
+        ensure!(
+            identical,
+            "host and XLA backends disagree on freeze steps: xla {:?} vs host {:?}",
+            ev(&x),
+            ev(&h)
+        );
+    }
+
+    let out = repo_root().join("BENCH_host_backend.json");
+    std::fs::write(&out, json::write(&Json::Obj(report)))?;
+    println!("wrote {}", out.display());
+    Ok(())
+}

@@ -3,16 +3,14 @@
 
 use anyhow::Result;
 use grades::exp::{lm_matrix, ExpOptions};
-use grades::runtime::artifact::Client;
 
 fn main() -> Result<()> {
-    let client = Client::cpu()?;
     let mut opts = ExpOptions::quick(80, 12);
     opts.out_dir = grades::config::repo_root().join("results").join("bench");
     opts.verbose = true;
     // a bench must measure real runs, never resume cells from a prior one
     opts.resume = false;
     let scales = [("lm-tiny", "lm-tiny-fp", "lm-tiny-lora")];
-    lm_matrix::run(&client, &opts, &scales)?;
+    lm_matrix::run(&opts, &scales)?;
     Ok(())
 }

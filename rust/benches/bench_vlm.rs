@@ -3,14 +3,12 @@
 
 use anyhow::Result;
 use grades::exp::{vlm, ExpOptions};
-use grades::runtime::artifact::Client;
 
 fn main() -> Result<()> {
-    let client = Client::cpu()?;
     let mut opts = ExpOptions::quick(60, 8);
     opts.out_dir = grades::config::repo_root().join("results").join("bench");
     opts.verbose = true;
     // a bench must measure real runs, never resume cells from a prior one
     opts.resume = false;
-    vlm::run(&client, &opts)
+    vlm::run(&opts)
 }

@@ -22,6 +22,51 @@ fn get_str(t: &Table, k: &str, default: &str) -> String {
     t.get(k).and_then(|v| v.as_str().ok()).unwrap_or(default).to_string()
 }
 
+/// Model shapes (`[model]`) — previously consumed only by the Python
+/// AOT exporter; the pure-Rust host backend reads the same table to
+/// synthesize its layout/manifest without any artifacts on disk.
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    /// "lm" or "vlm".
+    pub kind: String,
+    /// Tokenizer vocabulary size.
+    pub vocab_size: usize,
+    /// Residual-stream width D.
+    pub d_model: usize,
+    /// Transformer block count.
+    pub n_layers: usize,
+    /// Attention head count (D must divide evenly).
+    pub n_heads: usize,
+    /// SwiGLU hidden width.
+    pub d_ff: usize,
+    /// Maximum (== compiled) sequence length.
+    pub max_seq: usize,
+}
+
+/// Training hyperparameters (`[train]`) — batch shape, optimizer and its
+/// constants. Defaults mirror `python/compile/configs.py::TrainConfig`.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Fixed batch size B.
+    pub batch_size: usize,
+    /// Fixed sequence length T.
+    pub seq_len: usize,
+    /// "adamw" or "sgd".
+    pub optimizer: String,
+    /// "fp" (full parameter) or "lora".
+    pub method: String,
+    /// Decoupled weight decay (scaled per step by `ctrl[2]`).
+    pub weight_decay: f64,
+    /// AdamW β₁.
+    pub beta1: f64,
+    /// AdamW β₂.
+    pub beta2: f64,
+    /// AdamW ε.
+    pub eps: f64,
+    /// SGD momentum.
+    pub momentum: f64,
+}
+
 /// Training-run hyperparameters (`[run]`).
 #[derive(Debug, Clone)]
 pub struct RunConfig {
@@ -94,6 +139,10 @@ pub struct RepoConfig {
     pub name: String,
     /// Path the config was loaded from.
     pub path: PathBuf,
+    /// `[model]` — transformer shapes (host backend + info).
+    pub model: ModelConfig,
+    /// `[train]` — batch shape, optimizer constants.
+    pub train: TrainConfig,
     /// `[run]` — step budget, LR schedule, seed.
     pub run: RunConfig,
     /// `[grades]` — monitor thresholds and extensions.
@@ -126,9 +175,31 @@ impl RepoConfig {
         let grades = doc.table_or_empty("grades");
         let es = doc.table_or_empty("es");
         let data = doc.table_or_empty("data");
+        let model = doc.table_or_empty("model");
+        let train = doc.table_or_empty("train");
         Ok(RepoConfig {
             name,
             path,
+            model: ModelConfig {
+                kind: get_str(&model, "kind", "lm"),
+                vocab_size: get_usize(&model, "vocab_size", 0),
+                d_model: get_usize(&model, "d_model", 0),
+                n_layers: get_usize(&model, "n_layers", 0),
+                n_heads: get_usize(&model, "n_heads", 1),
+                d_ff: get_usize(&model, "d_ff", 0),
+                max_seq: get_usize(&model, "max_seq", 0),
+            },
+            train: TrainConfig {
+                batch_size: get_usize(&train, "batch_size", 0),
+                seq_len: get_usize(&train, "seq_len", 0),
+                optimizer: get_str(&train, "optimizer", "adamw"),
+                method: get_str(&train, "method", "fp"),
+                weight_decay: get_f64(&train, "weight_decay", 0.01),
+                beta1: get_f64(&train, "beta1", 0.9),
+                beta2: get_f64(&train, "beta2", 0.999),
+                eps: get_f64(&train, "eps", 1e-8),
+                momentum: get_f64(&train, "momentum", 0.9),
+            },
             run: RunConfig {
                 total_steps: get_usize(&run, "total_steps", 200),
                 lr: get_f64(&run, "lr", 1e-3),
@@ -187,6 +258,21 @@ mod tests {
         assert!((c.grades.alpha - 0.5).abs() < 1e-12);
         assert_eq!(c.es.patience, 3);
         assert_eq!(c.data.corpus, "grammar");
+        // [model]/[train] tables, shared with the python exporter
+        assert_eq!(c.model.kind, "lm");
+        assert_eq!((c.model.d_model, c.model.n_layers, c.model.n_heads), (64, 2, 4));
+        assert_eq!((c.model.d_ff, c.model.max_seq, c.model.vocab_size), (128, 48, 256));
+        assert_eq!((c.train.batch_size, c.train.seq_len), (8, 48));
+        assert_eq!(c.train.optimizer, "adamw");
+        assert_eq!(c.train.method, "fp");
+        assert!((c.train.weight_decay - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sgd_config_reads_momentum() {
+        let c = RepoConfig::by_name("lm-tiny-sgd").unwrap();
+        assert_eq!(c.train.optimizer, "sgd");
+        assert!((c.train.momentum - 0.9).abs() < 1e-12);
     }
 
     #[test]

@@ -34,8 +34,8 @@ use crate::coordinator::grades::GradesMonitor;
 use crate::coordinator::lr::CosineSchedule;
 use crate::coordinator::metrics::MetricsLog;
 use crate::coordinator::scheduler::{Variant, VariantScheduler};
-use crate::runtime::artifact::Bundle;
 use crate::runtime::async_eval::{AsyncEvalOptions, AsyncEvalStats, AsyncValidator, EvalSnapshot};
+use crate::runtime::backend::Backend;
 use crate::runtime::pipeline::{
     BatchSource, DeviceBatchCache, FnSource, PipelineOptions, StepTimings,
 };
@@ -162,13 +162,13 @@ impl TrainerOptions {
 /// Run one training job. `next_batch` yields training batches;
 /// `val_batches` is the fixed validation set.
 pub fn run<F: FnMut() -> Batch>(
-    bundle: &Bundle,
+    backend: &dyn Backend,
     cfg: &RepoConfig,
     opts: &TrainerOptions,
     next_batch: F,
     val_batches: &[Batch],
 ) -> Result<TrainOutcome> {
-    run_and_keep(bundle, cfg, opts, next_batch, val_batches).map(|t| t.outcome)
+    run_and_keep(backend, cfg, opts, next_batch, val_batches).map(|t| t.outcome)
 }
 
 /// Run and leave the trained session alive for downstream evaluation.
@@ -181,36 +181,36 @@ pub struct TrainedModel<'b> {
 
 /// [`run`], returning the live session alongside the outcome.
 pub fn run_and_keep<'b, F: FnMut() -> Batch>(
-    bundle: &'b Bundle,
+    backend: &'b dyn Backend,
     cfg: &RepoConfig,
     opts: &TrainerOptions,
     next_batch: F,
     val_batches: &[Batch],
 ) -> Result<TrainedModel<'b>> {
-    run_source_and_keep(bundle, cfg, opts, &mut FnSource(next_batch), val_batches)
+    run_source_and_keep(backend, cfg, opts, &mut FnSource(next_batch), val_batches)
 }
 
 /// [`run`] over any [`BatchSource`] (e.g. a `Prefetcher`).
 pub fn run_source(
-    bundle: &Bundle,
+    backend: &dyn Backend,
     cfg: &RepoConfig,
     opts: &TrainerOptions,
     source: &mut dyn BatchSource,
     val_batches: &[Batch],
 ) -> Result<TrainOutcome> {
-    run_source_and_keep(bundle, cfg, opts, source, val_batches).map(|t| t.outcome)
+    run_source_and_keep(backend, cfg, opts, source, val_batches).map(|t| t.outcome)
 }
 
 /// [`run_source`], returning the live session alongside the outcome.
 pub fn run_source_and_keep<'b>(
-    bundle: &'b Bundle,
+    backend: &'b dyn Backend,
     cfg: &RepoConfig,
     opts: &TrainerOptions,
     source: &mut dyn BatchSource,
     val_batches: &[Batch],
 ) -> Result<TrainedModel<'b>> {
-    let m = &bundle.manifest;
-    let mut session = Session::new(bundle);
+    let m = backend.manifest();
+    let mut session = Session::new(backend);
     session.init(opts.seed)?;
     if let Some(ck) = &opts.warm_start {
         ck.apply(&mut session)?;

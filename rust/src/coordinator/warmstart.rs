@@ -19,6 +19,7 @@ use crate::coordinator::lr::CosineSchedule;
 use crate::coordinator::trainer::{run_source_and_keep, StoppingMethod, TrainerOptions};
 use crate::data;
 use crate::runtime::artifact::{Bundle, Client};
+use crate::runtime::backend::Backend;
 use crate::runtime::manifest::Manifest;
 use crate::runtime::pipeline::{FixedCycle, PipelineOptions, Prefetcher};
 use crate::runtime::session::{decode_checkpoint, Session};
@@ -45,7 +46,7 @@ impl BaseCheckpoint {
     /// Overwrite a session's matching base parameters (by name) in place.
     /// Tensors absent from the checkpoint (LoRA A/B) keep their init.
     pub fn apply(&self, session: &mut Session) -> Result<usize> {
-        let manifest = &session.bundle.manifest;
+        let manifest = session.manifest();
         let mut state = session.state_to_host()?;
         let mut applied = 0usize;
         for p in &manifest.params {
@@ -66,11 +67,15 @@ impl BaseCheckpoint {
     }
 }
 
-fn cache_path(config_name: &str, steps: usize) -> PathBuf {
+/// The checkpoint disk-cache key includes the backend: host and XLA
+/// layouts are bit-compatible *by design* (same `state_len`), so without
+/// the label a host-pretrained base would silently warm-start later XLA
+/// runs (or vice versa) — the length guard below cannot tell them apart.
+fn cache_path(config_name: &str, steps: usize, backend: &str) -> PathBuf {
     crate::config::repo_root()
         .join("results")
         .join("checkpoints")
-        .join(format!("{config_name}_{steps}.bin"))
+        .join(format!("{config_name}_{steps}_{backend}.bin"))
 }
 
 /// Pretrain (or load a cached) FP base checkpoint for `config_name`.
@@ -86,28 +91,33 @@ pub fn pretrain_checkpoint(
     pretrain_checkpoint_with(&bundle, config_name, steps)
 }
 
-/// [`pretrain_checkpoint`] over an already-compiled bundle — the
-/// scheduler path, where bundles come from a shared [`BundleCache`] and
-/// must not be recompiled per pretrain job.
+/// [`pretrain_checkpoint`] over an already-built engine — the scheduler
+/// path, where engines come from a shared cache (see
+/// `runtime::backend::EngineCache`) and must not be rebuilt per pretrain
+/// job. Backend-generic: a host-backend pretrain produces a checkpoint a
+/// host fine-tune consumes (the layouts match the XLA ones bit-for-bit,
+/// but trajectories differ across backends, so the disk cache is only
+/// reused when the state length matches).
 pub fn pretrain_checkpoint_with(
-    bundle: &Bundle,
+    backend: &dyn Backend,
     config_name: &str,
     steps: usize,
 ) -> Result<BaseCheckpoint> {
-    let path = cache_path(config_name, steps);
+    let manifest = backend.manifest();
+    let path = cache_path(config_name, steps, backend.name());
     if path.exists() {
         // corrupt/stale caches (truncated write, layout change) are not
         // fatal — fall through and retrain below
         if let Ok((_, state)) = decode_checkpoint(&std::fs::read(&path)?) {
-            if state.len() == bundle.manifest.state_len {
-                let mut ck = BaseCheckpoint::from_state(&bundle.manifest, &state)?;
+            if state.len() == manifest.state_len {
+                let mut ck = BaseCheckpoint::from_state(manifest, &state)?;
                 ck.source = format!("{config_name} (cached)");
                 return Ok(ck);
             }
         }
     }
     let cfg = RepoConfig::by_name(config_name)?;
-    let ds = data::build_lm_pretrain(&cfg, &bundle.manifest)?;
+    let ds = data::build_lm_pretrain(&cfg, manifest)?;
     let opts = TrainerOptions {
         method: StoppingMethod::None,
         total_steps: steps,
@@ -122,10 +132,10 @@ pub fn pretrain_checkpoint_with(
     // reuse the same cosine schedule semantics as a real pretrain run
     let _ = CosineSchedule::new(cfg.run.lr, cfg.run.warmup_frac, steps);
     let mut source = Prefetcher::spawn(ds.train, opts.pipeline.prefetch_batches);
-    let trained = run_source_and_keep(bundle, &cfg, &opts, &mut source, &[])?;
+    let trained = run_source_and_keep(backend, &cfg, &opts, &mut source, &[])?;
     trained.session.save_checkpoint(&path)?;
     let state = trained.session.state_to_host()?;
-    BaseCheckpoint::from_state(&bundle.manifest, &state)
+    BaseCheckpoint::from_state(manifest, &state)
 }
 
 /// VLM variant of `pretrain_checkpoint`.
@@ -138,23 +148,24 @@ pub fn pretrain_vlm_checkpoint(
     pretrain_vlm_checkpoint_with(&bundle, config_name, steps)
 }
 
-/// [`pretrain_vlm_checkpoint`] over an already-compiled bundle (the
+/// [`pretrain_vlm_checkpoint`] over an already-built engine (the
 /// scheduler path — see [`pretrain_checkpoint_with`]).
 pub fn pretrain_vlm_checkpoint_with(
-    bundle: &Bundle,
+    backend: &dyn Backend,
     config_name: &str,
     steps: usize,
 ) -> Result<BaseCheckpoint> {
-    let path = cache_path(config_name, steps);
+    let manifest = backend.manifest();
+    let path = cache_path(config_name, steps, backend.name());
     if path.exists() {
         if let Ok((_, state)) = decode_checkpoint(&std::fs::read(&path)?) {
-            if state.len() == bundle.manifest.state_len {
-                return BaseCheckpoint::from_state(&bundle.manifest, &state);
+            if state.len() == manifest.state_len {
+                return BaseCheckpoint::from_state(manifest, &state);
             }
         }
     }
     let cfg = RepoConfig::by_name(config_name)?;
-    let ds = data::build_vlm_pretrain(&cfg, &bundle.manifest)?;
+    let ds = data::build_vlm_pretrain(&cfg, manifest)?;
     let opts = TrainerOptions {
         method: StoppingMethod::None,
         total_steps: steps,
@@ -168,10 +179,10 @@ pub fn pretrain_vlm_checkpoint_with(
     };
     let mut source =
         Prefetcher::spawn(FixedCycle::new(ds.train), opts.pipeline.prefetch_batches);
-    let trained = run_source_and_keep(bundle, &cfg, &opts, &mut source, &[])?;
+    let trained = run_source_and_keep(backend, &cfg, &opts, &mut source, &[])?;
     trained.session.save_checkpoint(&path)?;
     let state = trained.session.state_to_host()?;
-    BaseCheckpoint::from_state(&bundle.manifest, &state)
+    BaseCheckpoint::from_state(manifest, &state)
 }
 
 #[cfg(test)]

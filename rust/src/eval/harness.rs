@@ -164,7 +164,7 @@ impl Accuracy {
 
 /// Score one suite (packs on the fly — use [`PackedSuite`] to amortize).
 pub fn score_suite(session: &Session, suite: &Suite) -> Result<f64> {
-    PackedSuite::pack(&session.bundle.manifest, suite)?.score(session)
+    PackedSuite::pack(session.manifest(), suite)?.score(session)
 }
 
 /// Accuracy per suite, in order, plus the average — one Table-1 row.

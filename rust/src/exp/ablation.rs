@@ -16,7 +16,6 @@ use anyhow::Result;
 
 use super::{plan, scheduler, write_result, ExpOptions, JobResult};
 use crate::report::table::{pct, secs, Table};
-use crate::runtime::artifact::Client;
 
 /// τ grid of Tables 6/7.
 pub const TAUS: [f64; 4] = [0.01, 0.05, 0.1, 0.2];
@@ -29,9 +28,9 @@ fn cell(r: &JobResult) -> (f64, f64, usize) {
 }
 
 /// Run the τ×α grid + design ablations and render Tables 6/7.
-pub fn run(client: &Client, opts: &ExpOptions, config_name: &str) -> Result<()> {
+pub fn run(opts: &ExpOptions, config_name: &str) -> Result<()> {
     let (graph, slots) = plan::ablation_plan(config_name, &TAUS, &ALPHAS)?;
-    let runner = scheduler::DeviceRunner::new(client, opts);
+    let runner = scheduler::DeviceRunner::new(opts);
     let report = scheduler::execute(&graph, &opts.scheduler(), &runner)?;
     report.require_ok(&graph)?;
 

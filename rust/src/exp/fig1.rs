@@ -17,16 +17,17 @@ use anyhow::{Context, Result};
 use super::{plan, scheduler, write_result, ExpOptions};
 use crate::config::RepoConfig;
 use crate::report::figures::ascii_chart;
-use crate::runtime::artifact::Client;
-use crate::runtime::manifest::Manifest;
+use crate::runtime::backend::manifest_for;
 
 /// Run the monitor-off probe-every-step job and render Figures 1/4a.
-pub fn run(client: &Client, opts: &ExpOptions, config_name: &str, layer: usize) -> Result<()> {
+pub fn run(opts: &ExpOptions, config_name: &str, layer: usize) -> Result<()> {
     let cfg = RepoConfig::by_name(config_name)?;
-    let m = Manifest::load(&cfg.artifact_dir().join("manifest.json"))
-        .with_context(|| format!("artifact {config_name} (run `make artifacts`)"))?;
+    // Artifact dir for XLA configs, synthesized layout for host ones —
+    // the same resolution the runner's engine cache applies.
+    let m = manifest_for(opts.backend, &cfg)
+        .with_context(|| format!("resolving backend for {config_name}"))?;
     let (graph, job) = plan::fig1_plan(config_name)?;
-    let runner = scheduler::DeviceRunner::new(client, opts);
+    let runner = scheduler::DeviceRunner::new(opts);
     let mut report = scheduler::execute(&graph, &opts.scheduler(), &runner)?;
     report.require_ok(&graph)?;
     let outcome = report.take_result(job)?.outcome;

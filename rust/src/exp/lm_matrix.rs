@@ -15,7 +15,6 @@ use super::{method_label, plan, scheduler, write_result, ExpOptions, JobResult};
 use crate::coordinator::trainer::StoppingMethod;
 use crate::report::figures::ascii_chart;
 use crate::report::table::{pct, sci, secs, speedup, Table};
-use crate::runtime::artifact::Client;
 use crate::util::csv::CsvWriter;
 
 /// The three model scales of Tables 1/4 (display, fp config, lora config).
@@ -35,13 +34,9 @@ pub struct MatrixResults {
 }
 
 /// Execute the matrix plan and collect per-cell results.
-pub fn run_matrix(
-    client: &Client,
-    opts: &ExpOptions,
-    scales: &[(&str, &str, &str)],
-) -> Result<MatrixResults> {
+pub fn run_matrix(opts: &ExpOptions, scales: &[(&str, &str, &str)]) -> Result<MatrixResults> {
     let (graph, slots) = plan::lm_matrix_plan(scales)?;
-    let runner = scheduler::DeviceRunner::new(client, opts);
+    let runner = scheduler::DeviceRunner::new(opts);
     let mut report = scheduler::execute(&graph, &opts.scheduler(), &runner)?;
     report.require_ok(&graph)?;
     // Figure 3 series come from the persisted summaries (exact for both
@@ -140,8 +135,8 @@ pub fn render_fig3(res: &MatrixResults, opts: &ExpOptions) -> Result<String> {
 }
 
 /// The combined driver: tables 1 & 4 + figure 3 from one set of runs.
-pub fn run(client: &Client, opts: &ExpOptions, scales: &[(&str, &str, &str)]) -> Result<MatrixResults> {
-    let res = run_matrix(client, opts, scales)?;
+pub fn run(opts: &ExpOptions, scales: &[(&str, &str, &str)]) -> Result<MatrixResults> {
+    let res = run_matrix(opts, scales)?;
     let t1 = render_table1(&res);
     let t4 = render_table4(&res);
     let f3 = render_fig3(&res, opts)?;

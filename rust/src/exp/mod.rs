@@ -38,6 +38,9 @@ pub struct ExpOptions {
     pub jobs: usize,
     /// Resume from the run manifest under `out_dir` (`--fresh` disables).
     pub resume: bool,
+    /// Execution backend (`--backend auto|host|xla`). `Auto` picks XLA
+    /// per config when its artifacts exist, the host engine otherwise.
+    pub backend: crate::runtime::backend::BackendChoice,
 }
 
 impl Default for ExpOptions {
@@ -50,6 +53,7 @@ impl Default for ExpOptions {
             verbose: true,
             jobs: 1,
             resume: true,
+            backend: Default::default(),
         }
     }
 }
@@ -70,6 +74,11 @@ impl ExpOptions {
     /// only when its fingerprint matches, so `--quick`/`--steps N` cells
     /// are never silently reused by a run with different settings.
     pub fn settings_fingerprint(&self) -> String {
+        // The backend is NOT part of this run-wide string: it enters each
+        // job's fingerprint per config, *resolved* (host vs xla), via
+        // `scheduler::job_settings` — so host-run cells never resume into
+        // an XLA run even when `auto`'s resolution changes because
+        // artifacts were built between runs.
         format!(
             "steps_override={:?};questions={};bench_seed={:#x}",
             self.steps_override, self.questions, self.bench_seed
@@ -84,6 +93,7 @@ impl ExpOptions {
             manifest_path: Some(self.out_dir.join("run_manifest.json")),
             resume: self.resume,
             settings: self.settings_fingerprint(),
+            backend: self.backend,
             verbose: self.verbose,
         }
     }

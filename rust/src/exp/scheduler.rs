@@ -17,10 +17,12 @@
 //! through PJRT's own thread pool, so the scheduler's wins are overlap of
 //! host-side work, shared compiles/datasets/suites, and resumability.
 //!
-//! Behind the token live the per-config caches: a [`BundleCache`]
-//! (compile once — the token doubles as the compile lock) and the
-//! device-resident benchmark suites (upload once per config). Outside it
-//! live the host caches: per-config dataset rows and packed suites.
+//! Behind the token live the per-config caches: an [`EngineCache`]
+//! (build/compile each config's backend once — the token doubles as the
+//! compile lock) and the device-resident benchmark suites (upload once
+//! per config). Outside it live the host caches: per-config dataset rows
+//! and packed suites. Which backend an engine is (compiled XLA artifacts
+//! or the pure-Rust host transformer) comes from `ExpOptions::backend`.
 //!
 //! # Determinism
 //!
@@ -62,7 +64,8 @@ use crate::coordinator::warmstart::{self, BaseCheckpoint};
 use crate::data;
 use crate::eval::benchmarks;
 use crate::eval::harness::{self, DeviceSuite, PackedSuite};
-use crate::runtime::artifact::{BundleCache, Client};
+use crate::runtime::artifact::Client;
+use crate::runtime::backend::{manifest_for, Backend, BackendChoice, EngineCache};
 use crate::runtime::manifest::Manifest;
 use crate::runtime::pipeline::{FixedCycle, Prefetcher};
 use crate::runtime::session::Session;
@@ -89,6 +92,11 @@ pub struct SchedulerOptions {
     /// when its recorded fingerprint matches, so cells produced under
     /// `--quick`/`--steps` are never silently reused by a full run.
     pub settings: String,
+    /// Backend selection policy — resolved *per config* into every job's
+    /// fingerprint (see [`job_settings`]), so host-run and XLA-run cells
+    /// never resume into each other, even under `auto` when artifacts
+    /// appear between runs.
+    pub backend: BackendChoice,
     /// Progress lines on stdout.
     pub verbose: bool,
 }
@@ -100,16 +108,25 @@ impl Default for SchedulerOptions {
             manifest_path: None,
             resume: true,
             settings: String::new(),
+            backend: BackendChoice::default(),
             verbose: false,
         }
     }
 }
 
-/// The full settings fingerprint for one job: the run-wide part plus the
-/// spec's own overrides. Must be identical between the run that wrote a
-/// summary and the run trying to resume from it.
-pub fn job_settings(spec: &JobSpec, global: &str) -> String {
-    format!("{global}|steps={:?}|probe={:?}", spec.steps, spec.probe_every)
+/// The full settings fingerprint for one job: the run-wide part, the
+/// spec's own overrides, and the backend the job's config *resolves* to
+/// under `choice` (not the requested policy: under `auto`, building
+/// artifacts changes the resolution, and the fingerprint must notice).
+/// Must be identical between the run that wrote a summary and the run
+/// trying to resume from it.
+pub fn job_settings(spec: &JobSpec, global: &str, choice: BackendChoice) -> String {
+    format!(
+        "{global}|steps={:?}|probe={:?}|be={}",
+        spec.steps,
+        spec.probe_every,
+        choice.resolve(&spec.config).label()
+    )
 }
 
 /// Effective worker count: `--jobs` flag wins, then the `GRADES_JOBS`
@@ -265,7 +282,7 @@ fn series_from_json(j: &Json) -> Result<Vec<(f64, f64)>> {
 
 impl JobSummary {
     /// Summarize a live result (called right after the job completes).
-    /// `settings` is the run-wide fingerprint (see [`job_settings`]).
+    /// `settings` is the job's *full* fingerprint (see [`job_settings`]).
     pub fn from_result(
         spec: &JobSpec,
         r: &JobResult,
@@ -286,7 +303,7 @@ impl JobSummary {
         JobSummary {
             id: spec.id.clone(),
             config: r.config.clone(),
-            settings: job_settings(spec, settings),
+            settings: settings.to_string(),
             method: r.method.label().to_string(),
             steps_run: o.steps_run,
             stop_cause: stop_cause_str(o.stop_cause).to_string(),
@@ -921,7 +938,7 @@ pub fn execute(
         let feeds_eval = children[i].iter().any(|&c| graph.get(c).kind == JobKind::Eval);
         if spec.kind == JobKind::Train && spec.persist && opts.resume && !feeds_eval {
             if let Some(s) = manifest.jobs.get(&spec.id) {
-                let want = job_settings(spec, &opts.settings);
+                let want = job_settings(spec, &opts.settings, opts.backend);
                 if s.settings != want {
                     eprintln!(
                         "[scheduler] not resuming {:?}: recorded under different settings \
@@ -1045,10 +1062,13 @@ struct HostRes {
 }
 
 impl HostRes {
-    fn build(cfg: RepoConfig) -> Result<Self> {
-        let manifest_path = cfg.artifact_dir().join("manifest.json");
-        let manifest = Manifest::load(&manifest_path)
-            .with_context(|| format!("artifact {} (run `make artifacts`)", cfg.name))?;
+    /// `choice` decides where the manifest comes from: the artifact dir
+    /// (XLA) or layout synthesis (host) — crucially with *no* client
+    /// involved, so this stays a host-phase build outside the device
+    /// token.
+    fn build(cfg: RepoConfig, choice: BackendChoice) -> Result<Self> {
+        let manifest = manifest_for(choice, &cfg)
+            .with_context(|| format!("resolving backend for config {}", cfg.name))?;
         let (lm, vlm) = if manifest.is_vlm() {
             (None, Some(data::build_vlm(&cfg, &manifest)?))
         } else {
@@ -1058,11 +1078,12 @@ impl HostRes {
     }
 }
 
-/// Device-side per-config caches. Everything in here holds PJRT handles
-/// with non-atomic refcounts, so access is serialized by the mutex around
-/// [`DeviceShared`] — the scheduler's device token.
+/// Device-side per-config caches. On the XLA path everything in here
+/// holds PJRT handles with non-atomic refcounts, so access is serialized
+/// by the mutex around [`DeviceShared`] — the scheduler's device token.
+/// (Host engines are plain data but share the cache and the discipline.)
 struct DeviceArena {
-    bundles: BundleCache,
+    engines: EngineCache,
     /// Device-resident benchmark suites, uploaded once per (config, kind).
     suites: HashMap<(String, EvalKind), Vec<DeviceSuite>>,
 }
@@ -1079,8 +1100,10 @@ struct DeviceArena {
 struct DeviceShared(DeviceArena);
 unsafe impl Send for DeviceShared {}
 
-/// [`JobRunner`] over real artifacts: one shared client, per-config
-/// bundle/dataset/suite caches, warmstart handoff via `Arc`.
+/// [`JobRunner`] over real engines: per-config engine/dataset/suite
+/// caches over one shared (lazily created) client, warmstart handoff via
+/// `Arc`. Backend selection comes from `ExpOptions::backend` — XLA
+/// artifacts, the pure-Rust host engine, or auto per config.
 pub struct DeviceRunner<'a> {
     opts: &'a ExpOptions,
     device: Mutex<DeviceShared>,
@@ -1089,14 +1112,22 @@ pub struct DeviceRunner<'a> {
 }
 
 impl<'a> DeviceRunner<'a> {
-    /// Runner over one shared client with empty caches.
-    pub fn new(client: &Client, opts: &'a ExpOptions) -> Self {
+    /// Runner with empty caches; XLA configs create the shared client on
+    /// first use (host-only grids never pay for one).
+    pub fn new(opts: &'a ExpOptions) -> Self {
+        Self::with_cache(EngineCache::new(opts.backend), opts)
+    }
+
+    /// Runner reusing an existing client for XLA loads (benches that
+    /// already own one).
+    pub fn with_client(client: &Client, opts: &'a ExpOptions) -> Self {
+        Self::with_cache(EngineCache::with_client(opts.backend, client.clone()), opts)
+    }
+
+    fn with_cache(engines: EngineCache, opts: &'a ExpOptions) -> Self {
         DeviceRunner {
             opts,
-            device: Mutex::new(DeviceShared(DeviceArena {
-                bundles: BundleCache::new(client),
-                suites: HashMap::new(),
-            })),
+            device: Mutex::new(DeviceShared(DeviceArena { engines, suites: HashMap::new() })),
             hosts: Mutex::new(HashMap::new()),
             packed: Mutex::new(HashMap::new()),
         }
@@ -1115,7 +1146,7 @@ impl<'a> DeviceRunner<'a> {
         if let Some(h) = map.get(config) {
             return Ok(h.clone());
         }
-        let h = Arc::new(HostRes::build(RepoConfig::by_name(config)?)?);
+        let h = Arc::new(HostRes::build(RepoConfig::by_name(config)?, self.opts.backend)?);
         map.insert(config.to_string(), h.clone());
         Ok(h)
     }
@@ -1179,12 +1210,12 @@ impl<'a> DeviceRunner<'a> {
     /// scoring and standalone eval jobs so the cache policy can't diverge.
     fn device_suites<'r>(
         arena: &'r mut DeviceArena,
-        bundle: &Bundle,
+        backend: &dyn Backend,
         key: (String, EvalKind),
         packed: &[PackedSuite],
     ) -> Result<&'r Vec<DeviceSuite>> {
         if !arena.suites.contains_key(&key) {
-            let loader = Session::new(bundle);
+            let loader = Session::new(backend);
             let dev: Vec<DeviceSuite> =
                 packed.iter().map(|p| p.upload(&loader)).collect::<Result<_>>()?;
             arena.suites.insert(key.clone(), dev);
@@ -1199,11 +1230,11 @@ impl<'a> DeviceRunner<'a> {
         };
         let guard = self.lock_device();
         let arena = &guard.0;
-        let bundle = arena.bundles.get(&spec.config)?;
-        let ck = if bundle.manifest.is_vlm() {
-            warmstart::pretrain_vlm_checkpoint_with(&bundle, &spec.config, steps)?
+        let engine = arena.engines.get(&spec.config)?;
+        let ck = if engine.manifest().is_vlm() {
+            warmstart::pretrain_vlm_checkpoint_with(&*engine, &spec.config, steps)?
         } else {
-            warmstart::pretrain_checkpoint_with(&bundle, &spec.config, steps)?
+            warmstart::pretrain_checkpoint_with(&*engine, &spec.config, steps)?
         };
         if self.opts.verbose {
             println!("[{}] base checkpoint ready ({})", spec.id, ck.source);
@@ -1235,7 +1266,7 @@ impl<'a> DeviceRunner<'a> {
         // --- device phase: everything below holds the device token ---
         let mut guard = self.lock_device();
         let arena = &mut guard.0;
-        let bundle = arena.bundles.get(&spec.config)?;
+        let engine = arena.engines.get(&spec.config)?;
         let mut topts = TrainerOptions::from_config(&cfg, spec.method);
         topts.warm_start = warm;
         if let Some(s) = spec.steps.or(self.opts.steps_override) {
@@ -1244,7 +1275,7 @@ impl<'a> DeviceRunner<'a> {
         if let Some(p) = spec.probe_every {
             topts.probe_every = p;
         }
-        let trained = if bundle.manifest.is_vlm() {
+        let trained = if engine.manifest().is_vlm() {
             let v = host
                 .vlm
                 .as_ref()
@@ -1253,24 +1284,24 @@ impl<'a> DeviceRunner<'a> {
                 FixedCycle::new(v.train.clone()),
                 topts.pipeline.prefetch_batches,
             );
-            trainer::run_source_and_keep(&bundle, &cfg, &topts, &mut source, &v.val)?
+            trainer::run_source_and_keep(&*engine, &cfg, &topts, &mut source, &v.val)?
         } else {
             let rows = host
                 .lm
                 .as_ref()
                 .ok_or_else(|| anyhow!("{}: LM artifact without LM dataset", spec.config))?;
             let mut source = Prefetcher::spawn(
-                data::lm_train_iter(rows, &cfg, &bundle.manifest),
+                data::lm_train_iter(rows, &cfg, engine.manifest()),
                 topts.pipeline.prefetch_batches,
             );
-            trainer::run_source_and_keep(&bundle, &cfg, &topts, &mut source, &rows.val)?
+            trainer::run_source_and_keep(&*engine, &cfg, &topts, &mut source, &rows.val)?
         };
         let accuracies = match spec.eval {
             EvalKind::None => Vec::new(),
             kind => {
                 let key = (spec.config.clone(), kind);
                 let packed = packed.as_ref().expect("packed suites built above");
-                let suites = Self::device_suites(arena, &bundle, key, packed)?;
+                let suites = Self::device_suites(arena, &*engine, key, packed)?;
                 harness::score_device_suites(&trained.session, suites)?
             }
         };
@@ -1308,8 +1339,8 @@ impl<'a> DeviceRunner<'a> {
             JobSummary::from_result(
                 spec,
                 &result,
-                &bundle.manifest,
-                &self.opts.settings_fingerprint(),
+                engine.manifest(),
+                &job_settings(spec, &self.opts.settings_fingerprint(), self.opts.backend),
             )
         });
         Ok(RunnerOutput { result: Some(result), summary, checkpoint: None, eval_payload })
@@ -1340,12 +1371,12 @@ impl<'a> DeviceRunner<'a> {
         // --- device phase ---
         let mut guard = self.lock_device();
         let arena = &mut guard.0;
-        let bundle = arena.bundles.get(&spec.config)?;
-        let mut session = Session::new(&bundle);
+        let engine = arena.engines.get(&spec.config)?;
+        let mut session = Session::new(&*engine);
         session.state_from_host(&payload.state)?;
         session.step = payload.step;
         let key = (spec.config.clone(), spec.eval);
-        let suites = Self::device_suites(arena, &bundle, key, &packed)?;
+        let suites = Self::device_suites(arena, &*engine, key, &packed)?;
         let accuracies = harness::score_device_suites(&session, suites)?;
         if self.opts.verbose {
             let avg = accuracies.last().map(|a| a.1).unwrap_or(f64::NAN);
@@ -1506,12 +1537,25 @@ mod tests {
     }
 
     #[test]
-    fn job_settings_composes_global_and_spec_overrides() {
+    fn job_settings_composes_global_spec_and_resolved_backend() {
+        // explicit choices resolve to themselves regardless of what
+        // artifacts exist on disk — keeps this test filesystem-free
         let spec =
             JobSpec::train("x", "c", StoppingMethod::GradEs, EvalKind::None).with_steps(40);
-        assert_eq!(job_settings(&spec, "G"), "G|steps=Some(40)|probe=None");
+        assert_eq!(
+            job_settings(&spec, "G", BackendChoice::Host),
+            "G|steps=Some(40)|probe=None|be=host"
+        );
         let plain = JobSpec::train("y", "c", StoppingMethod::GradEs, EvalKind::None);
-        assert_eq!(job_settings(&plain, ""), "|steps=None|probe=None");
+        assert_eq!(
+            job_settings(&plain, "", BackendChoice::Xla),
+            "|steps=None|probe=None|be=xla"
+        );
+        // a host cell can never satisfy an xla run's expectation
+        assert_ne!(
+            job_settings(&plain, "", BackendChoice::Xla),
+            job_settings(&plain, "", BackendChoice::Host)
+        );
     }
 
     #[test]

@@ -17,14 +17,13 @@ use super::{method_label, plan, scheduler, write_result, ExpOptions};
 use crate::coordinator::trainer::StoppingMethod;
 use crate::report::figures::ascii_chart;
 use crate::report::table::{pct, sci, secs, speedup, Table};
-use crate::runtime::artifact::Client;
 use crate::util::csv::CsvWriter;
 
 /// Run the VLM matrix and render Tables 2/3/5 + Figure 4b.
-pub fn run(client: &Client, opts: &ExpOptions) -> Result<()> {
+pub fn run(opts: &ExpOptions) -> Result<()> {
     let pre_steps = opts.steps_override.unwrap_or(300);
     let (graph, slots) = plan::vlm_plan(pre_steps)?;
-    let runner = scheduler::DeviceRunner::new(client, opts);
+    let runner = scheduler::DeviceRunner::new(opts);
     let mut report = scheduler::execute(&graph, &opts.scheduler(), &runner)?;
     report.require_ok(&graph)?;
 

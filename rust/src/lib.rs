@@ -15,7 +15,10 @@
 //!
 //! Python never runs at training time: the rust binary loads
 //! `artifacts/<config>/*.hlo.txt` through PJRT and keeps all training
-//! state on device between steps (see `runtime::session`).
+//! state on device between steps (see `runtime::session`). Execution is
+//! backend-generic (`runtime::backend`): the same trainer also runs on a
+//! pure-Rust reference transformer (`runtime::host_backend`) with no
+//! artifacts at all — `--backend auto|host|xla`.
 //!
 //! Quickstart: `make artifacts && cargo run --release --example quickstart`.
 //! The full onboarding story lives in the repo's `README.md`; the module

@@ -15,8 +15,8 @@ use grades::coordinator::trainer::{self, StoppingMethod, TrainerOptions};
 use grades::data;
 use grades::eval::{benchmarks, harness};
 use grades::exp::{self, ExpOptions};
-use grades::runtime::artifact::{Bundle, Client};
 use grades::runtime::async_eval::{AsyncEvalOptions, StalenessBound};
+use grades::runtime::backend::{load_backend, Backend, BackendChoice};
 use grades::runtime::pipeline::{BatchSource, FixedCycle, PipelineOptions, Prefetcher};
 
 struct Args {
@@ -56,12 +56,21 @@ impl Args {
     }
 }
 
+fn backend_choice(args: &Args) -> Result<BackendChoice> {
+    match args.get("backend") {
+        None => Ok(BackendChoice::Auto),
+        Some(v) => BackendChoice::parse(v)
+            .ok_or_else(|| anyhow!("--backend must be auto|host|xla, got {v:?}")),
+    }
+}
+
 fn exp_options(args: &Args) -> Result<ExpOptions> {
     let mut opts = ExpOptions::default();
     if args.get("quick").is_some() {
         opts = ExpOptions::quick(60, 16);
         opts.verbose = true;
     }
+    opts.backend = backend_choice(args)?;
     if let Some(s) = args.usize_flag("steps")? {
         opts.steps_override = Some(s);
     }
@@ -84,8 +93,11 @@ fn cmd_train(args: &Args) -> Result<()> {
     let method = StoppingMethod::parse(args.get("method").unwrap_or("grades"))
         .ok_or_else(|| anyhow!("--method must be base|es|grades"))?;
     let cfg = RepoConfig::by_name(config)?;
-    let client = Client::cpu()?;
-    let bundle = Bundle::by_name(&client, config)?;
+    // `auto` (the default) runs the compiled artifacts when they exist
+    // and the pure-Rust host backend otherwise; `--backend host|xla`
+    // forces one side.
+    let backend = load_backend(backend_choice(args)?, config)?;
+    let backend = &*backend;
     let mut topts = TrainerOptions::from_config(&cfg, method);
     if let Some(s) = args.usize_flag("steps")? {
         topts.total_steps = s;
@@ -108,24 +120,25 @@ fn cmd_train(args: &Args) -> Result<()> {
         };
         topts.async_eval = AsyncEvalOptions { chunk: chunk.max(1), staleness };
     }
-    let is_vlm = bundle.manifest.is_vlm();
+    let manifest = backend.manifest();
+    let is_vlm = manifest.is_vlm();
     let depth = topts.pipeline.prefetch_batches;
     let trained = if is_vlm {
-        let ds = data::build_vlm(&cfg, &bundle.manifest)?;
+        let ds = data::build_vlm(&cfg, manifest)?;
         let mut source: Box<dyn BatchSource> = if depth > 0 {
             Box::new(Prefetcher::spawn(FixedCycle::new(ds.train), depth))
         } else {
             Box::new(FixedCycle::new(ds.train))
         };
-        trainer::run_source_and_keep(&bundle, &cfg, &topts, &mut *source, &ds.val)?
+        trainer::run_source_and_keep(backend, &cfg, &topts, &mut *source, &ds.val)?
     } else {
-        let ds = data::build_lm(&cfg, &bundle.manifest)?;
+        let ds = data::build_lm(&cfg, manifest)?;
         let mut source: Box<dyn BatchSource> = if depth > 0 {
             Box::new(Prefetcher::spawn(ds.train, depth))
         } else {
             Box::new(ds.train)
         };
-        trainer::run_source_and_keep(&bundle, &cfg, &topts, &mut *source, &ds.val)?
+        trainer::run_source_and_keep(backend, &cfg, &topts, &mut *source, &ds.val)?
     };
     let o = &trained.outcome;
     println!(
@@ -142,8 +155,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     );
     let tm = &o.timings;
     println!(
-        "runtime: compile {:.2}s | upload {:.1} MB in {:.3}s ({} copies, {} staged, {} ctrl skips) | exec {:.2}s | probe {:.2}s | eval {:.2}s",
-        bundle.compile_secs,
+        "runtime: backend {} | compile {:.2}s | upload {:.1} MB in {:.3}s ({} copies, {} staged, {} ctrl skips) | exec {:.2}s | probe {:.2}s | eval {:.2}s",
+        backend.name(),
+        backend.compile_secs(),
         tm.upload_bytes as f64 / 1e6,
         tm.upload_secs,
         tm.uploads,
@@ -175,12 +189,12 @@ fn cmd_train(args: &Args) -> Result<()> {
             e.step,
             if e.frozen { "froze " } else { "unfroze" },
             e.component,
-            bundle.manifest.components[e.component].name,
+            manifest.components[e.component].name,
             e.metric_value
         );
     }
     if args.get("bench").is_some() && !is_vlm {
-        let vocab = grades::data::vocab::Vocab::build(bundle.manifest.vocab_size)?;
+        let vocab = grades::data::vocab::Vocab::build(manifest.vocab_size)?;
         let suites = benchmarks::lm_suites(&vocab, 0xbe9c, 32);
         let accs = harness::score_suites(&trained.session, &suites)?;
         for (name, acc) in accs {
@@ -204,28 +218,29 @@ fn cmd_train(args: &Args) -> Result<()> {
 fn cmd_repro(args: &Args) -> Result<()> {
     let what = args.positional.get(1).map(String::as_str).unwrap_or("all");
     let opts = exp_options(args)?;
-    let client = Client::cpu()?;
+    // No client here: the runner's engine cache creates one lazily when a
+    // config resolves to the XLA backend (host-only runs never pay it).
     match what {
         "lm" | "table1" | "table4" | "fig3" => {
-            exp::lm_matrix::run(&client, &opts, &exp::lm_matrix::SCALES)?;
+            exp::lm_matrix::run(&opts, &exp::lm_matrix::SCALES)?;
         }
         "vlm" | "table2" | "table3" | "table5" | "fig4b" => {
-            exp::vlm::run(&client, &opts)?;
+            exp::vlm::run(&opts)?;
         }
         "ablation" | "table6" | "table7" => {
             let cfg = args.get("config").unwrap_or("lm-tiny-fp");
-            exp::ablation::run(&client, &opts, cfg)?;
+            exp::ablation::run(&opts, cfg)?;
         }
         "fig1" | "fig4a" => {
             let cfg = args.get("config").unwrap_or("lm-tiny-fp");
             let layer = args.usize_flag("layer")?.unwrap_or(1);
-            exp::fig1::run(&client, &opts, cfg, layer)?;
+            exp::fig1::run(&opts, cfg, layer)?;
         }
         "all" => {
-            exp::fig1::run(&client, &opts, "lm-tiny-fp", 1)?;
-            exp::lm_matrix::run(&client, &opts, &exp::lm_matrix::SCALES)?;
-            exp::vlm::run(&client, &opts)?;
-            exp::ablation::run(&client, &opts, "lm-tiny-fp")?;
+            exp::fig1::run(&opts, "lm-tiny-fp", 1)?;
+            exp::lm_matrix::run(&opts, &exp::lm_matrix::SCALES)?;
+            exp::vlm::run(&opts)?;
+            exp::ablation::run(&opts, "lm-tiny-fp")?;
         }
         other => bail!("unknown repro target {other:?} (lm|vlm|ablation|fig1|all)"),
     }
@@ -286,11 +301,13 @@ fn main() -> Result<()> {
                 "usage: grades <train|repro|info|list> [flags]\n\
                  \n\
                  grades train --config lm-tiny-fp --method grades [--steps N] [--bench] [--log-dir D] [--save ckpt] [--no-pipeline]\n\
-                 \x20            [--async-eval] [--eval-chunk B] [--staleness K]\n\
+                 \x20            [--backend auto|host|xla] [--async-eval] [--eval-chunk B] [--staleness K]\n\
+                 \x20   --backend B     execution engine: compiled XLA artifacts, the pure-Rust host\n\
+                 \x20                   transformer, or auto (host when artifacts are missing; default)\n\
                  \x20   --async-eval    chunk classic-ES validation between train steps instead of blocking\n\
                  \x20   --eval-chunk B  val batches evaluated per train step while a pass is in flight (default 1)\n\
                  \x20   --staleness K   apply a check's stop decision at most K steps late (0 = synchronous)\n\
-                 grades repro <lm|vlm|ablation|fig1|all> [--quick] [--steps N] [--questions Q] [--out D] [--jobs N] [--fresh]\n\
+                 grades repro <lm|vlm|ablation|fig1|all> [--quick] [--steps N] [--questions Q] [--out D] [--jobs N] [--fresh] [--backend B]\n\
                  \x20   --jobs N   run experiment jobs on N workers (or GRADES_JOBS=N); 1 = sequential\n\
                  \x20   --fresh    ignore the resumable run manifest under --out and re-run every job\n\
                  grades info --config lm-tiny-fp\n\

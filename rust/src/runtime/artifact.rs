@@ -17,9 +17,11 @@ use std::rc::Rc;
 use std::sync::Arc;
 
 use anyhow::{anyhow, Context, Result};
-use xla::{HloModuleProto, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+use xla::{HloModuleProto, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
+use super::backend::{Backend, BackendState, CtrlBuf, UploadedBatch};
 use super::manifest::Manifest;
+use super::session::Batch;
 use super::xerr;
 
 /// Shared PJRT CPU client. Creating a TfrtCpuClient is expensive; share one
@@ -166,8 +168,20 @@ impl Bundle {
     }
 
     /// Load by config name from the repo's `artifacts/` dir.
+    ///
+    /// A missing artifact dir used to surface as an opaque
+    /// "reading manifest … No such file" chain; it now names the two
+    /// ways out (the Python compile step, or the artifact-free host
+    /// backend) up front.
     pub fn by_name(client: &Client, name: &str) -> Result<Self> {
         let dir = crate::config::repo_root().join("artifacts").join(name);
+        if !dir.join("manifest.json").exists() {
+            return Err(anyhow!(
+                "no compiled artifacts for config {name:?} (expected {dir:?}/manifest.json). \
+                 Build them with the Python compile step (`make artifacts`), or run with \
+                 --backend host to use the artifact-free pure-Rust backend."
+            ));
+        }
         Self::load(client, &dir)
     }
 
@@ -227,6 +241,129 @@ impl BundleCache {
     /// The shared client the cache compiles on.
     pub fn client(&self) -> &Client {
         &self.client
+    }
+}
+
+/// The XLA execution backend: a compiled [`Bundle`] *is* a
+/// [`Backend`] — state handles wrap device-resident `PjRtBuffer`s,
+/// uploads copy host batches onto the client, and every program runs the
+/// matching AOT executable.
+impl Backend for Bundle {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn compile_secs(&self) -> f64 {
+        self.compile_secs
+    }
+
+    fn init_state(&self, seed: i32) -> Result<BackendState> {
+        let seed_buf = self
+            .client
+            .0
+            .buffer_from_host_buffer::<i32>(&[seed], &[1], None)
+            .map_err(xerr)?;
+        let mut out = self.init.execute_b(&[&seed_buf]).map_err(xerr)?;
+        Ok(BackendState::new(out.remove(0).remove(0)))
+    }
+
+    fn upload_batch(&self, batch: &Batch) -> Result<UploadedBatch> {
+        let m = &self.manifest;
+        let b = m.batch_size;
+        let t = m.seq_len;
+        let client = &self.client.0;
+        let mut bufs = vec![
+            client
+                .buffer_from_host_buffer::<i32>(&batch.tokens, &[b, t], None)
+                .map_err(xerr)?,
+            client
+                .buffer_from_host_buffer::<i32>(&batch.targets, &[b, t], None)
+                .map_err(xerr)?,
+        ];
+        if m.is_vlm() {
+            bufs.push(
+                client
+                    .buffer_from_host_buffer::<f32>(
+                        &batch.patches,
+                        &[b, m.n_patches, m.patch_dim],
+                        None,
+                    )
+                    .map_err(xerr)?,
+            );
+        }
+        Ok(UploadedBatch::new(bufs, batch.nbytes()))
+    }
+
+    fn upload_ctrl(&self, ctrl: &[f32]) -> Result<CtrlBuf> {
+        let buf = self
+            .client
+            .0
+            .buffer_from_host_buffer::<f32>(ctrl, &[ctrl.len()], None)
+            .map_err(xerr)?;
+        Ok(CtrlBuf::new(ctrl.to_vec(), buf))
+    }
+
+    fn train_step(
+        &self,
+        state: &BackendState,
+        io: &UploadedBatch,
+        ctrl: &CtrlBuf,
+        attn_frozen: bool,
+    ) -> Result<BackendState> {
+        let state = state.downcast::<PjRtBuffer>()?;
+        let bufs = io.downcast::<Vec<PjRtBuffer>>()?;
+        let ctrl_buf = ctrl.downcast::<PjRtBuffer>()?;
+        let exe = if attn_frozen { &self.train_step_attn_frozen } else { &self.train_step };
+        let mut args: Vec<&PjRtBuffer> = vec![state];
+        args.extend(bufs.iter());
+        args.push(ctrl_buf);
+        let mut out = exe.execute_b(&args).map_err(xerr)?;
+        Ok(BackendState::new(out.remove(0).remove(0)))
+    }
+
+    fn probe(&self, state: &BackendState) -> Result<Vec<f32>> {
+        let state = state.downcast::<PjRtBuffer>()?;
+        let out = self.probe.execute_b(&[state]).map_err(xerr)?;
+        out[0][0].to_literal_sync().map_err(xerr)?.to_vec::<f32>().map_err(xerr)
+    }
+
+    fn eval_step(&self, state: &BackendState, io: &UploadedBatch) -> Result<(f64, f64)> {
+        let state = state.downcast::<PjRtBuffer>()?;
+        let bufs = io.downcast::<Vec<PjRtBuffer>>()?;
+        let mut args: Vec<&PjRtBuffer> = vec![state];
+        args.extend(bufs.iter());
+        let out = self.eval_step.execute_b(&args).map_err(xerr)?;
+        let v = out[0][0].to_literal_sync().map_err(xerr)?.to_vec::<f32>().map_err(xerr)?;
+        Ok((v[0] as f64, v[1] as f64))
+    }
+
+    fn eval_rows(&self, state: &BackendState, io: &UploadedBatch) -> Result<Vec<(f64, f64)>> {
+        let state = state.downcast::<PjRtBuffer>()?;
+        let bufs = io.downcast::<Vec<PjRtBuffer>>()?;
+        let mut args: Vec<&PjRtBuffer> = vec![state];
+        args.extend(bufs.iter());
+        let out = self.eval_rows.execute_b(&args).map_err(xerr)?;
+        let v = out[0][0].to_literal_sync().map_err(xerr)?.to_vec::<f32>().map_err(xerr)?;
+        let b = v.len() / 2;
+        Ok((0..b).map(|i| (v[i] as f64, v[b + i] as f64)).collect())
+    }
+
+    fn state_to_host(&self, state: &BackendState) -> Result<Vec<f32>> {
+        let state = state.downcast::<PjRtBuffer>()?;
+        state.to_literal_sync().map_err(xerr)?.to_vec::<f32>().map_err(xerr)
+    }
+
+    fn state_from_host(&self, host: &[f32]) -> Result<BackendState> {
+        Ok(BackendState::new(
+            self.client
+                .0
+                .buffer_from_host_buffer::<f32>(host, &[host.len()], None)
+                .map_err(xerr)?,
+        ))
     }
 }
 

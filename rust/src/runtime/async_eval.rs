@@ -36,18 +36,15 @@
 //! thread-safety contract in [`crate::runtime::session`] and
 //! `docs/ARCHITECTURE.md`). Chunked interleaving is what an exclusive
 //! device gives us instead of true overlap; host-resident weight copies
-//! ([`EvalSnapshot::to_host`], the scheduler's `EvalPayload`) are how
+//! (`Session::snapshot_to_host`, the scheduler's `EvalPayload`) are how
 //! evaluation crosses threads when it must.
 //!
 //! [`DeviceBatchCache`]: crate::runtime::pipeline::DeviceBatchCache
 //! [`Session::eval_batch_snapshot`]: crate::runtime::session::Session::eval_batch_snapshot
 
-use std::rc::Rc;
-
 use anyhow::Result;
-use xla::PjRtBuffer;
 
-use super::xerr;
+use super::backend::BackendState;
 
 // ---------------------------------------------------------------------------
 // Policy types
@@ -142,31 +139,26 @@ impl Default for AsyncEvalOptions {
 
 /// Parameters pinned at a past step for asynchronous evaluation.
 ///
-/// Device-resident and zero-copy: train steps never mutate a state buffer
-/// in place (each step's executable returns a *new* buffer), so pinning
-/// the weights a check evaluates is just keeping the old buffer's `Rc`
-/// alive while `Session::state` moves on. For the cross-thread /
+/// Backend-resident and zero-copy: train steps never mutate a state
+/// handle in place (each step returns a *new* one, on every backend), so
+/// pinning the weights a check evaluates is just keeping the old handle's
+/// `Rc` alive while `Session::state` moves on. For the cross-thread /
 /// host-resident path — an eval job scoring a finished training job on
 /// another scheduler worker — downgrade to plain host data with
-/// [`EvalSnapshot::to_host`] and rehydrate with
+/// [`Session::snapshot_to_host`] and rehydrate with
 /// [`Session::upload_snapshot`].
 ///
+/// [`Session::snapshot_to_host`]: crate::runtime::session::Session::snapshot_to_host
 /// [`Session::upload_snapshot`]: crate::runtime::session::Session::upload_snapshot
 pub struct EvalSnapshot {
-    pub(crate) state: Rc<PjRtBuffer>,
+    pub(crate) state: BackendState,
     /// Optimizer step the snapshot pins (1-based, like `Session::step`).
     pub step: usize,
 }
 
 impl EvalSnapshot {
-    pub(crate) fn new(state: Rc<PjRtBuffer>, step: usize) -> Self {
+    pub(crate) fn new(state: BackendState, step: usize) -> Self {
         EvalSnapshot { state, step }
-    }
-
-    /// Download the pinned state to host (plain `Send` data — the only
-    /// form in which evaluation state may cross threads).
-    pub fn to_host(&self) -> Result<Vec<f32>> {
-        self.state.to_literal_sync().map_err(xerr)?.to_vec::<f32>().map_err(xerr)
     }
 }
 

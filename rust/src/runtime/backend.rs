@@ -1,0 +1,432 @@
+//! The execution-backend abstraction: one trait over the six programs
+//! every training run drives (`init`, `train_step`,
+//! `train_step_attn_frozen`, `eval_step`, `eval_rows`, `probe`).
+//!
+//! Two implementations exist:
+//!
+//! * **XLA** ([`crate::runtime::artifact::Bundle`]) — the production path:
+//!   AOT-compiled HLO artifacts executed through PJRT, state resident on
+//!   device between steps.
+//! * **Host** ([`crate::runtime::host_backend::HostBackend`]) — a pure-Rust
+//!   reference transformer mirroring `python/compile/model.py` for the
+//!   tiny LM configs. No Python toolchain, no artifacts, no PJRT: full
+//!   GradES trajectories (freeze decisions included) run in tier-1
+//!   `cargo test`, and the XLA path becomes something we differentially
+//!   verify (`rust/tests/differential.rs`) instead of trust.
+//!
+//! [`Session`](crate::runtime::session::Session) is written against
+//! `&dyn Backend`, so the trainer, the async-eval runtime, the experiment
+//! scheduler and the benchmark harness are all backend-generic. State and
+//! batch handles are type-erased ([`BackendState`], [`UploadedBatch`]):
+//! a handle produced by one backend must only be fed back to that backend
+//! (mixing backends is reported as an error, never UB).
+//!
+//! Selection: `grades … --backend host|xla|auto`. `auto` (the default)
+//! picks XLA when `artifacts/<config>/manifest.json` exists and falls
+//! back to the host backend otherwise — with a warn-once stderr note in
+//! the style of the `GRADES_JOBS` validation.
+
+use std::any::Any;
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::artifact::{Bundle, Client};
+use super::host_backend::HostBackend;
+use super::manifest::Manifest;
+use super::session::Batch;
+use crate::config::RepoConfig;
+
+// ---------------------------------------------------------------------------
+// Erased handles
+// ---------------------------------------------------------------------------
+
+/// A backend's opaque training-state handle.
+///
+/// `Rc` so an [`EvalSnapshot`](crate::runtime::async_eval::EvalSnapshot)
+/// can pin a past step's state at zero cost while training moves on —
+/// train steps return a *new* state, nothing mutates one in place, on
+/// either backend. The concrete payload is the backend's business
+/// (`PjRtBuffer` for XLA, a flat `Vec<f32>` for the host backend).
+#[derive(Clone)]
+pub struct BackendState(Rc<dyn Any>);
+
+impl BackendState {
+    /// Wrap a backend-specific state value.
+    pub fn new<T: 'static>(value: T) -> Self {
+        BackendState(Rc::new(value))
+    }
+
+    /// Borrow the concrete state this handle wraps. Errors (instead of
+    /// panicking) when a handle from another backend is passed in.
+    pub fn downcast<T: 'static>(&self) -> Result<&T> {
+        self.0
+            .downcast_ref::<T>()
+            .ok_or_else(|| anyhow!("backend state of the wrong type (handles from another backend?)"))
+    }
+}
+
+/// A batch in a backend's execution-ready form (device-resident buffers
+/// for XLA, a validated host copy for the host backend). Produced by
+/// [`Backend::upload_batch`], consumed by the step/eval programs.
+pub struct UploadedBatch {
+    pub(crate) data: Box<dyn Any>,
+    /// Host bytes the upload copied (what `StepTimings` accounts).
+    pub bytes: usize,
+}
+
+impl UploadedBatch {
+    /// Wrap a backend-specific batch payload.
+    pub fn new<T: 'static>(data: T, bytes: usize) -> Self {
+        UploadedBatch { data: Box::new(data), bytes }
+    }
+
+    /// Borrow the concrete payload (see [`BackendState::downcast`]).
+    pub fn downcast<T: 'static>(&self) -> Result<&T> {
+        self.data
+            .downcast_ref::<T>()
+            .ok_or_else(|| anyhow!("uploaded batch of the wrong type (handles from another backend?)"))
+    }
+}
+
+/// A ctrl vector in execution-ready form: the host copy (what the
+/// session's persistent-ctrl skip logic compares against) plus the
+/// backend's own copy (a device buffer for XLA; nothing extra for the
+/// host backend, which reads `host` directly).
+pub struct CtrlBuf {
+    /// The ctrl values this buffer holds.
+    pub host: Vec<f32>,
+    pub(crate) data: Box<dyn Any>,
+}
+
+impl CtrlBuf {
+    /// Wrap a backend-specific ctrl payload alongside its host copy.
+    pub fn new<T: 'static>(host: Vec<f32>, data: T) -> Self {
+        CtrlBuf { host, data: Box::new(data) }
+    }
+
+    /// Borrow the concrete payload (see [`BackendState::downcast`]).
+    pub fn downcast<T: 'static>(&self) -> Result<&T> {
+        self.data
+            .downcast_ref::<T>()
+            .ok_or_else(|| anyhow!("ctrl buffer of the wrong type (handles from another backend?)"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The trait
+// ---------------------------------------------------------------------------
+
+/// One execution engine for the six step programs of a config.
+///
+/// Implementations are *functional* over state: every mutating program
+/// consumes a state handle and returns a fresh one, which is what makes
+/// zero-copy eval snapshots work identically on both backends. All shape
+/// validation against the manifest happens in
+/// [`Session`](crate::runtime::session::Session) (backend-agnostic);
+/// implementations may assume shapes are consistent.
+pub trait Backend {
+    /// The manifest describing shapes, components, and state layout.
+    fn manifest(&self) -> &Manifest;
+
+    /// Short backend id, `"xla"` or `"host"` (logs, bench reports).
+    fn name(&self) -> &'static str;
+
+    /// Wall seconds spent compiling/preparing the programs (0 when the
+    /// backend has no compile phase).
+    fn compile_secs(&self) -> f64 {
+        0.0
+    }
+
+    /// The `init` program: fresh params + optimizer state from a seed.
+    fn init_state(&self, seed: i32) -> Result<BackendState>;
+
+    /// Stage one host batch into execution-ready form.
+    fn upload_batch(&self, batch: &Batch) -> Result<UploadedBatch>;
+
+    /// Stage one ctrl vector into execution-ready form.
+    fn upload_ctrl(&self, ctrl: &[f32]) -> Result<CtrlBuf>;
+
+    /// One optimizer step (`train_step` / `train_step_attn_frozen`).
+    fn train_step(
+        &self,
+        state: &BackendState,
+        io: &UploadedBatch,
+        ctrl: &CtrlBuf,
+        attn_frozen: bool,
+    ) -> Result<BackendState>;
+
+    /// The `probe` program: the metrics prefix the last step wrote.
+    fn probe(&self, state: &BackendState) -> Result<Vec<f32>>;
+
+    /// The `eval_step` program: forward-only (loss_sum, token_count).
+    fn eval_step(&self, state: &BackendState, io: &UploadedBatch) -> Result<(f64, f64)>;
+
+    /// The `eval_rows` program: per-row (loss_sum, count) pairs.
+    fn eval_rows(&self, state: &BackendState, io: &UploadedBatch) -> Result<Vec<(f64, f64)>>;
+
+    /// Download the full flat state (checkpointing / cross-thread eval).
+    fn state_to_host(&self, state: &BackendState) -> Result<Vec<f32>>;
+
+    /// Rehydrate a previously downloaded flat state.
+    fn state_from_host(&self, host: &[f32]) -> Result<BackendState>;
+}
+
+// ---------------------------------------------------------------------------
+// Selection
+// ---------------------------------------------------------------------------
+
+/// Which backend a run asks for (`--backend` / driver options).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BackendChoice {
+    /// XLA when the config's artifacts exist, host otherwise (default).
+    Auto,
+    /// The pure-Rust reference backend (no artifacts needed).
+    Host,
+    /// The compiled-artifact PJRT backend (requires `make artifacts`).
+    Xla,
+}
+
+impl BackendChoice {
+    /// Parse a `--backend` value. Accepted: `auto`, `host`, `xla`.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "auto" => Some(BackendChoice::Auto),
+            "host" => Some(BackendChoice::Host),
+            "xla" => Some(BackendChoice::Xla),
+            _ => None,
+        }
+    }
+
+    /// The short id recorded in fingerprints and bench reports.
+    pub fn label(&self) -> &'static str {
+        match self {
+            BackendChoice::Auto => "auto",
+            BackendChoice::Host => "host",
+            BackendChoice::Xla => "xla",
+        }
+    }
+
+    /// Resolve `Auto` against the filesystem: XLA iff the config's
+    /// artifact manifest exists. Deterministic, so every caller (engine
+    /// cache, host-phase manifest loads, drivers) agrees on the answer.
+    pub fn resolve(&self, config_name: &str) -> BackendChoice {
+        match self {
+            BackendChoice::Auto => {
+                let have = crate::config::repo_root()
+                    .join("artifacts")
+                    .join(config_name)
+                    .join("manifest.json")
+                    .exists();
+                if have {
+                    BackendChoice::Xla
+                } else {
+                    warn_auto_host(config_name);
+                    BackendChoice::Host
+                }
+            }
+            other => *other,
+        }
+    }
+}
+
+impl Default for BackendChoice {
+    fn default() -> Self {
+        BackendChoice::Auto
+    }
+}
+
+/// Warn once per process when `auto` falls back to the host backend —
+/// same style as the `GRADES_JOBS` / `GRADES_SERIAL_COMPILE` validation:
+/// never fail the run, never stay silent about a changed execution path.
+fn warn_auto_host(config_name: &str) {
+    static WARNED: std::sync::Once = std::sync::Once::new();
+    WARNED.call_once(|| {
+        eprintln!(
+            "[backend] artifacts/{config_name} missing; using the pure-Rust host \
+             backend. Build artifacts with the Python compile step (`make \
+             artifacts`) or pass --backend xla to require the compiled path."
+        );
+    });
+}
+
+/// The manifest a config resolves to without touching any client: loaded
+/// from the artifact dir on the XLA path, synthesized from the config on
+/// the host path. This is what the scheduler's *host phase* uses to build
+/// datasets while another job holds the device token.
+pub fn manifest_for(choice: BackendChoice, cfg: &RepoConfig) -> Result<Manifest> {
+    match choice.resolve(&cfg.name) {
+        BackendChoice::Xla => Manifest::load(&cfg.artifact_dir().join("manifest.json")),
+        _ => Ok(HostBackend::for_config(cfg)?.into_manifest()),
+    }
+}
+
+thread_local! {
+    /// Per-thread PJRT client singleton. `TfrtCpuClient` construction is
+    /// expensive, and one `grades repro all` runs four drivers with four
+    /// engine caches in sequence — before the backend trait they shared
+    /// the single client `main` created. Thread-local (not process-global)
+    /// because client handles carry non-atomic refcounts: a client may
+    /// only be *used* by one thread at a time (the device-token
+    /// contract), and caching per thread never hands the same fresh
+    /// client to two threads racing to create one.
+    static SHARED_CLIENT: RefCell<Option<Client>> = const { RefCell::new(None) };
+}
+
+/// This thread's shared PJRT client, created on first use.
+fn shared_client() -> Result<Client> {
+    SHARED_CLIENT.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        if slot.is_none() {
+            *slot = Some(Client::cpu()?);
+        }
+        Ok(slot.as_ref().expect("client created above").clone())
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Engine cache
+// ---------------------------------------------------------------------------
+
+/// Per-config backend cache over one (lazily created) shared client:
+/// each config builds its engine at most once per process and shares it
+/// (`Rc`) across every job that trains or evaluates it — the
+/// backend-generic successor of the scheduler's `BundleCache`.
+///
+/// Not thread-safe by itself (XLA engines hold handles with non-atomic
+/// refcounts; the host backend is plain data but shares the cache). The
+/// experiment scheduler wraps the cache in its exclusive device-token
+/// mutex, which doubles as the compile lock — exactly as before.
+pub struct EngineCache {
+    choice: BackendChoice,
+    /// Created on first XLA load; host-only runs never pay for a client.
+    client: RefCell<Option<Client>>,
+    map: RefCell<HashMap<String, Rc<dyn Backend>>>,
+}
+
+impl EngineCache {
+    /// Empty cache resolving configs under `choice`.
+    pub fn new(choice: BackendChoice) -> Self {
+        EngineCache { choice, client: RefCell::new(None), map: RefCell::new(HashMap::new()) }
+    }
+
+    /// Cache that reuses an existing client for XLA loads (benches and
+    /// tests that already own one).
+    pub fn with_client(choice: BackendChoice, client: Client) -> Self {
+        EngineCache {
+            choice,
+            client: RefCell::new(Some(client)),
+            map: RefCell::new(HashMap::new()),
+        }
+    }
+
+    /// The requested selection policy.
+    pub fn choice(&self) -> BackendChoice {
+        self.choice
+    }
+
+    /// The engine for `name`, building (and for XLA, compiling) on first
+    /// use.
+    pub fn get(&self, name: &str) -> Result<Rc<dyn Backend>> {
+        if let Some(b) = self.map.borrow().get(name) {
+            return Ok(b.clone());
+        }
+        let engine: Rc<dyn Backend> = match self.choice.resolve(name) {
+            BackendChoice::Xla => {
+                let mut slot = self.client.borrow_mut();
+                if slot.is_none() {
+                    *slot = Some(shared_client()?);
+                }
+                let client = slot.as_ref().expect("client created above");
+                Rc::new(Bundle::by_name(client, name)?)
+            }
+            _ => Rc::new(HostBackend::for_config(&RepoConfig::by_name(name)?)?),
+        };
+        self.map.borrow_mut().insert(name.to_string(), engine.clone());
+        Ok(engine)
+    }
+
+    /// Number of configs with a built engine.
+    pub fn len(&self) -> usize {
+        self.map.borrow().len()
+    }
+
+    /// True before the first build.
+    pub fn is_empty(&self) -> bool {
+        self.map.borrow().is_empty()
+    }
+}
+
+/// Build one engine outside any cache (CLI one-shots, tests). XLA loads
+/// reuse this thread's shared client.
+pub fn load_backend(choice: BackendChoice, name: &str) -> Result<Rc<dyn Backend>> {
+    match choice.resolve(name) {
+        BackendChoice::Xla => {
+            let client = shared_client()?;
+            Ok(Rc::new(Bundle::by_name(&client, name)?))
+        }
+        BackendChoice::Host => {
+            Ok(Rc::new(HostBackend::for_config(&RepoConfig::by_name(name)?)?))
+        }
+        BackendChoice::Auto => bail!("resolve() never returns Auto"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn choice_parse_and_label_round_trip() {
+        for (s, c) in [
+            ("auto", BackendChoice::Auto),
+            ("host", BackendChoice::Host),
+            ("xla", BackendChoice::Xla),
+        ] {
+            assert_eq!(BackendChoice::parse(s), Some(c));
+            assert_eq!(c.label(), s);
+        }
+        assert_eq!(BackendChoice::parse("tpu"), None);
+        assert_eq!(BackendChoice::default(), BackendChoice::Auto);
+    }
+
+    #[test]
+    fn explicit_choices_resolve_to_themselves() {
+        assert_eq!(BackendChoice::Host.resolve("lm-tiny-fp"), BackendChoice::Host);
+        assert_eq!(BackendChoice::Xla.resolve("no-such-config"), BackendChoice::Xla);
+    }
+
+    #[test]
+    fn auto_resolves_host_for_missing_artifacts() {
+        assert_eq!(
+            BackendChoice::Auto.resolve("definitely-no-such-config"),
+            BackendChoice::Host
+        );
+    }
+
+    #[test]
+    fn erased_handles_downcast_or_error() {
+        let s = BackendState::new(vec![1f32, 2.0]);
+        assert_eq!(s.downcast::<Vec<f32>>().unwrap(), &vec![1f32, 2.0]);
+        assert!(s.downcast::<String>().is_err());
+        let b = UploadedBatch::new(7usize, 4);
+        assert_eq!(*b.downcast::<usize>().unwrap(), 7);
+        assert_eq!(b.bytes, 4);
+        assert!(b.downcast::<Vec<f32>>().is_err());
+        let c = CtrlBuf::new(vec![1.0], ());
+        assert!(c.downcast::<()>().is_ok());
+        assert!(c.downcast::<usize>().is_err());
+    }
+
+    #[test]
+    fn state_handles_share_via_rc() {
+        let s = BackendState::new(vec![3f32]);
+        let s2 = s.clone();
+        assert_eq!(
+            s.downcast::<Vec<f32>>().unwrap().as_ptr(),
+            s2.downcast::<Vec<f32>>().unwrap().as_ptr()
+        );
+    }
+}

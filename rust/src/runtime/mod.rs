@@ -1,8 +1,13 @@
-//! PJRT runtime: load AOT HLO-text artifacts and run them from the rust
-//! hot path (adapted from /opt/xla-example/load_hlo/).
+//! Execution runtime: the [`backend::Backend`] abstraction over the six
+//! step programs, with two engines — AOT HLO artifacts through PJRT
+//! (`artifact`, adapted from /opt/xla-example/load_hlo/) and the pure-Rust
+//! reference transformer (`host_backend`) that runs full GradES
+//! trajectories with no artifacts at all.
 
 pub mod artifact;
 pub mod async_eval;
+pub mod backend;
+pub mod host_backend;
 pub mod manifest;
 pub mod pipeline;
 pub mod session;

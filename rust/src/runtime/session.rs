@@ -1,6 +1,8 @@
-//! Training session: owns the on-device flat state buffer and drives the
-//! step/probe/eval executables. The state never round-trips to host between
-//! steps (the probe output is `metrics_len` floats).
+//! Training session: owns the backend-resident flat state handle and
+//! drives the step/probe/eval programs of any [`Backend`] — the compiled
+//! XLA artifacts or the pure-Rust host engine. The state never
+//! round-trips to host between steps (the probe output is `metrics_len`
+//! floats).
 //!
 //! Uploads are split from execution (`upload_batch` → `train_step_uploaded`
 //! / `eval_batch_uploaded`) so the pipelined trainer can stage the next
@@ -8,63 +10,60 @@
 //! set can live on device (`runtime::pipeline::DeviceBatchCache`). Every
 //! host↔device interaction is accounted in [`StepTimings`].
 //!
-//! The ctrl vector is also device-resident: the last uploaded ctrl buffer
+//! The ctrl vector is also backend-resident: the last uploaded ctrl buffer
 //! is cached and reused when a step's ctrl is equivalent to it (see
 //! [`ctrl_upload_skippable`]), skipping the per-step 4·`ctrl_len` copy.
 //! Skips are counted in `StepTimings::ctrl_skips`.
 //!
+//! All manifest shape validation happens here, once, for every backend —
+//! the backends themselves assume validated inputs.
+//!
 //! # Thread-safety contract (Send audit for the experiment scheduler)
 //!
-//! `Session` is `!Send` and must stay that way: every PJRT object it owns
-//! (`PjRtBuffer` state, the cached ctrl buffer) holds a handle whose
-//! refcount in the `xla` binding is **non-atomic** and is cloned/dropped
-//! by uploads, executions and buffer drops. Two threads touching objects
-//! of the same client concurrently — even *different* sessions — race
-//! those refcounts. The experiment scheduler (`exp::scheduler`) therefore
-//! never runs two sessions of one client at the same time: all device
-//! work is serialized behind a single exclusive "device token" mutex, and
-//! sessions cross threads only while that token is held (jobs overlap in
-//! their host-side stages — data generation, packing, rendering — which
-//! touch no PJRT state). Code outside the scheduler keeps the simpler
-//! rule: a client and everything created from it live and die on one
-//! thread.
+//! `Session` is `!Send` and must stay that way: on the XLA backend every
+//! PJRT object reachable from it (the state handle, the cached ctrl
+//! buffer) holds a handle whose refcount in the `xla` binding is
+//! **non-atomic** and is cloned/dropped by uploads, executions and buffer
+//! drops. Two threads touching objects of the same client concurrently —
+//! even *different* sessions — race those refcounts. The experiment
+//! scheduler (`exp::scheduler`) therefore never runs two sessions of one
+//! client at the same time: all device work is serialized behind a single
+//! exclusive "device token" mutex, and sessions cross threads only while
+//! that token is held (jobs overlap in their host-side stages — data
+//! generation, packing, rendering — which touch no PJRT state). Code
+//! outside the scheduler keeps the simpler rule: a client and everything
+//! created from it live and die on one thread. The host backend has no
+//! such constraint of its own but flows through the same discipline.
 
 use std::cell::RefCell;
 use std::io::Write as _;
-use std::rc::Rc;
 
 use anyhow::{ensure, Context, Result};
-use xla::PjRtBuffer;
 
-use super::artifact::Bundle;
+use super::backend::{Backend, BackendState, CtrlBuf};
 use super::async_eval::EvalSnapshot;
 use super::pipeline::{DeviceBatchCache, StepTimings};
-use super::xerr;
 use crate::util::timer::Timer;
 
-/// One training run's device-side state: the flat parameter/optimizer
-/// buffer plus the compiled executables that read and write it.
+pub use super::backend::UploadedBatch;
+
+/// One training run's backend-side state: the flat parameter/optimizer
+/// state handle plus the programs that read and write it.
 pub struct Session<'b> {
-    /// The compiled executables + manifest this session runs.
-    pub bundle: &'b Bundle,
-    /// The current state buffer. `Rc` so an [`EvalSnapshot`] can pin a
-    /// past step's buffer at zero cost while training moves on (train
-    /// steps return a *new* buffer; nothing mutates one in place).
-    state: Option<Rc<PjRtBuffer>>,
+    /// The execution backend this session runs on.
+    pub backend: &'b dyn Backend,
+    /// The current state handle. Handles are `Rc`-shared so an
+    /// [`EvalSnapshot`] can pin a past step's state at zero cost while
+    /// training moves on (train steps return a *new* handle; nothing
+    /// mutates one in place, on either backend).
+    state: Option<BackendState>,
     /// 1-based optimizer step (AdamW bias correction).
     pub step: usize,
     /// Cumulative runtime instrumentation (RefCell: eval/probe take &self).
     timings: RefCell<StepTimings>,
-    /// Device-resident ctrl vector from the last train step, reused when
+    /// Backend-resident ctrl vector from the last train step, reused when
     /// the next step's ctrl is equivalent (see [`ctrl_upload_skippable`]).
-    ctrl_cache: RefCell<Option<CtrlCache>>,
-}
-
-/// The last uploaded ctrl vector: host copy for the equivalence check,
-/// device buffer for reuse.
-struct CtrlCache {
-    host: Vec<f32>,
-    buf: PjRtBuffer,
+    ctrl_cache: RefCell<Option<CtrlBuf>>,
 }
 
 /// Can a cached device ctrl buffer stand in for `next` without changing
@@ -107,18 +106,11 @@ impl Batch {
     }
 }
 
-/// A batch already resident on device, ready to feed an executable.
-pub struct UploadedBatch {
-    pub(crate) bufs: Vec<PjRtBuffer>,
-    /// Host bytes the upload copied.
-    pub bytes: usize,
-}
-
 impl<'b> Session<'b> {
-    /// Uninitialized session over a bundle (call [`Session::init`]).
-    pub fn new(bundle: &'b Bundle) -> Self {
+    /// Uninitialized session over a backend (call [`Session::init`]).
+    pub fn new(backend: &'b dyn Backend) -> Self {
         Session {
-            bundle,
+            backend,
             state: None,
             step: 0,
             timings: RefCell::new(StepTimings::default()),
@@ -126,8 +118,11 @@ impl<'b> Session<'b> {
         }
     }
 
-    fn client(&self) -> &xla::PjRtClient {
-        &self.bundle.client.0
+    /// The backend's manifest (shapes, components, state layout). Tied to
+    /// the backend's lifetime, not the session borrow, so callers can
+    /// keep it across mutating session calls.
+    pub fn manifest(&self) -> &'b crate::runtime::manifest::Manifest {
+        self.backend.manifest()
     }
 
     /// Snapshot of the cumulative upload/exec/probe/eval instrumentation.
@@ -141,56 +136,34 @@ impl<'b> Session<'b> {
         self.timings.borrow_mut().staged_uploads += 1;
     }
 
-    /// Run the init executable, placing fresh params/opt state on device.
+    /// Run the init program, placing fresh params/opt state on the backend.
     pub fn init(&mut self, seed: i32) -> Result<()> {
-        let seed_buf = self
-            .client()
-            .buffer_from_host_buffer::<i32>(&[seed], &[1], None)
-            .map_err(xerr)?;
-        let mut out = self.bundle.init.execute_b(&[&seed_buf]).map_err(xerr)?;
-        self.state = Some(Rc::new(out.remove(0).remove(0)));
+        self.state = Some(self.backend.init_state(seed)?);
         self.step = 0;
         *self.ctrl_cache.borrow_mut() = None;
         Ok(())
     }
 
-    /// Copy one host batch to device (shape-checked against the manifest).
-    /// Separated from execution so uploads can be staged ahead of their
-    /// step and so fixed eval sets can be uploaded once.
+    /// Stage one host batch into execution-ready form (shape-checked
+    /// against the manifest). Separated from execution so uploads can be
+    /// staged ahead of their step and so fixed eval sets upload once.
     pub fn upload_batch(&self, batch: &Batch) -> Result<UploadedBatch> {
-        let m = &self.bundle.manifest;
+        let m = self.backend.manifest();
         let b = m.batch_size;
         let t = m.seq_len;
         ensure!(batch.tokens.len() == b * t, "tokens len {} != {}", batch.tokens.len(), b * t);
         ensure!(batch.targets.len() == b * t, "targets len mismatch");
-        let timer = Timer::new();
-        let mut bufs = vec![
-            self.client()
-                .buffer_from_host_buffer::<i32>(&batch.tokens, &[b, t], None)
-                .map_err(xerr)?,
-            self.client()
-                .buffer_from_host_buffer::<i32>(&batch.targets, &[b, t], None)
-                .map_err(xerr)?,
-        ];
         if m.is_vlm() {
             let want = b * m.n_patches * m.patch_dim;
             ensure!(batch.patches.len() == want, "patches len {} != {want}", batch.patches.len());
-            bufs.push(
-                self.client()
-                    .buffer_from_host_buffer::<f32>(
-                        &batch.patches,
-                        &[b, m.n_patches, m.patch_dim],
-                        None,
-                    )
-                    .map_err(xerr)?,
-            );
         }
-        let bytes = batch.nbytes();
+        let timer = Timer::new();
+        let io = self.backend.upload_batch(batch)?;
         let mut tm = self.timings.borrow_mut();
         tm.upload_secs += timer.secs();
-        tm.upload_bytes += bytes as u64;
+        tm.upload_bytes += io.bytes as u64;
         tm.uploads += 1;
-        Ok(UploadedBatch { bufs, bytes })
+        Ok(io)
     }
 
     /// One optimizer step. `ctrl` is the full control vector (step, lr,
@@ -200,7 +173,7 @@ impl<'b> Session<'b> {
         self.train_step_uploaded(io, ctrl, attn_frozen)
     }
 
-    /// One optimizer step over buffers already on device (the pipelined
+    /// One optimizer step over already-staged buffers (the pipelined
     /// path: the upload happened while the previous step executed).
     pub fn train_step_uploaded(
         &mut self,
@@ -208,10 +181,10 @@ impl<'b> Session<'b> {
         ctrl: &[f32],
         attn_frozen: bool,
     ) -> Result<()> {
-        let m = &self.bundle.manifest;
+        let m = self.backend.manifest();
         ensure!(ctrl.len() == m.ctrl_len, "ctrl len {} != {}", ctrl.len(), m.ctrl_len);
         let state = self.state.as_ref().context("session not initialized")?;
-        // Persistent ctrl buffer: reuse the device copy when this step's
+        // Persistent ctrl buffer: reuse the backend copy when this step's
         // ctrl is equivalent to it. AdamW graphs read ctrl[0] for bias
         // correction, so only an exact repeat may skip there; SGD graphs
         // never read the step and may skip whenever lr+mask repeat.
@@ -224,34 +197,24 @@ impl<'b> Session<'b> {
             self.timings.borrow_mut().ctrl_skips += 1;
         } else {
             let ct = Timer::new();
-            let buf = self
-                .client()
-                .buffer_from_host_buffer::<f32>(ctrl, &[ctrl.len()], None)
-                .map_err(xerr)?;
+            let buf = self.backend.upload_ctrl(ctrl)?;
             {
                 let mut tm = self.timings.borrow_mut();
                 tm.upload_secs += ct.secs();
                 tm.upload_bytes += 4 * ctrl.len() as u64;
             }
-            *cache = Some(CtrlCache { host: ctrl.to_vec(), buf });
+            *cache = Some(buf);
         }
-        let ctrl_buf = &cache.as_ref().expect("ctrl cache populated above").buf;
-        let exe = if attn_frozen {
-            &self.bundle.train_step_attn_frozen
-        } else {
-            &self.bundle.train_step
-        };
-        let mut args: Vec<&PjRtBuffer> = vec![&**state];
-        args.extend(io.bufs.iter());
-        args.push(ctrl_buf);
+        let ctrl_buf = cache.as_ref().expect("ctrl cache populated above");
         let et = Timer::new();
-        let mut out = exe.execute_b(&args).map_err(xerr)?;
+        let next = self.backend.train_step(state, &io, ctrl_buf, attn_frozen)?;
         {
             let mut tm = self.timings.borrow_mut();
             tm.exec_secs += et.secs();
             tm.execs += 1;
         }
-        self.state = Some(Rc::new(out.remove(0).remove(0)));
+        drop(cache);
+        self.state = Some(next);
         self.step += 1;
         Ok(())
     }
@@ -260,12 +223,7 @@ impl<'b> Session<'b> {
     pub fn probe(&self) -> Result<Vec<f32>> {
         let state = self.state.as_ref().context("session not initialized")?;
         let t = Timer::new();
-        let out = self.bundle.probe.execute_b(&[&**state]).map_err(xerr)?;
-        let v = out[0][0]
-            .to_literal_sync()
-            .map_err(xerr)?
-            .to_vec::<f32>()
-            .map_err(xerr);
+        let v = self.backend.probe(state);
         let mut tm = self.timings.borrow_mut();
         tm.probe_secs += t.secs();
         tm.probes += 1;
@@ -278,30 +236,23 @@ impl<'b> Session<'b> {
         self.eval_batch_uploaded(&io)
     }
 
-    /// Forward-only loss over device-resident buffers (the cached path —
-    /// numerically identical to `eval_batch`, same executable + data).
+    /// Forward-only loss over staged buffers (the cached path —
+    /// numerically identical to `eval_batch`, same program + data).
     pub fn eval_batch_uploaded(&self, io: &UploadedBatch) -> Result<(f64, f64)> {
         let state = self.state.as_ref().context("session not initialized")?;
-        self.eval_uploaded_with(&**state, io)
+        self.eval_uploaded_with(state, io)
     }
 
-    /// Forward-only loss of an explicit state buffer over device-resident
+    /// Forward-only loss of an explicit state handle over staged
     /// buffers — the shared core of the current-state and snapshot paths
-    /// (same executable, same data ⇒ same value for the same state).
-    fn eval_uploaded_with(&self, state: &PjRtBuffer, io: &UploadedBatch) -> Result<(f64, f64)> {
+    /// (same program, same data ⇒ same value for the same state).
+    fn eval_uploaded_with(&self, state: &BackendState, io: &UploadedBatch) -> Result<(f64, f64)> {
         let t = Timer::new();
-        let mut args: Vec<&PjRtBuffer> = vec![state];
-        args.extend(io.bufs.iter());
-        let out = self.bundle.eval_step.execute_b(&args).map_err(xerr)?;
-        let v = out[0][0]
-            .to_literal_sync()
-            .map_err(xerr)?
-            .to_vec::<f32>()
-            .map_err(xerr)?;
+        let v = self.backend.eval_step(state, io);
         let mut tm = self.timings.borrow_mut();
         tm.eval_secs += t.secs();
         tm.evals += 1;
-        Ok((v[0] as f64, v[1] as f64))
+        v
     }
 
     /// Pin the current parameters for asynchronous evaluation: a
@@ -310,20 +261,23 @@ impl<'b> Session<'b> {
     pub fn snapshot(&self) -> Result<EvalSnapshot> {
         let state = self.state.as_ref().context("session not initialized")?;
         self.timings.borrow_mut().snapshots += 1;
-        Ok(EvalSnapshot::new(Rc::clone(state), self.step))
+        Ok(EvalSnapshot::new(state.clone(), self.step))
     }
 
-    /// Rehydrate a host-resident weight copy into a device snapshot (the
+    /// Download a snapshot's pinned state (plain `Send` data — the only
+    /// form in which evaluation state may cross threads).
+    pub fn snapshot_to_host(&self, snap: &EvalSnapshot) -> Result<Vec<f32>> {
+        self.backend.state_to_host(&snap.state)
+    }
+
+    /// Rehydrate a host-resident weight copy into a pinned snapshot (the
     /// cross-thread path: an eval job scoring another job's final
     /// weights — host vectors are the only `Send` form of a snapshot).
     pub fn upload_snapshot(&self, host: &[f32], step: usize) -> Result<EvalSnapshot> {
-        let m = &self.bundle.manifest;
+        let m = self.backend.manifest();
         ensure!(host.len() == m.state_len, "state len {} != {}", host.len(), m.state_len);
         let timer = Timer::new();
-        let buf = self
-            .client()
-            .buffer_from_host_buffer::<f32>(host, &[host.len()], None)
-            .map_err(xerr)?;
+        let state = self.backend.state_from_host(host)?;
         {
             let mut tm = self.timings.borrow_mut();
             tm.upload_secs += timer.secs();
@@ -331,11 +285,11 @@ impl<'b> Session<'b> {
             tm.uploads += 1;
             tm.snapshots += 1;
         }
-        Ok(EvalSnapshot::new(Rc::new(buf), step))
+        Ok(EvalSnapshot::new(state, step))
     }
 
-    /// Forward-only loss of a pinned snapshot on one device-resident
-    /// batch — what the async validator's chunks execute. Identical to
+    /// Forward-only loss of a pinned snapshot on one staged batch — what
+    /// the async validator's chunks execute. Identical to
     /// [`Session::eval_batch_uploaded`] when the snapshot pins the
     /// current step.
     pub fn eval_batch_snapshot(
@@ -343,7 +297,7 @@ impl<'b> Session<'b> {
         snap: &EvalSnapshot,
         io: &UploadedBatch,
     ) -> Result<(f64, f64)> {
-        self.eval_uploaded_with(&*snap.state, io)
+        self.eval_uploaded_with(&snap.state, io)
     }
 
     /// Per-row (loss_sum, count) pairs — multiple-choice scoring.
@@ -352,23 +306,15 @@ impl<'b> Session<'b> {
         self.eval_rows_uploaded(&io)
     }
 
-    /// Per-row scoring over device-resident buffers (cached MC harness).
+    /// Per-row scoring over staged buffers (cached MC harness).
     pub fn eval_rows_uploaded(&self, io: &UploadedBatch) -> Result<Vec<(f64, f64)>> {
         let state = self.state.as_ref().context("session not initialized")?;
         let t = Timer::new();
-        let mut args: Vec<&PjRtBuffer> = vec![&**state];
-        args.extend(io.bufs.iter());
-        let out = self.bundle.eval_rows.execute_b(&args).map_err(xerr)?;
-        let v = out[0][0]
-            .to_literal_sync()
-            .map_err(xerr)?
-            .to_vec::<f32>()
-            .map_err(xerr)?;
+        let v = self.backend.eval_rows(state, io);
         let mut tm = self.timings.borrow_mut();
         tm.eval_secs += t.secs();
         tm.evals += 1;
-        let b = v.len() / 2;
-        Ok((0..b).map(|i| (v[i] as f64, v[b + i] as f64)).collect())
+        v
     }
 
     /// Mean validation loss over many host batches, uploading each call
@@ -384,9 +330,9 @@ impl<'b> Session<'b> {
         Ok(if count > 0.0 { loss / count } else { f64::NAN })
     }
 
-    /// Mean validation loss over a device-resident cache: pure execution,
-    /// zero upload. Returns the same value as `eval_mean_loss` on the
-    /// batches the cache was built from.
+    /// Mean validation loss over a staged cache: pure execution, zero
+    /// upload. Returns the same value as `eval_mean_loss` on the batches
+    /// the cache was built from.
     pub fn eval_mean_loss_cached(&self, cache: &DeviceBatchCache) -> Result<f64> {
         let mut loss = 0.0;
         let mut count = 0.0;
@@ -401,18 +347,14 @@ impl<'b> Session<'b> {
     /// Download the full state (checkpointing / inspection).
     pub fn state_to_host(&self) -> Result<Vec<f32>> {
         let state = self.state.as_ref().context("session not initialized")?;
-        state.to_literal_sync().map_err(xerr)?.to_vec::<f32>().map_err(xerr)
+        self.backend.state_to_host(state)
     }
 
     /// Restore a previously downloaded state.
     pub fn state_from_host(&mut self, host: &[f32]) -> Result<()> {
-        let m = &self.bundle.manifest;
+        let m = self.backend.manifest();
         ensure!(host.len() == m.state_len, "state len {} != {}", host.len(), m.state_len);
-        self.state = Some(Rc::new(
-            self.client()
-                .buffer_from_host_buffer::<f32>(host, &[host.len()], None)
-                .map_err(xerr)?,
-        ));
+        self.state = Some(self.backend.state_from_host(host)?);
         Ok(())
     }
 

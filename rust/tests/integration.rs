@@ -429,7 +429,8 @@ fn snapshot_eval_matches_current_state_eval() {
     assert_eq!(l_snap.to_bits(), l_snap2.to_bits(), "snapshot eval is stable");
     assert_ne!(l_snap.to_bits(), l_live.to_bits(), "training moved the live state");
     // host round trip: rehydrated snapshots score identically
-    let rehydrated = s.upload_snapshot(&snap.to_host().unwrap(), snap.step).unwrap();
+    let rehydrated =
+        s.upload_snapshot(&s.snapshot_to_host(&snap).unwrap(), snap.step).unwrap();
     let (l_re, _) = s.eval_batch_snapshot(&rehydrated, &io).unwrap();
     assert_eq!(l_snap.to_bits(), l_re.to_bits());
 }

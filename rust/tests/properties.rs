@@ -141,6 +141,168 @@ fn prop_frozen_set_is_monotone_without_unfreeze() {
 }
 
 #[test]
+fn prop_tau_zero_never_freezes_anything() {
+    // The metric is an L1 norm (≥ 0) and the test is a strict `< τ`, so
+    // τ = 0 can never fire — before the grace period or after it.
+    let mut rng = Rng::new(21);
+    for _ in 0..30 {
+        let m = manifest(1 + rng.below(3));
+        let alpha = rng.f64() * 0.5;
+        let mut mon = GradesMonitor::new(&grades_cfg(0.0, alpha, rng.below(3)), &m, 80);
+        let mut fs = FreezeState::new(m.n_components);
+        for t in 1..=80 {
+            let mut metrics = vec![0f32; m.metrics_len];
+            for c in 0..m.n_components {
+                // include exact zeros: 0 < 0 is still false
+                metrics[m.gdiff_offset + c] =
+                    if rng.chance(0.3) { 0.0 } else { (rng.f64() * 4.0) as f32 };
+            }
+            assert_eq!(mon.observe(t, &m, &metrics, 1.0, &mut fs), 0);
+        }
+        assert_eq!(fs.n_frozen(), 0, "tau=0 froze a component");
+        assert!(fs.events.is_empty());
+    }
+}
+
+#[test]
+fn prop_tau_infinite_freezes_everything_at_first_eligible_step() {
+    let mut rng = Rng::new(22);
+    for _ in 0..30 {
+        let m = manifest(1 + rng.below(3));
+        let total = 20 + rng.below(60);
+        let alpha = rng.f64() * 0.8;
+        let mut mon = GradesMonitor::new(&grades_cfg(f64::INFINITY, alpha, 0), &m, total);
+        let mut fs = FreezeState::new(m.n_components);
+        let first_eligible = mon.grace_steps() + 1;
+        for t in 1..=first_eligible {
+            let mut metrics = vec![0f32; m.metrics_len];
+            for c in 0..m.n_components {
+                metrics[m.gdiff_offset + c] = (rng.f64() * 1e6) as f32;
+            }
+            let newly = mon.observe(t, &m, &metrics, 1.0, &mut fs);
+            if t <= mon.grace_steps() {
+                assert_eq!(newly, 0, "froze before the grace period ended");
+            } else {
+                assert_eq!(newly, m.n_components, "τ=∞ must freeze everything at once");
+            }
+        }
+        assert!(fs.all_frozen());
+        assert!(fs.events.iter().all(|e| e.step == first_eligible));
+        assert!(mon.should_terminate(&fs));
+    }
+}
+
+/// Reference reimplementation of the freeze rule: recompute the
+/// candidate set from scratch every step (the O(n²)-ish rescan the
+/// monitor's reused bitmap replaced in PR 1). Mirrors Alg. 1 lines 8–11
+/// plus the optional patience and layer-granularity extensions.
+struct NaiveMonitor {
+    grace: usize,
+    tau: f64,
+    patience: usize,
+    layer_mode: bool,
+    below: Vec<usize>,
+    frozen: Vec<bool>,
+    events: Vec<(usize, usize)>,
+}
+
+impl NaiveMonitor {
+    fn observe(&mut self, t: usize, values: &[f64], layers: &[Vec<usize>]) {
+        if t <= self.grace {
+            return;
+        }
+        // fresh candidate scan, no carried bitmap
+        let mut candidate = vec![false; values.len()];
+        for c in 0..values.len() {
+            if self.frozen[c] {
+                continue;
+            }
+            if values[c] < self.tau {
+                self.below[c] += 1;
+                if self.below[c] > self.patience {
+                    candidate[c] = true;
+                }
+            } else {
+                self.below[c] = 0;
+            }
+        }
+        if self.layer_mode {
+            for group in layers {
+                if group.iter().all(|&c| self.frozen[c] || candidate[c]) {
+                    for &c in group {
+                        if !self.frozen[c] {
+                            self.frozen[c] = true;
+                            self.events.push((t, c));
+                        }
+                    }
+                }
+            }
+        } else {
+            for (c, &ready) in candidate.iter().enumerate() {
+                if ready {
+                    self.frozen[c] = true;
+                    self.events.push((t, c));
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_candidate_bitmap_matches_naive_rescan() {
+    // The monitor's O(n) reused candidate bitmap must produce exactly
+    // the freeze schedule of a from-scratch rescan, on random gradient
+    // streams, in both matrix and layer granularity.
+    let mut rng = Rng::new(23);
+    for trial in 0..40 {
+        let n_layers = 1 + rng.below(3);
+        let m = manifest(n_layers);
+        let tau = rng.f64() * 2.0;
+        let patience = rng.below(4);
+        let layer_mode = rng.chance(0.5);
+        let mut cfg = grades_cfg(tau, 0.1, patience);
+        if layer_mode {
+            cfg.granularity = "layer".into();
+        }
+        let total = 60;
+        let mut mon = GradesMonitor::new(&cfg, &m, total);
+        let mut fs = FreezeState::new(m.n_components);
+        let layers: Vec<Vec<usize>> = (0..n_layers)
+            .map(|l| m.components_where(|c| c.layer == l))
+            .collect();
+        let mut naive = NaiveMonitor {
+            grace: mon.grace_steps(),
+            tau,
+            patience,
+            layer_mode,
+            below: vec![0; m.n_components],
+            frozen: vec![false; m.n_components],
+            events: Vec::new(),
+        };
+        for t in 1..=total {
+            let mut metrics = vec![0f32; m.metrics_len];
+            let mut values = vec![0f64; m.n_components];
+            for c in 0..m.n_components {
+                let v = rng.f64() * 3.0;
+                metrics[m.gdiff_offset + c] = v as f32;
+                values[c] = metrics[m.gdiff_offset + c] as f64; // post-f32 rounding
+            }
+            mon.observe(t, &m, &metrics, 1.0, &mut fs);
+            naive.observe(t, &values, &layers);
+            for c in 0..m.n_components {
+                assert_eq!(
+                    fs.is_frozen(c),
+                    naive.frozen[c],
+                    "trial {trial}: frozen sets diverge at step {t}, component {c}"
+                );
+            }
+        }
+        let got: Vec<(usize, usize)> = fs.events.iter().map(|e| (e.step, e.component)).collect();
+        assert_eq!(got, naive.events, "trial {trial}: freeze schedules diverge");
+    }
+}
+
+#[test]
 fn prop_flops_monotone_decreasing_in_frozen_set() {
     let mut rng = Rng::new(3);
     for _ in 0..30 {
