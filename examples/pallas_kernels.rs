@@ -7,6 +7,7 @@
 
 use anyhow::Result;
 use grades::config::RepoConfig;
+use grades::coordinator::scheduler::StepPlan;
 use grades::data;
 use grades::runtime::artifact::{Bundle, Client};
 use grades::runtime::session::Session;
@@ -34,7 +35,7 @@ fn main() -> Result<()> {
             ctrl[0] = t as f32;
             ctrl[1] = 1e-3;
             let b = ds.train.next_batch();
-            session.train_step(&b, &ctrl, false)?;
+            session.train_step(&b, &ctrl, &StepPlan::all_active(m.n_components))?;
             let metrics = session.probe()?;
             series.push(metrics[0] as f64 / metrics[1].max(1.0) as f64);
         }

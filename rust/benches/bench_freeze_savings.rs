@@ -1,0 +1,294 @@
+//! Freeze-aware step planning: the measured speedup curve.
+//!
+//! Host-only (no artifacts, no PJRT — always runs). Three parts, two of
+//! which are hard gates (non-zero exit on failure):
+//!
+//! 1. **All-active gate** — a GradES run whose plans never omit
+//!    anything (τ = 0) must be bitwise-identical to the planner-off
+//!    dense path: same per-step losses, same final state. Plan
+//!    threading alone must perturb nothing.
+//! 2. **Savings curve gate** — run a real GradES trajectory, then
+//!    re-measure host steps/sec under each freeze-set plateau the
+//!    trajectory actually visited (same state, same batch; only the
+//!    mask + plan differ). Steps/sec must rise **strictly** as the
+//!    omitted-dW share grows (plateaus closer than 20% of monitored
+//!    params are merged so the assert never rides on timer noise).
+//! 3. **No-plan vs plan A/B** — the same trajectory with elision off:
+//!    identical freeze events (asserted) and the whole-run wall ratio.
+//!
+//! Freeze timing is data-dependent, so the benched trajectory's τ is
+//! picked from a fixed ladder: the value producing the most distinct
+//! freeze plateaus wins (the τ=∞ rung deterministically freezes every
+//! component at the first post-grace probe, so a curve always exists).
+//!
+//! Emits `BENCH_freeze_savings.json`. `--quick` shortens the loops.
+
+use std::collections::BTreeMap;
+
+use anyhow::{ensure, Result};
+use grades::config::{repo_root, RepoConfig};
+use grades::coordinator::scheduler::StepPlan;
+use grades::coordinator::trainer::{self, StoppingMethod, TrainOutcome, TrainerOptions};
+use grades::data;
+use grades::runtime::backend::Backend;
+use grades::runtime::host_backend::HostBackend;
+use grades::runtime::session::{Batch, Session};
+use grades::util::json::{self, Json};
+use grades::util::timer::Timer;
+
+const CONFIG: &str = "lm-tiny-fp";
+
+/// τ ladder the benched trajectory is tuned over (most plateaus wins;
+/// ties go to the earliest rung). The ∞ rung cannot fail to freeze.
+const TAU_LADDER: [f64; 4] = [0.05, 0.5, 5.0, 1e9];
+
+/// One GradES run under τ; `elide` toggles freeze-aware planning.
+fn grades_run(
+    be: &HostBackend,
+    steps: usize,
+    tau: f64,
+    elide: bool,
+) -> Result<(TrainOutcome, Vec<f32>)> {
+    let mut cfg = RepoConfig::by_name(CONFIG)?;
+    cfg.grades.alpha = 0.25;
+    cfg.grades.tau = tau;
+    let mut ds = data::build_lm(&cfg, be.manifest())?;
+    let val: Vec<_> = ds.val.iter().take(2).cloned().collect();
+    let mut opts = TrainerOptions::from_config(&cfg, StoppingMethod::GradEs);
+    opts.total_steps = steps;
+    opts.probe_every = 1;
+    opts.elide_frozen = elide;
+    let trained = trainer::run_and_keep(be, &cfg, &opts, || ds.train.next_batch(), &val)?;
+    let state = trained.session.state_to_host()?;
+    Ok((trained.outcome, state))
+}
+
+/// Cumulative freeze sets after each event step, starting all-active.
+fn freeze_plateaus(o: &TrainOutcome) -> Vec<(usize, Vec<usize>)> {
+    let mut plateaus: Vec<(usize, Vec<usize>)> = vec![(0, Vec::new())];
+    let mut current: Vec<usize> = Vec::new();
+    let mut events = o.freeze.events.clone();
+    events.sort_by_key(|e| e.step);
+    for e in &events {
+        if e.frozen {
+            current.push(e.component);
+        } else {
+            current.retain(|&c| c != e.component);
+        }
+        match plateaus.last_mut() {
+            Some(last) if last.0 == e.step => last.1 = current.clone(),
+            _ => plateaus.push((e.step, current.clone())),
+        }
+    }
+    plateaus
+}
+
+/// [`freeze_plateaus`] decimated for measurement: keep the all-active
+/// baseline, then only plateaus ≥20% of monitored dW params beyond the
+/// last kept one (so the strict-monotonicity gate measures real work
+/// deltas, not timer noise); intermediate plateaus fold forward into
+/// the newest set, and sets too close to the baseline are dropped.
+fn merged_plateaus(o: &TrainOutcome, comp_params: &[usize]) -> Vec<(usize, Vec<usize>)> {
+    let total: usize = comp_params.iter().sum();
+    let omitted_of = |set: &[usize]| -> usize { set.iter().map(|&c| comp_params[c]).sum() };
+    let mut kept: Vec<(usize, Vec<usize>)> = Vec::new();
+    for p in freeze_plateaus(o) {
+        match kept.last() {
+            None => kept.push(p),
+            Some(last) => {
+                let gap = omitted_of(&p.1).abs_diff(omitted_of(&last.1));
+                if gap * 5 >= total {
+                    kept.push(p);
+                } else if kept.len() > 1 {
+                    *kept.last_mut().unwrap() = p;
+                } // else: too close to the all-active baseline — drop
+            }
+        }
+    }
+    kept
+}
+
+/// Steps/sec under a fixed freeze set: same base state, same batch,
+/// mask and plan derived from `frozen`. This replays a plateau of the
+/// real trajectory under controlled timing conditions.
+fn plateau_steps_per_sec(
+    be: &HostBackend,
+    base: &[f32],
+    batch: &Batch,
+    frozen: &[usize],
+    iters: usize,
+) -> Result<f64> {
+    let m = be.manifest();
+    let mut ctrl = vec![0f32; m.ctrl_len];
+    ctrl[1] = 1e-4;
+    ctrl[2] = 1.0;
+    for c in ctrl.iter_mut().skip(m.ctrl_mask_offset) {
+        *c = 1.0;
+    }
+    for &c in frozen {
+        ctrl[m.ctrl_mask_offset + c] = 0.0;
+    }
+    let plan = StepPlan::omitting(m.n_components, frozen);
+    let mut session = Session::new(be);
+    session.state_from_host(base)?;
+    for t in 0..2 {
+        ctrl[0] = (t + 1) as f32;
+        session.train_step(batch, &ctrl, &plan)?;
+    }
+    let t0 = Timer::new();
+    for t in 0..iters {
+        ctrl[0] = (t + 3) as f32;
+        session.train_step(batch, &ctrl, &plan)?;
+    }
+    Ok(iters as f64 / t0.secs())
+}
+
+fn main() -> Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let traj_steps = if quick { 16 } else { 40 };
+    let iters = if quick { 10 } else { 25 };
+    let mut report: BTreeMap<String, Json> = BTreeMap::new();
+    report.insert("quick".into(), Json::Bool(quick));
+    report.insert(
+        "host_threads".into(),
+        Json::Str(std::env::var("GRADES_HOST_THREADS").unwrap_or_else(|_| "unset".into())),
+    );
+
+    let cfg = RepoConfig::by_name(CONFIG)?;
+    let be = HostBackend::for_config(&cfg)?;
+    let m = be.manifest();
+    println!("## bench_freeze_savings ({CONFIG}, host engine)\n");
+
+    // --- gate 1: all-active plan ≡ pre-refactor dense path, bitwise ---
+    {
+        let steps = if quick { 6 } else { 10 };
+        let (dense, dense_state) = grades_run(&be, steps, 0.0, false)?;
+        let (planned, planned_state) = grades_run(&be, steps, 0.0, true)?;
+        let losses_equal = dense.log.records.len() == planned.log.records.len()
+            && dense
+                .log
+                .records
+                .iter()
+                .zip(&planned.log.records)
+                .all(|(a, b)| a.loss.to_bits() == b.loss.to_bits());
+        let state_equal = dense_state.len() == planned_state.len()
+            && dense_state.iter().zip(&planned_state).all(|(a, b)| a.to_bits() == b.to_bits());
+        println!(
+            "all-active gate: losses bitwise {losses_equal}, final state bitwise {state_equal}"
+        );
+        report.insert("all_active_bitwise".into(), Json::Bool(losses_equal && state_equal));
+        ensure!(
+            losses_equal && state_equal && planned.plan.elided_steps == 0,
+            "an all-active plan changed the trajectory — plan threading is not a no-op"
+        );
+    }
+
+    // --- pick the τ that yields the richest real trajectory ---
+    // "richest" = most *measurable* (merged) plateaus: tiny staggered
+    // freezes that would all fold into the baseline don't count, and the
+    // τ=∞ rung always yields two (baseline + everything frozen).
+    let comp_params: Vec<usize> = m.components.iter().map(|c| c.n_params).collect();
+    let mut best: Option<(f64, TrainOutcome, Vec<f32>)> = None;
+    for &tau in &TAU_LADDER {
+        let (o, state) = grades_run(&be, traj_steps, tau, true)?;
+        let n_kept = merged_plateaus(&o, &comp_params).len();
+        println!(
+            "tau={tau:>7}: {} freeze event(s) over {} step(s), {} measurable plateau(s), {} dW elided",
+            o.freeze.events.len(),
+            o.steps_run,
+            n_kept,
+            o.timings.dw_elided,
+        );
+        let better = match &best {
+            None => true,
+            Some((_, b, _)) => n_kept > merged_plateaus(b, &comp_params).len(),
+        };
+        if better {
+            best = Some((tau, o, state));
+        }
+    }
+    let (tau, outcome, final_state) = best.expect("ladder is non-empty");
+    println!(
+        "\nbenched trajectory: tau={tau}, {} steps, stop={:?}",
+        outcome.steps_run, outcome.stop_cause
+    );
+    report.insert("tau".into(), Json::Num(tau));
+    report.insert("trajectory_steps".into(), Json::Num(outcome.steps_run as f64));
+    ensure!(
+        !outcome.freeze.events.is_empty(),
+        "benched trajectory froze nothing — even the τ=∞ ladder rung failed"
+    );
+
+    // --- the measured curve over the trajectory's plateaus ---
+    let mut ds = data::build_lm(&cfg, m)?;
+    let batch = ds.train.next_batch();
+    let omitted_of = |set: &[usize]| -> usize { set.iter().map(|&c| comp_params[c]).sum() };
+    let kept = merged_plateaus(&outcome, &comp_params);
+
+    println!("\n{:>10} {:>9} {:>14} {:>12}", "after_step", "n_frozen", "omitted_params", "steps/s");
+    let mut series = Vec::new();
+    let mut sps_curve = Vec::new();
+    for (step, set) in &kept {
+        // best-of-3: the strict-monotonicity gate below must measure the
+        // work delta, not a scheduling hiccup on a shared CI runner
+        let mut sps = 0f64;
+        for _ in 0..3 {
+            sps = sps.max(plateau_steps_per_sec(&be, &final_state, &batch, set, iters)?);
+        }
+        println!("{:>10} {:>9} {:>14} {:>12.2}", step, set.len(), omitted_of(set), sps);
+        let mut o = BTreeMap::new();
+        o.insert("after_step".to_string(), Json::Num(*step as f64));
+        o.insert("n_frozen".to_string(), Json::Num(set.len() as f64));
+        o.insert("omitted_params".to_string(), Json::Num(omitted_of(set) as f64));
+        o.insert("steps_per_sec".to_string(), Json::Num(sps));
+        series.push(Json::Obj(o));
+        sps_curve.push(sps);
+    }
+    report.insert("plateaus".into(), Json::Arr(series));
+
+    let monotone = sps_curve.windows(2).all(|w| w[1] > w[0]);
+    println!(
+        "\nsavings curve: steps/sec strictly increasing across {} plateau(s): {monotone}",
+        sps_curve.len()
+    );
+    report.insert("steps_per_sec_strictly_increasing".into(), Json::Bool(monotone));
+
+    // --- no-plan vs plan A/B over the same trajectory ---
+    let (dense_outcome, _) = grades_run(&be, traj_steps, tau, false)?;
+    let ev = |o: &TrainOutcome| -> Vec<(usize, usize, bool)> {
+        o.freeze.events.iter().map(|e| (e.step, e.component, e.frozen)).collect()
+    };
+    ensure!(
+        ev(&outcome) == ev(&dense_outcome),
+        "plan elision changed the freeze trajectory — soundness violation"
+    );
+    let speedup = dense_outcome.wall_secs / outcome.wall_secs;
+    println!(
+        "A/B: plan {:.3}s vs no-plan {:.3}s wall → {:.2}x on the full run ({} dW elided)",
+        outcome.wall_secs,
+        dense_outcome.wall_secs,
+        speedup,
+        outcome.timings.dw_elided,
+    );
+    report.insert("plan_wall_secs".into(), Json::Num(outcome.wall_secs));
+    report.insert("noplan_wall_secs".into(), Json::Num(dense_outcome.wall_secs));
+    report.insert("plan_over_noplan_speedup".into(), Json::Num(speedup));
+    report.insert("dw_elided".into(), Json::Num(outcome.timings.dw_elided as f64));
+    report.insert(
+        "flops_theoretical_savings".into(),
+        Json::Num(outcome.flops.theoretical_savings()),
+    );
+    report
+        .insert("flops_realized_savings".into(), Json::Num(outcome.flops.realized_savings()));
+
+    let out = repo_root().join("BENCH_freeze_savings.json");
+    std::fs::write(&out, json::write(&Json::Obj(report)))?;
+    println!("wrote {}", out.display());
+
+    ensure!(
+        monotone && sps_curve.len() >= 2,
+        "host steps/sec did not rise strictly after freeze events — per-matrix \
+         elision is not paying for itself"
+    );
+    Ok(())
+}

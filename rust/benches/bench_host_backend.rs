@@ -17,6 +17,7 @@ use std::sync::Arc;
 
 use anyhow::{ensure, Result};
 use grades::config::{repo_root, RepoConfig};
+use grades::coordinator::scheduler::StepPlan;
 use grades::coordinator::trainer::{self, StoppingMethod, TrainOutcome, TrainerOptions};
 use grades::coordinator::warmstart::BaseCheckpoint;
 use grades::data;
@@ -36,16 +37,17 @@ fn steps_per_sec(backend: &dyn Backend, iters: usize) -> Result<f64> {
     let m = backend.manifest();
     let mut ctrl = vec![1f32; m.ctrl_len];
     ctrl[1] = 1e-4;
+    let full = StepPlan::all_active(m.n_components);
     let mut session = Session::new(backend);
     session.init(1)?;
     for t in 0..3 {
         ctrl[0] = (t + 1) as f32;
-        session.train_step(&batch, &ctrl, false)?;
+        session.train_step(&batch, &ctrl, &full)?;
     }
     let t0 = Timer::new();
     for t in 0..iters {
         ctrl[0] = (t + 4) as f32;
-        session.train_step(&batch, &ctrl, false)?;
+        session.train_step(&batch, &ctrl, &full)?;
     }
     Ok(iters as f64 / t0.secs())
 }

@@ -12,6 +12,7 @@ use std::collections::BTreeMap;
 
 use anyhow::Result;
 use grades::config::{repo_root, RepoConfig};
+use grades::coordinator::scheduler::StepPlan;
 use grades::data;
 use grades::runtime::artifact::{Bundle, Client};
 use grades::runtime::pipeline::{BatchSource, DeviceBatchCache, FixedCycle, Prefetcher};
@@ -33,14 +34,15 @@ fn sync_steps_per_sec(
     source: &mut dyn BatchSource,
     ctrl: &[f32],
 ) -> Result<f64> {
+    let full = StepPlan::all_active(session.manifest().n_components);
     for _ in 0..5 {
         let b = source.next_batch();
-        session.train_step(&b, ctrl, false)?;
+        session.train_step(&b, ctrl, &full)?;
     }
     let t = Timer::new();
     for _ in 0..STEP_ITERS {
         let b = source.next_batch();
-        session.train_step(&b, ctrl, false)?;
+        session.train_step(&b, ctrl, &full)?;
     }
     Ok(STEP_ITERS as f64 / t.secs())
 }
@@ -53,16 +55,17 @@ fn pipelined_steps_per_sec(
     source: &mut dyn BatchSource,
     ctrl: &[f32],
 ) -> Result<f64> {
+    let full = StepPlan::all_active(session.manifest().n_components);
     let mut staged = Some(session.upload_batch(&source.next_batch())?);
     for _ in 0..5 {
         let io = staged.take().unwrap();
-        session.train_step_uploaded(io, ctrl, false)?;
+        session.train_step_uploaded(io, ctrl, &full)?;
         staged = Some(session.upload_batch(&source.next_batch())?);
     }
     let t = Timer::new();
     for _ in 0..STEP_ITERS {
         let io = staged.take().unwrap();
-        session.train_step_uploaded(io, ctrl, false)?;
+        session.train_step_uploaded(io, ctrl, &full)?;
         staged = Some(session.upload_batch(&source.next_batch())?);
     }
     Ok(STEP_ITERS as f64 / t.secs())
@@ -96,11 +99,16 @@ fn main() -> Result<()> {
         ctrl[0] = 1.0;
         ctrl[1] = 1e-4;
 
+        let full = StepPlan::all_active(m.n_components);
+        let attn = StepPlan::omitting(
+            m.n_components,
+            &m.components_where(|c| c.group == "attention"),
+        );
         let t_full = bench(3, 20, || {
-            session.train_step(&batch, &ctrl, false).unwrap();
+            session.train_step(&batch, &ctrl, &full).unwrap();
         });
         let t_frozen = bench(3, 20, || {
-            session.train_step(&batch, &ctrl, true).unwrap();
+            session.train_step(&batch, &ctrl, &attn).unwrap();
         });
         let t_probe = bench(3, 50, || {
             session.probe().unwrap();

@@ -5,22 +5,33 @@
 //!   1. update savings — frozen components skip their optimizer update
 //!      (realized in-graph via the mask; small),
 //!   2. dW savings — a frozen component's weight-gradient matmul is
-//!      skipped. In our static-graph substrate this is *realized* only when
-//!      the scheduler swaps to the attn-frozen variant; the accounting
-//!      model reports the idealized per-matrix number the paper's dynamic
-//!      autograd engine gets (requires_grad=False), which is what Table 4's
-//!      FLOPs column measures.
+//!      skipped. Two ledgers track this tier since the step planner
+//!      landed: **theoretical** (`spent`) prices the ideal per-matrix
+//!      plan — every frozen component's dW gone, what the paper's
+//!      dynamic autograd engine gets via `requires_grad=False` and what
+//!      Table 4's FLOPs column measures — while **realized**
+//!      (`realized_spent`) prices what the executing engine actually
+//!      skipped: the full plan on the host engine, the nearest sound
+//!      pre-compiled variant on XLA (see
+//!      `coordinator::scheduler::VariantLattice`). The gap between the
+//!      two is exactly the cost of the static-graph substrate.
 //!   3. termination savings — steps never executed after all components
 //!      froze (the dominant term, paper §5.2).
 
 use crate::coordinator::freeze::FreezeState;
+use crate::coordinator::scheduler::StepPlan;
 use crate::runtime::manifest::Manifest;
 
 #[derive(Debug, Clone, Default)]
 /// Cumulative FLOPs ledger for one training run.
 pub struct FlopsCounter {
-    /// Accounted FLOPs actually spent (frozen-aware).
+    /// Theoretical frozen-aware FLOPs: every frozen component's dW
+    /// matmul priced as skipped (the paper's idealized accounting).
     pub spent: f64,
+    /// Engine-realized FLOPs: only the dW matmuls the executed plan
+    /// actually omitted are priced as skipped. `realized_spent ≥ spent`,
+    /// with equality when the engine honors every plan exactly (host).
+    pub realized_spent: f64,
     /// What the same steps would have cost with nothing frozen.
     pub dense_equivalent: f64,
     /// FLOPs spent inside validation passes (classic-ES overhead).
@@ -46,10 +57,21 @@ impl FlopsCounter {
     /// Frozen-aware train-step cost: frozen components keep fwd + dX
     /// (gradients still flow *through* them — Alg. 1 line 15) but skip dW.
     pub fn step_cost(m: &Manifest, freeze: &FreezeState) -> f64 {
+        Self::step_cost_where(m, |c| freeze.is_frozen(c))
+    }
+
+    /// Train-step cost under an execution plan: exactly the omitted
+    /// components' dW matmuls are skipped.
+    pub fn planned_step_cost(m: &Manifest, plan: &StepPlan) -> f64 {
+        Self::step_cost_where(m, |c| plan.omits(c))
+    }
+
+    /// Shared pricing core: skip the dW of components matching `skipped`.
+    fn step_cost_where<F: Fn(usize) -> bool>(m: &Manifest, skipped: F) -> f64 {
         let tokens = (m.batch_size * m.seq_len) as f64;
         let mut dw = 0.0;
         for c in &m.components {
-            if !freeze.is_frozen(c.idx) {
+            if !skipped(c.idx) {
                 dw += m.flops.per_component_fwd.get(&c.name).copied().unwrap_or(0.0);
             }
         }
@@ -61,9 +83,12 @@ impl FlopsCounter {
         (n_batches * m.batch_size * m.seq_len) as f64 * m.flops.fwd_per_token
     }
 
-    /// Account one train step under the current freeze state.
-    pub fn record_step(&mut self, m: &Manifest, freeze: &FreezeState) {
+    /// Account one train step: `freeze` prices the theoretical ledger,
+    /// `realized` (the engine-lowered plan the step actually executed)
+    /// prices the realized one.
+    pub fn record_step(&mut self, m: &Manifest, freeze: &FreezeState, realized: &StepPlan) {
         self.spent += Self::step_cost(m, freeze);
+        self.realized_spent += Self::planned_step_cost(m, realized);
         self.dense_equivalent += Self::dense_step(m);
         self.steps += 1;
     }
@@ -73,11 +98,32 @@ impl FlopsCounter {
         let c = Self::eval_cost(m, n_batches);
         self.validation += c;
         self.spent += c;
+        self.realized_spent += c;
     }
 
-    /// Total accounted FLOPs (train + validation).
+    /// Total accounted FLOPs (train + validation), theoretical ledger.
     pub fn total(&self) -> f64 {
         self.spent
+    }
+
+    /// FLOPs the ideal per-matrix plan saves vs dense execution.
+    pub fn theoretical_savings(&self) -> f64 {
+        self.dense_equivalent - (self.spent - self.validation)
+    }
+
+    /// FLOPs the executed plans actually saved vs dense execution.
+    pub fn realized_savings(&self) -> f64 {
+        self.dense_equivalent - (self.realized_spent - self.validation)
+    }
+
+    /// Share of the theoretical dW savings the engine realized, in
+    /// [0, 1]; 1.0 when nothing was ever skippable (vacuously realized).
+    pub fn realized_fraction(&self) -> f64 {
+        let t = self.theoretical_savings();
+        if t <= 0.0 {
+            return 1.0;
+        }
+        (self.realized_savings() / t).clamp(0.0, 1.0)
     }
 }
 
@@ -117,14 +163,50 @@ mod tests {
     }
 
     #[test]
-    fn counter_accumulates() {
+    fn planned_cost_matches_frozen_cost_for_the_ideal_plan() {
         let m = manifest_with_flops();
-        let fs = FreezeState::new(m.n_components);
+        let mut fs = FreezeState::new(m.n_components);
+        fs.freeze(1, 1, FreezeReason::Converged, 0.0);
+        fs.freeze(5, 1, FreezeReason::Converged, 0.0);
+        let ideal = StepPlan::omitting(m.n_components, &[1, 5]);
+        assert_eq!(
+            FlopsCounter::step_cost(&m, &fs),
+            FlopsCounter::planned_step_cost(&m, &ideal)
+        );
+        // a coarser lowering realizes less
+        let coarse = StepPlan::omitting(m.n_components, &[1]);
+        assert!(
+            FlopsCounter::planned_step_cost(&m, &coarse) > FlopsCounter::planned_step_cost(&m, &ideal)
+        );
+    }
+
+    #[test]
+    fn counter_accumulates_and_splits_realized_from_theoretical() {
+        let m = manifest_with_flops();
+        let mut fs = FreezeState::new(m.n_components);
+        fs.freeze(0, 1, FreezeReason::Converged, 0.0);
+        fs.freeze(1, 1, FreezeReason::Converged, 0.0);
         let mut c = FlopsCounter::default();
-        c.record_step(&m, &fs);
+        // engine realized only component 0's elision (a coarse variant)
+        c.record_step(&m, &fs, &StepPlan::omitting(m.n_components, &[0]));
         c.record_validation(&m, 3);
         assert_eq!(c.steps, 1);
         assert!(c.validation > 0.0);
         assert!(c.total() > c.validation);
+        assert!(c.realized_spent > c.spent, "coarse lowering spends more than the ideal plan");
+        assert!(c.theoretical_savings() > c.realized_savings());
+        let frac = c.realized_fraction();
+        assert!((0.0..=1.0).contains(&frac) && (frac - 0.5).abs() < 1e-9, "frac {frac}");
+    }
+
+    #[test]
+    fn exact_lowering_realizes_everything() {
+        let m = manifest_with_flops();
+        let mut fs = FreezeState::new(m.n_components);
+        fs.freeze(3, 1, FreezeReason::Converged, 0.0);
+        let mut c = FlopsCounter::default();
+        c.record_step(&m, &fs, &StepPlan::omitting(m.n_components, &[3]));
+        assert_eq!(c.spent, c.realized_spent);
+        assert_eq!(c.realized_fraction(), 1.0);
     }
 }

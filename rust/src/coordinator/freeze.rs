@@ -13,8 +13,24 @@ pub enum FreezeReason {
     Converged,
     /// Frozen as part of a layer-granularity decision (AutoFreeze ablation).
     LayerRule,
-    /// Manually frozen (tests/experiments).
+    /// Manually frozen or unfrozen (tests/experiments).
     Manual,
+    /// Reactivated by the §8 dynamic-unfreezing rule: the monitored
+    /// metric rebounded above `unfreeze_factor · τ`. (Unfreeze events
+    /// used to be mislabeled `Converged` — the freeze-side reason.)
+    Reactivated,
+}
+
+impl FreezeReason {
+    /// Short lowercase id for event logs.
+    pub fn label(&self) -> &'static str {
+        match self {
+            FreezeReason::Converged => "converged",
+            FreezeReason::LayerRule => "layer-rule",
+            FreezeReason::Manual => "manual",
+            FreezeReason::Reactivated => "reactivated",
+        }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -98,7 +114,10 @@ impl FreezeState {
     }
 
     /// Reactivate `c` (idempotent; §8 dynamic-unfreezing extension).
-    pub fn unfreeze(&mut self, c: usize, step: usize, metric: f64) {
+    /// `reason` is recorded honestly in the event log —
+    /// [`FreezeReason::Reactivated`] from the monitor's rebound rule,
+    /// [`FreezeReason::Manual`] from tests and experiments.
+    pub fn unfreeze(&mut self, c: usize, step: usize, reason: FreezeReason, metric: f64) {
         if self.frozen[c] {
             self.frozen[c] = false;
             self.frozen_since[c] = None;
@@ -107,7 +126,7 @@ impl FreezeState {
                 step,
                 component: c,
                 frozen: false,
-                reason: FreezeReason::Converged,
+                reason,
                 metric_value: metric,
             });
         }
@@ -164,10 +183,12 @@ mod tests {
         assert_eq!(f.mask()[2], 0.0);
         assert_eq!(f.n_frozen(), 1);
         assert_eq!(f.frozen_since(2), Some(10));
-        f.unfreeze(2, 12, 0.2);
+        f.unfreeze(2, 12, FreezeReason::Reactivated, 0.2);
         assert!(!f.is_frozen(2));
         assert_eq!(f.mask()[2], 1.0);
         assert_eq!(f.events.len(), 2);
+        assert_eq!(f.events[1].reason, FreezeReason::Reactivated);
+        assert_eq!(f.events[1].reason.label(), "reactivated");
     }
 
     #[test]

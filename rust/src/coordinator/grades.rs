@@ -37,6 +37,20 @@ pub enum Metric {
     L1DiffRel,
 }
 
+impl Metric {
+    /// Parse a `[grades] metric` string. Unknown values fall back to the
+    /// paper's default, [`Metric::L1Diff`] — the single source of truth
+    /// for metric spellings (the monitor and the step planner's
+    /// unfreeze-liveness gate must never disagree on what `l1_abs` is).
+    pub fn parse(s: &str) -> Metric {
+        match s {
+            "l1_abs" => Metric::L1Abs,
+            "l1_diff_rel" => Metric::L1DiffRel,
+            _ => Metric::L1Diff,
+        }
+    }
+}
+
 /// Algorithm 1's monitoring loop: per-component convergence tests
 /// over the probed gradient statistics.
 pub struct GradesMonitor {
@@ -63,11 +77,7 @@ pub struct GradesMonitor {
 impl GradesMonitor {
     /// Monitor over the manifest's components for a `total_steps` run.
     pub fn new(cfg: &GradesConfig, manifest: &Manifest, total_steps: usize) -> Self {
-        let metric = match cfg.metric.as_str() {
-            "l1_abs" => Metric::L1Abs,
-            "l1_diff_rel" => Metric::L1DiffRel,
-            _ => Metric::L1Diff,
-        };
+        let metric = Metric::parse(&cfg.metric);
         // per-component τ with tower overrides (paper Table 10)
         let taus = manifest
             .components
@@ -190,7 +200,7 @@ impl GradesMonitor {
                     // carry stopped); use Gabs which is always fresh.
                     && self.metric == Metric::L1Abs
                 {
-                    freeze.unfreeze(c, t, values[c]);
+                    freeze.unfreeze(c, t, FreezeReason::Reactivated, values[c]);
                     self.below_count[c] = 0;
                 }
             }
@@ -301,6 +311,7 @@ pub(crate) mod tests {
                 head_per_token: 0.0,
             },
             executables: BTreeMap::new(),
+            variants: BTreeMap::new(),
         }
     }
 

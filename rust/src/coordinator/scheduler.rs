@@ -1,64 +1,360 @@
-//! Executable-variant scheduler.
+//! Freeze-aware step planning: which per-component dW matmuls a train
+//! step computes, and how each engine realizes that plan.
 //!
-//! A static XLA graph cannot skip a single matrix's dW matmul at runtime,
-//! so the compute tier of GradES's savings is realized by hot-swapping to
-//! pre-compiled graph variants. The shipped variant set exploits the
-//! paper's Fig. 4a observation (attention converges 2–3× earlier than
-//! MLP): once *every* attention component is frozen, switch to
-//! `train_step_attn_frozen`, whose backward pass genuinely omits all
-//! attention weight-gradient matmuls.
+//! GradES's compute tier used to be one coarse hot swap: a boolean
+//! `attn_frozen` that flipped to the `train_step_attn_frozen` graph once
+//! *every* attention component froze. This module generalizes it into a
+//! first-class [`StepPlan`] — the set of component dW matmuls to *omit*
+//! — derived every step from the [`FreezeState`] by a [`StepPlanner`].
+//! Lowering is per-engine:
+//!
+//! * the **host engine** honors a plan exactly: every omitted matrix
+//!   skips its dW matmul, Eq. 1 gdiff/gabs statistics, prev-grad carry
+//!   and optimizer slot update; plans carrying the opt-in truncation
+//!   grant additionally stop the backward sweep below a fully-frozen
+//!   layer *prefix* (`runtime::host_backend`);
+//! * the **XLA engine** lowers a plan to the nearest *sound*
+//!   pre-compiled graph variant from a data-driven [`VariantLattice`]
+//!   (a variant is sound for a plan iff the variant's omitted set ⊆ the
+//!   plan's omitted set). Today's lattice holds the two shipped graphs
+//!   (`train_step`, `train_step_attn_frozen`); artifacts may declare
+//!   more via the manifest's `variants` table without touching the
+//!   trainer.
+//!
+//! The soundness rule that makes all of this trajectory-preserving:
+//! **a plan may only omit frozen components** (omitted ⊆ frozen). A
+//! frozen component's masked update is a bit-exact no-op, so omitting
+//! the work that feeds it changes nothing the trajectory can see except
+//! the component's own (already-ignored) logged statistics.
 
+use crate::config::GradesConfig;
 use crate::coordinator::freeze::FreezeState;
 use crate::runtime::manifest::Manifest;
 
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-/// Which pre-compiled train-step graph a step executes.
-pub enum Variant {
-    /// The full backward graph (every dW matmul present).
-    Full,
-    /// Backward graph with all attention dW matmuls removed.
-    AttnFrozen,
+// ---------------------------------------------------------------------------
+// StepPlan
+// ---------------------------------------------------------------------------
+
+/// One step's execution plan: which monitored components' dW matmuls
+/// (and the dependent Eq. 1 statistics, prev-grad carry and optimizer
+/// slot update) to **omit**. An all-active plan reproduces the full
+/// graph bitwise.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StepPlan {
+    omit: Vec<bool>,
+    n_omitted: usize,
+    truncate: bool,
 }
 
-#[derive(Debug, Default)]
-/// Hot-swaps the train-step executable once attention froze.
-pub struct VariantScheduler {
+impl StepPlan {
+    /// The full-compute plan over `n` components (nothing omitted).
+    pub fn all_active(n: usize) -> Self {
+        StepPlan { omit: vec![false; n], n_omitted: 0, truncate: false }
+    }
+
+    /// Plan over `n` components omitting exactly `omitted` (indices may
+    /// repeat; out-of-range indices panic).
+    pub fn omitting(n: usize, omitted: &[usize]) -> Self {
+        let mut plan = Self::all_active(n);
+        for &c in omitted {
+            if !plan.omit[c] {
+                plan.omit[c] = true;
+                plan.n_omitted += 1;
+            }
+        }
+        plan
+    }
+
+    /// The ideal freeze-aware plan: omit exactly the frozen components.
+    pub fn from_freeze(freeze: &FreezeState) -> Self {
+        let omitted: Vec<usize> = (0..freeze.n()).filter(|&c| freeze.is_frozen(c)).collect();
+        Self::omitting(freeze.n(), &omitted)
+    }
+
+    /// Monitored component count the plan covers.
+    pub fn n(&self) -> usize {
+        self.omit.len()
+    }
+
+    /// Does the plan omit component `c`'s dW work?
+    pub fn omits(&self, c: usize) -> bool {
+        self.omit[c]
+    }
+
+    /// Number of omitted components.
+    pub fn n_omitted(&self) -> usize {
+        self.n_omitted
+    }
+
+    /// True when nothing is omitted (the full graph).
+    pub fn is_all_active(&self) -> bool {
+        self.n_omitted == 0
+    }
+
+    /// Omitted component indices, ascending.
+    pub fn omitted(&self) -> Vec<usize> {
+        (0..self.n()).filter(|&c| self.omit[c]).collect()
+    }
+
+    /// The soundness rule: every omitted component is frozen.
+    pub fn is_sound(&self, freeze: &FreezeState) -> bool {
+        self.n() == freeze.n() && (0..self.n()).all(|c| !self.omit[c] || freeze.is_frozen(c))
+    }
+
+    /// Allow the backward-sweep truncation below a fully omitted layer
+    /// *prefix* (the AutoFreeze-style whole-layer rule). This is a
+    /// **trajectory-changing** capability grant — the truncated layers'
+    /// norm scales and the embeddings are held instead of updated — so
+    /// it is opt-in (`TrainerOptions::truncate_frozen_prefix`) and never
+    /// set by default. Engines that cannot truncate (XLA) ignore it.
+    pub fn with_truncation(mut self) -> Self {
+        self.truncate = true;
+        self
+    }
+
+    /// May the engine truncate the backward sweep below a fully omitted
+    /// layer prefix?
+    pub fn truncates(&self) -> bool {
+        self.truncate
+    }
+
+    /// Is this plan weaker-or-equal to `other` — omitted set a subset,
+    /// and no capability (truncation) granted that `other` withheld?
+    /// What a sound per-engine lowering must satisfy relative to the
+    /// requested plan.
+    pub fn is_subset_of(&self, other: &StepPlan) -> bool {
+        self.n() == other.n()
+            && (0..self.n()).all(|c| !self.omit[c] || other.omit[c])
+            && (!self.truncate || other.truncate)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// StepPlanner
+// ---------------------------------------------------------------------------
+
+/// Counters the planner keeps for reporting (`TrainOutcome::plan`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PlanStats {
+    /// First step whose plan omitted anything.
+    pub first_elision_step: Option<usize>,
+    /// First step whose plan omitted *every* attention component — on
+    /// the XLA lattice this is where the `train_step_attn_frozen`
+    /// lowering becomes reachable (the old variant-scheduler swap step).
+    pub attn_swap_step: Option<usize>,
+    /// Steps planned with a non-empty omitted set.
+    pub elided_steps: usize,
+    /// Steps whose plan re-included a previously omitted component
+    /// (dynamic unfreezing downgraded the plan).
+    pub downgrades: usize,
+    /// Largest omitted-set size any step planned.
+    pub max_omitted: usize,
+}
+
+/// Derives each step's [`StepPlan`] from the freeze mask. Subsumes the
+/// old `VariantScheduler`: where that struct monotonically latched one
+/// boolean once all attention froze, the planner re-derives the omitted
+/// set every step — so dynamic unfreezing (§8) *downgrades* the plan
+/// instead of leaving a stale elision in place.
+#[derive(Debug)]
+pub struct StepPlanner {
+    n: usize,
     attn_components: Vec<usize>,
-    /// Step the swap happened at (None = still on the full graph).
-    pub swapped_at: Option<usize>,
-    /// Swapping enabled (GradES runs only; off for baselines).
+    /// Elision enabled (GradES runs only; baselines plan all-active).
     pub enabled: bool,
+    /// Grant the backward-sweep truncation capability on derived plans
+    /// (see [`StepPlan::with_truncation`]; off by default because it
+    /// changes the trajectory once a layer prefix fully froze).
+    pub truncate: bool,
+    prev_omit: Vec<bool>,
+    /// Reporting counters.
+    pub stats: PlanStats,
 }
 
-impl VariantScheduler {
-    /// Scheduler over the manifest's attention components.
+impl StepPlanner {
+    /// Planner over the manifest's components. `enabled = false` plans
+    /// all-active forever (baseline methods, A/B harnesses).
     pub fn new(manifest: &Manifest, enabled: bool) -> Self {
-        VariantScheduler {
+        StepPlanner {
+            n: manifest.n_components,
             attn_components: manifest.components_where(|c| c.group == "attention"),
-            swapped_at: None,
             enabled,
+            truncate: false,
+            prev_omit: vec![false; manifest.n_components],
+            stats: PlanStats::default(),
         }
     }
 
-    /// Pick the variant for step `t` given the current freeze state.
-    /// Monotone: once swapped, never swaps back (frozen components with
-    /// the default config never unfreeze; the dynamic-unfreeze extension
-    /// disables the scheduler instead).
-    pub fn pick(&mut self, t: usize, freeze: &FreezeState) -> Variant {
-        if !self.enabled || self.attn_components.is_empty() {
-            return Variant::Full;
+    /// Planner for a training run under `[grades]` settings. Identical
+    /// to [`StepPlanner::new`] except that when dynamic unfreezing can
+    /// actually fire (`unfreeze_factor > 0` with the `l1_abs` metric —
+    /// the only metric the monitor reactivates on), elision is disabled:
+    /// an omitted component reports `Gabs = 0`, which would starve the
+    /// rebound signal and make unfreezing impossible. Correctness over
+    /// savings, warn-free: the run simply plans all-active.
+    pub fn for_run(manifest: &Manifest, grades: &GradesConfig, enabled: bool) -> Self {
+        // parsed through the monitor's own metric table so the two can
+        // never disagree on which spellings mean Gabs-monitoring
+        let unfreeze_live = grades.unfreeze_factor > 0.0
+            && crate::coordinator::grades::Metric::parse(&grades.metric)
+                == crate::coordinator::grades::Metric::L1Abs;
+        Self::new(manifest, enabled && !unfreeze_live)
+    }
+
+    /// Derive step `t`'s plan: omit exactly the frozen components.
+    /// Sound by construction (omitted ⊆ frozen) and non-monotone — a
+    /// component unfrozen since the last step re-enters the plan.
+    pub fn plan(&mut self, t: usize, freeze: &FreezeState) -> StepPlan {
+        if !self.enabled {
+            return StepPlan::all_active(self.n);
         }
-        if self.swapped_at.is_some() {
-            return Variant::AttnFrozen;
+        let mut plan = StepPlan::from_freeze(freeze);
+        if self.truncate {
+            plan = plan.with_truncation();
         }
-        let all_attn_frozen =
-            self.attn_components.iter().all(|&c| freeze.is_frozen(c));
-        if all_attn_frozen {
-            self.swapped_at = Some(t);
-            Variant::AttnFrozen
-        } else {
-            Variant::Full
+        if (0..self.n).any(|c| self.prev_omit[c] && !plan.omits(c)) {
+            self.stats.downgrades += 1;
         }
+        if !plan.is_all_active() {
+            self.stats.elided_steps += 1;
+            self.stats.first_elision_step.get_or_insert(t);
+            self.stats.max_omitted = self.stats.max_omitted.max(plan.n_omitted());
+            if self.stats.attn_swap_step.is_none()
+                && !self.attn_components.is_empty()
+                && self.attn_components.iter().all(|&c| plan.omits(c))
+            {
+                self.stats.attn_swap_step = Some(t);
+            }
+        }
+        self.prev_omit.clear();
+        self.prev_omit.extend((0..self.n).map(|c| plan.omits(c)));
+        plan
+    }
+}
+
+// ---------------------------------------------------------------------------
+// VariantLattice — the XLA engine's lowering table
+// ---------------------------------------------------------------------------
+
+/// One pre-compiled train-step graph variant: its executable key and the
+/// component dW matmuls its backward graph omits.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VariantDef {
+    /// Executable key in the manifest (`train_step`, `train_step_attn_frozen`, …).
+    pub key: String,
+    /// Omitted component indices, ascending.
+    pub omit: Vec<usize>,
+}
+
+/// The set of train-step variants an artifact ships, ordered ⊆-wise by
+/// what each omits (a lattice under set inclusion, with the full graph
+/// as bottom). Built from manifest data so future artifacts slot in new
+/// variants without touching the trainer or the session.
+#[derive(Debug, Clone)]
+pub struct VariantLattice {
+    /// All variants; index 0 is always the full graph (empty omit set).
+    pub variants: Vec<VariantDef>,
+}
+
+impl VariantLattice {
+    /// Build from explicit variant definitions. The full graph (empty
+    /// omitted set) is required — it is the sound lowering of last
+    /// resort for every plan.
+    pub fn new(mut variants: Vec<VariantDef>) -> anyhow::Result<Self> {
+        for v in variants.iter_mut() {
+            v.omit.sort_unstable();
+            v.omit.dedup();
+        }
+        // full graph first, then ascending omitted-set size (determinism)
+        variants.sort_by(|a, b| a.omit.len().cmp(&b.omit.len()).then(a.key.cmp(&b.key)));
+        anyhow::ensure!(
+            variants.first().map_or(false, |v| v.omit.is_empty()),
+            "variant lattice has no full (empty-omit) train-step graph"
+        );
+        Ok(VariantLattice { variants })
+    }
+
+    /// Derive the lattice from a manifest: one variant per `train_step*`
+    /// executable key. Omitted sets come from the manifest's optional
+    /// `variants` table (component *names* per key); the two shipped
+    /// keys have built-in definitions (`train_step` omits nothing,
+    /// `train_step_attn_frozen` omits every attention component). An
+    /// unknown key without a `variants` entry is an error — a silent
+    /// guess here could execute the wrong graph.
+    pub fn from_manifest(m: &Manifest) -> anyhow::Result<Self> {
+        let mut variants = Vec::new();
+        for key in m.executables.keys() {
+            if !key.starts_with("train_step") {
+                continue;
+            }
+            let omit = if let Some(names) = m.variants.get(key) {
+                names
+                    .iter()
+                    .map(|n| {
+                        m.components
+                            .iter()
+                            .find(|c| &c.name == n)
+                            .map(|c| c.idx)
+                            .ok_or_else(|| {
+                                anyhow::anyhow!(
+                                    "manifest variant {key:?} omits unknown component {n:?}"
+                                )
+                            })
+                    })
+                    .collect::<anyhow::Result<Vec<_>>>()?
+            } else if key == "train_step" {
+                Vec::new()
+            } else if key == "train_step_attn_frozen" {
+                m.components_where(|c| c.group == "attention")
+            } else {
+                anyhow::bail!(
+                    "train-step executable {key:?} has no built-in omitted set; declare \
+                     it in the manifest's `variants` table"
+                );
+            };
+            variants.push(VariantDef { key: key.clone(), omit });
+        }
+        // a declared variant that the collection loop above skipped —
+        // key misspelled, or attached to a non-train-step executable —
+        // would be silently dropped (plans would lower to the full graph
+        // and the promised savings never materialize); refuse instead
+        for key in m.variants.keys() {
+            anyhow::ensure!(
+                key.starts_with("train_step") && m.executables.contains_key(key),
+                "manifest `variants` entry {key:?} names no train_step* executable (typo?)"
+            );
+        }
+        Self::new(variants)
+    }
+
+    /// Lower a plan to the nearest sound variant: the variant with the
+    /// largest omitted set that is a subset of the plan's omitted set.
+    /// Always succeeds (the full graph is sound for every plan). Returns
+    /// the variant index.
+    pub fn lower_index(&self, plan: &StepPlan) -> usize {
+        let mut best = 0;
+        for (i, v) in self.variants.iter().enumerate() {
+            if v.omit.len() > self.variants[best].omit.len()
+                && v.omit.iter().all(|&c| plan.omits(c))
+            {
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Lower a plan to its nearest sound variant definition.
+    pub fn lower(&self, plan: &StepPlan) -> &VariantDef {
+        &self.variants[self.lower_index(plan)]
+    }
+
+    /// The variant whose omitted set equals the plan's exactly, if any
+    /// (how the XLA engine maps an already-lowered plan back to its
+    /// executable).
+    pub fn exact_index(&self, plan: &StepPlan) -> Option<usize> {
+        self.variants.iter().position(|v| {
+            v.omit.len() == plan.n_omitted() && v.omit.iter().all(|&c| plan.omits(c))
+        })
     }
 }
 
@@ -68,31 +364,179 @@ mod tests {
     use crate::coordinator::freeze::FreezeReason;
     use crate::coordinator::grades::tests::fake_manifest;
 
+    fn grades_cfg(metric: &str, unfreeze: f64) -> GradesConfig {
+        GradesConfig {
+            metric: metric.into(),
+            alpha: 0.1,
+            tau: 0.5,
+            tau_vision: f64::NAN,
+            tau_language: f64::NAN,
+            patience: 0,
+            unfreeze_factor: unfreeze,
+            granularity: "matrix".into(),
+        }
+    }
+
     #[test]
-    fn swaps_when_all_attention_frozen() {
+    fn plan_accessors_and_soundness() {
+        let mut fs = FreezeState::new(4);
+        let full = StepPlan::all_active(4);
+        assert!(full.is_all_active() && full.n_omitted() == 0 && full.is_sound(&fs));
+        let p = StepPlan::omitting(4, &[1, 3, 3]);
+        assert_eq!(p.n_omitted(), 2);
+        assert!(p.omits(1) && p.omits(3) && !p.omits(0));
+        assert_eq!(p.omitted(), vec![1, 3]);
+        assert!(!p.is_sound(&fs), "omitting active components is unsound");
+        fs.freeze(1, 1, FreezeReason::Manual, 0.0);
+        fs.freeze(3, 1, FreezeReason::Manual, 0.0);
+        assert!(p.is_sound(&fs));
+        assert!(full.is_subset_of(&p) && !p.is_subset_of(&full));
+        assert!(p.is_subset_of(&p));
+    }
+
+    #[test]
+    fn planner_omits_exactly_the_frozen_set() {
         let m = fake_manifest(2);
-        let mut s = VariantScheduler::new(&m, true);
+        let mut planner = StepPlanner::new(&m, true);
         let mut fs = FreezeState::new(m.n_components);
-        assert_eq!(s.pick(1, &fs), Variant::Full);
+        assert!(planner.plan(1, &fs).is_all_active());
+        fs.freeze(2, 2, FreezeReason::Converged, 0.0);
+        fs.freeze(9, 2, FreezeReason::Converged, 0.0);
+        let p = planner.plan(3, &fs);
+        assert_eq!(p.omitted(), vec![2, 9]);
+        assert!(p.is_sound(&fs));
+        assert_eq!(planner.stats.first_elision_step, Some(3));
+        assert_eq!(planner.stats.max_omitted, 2);
+        assert_eq!(planner.stats.attn_swap_step, None);
+    }
+
+    #[test]
+    fn planner_records_attn_swap_when_all_attention_omitted() {
+        // the generalized analogue of the old VariantScheduler swap test
+        let m = fake_manifest(2);
+        let mut planner = StepPlanner::new(&m, true);
+        let mut fs = FreezeState::new(m.n_components);
+        assert!(planner.plan(1, &fs).is_all_active());
         for c in &m.components {
             if c.group == "attention" {
                 fs.freeze(c.idx, 5, FreezeReason::Converged, 0.0);
             }
         }
-        assert_eq!(s.pick(6, &fs), Variant::AttnFrozen);
-        assert_eq!(s.swapped_at, Some(6));
-        // monotone
-        assert_eq!(s.pick(7, &fs), Variant::AttnFrozen);
+        let p = planner.plan(6, &fs);
+        assert!(!p.is_all_active());
+        assert_eq!(planner.stats.attn_swap_step, Some(6));
+        planner.plan(7, &fs);
+        assert_eq!(planner.stats.attn_swap_step, Some(6), "swap step is first-hit");
     }
 
     #[test]
-    fn disabled_never_swaps() {
+    fn disabled_planner_never_elides() {
         let m = fake_manifest(1);
-        let mut s = VariantScheduler::new(&m, false);
+        let mut planner = StepPlanner::new(&m, false);
         let mut fs = FreezeState::new(m.n_components);
         for c in 0..m.n_components {
             fs.freeze(c, 1, FreezeReason::Converged, 0.0);
         }
-        assert_eq!(s.pick(2, &fs), Variant::Full);
+        assert!(planner.plan(2, &fs).is_all_active());
+        assert_eq!(planner.stats, PlanStats::default());
+    }
+
+    #[test]
+    fn unfreeze_downgrades_the_plan() {
+        let m = fake_manifest(1);
+        let mut planner = StepPlanner::new(&m, true);
+        let mut fs = FreezeState::new(m.n_components);
+        fs.freeze(0, 1, FreezeReason::Converged, 0.0);
+        assert!(planner.plan(2, &fs).omits(0));
+        fs.unfreeze(0, 3, FreezeReason::Reactivated, 1.0);
+        let p = planner.plan(3, &fs);
+        assert!(!p.omits(0), "stale elision survived an unfreeze");
+        assert!(p.is_sound(&fs));
+        assert_eq!(planner.stats.downgrades, 1);
+    }
+
+    #[test]
+    fn for_run_disables_elision_when_unfreeze_needs_live_stats() {
+        let m = fake_manifest(1);
+        let mut fs = FreezeState::new(m.n_components);
+        fs.freeze(0, 1, FreezeReason::Converged, 0.0);
+        // unfreeze can only fire on the l1_abs metric: elision off
+        let mut live = StepPlanner::for_run(&m, &grades_cfg("l1_abs", 2.0), true);
+        assert!(live.plan(2, &fs).is_all_active());
+        // with the default metric the unfreeze rule never fires: elide
+        let mut diff = StepPlanner::for_run(&m, &grades_cfg("l1_diff", 2.0), true);
+        assert!(diff.plan(2, &fs).omits(0));
+        // and unfreeze disabled entirely: elide
+        let mut off = StepPlanner::for_run(&m, &grades_cfg("l1_abs", 0.0), true);
+        assert!(off.plan(2, &fs).omits(0));
+    }
+
+    #[test]
+    fn lattice_from_manifest_holds_the_two_shipped_variants() {
+        let mut m = fake_manifest(2);
+        m.executables.insert("train_step".into(), "train_step.hlo.txt".into());
+        m.executables
+            .insert("train_step_attn_frozen".into(), "train_step_attn_frozen.hlo.txt".into());
+        m.executables.insert("probe".into(), "probe.hlo.txt".into()); // ignored
+        let lat = VariantLattice::from_manifest(&m).unwrap();
+        assert_eq!(lat.variants.len(), 2);
+        assert_eq!(lat.variants[0].key, "train_step");
+        assert!(lat.variants[0].omit.is_empty());
+        assert_eq!(lat.variants[1].key, "train_step_attn_frozen");
+        assert_eq!(lat.variants[1].omit, m.components_where(|c| c.group == "attention"));
+    }
+
+    #[test]
+    fn lattice_lowering_is_sound_and_maximal() {
+        let m = fake_manifest(2);
+        let attn = m.components_where(|c| c.group == "attention");
+        let lat = VariantLattice::new(vec![
+            VariantDef { key: "train_step".into(), omit: vec![] },
+            VariantDef { key: "train_step_attn_frozen".into(), omit: attn.clone() },
+        ])
+        .unwrap();
+        // plan omits nothing → full graph
+        assert_eq!(lat.lower(&StepPlan::all_active(m.n_components)).key, "train_step");
+        // plan omits attention plus extra mlp components → attn variant
+        let mut omitted = attn.clone();
+        omitted.push(4); // an mlp component
+        let p = StepPlan::omitting(m.n_components, &omitted);
+        let v = lat.lower(&p);
+        assert_eq!(v.key, "train_step_attn_frozen");
+        assert!(v.omit.iter().all(|&c| p.omits(c)), "lowering must be sound");
+        // plan omits a strict subset of attention → must fall back to full
+        let partial = StepPlan::omitting(m.n_components, &attn[..attn.len() - 1]);
+        assert_eq!(lat.lower(&partial).key, "train_step");
+        // exact lookups
+        assert_eq!(lat.exact_index(&StepPlan::omitting(m.n_components, &attn)), Some(1));
+        assert_eq!(lat.exact_index(&StepPlan::all_active(m.n_components)), Some(0));
+        assert_eq!(lat.exact_index(&p), None);
+    }
+
+    #[test]
+    fn lattice_requires_a_full_graph_and_rejects_unknown_keys() {
+        assert!(VariantLattice::new(vec![VariantDef {
+            key: "train_step_attn_frozen".into(),
+            omit: vec![0],
+        }])
+        .is_err());
+        let mut m = fake_manifest(1);
+        m.executables.insert("train_step".into(), "a".into());
+        m.executables.insert("train_step_mystery".into(), "b".into());
+        let err = VariantLattice::from_manifest(&m).unwrap_err().to_string();
+        assert!(err.contains("train_step_mystery"), "{err}");
+        // …unless the manifest declares its omitted set by component name
+        m.variants.insert(
+            "train_step_mystery".into(),
+            vec![m.components[0].name.clone(), m.components[1].name.clone()],
+        );
+        let lat = VariantLattice::from_manifest(&m).unwrap();
+        assert_eq!(lat.variants.len(), 2);
+        assert_eq!(lat.variants[1].omit, vec![0, 1]);
+        // a variants entry whose key names no executable is a typo, not
+        // a silent no-op
+        m.variants.insert("train_step_typo".into(), vec![m.components[0].name.clone()]);
+        let err = VariantLattice::from_manifest(&m).unwrap_err().to_string();
+        assert!(err.contains("train_step_typo"), "{err}");
     }
 }

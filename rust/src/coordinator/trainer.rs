@@ -2,9 +2,17 @@
 //!
 //! One `Trainer::run` drives: batch sampling, ctrl assembly (LR schedule +
 //! freeze mask), the AOT train step, the metrics probe, the GradES monitor,
-//! the classic-ES baseline, the variant scheduler, FLOPs accounting and
+//! the classic-ES baseline, the step planner, FLOPs accounting and
 //! per-step logging. All six paper methods are this one loop with
 //! different `StoppingMethod` (the fp/lora split lives in the artifact).
+//!
+//! Compute elision is plan-driven: each step the [`StepPlanner`] derives
+//! a [`StepPlan`](crate::coordinator::scheduler::StepPlan) (omit every
+//! frozen component's dW work) from the same
+//! freeze state the ctrl mask is built from, the session lowers it to
+//! what the engine can honor (exactly on the host engine; the nearest
+//! sound pre-compiled variant on XLA) and the FLOPs counter prices both
+//! the ideal plan (theoretical) and the lowered one (realized).
 //!
 //! The loop runs on the pipelined runtime (`runtime::pipeline`): batches
 //! come from any [`BatchSource`] (wrap it in a `Prefetcher` to overlap
@@ -33,7 +41,7 @@ use crate::coordinator::freeze::FreezeState;
 use crate::coordinator::grades::GradesMonitor;
 use crate::coordinator::lr::CosineSchedule;
 use crate::coordinator::metrics::MetricsLog;
-use crate::coordinator::scheduler::{Variant, VariantScheduler};
+use crate::coordinator::scheduler::{PlanStats, StepPlanner};
 use crate::runtime::async_eval::{AsyncEvalOptions, AsyncEvalStats, AsyncValidator, EvalSnapshot};
 use crate::runtime::backend::Backend;
 use crate::runtime::pipeline::{
@@ -106,8 +114,12 @@ pub struct TrainOutcome {
     pub freeze: FreezeState,
     /// Mean validation loss of the final parameters (NaN when skipped).
     pub final_val_loss: f64,
-    /// Step the variant scheduler swapped to the attn-frozen graph, if it did.
+    /// First step whose plan omitted every attention component — where
+    /// the XLA lowering reaches the attn-frozen graph (the old variant
+    /// scheduler's swap step, preserved for reports and run manifests).
     pub variant_swap_step: Option<usize>,
+    /// Step-planner counters (elided steps, downgrades, first elision).
+    pub plan: PlanStats,
     /// Runtime breakdown: upload bytes/secs, exec, probe, eval.
     pub timings: StepTimings,
     /// Asynchronous-validation counters (passes issued / completed /
@@ -126,8 +138,16 @@ pub struct TrainerOptions {
     /// Probe cadence before the grace period (monitoring needs every-step
     /// probes only once freezing decisions are live).
     pub probe_every: usize,
-    /// Enable the attn-frozen variant hot swap.
-    pub variant_scheduler: bool,
+    /// Derive freeze-aware step plans (per-matrix dW elision on the host
+    /// engine, variant lowering on XLA). Off ⇒ every step plans
+    /// all-active, reproducing the dense path bitwise.
+    pub elide_frozen: bool,
+    /// Grant plans the backward-sweep truncation capability: once a
+    /// *prefix* of layers is fully frozen the host engine stops the
+    /// sweep below it, holding those layers' norm scales and the
+    /// embeddings (AutoFreeze-style whole-layer rule). Trajectory-
+    /// changing once it engages, so off by default; XLA ignores it.
+    pub truncate_frozen_prefix: bool,
     /// Also run a final validation pass at the end (for reporting).
     pub final_validation: bool,
     /// Pretrained base parameters applied after init (fine-tuning setting).
@@ -150,7 +170,8 @@ impl TrainerOptions {
             total_steps: cfg.run.total_steps,
             seed: cfg.run.seed as i32,
             probe_every: 1,
-            variant_scheduler: method == StoppingMethod::GradEs,
+            elide_frozen: method == StoppingMethod::GradEs,
+            truncate_frozen_prefix: false,
             final_validation: true,
             warm_start: None,
             pipeline: PipelineOptions::default(),
@@ -235,7 +256,24 @@ pub fn run_source_and_keep<'b>(
         _ => ClassicEs::disabled(&cfg.es),
     };
     let mut freeze = FreezeState::new(m.n_components);
-    let mut scheduler = VariantScheduler::new(m, opts.variant_scheduler);
+    // Freeze-aware step planning: omit every frozen component's dW work,
+    // unless dynamic unfreezing needs the frozen components' statistics
+    // kept live (see `StepPlanner::for_run`).
+    let mut planner = StepPlanner::for_run(m, &cfg.grades, opts.elide_frozen);
+    planner.truncate = opts.truncate_frozen_prefix;
+    if opts.truncate_frozen_prefix && !planner.enabled {
+        // the GRADES_JOBS-style rule: never stay silent about an
+        // explicitly requested knob that cannot take effect
+        static WARNED: std::sync::Once = std::sync::Once::new();
+        WARNED.call_once(|| {
+            eprintln!(
+                "[trainer] backward truncation requested but step planning is \
+                 disabled for this run (baseline method, or dynamic unfreezing on \
+                 the l1_abs metric needs frozen components' statistics live); the \
+                 backward sweep stays full"
+            );
+        });
+    }
     // Chunked validation runtime: classic-ES checks pin a snapshot and
     // advance `chunk` eval batches per train step instead of stalling
     // the loop for a full pass. With the default synchronous options
@@ -261,12 +299,16 @@ pub fn run_source_and_keep<'b>(
         ctrl[2] = 1.0;
         ctrl[m.ctrl_mask_offset..m.ctrl_mask_offset + m.n_components]
             .copy_from_slice(freeze.mask());
-        let variant = scheduler.pick(t, &freeze);
+        // The plan is derived from the same freeze state the ctrl mask
+        // above was copied from, so omitted ⊆ frozen holds by
+        // construction for this step's executed graph.
+        let plan = planner.plan(t, &freeze);
+        debug_assert!(plan.is_sound(&freeze));
         let io = match staged.take() {
             Some(io) => io,
             None => session.upload_batch(&source.next_batch())?,
         };
-        session.train_step_uploaded(io, &ctrl, variant == Variant::AttnFrozen)?;
+        let realized = session.train_step_uploaded(io, &ctrl, &plan)?;
         if opts.pipeline.upload_ahead && t < opts.total_steps {
             // PJRT dispatch is asynchronous: step t may still be executing
             // on device while this host→device copy proceeds. If the run
@@ -276,7 +318,7 @@ pub fn run_source_and_keep<'b>(
             session.note_staged_upload();
         }
         steps_run = t;
-        flops.record_step(m, &freeze);
+        flops.record_step(m, &freeze, &realized);
         let in_monitor_window = t > monitor.grace_steps();
         if in_monitor_window || t % opts.probe_every == 0 || t == opts.total_steps {
             let mt = Timer::new();
@@ -354,7 +396,8 @@ pub fn run_source_and_keep<'b>(
             log,
             freeze,
             final_val_loss,
-            variant_swap_step: scheduler.swapped_at,
+            variant_swap_step: planner.stats.attn_swap_step,
+            plan: planner.stats,
             timings,
             async_eval: validator.stats,
         },

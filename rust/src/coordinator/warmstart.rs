@@ -123,7 +123,8 @@ pub fn pretrain_checkpoint_with(
         total_steps: steps,
         seed: cfg.run.seed as i32,
         probe_every: usize::MAX,
-        variant_scheduler: false,
+        elide_frozen: false,
+        truncate_frozen_prefix: false,
         final_validation: false,
         warm_start: None,
         pipeline: PipelineOptions::default(),
@@ -171,7 +172,8 @@ pub fn pretrain_vlm_checkpoint_with(
         total_steps: steps,
         seed: cfg.run.seed as i32,
         probe_every: usize::MAX,
-        variant_scheduler: false,
+        elide_frozen: false,
+        truncate_frozen_prefix: false,
         final_validation: false,
         warm_start: None,
         pipeline: PipelineOptions::default(),

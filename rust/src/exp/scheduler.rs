@@ -182,6 +182,11 @@ pub struct JobSummary {
     pub config: String,
     /// Settings fingerprint the job ran under (see [`job_settings`]).
     pub settings: String,
+    /// Short id of the execution backend the job's config resolved to
+    /// (`"host"`/`"xla"`) — recorded per job so a grid's mixed-backend
+    /// provenance is inspectable from the manifest itself, not just
+    /// implied by the resume fingerprint (ROADMAP PR-4 follow-up).
+    pub backend: String,
     /// `StoppingMethod::label()` string.
     pub method: String,
     /// Steps the run executed.
@@ -198,8 +203,11 @@ pub struct JobSummary {
     pub final_val_loss: f64,
     /// Attn-frozen swap step, if any.
     pub variant_swap_step: Option<usize>,
-    /// Accounted FLOPs actually spent.
+    /// Theoretical frozen-aware FLOPs (ideal per-matrix plan).
     pub flops_spent: f64,
+    /// Engine-realized FLOPs (what the lowered step plans actually
+    /// skipped — ≥ `flops_spent`; see `FlopsCounter`).
+    pub flops_realized: f64,
     /// Dense-equivalent FLOPs of the same steps.
     pub flops_dense: f64,
     /// FLOPs inside validation.
@@ -288,6 +296,7 @@ impl JobSummary {
         r: &JobResult,
         manifest: &Manifest,
         settings: &str,
+        backend: &str,
     ) -> Self {
         let o = &r.outcome;
         let frozen = (0..o.freeze.n()).filter(|&c| o.freeze.is_frozen(c)).collect();
@@ -304,6 +313,7 @@ impl JobSummary {
             id: spec.id.clone(),
             config: r.config.clone(),
             settings: settings.to_string(),
+            backend: backend.to_string(),
             method: r.method.label().to_string(),
             steps_run: o.steps_run,
             stop_cause: stop_cause_str(o.stop_cause).to_string(),
@@ -313,6 +323,7 @@ impl JobSummary {
             final_val_loss: o.final_val_loss,
             variant_swap_step: o.variant_swap_step,
             flops_spent: o.flops.spent,
+            flops_realized: o.flops.realized_spent,
             flops_dense: o.flops.dense_equivalent,
             flops_validation: o.flops.validation,
             flops_steps: o.flops.steps,
@@ -355,6 +366,7 @@ impl JobSummary {
             monitor_secs: self.monitor_secs,
             flops: crate::coordinator::flops::FlopsCounter {
                 spent: self.flops_spent,
+                realized_spent: self.flops_realized,
                 dense_equivalent: self.flops_dense,
                 validation: self.flops_validation,
                 steps: self.flops_steps,
@@ -363,6 +375,13 @@ impl JobSummary {
             freeze,
             final_val_loss: self.final_val_loss,
             variant_swap_step: self.variant_swap_step,
+            // keep the two copies of the swap step consistent on resume
+            // (full PlanStats are not persisted; the rest stays zeroed
+            // like the timings)
+            plan: crate::coordinator::scheduler::PlanStats {
+                attn_swap_step: self.variant_swap_step,
+                ..Default::default()
+            },
             timings: Default::default(),
             async_eval: Default::default(),
         };
@@ -380,6 +399,7 @@ impl JobSummary {
         m.insert("id".to_string(), Json::Str(self.id.clone()));
         m.insert("config".to_string(), Json::Str(self.config.clone()));
         m.insert("settings".to_string(), Json::Str(self.settings.clone()));
+        m.insert("backend".to_string(), Json::Str(self.backend.clone()));
         m.insert("method".to_string(), Json::Str(self.method.clone()));
         m.insert("steps_run".to_string(), Json::Num(self.steps_run as f64));
         m.insert("stop_cause".to_string(), Json::Str(self.stop_cause.clone()));
@@ -391,6 +411,7 @@ impl JobSummary {
             m.insert("variant_swap_step".to_string(), Json::Num(s as f64));
         }
         m.insert("flops_spent".to_string(), num_or_null(self.flops_spent));
+        m.insert("flops_realized".to_string(), num_or_null(self.flops_realized));
         m.insert("flops_dense".to_string(), num_or_null(self.flops_dense));
         m.insert("flops_validation".to_string(), num_or_null(self.flops_validation));
         m.insert("flops_steps".to_string(), Json::Num(self.flops_steps as f64));
@@ -470,6 +491,12 @@ impl JobSummary {
                 Some(v) => v.as_str()?.to_string(),
                 None => "<unrecorded>".to_string(),
             },
+            // pre-plan manifests lack the field; the placeholder keeps
+            // them loadable (their fingerprint decides resumability)
+            backend: match j.opt("backend") {
+                Some(v) => v.as_str()?.to_string(),
+                None => "<unrecorded>".to_string(),
+            },
             method: j.get("method")?.as_str()?.to_string(),
             steps_run: j.get("steps_run")?.as_usize()?,
             stop_cause: j.get("stop_cause")?.as_str()?.to_string(),
@@ -482,6 +509,12 @@ impl JobSummary {
                 None => None,
             },
             flops_spent: f64_or_nan(j.get("flops_spent")?),
+            // pre-plan manifests lack the realized ledger; NaN marks it
+            // unrecorded without blocking the load
+            flops_realized: match j.opt("flops_realized") {
+                Some(v) => f64_or_nan(v),
+                None => f64::NAN,
+            },
             flops_dense: f64_or_nan(j.get("flops_dense")?),
             flops_validation: f64_or_nan(j.get("flops_validation")?),
             flops_steps: j.get("flops_steps")?.as_usize()?,
@@ -1341,6 +1374,7 @@ impl<'a> DeviceRunner<'a> {
                 &result,
                 engine.manifest(),
                 &job_settings(spec, &self.opts.settings_fingerprint(), self.opts.backend),
+                engine.name(),
             )
         });
         Ok(RunnerOutput { result: Some(result), summary, checkpoint: None, eval_payload })
@@ -1395,6 +1429,7 @@ impl<'a> DeviceRunner<'a> {
             freeze: FreezeState::new(0),
             final_val_loss: f64::NAN,
             variant_swap_step: None,
+            plan: Default::default(),
             timings: Default::default(),
             async_eval: Default::default(),
         };
@@ -1432,6 +1467,7 @@ mod tests {
             id: "ablation/x/tau=0.05,alpha=0.3".into(),
             config: "lm-tiny-fp".into(),
             settings: "g|steps=None|probe=None".into(),
+            backend: "host".into(),
             method: "grades".into(),
             steps_run: 120,
             stop_cause: "frozen".into(),
@@ -1441,6 +1477,7 @@ mod tests {
             final_val_loss: 2.75,
             variant_swap_step: Some(80),
             flops_spent: 1.5e9,
+            flops_realized: 1.7e9,
             flops_dense: 2.0e9,
             flops_validation: 1.0e8,
             flops_steps: 120,
@@ -1531,9 +1568,24 @@ mod tests {
         let mut j = s.to_json();
         if let Json::Obj(m) = &mut j {
             m.remove("settings");
+            // pre-plan manifests also lack the backend + realized-FLOPs
+            // fields; both must come back as explicit placeholders
+            m.remove("backend");
+            m.remove("flops_realized");
         }
         let back = JobSummary::from_json(&j).unwrap();
         assert_eq!(back.settings, "<unrecorded>");
+        assert_eq!(back.backend, "<unrecorded>");
+        assert!(back.flops_realized.is_nan());
+    }
+
+    #[test]
+    fn summary_records_the_resolved_backend() {
+        let s = sample_summary();
+        let back = JobSummary::from_json(&json::parse(&json::write(&s.to_json())).unwrap())
+            .unwrap();
+        assert_eq!(back.backend, "host");
+        assert_eq!(back.flops_realized, 1.7e9);
     }
 
     #[test]

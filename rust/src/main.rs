@@ -105,6 +105,11 @@ fn cmd_train(args: &Args) -> Result<()> {
     if args.get("no-pipeline").is_some() {
         topts.pipeline = PipelineOptions::off();
     }
+    // AutoFreeze-style backward truncation below a fully-frozen layer
+    // prefix (host engine; trajectory-changing once it engages).
+    if args.get("truncate-bwd").is_some() {
+        topts.truncate_frozen_prefix = true;
+    }
     // Async chunked validation: --async-eval turns it on; --eval-chunk
     // sets batches per train step (default 1); --staleness bounds how
     // many steps late the stopping decision may land (default: whenever
@@ -180,16 +185,31 @@ fn cmd_train(args: &Args) -> Result<()> {
             tm.snapshots,
         );
     }
+    if o.plan.elided_steps > 0 {
+        println!(
+            "step planner: {} elided step(s) from step {} (max {} components omitted, {} downgrade(s)); {} dW matmuls skipped on the {} engine — flops realized {:.3e} of {:.3e} theoretical savings",
+            o.plan.elided_steps,
+            // guaranteed Some whenever elided_steps > 0
+            o.plan.first_elision_step.unwrap_or(0),
+            o.plan.max_omitted,
+            o.plan.downgrades,
+            tm.dw_elided,
+            backend.name(),
+            o.flops.realized_savings(),
+            o.flops.theoretical_savings(),
+        );
+    }
     if let Some(s) = o.variant_swap_step {
-        println!("variant scheduler: swapped to attn-frozen graph at step {s}");
+        println!("step planner: plan omits all attention from step {s} (XLA attn-frozen graph reachable)");
     }
     for e in &o.freeze.events {
         println!(
-            "  step {:>5}: {} component {} ({}) metric={:.4e}",
+            "  step {:>5}: {} component {} ({}) [{}] metric={:.4e}",
             e.step,
             if e.frozen { "froze " } else { "unfroze" },
             e.component,
             manifest.components[e.component].name,
+            e.reason.label(),
             e.metric_value
         );
     }
@@ -301,12 +321,14 @@ fn main() -> Result<()> {
                 "usage: grades <train|repro|info|list> [flags]\n\
                  \n\
                  grades train --config lm-tiny-fp --method grades [--steps N] [--bench] [--log-dir D] [--save ckpt] [--no-pipeline]\n\
-                 \x20            [--backend auto|host|xla] [--async-eval] [--eval-chunk B] [--staleness K]\n\
+                 \x20            [--backend auto|host|xla] [--async-eval] [--eval-chunk B] [--staleness K] [--truncate-bwd]\n\
                  \x20   --backend B     execution engine: compiled XLA artifacts, the pure-Rust host\n\
                  \x20                   transformer, or auto (host when artifacts are missing; default)\n\
                  \x20   --async-eval    chunk classic-ES validation between train steps instead of blocking\n\
                  \x20   --eval-chunk B  val batches evaluated per train step while a pass is in flight (default 1)\n\
                  \x20   --staleness K   apply a check's stop decision at most K steps late (0 = synchronous)\n\
+                 \x20   --truncate-bwd  stop the host backward sweep below a fully-frozen layer prefix\n\
+                 \x20                   (AutoFreeze-style; holds that prefix's norms + embeddings)\n\
                  grades repro <lm|vlm|ablation|fig1|all> [--quick] [--steps N] [--questions Q] [--out D] [--jobs N] [--fresh] [--backend B]\n\
                  \x20   --jobs N   run experiment jobs on N workers (or GRADES_JOBS=N); 1 = sequential\n\
                  \x20   --fresh    ignore the resumable run manifest under --out and re-run every job\n\

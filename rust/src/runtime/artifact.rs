@@ -23,6 +23,7 @@ use super::backend::{Backend, BackendState, CtrlBuf, UploadedBatch};
 use super::manifest::Manifest;
 use super::session::Batch;
 use super::xerr;
+use crate::coordinator::scheduler::{StepPlan, VariantLattice};
 
 /// Shared PJRT CPU client. Creating a TfrtCpuClient is expensive; share one
 /// per process.
@@ -99,11 +100,15 @@ pub struct Bundle {
     pub client: Client,
     /// Parameter/optimizer-state initializer (seed → state).
     pub init: PjRtLoadedExecutable,
-    /// The full fwd+bwd+update step.
-    pub train_step: PjRtLoadedExecutable,
-    /// Variant with attention dW matmuls removed from the backward graph —
-    /// the scheduler hot-swaps to this once GradES froze all attention.
-    pub train_step_attn_frozen: PjRtLoadedExecutable,
+    /// Train-step graph variants, index-aligned with `lattice.variants`
+    /// (index 0 is always the full fwd+bwd+update graph; the shipped
+    /// artifacts add `train_step_attn_frozen`, whose backward omits all
+    /// attention dW matmuls). A step plan is lowered to the variant with
+    /// the largest omitted set still ⊆ the plan's.
+    pub train_variants: Vec<PjRtLoadedExecutable>,
+    /// The variant lattice (omitted set per train-step executable),
+    /// derived from manifest data.
+    pub lattice: VariantLattice,
     /// Forward-only loss → (loss_sum, count).
     pub eval_step: PjRtLoadedExecutable,
     /// Per-row losses for multiple-choice scoring → f32[2B].
@@ -114,9 +119,10 @@ pub struct Bundle {
     pub compile_secs: f64,
 }
 
-/// The six executables every artifact dir ships.
-const EXE_KEYS: [&str; 6] =
-    ["init", "train_step", "train_step_attn_frozen", "eval_step", "eval_rows", "probe"];
+/// The non-variant executables every artifact dir ships (the train-step
+/// variant family is discovered from the manifest — see
+/// [`VariantLattice::from_manifest`]).
+const FIXED_EXE_KEYS: [&str; 4] = ["init", "eval_step", "eval_rows", "probe"];
 
 impl Bundle {
     /// Load + compile every executable of an artifact dir.
@@ -129,16 +135,20 @@ impl Bundle {
     /// time differs).
     pub fn load_with(client: &Client, dir: &Path, parallel: bool) -> Result<Self> {
         let manifest = Manifest::load(&dir.join("manifest.json"))?;
-        let paths: Vec<PathBuf> = EXE_KEYS
-            .iter()
-            .map(|key| {
-                let fname = manifest
-                    .executables
-                    .get(*key)
-                    .ok_or_else(|| anyhow!("manifest has no executable {key:?}"))?;
-                Ok(dir.join(fname))
-            })
-            .collect::<Result<_>>()?;
+        let lattice = VariantLattice::from_manifest(&manifest)?;
+        let path_of = |key: &str| -> Result<PathBuf> {
+            let fname = manifest
+                .executables
+                .get(key)
+                .ok_or_else(|| anyhow!("manifest has no executable {key:?}"))?;
+            Ok(dir.join(fname))
+        };
+        // fixed programs first, then the variants in lattice order
+        let mut paths: Vec<PathBuf> =
+            FIXED_EXE_KEYS.iter().map(|&k| path_of(k)).collect::<Result<_>>()?;
+        for v in &lattice.variants {
+            paths.push(path_of(&v.key)?);
+        }
         let t = std::time::Instant::now();
         let mut exes = if parallel && paths.len() > 1 {
             compile_parallel(client, &paths)?
@@ -146,17 +156,17 @@ impl Bundle {
             paths.iter().map(|p| client.compile_file(p)).collect::<Result<Vec<_>>>()?
         };
         let compile_secs = t.elapsed().as_secs_f64();
-        // pop in reverse of EXE_KEYS order
+        let train_variants: Vec<PjRtLoadedExecutable> =
+            exes.split_off(FIXED_EXE_KEYS.len());
+        // pop in reverse of FIXED_EXE_KEYS order
         let probe = exes.pop().unwrap();
         let eval_rows = exes.pop().unwrap();
         let eval_step = exes.pop().unwrap();
-        let train_step_attn_frozen = exes.pop().unwrap();
-        let train_step = exes.pop().unwrap();
         let init = exes.pop().unwrap();
         Ok(Bundle {
             init,
-            train_step,
-            train_step_attn_frozen,
+            train_variants,
+            lattice,
             eval_step,
             eval_rows,
             probe,
@@ -307,17 +317,34 @@ impl Backend for Bundle {
         Ok(CtrlBuf::new(ctrl.to_vec(), buf))
     }
 
+    fn lower_plan(&self, plan: &StepPlan) -> StepPlan {
+        // nearest sound variant: largest omitted set ⊆ the plan's
+        let v = self.lattice.lower(plan);
+        StepPlan::omitting(plan.n(), &v.omit)
+    }
+
     fn train_step(
         &self,
         state: &BackendState,
         io: &UploadedBatch,
         ctrl: &CtrlBuf,
-        attn_frozen: bool,
+        plan: &StepPlan,
     ) -> Result<BackendState> {
         let state = state.downcast::<PjRtBuffer>()?;
         let bufs = io.downcast::<Vec<PjRtBuffer>>()?;
         let ctrl_buf = ctrl.downcast::<PjRtBuffer>()?;
-        let exe = if attn_frozen { &self.train_step_attn_frozen } else { &self.train_step };
+        // `plan` must be one of this bundle's variants — Session passes
+        // `lower_plan` output through, so a miss means a caller skipped
+        // lowering (or mixed engines) and would silently get the wrong
+        // graph; refuse instead.
+        let idx = self.lattice.exact_index(plan).ok_or_else(|| {
+            anyhow!(
+                "no compiled train-step variant omits exactly {:?}; lower the plan \
+                 with Backend::lower_plan (Session does this) before executing",
+                plan.omitted()
+            )
+        })?;
+        let exe = &self.train_variants[idx];
         let mut args: Vec<&PjRtBuffer> = vec![state];
         args.extend(bufs.iter());
         args.push(ctrl_buf);

@@ -1,6 +1,9 @@
-//! The execution-backend abstraction: one trait over the six programs
-//! every training run drives (`init`, `train_step`,
-//! `train_step_attn_frozen`, `eval_step`, `eval_rows`, `probe`).
+//! The execution-backend abstraction: one trait over the step programs
+//! every training run drives (`init`, the `train_step` variant family,
+//! `eval_step`, `eval_rows`, `probe`). Train steps are plan-driven: the
+//! trainer derives a freeze-aware
+//! [`StepPlan`](crate::coordinator::scheduler::StepPlan) and each engine
+//! lowers it to what it can execute exactly ([`Backend::lower_plan`]).
 //!
 //! Two implementations exist:
 //!
@@ -38,6 +41,7 @@ use super::host_backend::HostBackend;
 use super::manifest::Manifest;
 use super::session::Batch;
 use crate::config::RepoConfig;
+use crate::coordinator::scheduler::StepPlan;
 
 // ---------------------------------------------------------------------------
 // Erased handles
@@ -149,13 +153,24 @@ pub trait Backend {
     /// Stage one ctrl vector into execution-ready form.
     fn upload_ctrl(&self, ctrl: &[f32]) -> Result<CtrlBuf>;
 
-    /// One optimizer step (`train_step` / `train_step_attn_frozen`).
+    /// Lower a requested [`StepPlan`] to the plan this engine can
+    /// execute *exactly*. Must return a subset of the requested omitted
+    /// set (never elide more than asked — that is the soundness rule).
+    /// The host engine honors any plan (identity); the XLA engine
+    /// returns the nearest sound pre-compiled variant's omitted set.
+    fn lower_plan(&self, plan: &StepPlan) -> StepPlan;
+
+    /// One optimizer step under an **already-lowered** plan (an output
+    /// of [`Backend::lower_plan`] — [`Session`](super::session::Session)
+    /// guarantees this). Engines execute the plan exactly: every omitted
+    /// component's dW matmul, Eq. 1 statistics, prev-grad carry and
+    /// optimizer slot update are skipped.
     fn train_step(
         &self,
         state: &BackendState,
         io: &UploadedBatch,
         ctrl: &CtrlBuf,
-        attn_frozen: bool,
+        plan: &StepPlan,
     ) -> Result<BackendState>;
 
     /// The `probe` program: the metrics prefix the last step wrote.

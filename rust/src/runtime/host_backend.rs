@@ -20,9 +20,33 @@
 //! * The **step semantics** (`steps.py` + `kernels/ref.py`): loss =
 //!   `Σ CE / max(count, 1)`, Eq. 1 per-component `‖∇Wₜ − ∇Wₜ₋₁‖₁` /
 //!   `‖∇Wₜ‖₁` statistics, freeze-masked updates that keep frozen p/m/v
-//!   bit-identical, the prev-grad carry, and the `attn_frozen` variant
-//!   that genuinely skips attention dW work.
+//!   bit-identical, and the prev-grad carry.
 //! * The **ctrl protocol**: `[step, lr, wd_scale, pad, mask…]`.
+//!
+//! # Freeze-aware execution
+//!
+//! Where the XLA engine lowers a
+//! [`StepPlan`](crate::coordinator::scheduler::StepPlan) to the nearest
+//! pre-compiled graph variant, this engine honors the plan **exactly**:
+//! every omitted component skips its dW matmul, its Eq. 1 gdiff/gabs
+//! contribution (the stats report 0, like the compiled attn-frozen
+//! graph does for attention), its prev-grad carry and its optimizer
+//! slot update — bitwise-equivalent to the masked full graph on the
+//! params/opt/prev regions, cheaper by the omitted matmuls. Plans that
+//! additionally carry the **truncation grant**
+//! (`StepPlan::with_truncation`, opt-in via
+//! `TrainerOptions::truncate_frozen_prefix`) stop the backward sweep
+//! below a fully-omitted layer *prefix* (AutoFreeze-style whole-layer
+//! rule): the truncated layers' norm scales and the embeddings receive
+//! no gradient and are held bit-identical for the step — a documented
+//! trajectory-changing choice, which is why it is never granted by
+//! default. An all-active plan reproduces the dense path bitwise.
+//!
+//! The blocked matmuls optionally fan out over `GRADES_HOST_THREADS`
+//! scoped worker threads. Each output element is accumulated by exactly
+//! one worker in the serial order, so results are **bitwise identical
+//! for every thread count** (asserted in tests); unset/1 keeps the
+//! serial loops.
 //!
 //! # Where it may diverge numerically
 //!
@@ -44,6 +68,7 @@ use super::backend::{Backend, BackendState, CtrlBuf, UploadedBatch};
 use super::manifest::{Component, FlopsInfo, Manifest, ParamInfo};
 use super::session::Batch;
 use crate::config::{ModelConfig, RepoConfig, TrainConfig};
+use crate::coordinator::scheduler::StepPlan;
 use crate::util::rng::Rng;
 
 /// `[loss_sum, token_count, global_gnorm, reserved]` (layout.py METRIC_PAD).
@@ -310,6 +335,7 @@ impl HostBackend {
                 head_per_token: head,
             },
             executables: std::collections::BTreeMap::new(),
+            variants: std::collections::BTreeMap::new(),
         };
 
         // spec-index lookups for the hot loops (resolved before the
@@ -473,20 +499,43 @@ impl HostBackend {
         (loss as f32, count, dlogits)
     }
 
-    /// Full backward pass. Returns per-spec gradients of the *mean* loss;
-    /// `attn_frozen` omits the attention dW entries (gradients still flow
-    /// *through* the attention weights, as with `stop_gradient`).
+    /// Full backward pass. Returns per-spec gradients of the *mean* loss.
+    /// The plan's omitted components skip their dW matmul (their entry
+    /// stays `None`; gradients still flow *through* the weights, as with
+    /// `stop_gradient`). When the plan grants truncation, a fully
+    /// omitted layer *prefix* additionally truncates the sweep: its norm
+    /// scales and the embeddings get no gradient (the AutoFreeze-style
+    /// whole-layer rule — see the module docs).
     fn backward(
         &self,
         state: &[f32],
         fwd: &Fwd,
         dlogits: Vec<f32>,
         tokens: &[i32],
-        attn_frozen: bool,
+        plan: &StepPlan,
     ) -> Vec<Option<Vec<f32>>> {
         let Dims { b, t, d, h, hd, f, l, v, s, .. } = self.dims;
         let m = b * t;
         let mut grads: Vec<Option<Vec<f32>>> = (0..self.specs.len()).map(|_| None).collect();
+        let omits =
+            |spec_idx: usize| self.specs[spec_idx].component.map_or(false, |c| plan.omits(c));
+        // Sweep truncation (opt-in capability on the plan): layers
+        // 0..trunc have all seven components omitted, so no *component*
+        // below layer `trunc` needs a gradient and the sweep stops above
+        // them — holding their norm scales and the embeddings for the
+        // step, the documented rider semantics.
+        let trunc = if plan.truncates() {
+            self.layers
+                .iter()
+                .take_while(|lr| {
+                    [lr.wq, lr.wk, lr.wv, lr.wo, lr.wg, lr.wu, lr.wd]
+                        .iter()
+                        .all(|&ix| omits(ix))
+                })
+                .count()
+        } else {
+            0
+        };
 
         // head + final norm
         grads[self.lm_head] = Some(matmul_tn(&fwd.hf, &dlogits, m, d, v));
@@ -495,12 +544,14 @@ impl HostBackend {
             rms_backward(&fwd.xs[l], &fwd.rf, self.param(state, self.ln_f), &dhf, m, d);
         grads[self.ln_f] = Some(g_lnf);
 
-        for li in (0..l).rev() {
+        for li in (trunc..l).rev() {
             let lr = &self.layers[li];
             let lf = &fwd.layers[li];
             // SwiGLU MLP: x_out = x_mid + (silu(h2·Wg) ⊙ (h2·Wu))·Wd
             let d_mlp_out = &dx;
-            grads[lr.wd] = Some(matmul_tn(&lf.act, d_mlp_out, m, f, d));
+            if !omits(lr.wd) {
+                grads[lr.wd] = Some(matmul_tn(&lf.act, d_mlp_out, m, f, d));
+            }
             let d_act = matmul_nt(d_mlp_out, self.param(state, lr.wd), m, d, f);
             let mut d_gp = vec![0f32; m * f];
             let mut d_up = vec![0f32; m * f];
@@ -510,8 +561,12 @@ impl HostBackend {
                 d_up[i] = d_act[i] * z * sg; // silu(z) = z·σ(z)
                 d_gp[i] = d_act[i] * lf.up[i] * sg * (1.0 + z * (1.0 - sg));
             }
-            grads[lr.wg] = Some(matmul_tn(&lf.h2, &d_gp, m, d, f));
-            grads[lr.wu] = Some(matmul_tn(&lf.h2, &d_up, m, d, f));
+            if !omits(lr.wg) {
+                grads[lr.wg] = Some(matmul_tn(&lf.h2, &d_gp, m, d, f));
+            }
+            if !omits(lr.wu) {
+                grads[lr.wu] = Some(matmul_tn(&lf.h2, &d_up, m, d, f));
+            }
             let mut dh2 = matmul_nt(&d_gp, self.param(state, lr.wg), m, f, d);
             let dh2b = matmul_nt(&d_up, self.param(state, lr.wu), m, f, d);
             for i in 0..m * d {
@@ -527,14 +582,18 @@ impl HostBackend {
 
             // attention: x_mid = x_in + (softmax(qkᵀ/√hd)·v)·Wo
             let d_attn_out = &dx_mid;
-            if !attn_frozen {
+            if !omits(lr.wo) {
                 grads[lr.wo] = Some(matmul_tn(&lf.ctx, d_attn_out, m, d, d));
             }
             let dctx = matmul_nt(d_attn_out, self.param(state, lr.wo), m, d, d);
             let (dq, dk, dv) = attention_bwd(&lf.q, &lf.k, &lf.v, &lf.probs, &dctx, b, t, h, hd);
-            if !attn_frozen {
+            if !omits(lr.wq) {
                 grads[lr.wq] = Some(matmul_tn(&lf.h1, &dq, m, d, d));
+            }
+            if !omits(lr.wk) {
                 grads[lr.wk] = Some(matmul_tn(&lf.h1, &dk, m, d, d));
+            }
+            if !omits(lr.wv) {
                 grads[lr.wv] = Some(matmul_tn(&lf.h1, &dv, m, d, d));
             }
             let mut dh1 = matmul_nt(&dq, self.param(state, lr.wq), m, d, d);
@@ -553,22 +612,25 @@ impl HostBackend {
         }
 
         // embeddings (rows past T in pos_emb get zero gradient; the
-        // optimizer still visits them — weight decay applies, as on XLA)
-        let mut g_tok = vec![0f32; self.specs[self.tok_emb].size];
-        let mut g_pos = vec![0f32; self.specs[self.pos_emb].size];
-        debug_assert_eq!(g_pos.len(), s * d);
-        for bi in 0..b {
-            for ti in 0..t {
-                let row = bi * t + ti;
-                let id = tokens[row] as usize;
-                for di in 0..d {
-                    g_tok[id * d + di] += dx[row * d + di];
-                    g_pos[ti * d + di] += dx[row * d + di];
+        // optimizer still visits them — weight decay applies, as on XLA).
+        // A truncated sweep never reaches them: they ride along held.
+        if trunc == 0 {
+            let mut g_tok = vec![0f32; self.specs[self.tok_emb].size];
+            let mut g_pos = vec![0f32; self.specs[self.pos_emb].size];
+            debug_assert_eq!(g_pos.len(), s * d);
+            for bi in 0..b {
+                for ti in 0..t {
+                    let row = bi * t + ti;
+                    let id = tokens[row] as usize;
+                    for di in 0..d {
+                        g_tok[id * d + di] += dx[row * d + di];
+                        g_pos[ti * d + di] += dx[row * d + di];
+                    }
                 }
             }
+            grads[self.tok_emb] = Some(g_tok);
+            grads[self.pos_emb] = Some(g_pos);
         }
-        grads[self.tok_emb] = Some(g_tok);
-        grads[self.pos_emb] = Some(g_pos);
         grads
     }
 }
@@ -604,6 +666,73 @@ struct Fwd {
 // Math helpers (f32 storage, f64 accumulation)
 // ---------------------------------------------------------------------------
 
+/// Worker count for the blocked matmuls: `GRADES_HOST_THREADS`, with the
+/// `GRADES_JOBS`-style warn-once validation. Accepted values: a positive
+/// integer; unset/empty means 1 (serial — the host engine is a
+/// correctness oracle first, and tiny configs lose more to per-call
+/// spawn overhead than they gain). Results are bitwise identical for
+/// every value, so this is purely a wall-clock knob.
+fn host_threads() -> usize {
+    static N: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *N.get_or_init(|| match std::env::var("GRADES_HOST_THREADS") {
+        Err(_) => 1,
+        Ok(v) if v.trim().is_empty() => 1,
+        Ok(v) => match v.trim().parse::<usize>() {
+            Ok(n) if n >= 1 => n,
+            _ => {
+                eprintln!(
+                    "[host] ignoring GRADES_HOST_THREADS={v:?}: expected a positive \
+                     integer worker count; using the serial matmul loops"
+                );
+                1
+            }
+        },
+    })
+}
+
+/// Below this many fused multiply-adds a matmul stays serial even with
+/// threads configured: scoped-thread spawn overhead (~tens of µs) would
+/// eat the win on micro shapes.
+const PAR_MIN_FMAS: usize = 1 << 18;
+
+fn threads_for(work: usize) -> usize {
+    if work < PAR_MIN_FMAS {
+        1
+    } else {
+        host_threads()
+    }
+}
+
+/// Split `out` into contiguous row chunks and run `body(first_row, chunk)`
+/// on up to `threads` scoped workers. Every output element is written by
+/// exactly one worker running the same per-element loop as the serial
+/// path, so results are bitwise identical for every thread count.
+fn par_row_chunks<T: Send, F>(out: &mut [T], row_len: usize, threads: usize, body: F)
+where
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let rows = if row_len == 0 { 0 } else { out.len() / row_len };
+    let t = threads.min(rows).max(1);
+    if t <= 1 {
+        body(0, out);
+        return;
+    }
+    let chunk_rows = (rows + t - 1) / t;
+    std::thread::scope(|s| {
+        let mut rest = out;
+        let mut row0 = 0usize;
+        while !rest.is_empty() {
+            let take = (chunk_rows * row_len).min(rest.len());
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(take);
+            rest = tail;
+            let body = &body;
+            let r0 = row0;
+            s.spawn(move || body(r0, head));
+            row0 += take / row_len;
+        }
+    });
+}
+
 fn sigmoid(z: f32) -> f32 {
     1.0 / (1.0 + (-z).exp())
 }
@@ -624,59 +753,84 @@ fn nll(row: &[f32], target: usize) -> f64 {
 
 /// `out[m,n] = a[m,k] @ b[k,n]`.
 fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    matmul_t(threads_for(m * k * n), a, b, m, k, n)
+}
+
+/// [`matmul`] with an explicit worker count (tests assert bitwise
+/// thread-count invariance through these `_t` entry points).
+fn matmul_t(threads: usize, a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     let mut acc = vec![0f64; m * n];
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let orow = &mut acc[i * n..(i + 1) * n];
-        for (kk, &aik) in arow.iter().enumerate() {
-            if aik == 0.0 {
-                continue;
-            }
-            let brow = &b[kk * n..(kk + 1) * n];
-            let aik = aik as f64;
-            for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
-                *o += aik * bv as f64;
+    par_row_chunks(&mut acc, n, threads, |row0, chunk| {
+        for (il, orow) in chunk.chunks_mut(n).enumerate() {
+            let i = row0 + il;
+            let arow = &a[i * k..(i + 1) * k];
+            for (kk, &aik) in arow.iter().enumerate() {
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &b[kk * n..(kk + 1) * n];
+                let aik = aik as f64;
+                for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                    *o += aik * bv as f64;
+                }
             }
         }
-    }
+    });
     acc.into_iter().map(|x| x as f32).collect()
 }
 
 /// `out[k,n] = aᵀ[k,m] @ b[m,n]` for `a:[m,k]` — weight gradients.
 fn matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    matmul_tn_t(threads_for(m * k * n), a, b, m, k, n)
+}
+
+/// [`matmul_tn`] with an explicit worker count. Workers own output rows
+/// (`kk`); each element still accumulates over `i` in ascending order,
+/// which is the serial loop's per-element order — bitwise identical.
+fn matmul_tn_t(threads: usize, a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     let mut acc = vec![0f64; k * n];
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let brow = &b[i * n..(i + 1) * n];
-        for (kk, &aik) in arow.iter().enumerate() {
-            if aik == 0.0 {
-                continue;
-            }
-            let orow = &mut acc[kk * n..(kk + 1) * n];
-            let aik = aik as f64;
-            for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
-                *o += aik * bv as f64;
+    par_row_chunks(&mut acc, n, threads, |kk0, chunk| {
+        for (kl, orow) in chunk.chunks_mut(n).enumerate() {
+            let kk = kk0 + kl;
+            for i in 0..m {
+                let aik = a[i * k + kk];
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &b[i * n..(i + 1) * n];
+                let aik = aik as f64;
+                for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                    *o += aik * bv as f64;
+                }
             }
         }
-    }
+    });
     acc.into_iter().map(|x| x as f32).collect()
 }
 
 /// `out[m,k] = a[m,n] @ bᵀ[n,k]` for `b:[k,n]` — input gradients.
 fn matmul_nt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    matmul_nt_t(threads_for(m * n * k), a, b, m, n, k)
+}
+
+/// [`matmul_nt`] with an explicit worker count (independent per-element
+/// dot products — trivially bitwise identical for any split).
+fn matmul_nt_t(threads: usize, a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
     let mut out = vec![0f32; m * k];
-    for i in 0..m {
-        let arow = &a[i * n..(i + 1) * n];
-        let orow = &mut out[i * k..(i + 1) * k];
-        for (kk, o) in orow.iter_mut().enumerate() {
-            let brow = &b[kk * n..(kk + 1) * n];
-            let mut acc = 0f64;
-            for (&av, &bv) in arow.iter().zip(brow.iter()) {
-                acc += av as f64 * bv as f64;
+    par_row_chunks(&mut out, k, threads, |row0, chunk| {
+        for (il, orow) in chunk.chunks_mut(k).enumerate() {
+            let i = row0 + il;
+            let arow = &a[i * n..(i + 1) * n];
+            for (kk, o) in orow.iter_mut().enumerate() {
+                let brow = &b[kk * n..(kk + 1) * n];
+                let mut acc = 0f64;
+                for (&av, &bv) in arow.iter().zip(brow.iter()) {
+                    acc += av as f64 * bv as f64;
+                }
+                *o = acc as f32;
             }
-            *o = acc as f32;
         }
-    }
+    });
     out
 }
 
@@ -925,18 +1079,28 @@ impl Backend for HostBackend {
         Ok(CtrlBuf::new(ctrl.to_vec(), ()))
     }
 
+    fn lower_plan(&self, plan: &StepPlan) -> StepPlan {
+        // the host engine executes any sound plan exactly
+        plan.clone()
+    }
+
     fn train_step(
         &self,
         state: &BackendState,
         io: &UploadedBatch,
         ctrl: &CtrlBuf,
-        attn_frozen: bool,
+        plan: &StepPlan,
     ) -> Result<BackendState> {
         let s = state.downcast::<Vec<f32>>()?;
         let batch = io.downcast::<Batch>()?;
         let c = &ctrl.host;
         let m = &self.manifest;
         let n_c = m.n_components;
+        ensure!(
+            plan.n() == n_c,
+            "step plan covers {} components, layout has {n_c}",
+            plan.n()
+        );
         let t_step = c[0];
         let lr = c[1];
         let wd = self.weight_decay * c[2];
@@ -944,7 +1108,10 @@ impl Backend for HostBackend {
 
         let fwd = self.forward(s, &batch.tokens);
         let (loss_sum, count, dlogits) = self.loss_grad(&fwd.logits, &batch.targets);
-        let grads = self.backward(s, &fwd, dlogits, &batch.tokens, attn_frozen);
+        // Omitted components come back as `None` gradients, so the
+        // stats/carry/update loop below skips them wholesale — their
+        // state bits stay identical, exactly like the masked update.
+        let grads = self.backward(s, &fwd, dlogits, &batch.tokens, plan);
 
         let mut ns = s.clone();
         let mut gdiff = vec![0f32; n_c];
@@ -1080,11 +1247,15 @@ mod tests {
 
     /// A micro config small enough for finite-difference gradchecks.
     fn micro(optimizer: &str) -> HostBackend {
+        micro_layers(optimizer, 1)
+    }
+
+    fn micro_layers(optimizer: &str, n_layers: usize) -> HostBackend {
         let model = ModelConfig {
             kind: "lm".into(),
             vocab_size: 16,
             d_model: 8,
-            n_layers: 1,
+            n_layers,
             n_heads: 2,
             d_ff: 12,
             max_seq: 6,
@@ -1101,6 +1272,15 @@ mod tests {
             momentum: 0.9,
         };
         HostBackend::from_parts("lm-micro", &model, &train).unwrap()
+    }
+
+    fn all_active(be: &HostBackend) -> StepPlan {
+        StepPlan::all_active(be.manifest().n_components)
+    }
+
+    fn attn_plan(be: &HostBackend) -> StepPlan {
+        let m = be.manifest();
+        StepPlan::omitting(m.n_components, &m.components_where(|c| c.group == "attention"))
     }
 
     fn micro_batch(be: &HostBackend, seed: u64) -> Batch {
@@ -1195,7 +1375,7 @@ mod tests {
         };
         let fwd = be.forward(&state, &batch.tokens);
         let (_, _, dlogits) = be.loss_grad(&fwd.logits, &batch.targets);
-        let grads = be.backward(&state, &fwd, dlogits, &batch.tokens, false);
+        let grads = be.backward(&state, &fwd, dlogits, &batch.tokens, &all_active(&be));
         let mut rng = Rng::new(5);
         let mut checked = 0usize;
         for (idx, spec) in be.specs.iter().enumerate() {
@@ -1238,7 +1418,7 @@ mod tests {
         let mut last = f32::NAN;
         for t in 1..=30 {
             let ctrl = be.upload_ctrl(&full_ctrl(m, t as f32, 1e-2)).unwrap();
-            state = be.train_step(&state, &io, &ctrl, false).unwrap();
+            state = be.train_step(&state, &io, &ctrl, &all_active(&be)).unwrap();
             let metrics = be.probe(&state).unwrap();
             let loss = metrics[0] / metrics[1].max(1.0);
             assert!(loss.is_finite());
@@ -1263,7 +1443,7 @@ mod tests {
         let mut ctrl = full_ctrl(m, 1.0, 1e-3);
         ctrl[m.ctrl_mask_offset] = 0.0; // freeze component 0 (layer-0 q)
         let ctrl = be.upload_ctrl(&ctrl).unwrap();
-        let s1 = be.train_step(&s0, &io, &ctrl, false).unwrap();
+        let s1 = be.train_step(&s0, &io, &ctrl, &all_active(&be)).unwrap();
         let after = be.state_to_host(&s1).unwrap();
         let frozen = &be.specs[be.layers[0].wq];
         assert_eq!(
@@ -1287,9 +1467,9 @@ mod tests {
     }
 
     #[test]
-    fn attn_frozen_variant_equals_masked_full_graph_bitwise() {
+    fn attn_plan_equals_masked_full_graph_bitwise() {
         // Stronger than the XLA integration test (which tolerates graph
-        // fusion drift): the host variant skips exactly the attention dW
+        // fusion drift): the planned step skips exactly the omitted dW
         // math and nothing else, so states past the metrics prefix match
         // bit-for-bit.
         let be = micro("adamw");
@@ -1305,19 +1485,214 @@ mod tests {
             }
         }
         let a = be
-            .train_step(&s0, &io, &be.upload_ctrl(&masked).unwrap(), false)
+            .train_step(&s0, &io, &be.upload_ctrl(&masked).unwrap(), &all_active(&be))
             .unwrap();
         let b = be
-            .train_step(&s0, &io, &be.upload_ctrl(&full_ctrl(m, 1.0, 1e-3)).unwrap(), true)
+            .train_step(
+                &s0,
+                &io,
+                &be.upload_ctrl(&full_ctrl(m, 1.0, 1e-3)).unwrap(),
+                &attn_plan(&be),
+            )
             .unwrap();
         let ha = be.state_to_host(&a).unwrap();
         let hb = be.state_to_host(&b).unwrap();
         assert_eq!(ha[m.metrics_len..], hb[m.metrics_len..]);
-        // the variant reports attention stats as zero, the masked graph
+        // the plan reports omitted stats as zero, the masked graph
         // still measures them
         let attn0 = m.gdiff_offset; // component 0 is attention
         assert!(ha[attn0] > 0.0);
         assert_eq!(hb[attn0], 0.0);
+    }
+
+    #[test]
+    fn per_matrix_plan_equals_masked_full_graph_bitwise() {
+        // The generalized elision: omit an arbitrary mix of components
+        // (one attention, one mlp) — params/opt/prev must match the
+        // masked dense step bit-for-bit, only the omitted components'
+        // logged statistics differ.
+        let be = micro("adamw");
+        let m = be.manifest();
+        let batch = micro_batch(&be, 17);
+        let io = be.upload_batch(&batch).unwrap();
+        let s0 = be.init_state(23).unwrap();
+        let omitted = [1usize, 5]; // layer-0 k (attention) + layer-0 up (mlp)
+        let mut masked = full_ctrl(m, 1.0, 1e-3);
+        for &c in &omitted {
+            masked[m.ctrl_mask_offset + c] = 0.0;
+        }
+        let a = be
+            .train_step(&s0, &io, &be.upload_ctrl(&masked).unwrap(), &all_active(&be))
+            .unwrap();
+        let b = be
+            .train_step(
+                &s0,
+                &io,
+                &be.upload_ctrl(&masked).unwrap(),
+                &StepPlan::omitting(m.n_components, &omitted),
+            )
+            .unwrap();
+        let ha = be.state_to_host(&a).unwrap();
+        let hb = be.state_to_host(&b).unwrap();
+        assert_eq!(ha[m.metrics_len..], hb[m.metrics_len..]);
+        for &c in &omitted {
+            assert!(ha[m.gdiff_offset + c] > 0.0);
+            assert_eq!(hb[m.gdiff_offset + c], 0.0);
+            assert_eq!(hb[m.gabs_offset + c], 0.0);
+        }
+        // a kept component's stats are identical in both runs
+        assert_eq!(ha[m.gdiff_offset].to_bits(), hb[m.gdiff_offset].to_bits());
+    }
+
+    #[test]
+    fn fully_omitted_layer_prefix_truncates_backward_and_holds_riders() {
+        let be = micro_layers("adamw", 2);
+        let m = be.manifest();
+        assert_eq!(m.n_components, 14);
+        let batch = micro_batch(&be, 31);
+        let io = be.upload_batch(&batch).unwrap();
+        let s0 = be.init_state(5).unwrap();
+        let before = be.state_to_host(&s0).unwrap();
+        // freeze + omit all of layer 0 (components 0..7); layer 1 active
+        let mut ctrl = full_ctrl(m, 1.0, 1e-3);
+        for c in 0..7 {
+            ctrl[m.ctrl_mask_offset + c] = 0.0;
+        }
+        let prefix: Vec<usize> = (0..7).collect();
+        // without the truncation grant the same omitted set must stay
+        // bitwise-equal to the masked dense step (riders keep moving)
+        let ungranted = be
+            .train_step(
+                &s0,
+                &io,
+                &be.upload_ctrl(&ctrl).unwrap(),
+                &StepPlan::omitting(m.n_components, &prefix),
+            )
+            .unwrap();
+        let plan = StepPlan::omitting(m.n_components, &prefix).with_truncation();
+        let planned = be
+            .train_step(&s0, &io, &be.upload_ctrl(&ctrl).unwrap(), &plan)
+            .unwrap();
+        let masked = be
+            .train_step(&s0, &io, &be.upload_ctrl(&ctrl).unwrap(), &all_active(&be))
+            .unwrap();
+        let hp = be.state_to_host(&planned).unwrap();
+        let hm = be.state_to_host(&masked).unwrap();
+        let hu = be.state_to_host(&ungranted).unwrap();
+        assert_eq!(hu[m.metrics_len..], hm[m.metrics_len..], "ungranted plan must not truncate");
+        // riders of the truncated prefix are held bit-identical…
+        for name in ["tok_emb", "pos_emb", "lang.0.ln1", "lang.0.ln2"] {
+            let p = m.param(name).unwrap();
+            assert_eq!(
+                before[p.offset..p.offset + p.size()],
+                hp[p.offset..p.offset + p.size()],
+                "truncated rider {name} moved"
+            );
+            // …which is the documented divergence from the masked path
+            // (there, weight decay still moves them)
+            assert_ne!(
+                hm[p.offset..p.offset + p.size()],
+                hp[p.offset..p.offset + p.size()],
+                "masked path should have updated rider {name}"
+            );
+        }
+        // everything at or above the lowest active layer is bitwise
+        // identical to the masked dense step
+        for name in ["lang.1.ln1", "lang.1.attn.q", "lang.1.mlp.down", "ln_f", "lm_head"] {
+            let p = m.param(name).unwrap();
+            assert_eq!(
+                hm[p.offset..p.offset + p.size()],
+                hp[p.offset..p.offset + p.size()],
+                "active-region tensor {name} diverged"
+            );
+        }
+        // a *non-prefix* fully-frozen layer must not truncate: omit all
+        // of layer 1 instead, and layer-0 riders plus embeddings move
+        let plan_top =
+            StepPlan::omitting(m.n_components, &(7..14).collect::<Vec<_>>()).with_truncation();
+        let top = be
+            .train_step(
+                &s0,
+                &io,
+                &be.upload_ctrl(&full_ctrl(m, 1.0, 1e-3)).unwrap(),
+                &plan_top,
+            )
+            .unwrap();
+        let ht = be.state_to_host(&top).unwrap();
+        for name in ["tok_emb", "lang.0.ln1", "lang.1.ln2"] {
+            let p = m.param(name).unwrap();
+            assert_ne!(
+                before[p.offset..p.offset + p.size()],
+                ht[p.offset..p.offset + p.size()],
+                "non-prefix omission must not hold {name}"
+            );
+        }
+    }
+
+    #[test]
+    fn unfreeze_downgrades_the_plan_and_resumes_updates() {
+        // The dynamic-unfreezing regression: a component that froze (and
+        // was elided) then unfroze must re-enter the plan and move again
+        // — and the whole planned trajectory must match the masked dense
+        // path bit-for-bit on the state.
+        use crate::coordinator::freeze::{FreezeReason, FreezeState};
+        use crate::coordinator::scheduler::StepPlanner;
+        let be = micro("adamw");
+        let m = be.manifest();
+        let batch = micro_batch(&be, 41);
+        let io = be.upload_batch(&batch).unwrap();
+        let mut planner = StepPlanner::new(m, true);
+        let mut freeze = FreezeState::new(m.n_components);
+
+        let mut planned = be.init_state(3).unwrap();
+        let mut dense = be.init_state(3).unwrap();
+        let comp = 2usize;
+        for t in 1..=6 {
+            match t {
+                2 => freeze.freeze(comp, t, FreezeReason::Manual, 0.0),
+                4 => freeze.unfreeze(comp, t, FreezeReason::Manual, 1.0),
+                _ => {}
+            }
+            let mut ctrl = full_ctrl(m, t as f32, 1e-3);
+            ctrl[m.ctrl_mask_offset..m.ctrl_mask_offset + m.n_components]
+                .copy_from_slice(freeze.mask());
+            let ctrl = be.upload_ctrl(&ctrl).unwrap();
+            let plan = planner.plan(t, &freeze);
+            assert!(plan.is_sound(&freeze));
+            assert_eq!(plan.omits(comp), freeze.is_frozen(comp), "plan lags freeze at t={t}");
+            let before = be.state_to_host(&planned).unwrap();
+            planned = be.train_step(&planned, &io, &ctrl, &plan).unwrap();
+            dense = be.train_step(&dense, &io, &ctrl, &all_active(&be)).unwrap();
+            let after = be.state_to_host(&planned).unwrap();
+            let p = m.param(&m.components[comp].tensors[0]).unwrap();
+            let moved = before[p.offset..p.offset + p.size()]
+                != after[p.offset..p.offset + p.size()];
+            assert_eq!(moved, !freeze.is_frozen(comp), "component motion wrong at t={t}");
+        }
+        assert_eq!(planner.stats.downgrades, 1);
+        let hp = be.state_to_host(&planned).unwrap();
+        let hd = be.state_to_host(&dense).unwrap();
+        assert_eq!(hp[m.metrics_len..], hd[m.metrics_len..], "planned != masked trajectory");
+    }
+
+    #[test]
+    fn matmuls_are_bitwise_identical_across_thread_counts() {
+        let mut rng = Rng::new(77);
+        let (m, k, n) = (13usize, 9usize, 11usize);
+        // sized for the largest view any of the three ops takes
+        let a: Vec<f32> = (0..m * n.max(k)).map(|_| rng.gauss() as f32).collect();
+        let b: Vec<f32> = (0..m.max(k) * n.max(k)).map(|_| rng.gauss() as f32).collect();
+        for threads in [2, 3, 8] {
+            let s = matmul_t(1, &a, &b, m, k, n);
+            let p = matmul_t(threads, &a, &b, m, k, n);
+            assert!(s.iter().zip(&p).all(|(x, y)| x.to_bits() == y.to_bits()));
+            let s = matmul_tn_t(1, &a, &b, m, k, n);
+            let p = matmul_tn_t(threads, &a, &b, m, k, n);
+            assert!(s.iter().zip(&p).all(|(x, y)| x.to_bits() == y.to_bits()));
+            let s = matmul_nt_t(1, &a, &b, m, n, k);
+            let p = matmul_nt_t(threads, &a, &b, m, n, k);
+            assert!(s.iter().zip(&p).all(|(x, y)| x.to_bits() == y.to_bits()));
+        }
     }
 
     #[test]
@@ -1329,7 +1704,7 @@ mod tests {
         let s0 = be.init_state(2).unwrap();
         let before = be.state_to_host(&s0).unwrap();
         let ctrl = be.upload_ctrl(&full_ctrl(m, 1.0, 1e-2)).unwrap();
-        let s1 = be.train_step(&s0, &io, &ctrl, false).unwrap();
+        let s1 = be.train_step(&s0, &io, &ctrl, &all_active(&be)).unwrap();
         let after = be.state_to_host(&s1).unwrap();
         let wq = &be.specs[be.layers[0].wq];
         assert_ne!(before[wq.offset..wq.offset + wq.size], after[wq.offset..wq.offset + wq.size]);
@@ -1348,7 +1723,7 @@ mod tests {
         let s0 = be.init_state(21).unwrap();
         let (eval_loss, eval_count) = be.eval_step(&s0, &io).unwrap();
         let ctrl = be.upload_ctrl(&full_ctrl(m, 1.0, 1e-3)).unwrap();
-        let s1 = be.train_step(&s0, &io, &ctrl, false).unwrap();
+        let s1 = be.train_step(&s0, &io, &ctrl, &all_active(&be)).unwrap();
         let metrics = be.probe(&s1).unwrap();
         assert_eq!(metrics[0].to_bits(), (eval_loss as f32).to_bits());
         assert_eq!(metrics[1], eval_count as f32);

@@ -116,6 +116,12 @@ pub struct Manifest {
     pub flops: FlopsInfo,
     /// Executable key → HLO file name.
     pub executables: BTreeMap<String, String>,
+    /// Optional train-step variant declarations: executable key → the
+    /// component *names* whose dW matmuls that graph omits. The two
+    /// shipped keys (`train_step`, `train_step_attn_frozen`) have
+    /// built-in definitions; any other `train_step*` executable must be
+    /// declared here (see `coordinator::scheduler::VariantLattice`).
+    pub variants: BTreeMap<String, Vec<String>>,
 }
 
 impl Manifest {
@@ -224,6 +230,21 @@ impl Manifest {
                     .map(|(k, v)| Ok((k.clone(), v.as_str()?.to_string())))
                     .collect::<Result<_>>()?,
                 _ => bail!("executables not an object"),
+            },
+            variants: match j.opt("variants") {
+                None => BTreeMap::new(),
+                Some(Json::Obj(m)) => m
+                    .iter()
+                    .map(|(k, v)| {
+                        let names = v
+                            .as_arr()?
+                            .iter()
+                            .map(|n| Ok(n.as_str()?.to_string()))
+                            .collect::<Result<Vec<_>>>()?;
+                        Ok((k.clone(), names))
+                    })
+                    .collect::<Result<_>>()?,
+                Some(_) => bail!("variants not an object"),
             },
         })
     }

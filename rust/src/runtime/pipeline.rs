@@ -202,6 +202,10 @@ pub struct StepTimings {
     pub exec_secs: f64,
     /// Train-step executions.
     pub execs: usize,
+    /// Component dW matmuls the executed (engine-lowered) step plans
+    /// omitted, summed over steps — the *realized* side of the
+    /// freeze-savings accounting (`FlopsCounter` prices it in FLOPs).
+    pub dw_elided: usize,
     /// Metrics-probe seconds (device round trip for the GradES monitor).
     pub probe_secs: f64,
     /// Probe executions.
@@ -223,6 +227,7 @@ impl StepTimings {
         self.snapshots += o.snapshots;
         self.exec_secs += o.exec_secs;
         self.execs += o.execs;
+        self.dw_elided += o.dw_elided;
         self.probe_secs += o.probe_secs;
         self.probes += o.probes;
         self.eval_secs += o.eval_secs;
@@ -246,6 +251,7 @@ impl StepTimings {
         m.insert("snapshots".into(), Json::Num(self.snapshots as f64));
         m.insert("exec_secs".into(), Json::Num(self.exec_secs));
         m.insert("execs".into(), Json::Num(self.execs as f64));
+        m.insert("dw_elided".into(), Json::Num(self.dw_elided as f64));
         m.insert("probe_secs".into(), Json::Num(self.probe_secs));
         m.insert("probes".into(), Json::Num(self.probes as f64));
         m.insert("eval_secs".into(), Json::Num(self.eval_secs));

@@ -43,6 +43,7 @@ use anyhow::{ensure, Context, Result};
 use super::backend::{Backend, BackendState, CtrlBuf};
 use super::async_eval::EvalSnapshot;
 use super::pipeline::{DeviceBatchCache, StepTimings};
+use crate::coordinator::scheduler::StepPlan;
 use crate::util::timer::Timer;
 
 pub use super::backend::UploadedBatch;
@@ -167,22 +168,47 @@ impl<'b> Session<'b> {
     }
 
     /// One optimizer step. `ctrl` is the full control vector (step, lr,
-    /// wd_scale, mask…); `attn_frozen` selects the reduced-backward variant.
-    pub fn train_step(&mut self, batch: &Batch, ctrl: &[f32], attn_frozen: bool) -> Result<()> {
+    /// wd_scale, mask…); `plan` names the component dW matmuls to omit
+    /// (`StepPlan::all_active` reproduces the dense graph bitwise).
+    /// Returns the plan the backend actually executed after lowering —
+    /// identical to `plan` on the host engine, the nearest sound
+    /// pre-compiled variant on XLA.
+    pub fn train_step(
+        &mut self,
+        batch: &Batch,
+        ctrl: &[f32],
+        plan: &StepPlan,
+    ) -> Result<StepPlan> {
         let io = self.upload_batch(batch)?;
-        self.train_step_uploaded(io, ctrl, attn_frozen)
+        self.train_step_uploaded(io, ctrl, plan)
     }
 
     /// One optimizer step over already-staged buffers (the pipelined
     /// path: the upload happened while the previous step executed).
+    /// Returns the realized (engine-lowered) plan — see
+    /// [`Session::train_step`].
     pub fn train_step_uploaded(
         &mut self,
         io: UploadedBatch,
         ctrl: &[f32],
-        attn_frozen: bool,
-    ) -> Result<()> {
+        plan: &StepPlan,
+    ) -> Result<StepPlan> {
         let m = self.backend.manifest();
         ensure!(ctrl.len() == m.ctrl_len, "ctrl len {} != {}", ctrl.len(), m.ctrl_len);
+        ensure!(
+            plan.n() == m.n_components,
+            "step plan covers {} components, manifest has {}",
+            plan.n(),
+            m.n_components
+        );
+        // Per-engine lowering. The subset check is the soundness rule:
+        // an engine may realize *less* elision than asked, never more.
+        let realized = self.backend.lower_plan(plan);
+        ensure!(
+            realized.is_subset_of(plan),
+            "backend {} lowered a plan omitting components the request kept active",
+            self.backend.name()
+        );
         let state = self.state.as_ref().context("session not initialized")?;
         // Persistent ctrl buffer: reuse the backend copy when this step's
         // ctrl is equivalent to it. AdamW graphs read ctrl[0] for bias
@@ -207,16 +233,17 @@ impl<'b> Session<'b> {
         }
         let ctrl_buf = cache.as_ref().expect("ctrl cache populated above");
         let et = Timer::new();
-        let next = self.backend.train_step(state, &io, ctrl_buf, attn_frozen)?;
+        let next = self.backend.train_step(state, &io, ctrl_buf, &realized)?;
         {
             let mut tm = self.timings.borrow_mut();
             tm.exec_secs += et.secs();
             tm.execs += 1;
+            tm.dw_elided += realized.n_omitted();
         }
         drop(cache);
         self.state = Some(next);
         self.step += 1;
-        Ok(())
+        Ok(realized)
     }
 
     /// Read the metrics prefix the last train step wrote into the state.

@@ -21,6 +21,7 @@
 use std::sync::Arc;
 
 use grades::config::RepoConfig;
+use grades::coordinator::scheduler::StepPlan;
 use grades::coordinator::trainer::{self, StoppingMethod, TrainOutcome, TrainerOptions};
 use grades::coordinator::warmstart::BaseCheckpoint;
 use grades::data;
@@ -137,8 +138,9 @@ fn single_step_state_updates_agree_elementwise() {
     for c in ctrl.iter_mut().skip(m.ctrl_mask_offset) {
         *c = 1.0;
     }
-    xs.train_step(&batch, &ctrl, false).unwrap();
-    hs.train_step(&batch, &ctrl, false).unwrap();
+    let full = StepPlan::all_active(m.n_components);
+    xs.train_step(&batch, &ctrl, &full).unwrap();
+    hs.train_step(&batch, &ctrl, &full).unwrap();
     let sx = xs.state_to_host().unwrap();
     let sh = hs.state_to_host().unwrap();
 

@@ -18,6 +18,7 @@
 //! host_backend golden` after an *intentional* trajectory change.
 
 use grades::config::RepoConfig;
+use grades::coordinator::scheduler::StepPlan;
 use grades::coordinator::trainer::{self, StopCause, StoppingMethod, TrainerOptions};
 use grades::coordinator::warmstart::BaseCheckpoint;
 use grades::data;
@@ -31,6 +32,10 @@ use grades::runtime::session::Session;
 fn backend(config: &str) -> HostBackend {
     let cfg = RepoConfig::by_name(config).expect("config");
     HostBackend::for_config(&cfg).expect("host backend")
+}
+
+fn full_plan(b: &dyn Backend) -> StepPlan {
+    StepPlan::all_active(b.manifest().n_components)
 }
 
 fn default_ctrl(b: &dyn Backend, t: f32, lr: f32) -> Vec<f32> {
@@ -68,7 +73,7 @@ fn train_step_reduces_loss_on_repeated_batch() {
     let mut first = f32::NAN;
     let mut last = f32::NAN;
     for t in 1..=10 {
-        s.train_step(&batch, &default_ctrl(&b, t as f32, 3e-3), false).unwrap();
+        s.train_step(&batch, &default_ctrl(&b, t as f32, 3e-3), &full_plan(&b)).unwrap();
         let m = s.probe().unwrap();
         let loss = m[0] / m[1].max(1.0);
         if t == 1 {
@@ -91,7 +96,7 @@ fn freeze_mask_freezes_component_params() {
     let before = s.state_to_host().unwrap();
     let mut ctrl = default_ctrl(&b, 1.0, 1e-3);
     ctrl[m.ctrl_mask_offset] = 0.0; // freeze component 0
-    s.train_step(&batch, &ctrl, false).unwrap();
+    s.train_step(&batch, &ctrl, &full_plan(&b)).unwrap();
     let after = s.state_to_host().unwrap();
     let comp = &m.components[0];
     for tname in &comp.tensors {
@@ -116,7 +121,7 @@ fn checkpoint_roundtrip_preserves_state() {
     s.init(9).unwrap();
     for t in 1..=3 {
         let batch = ds.train.next_batch();
-        s.train_step(&batch, &default_ctrl(&b, t as f32, 1e-3), false).unwrap();
+        s.train_step(&batch, &default_ctrl(&b, t as f32, 1e-3), &full_plan(&b)).unwrap();
     }
     let host = s.state_to_host().unwrap();
     let path = std::env::temp_dir().join("grades_host_ckpt.bin");
@@ -271,7 +276,7 @@ fn snapshot_eval_matches_current_state_eval() {
     s.init(9).unwrap();
     for t in 1..=3 {
         let batch = ds.train.next_batch();
-        s.train_step(&batch, &default_ctrl(&b, t as f32, 1e-3), false).unwrap();
+        s.train_step(&batch, &default_ctrl(&b, t as f32, 1e-3), &full_plan(&b)).unwrap();
     }
     let val: Vec<_> = ds.val.iter().take(2).cloned().collect();
     let cache = DeviceBatchCache::upload(&s, &val).unwrap();
@@ -288,7 +293,7 @@ fn snapshot_eval_matches_current_state_eval() {
     // advance training; the pinned snapshot must not move
     for t in 4..=5 {
         let batch = ds.train.next_batch();
-        s.train_step(&batch, &default_ctrl(&b, t as f32, 1e-3), false).unwrap();
+        s.train_step(&batch, &default_ctrl(&b, t as f32, 1e-3), &full_plan(&b)).unwrap();
     }
     let io = s.upload_batch(&val[0]).unwrap();
     let (l_snap, _) = s.eval_batch_snapshot(&snap, &io).unwrap();
@@ -350,6 +355,98 @@ fn runs_are_reproducible() {
         o.log.final_train_loss().to_bits()
     };
     assert_eq!(go(), go());
+}
+
+#[test]
+fn planned_and_unplanned_grades_trajectories_agree() {
+    // The freeze-aware planning gate, host side: per-matrix dW elision
+    // must not change anything the trajectory can see — losses, freeze
+    // events, step counts, final validation — because a sound plan only
+    // skips work whose masked result is a bit-exact no-op. (Omitted
+    // components' *logged* gdiff/gabs legitimately differ: the planned
+    // run reports 0 where the dense run still measures them.)
+    let b = backend("lm-tiny-fp");
+    let mut cfg = RepoConfig::by_name("lm-tiny-fp").unwrap();
+    // staggered freezing: generous-but-finite τ after a short grace
+    cfg.grades.alpha = 0.25;
+    cfg.grades.tau = 0.05;
+    let run_with = |elide: bool| {
+        let mut ds = data::build_lm(&cfg, b.manifest()).unwrap();
+        let val: Vec<_> = ds.val.iter().take(2).cloned().collect();
+        let mut opts = TrainerOptions::from_config(&cfg, StoppingMethod::GradEs);
+        opts.total_steps = 14;
+        opts.probe_every = 1;
+        opts.elide_frozen = elide;
+        trainer::run(&b, &cfg, &opts, || ds.train.next_batch(), &val).unwrap()
+    };
+    let dense = run_with(false);
+    let planned = run_with(true);
+    assert_eq!(dense.steps_run, planned.steps_run);
+    assert_eq!(dense.stop_cause, planned.stop_cause);
+    assert_eq!(dense.final_val_loss.to_bits(), planned.final_val_loss.to_bits());
+    for (a, c) in dense.log.records.iter().zip(&planned.log.records) {
+        assert_eq!(a.step, c.step);
+        assert_eq!(a.loss.to_bits(), c.loss.to_bits(), "loss diverged at step {}", a.step);
+    }
+    assert_eq!(dense.freeze.events.len(), planned.freeze.events.len());
+    for (e1, e2) in dense.freeze.events.iter().zip(&planned.freeze.events) {
+        assert_eq!((e1.step, e1.component, e1.frozen), (e2.step, e2.component, e2.frozen));
+    }
+    // the dense run planned nothing; the planned run elided something
+    // once components froze, and accounting noticed on both ledgers
+    assert_eq!(dense.plan.elided_steps, 0);
+    assert_eq!(dense.timings.dw_elided, 0);
+    if planned.freeze.n_frozen() > 0 && planned.freeze.events[0].step < planned.steps_run {
+        assert!(planned.plan.elided_steps > 0, "froze components but never elided");
+        assert!(planned.timings.dw_elided > 0);
+        assert!(
+            planned.flops.realized_spent < planned.flops.dense_equivalent,
+            "realized ledger shows no savings"
+        );
+        // host lowering is exact: both ledgers agree
+        assert_eq!(
+            planned.flops.spent.to_bits(),
+            planned.flops.realized_spent.to_bits(),
+            "host engine must realize the full plan"
+        );
+    }
+    // the dense run realizes nothing: its realized ledger prices every
+    // step dense while the theoretical one still credits frozen dW
+    if dense.freeze.n_frozen() > 0 && dense.freeze.events[0].step < dense.steps_run {
+        assert!(dense.flops.realized_spent > dense.flops.spent);
+    }
+}
+
+#[test]
+fn all_active_plan_is_bitwise_identical_to_planner_off() {
+    // A GradES run where τ=0 never freezes anything: every derived plan
+    // is all-active, and the planned path must be bitwise identical to
+    // the planner-off (pre-refactor dense) path — including the logged
+    // per-component statistics, which only diverge for omitted
+    // components.
+    let b = backend("lm-tiny-fp");
+    let mut cfg = RepoConfig::by_name("lm-tiny-fp").unwrap();
+    cfg.grades.tau = 0.0;
+    let run_with = |elide: bool| {
+        let mut ds = data::build_lm(&cfg, b.manifest()).unwrap();
+        let val: Vec<_> = ds.val.iter().take(2).cloned().collect();
+        let mut opts = TrainerOptions::from_config(&cfg, StoppingMethod::GradEs);
+        opts.total_steps = 8;
+        opts.probe_every = 1;
+        opts.elide_frozen = elide;
+        trainer::run(&b, &cfg, &opts, || ds.train.next_batch(), &val).unwrap()
+    };
+    let off = run_with(false);
+    let on = run_with(true);
+    assert_eq!(off.steps_run, on.steps_run);
+    assert_eq!(off.final_val_loss.to_bits(), on.final_val_loss.to_bits());
+    for (a, c) in off.log.records.iter().zip(&on.log.records) {
+        assert_eq!(a.loss.to_bits(), c.loss.to_bits());
+        assert_eq!(a.gdiff, c.gdiff, "gdiff diverged at step {}", a.step);
+        assert_eq!(a.gabs, c.gabs, "gabs diverged at step {}", a.step);
+    }
+    assert_eq!(on.plan.elided_steps, 0);
+    assert_eq!(on.timings.dw_elided, 0);
 }
 
 // ---------------------------------------------------------------------------

@@ -14,6 +14,7 @@ use std::collections::BTreeMap;
 use std::rc::Rc;
 
 use grades::config::RepoConfig;
+use grades::coordinator::scheduler::StepPlan;
 use grades::coordinator::trainer::{self, StopCause, StoppingMethod, TrainerOptions};
 use grades::coordinator::warmstart::BaseCheckpoint;
 use grades::data;
@@ -57,6 +58,15 @@ fn bundle(name: &str) -> Option<Rc<Bundle>> {
     })
 }
 
+fn full_plan(b: &Bundle) -> StepPlan {
+    StepPlan::all_active(b.manifest.n_components)
+}
+
+fn attn_plan(b: &Bundle) -> StepPlan {
+    let m = &b.manifest;
+    StepPlan::omitting(m.n_components, &m.components_where(|c| c.group == "attention"))
+}
+
 fn default_ctrl(b: &Bundle, t: f32, lr: f32) -> Vec<f32> {
     let m = &b.manifest;
     let mut ctrl = vec![0f32; m.ctrl_len];
@@ -94,7 +104,7 @@ fn train_step_reduces_loss_on_repeated_batch() {
     let mut first = f32::NAN;
     let mut last = f32::NAN;
     for t in 1..=10 {
-        s.train_step(&batch, &default_ctrl(b, t as f32, 3e-3), false).unwrap();
+        s.train_step(&batch, &default_ctrl(b, t as f32, 3e-3), &full_plan(b)).unwrap();
         let m = s.probe().unwrap();
         let loss = m[0] / m[1].max(1.0);
         if t == 1 {
@@ -118,7 +128,7 @@ fn freeze_mask_freezes_component_params() {
     let before = s.state_to_host().unwrap();
     let mut ctrl = default_ctrl(b, 1.0, 1e-3);
     ctrl[m.ctrl_mask_offset] = 0.0; // freeze component 0
-    s.train_step(&batch, &ctrl, false).unwrap();
+    s.train_step(&batch, &ctrl, &full_plan(b)).unwrap();
     let after = s.state_to_host().unwrap();
     let comp = &m.components[0];
     for tname in &comp.tensors {
@@ -152,11 +162,11 @@ fn attn_frozen_variant_matches_masked_full_graph() {
             ctrl[m.ctrl_mask_offset + c.idx] = 0.0;
         }
     }
-    s1.train_step(&batch, &ctrl, false).unwrap();
+    s1.train_step(&batch, &ctrl, &full_plan(b)).unwrap();
 
     let mut s2 = Session::new(b);
     s2.init(5).unwrap();
-    s2.train_step(&batch, &default_ctrl(b, 1.0, 1e-3), true).unwrap();
+    s2.train_step(&batch, &default_ctrl(b, 1.0, 1e-3), &attn_plan(b)).unwrap();
 
     let h1 = s1.state_to_host().unwrap();
     let h2 = s2.state_to_host().unwrap();
@@ -181,7 +191,7 @@ fn checkpoint_roundtrip_preserves_state() {
     s.init(9).unwrap();
     for t in 1..=3 {
         let batch = ds.train.next_batch();
-        s.train_step(&batch, &default_ctrl(b, t as f32, 1e-3), false).unwrap();
+        s.train_step(&batch, &default_ctrl(b, t as f32, 1e-3), &full_plan(b)).unwrap();
     }
     let host = s.state_to_host().unwrap();
     let path = std::env::temp_dir().join("grades_it_ckpt.bin");
@@ -283,7 +293,7 @@ fn vlm_artifact_trains() {
     let mut last = f32::NAN;
     for t in 1..=8 {
         let batch = &ds.train[(t - 1) % ds.train.len()];
-        s.train_step(batch, &default_ctrl(b, t as f32, 2e-3), false).unwrap();
+        s.train_step(batch, &default_ctrl(b, t as f32, 2e-3), &full_plan(b)).unwrap();
         let m = s.probe().unwrap();
         let loss = m[0] / m[1].max(1.0);
         if t == 1 {
@@ -403,7 +413,7 @@ fn snapshot_eval_matches_current_state_eval() {
     s.init(9).unwrap();
     for t in 1..=4 {
         let batch = ds.train.next_batch();
-        s.train_step(&batch, &default_ctrl(b, t as f32, 1e-3), false).unwrap();
+        s.train_step(&batch, &default_ctrl(b, t as f32, 1e-3), &full_plan(b)).unwrap();
     }
     let cache = DeviceBatchCache::upload(&s, &ds.val).unwrap();
     let live = s.eval_mean_loss_cached(&cache).unwrap();
@@ -420,7 +430,7 @@ fn snapshot_eval_matches_current_state_eval() {
     // advance training; the pinned snapshot must not move
     for t in 5..=8 {
         let batch = ds.train.next_batch();
-        s.train_step(&batch, &default_ctrl(b, t as f32, 1e-3), false).unwrap();
+        s.train_step(&batch, &default_ctrl(b, t as f32, 1e-3), &full_plan(b)).unwrap();
     }
     let io = s.upload_batch(&ds.val[0]).unwrap();
     let (l_snap, _) = s.eval_batch_snapshot(&snap, &io).unwrap();
@@ -468,7 +478,7 @@ fn device_cached_eval_matches_upload_per_call() {
     s.init(21).unwrap();
     for t in 1..=5 {
         let batch = ds.train.next_batch();
-        s.train_step(&batch, &default_ctrl(b, t as f32, 1e-3), false).unwrap();
+        s.train_step(&batch, &default_ctrl(b, t as f32, 1e-3), &full_plan(b)).unwrap();
     }
     let uncached = s.eval_mean_loss(&ds.val).unwrap();
     let cache = DeviceBatchCache::upload(&s, &ds.val).unwrap();
@@ -501,8 +511,8 @@ fn parallel_bundle_load_matches_sequential() {
         let cfg = RepoConfig::by_name("lm-tiny-fp").unwrap();
         let mut ds = data::build_lm(&cfg, &seq.manifest).unwrap();
         let batch = ds.train.next_batch();
-        s1.train_step(&batch, &default_ctrl(&seq, 1.0, 1e-3), false).unwrap();
-        s2.train_step(&batch, &default_ctrl(&par, 1.0, 1e-3), false).unwrap();
+        s1.train_step(&batch, &default_ctrl(&seq, 1.0, 1e-3), &full_plan(&seq)).unwrap();
+        s2.train_step(&batch, &default_ctrl(&par, 1.0, 1e-3), &full_plan(&par)).unwrap();
         assert_eq!(s1.state_to_host().unwrap(), s2.state_to_host().unwrap());
     });
 }

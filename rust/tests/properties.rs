@@ -88,7 +88,76 @@ fn manifest(n_layers: usize) -> grades::runtime::manifest::Manifest {
             head_per_token: 0.0,
         },
         executables: Default::default(),
+        variants: Default::default(),
     }
+}
+
+/// Random freeze/unfreeze stream driven through the GradES monitor in a
+/// given granularity; after every observation the derived plan must be
+/// sound (omitted ⊆ frozen) and exact (omitted == frozen while elision
+/// is on), and the lattice lowering must stay a sound subset.
+fn drive_plan_soundness(granularity: &str, seed: u64) {
+    use grades::coordinator::scheduler::{StepPlanner, VariantDef, VariantLattice};
+    let mut rng = Rng::new(seed);
+    for trial in 0..30 {
+        let m = manifest(1 + rng.below(3));
+        let n = m.n_components;
+        let mut cfg = grades_cfg(0.5, 0.0, rng.below(2));
+        cfg.granularity = granularity.into();
+        // half the trials exercise dynamic unfreezing on the gabs metric
+        if rng.chance(0.5) {
+            cfg.metric = "l1_abs".into();
+            cfg.unfreeze_factor = 1.5;
+        }
+        let mut mon = GradesMonitor::new(&cfg, &m, 100);
+        let mut fs = FreezeState::new(n);
+        // note: the *raw* planner (elision unconditionally on) — the
+        // soundness property must hold even when frozen components can
+        // unfreeze underneath it
+        let mut planner = StepPlanner::new(&m, true);
+        let attn = m.components_where(|c| c.group == "attention");
+        let lattice = VariantLattice::new(vec![
+            VariantDef { key: "train_step".into(), omit: vec![] },
+            VariantDef { key: "train_step_attn_frozen".into(), omit: attn },
+        ])
+        .unwrap();
+        for t in 1..=40 {
+            let mut metrics = vec![0f32; m.metrics_len];
+            for c in 0..n {
+                let v = if rng.chance(0.5) { 0.1 } else { 2.0 };
+                metrics[m.gdiff_offset + c] = v;
+                metrics[m.gabs_offset + c] = v;
+            }
+            mon.observe(t, &m, &metrics, 1.0, &mut fs);
+            let plan = planner.plan(t, &fs);
+            assert!(
+                plan.is_sound(&fs),
+                "trial {trial} t={t} ({granularity}): plan omits an active component"
+            );
+            for c in 0..n {
+                assert_eq!(
+                    plan.omits(c),
+                    fs.is_frozen(c),
+                    "trial {trial} t={t}: plan is not exactly the frozen set"
+                );
+            }
+            let lowered = lattice.lower(&plan);
+            assert!(
+                lowered.omit.iter().all(|&c| plan.omits(c)),
+                "trial {trial} t={t}: lowering omitted an unplanned component"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_plan_soundness_matrix_granularity() {
+    drive_plan_soundness("matrix", 0x9e1);
+}
+
+#[test]
+fn prop_plan_soundness_layer_granularity() {
+    drive_plan_soundness("layer", 0x9e2);
 }
 
 #[test]

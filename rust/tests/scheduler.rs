@@ -19,6 +19,7 @@ use grades::coordinator::freeze::FreezeState;
 use grades::coordinator::metrics::MetricsLog;
 use grades::coordinator::trainer::{StopCause, StoppingMethod, TrainOutcome};
 use grades::coordinator::warmstart::BaseCheckpoint;
+use grades::runtime::backend::BackendChoice;
 use grades::exp::plan::{EvalKind, JobGraph, JobKind, JobSpec};
 use grades::exp::scheduler::{
     execute, job_settings, EvalPayload, JobRunner, JobStatus, JobSummary, RunManifest,
@@ -47,6 +48,7 @@ fn fake_result(spec: &JobSpec) -> JobResult {
             freeze: FreezeState::new(4),
             final_val_loss: 2.0,
             variant_swap_step: None,
+            plan: Default::default(),
             timings: Default::default(),
             async_eval: Default::default(),
         },
@@ -58,8 +60,10 @@ fn fake_summary(spec: &JobSpec, r: &JobResult) -> JobSummary {
     JobSummary {
         id: spec.id.clone(),
         config: r.config.clone(),
-        // matches the default SchedulerOptions fingerprint ("")
-        settings: job_settings(spec, ""),
+        // matches the default SchedulerOptions fingerprint ("" + the
+        // auto-resolved backend — the same call execute() makes)
+        settings: job_settings(spec, "", BackendChoice::Auto),
+        backend: BackendChoice::Auto.resolve(&spec.config).label().to_string(),
         method: r.method.label().to_string(),
         steps_run: r.outcome.steps_run,
         stop_cause: "budget".to_string(),
@@ -69,6 +73,7 @@ fn fake_summary(spec: &JobSpec, r: &JobResult) -> JobSummary {
         final_val_loss: 2.0,
         variant_swap_step: None,
         flops_spent: 0.0,
+        flops_realized: 0.0,
         flops_dense: 0.0,
         flops_validation: 0.0,
         flops_steps: r.outcome.steps_run,
