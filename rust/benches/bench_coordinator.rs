@@ -1,0 +1,150 @@
+//! Coordinator/worker runtime overhead, A/B against the in-process pool:
+//! the same deterministic mock grid (engine-free, fixed per-job cost) is
+//! executed with `--jobs 2` in-process and with `--workers 2` worker
+//! processes, then once more with a SIGKILLed worker to price recovery.
+//! Asserts the three runs produce identical table cells and emits
+//! `BENCH_coordinator.json`.
+//!
+//! `--quick` shrinks the grid (CI smoke mode).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Result};
+use grades::config::repo_root;
+use grades::coordinator::trainer::StoppingMethod;
+use grades::exp::coordinator::{try_execute, Dispatch, GridOptions, MockOptions};
+use grades::exp::fault::MockJobRunner;
+use grades::exp::plan::{EvalKind, JobGraph, JobSpec};
+use grades::exp::scheduler::{execute, JobStatus, RunReport, SchedulerOptions};
+use grades::runtime::backend::BackendChoice;
+use grades::util::json::{self, Json};
+use grades::util::timer::Timer;
+
+const SETTINGS: &str = "bench-coordinator";
+
+/// `families` pretrains, each warming `per` persisted train jobs.
+fn grid_graph(families: usize, per: usize) -> JobGraph {
+    let mut g = JobGraph::new();
+    for f in 0..families {
+        let pre = g.add(JobSpec::pretrain(format!("pre-{f}"), "fake-cfg")).unwrap();
+        for i in 0..per {
+            g.add(
+                JobSpec::train(
+                    format!("f{f}/t{i}"),
+                    "fake-cfg",
+                    StoppingMethod::GradEs,
+                    EvalKind::None,
+                )
+                .warm(pre),
+            )
+            .unwrap();
+        }
+    }
+    g
+}
+
+/// id → final "Avg." accuracy for every job carrying a table result.
+fn cells(g: &JobGraph, r: &RunReport) -> BTreeMap<String, f64> {
+    let mut out = BTreeMap::new();
+    for (i, s) in r.statuses.iter().enumerate() {
+        if let JobStatus::Done { result: Some(res), .. } = s {
+            out.insert(g.get(i).id.clone(), res.accuracies.last().unwrap().1);
+        }
+    }
+    out
+}
+
+fn in_process(g: &JobGraph, dir: &Path, sleep_ms: u64) -> Result<(RunReport, f64)> {
+    let opts = SchedulerOptions {
+        jobs: 2,
+        manifest_path: Some(dir.join("inproc_manifest.json")),
+        settings: SETTINGS.to_string(),
+        backend: BackendChoice::Host,
+        ..Default::default()
+    };
+    let mut runner = MockJobRunner::new(SETTINGS, BackendChoice::Host);
+    runner.sleep_ms = sleep_ms;
+    let t0 = Timer::new();
+    let report = execute(g, &opts, &runner)?;
+    let secs = t0.secs();
+    report.require_ok(g)?;
+    Ok((report, secs))
+}
+
+fn distributed(
+    g: &JobGraph,
+    dir: &Path,
+    sleep_ms: u64,
+    label: &str,
+    fault: Option<&str>,
+) -> Result<(RunReport, f64)> {
+    let opts = SchedulerOptions {
+        jobs: 1,
+        manifest_path: Some(dir.join(format!("{label}_manifest.json"))),
+        settings: SETTINGS.to_string(),
+        backend: BackendChoice::Host,
+        workers: 2,
+        grid: GridOptions {
+            worker_cmd: Some(vec![
+                env!("CARGO_BIN_EXE_grades").to_string(),
+                "worker".to_string(),
+            ]),
+            lease_ms: 5_000,
+            heartbeat_ms: 100,
+            fault: fault.map(str::to_string),
+            mock: Some(MockOptions { sleep_ms, log: None }),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let t0 = Timer::new();
+    let report = match try_execute(g, &opts)? {
+        Dispatch::Ran(r) => r,
+        Dispatch::Fallback(why) => bail!("coordinator fell back ({why}) — bench needs workers"),
+    };
+    let secs = t0.secs();
+    report.require_ok(g)?;
+    Ok((report, secs))
+}
+
+fn main() -> Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (families, per, sleep_ms) = if quick { (2, 3, 20) } else { (4, 6, 50) };
+    let g = grid_graph(families, per);
+    let dir: PathBuf = std::env::temp_dir().join("grades_bench_coordinator");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir)?;
+
+    println!("## bench_coordinator ({} jobs, {sleep_ms}ms each)\n", g.len());
+    let (seq_report, inproc_secs) = in_process(&g, &dir, sleep_ms)?;
+    println!("in-process pool (--jobs 2):    {inproc_secs:7.3}s");
+    let (dist_report, dist_secs) = distributed(&g, &dir, sleep_ms, "dist", None)?;
+    println!("worker processes (--workers 2): {dist_secs:7.3}s ({:.2}x)", dist_secs / inproc_secs);
+    let (fault_report, fault_secs) =
+        distributed(&g, &dir, sleep_ms, "fault", Some("0:sigkill@2"))?;
+    println!(
+        "…with one worker SIGKILLed:     {fault_secs:7.3}s (+{:.3}s recovery)",
+        fault_secs - dist_secs
+    );
+
+    let baseline = cells(&g, &seq_report);
+    ensure!(baseline == cells(&g, &dist_report), "distributed cells diverge from in-process");
+    ensure!(baseline == cells(&g, &fault_report), "post-recovery cells diverge from in-process");
+    println!("table cells identical across all three runs: true");
+
+    let mut report: BTreeMap<String, Json> = BTreeMap::new();
+    report.insert("quick".into(), Json::Bool(quick));
+    report.insert("jobs".into(), Json::Num(g.len() as f64));
+    report.insert("mock_job_ms".into(), Json::Num(sleep_ms as f64));
+    report.insert("in_process_secs".into(), Json::Num(inproc_secs));
+    report.insert("distributed_secs".into(), Json::Num(dist_secs));
+    report.insert("distributed_over_in_process".into(), Json::Num(dist_secs / inproc_secs));
+    report.insert("sigkill_recovery_secs".into(), Json::Num(fault_secs - dist_secs));
+    report.insert("cells_identical".into(), Json::Bool(true));
+    let out = repo_root().join("BENCH_coordinator.json");
+    std::fs::write(&out, json::write(&Json::Obj(report)))?;
+    println!("wrote {}", out.display());
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}

@@ -1,0 +1,1080 @@
+//! Fault-tolerant coordinator for multi-process grid execution.
+//!
+//! `grades repro --workers M` splits a run at the process boundary: this
+//! module is the **coordinator** — it owns the [`JobGraph`], the
+//! `run_manifest.json`, and all scheduling state — and `grades worker`
+//! processes (see [`super::worker`]) execute jobs one at a time over the
+//! newline-framed JSON protocol in [`super::wire`]. Each worker owns its
+//! own `EngineCache` (host engine or PJRT client), so device work
+//! parallelizes across processes instead of serializing behind the
+//! in-process device token.
+//!
+//! # Robustness model
+//!
+//! Robustness is the design center, not a bolt-on:
+//!
+//! - **Leases + heartbeats.** An assigned job is a time-limited lease.
+//!   The worker renews it by heartbeating every `heartbeat_ms`; the
+//!   coordinator's tick loop treats a lease that reaches its deadline as
+//!   a dead worker — the process is killed and its job requeued.
+//! - **Bounded retry.** A failed attempt (clean `failed` frame, worker
+//!   EOF/crash, expired lease, protocol garbage) sends the job into
+//!   exponential backoff and later reassignment, up to
+//!   [`RetryPolicy::max_attempts`] total executions; exhaustion marks
+//!   the job failed and skips its transitive dependents, exactly like
+//!   the in-process pool. Attempt counts and last-failure reasons are
+//!   recorded in the manifest's fault ledger as they happen.
+//! - **Stale-frame rejection.** Every `done`/`failed`/`heartbeat` frame
+//!   is checked against the current lease owner: a late `done` from a
+//!   presumed-dead worker whose job was already reassigned is ignored,
+//!   so a job can never double-record.
+//! - **Coordinator crash recovery.** The manifest is saved atomically
+//!   after every completion, and scheduling state is *derived*, never
+//!   persisted — a killed-and-restarted coordinator rebuilds from
+//!   `run_manifest.json` through the same resume pre-pass as the
+//!   in-process pool and re-runs only unfinished jobs.
+//! - **Graceful degradation.** Graphs the protocol cannot carry
+//!   (standalone eval jobs need in-memory weight handoff; ephemeral
+//!   jobs need full metrics logs) and environments where no worker can
+//!   be spawned fall back to the in-process pool: `--jobs N` semantics
+//!   are unchanged.
+//!
+//! # Determinism
+//!
+//! A job's numbers depend only on its spec (the wire carries the full
+//! spec, and warm starts replay through the warmstart disk cache), so a
+//! distributed run's tables are byte-identical to `--jobs 1` — the fault
+//! suite's core assertion, exercised end-to-end in
+//! `tests/coordinator.rs` with `GRADES_FAULT` injection.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{BufRead, BufReader, Write};
+use std::path::PathBuf;
+use std::process::{Child, ChildStdin, Command, Stdio};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::plan::{JobGraph, JobId, JobKind};
+use super::scheduler::{
+    resume_prepass, FaultRecord, JobStatus, RetryPolicy, RunManifest, RunReport, SchedulerOptions,
+};
+use super::wire::{ToCoordinator, ToWorker, WireJob, WorkerInit};
+
+// ---------------------------------------------------------------------------
+// Options
+// ---------------------------------------------------------------------------
+
+/// Coordinator/worker runtime knobs (`SchedulerOptions::grid`).
+#[derive(Debug, Clone)]
+pub struct GridOptions {
+    /// Command line spawned per worker. `None` means the current
+    /// executable with a `worker` argument — the `grades worker`
+    /// subcommand. Tests point this at `CARGO_BIN_EXE_grades`.
+    pub worker_cmd: Option<Vec<String>>,
+    /// Lease duration: a running job whose worker has not heartbeat for
+    /// this long is presumed dead and requeued.
+    pub lease_ms: u64,
+    /// Heartbeat cadence workers are told to hold (must be well under
+    /// `lease_ms`).
+    pub heartbeat_ms: u64,
+    /// How many *replacement* workers may be spawned over the run's
+    /// lifetime (beyond the initial `--workers` pool) before the
+    /// coordinator gives up on dead slots.
+    pub max_respawns: usize,
+    /// Fault-injection spec forwarded to workers as `GRADES_FAULT`
+    /// (see [`super::fault::FaultSpec`]).
+    pub fault: Option<String>,
+    /// Run workers in deterministic mock mode (`GRADES_MOCK_JOBS=1`) —
+    /// the fault-test harness; `None` for real execution.
+    pub mock: Option<MockOptions>,
+    /// Run-wide `[run].total_steps` override, forwarded in `init`.
+    pub steps_override: Option<usize>,
+    /// Questions per benchmark suite, forwarded in `init`.
+    pub questions: usize,
+    /// Benchmark-suite RNG seed, forwarded in `init`.
+    pub bench_seed: u64,
+}
+
+impl Default for GridOptions {
+    fn default() -> Self {
+        GridOptions {
+            worker_cmd: None,
+            lease_ms: 10_000,
+            heartbeat_ms: 2_500,
+            max_respawns: 8,
+            fault: None,
+            mock: None,
+            steps_override: None,
+            questions: 32,
+            bench_seed: 0xbe9c,
+        }
+    }
+}
+
+/// Mock-mode knobs for spawned workers (fault-injection tests only).
+#[derive(Debug, Clone)]
+pub struct MockOptions {
+    /// Fixed per-job sleep, in milliseconds (gives leases something to
+    /// expire over).
+    pub sleep_ms: u64,
+    /// Append-only execution log shared by all workers — how tests
+    /// observe which process executed which job.
+    pub log: Option<PathBuf>,
+}
+
+/// What [`try_execute`] did with the graph.
+pub enum Dispatch {
+    /// The coordinator runtime ran the graph to completion.
+    Ran(RunReport),
+    /// The graph or environment can't use worker processes; the caller
+    /// should run on the in-process pool (the string says why).
+    Fallback(String),
+}
+
+// ---------------------------------------------------------------------------
+// Core state machine (no I/O — deterministic, unit-tested)
+// ---------------------------------------------------------------------------
+
+/// Lease/retry state of one job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum JState {
+    /// Blocked on unresolved dependencies.
+    Waiting,
+    /// Assignable.
+    Ready,
+    /// A failed attempt is cooling down; assignable once `until` passes.
+    Backoff { until: Instant },
+    /// Leased to `worker` until `deadline` (renewed by heartbeats).
+    Running { worker: usize, deadline: Instant },
+    /// Done / failed / skipped — a final status is recorded.
+    Resolved,
+}
+
+/// State of one worker slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum WState {
+    /// Spawned, no `claim` yet.
+    Starting,
+    /// Ready for an assignment.
+    Idle,
+    /// Holds the lease on a job.
+    Busy(JobId),
+    /// Exited, crashed, or presumed dead (expired lease / protocol
+    /// fault). Slots are never reused — replacements get fresh indices,
+    /// which is what makes a `GRADES_FAULT` spec fire at most once.
+    Dead,
+}
+
+/// What a failed attempt turned into.
+enum AttemptOutcome {
+    /// The job is in backoff and will be reassigned.
+    Retry { attempt: usize },
+    /// The retry budget is exhausted; the job (and its dependents) are
+    /// resolved as failed/skipped.
+    Exhausted { attempts: usize },
+}
+
+/// The coordinator's scheduling brain: job lease states, worker slots,
+/// attempt counts, dependency bookkeeping. Pure state — every transition
+/// takes `now` as an argument and performs no I/O, so the lease and race
+/// edge cases are unit-testable without processes or clocks.
+struct Core<'g> {
+    graph: &'g JobGraph,
+    children: Vec<Vec<JobId>>,
+    retry: RetryPolicy,
+    lease: Duration,
+    statuses: Vec<Option<JobStatus>>,
+    jstates: Vec<JState>,
+    waiting: Vec<usize>,
+    attempts: Vec<usize>,
+    workers: Vec<WState>,
+    remaining: usize,
+}
+
+impl<'g> Core<'g> {
+    fn new(
+        graph: &'g JobGraph,
+        children: Vec<Vec<JobId>>,
+        initial: Vec<Option<JobStatus>>,
+        retry: RetryPolicy,
+        lease: Duration,
+    ) -> Self {
+        let n = graph.len();
+        let mut jstates = vec![JState::Waiting; n];
+        let mut waiting = vec![0usize; n];
+        let mut remaining = 0;
+        for (i, spec) in graph.jobs.iter().enumerate() {
+            if initial[i].is_some() {
+                jstates[i] = JState::Resolved;
+                continue;
+            }
+            remaining += 1;
+            waiting[i] = spec.deps.iter().filter(|&&d| initial[d].is_none()).count();
+            if waiting[i] == 0 {
+                jstates[i] = JState::Ready;
+            }
+        }
+        Core {
+            graph,
+            children,
+            retry,
+            lease,
+            statuses: initial,
+            jstates,
+            waiting,
+            attempts: vec![0; n],
+            workers: Vec::new(),
+            remaining,
+        }
+    }
+
+    /// Register a new worker slot (fresh index, never reused).
+    fn add_worker(&mut self) -> usize {
+        self.workers.push(WState::Starting);
+        self.workers.len() - 1
+    }
+
+    fn on_claim(&mut self, w: usize) {
+        if matches!(self.workers[w], WState::Starting) {
+            self.workers[w] = WState::Idle;
+        }
+    }
+
+    /// Does worker `w` currently hold `job`'s lease? Gate for
+    /// `done`/`failed` frames: a late frame from a presumed-dead worker
+    /// whose job moved on fails this and is ignored.
+    fn owns(&self, w: usize, job: JobId) -> bool {
+        matches!(self.jstates[job], JState::Running { worker, .. } if worker == w)
+    }
+
+    /// Renew `job`'s lease (ignored unless `w` still owns it).
+    fn on_heartbeat(&mut self, w: usize, job: JobId, now: Instant) {
+        if self.owns(w, job) {
+            self.jstates[job] = JState::Running { worker: w, deadline: now + self.lease };
+        }
+    }
+
+    /// Release `w` back to the idle pool after its job resolved.
+    fn finish_worker(&mut self, w: usize) {
+        if matches!(self.workers[w], WState::Busy(_)) {
+            self.workers[w] = WState::Idle;
+        }
+    }
+
+    /// Record a final status and unblock (or transitively skip)
+    /// dependents. Mirrors the in-process pool's `complete`.
+    fn resolve(&mut self, id: JobId, status: JobStatus) {
+        debug_assert!(self.statuses[id].is_none(), "job resolved twice");
+        let failed = matches!(status, JobStatus::Failed(_));
+        self.statuses[id] = Some(status);
+        self.jstates[id] = JState::Resolved;
+        self.remaining -= 1;
+        if failed {
+            let mut stack = self.children[id].clone();
+            while let Some(c) = stack.pop() {
+                if self.statuses[c].is_none() {
+                    self.statuses[c] = Some(JobStatus::Skipped(format!(
+                        "dependency {:?} failed",
+                        self.graph.get(id).id
+                    )));
+                    self.jstates[c] = JState::Resolved;
+                    self.remaining -= 1;
+                    stack.extend(self.children[c].iter().copied());
+                }
+            }
+        } else {
+            for i in 0..self.children[id].len() {
+                let c = self.children[id][i];
+                if self.statuses[c].is_none() {
+                    self.waiting[c] -= 1;
+                    if self.waiting[c] == 0 {
+                        self.jstates[c] = JState::Ready;
+                    }
+                }
+            }
+        }
+    }
+
+    /// One execution of `job` failed (clean error, dead worker, expired
+    /// lease, protocol fault — all the same to the budget). Either backs
+    /// the job off for a later reassignment or, with the budget spent,
+    /// resolves it as failed.
+    fn on_attempt_failed(&mut self, job: JobId, error: &str, now: Instant) -> AttemptOutcome {
+        let a = self.attempts[job].max(1);
+        if a >= self.retry.max_attempts.max(1) {
+            self.resolve(job, JobStatus::Failed(error.to_string()));
+            AttemptOutcome::Exhausted { attempts: a }
+        } else {
+            self.jstates[job] = JState::Backoff { until: now + self.retry.delay(a) };
+            AttemptOutcome::Retry { attempt: a }
+        }
+    }
+
+    /// Mark worker `w` dead; returns the job whose lease it held, if
+    /// any, for the caller to route through [`Self::on_attempt_failed`].
+    /// Idempotent — the eventual EOF after a kill is a no-op.
+    fn on_worker_dead(&mut self, w: usize) -> Option<JobId> {
+        let was = self.workers[w];
+        self.workers[w] = WState::Dead;
+        match was {
+            WState::Busy(j) if self.owns(w, j) => Some(j),
+            _ => None,
+        }
+    }
+
+    /// Leases that have reached their deadline: (worker, job) pairs whose
+    /// workers are presumed dead.
+    fn expired(&self, now: Instant) -> Vec<(usize, JobId)> {
+        (0..self.jstates.len())
+            .filter_map(|j| match self.jstates[j] {
+                JState::Running { worker, deadline } if deadline <= now => Some((worker, j)),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Pair ready jobs (plan order — determinism) with idle workers
+    /// (slot order), starting their leases and burning an attempt each.
+    fn assignments(&mut self, now: Instant) -> Vec<(usize, JobId, usize)> {
+        for j in 0..self.jstates.len() {
+            if let JState::Backoff { until } = self.jstates[j] {
+                if until <= now {
+                    self.jstates[j] = JState::Ready;
+                }
+            }
+        }
+        let mut idle: VecDeque<usize> = self
+            .workers
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| matches!(s, WState::Idle))
+            .map(|(w, _)| w)
+            .collect();
+        let mut out = Vec::new();
+        for j in 0..self.jstates.len() {
+            if idle.is_empty() {
+                break;
+            }
+            if self.jstates[j] == JState::Ready {
+                let w = idle.pop_front().expect("non-empty");
+                self.attempts[j] += 1;
+                self.jstates[j] = JState::Running { worker: w, deadline: now + self.lease };
+                self.workers[w] = WState::Busy(j);
+                out.push((w, j, self.attempts[j]));
+            }
+        }
+        out
+    }
+
+    /// The next instant something is scheduled to happen (a lease
+    /// expiring or a backoff ending), as a wait from `now`.
+    fn next_deadline(&self, now: Instant) -> Option<Duration> {
+        self.jstates
+            .iter()
+            .filter_map(|s| match s {
+                JState::Running { deadline, .. } => Some(*deadline),
+                JState::Backoff { until } => Some(*until),
+                _ => None,
+            })
+            .min()
+            .map(|d| d.saturating_duration_since(now))
+    }
+
+    fn finished(&self) -> bool {
+        self.remaining == 0
+    }
+
+    /// Unresolved jobs not currently running — work that wants a worker
+    /// now or later (drives the respawn decision).
+    fn pending(&self) -> usize {
+        self.jstates
+            .iter()
+            .filter(|s| matches!(s, JState::Waiting | JState::Ready | JState::Backoff { .. }))
+            .count()
+    }
+
+    fn live_workers(&self) -> usize {
+        self.workers.iter().filter(|s| !matches!(s, WState::Dead)).count()
+    }
+
+    fn idle_workers(&self) -> usize {
+        self.workers.iter().filter(|s| matches!(s, WState::Idle)).count()
+    }
+
+    /// Resolve every unresolved job as failed with `reason` (terminal
+    /// degradation: no workers left and no respawn budget).
+    fn fail_all_unresolved(&mut self, reason: &str) {
+        for j in 0..self.jstates.len() {
+            if self.statuses[j].is_none() {
+                self.resolve(j, JobStatus::Failed(reason.to_string()));
+            }
+        }
+    }
+
+    fn into_report(self) -> RunReport {
+        RunReport {
+            statuses: self
+                .statuses
+                .into_iter()
+                .map(|s| s.expect("every job resolved"))
+                .collect(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker processes and their reader threads
+// ---------------------------------------------------------------------------
+
+/// What a reader thread observed on one worker's stdout.
+enum Event {
+    /// One protocol line.
+    Line(String),
+    /// The pipe closed — the worker exited or crashed.
+    Eof,
+}
+
+/// The shared event queue reader threads feed and the tick loop drains.
+struct Events {
+    q: Mutex<VecDeque<(usize, Event)>>,
+    cv: Condvar,
+}
+
+impl Events {
+    fn push(&self, slot: usize, ev: Event) {
+        let mut q = self.q.lock().unwrap_or_else(|p| p.into_inner());
+        q.push_back((slot, ev));
+        drop(q);
+        self.cv.notify_all();
+    }
+
+    /// Drain everything queued, waiting up to `timeout` when empty.
+    fn drain(&self, timeout: Duration) -> Vec<(usize, Event)> {
+        let mut q = self.q.lock().unwrap_or_else(|p| p.into_inner());
+        if q.is_empty() {
+            let (g, _) = self
+                .cv
+                .wait_timeout(q, timeout)
+                .unwrap_or_else(|p| p.into_inner());
+            q = g;
+        }
+        q.drain(..).collect()
+    }
+}
+
+struct WorkerProc {
+    child: Child,
+    stdin: Option<ChildStdin>,
+}
+
+/// Spawn one worker process on `slot`, wire its stdout into `events`
+/// through a reader thread, and send the `init` frame.
+fn spawn_worker(
+    slot: usize,
+    opts: &SchedulerOptions,
+    events: &Arc<Events>,
+    readers: &mut Vec<std::thread::JoinHandle<()>>,
+) -> Result<WorkerProc> {
+    let default_cmd;
+    let cmd: &[String] = match &opts.grid.worker_cmd {
+        Some(c) => c,
+        None => {
+            let exe = std::env::current_exe().context("resolving current executable")?;
+            default_cmd = vec![exe.to_string_lossy().into_owned(), "worker".to_string()];
+            &default_cmd
+        }
+    };
+    anyhow::ensure!(!cmd.is_empty(), "empty worker command");
+    let mut command = Command::new(&cmd[0]);
+    command
+        .args(&cmd[1..])
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        // worker diagnostics interleave with ours on stderr; stdout is
+        // reserved for protocol frames
+        .stderr(Stdio::inherit())
+        .env("GRADES_WORKER_INDEX", slot.to_string())
+        // the child's environment is set explicitly from the options —
+        // never inherited — so tests and nested runs can't leak specs in
+        .env_remove("GRADES_FAULT")
+        .env_remove("GRADES_MOCK_JOBS")
+        .env_remove("GRADES_MOCK_SLEEP_MS")
+        .env_remove("GRADES_MOCK_LOG")
+        .env_remove("GRADES_WORKERS")
+        .env_remove("GRADES_JOBS");
+    if let Some(f) = &opts.grid.fault {
+        command.env("GRADES_FAULT", f);
+    }
+    if let Some(m) = &opts.grid.mock {
+        command.env("GRADES_MOCK_JOBS", "1");
+        command.env("GRADES_MOCK_SLEEP_MS", m.sleep_ms.to_string());
+        if let Some(log) = &m.log {
+            command.env("GRADES_MOCK_LOG", log.as_os_str());
+        }
+    }
+    let mut child = command.spawn().with_context(|| format!("spawning worker {slot} ({:?})", cmd[0]))?;
+
+    let stdout = child.stdout.take().expect("stdout piped");
+    let ev = events.clone();
+    readers.push(std::thread::spawn(move || {
+        for line in BufReader::new(stdout).lines() {
+            match line {
+                Ok(l) => ev.push(slot, Event::Line(l)),
+                Err(_) => break,
+            }
+        }
+        ev.push(slot, Event::Eof);
+    }));
+
+    let mut proc = WorkerProc { stdin: child.stdin.take(), child };
+    let init = ToWorker::Init(WorkerInit {
+        steps_override: opts.grid.steps_override,
+        questions: opts.grid.questions,
+        bench_seed: opts.grid.bench_seed,
+        backend: opts.backend,
+        settings: opts.settings.clone(),
+        heartbeat_ms: opts.grid.heartbeat_ms.max(1),
+    });
+    send(&mut proc, &init).with_context(|| format!("sending init to worker {slot}"))?;
+    Ok(proc)
+}
+
+fn send(proc: &mut WorkerProc, frame: &ToWorker) -> std::io::Result<()> {
+    let stdin = proc
+        .stdin
+        .as_mut()
+        .ok_or_else(|| std::io::Error::from(std::io::ErrorKind::BrokenPipe))?;
+    let mut line = frame.render();
+    line.push('\n');
+    stdin.write_all(line.as_bytes())?;
+    stdin.flush()
+}
+
+/// SIGKILL + reap a worker (used for expired leases and protocol faults;
+/// errors ignored — the process may already be gone).
+fn kill_and_reap(mut proc: WorkerProc) {
+    drop(proc.stdin.take());
+    let _ = proc.child.kill();
+    let _ = proc.child.wait();
+}
+
+/// Reap a worker that should be exiting on its own (shutdown sent /
+/// stdin closed), escalating to SIGKILL if it lingers.
+fn reap(mut proc: WorkerProc) {
+    for _ in 0..100 {
+        match proc.child.try_wait() {
+            Ok(Some(_)) => return,
+            Ok(None) => std::thread::sleep(Duration::from_millis(20)),
+            Err(_) => break,
+        }
+    }
+    let _ = proc.child.kill();
+    let _ = proc.child.wait();
+}
+
+// ---------------------------------------------------------------------------
+// The tick loop
+// ---------------------------------------------------------------------------
+
+/// Run `graph` on worker processes if it is distributable and at least
+/// one worker can be spawned; otherwise report why so the caller can
+/// fall back to the in-process pool. Never errors on worker trouble —
+/// that is the runtime's whole job — only on coordinator-side bugs
+/// (invalid graph).
+pub fn try_execute(graph: &JobGraph, opts: &SchedulerOptions) -> Result<Dispatch> {
+    graph.validate()?;
+    // Distributable gate: the wire carries specs and summaries, not
+    // in-memory weights or full metrics logs.
+    for spec in &graph.jobs {
+        if spec.kind == JobKind::Eval {
+            return Ok(Dispatch::Fallback(format!(
+                "job {:?} is a standalone eval job (needs in-memory weight handoff)",
+                spec.id
+            )));
+        }
+        if spec.kind == JobKind::Train && !spec.persist {
+            return Ok(Dispatch::Fallback(format!(
+                "job {:?} is ephemeral (its full metrics log cannot cross the wire)",
+                spec.id
+            )));
+        }
+    }
+
+    let children = graph.children();
+    let prepass = resume_prepass(graph, &children, opts);
+    let lease = Duration::from_millis(opts.grid.lease_ms.max(1));
+    let mut core = Core::new(graph, children, prepass.statuses, opts.retry, lease);
+    let mut manifest = prepass.manifest;
+    if core.finished() {
+        // everything resumed from the manifest — no processes needed
+        return Ok(Dispatch::Ran(core.into_report()));
+    }
+
+    let name_to_id: HashMap<&str, JobId> = graph
+        .jobs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| (s.id.as_str(), i))
+        .collect();
+    let events = Arc::new(Events { q: Mutex::new(VecDeque::new()), cv: Condvar::new() });
+    let mut readers = Vec::new();
+    let mut procs: HashMap<usize, WorkerProc> = HashMap::new();
+
+    let target = opts.workers.min(core.remaining).max(1);
+    let mut spawn_failures = 0usize;
+    for _ in 0..target {
+        let slot = core.add_worker();
+        match spawn_worker(slot, opts, &events, &mut readers) {
+            Ok(p) => {
+                procs.insert(slot, p);
+            }
+            Err(e) => {
+                core.on_worker_dead(slot);
+                spawn_failures += 1;
+                eprintln!("[coordinator] worker {slot} failed to spawn: {e:#}");
+            }
+        }
+    }
+    if procs.is_empty() {
+        for h in readers {
+            let _ = h.join();
+        }
+        return Ok(Dispatch::Fallback(format!(
+            "no worker processes could be spawned ({spawn_failures} attempt(s) failed)"
+        )));
+    }
+    if opts.verbose {
+        println!(
+            "[coordinator] {} job(s) to run on {} worker process(es), lease {:?}",
+            core.remaining,
+            procs.len(),
+            lease
+        );
+    }
+
+    let budget = opts.retry.max_attempts.max(1);
+    let mut respawns_used = 0usize;
+
+    // One failed attempt: fault ledger + backoff-or-exhaust + logging.
+    let fail_attempt = |core: &mut Core<'_>,
+                        manifest: &mut RunManifest,
+                        id: JobId,
+                        error: String,
+                        now: Instant| {
+        let jid = &core.graph.get(id).id;
+        manifest
+            .faults
+            .insert(jid.clone(), FaultRecord { attempts: core.attempts[id], last_error: error.clone() });
+        if let Some(p) = &opts.manifest_path {
+            let _ = manifest.save(p);
+        }
+        match core.on_attempt_failed(id, &error, now) {
+            AttemptOutcome::Retry { attempt } => eprintln!(
+                "[coordinator] {jid} attempt {attempt}/{budget} failed: {error}; will reassign"
+            ),
+            AttemptOutcome::Exhausted { attempts } => {
+                eprintln!("[{jid}] FAILED after {attempts} attempt(s): {error}")
+            }
+        }
+    };
+
+    while !core.finished() {
+        // 1. Drain worker frames (blocking up to the next lease/backoff
+        //    deadline, capped so child death is never waited on long).
+        let now = Instant::now();
+        let timeout = core
+            .next_deadline(now)
+            .unwrap_or(Duration::from_millis(200))
+            .min(Duration::from_millis(200))
+            .max(Duration::from_millis(1));
+        for (slot, ev) in events.drain(timeout) {
+            let now = Instant::now();
+            match ev {
+                Event::Eof => {
+                    if let Some(p) = procs.remove(&slot) {
+                        reap(p);
+                    }
+                    if let Some(job) = core.on_worker_dead(slot) {
+                        fail_attempt(
+                            &mut core,
+                            &mut manifest,
+                            job,
+                            format!("worker {slot} exited while running the job"),
+                            now,
+                        );
+                    }
+                }
+                Event::Line(line) => match ToCoordinator::parse(&line) {
+                    Err(e) => {
+                        // Protocol fault: kill the worker, requeue its job.
+                        eprintln!(
+                            "[coordinator] worker {slot} sent a garbled frame ({e:#}); killing it"
+                        );
+                        if let Some(p) = procs.remove(&slot) {
+                            kill_and_reap(p);
+                        }
+                        if let Some(job) = core.on_worker_dead(slot) {
+                            fail_attempt(
+                                &mut core,
+                                &mut manifest,
+                                job,
+                                format!("worker {slot} protocol fault: {e:#}"),
+                                now,
+                            );
+                        }
+                    }
+                    Ok(ToCoordinator::Hello { pid, index }) => {
+                        if opts.verbose {
+                            println!("[coordinator] worker {index} up (pid {pid})");
+                        }
+                    }
+                    Ok(ToCoordinator::Claim) => core.on_claim(slot),
+                    Ok(ToCoordinator::Heartbeat { job }) => {
+                        if let Some(&id) = name_to_id.get(job.as_str()) {
+                            core.on_heartbeat(slot, id, now);
+                        }
+                    }
+                    Ok(ToCoordinator::Done { job, summary }) => {
+                        let Some(&id) = name_to_id.get(job.as_str()) else {
+                            continue;
+                        };
+                        if !core.owns(slot, id) {
+                            // Late frame from a presumed-dead worker whose
+                            // job was requeued: must not double-record.
+                            eprintln!(
+                                "[coordinator] ignoring stale done for {job:?} from worker {slot}"
+                            );
+                            continue;
+                        }
+                        core.finish_worker(slot);
+                        let spec = graph.get(id);
+                        let needs_summary = spec.kind == JobKind::Train && spec.persist;
+                        if !needs_summary {
+                            if manifest.faults.remove(&spec.id).is_some() {
+                                if let Some(p) = &opts.manifest_path {
+                                    let _ = manifest.save(p);
+                                }
+                            }
+                            core.resolve(
+                                id,
+                                JobStatus::Done { result: None, summary: None, resumed: false },
+                            );
+                            if opts.verbose {
+                                println!("[{}] done (worker {slot})", spec.id);
+                            }
+                            continue;
+                        }
+                        match summary {
+                            None => fail_attempt(
+                                &mut core,
+                                &mut manifest,
+                                id,
+                                format!("worker {slot} sent done without the required summary"),
+                                now,
+                            ),
+                            Some(mut sm) => {
+                                sm.attempts = core.attempts[id];
+                                match sm.to_result() {
+                                    Err(e) => fail_attempt(
+                                        &mut core,
+                                        &mut manifest,
+                                        id,
+                                        format!("worker {slot} sent an unusable summary: {e:#}"),
+                                        now,
+                                    ),
+                                    Ok(r) => {
+                                        manifest.jobs.insert(spec.id.clone(), sm.clone());
+                                        manifest.faults.remove(&spec.id);
+                                        if let Some(p) = &opts.manifest_path {
+                                            if let Err(e) = manifest.save(p) {
+                                                eprintln!(
+                                                    "[coordinator] run-manifest save failed: {e:#}"
+                                                );
+                                            }
+                                        }
+                                        if opts.verbose {
+                                            println!("[{}] done (worker {slot})", spec.id);
+                                        }
+                                        core.resolve(
+                                            id,
+                                            JobStatus::Done {
+                                                result: Some(r),
+                                                summary: Some(sm),
+                                                resumed: false,
+                                            },
+                                        );
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    Ok(ToCoordinator::Failed { job, error }) => {
+                        let Some(&id) = name_to_id.get(job.as_str()) else {
+                            continue;
+                        };
+                        if !core.owns(slot, id) {
+                            eprintln!(
+                                "[coordinator] ignoring stale failure for {job:?} from worker {slot}"
+                            );
+                            continue;
+                        }
+                        core.finish_worker(slot);
+                        fail_attempt(&mut core, &mut manifest, id, error, now);
+                    }
+                },
+            }
+        }
+        if core.finished() {
+            break;
+        }
+
+        // 2. Expire leases: presumed-dead workers are killed and their
+        //    jobs requeued through the retry budget.
+        let now = Instant::now();
+        for (w, job) in core.expired(now) {
+            eprintln!(
+                "[coordinator] lease on {:?} expired; presuming worker {w} dead",
+                graph.get(job).id
+            );
+            if let Some(p) = procs.remove(&w) {
+                kill_and_reap(p);
+            }
+            core.on_worker_dead(w);
+            fail_attempt(
+                &mut core,
+                &mut manifest,
+                job,
+                format!("lease expired (worker {w} stopped heartbeating)"),
+                now,
+            );
+        }
+
+        // 3. Respawn replacements while there is pending work beyond
+        //    what idle workers cover, within the respawn budget.
+        while core.live_workers() < target
+            && core.pending() > core.idle_workers()
+            && respawns_used < opts.grid.max_respawns
+        {
+            respawns_used += 1;
+            let slot = core.add_worker();
+            match spawn_worker(slot, opts, &events, &mut readers) {
+                Ok(p) => {
+                    if opts.verbose {
+                        println!("[coordinator] spawned replacement worker {slot}");
+                    }
+                    procs.insert(slot, p);
+                }
+                Err(e) => {
+                    core.on_worker_dead(slot);
+                    eprintln!("[coordinator] replacement worker {slot} failed to spawn: {e:#}");
+                }
+            }
+        }
+        if core.live_workers() == 0 {
+            core.fail_all_unresolved(
+                "no live workers remain and the respawn budget is exhausted",
+            );
+            break;
+        }
+
+        // 4. Hand ready jobs to idle workers.
+        let now = Instant::now();
+        for (w, job, attempt) in core.assignments(now) {
+            let frame = ToWorker::Assign { job: WireJob::from_graph(graph, job), attempt };
+            let ok = match procs.get_mut(&w) {
+                Some(p) => send(p, &frame).is_ok(),
+                None => false,
+            };
+            if opts.verbose && ok {
+                println!(
+                    "[coordinator] assigned {:?} to worker {w} (attempt {attempt})",
+                    graph.get(job).id
+                );
+            }
+            if !ok {
+                // The pipe died under us: treat like any dead worker.
+                if let Some(p) = procs.remove(&w) {
+                    kill_and_reap(p);
+                }
+                if let Some(j) = core.on_worker_dead(w) {
+                    fail_attempt(
+                        &mut core,
+                        &mut manifest,
+                        j,
+                        format!("worker {w} rejected an assignment (pipe closed)"),
+                        now,
+                    );
+                }
+            }
+        }
+    }
+
+    // Drain: ask the survivors to exit, then reap everything.
+    for (_, mut p) in procs.drain() {
+        let _ = send(&mut p, &ToWorker::Shutdown);
+        reap(p);
+    }
+    for h in readers {
+        let _ = h.join();
+    }
+
+    let report = core.into_report();
+    if opts.verbose {
+        let (ran, resumed, failed, skipped) = report.counts();
+        println!(
+            "[coordinator] done: {ran} ran, {resumed} resumed, {failed} failed, {skipped} skipped"
+        );
+    }
+    Ok(Dispatch::Ran(report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::trainer::StoppingMethod;
+    use crate::exp::plan::{EvalKind, JobSpec};
+
+    fn train(id: &str) -> JobSpec {
+        JobSpec::train(id, "fake-cfg", StoppingMethod::GradEs, EvalKind::None)
+    }
+
+    fn core_for(graph: &JobGraph, retry: RetryPolicy) -> Core<'_> {
+        let children = graph.children();
+        let initial = (0..graph.len()).map(|_| None).collect();
+        Core::new(graph, children, initial, retry, Duration::from_millis(100))
+    }
+
+    fn done() -> JobStatus {
+        JobStatus::Done { result: None, summary: None, resumed: false }
+    }
+
+    #[test]
+    fn late_done_after_lease_expiry_does_not_double_record() {
+        let mut g = JobGraph::new();
+        g.add(train("a")).unwrap();
+        let mut core = core_for(&g, RetryPolicy::default());
+        let w0 = core.add_worker();
+        let w1 = core.add_worker();
+        core.on_claim(w0);
+        core.on_claim(w1);
+
+        let t0 = Instant::now();
+        let a = core.assignments(t0);
+        assert_eq!(a.len(), 1);
+        let (w, job, attempt) = a[0];
+        assert_eq!((w, job, attempt), (w0, 0, 1));
+
+        // heartbeat renews the lease...
+        core.on_heartbeat(w0, job, t0 + Duration::from_millis(50));
+        assert!(core.expired(t0 + Duration::from_millis(120)).is_empty());
+
+        // ...then the worker goes silent and the lease expires
+        let t1 = t0 + Duration::from_millis(500);
+        assert_eq!(core.expired(t1), vec![(w0, job)]);
+        assert_eq!(core.on_worker_dead(w0), Some(job));
+        assert!(matches!(
+            core.on_attempt_failed(job, "lease expired", t1),
+            AttemptOutcome::Retry { attempt: 1 }
+        ));
+
+        // the presumed-dead worker's late done is stale — no ownership
+        assert!(!core.owns(w0, job));
+
+        // after backoff the job reassigns to the other worker
+        let t2 = t1 + RetryPolicy::default().delay(1);
+        let a = core.assignments(t2);
+        assert_eq!(a.len(), 1);
+        assert_eq!((a[0].0, a[0].1, a[0].2), (w1, job, 2));
+        assert!(core.owns(w1, job) && !core.owns(w0, job));
+
+        core.finish_worker(w1);
+        core.resolve(job, done());
+        assert!(core.finished());
+        assert_eq!(core.attempts[job], 2);
+        // resolving twice would be a bug, and owns() now rejects everyone
+        assert!(!core.owns(w0, job) && !core.owns(w1, job));
+    }
+
+    #[test]
+    fn two_workers_racing_for_one_job_get_one_assignment() {
+        let mut g = JobGraph::new();
+        g.add(train("only")).unwrap();
+        let mut core = core_for(&g, RetryPolicy::default());
+        let w0 = core.add_worker();
+        let w1 = core.add_worker();
+        core.on_claim(w0);
+        core.on_claim(w1);
+        let now = Instant::now();
+        let a = core.assignments(now);
+        assert_eq!(a.len(), 1, "one job, one lease");
+        // the losing worker stays idle; a second pass hands out nothing
+        assert!(core.assignments(now).is_empty());
+        assert_eq!(core.idle_workers(), 1);
+    }
+
+    #[test]
+    fn retry_exhaustion_fails_the_job_and_skips_dependents() {
+        let mut g = JobGraph::new();
+        let pre = g.add(JobSpec::pretrain("pre", "fake-cfg")).unwrap();
+        g.add(train("ft").warm(pre)).unwrap();
+        let retry = RetryPolicy { max_attempts: 2, backoff_base_ms: 0, backoff_max_ms: 0 };
+        let mut core = core_for(&g, retry);
+        let w0 = core.add_worker();
+        core.on_claim(w0);
+        let t = Instant::now();
+
+        for expect_attempt in 1..=2 {
+            let a = core.assignments(t);
+            assert_eq!(a.len(), 1);
+            assert_eq!(a[0].2, expect_attempt);
+            core.finish_worker(w0);
+            match core.on_attempt_failed(pre, "boom", t) {
+                AttemptOutcome::Retry { attempt } => assert_eq!(attempt, 1),
+                AttemptOutcome::Exhausted { attempts } => assert_eq!(attempts, 2),
+            }
+        }
+        assert!(core.finished(), "failure skips the dependent transitively");
+        assert!(matches!(core.statuses[pre], Some(JobStatus::Failed(_))));
+        assert!(matches!(core.statuses[1], Some(JobStatus::Skipped(_))));
+    }
+
+    #[test]
+    fn dependents_unblock_only_after_the_dep_resolves() {
+        let mut g = JobGraph::new();
+        let pre = g.add(JobSpec::pretrain("pre", "fake-cfg")).unwrap();
+        g.add(train("ft").warm(pre)).unwrap();
+        let mut core = core_for(&g, RetryPolicy::default());
+        let w0 = core.add_worker();
+        core.on_claim(w0);
+        let t = Instant::now();
+        let a = core.assignments(t);
+        assert_eq!(a.len(), 1);
+        assert_eq!(a[0].1, pre, "only the pretrain is ready");
+        // nothing else to hand out while the dep runs
+        assert!(core.assignments(t).is_empty());
+        core.finish_worker(w0);
+        core.resolve(pre, done());
+        let a = core.assignments(t);
+        assert_eq!(a.len(), 1);
+        assert_eq!(a[0].1, 1, "the train job unblocked");
+    }
+
+    #[test]
+    fn worker_eof_without_a_lease_is_harmless() {
+        let mut g = JobGraph::new();
+        g.add(train("a")).unwrap();
+        let mut core = core_for(&g, RetryPolicy::default());
+        let w0 = core.add_worker();
+        core.on_claim(w0);
+        assert_eq!(core.on_worker_dead(w0), None);
+        // idempotent: the post-kill EOF is a no-op too
+        assert_eq!(core.on_worker_dead(w0), None);
+        assert_eq!(core.live_workers(), 0);
+        assert!(!core.finished());
+        core.fail_all_unresolved("no live workers");
+        assert!(core.finished());
+        assert!(matches!(core.statuses[0], Some(JobStatus::Failed(_))));
+    }
+}

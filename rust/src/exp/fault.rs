@@ -1,0 +1,269 @@
+//! Deterministic fault injection for the coordinator/worker runtime.
+//!
+//! `GRADES_FAULT=<worker>:<kind>@<nth>` makes worker `<worker>` (its
+//! `GRADES_WORKER_INDEX`) misbehave on its `<nth>` assignment (1-based):
+//!
+//! - `panic`   — panic on the worker's main thread (exit 101, EOF).
+//! - `hang`    — stop heartbeating and sleep forever; the coordinator's
+//!   lease expiry kills and replaces the worker.
+//! - `sigkill` — SIGKILL the worker's own process mid-job (no unwind, no
+//!   `failed` frame — the hard-crash case).
+//! - `garble`  — write a non-JSON line to stdout before executing; the
+//!   coordinator treats it as a protocol fault.
+//!
+//! Replacement workers get fresh indices past the initial pool, so a
+//! fault spec targets at most one process per run — which is what makes
+//! the fault tests deterministic.
+//!
+//! The module also hosts the [`MockJobRunner`]: a deterministic,
+//! engine-free job executor shared by the in-process pool (tests pass it
+//! to `scheduler::execute`) and the worker binary's mock mode
+//! (`GRADES_MOCK_JOBS=1`). Both paths derive every result from
+//! [`mock_summary`], so a distributed run's tables are byte-identical to
+//! an in-process `--jobs 1` run of the same plan — the fault suite's
+//! core assertion.
+
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::plan::{JobKind, JobSpec};
+use super::scheduler::{job_settings, EvalPayload, JobRunner, JobSummary, RunnerOutput};
+use crate::coordinator::warmstart::BaseCheckpoint;
+use crate::runtime::backend::BackendChoice;
+
+/// What an injected fault does to its worker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Panic on the worker's main thread.
+    Panic,
+    /// Stop heartbeating and sleep forever (lease-expiry path).
+    Hang,
+    /// SIGKILL the worker's own process (hard-crash path).
+    Sigkill,
+    /// Emit a garbled protocol line (protocol-fault path).
+    Garble,
+}
+
+impl FaultKind {
+    /// Stable spec label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            FaultKind::Panic => "panic",
+            FaultKind::Hang => "hang",
+            FaultKind::Sigkill => "sigkill",
+            FaultKind::Garble => "garble",
+        }
+    }
+
+    /// Inverse of [`FaultKind::label`].
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "panic" => Some(FaultKind::Panic),
+            "hang" => Some(FaultKind::Hang),
+            "sigkill" => Some(FaultKind::Sigkill),
+            "garble" => Some(FaultKind::Garble),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed `GRADES_FAULT` spec: worker `worker` misbehaves with `kind`
+/// on its `nth` (1-based) job assignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultSpec {
+    /// Target worker index (`GRADES_WORKER_INDEX`).
+    pub worker: usize,
+    /// What the worker does.
+    pub kind: FaultKind,
+    /// 1-based assignment count that triggers the fault.
+    pub nth: usize,
+}
+
+impl FaultSpec {
+    /// Parse `"<worker>:<kind>@<nth>"` (e.g. `"0:sigkill@2"`).
+    pub fn parse(s: &str) -> Result<Self> {
+        let (worker, rest) = match s.split_once(':') {
+            Some(p) => p,
+            None => bail!("fault spec {s:?} is not <worker>:<kind>@<nth>"),
+        };
+        let (kind, nth) = match rest.split_once('@') {
+            Some(p) => p,
+            None => bail!("fault spec {s:?} is not <worker>:<kind>@<nth>"),
+        };
+        let kind = match FaultKind::parse(kind) {
+            Some(k) => k,
+            None => bail!("fault spec {s:?}: kind must be panic|hang|sigkill|garble"),
+        };
+        let spec = FaultSpec { worker: worker.parse()?, kind, nth: nth.parse()? };
+        if spec.nth == 0 {
+            bail!("fault spec {s:?}: assignment counts are 1-based");
+        }
+        Ok(spec)
+    }
+
+    /// Does this spec fire for `worker`'s `assignment`-th job?
+    pub fn fires(&self, worker: usize, assignment: usize) -> bool {
+        self.worker == worker && self.nth == assignment
+    }
+
+    /// Render back to the spec grammar.
+    pub fn render(&self) -> String {
+        format!("{}:{}@{}", self.worker, self.kind.label(), self.nth)
+    }
+}
+
+fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// A deterministic fake summary for `spec` — every field a pure function
+/// of the job id, so any two executions (in-process or across worker
+/// processes, before or after a retry) produce the same bytes.
+pub fn mock_summary(spec: &JobSpec, settings: &str, backend: BackendChoice) -> JobSummary {
+    let h = fnv1a(&spec.id);
+    let steps_run = 10 + (h % 90) as usize;
+    let acc = (h % 10_000) as f64 / 100.0;
+    JobSummary {
+        id: spec.id.clone(),
+        config: spec.config.clone(),
+        settings: job_settings(spec, settings, backend),
+        backend: backend.resolve(&spec.config).label().to_string(),
+        method: spec.method.label().to_string(),
+        steps_run,
+        stop_cause: "budget".to_string(),
+        // fixed, not measured: byte-identity across runs is the point
+        wall_secs: (h % 1000) as f64 / 100.0,
+        validation_secs: 0.0,
+        monitor_secs: 0.0,
+        final_val_loss: (h % 400) as f64 / 100.0,
+        variant_swap_step: None,
+        flops_spent: 0.0,
+        flops_realized: 0.0,
+        flops_dense: 0.0,
+        flops_validation: 0.0,
+        flops_steps: steps_run,
+        n_components: 4,
+        frozen: Vec::new(),
+        accuracies: vec![("Suite".to_string(), acc), ("Avg.".to_string(), acc)],
+        frozen_series: vec![(1, 0.0), (steps_run, 0.5)],
+        tower_gabs: None,
+        attempts: 1,
+    }
+}
+
+/// Append one line to the shared mock execution log (`O_APPEND`, so
+/// concurrent workers interleave whole lines). The log is how the fault
+/// tests observe *which process actually executed which job*.
+pub fn append_mock_log(path: &Path, line: &str) {
+    let r = std::fs::OpenOptions::new().append(true).create(true).open(path);
+    if let Ok(mut f) = r {
+        let _ = f.write_all(format!("{line}\n").as_bytes());
+    }
+}
+
+/// Engine-free [`JobRunner`]: results are derived from [`mock_summary`]
+/// only, with an optional fixed per-job sleep (to give leases something
+/// to expire over) and an optional append-only execution log.
+pub struct MockJobRunner {
+    /// Run-wide settings fingerprint (must match the executing
+    /// `SchedulerOptions::settings` for resume to work).
+    pub settings: String,
+    /// Backend recorded in the summaries.
+    pub backend: BackendChoice,
+    /// Fixed sleep per job, in milliseconds.
+    pub sleep_ms: u64,
+    /// Append-only execution log (one line per executed job).
+    pub log: Option<PathBuf>,
+}
+
+impl MockJobRunner {
+    /// A runner matching `settings`/`backend`, no sleep, no log.
+    pub fn new(settings: impl Into<String>, backend: BackendChoice) -> Self {
+        MockJobRunner { settings: settings.into(), backend, sleep_ms: 0, log: None }
+    }
+}
+
+impl JobRunner for MockJobRunner {
+    fn run(
+        &self,
+        spec: &JobSpec,
+        _warm: Option<Arc<BaseCheckpoint>>,
+        _eval_src: Option<Arc<EvalPayload>>,
+    ) -> Result<RunnerOutput> {
+        if let Some(p) = &self.log {
+            append_mock_log(p, &spec.id);
+        }
+        if self.sleep_ms > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(self.sleep_ms));
+        }
+        match spec.kind {
+            JobKind::Pretrain => Ok(RunnerOutput {
+                result: None,
+                summary: None,
+                checkpoint: Some(Arc::new(BaseCheckpoint {
+                    params: Default::default(),
+                    source: spec.id.clone(),
+                })),
+                eval_payload: None,
+            }),
+            JobKind::Train => {
+                let summary = mock_summary(spec, &self.settings, self.backend);
+                // the result is the summary's round trip, so the
+                // in-process pool renders exactly what a coordinator
+                // rebuilding results from wire summaries renders
+                let result = summary.to_result()?;
+                Ok(RunnerOutput {
+                    result: Some(result),
+                    summary: spec.persist.then_some(summary),
+                    checkpoint: None,
+                    eval_payload: None,
+                })
+            }
+            JobKind::Eval => bail!("{}: mock runner does not execute eval jobs", spec.id),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::trainer::StoppingMethod;
+    use crate::exp::plan::EvalKind;
+
+    #[test]
+    fn fault_spec_round_trips_and_rejects_junk() {
+        for s in ["0:panic@1", "2:hang@3", "1:sigkill@2", "0:garble@1"] {
+            assert_eq!(FaultSpec::parse(s).unwrap().render(), s);
+        }
+        let f = FaultSpec::parse("1:sigkill@2").unwrap();
+        assert!(f.fires(1, 2));
+        assert!(!f.fires(1, 1));
+        assert!(!f.fires(0, 2));
+        for bad in ["", "panic@1", "0:panic", "0:explode@1", "0:panic@0", "x:panic@1"] {
+            assert!(FaultSpec::parse(bad).is_err(), "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn mock_summary_is_deterministic_and_round_trips() {
+        let spec =
+            JobSpec::train("grid/a", "lm-tiny-fp", StoppingMethod::GradEs, EvalKind::LmSuites);
+        let a = mock_summary(&spec, "S", BackendChoice::Host);
+        let b = mock_summary(&spec, "S", BackendChoice::Host);
+        assert_eq!(a, b);
+        let r = a.to_result().unwrap();
+        assert_eq!(r.accuracies, a.accuracies);
+        // distinct jobs get distinct numbers
+        let other =
+            JobSpec::train("grid/b", "lm-tiny-fp", StoppingMethod::GradEs, EvalKind::LmSuites);
+        assert_ne!(mock_summary(&other, "S", BackendChoice::Host).accuracies, a.accuracies);
+    }
+}

@@ -9,11 +9,15 @@
 //! `--jobs` value.
 
 pub mod ablation;
+pub mod coordinator;
+pub mod fault;
 pub mod fig1;
 pub mod lm_matrix;
 pub mod plan;
 pub mod scheduler;
 pub mod vlm;
+pub mod wire;
+pub mod worker;
 
 use std::path::PathBuf;
 
@@ -41,6 +45,11 @@ pub struct ExpOptions {
     /// Execution backend (`--backend auto|host|xla`). `Auto` picks XLA
     /// per config when its artifacts exist, the host engine otherwise.
     pub backend: crate::runtime::backend::BackendChoice,
+    /// Worker *processes* (`--workers` / `GRADES_WORKERS`; 0 = run
+    /// everything on the in-process pool). When > 0, distributable
+    /// graphs go through the fault-tolerant coordinator/worker runtime
+    /// (see `exp::coordinator`).
+    pub workers: usize,
 }
 
 impl Default for ExpOptions {
@@ -54,6 +63,7 @@ impl Default for ExpOptions {
             jobs: 1,
             resume: true,
             backend: Default::default(),
+            workers: 0,
         }
     }
 }
@@ -88,6 +98,14 @@ impl ExpOptions {
     /// Scheduler knobs derived from these options (the run manifest lives
     /// next to the rendered tables under `out_dir`).
     pub fn scheduler(&self) -> scheduler::SchedulerOptions {
+        let mut grid = coordinator::GridOptions::default();
+        grid.steps_override = self.steps_override;
+        grid.questions = self.questions;
+        grid.bench_seed = self.bench_seed;
+        // Fault injection rides the environment so `grades repro` needs
+        // no extra flag for it; the spec is forwarded verbatim to each
+        // spawned worker (see `exp::fault`).
+        grid.fault = std::env::var("GRADES_FAULT").ok().filter(|v| !v.trim().is_empty());
         scheduler::SchedulerOptions {
             jobs: self.jobs.max(1),
             manifest_path: Some(self.out_dir.join("run_manifest.json")),
@@ -95,6 +113,9 @@ impl ExpOptions {
             settings: self.settings_fingerprint(),
             backend: self.backend,
             verbose: self.verbose,
+            workers: self.workers,
+            retry: scheduler::RetryPolicy::default(),
+            grid,
         }
     }
 }

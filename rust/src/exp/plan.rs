@@ -69,6 +69,22 @@ impl ConfigPatch {
             | ConfigPatch::Granularity(_) => false,
         }
     }
+
+    /// Inverse of [`ConfigPatch::key`] (`"tau=0.05"` → `Tau(0.05)`) — the
+    /// form patches travel over the coordinator/worker wire in.
+    pub fn parse_key(s: &str) -> Result<Self> {
+        let (k, v) = match s.split_once('=') {
+            Some(kv) => kv,
+            None => bail!("config patch {s:?} is not key=value"),
+        };
+        match k {
+            "tau" => Ok(ConfigPatch::Tau(v.parse()?)),
+            "alpha" => Ok(ConfigPatch::Alpha(v.parse()?)),
+            "metric" => Ok(ConfigPatch::Metric(v.to_string())),
+            "granularity" => Ok(ConfigPatch::Granularity(v.to_string())),
+            other => bail!("unknown config patch kind {other:?}"),
+        }
+    }
 }
 
 /// Which benchmark suites to score a trained job on.
@@ -82,6 +98,30 @@ pub enum EvalKind {
     VlmNano,
     /// No scoring (pretrain jobs, figure-only runs).
     None,
+}
+
+impl EvalKind {
+    /// Stable wire label (the coordinator/worker protocol and the run
+    /// manifest both speak strings, not enum discriminants).
+    pub fn label(&self) -> &'static str {
+        match self {
+            EvalKind::LmSuites => "lm",
+            EvalKind::VlmMain => "vlm_main",
+            EvalKind::VlmNano => "vlm_nano",
+            EvalKind::None => "none",
+        }
+    }
+
+    /// Inverse of [`EvalKind::label`].
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "lm" => Some(EvalKind::LmSuites),
+            "vlm_main" => Some(EvalKind::VlmMain),
+            "vlm_nano" => Some(EvalKind::VlmNano),
+            "none" => Some(EvalKind::None),
+            _ => None,
+        }
+    }
 }
 
 /// What a job fundamentally does.
@@ -100,6 +140,27 @@ pub enum JobKind {
     /// the eval chunk can run — and even outlive — the training job on
     /// any worker (the async-eval runtime's scheduler-level half).
     Eval,
+}
+
+impl JobKind {
+    /// Stable wire label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            JobKind::Pretrain => "pretrain",
+            JobKind::Train => "train",
+            JobKind::Eval => "eval",
+        }
+    }
+
+    /// Inverse of [`JobKind::label`].
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "pretrain" => Some(JobKind::Pretrain),
+            "train" => Some(JobKind::Train),
+            "eval" => Some(JobKind::Eval),
+            _ => None,
+        }
+    }
 }
 
 /// One experiment job, declared as data.
@@ -573,6 +634,34 @@ mod tests {
         assert_eq!(cfg.grades.granularity, "layer");
         assert_eq!(ConfigPatch::Tau(0.05).key(), "tau=0.05");
         assert!(!ConfigPatch::Tau(0.05).affects_data());
+    }
+
+    #[test]
+    fn patch_key_round_trips_and_rejects_junk() {
+        let patches = [
+            ConfigPatch::Tau(0.05),
+            ConfigPatch::Alpha(0.6),
+            ConfigPatch::Metric("l1_abs".into()),
+            ConfigPatch::Granularity("layer".into()),
+        ];
+        for p in &patches {
+            assert_eq!(&ConfigPatch::parse_key(&p.key()).unwrap(), p);
+        }
+        assert!(ConfigPatch::parse_key("tau").is_err());
+        assert!(ConfigPatch::parse_key("widgets=3").is_err());
+        assert!(ConfigPatch::parse_key("tau=notanumber").is_err());
+    }
+
+    #[test]
+    fn kind_labels_round_trip() {
+        for k in [JobKind::Pretrain, JobKind::Train, JobKind::Eval] {
+            assert_eq!(JobKind::parse(k.label()), Some(k));
+        }
+        for e in [EvalKind::LmSuites, EvalKind::VlmMain, EvalKind::VlmNano, EvalKind::None] {
+            assert_eq!(EvalKind::parse(e.label()), Some(e));
+        }
+        assert_eq!(JobKind::parse("nope"), None);
+        assert_eq!(EvalKind::parse("nope"), None);
     }
 
     #[test]

@@ -99,6 +99,18 @@ pub struct SchedulerOptions {
     pub backend: BackendChoice,
     /// Progress lines on stdout.
     pub verbose: bool,
+    /// Worker *processes* (`--workers M`). 0 disables the
+    /// coordinator/worker runtime and everything runs on the in-process
+    /// pool; > 0 asks `execute` to dispatch distributable graphs through
+    /// `exp::coordinator` (falling back to the pool when the graph or the
+    /// environment can't support it — see [`super::coordinator::try_execute`]).
+    pub workers: usize,
+    /// Per-job retry budget and backoff, shared by the in-process pool
+    /// and the coordinator.
+    pub retry: RetryPolicy,
+    /// Coordinator/worker runtime knobs (leases, heartbeats, fault
+    /// injection, mock mode). Unused when `workers == 0`.
+    pub grid: super::coordinator::GridOptions,
 }
 
 impl Default for SchedulerOptions {
@@ -110,7 +122,42 @@ impl Default for SchedulerOptions {
             settings: String::new(),
             backend: BackendChoice::default(),
             verbose: false,
+            workers: 0,
+            retry: RetryPolicy::default(),
+            grid: super::coordinator::GridOptions::default(),
         }
+    }
+}
+
+/// Bounded per-job retry: a job gets `max_attempts` executions total,
+/// with exponential backoff between them. Applies to both execution
+/// runtimes — the in-process pool sleeps the backoff on the worker
+/// thread; the coordinator holds the job in a `Backoff` state until the
+/// deadline passes, so other jobs keep flowing meanwhile.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Total execution budget per job (1 = no retry). Never 0 — treated
+    /// as 1.
+    pub max_attempts: usize,
+    /// Backoff before attempt 2, in milliseconds; doubles per attempt.
+    pub backoff_base_ms: u64,
+    /// Backoff ceiling, in milliseconds.
+    pub backoff_max_ms: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_attempts: 3, backoff_base_ms: 100, backoff_max_ms: 2_000 }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff to wait after `attempt` (1-based) failed:
+    /// `min(max, base · 2^(attempt-1))`.
+    pub fn delay(&self, attempt: usize) -> std::time::Duration {
+        let exp = attempt.saturating_sub(1).min(16) as u32;
+        let ms = self.backoff_base_ms.saturating_mul(1u64 << exp).min(self.backoff_max_ms);
+        std::time::Duration::from_millis(ms)
     }
 }
 
@@ -163,6 +210,32 @@ pub fn resolve_jobs(flag: Option<usize>, env: Option<&str>) -> usize {
                     );
                 });
                 1
+            }
+        },
+    }
+}
+
+/// Effective worker-*process* count: `--workers` flag wins, then the
+/// `GRADES_WORKERS` environment value, then 0 (in-process pool only).
+/// Unlike [`resolve_jobs`], 0 is a meaningful value here — it means "no
+/// coordinator runtime" — so only malformed env values warn.
+pub fn resolve_workers(flag: Option<usize>, env: Option<&str>) -> usize {
+    if let Some(n) = flag {
+        return n;
+    }
+    match env.map(str::trim) {
+        None | Some("") => 0,
+        Some(v) => match v.parse::<usize>() {
+            Ok(n) => n,
+            Err(_) => {
+                static WARNED: std::sync::Once = std::sync::Once::new();
+                WARNED.call_once(|| {
+                    eprintln!(
+                        "[scheduler] ignoring GRADES_WORKERS={v:?}: expected a \
+                         non-negative integer process count; using the in-process pool"
+                    );
+                });
+                0
             }
         },
     }
@@ -225,6 +298,9 @@ pub struct JobSummary {
     /// VLM only: (vision, language) mean |∇W|₁ series — the Figure 4b
     /// series, precomputed so a resumed run can still render the chart.
     pub tower_gabs: Option<(Vec<(f64, f64)>, Vec<(f64, f64)>)>,
+    /// How many attempts the job took to complete (1 = first try; > 1
+    /// means the bounded retry path re-ran it after failures).
+    pub attempts: usize,
 }
 
 fn stop_cause_str(c: StopCause) -> &'static str {
@@ -332,6 +408,7 @@ impl JobSummary {
             accuracies: r.accuracies.clone(),
             frozen_series,
             tower_gabs,
+            attempts: 1,
         }
     }
 
@@ -444,6 +521,7 @@ impl JobSummary {
             t.insert("language".to_string(), series_to_json(lang));
             m.insert("tower_gabs".to_string(), Json::Obj(t));
         }
+        m.insert("attempts".to_string(), Json::Num(self.attempts as f64));
         Json::Obj(m)
     }
 
@@ -523,6 +601,43 @@ impl JobSummary {
             accuracies,
             frozen_series,
             tower_gabs,
+            // pre-retry manifests lack the field; one attempt is what
+            // their jobs took
+            attempts: match j.opt("attempts") {
+                Some(v) => v.as_usize()?,
+                None => 1,
+            },
+        })
+    }
+}
+
+/// A job's failure ledger in the manifest: how many attempts have been
+/// burned and what the last one died of. Written on every failure (also
+/// by the coordinator when a worker holding the job's lease dies), and
+/// cleared when the job finally completes — so an operator reading
+/// `run_manifest.json` after a crashy grid sees exactly which cells
+/// struggled and why.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultRecord {
+    /// Attempts consumed so far.
+    pub attempts: usize,
+    /// Rendered error chain (or lease/worker post-mortem) of the most
+    /// recent failure.
+    pub last_error: String,
+}
+
+impl FaultRecord {
+    fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("attempts".to_string(), Json::Num(self.attempts as f64));
+        m.insert("last_error".to_string(), Json::Str(self.last_error.clone()));
+        Json::Obj(m)
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(FaultRecord {
+            attempts: j.get("attempts")?.as_usize()?,
+            last_error: j.get("last_error")?.as_str()?.to_string(),
         })
     }
 }
@@ -533,12 +648,16 @@ impl JobSummary {
 pub struct RunManifest {
     /// Completed-job summaries by job id.
     pub jobs: BTreeMap<String, JobSummary>,
+    /// Failure ledger for jobs that have errored (see [`FaultRecord`]).
+    pub faults: BTreeMap<String, FaultRecord>,
 }
 
 impl RunManifest {
-    /// Load tolerantly: a missing or unreadable manifest is an empty one
-    /// (a resumed run should never be blocked by a corrupt file — it just
-    /// re-runs everything and rewrites it).
+    /// Load tolerantly: a missing, truncated or otherwise corrupt
+    /// manifest degrades to an empty one — `--fresh` semantics — with a
+    /// once-per-process warning instead of erroring the whole run (a
+    /// grid must never be unstartable because its *resume cache* is
+    /// damaged; the file is rewritten from scratch as jobs complete).
     pub fn load(path: &Path) -> Self {
         let src = match std::fs::read_to_string(path) {
             Ok(s) => s,
@@ -547,7 +666,14 @@ impl RunManifest {
         match Self::parse(&src) {
             Ok(m) => m,
             Err(e) => {
-                eprintln!("[scheduler] ignoring unreadable run manifest {path:?}: {e:#}");
+                static WARNED: std::sync::Once = std::sync::Once::new();
+                WARNED.call_once(|| {
+                    eprintln!(
+                        "[scheduler] run manifest {path:?} is unreadable ({e:#}); \
+                         starting fresh — completed jobs will re-run and the file \
+                         will be rewritten"
+                    );
+                });
                 RunManifest::default()
             }
         }
@@ -568,7 +694,18 @@ impl RunManifest {
                 }
             }
         }
-        Ok(RunManifest { jobs })
+        let mut faults = BTreeMap::new();
+        if let Some(Json::Obj(entries)) = j.opt("faults") {
+            for (id, entry) in entries {
+                match FaultRecord::from_json(entry) {
+                    Ok(f) => {
+                        faults.insert(id.clone(), f);
+                    }
+                    Err(e) => eprintln!("[scheduler] skipping fault entry {id:?}: {e:#}"),
+                }
+            }
+        }
+        Ok(RunManifest { jobs, faults })
     }
 
     /// Serialize the whole manifest to JSON text.
@@ -580,6 +717,13 @@ impl RunManifest {
         let mut root = BTreeMap::new();
         root.insert("version".to_string(), Json::Num(1.0));
         root.insert("jobs".to_string(), Json::Obj(jobs));
+        if !self.faults.is_empty() {
+            let mut faults = BTreeMap::new();
+            for (k, v) in &self.faults {
+                faults.insert(k.clone(), v.to_json());
+            }
+            root.insert("faults".to_string(), Json::Obj(faults));
+        }
         json::write(&Json::Obj(root))
     }
 
@@ -842,13 +986,31 @@ impl ExecCore<'_, '_> {
         }
     }
 
+    /// Record a failed attempt in the manifest's fault ledger
+    /// (best-effort: never fails the run), so a crash mid-backoff still
+    /// leaves the struggle visible in `run_manifest.json`.
+    fn record_fault(&self, spec: &JobSpec, attempts: usize, msg: &str) {
+        let mut st = self.lock_state();
+        st.manifest
+            .faults
+            .insert(spec.id.clone(), FaultRecord { attempts, last_error: msg.to_string() });
+        if let Some(p) = &self.opts.manifest_path {
+            let _ = st.manifest.save(p);
+        }
+    }
+
     /// Record a finished job, persist it, and unblock/skip dependents.
-    fn complete(&self, id: JobId, outcome: std::result::Result<RunnerOutput, String>) {
+    /// `attempts` is how many executions the job consumed (recorded into
+    /// the summary and the fault ledger).
+    fn complete(&self, id: JobId, outcome: std::result::Result<RunnerOutput, String>, attempts: usize) {
         let spec = self.graph.get(id);
         let mut st = self.lock_state();
         debug_assert!(st.statuses[id].is_none(), "job resolved twice");
         match outcome {
-            Ok(out) => {
+            Ok(mut out) => {
+                if let Some(sm) = &mut out.summary {
+                    sm.attempts = attempts;
+                }
                 if let Some(ck) = out.checkpoint {
                     st.checkpoints.insert(id, ck);
                 }
@@ -860,13 +1022,17 @@ impl ExecCore<'_, '_> {
                         st.payloads.insert(id, p);
                     }
                 }
+                let mut dirty = st.manifest.faults.remove(&spec.id).is_some();
                 if spec.persist {
                     if let Some(sm) = &out.summary {
                         st.manifest.jobs.insert(spec.id.clone(), sm.clone());
-                        if let Some(p) = &self.opts.manifest_path {
-                            if let Err(e) = st.manifest.save(p) {
-                                eprintln!("[scheduler] run-manifest save failed: {e:#}");
-                            }
+                        dirty = true;
+                    }
+                }
+                if dirty {
+                    if let Some(p) = &self.opts.manifest_path {
+                        if let Err(e) = st.manifest.save(p) {
+                            eprintln!("[scheduler] run-manifest save failed: {e:#}");
                         }
                     }
                 }
@@ -883,7 +1049,13 @@ impl ExecCore<'_, '_> {
                 }
             }
             Err(msg) => {
-                eprintln!("[{}] FAILED: {msg}", spec.id);
+                eprintln!("[{}] FAILED after {attempts} attempt(s): {msg}", spec.id);
+                st.manifest
+                    .faults
+                    .insert(spec.id.clone(), FaultRecord { attempts, last_error: msg.clone() });
+                if let Some(p) = &self.opts.manifest_path {
+                    let _ = st.manifest.save(p);
+                }
                 st.statuses[id] = Some(JobStatus::Failed(msg));
                 st.remaining -= 1;
                 // One failed job must not poison the pool: skip only its
@@ -913,56 +1085,85 @@ impl ExecCore<'_, '_> {
         self.cv.notify_all();
     }
 
-    /// Run one job with panic isolation.
+    /// Run one job with panic isolation and the bounded retry budget:
+    /// a failed or panicked attempt is retried (after backoff) until
+    /// `opts.retry.max_attempts` executions are spent.
     fn run_one(&self, runner: &dyn JobRunner, id: JobId) {
         let spec = self.graph.get(id);
         let warm = match self.take_warm(spec) {
             Ok(w) => w,
             Err(e) => {
-                self.complete(id, Err(format!("{e:#}")));
+                self.complete(id, Err(format!("{e:#}")), 1);
                 return;
             }
         };
         let eval_src = match self.take_eval_src(spec) {
             Ok(p) => p,
             Err(e) => {
-                self.complete(id, Err(format!("{e:#}")));
+                self.complete(id, Err(format!("{e:#}")), 1);
                 return;
             }
         };
-        let caught = catch_unwind(AssertUnwindSafe(move || runner.run(spec, warm, eval_src)));
-        let outcome = match caught {
-            Ok(Ok(out)) => Ok(out),
-            Ok(Err(e)) => Err(format!("{e:#}")),
-            Err(p) => Err(format!("job panicked: {}", panic_msg(p.as_ref()))),
+        let budget = self.opts.retry.max_attempts.max(1);
+        let mut attempt = 0;
+        let outcome = loop {
+            attempt += 1;
+            let caught = catch_unwind(AssertUnwindSafe(|| {
+                runner.run(spec, warm.clone(), eval_src.clone())
+            }));
+            let res = match caught {
+                Ok(Ok(out)) => Ok(out),
+                Ok(Err(e)) => Err(format!("{e:#}")),
+                Err(p) => Err(format!("job panicked: {}", panic_msg(p.as_ref()))),
+            };
+            match res {
+                Ok(out) => break Ok(out),
+                Err(msg) if attempt < budget => {
+                    let delay = self.opts.retry.delay(attempt);
+                    eprintln!(
+                        "[{}] attempt {attempt}/{budget} failed: {msg}; retrying in {delay:?}",
+                        spec.id
+                    );
+                    self.record_fault(spec, attempt, &msg);
+                    std::thread::sleep(delay);
+                }
+                Err(msg) => break Err(msg),
+            }
         };
-        self.complete(id, outcome);
+        self.complete(id, outcome, attempt);
     }
 }
 
-/// Execute a graph: resolve resumable jobs from the run manifest, then
-/// drive the rest on `opts.jobs` workers (or inline, in plan order, for
-/// `--jobs 1`).
-pub fn execute(
+/// Resume pre-pass output: the loaded manifest plus per-job initial
+/// statuses, with resumable jobs already resolved. Shared by the
+/// in-process executor and `exp::coordinator` so both runtimes make the
+/// same resume decisions from the same `run_manifest.json`.
+pub(crate) struct Prepass {
+    /// `Some` for jobs resolved without running (resumed / elided).
+    pub(crate) statuses: Vec<Option<JobStatus>>,
+    /// The loaded manifest (entries from other targets preserved).
+    pub(crate) manifest: RunManifest,
+}
+
+/// Resolve resumable jobs against the run manifest: completed persistent
+/// train jobs come back from their summaries (when the settings
+/// fingerprint matches); pretrain jobs whose dependents are all done are
+/// elided (otherwise they run and hit the warmstart disk cache).
+pub(crate) fn resume_prepass(
     graph: &JobGraph,
+    children: &[Vec<JobId>],
     opts: &SchedulerOptions,
-    runner: &dyn JobRunner,
-) -> Result<RunReport> {
-    graph.validate()?;
+) -> Prepass {
     let n = graph.len();
-    let children = graph.children();
     // Always load the existing manifest when one is configured: even with
     // resume off (`--fresh`), saves rewrite the whole file, and entries
     // belonging to *other* repro targets must survive. `opts.resume` only
-    // controls whether entries may skip jobs (the pre-pass below).
+    // controls whether entries may skip jobs.
     let manifest = match &opts.manifest_path {
         Some(p) => RunManifest::load(p),
         None => RunManifest::default(),
     };
 
-    // Resume pre-pass: completed persistent jobs come back from their
-    // summaries; pretrain jobs whose dependents are all done are elided
-    // (otherwise they run and hit the warmstart disk cache).
     let mut statuses: Vec<Option<JobStatus>> = (0..n).map(|_| None).collect();
     for (i, spec) in graph.jobs.iter().enumerate() {
         // A train job feeding an eval job never resumes: the payload its
@@ -1004,6 +1205,34 @@ pub fn execute(
             statuses[i] = Some(JobStatus::Done { result: None, summary: None, resumed: true });
         }
     }
+    Prepass { statuses, manifest }
+}
+
+/// Execute a graph: resolve resumable jobs from the run manifest, then
+/// drive the rest on `opts.jobs` workers (or inline, in plan order, for
+/// `--jobs 1`). With `opts.workers > 0` and a distributable graph, the
+/// run is dispatched to the coordinator/worker runtime instead; any
+/// reason that runtime can't serve it degrades gracefully back here.
+pub fn execute(
+    graph: &JobGraph,
+    opts: &SchedulerOptions,
+    runner: &dyn JobRunner,
+) -> Result<RunReport> {
+    graph.validate()?;
+    if opts.workers > 0 {
+        match super::coordinator::try_execute(graph, opts)? {
+            super::coordinator::Dispatch::Ran(report) => return Ok(report),
+            super::coordinator::Dispatch::Fallback(reason) => {
+                eprintln!(
+                    "[scheduler] coordinator/worker runtime unavailable ({reason}); \
+                     falling back to the in-process pool"
+                );
+            }
+        }
+    }
+    let n = graph.len();
+    let children = graph.children();
+    let Prepass { statuses, manifest } = resume_prepass(graph, &children, opts);
 
     let resolved = statuses.iter().filter(|s| s.is_some()).count();
     let remaining = n - resolved;
@@ -1256,23 +1485,34 @@ impl<'a> DeviceRunner<'a> {
         Ok(&arena.suites[&key])
     }
 
-    fn run_pretrain(&self, spec: &JobSpec) -> Result<RunnerOutput> {
-        let steps = match spec.steps.or(self.opts.steps_override) {
+    /// Produce the base checkpoint for `config` at `steps` (falling back
+    /// to the run-wide override, then the config's own budget) through
+    /// the warmstart disk cache. The cache is what lets checkpoints cross
+    /// *process* boundaries: the coordinator only assigns a warm-started
+    /// job after its pretrain dependency completed somewhere, so a
+    /// worker's call here is a disk hit, not a re-train.
+    pub fn warm_checkpoint(&self, config: &str, steps: Option<usize>) -> Result<Arc<BaseCheckpoint>> {
+        let steps = match steps.or(self.opts.steps_override) {
             Some(s) => s,
-            None => RepoConfig::by_name(&spec.config)?.run.total_steps,
+            None => RepoConfig::by_name(config)?.run.total_steps,
         };
         let guard = self.lock_device();
         let arena = &guard.0;
-        let engine = arena.engines.get(&spec.config)?;
+        let engine = arena.engines.get(config)?;
         let ck = if engine.manifest().is_vlm() {
-            warmstart::pretrain_vlm_checkpoint_with(&*engine, &spec.config, steps)?
+            warmstart::pretrain_vlm_checkpoint_with(&*engine, config, steps)?
         } else {
-            warmstart::pretrain_checkpoint_with(&*engine, &spec.config, steps)?
+            warmstart::pretrain_checkpoint_with(&*engine, config, steps)?
         };
+        Ok(Arc::new(ck))
+    }
+
+    fn run_pretrain(&self, spec: &JobSpec) -> Result<RunnerOutput> {
+        let ck = self.warm_checkpoint(&spec.config, spec.steps)?;
         if self.opts.verbose {
             println!("[{}] base checkpoint ready ({})", spec.id, ck.source);
         }
-        Ok(RunnerOutput { result: None, summary: None, checkpoint: Some(Arc::new(ck)), eval_payload: None })
+        Ok(RunnerOutput { result: None, summary: None, checkpoint: Some(ck), eval_payload: None })
     }
 
     fn run_train(
@@ -1287,7 +1527,7 @@ impl<'a> DeviceRunner<'a> {
         }
         let host = if spec.needs_fresh_data() {
             // A patch invalidated the shared dataset — build privately.
-            Arc::new(HostRes::build(cfg.clone())?)
+            Arc::new(HostRes::build(cfg.clone(), self.opts.backend)?)
         } else {
             self.host_res(&spec.config)?
         };
@@ -1486,6 +1726,7 @@ mod tests {
             accuracies: vec![("AgreeDet".into(), 61.5), ("Avg.".into(), 58.25)],
             frozen_series: vec![(10, 0.0), (120, 0.9)],
             tower_gabs: None,
+            attempts: 1,
         }
     }
 
@@ -1545,6 +1786,77 @@ mod tests {
     fn manifest_load_missing_is_empty() {
         let m = RunManifest::load(Path::new("/nonexistent/definitely/run_manifest.json"));
         assert!(m.jobs.is_empty());
+    }
+
+    #[test]
+    fn manifest_load_garbled_file_degrades_to_fresh() {
+        let dir = std::env::temp_dir().join("grades_sched_garbled_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run_manifest.json");
+        // a truncated save: valid prefix of a real document
+        let full = {
+            let mut m = RunManifest::default();
+            let s = sample_summary();
+            m.jobs.insert(s.id.clone(), s);
+            m.render()
+        };
+        for garbled in [&full[..full.len() / 2], "{not json at all", ""] {
+            std::fs::write(&path, garbled).unwrap();
+            let m = RunManifest::load(&path);
+            assert!(m.jobs.is_empty(), "corrupt manifest must load as empty: {garbled:?}");
+            assert!(m.faults.is_empty());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_fault_ledger_round_trips_and_old_files_parse() {
+        let mut m = RunManifest::default();
+        let s = sample_summary();
+        m.jobs.insert(s.id.clone(), s);
+        m.faults.insert(
+            "grid/b".into(),
+            FaultRecord { attempts: 2, last_error: "worker 1 died: lease expired".into() },
+        );
+        let back = RunManifest::parse(&m.render()).unwrap();
+        assert_eq!(back.faults, m.faults);
+        assert_eq!(back.jobs.len(), 1);
+        // a fault-free manifest omits the key entirely (old schema)
+        let clean = RunManifest::default();
+        assert!(!clean.render().contains("faults"));
+        assert!(RunManifest::parse(&clean.render()).unwrap().faults.is_empty());
+    }
+
+    #[test]
+    fn summary_without_attempts_field_defaults_to_one() {
+        let mut s = sample_summary();
+        s.attempts = 3;
+        let mut j = s.to_json();
+        let back = JobSummary::from_json(&j).unwrap();
+        assert_eq!(back.attempts, 3);
+        if let Json::Obj(m) = &mut j {
+            m.remove("attempts");
+        }
+        assert_eq!(JobSummary::from_json(&j).unwrap().attempts, 1);
+    }
+
+    #[test]
+    fn retry_policy_backoff_is_exponential_and_capped() {
+        let p = RetryPolicy { max_attempts: 5, backoff_base_ms: 100, backoff_max_ms: 1_000 };
+        assert_eq!(p.delay(1).as_millis(), 100);
+        assert_eq!(p.delay(2).as_millis(), 200);
+        assert_eq!(p.delay(3).as_millis(), 400);
+        assert_eq!(p.delay(5).as_millis(), 1_000);
+        assert_eq!(p.delay(60).as_millis(), 1_000); // no shift overflow
+    }
+
+    #[test]
+    fn resolve_workers_precedence() {
+        assert_eq!(resolve_workers(None, None), 0);
+        assert_eq!(resolve_workers(None, Some("4")), 4);
+        assert_eq!(resolve_workers(Some(2), Some("4")), 2);
+        assert_eq!(resolve_workers(Some(0), Some("4")), 0);
+        assert_eq!(resolve_workers(None, Some("junk")), 0);
     }
 
     #[test]

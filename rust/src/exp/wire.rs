@@ -1,0 +1,467 @@
+//! Coordinator ⇄ worker wire protocol: newline-delimited JSON frames over
+//! the worker process's stdio (no serde offline — frames ride on
+//! [`crate::util::json`], like the run manifest).
+//!
+//! One frame per line. The JSON writer never emits a raw newline (control
+//! characters are escaped), so line framing is unambiguous. Both sides
+//! treat an unparseable line as a protocol fault: the coordinator kills
+//! the offending worker and reassigns its lease, a worker exits.
+//!
+//! Frames, coordinator → worker:
+//! - `init` — run-wide settings (steps override, question count, bench
+//!   seed, backend policy, settings fingerprint, heartbeat cadence).
+//! - `assign` — one [`WireJob`] plus its attempt number.
+//! - `shutdown` — drain and exit.
+//!
+//! Frames, worker → coordinator:
+//! - `hello` — pid + worker index, sent once on startup.
+//! - `claim` — ready for (more) work.
+//! - `heartbeat` — lease renewal for the named running job.
+//! - `done` — job finished; persistent train jobs attach their
+//!   [`JobSummary`].
+//! - `failed` — job errored cleanly (the worker itself stays up).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::plan::{ConfigPatch, EvalKind, JobGraph, JobId, JobKind, JobSpec};
+use super::scheduler::JobSummary;
+use crate::coordinator::trainer::StoppingMethod;
+use crate::runtime::backend::BackendChoice;
+use crate::util::json::{self, Json};
+
+/// Run-wide settings the coordinator hands each worker in its `init`
+/// frame — everything a worker needs to rebuild `ExpOptions` so its
+/// summaries carry the same fingerprint the coordinator resumes on.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerInit {
+    /// Global `[run].total_steps` override (`ExpOptions::steps_override`).
+    pub steps_override: Option<usize>,
+    /// Questions per benchmark suite.
+    pub questions: usize,
+    /// Benchmark-suite RNG seed.
+    pub bench_seed: u64,
+    /// Backend selection policy (resolved per config on the worker, same
+    /// filesystem ⇒ same resolution as the coordinator).
+    pub backend: BackendChoice,
+    /// The run-wide settings fingerprint (`SchedulerOptions::settings`).
+    pub settings: String,
+    /// Heartbeat cadence the worker must hold while running a job.
+    pub heartbeat_ms: u64,
+}
+
+/// A [`JobSpec`] flattened for the wire: graph indices are resolved into
+/// names, and the warm-start edge becomes the (config, steps) pair the
+/// worker feeds to the warmstart disk cache — checkpoints themselves
+/// never cross the process boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireJob {
+    /// Job id (manifest key).
+    pub id: String,
+    /// Config name.
+    pub config: String,
+    /// Pretrain / train (standalone eval jobs are not distributable).
+    pub kind: JobKind,
+    /// Stopping rule.
+    pub method: StoppingMethod,
+    /// Config patches, as their stable `key=value` strings.
+    pub patches: Vec<ConfigPatch>,
+    /// Benchmark suites to score.
+    pub eval: EvalKind,
+    /// Per-job total-steps override.
+    pub steps: Option<usize>,
+    /// Probe-cadence override.
+    pub probe_every: Option<usize>,
+    /// Whether the job's summary is persisted (and expected in `done`).
+    pub persist: bool,
+    /// Warm-start source: the pretrain dependency's (config, per-job
+    /// steps override). The worker replays the pretrain through the
+    /// warmstart disk cache — a hit, since the coordinator only assigns
+    /// this job after the pretrain completed.
+    pub warm: Option<(String, Option<usize>)>,
+}
+
+impl WireJob {
+    /// Flatten a graph job for the wire.
+    pub fn from_graph(graph: &JobGraph, id: JobId) -> Self {
+        let spec = graph.get(id);
+        let warm = spec.warm_from.map(|d| {
+            let dep = graph.get(d);
+            (dep.config.clone(), dep.steps)
+        });
+        WireJob {
+            id: spec.id.clone(),
+            config: spec.config.clone(),
+            kind: spec.kind,
+            method: spec.method,
+            patches: spec.patches.clone(),
+            eval: spec.eval,
+            steps: spec.steps,
+            probe_every: spec.probe_every,
+            persist: spec.persist,
+            warm,
+        }
+    }
+
+    /// Rebuild a standalone [`JobSpec`] (no graph edges — the worker sees
+    /// exactly one job at a time; the warm checkpoint is delivered
+    /// separately through the disk cache).
+    pub fn to_spec(&self) -> JobSpec {
+        let mut spec = match self.kind {
+            JobKind::Pretrain => JobSpec::pretrain(self.id.clone(), self.config.clone()),
+            // Eval jobs are rejected before dispatch; mapping them to a
+            // train spec here would be a coordinator bug, so keep the
+            // constructor total and let the runner refuse the job.
+            JobKind::Train | JobKind::Eval => JobSpec::train(
+                self.id.clone(),
+                self.config.clone(),
+                self.method,
+                self.eval,
+            ),
+        };
+        spec.patches = self.patches.clone();
+        spec.steps = self.steps;
+        spec.probe_every = self.probe_every;
+        spec.persist = self.persist;
+        spec
+    }
+
+    fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("id".to_string(), Json::Str(self.id.clone()));
+        m.insert("config".to_string(), Json::Str(self.config.clone()));
+        m.insert("kind".to_string(), Json::Str(self.kind.label().to_string()));
+        m.insert("method".to_string(), Json::Str(self.method.label().to_string()));
+        m.insert(
+            "patches".to_string(),
+            Json::Arr(self.patches.iter().map(|p| Json::Str(p.key())).collect()),
+        );
+        m.insert("eval".to_string(), Json::Str(self.eval.label().to_string()));
+        if let Some(s) = self.steps {
+            m.insert("steps".to_string(), Json::Num(s as f64));
+        }
+        if let Some(p) = self.probe_every {
+            m.insert("probe_every".to_string(), Json::Num(p as f64));
+        }
+        m.insert("persist".to_string(), Json::Bool(self.persist));
+        if let Some((cfg, steps)) = &self.warm {
+            m.insert("warm_config".to_string(), Json::Str(cfg.clone()));
+            if let Some(s) = steps {
+                m.insert("warm_steps".to_string(), Json::Num(*s as f64));
+            }
+        }
+        Json::Obj(m)
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let kind = j.get("kind")?.as_str()?;
+        let kind = JobKind::parse(kind).ok_or_else(|| anyhow!("unknown job kind {kind:?}"))?;
+        let method = j.get("method")?.as_str()?;
+        let method = StoppingMethod::parse(method)
+            .ok_or_else(|| anyhow!("unknown stopping method {method:?}"))?;
+        let eval = j.get("eval")?.as_str()?;
+        let eval = EvalKind::parse(eval).ok_or_else(|| anyhow!("unknown eval kind {eval:?}"))?;
+        let patches = j
+            .get("patches")?
+            .as_arr()?
+            .iter()
+            .map(|p| ConfigPatch::parse_key(p.as_str()?))
+            .collect::<Result<Vec<_>>>()?;
+        let warm = match j.opt("warm_config") {
+            Some(cfg) => Some((
+                cfg.as_str()?.to_string(),
+                match j.opt("warm_steps") {
+                    Some(s) => Some(s.as_usize()?),
+                    None => None,
+                },
+            )),
+            None => None,
+        };
+        Ok(WireJob {
+            id: j.get("id")?.as_str()?.to_string(),
+            config: j.get("config")?.as_str()?.to_string(),
+            kind,
+            method,
+            patches,
+            eval,
+            steps: match j.opt("steps") {
+                Some(s) => Some(s.as_usize()?),
+                None => None,
+            },
+            probe_every: match j.opt("probe_every") {
+                Some(p) => Some(p.as_usize()?),
+                None => None,
+            },
+            persist: j.get("persist")?.as_bool()?,
+            warm,
+        })
+    }
+}
+
+/// A frame the coordinator sends to a worker.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ToWorker {
+    /// Run-wide settings, sent once right after spawn.
+    Init(WorkerInit),
+    /// Run this job (the worker holds its lease until `done`/`failed`).
+    Assign {
+        /// The job to execute.
+        job: WireJob,
+        /// 1-based attempt number (logging/diagnostics only).
+        attempt: usize,
+    },
+    /// Finish up and exit.
+    Shutdown,
+}
+
+/// A frame a worker sends to the coordinator.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ToCoordinator {
+    /// Sent once on startup.
+    Hello {
+        /// The worker process id.
+        pid: u32,
+        /// The worker's slot index (from `GRADES_WORKER_INDEX`).
+        index: usize,
+    },
+    /// Ready for (more) work.
+    Claim,
+    /// Lease renewal for the named running job.
+    Heartbeat {
+        /// Id of the job the worker is still executing.
+        job: String,
+    },
+    /// Job finished. Persistent train jobs attach their summary.
+    Done {
+        /// Id of the finished job.
+        job: String,
+        /// The persisted summary (None for pretrain/ephemeral jobs).
+        summary: Option<JobSummary>,
+    },
+    /// Job errored cleanly; the worker stays up and claims again.
+    Failed {
+        /// Id of the failed job.
+        job: String,
+        /// The error chain, rendered.
+        error: String,
+    },
+}
+
+fn tag(m: &mut BTreeMap<String, Json>, t: &str) {
+    m.insert("type".to_string(), Json::Str(t.to_string()));
+}
+
+impl ToWorker {
+    /// Serialize to one JSON line (no trailing newline).
+    pub fn render(&self) -> String {
+        let mut m = BTreeMap::new();
+        match self {
+            ToWorker::Init(i) => {
+                tag(&mut m, "init");
+                if let Some(s) = i.steps_override {
+                    m.insert("steps_override".to_string(), Json::Num(s as f64));
+                }
+                m.insert("questions".to_string(), Json::Num(i.questions as f64));
+                // hex keeps 64-bit seeds lossless through the f64-backed
+                // JSON number type
+                m.insert("bench_seed".to_string(), Json::Str(format!("{:#x}", i.bench_seed)));
+                m.insert("backend".to_string(), Json::Str(i.backend.label().to_string()));
+                m.insert("settings".to_string(), Json::Str(i.settings.clone()));
+                m.insert("heartbeat_ms".to_string(), Json::Num(i.heartbeat_ms as f64));
+            }
+            ToWorker::Assign { job, attempt } => {
+                tag(&mut m, "assign");
+                m.insert("attempt".to_string(), Json::Num(*attempt as f64));
+                m.insert("job".to_string(), job.to_json());
+            }
+            ToWorker::Shutdown => tag(&mut m, "shutdown"),
+        }
+        json::write(&Json::Obj(m))
+    }
+
+    /// Parse one line.
+    pub fn parse(line: &str) -> Result<Self> {
+        let j = json::parse(line)?;
+        match j.get("type")?.as_str()? {
+            "init" => {
+                let seed = j.get("bench_seed")?.as_str()?;
+                let seed = seed
+                    .strip_prefix("0x")
+                    .ok_or_else(|| anyhow!("bench_seed {seed:?} is not hex"))
+                    .and_then(|h| {
+                        u64::from_str_radix(h, 16).map_err(|e| anyhow!("bench_seed: {e}"))
+                    })?;
+                let backend = j.get("backend")?.as_str()?;
+                let backend = BackendChoice::parse(backend)
+                    .ok_or_else(|| anyhow!("unknown backend {backend:?}"))?;
+                Ok(ToWorker::Init(WorkerInit {
+                    steps_override: match j.opt("steps_override") {
+                        Some(s) => Some(s.as_usize()?),
+                        None => None,
+                    },
+                    questions: j.get("questions")?.as_usize()?,
+                    bench_seed: seed,
+                    backend,
+                    settings: j.get("settings")?.as_str()?.to_string(),
+                    heartbeat_ms: j.get("heartbeat_ms")?.as_usize()? as u64,
+                }))
+            }
+            "assign" => Ok(ToWorker::Assign {
+                job: WireJob::from_json(j.get("job")?)?,
+                attempt: j.get("attempt")?.as_usize()?,
+            }),
+            "shutdown" => Ok(ToWorker::Shutdown),
+            other => bail!("unknown coordinator frame type {other:?}"),
+        }
+    }
+}
+
+impl ToCoordinator {
+    /// Serialize to one JSON line (no trailing newline).
+    pub fn render(&self) -> String {
+        let mut m = BTreeMap::new();
+        match self {
+            ToCoordinator::Hello { pid, index } => {
+                tag(&mut m, "hello");
+                m.insert("pid".to_string(), Json::Num(*pid as f64));
+                m.insert("index".to_string(), Json::Num(*index as f64));
+            }
+            ToCoordinator::Claim => tag(&mut m, "claim"),
+            ToCoordinator::Heartbeat { job } => {
+                tag(&mut m, "heartbeat");
+                m.insert("job".to_string(), Json::Str(job.clone()));
+            }
+            ToCoordinator::Done { job, summary } => {
+                tag(&mut m, "done");
+                m.insert("job".to_string(), Json::Str(job.clone()));
+                if let Some(s) = summary {
+                    m.insert("summary".to_string(), s.to_json());
+                }
+            }
+            ToCoordinator::Failed { job, error } => {
+                tag(&mut m, "failed");
+                m.insert("job".to_string(), Json::Str(job.clone()));
+                m.insert("error".to_string(), Json::Str(error.clone()));
+            }
+        }
+        json::write(&Json::Obj(m))
+    }
+
+    /// Parse one line.
+    pub fn parse(line: &str) -> Result<Self> {
+        let j = json::parse(line)?;
+        match j.get("type")?.as_str()? {
+            "hello" => Ok(ToCoordinator::Hello {
+                pid: j.get("pid")?.as_usize()? as u32,
+                index: j.get("index")?.as_usize()?,
+            }),
+            "claim" => Ok(ToCoordinator::Claim),
+            "heartbeat" => {
+                Ok(ToCoordinator::Heartbeat { job: j.get("job")?.as_str()?.to_string() })
+            }
+            "done" => Ok(ToCoordinator::Done {
+                job: j.get("job")?.as_str()?.to_string(),
+                summary: match j.opt("summary") {
+                    Some(s) => Some(JobSummary::from_json(s)?),
+                    None => None,
+                },
+            }),
+            "failed" => Ok(ToCoordinator::Failed {
+                job: j.get("job")?.as_str()?.to_string(),
+                error: j.get("error")?.as_str()?.to_string(),
+            }),
+            other => bail!("unknown worker frame type {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wire_job() -> WireJob {
+        WireJob {
+            id: "ablation/lm-tiny-fp/tau=0.05,alpha=0.3".into(),
+            config: "lm-tiny-fp".into(),
+            kind: JobKind::Train,
+            method: StoppingMethod::GradEs,
+            patches: vec![ConfigPatch::Tau(0.05), ConfigPatch::Alpha(0.3)],
+            eval: EvalKind::LmSuites,
+            steps: Some(40),
+            probe_every: None,
+            persist: true,
+            warm: Some(("lm-tiny-fp".into(), Some(120))),
+        }
+    }
+
+    #[test]
+    fn to_worker_frames_round_trip() {
+        let frames = [
+            ToWorker::Init(WorkerInit {
+                steps_override: Some(60),
+                questions: 16,
+                bench_seed: 0xbe9c_dead_beef_1234,
+                backend: BackendChoice::Host,
+                settings: "steps_override=Some(60);questions=16".into(),
+                heartbeat_ms: 250,
+            }),
+            ToWorker::Assign { job: wire_job(), attempt: 2 },
+            ToWorker::Shutdown,
+        ];
+        for f in &frames {
+            let line = f.render();
+            assert!(!line.contains('\n'), "frames are single lines");
+            assert_eq!(&ToWorker::parse(&line).unwrap(), f);
+        }
+    }
+
+    #[test]
+    fn to_coordinator_frames_round_trip() {
+        let frames = [
+            ToCoordinator::Hello { pid: 4242, index: 1 },
+            ToCoordinator::Claim,
+            ToCoordinator::Heartbeat { job: "lm/lm-tiny-fp/base".into() },
+            ToCoordinator::Done { job: "pre".into(), summary: None },
+            ToCoordinator::Failed { job: "x".into(), error: "boom\nwith newline".into() },
+        ];
+        for f in &frames {
+            let line = f.render();
+            assert!(!line.contains('\n'), "frames are single lines");
+            assert_eq!(&ToCoordinator::parse(&line).unwrap(), f);
+        }
+    }
+
+    #[test]
+    fn wire_job_flattens_the_warm_edge_and_rebuilds_a_spec() {
+        let mut g = JobGraph::new();
+        let pre = g.add(JobSpec::pretrain("pre", "lm-tiny-fp").with_steps(120)).unwrap();
+        let ft = g
+            .add(
+                JobSpec::train("ft", "lm-tiny-fp", StoppingMethod::GradEs, EvalKind::LmSuites)
+                    .warm(pre)
+                    .with_steps(40),
+            )
+            .unwrap();
+        let w = WireJob::from_graph(&g, ft);
+        assert_eq!(w.warm, Some(("lm-tiny-fp".to_string(), Some(120))));
+        let spec = w.to_spec();
+        assert_eq!(spec.id, "ft");
+        assert_eq!(spec.kind, JobKind::Train);
+        assert_eq!(spec.steps, Some(40));
+        assert!(spec.deps.is_empty() && spec.warm_from.is_none(), "edges stay behind");
+        // pretrain jobs flatten without a warm edge
+        let p = WireJob::from_graph(&g, pre);
+        assert_eq!(p.kind, JobKind::Pretrain);
+        assert!(p.warm.is_none());
+        assert_eq!(p.to_spec().steps, Some(120));
+    }
+
+    #[test]
+    fn garbled_lines_are_rejected() {
+        assert!(ToWorker::parse("@@@ not json {").is_err());
+        assert!(ToCoordinator::parse("@@@ not json {").is_err());
+        assert!(ToCoordinator::parse(r#"{"type":"wat"}"#).is_err());
+        assert!(ToCoordinator::parse(r#"{"type":"done"}"#).is_err(), "done needs a job id");
+    }
+}

@@ -1,0 +1,224 @@
+//! The `grades worker` process: claims jobs from a coordinator over
+//! stdio and executes them with its own engines.
+//!
+//! Stdout is reserved for protocol frames ([`super::wire`], one JSON
+//! line each; diagnostics go to stderr), stdin delivers coordinator
+//! frames. The worker sends `hello`, waits for `init`, then loops:
+//! `claim` → `assign` → execute → `done`/`failed`. While a job runs, a
+//! background thread heartbeats every `heartbeat_ms` so the coordinator
+//! keeps the job's lease alive; a worker that stops heartbeating — hung,
+//! crashed, SIGKILLed — loses the lease and the coordinator reassigns
+//! the job elsewhere.
+//!
+//! Exit conditions: a `shutdown` frame, or EOF on stdin (the coordinator
+//! died — orphaned workers must not outlive their run).
+//!
+//! Two execution modes:
+//! - **Real** (default): a [`DeviceRunner`] with this process's own
+//!   `EngineCache` — host engine or PJRT client per the `init` frame's
+//!   backend policy. Warm starts replay through the warmstart disk
+//!   cache (always a hit: the coordinator assigns a warm job only after
+//!   its pretrain completed).
+//! - **Mock** (`GRADES_MOCK_JOBS=1`): the deterministic, engine-free
+//!   [`MockJobRunner`] — the fault-injection test harness.
+//!
+//! Deterministic fault injection (`GRADES_FAULT`, see [`super::fault`])
+//! makes this process panic, hang, SIGKILL itself, or garble a frame on
+//! its Nth assignment.
+
+use std::io::{BufRead, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use super::fault::{FaultKind, FaultSpec, MockJobRunner};
+use super::scheduler::{DeviceRunner, JobRunner};
+use super::wire::{ToCoordinator, ToWorker, WireJob};
+use super::ExpOptions;
+
+/// Write one protocol frame to stdout (whole line under the lock, so
+/// heartbeat-thread frames never interleave with main-thread frames).
+fn send(frame: &ToCoordinator) -> std::io::Result<()> {
+    let mut line = frame.render();
+    line.push('\n');
+    let mut out = std::io::stdout().lock();
+    out.write_all(line.as_bytes())?;
+    out.flush()
+}
+
+/// Write a deliberately garbled line (the `garble` fault).
+fn send_garbage(n: usize) -> std::io::Result<()> {
+    let mut out = std::io::stdout().lock();
+    out.write_all(format!("@@@ injected garble on assignment {n}\n").as_bytes())?;
+    out.flush()
+}
+
+fn env_usize(name: &str) -> Option<usize> {
+    std::env::var(name).ok().and_then(|v| v.trim().parse().ok())
+}
+
+/// Carry out an injected fault. `Panic`/`Sigkill`/`Hang` never return.
+fn enact(kind: FaultKind, n: usize, hb_enabled: &AtomicBool) {
+    eprintln!("[worker] injecting fault {:?} on assignment {n}", kind.label());
+    match kind {
+        FaultKind::Panic => panic!("injected fault: panic on assignment {n}"),
+        FaultKind::Hang => {
+            // Stop renewing the lease but stay alive: the coordinator
+            // must detect this via lease expiry, not EOF.
+            hb_enabled.store(false, Ordering::SeqCst);
+            loop {
+                std::thread::sleep(Duration::from_secs(3600));
+            }
+        }
+        FaultKind::Sigkill => {
+            // A hard crash: no unwind, no farewell frame. SIGKILL can't
+            // be raised portably from std, so ask the system's kill(1);
+            // abort() is the (SIGABRT) fallback — equally frame-less.
+            let pid = std::process::id().to_string();
+            let _ = std::process::Command::new("/bin/kill").args(["-9", &pid]).status();
+            std::process::abort();
+        }
+        FaultKind::Garble => {
+            if send_garbage(n).is_err() {
+                std::process::exit(1);
+            }
+            // keep going: the coordinator kills us when it reads the line
+        }
+    }
+}
+
+/// Entry point for the `grades worker` subcommand. Returns when the
+/// coordinator says shutdown or closes our stdin; errors only on a
+/// broken protocol (unparseable coordinator frame, stdout gone).
+pub fn run_worker() -> Result<()> {
+    let index = env_usize("GRADES_WORKER_INDEX").unwrap_or(0);
+    let fault = match std::env::var("GRADES_FAULT") {
+        Ok(v) if !v.trim().is_empty() => {
+            Some(FaultSpec::parse(v.trim()).context("parsing GRADES_FAULT")?)
+        }
+        _ => None,
+    };
+    let fault = fault.filter(|f| f.worker == index);
+
+    send(&ToCoordinator::Hello { pid: std::process::id(), index })
+        .context("sending hello")?;
+
+    let stdin = std::io::stdin();
+    let mut lines = stdin.lock().lines();
+
+    // The first meaningful frame must be `init` — it carries everything
+    // needed to build the execution options.
+    let init = loop {
+        let line = match lines.next() {
+            Some(l) => l.context("reading init frame")?,
+            None => return Ok(()), // coordinator gone before init
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        match ToWorker::parse(&line)? {
+            ToWorker::Init(i) => break i,
+            ToWorker::Shutdown => return Ok(()),
+            ToWorker::Assign { .. } => bail!("assign frame before init"),
+        }
+    };
+
+    let exp_opts = ExpOptions {
+        steps_override: init.steps_override,
+        questions: init.questions,
+        bench_seed: init.bench_seed,
+        backend: init.backend,
+        // stdout belongs to the protocol; engine progress would corrupt
+        // the frame stream
+        verbose: false,
+        ..ExpOptions::default()
+    };
+    let mock_mode = std::env::var("GRADES_MOCK_JOBS").map(|v| v == "1").unwrap_or(false);
+    let device = if mock_mode { None } else { Some(DeviceRunner::new(&exp_opts)) };
+    let mock = mock_mode.then(|| MockJobRunner {
+        settings: init.settings.clone(),
+        backend: init.backend,
+        sleep_ms: env_usize("GRADES_MOCK_SLEEP_MS").unwrap_or(0) as u64,
+        log: std::env::var("GRADES_MOCK_LOG").ok().map(std::path::PathBuf::from),
+    });
+
+    // Heartbeat thread: renews the lease on whatever job is current.
+    // Detached on purpose — it dies with the process, which is exactly
+    // the lease-expiry signal the coordinator listens for.
+    let current: Arc<Mutex<Option<String>>> = Arc::new(Mutex::new(None));
+    let hb_enabled = Arc::new(AtomicBool::new(true));
+    {
+        let current = current.clone();
+        let hb = hb_enabled.clone();
+        let period = Duration::from_millis(init.heartbeat_ms.max(1));
+        std::thread::spawn(move || loop {
+            std::thread::sleep(period);
+            if !hb.load(Ordering::SeqCst) {
+                continue;
+            }
+            let job = current.lock().unwrap_or_else(|p| p.into_inner()).clone();
+            if let Some(job) = job {
+                if send(&ToCoordinator::Heartbeat { job }).is_err() {
+                    return; // coordinator gone; main loop will see EOF
+                }
+            }
+        });
+    }
+
+    send(&ToCoordinator::Claim).context("sending first claim")?;
+
+    let mut assignment_count = 0usize;
+    for line in lines {
+        let line = line.context("reading coordinator frame")?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (job, _attempt) = match ToWorker::parse(&line)? {
+            ToWorker::Shutdown => break,
+            ToWorker::Init(_) => continue, // duplicate init: ignore
+            ToWorker::Assign { job, attempt } => (job, attempt),
+        };
+        assignment_count += 1;
+        if let Some(f) = fault {
+            if f.fires(index, assignment_count) {
+                enact(f.kind, assignment_count, &hb_enabled);
+            }
+        }
+        // `current` is set for exactly the duration of the job, so the
+        // heartbeat thread renews this lease and no other.
+        *current.lock().unwrap_or_else(|p| p.into_inner()) = Some(job.id.clone());
+        let outcome = execute(&job, device.as_ref(), mock.as_ref());
+        *current.lock().unwrap_or_else(|p| p.into_inner()) = None;
+        let frame = match outcome {
+            Ok(summary) => ToCoordinator::Done { job: job.id.clone(), summary },
+            Err(e) => ToCoordinator::Failed { job: job.id.clone(), error: format!("{e:#}") },
+        };
+        send(&frame).context("sending job outcome")?;
+        send(&ToCoordinator::Claim).context("sending claim")?;
+    }
+    Ok(())
+}
+
+/// Run one wire job on whichever executor this process has. Errors are
+/// reported to the coordinator as a clean `failed` frame — the worker
+/// itself stays up.
+fn execute(
+    job: &WireJob,
+    device: Option<&DeviceRunner<'_>>,
+    mock: Option<&MockJobRunner>,
+) -> Result<Option<super::scheduler::JobSummary>> {
+    let spec = job.to_spec();
+    let out = match device {
+        Some(d) => {
+            let warm = match &job.warm {
+                Some((cfg, steps)) => Some(d.warm_checkpoint(cfg, *steps)?),
+                None => None,
+            };
+            d.run(&spec, warm, None)?
+        }
+        None => mock.expect("mock runner in mock mode").run(&spec, None, None)?,
+    };
+    Ok(out.summary)
+}

@@ -84,6 +84,14 @@ fn exp_options(args: &Args) -> Result<ExpOptions> {
     // ignores the run manifest (completed cells re-run and are rewritten).
     let env_jobs = std::env::var("GRADES_JOBS").ok();
     opts.jobs = grades::exp::scheduler::resolve_jobs(args.usize_flag("jobs")?, env_jobs.as_deref());
+    // --workers beats GRADES_WORKERS beats 0 (no worker processes):
+    // > 0 runs distributable graphs on the fault-tolerant
+    // coordinator/worker runtime, each worker owning its own engines.
+    let env_workers = std::env::var("GRADES_WORKERS").ok();
+    opts.workers = grades::exp::scheduler::resolve_workers(
+        args.usize_flag("workers")?,
+        env_workers.as_deref(),
+    );
     opts.resume = args.get("fresh").is_none();
     Ok(opts)
 }
@@ -314,6 +322,10 @@ fn main() -> Result<()> {
     match args.positional.first().map(String::as_str) {
         Some("train") => cmd_train(&args),
         Some("repro") => cmd_repro(&args),
+        // Internal: spawned by `grades repro --workers M` as a child
+        // process speaking the stdio protocol. Harmless to run by hand —
+        // it exits on stdin EOF.
+        Some("worker") => grades::exp::worker::run_worker(),
         Some("info") => cmd_info(&args),
         Some("list") => cmd_list(),
         _ => {
@@ -329,9 +341,14 @@ fn main() -> Result<()> {
                  \x20   --staleness K   apply a check's stop decision at most K steps late (0 = synchronous)\n\
                  \x20   --truncate-bwd  stop the host backward sweep below a fully-frozen layer prefix\n\
                  \x20                   (AutoFreeze-style; holds that prefix's norms + embeddings)\n\
-                 grades repro <lm|vlm|ablation|fig1|all> [--quick] [--steps N] [--questions Q] [--out D] [--jobs N] [--fresh] [--backend B]\n\
-                 \x20   --jobs N   run experiment jobs on N workers (or GRADES_JOBS=N); 1 = sequential\n\
-                 \x20   --fresh    ignore the resumable run manifest under --out and re-run every job\n\
+                 grades repro <lm|vlm|ablation|fig1|all> [--quick] [--steps N] [--questions Q] [--out D] [--jobs N] [--workers M] [--fresh] [--backend B]\n\
+                 \x20   --jobs N      run experiment jobs on N in-process workers (or GRADES_JOBS=N); 1 = sequential\n\
+                 \x20   --workers M   run jobs on M worker *processes* (or GRADES_WORKERS=M) with job leases,\n\
+                 \x20                 heartbeats, and bounded retry; 0 = in-process pool only (default).\n\
+                 \x20                 Falls back to --jobs when the graph or environment can't distribute.\n\
+                 \x20   --fresh       ignore the resumable run manifest under --out and re-run every job\n\
+                 grades worker    (internal: spawned per worker process by repro --workers;\n\
+                 \x20                GRADES_FAULT=<worker>:<panic|hang|sigkill|garble>@<nth> injects faults)\n\
                  grades info --config lm-tiny-fp\n\
                  grades list"
             );

@@ -26,7 +26,11 @@ use super::xerr;
 use crate::coordinator::scheduler::{StepPlan, VariantLattice};
 
 /// Shared PJRT CPU client. Creating a TfrtCpuClient is expensive; share one
-/// per process.
+/// per process. "Per process" is load-bearing: a client's handles hold
+/// non-atomic refcounts and are meaningless outside the process that
+/// created them, so the coordinator/worker runtime (`exp::coordinator`)
+/// never ships clients, executables or buffers over its wire — each
+/// worker process builds its own client on first XLA load.
 #[derive(Clone)]
 pub struct Client(pub Arc<PjRtClient>);
 

@@ -314,6 +314,14 @@ fn shared_client() -> Result<Client> {
 /// refcounts; the host backend is plain data but shares the cache). The
 /// experiment scheduler wraps the cache in its exclusive device-token
 /// mutex, which doubles as the compile lock — exactly as before.
+///
+/// Ownership is strictly **per process**: under `repro --workers M`,
+/// the coordinator never builds an engine and each `grades worker`
+/// process owns its own `EngineCache` (and thus its own PJRT client) —
+/// neither clients, engines nor device buffers ever cross the process
+/// boundary (warm starts replay through the warmstart *disk* cache
+/// instead; see `exp::coordinator`). A worker crash can therefore only
+/// ever tear down its own engines.
 pub struct EngineCache {
     choice: BackendChoice,
     /// Created on first XLA load; host-only runs never pay for a client.

@@ -1,0 +1,304 @@
+//! Fault-injection tests for the coordinator/worker runtime. Host-only:
+//! workers run the real `grades worker` binary (`CARGO_BIN_EXE_grades`)
+//! in deterministic mock mode (`GRADES_MOCK_JOBS=1`), so these exercise
+//! process spawning, the stdio wire protocol, leases/heartbeats, retry,
+//! and crash recovery — everything except the engines.
+//!
+//! The core assertions mirror the robustness claims:
+//! - a clean distributed run persists byte-identical manifest cells to a
+//!   sequential in-process `--jobs 1` run of the same plan;
+//! - a worker SIGKILLed mid-grid loses its lease, its job is reassigned,
+//!   the run completes, and the tables still match the in-process run;
+//! - a killed-and-restarted coordinator resumes from `run_manifest.json`
+//!   alone without re-running completed jobs;
+//! - when no worker can be spawned, execution degrades to the in-process
+//!   pool.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use grades::coordinator::trainer::StoppingMethod;
+use grades::exp::coordinator::{try_execute, Dispatch, GridOptions, MockOptions};
+use grades::exp::fault::MockJobRunner;
+use grades::exp::plan::{EvalKind, JobGraph, JobSpec};
+use grades::exp::scheduler::{
+    execute, JobStatus, JobSummary, RetryPolicy, RunManifest, RunReport, SchedulerOptions,
+};
+use grades::runtime::backend::BackendChoice;
+
+/// Run-wide settings fingerprint shared by every run in this suite (it
+/// must match between the coordinator, the workers, and the in-process
+/// comparison runner for summaries and resume to line up).
+const SETTINGS: &str = "fault-suite";
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("grades_coord_{name}"));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn train(id: &str) -> JobSpec {
+    JobSpec::train(id, "fake-cfg", StoppingMethod::GradEs, EvalKind::None)
+}
+
+/// pretrain → 4 dependents, plus an independent pretrain → 2 dependents —
+/// enough width that two workers interleave and a killed worker's jobs
+/// land on the survivor.
+fn grid_graph() -> JobGraph {
+    let mut g = JobGraph::new();
+    let pre_a = g.add(JobSpec::pretrain("pre-a", "fake-cfg")).unwrap();
+    for i in 0..4 {
+        g.add(train(&format!("a{i}")).warm(pre_a)).unwrap();
+    }
+    let pre_b = g.add(JobSpec::pretrain("pre-b", "fake-cfg")).unwrap();
+    for i in 0..2 {
+        g.add(train(&format!("b{i}")).warm(pre_b)).unwrap();
+    }
+    g
+}
+
+/// Options for a distributed run: real worker binary, mock execution,
+/// fast heartbeats, a manifest + execution log under `dir`.
+fn dist_opts(dir: &Path, workers: usize, log: &str) -> SchedulerOptions {
+    SchedulerOptions {
+        jobs: 1,
+        manifest_path: Some(dir.join("run_manifest.json")),
+        settings: SETTINGS.to_string(),
+        backend: BackendChoice::Host,
+        verbose: false,
+        workers,
+        grid: GridOptions {
+            worker_cmd: Some(vec![
+                env!("CARGO_BIN_EXE_grades").to_string(),
+                "worker".to_string(),
+            ]),
+            lease_ms: 5_000,
+            heartbeat_ms: 100,
+            // long enough that every worker is up before the grid drains,
+            // so the fault target reliably reaches its Nth assignment
+            mock: Some(MockOptions { sleep_ms: 25, log: Some(dir.join(log)) }),
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+/// The sequential in-process ground truth (`--jobs 1`, `--workers 0`).
+fn in_process_report(dir: &Path) -> RunReport {
+    let opts = SchedulerOptions {
+        jobs: 1,
+        manifest_path: Some(dir.join("seq_manifest.json")),
+        settings: SETTINGS.to_string(),
+        backend: BackendChoice::Host,
+        ..Default::default()
+    };
+    let runner = MockJobRunner::new(SETTINGS, BackendChoice::Host);
+    execute(&grid_graph(), &opts, &runner).unwrap()
+}
+
+fn must_run(d: Dispatch) -> RunReport {
+    match d {
+        Dispatch::Ran(r) => r,
+        Dispatch::Fallback(why) => panic!("coordinator fell back: {why}"),
+    }
+}
+
+/// Done-job summaries keyed by id, with `attempts` normalized to 1 so
+/// fault runs compare equal to clean runs on every *result* field.
+fn summaries(g: &JobGraph, r: &RunReport) -> BTreeMap<String, JobSummary> {
+    let mut out = BTreeMap::new();
+    for (i, s) in r.statuses.iter().enumerate() {
+        if let JobStatus::Done { summary: Some(sm), .. } = s {
+            let mut sm = sm.clone();
+            sm.attempts = 1;
+            out.insert(g.get(i).id.clone(), sm);
+        }
+    }
+    out
+}
+
+/// Job ids logged by worker processes (the in-process runner never logs).
+fn logged_ids(path: &Path) -> Vec<String> {
+    let mut ids: Vec<String> = std::fs::read_to_string(path)
+        .unwrap_or_default()
+        .lines()
+        .map(|l| l.to_string())
+        .collect();
+    ids.sort();
+    ids
+}
+
+#[test]
+fn distributed_run_matches_the_in_process_tables() {
+    let dir = tmp_dir("clean");
+    let g = grid_graph();
+    let opts = dist_opts(&dir, 2, "mock_log.txt");
+    let report = must_run(try_execute(&g, &opts).unwrap());
+    report.require_ok(&g).unwrap();
+
+    // Worker processes — not this process — executed every job.
+    let ids = logged_ids(&dir.join("mock_log.txt"));
+    assert_eq!(ids.len(), g.len(), "each job ran exactly once: {ids:?}");
+
+    // Cell-level equality against the sequential in-process run…
+    let seq = in_process_report(&dir);
+    assert_eq!(summaries(&g, &report), summaries(&g, &seq));
+
+    // …and byte-level equality of the persisted manifests.
+    let dist_manifest = RunManifest::load(&dir.join("run_manifest.json"));
+    let seq_manifest = RunManifest::load(&dir.join("seq_manifest.json"));
+    assert!(dist_manifest.faults.is_empty());
+    assert_eq!(dist_manifest.render(), seq_manifest.render(), "manifests are byte-identical");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn sigkilled_worker_jobs_are_reassigned_and_tables_match_jobs_1() {
+    let dir = tmp_dir("sigkill");
+    let g = grid_graph();
+    let mut opts = dist_opts(&dir, 2, "mock_log.txt");
+    // Worker 0 SIGKILLs itself on its 2nd assignment: no unwind, no
+    // farewell frame — the coordinator sees EOF mid-job.
+    opts.grid.fault = Some("0:sigkill@2".to_string());
+    let report = must_run(try_execute(&g, &opts).unwrap());
+    report.require_ok(&g).unwrap();
+    let (_, _, failed, skipped) = report.counts();
+    assert_eq!((failed, skipped), (0, 0));
+
+    // Exactly one job needed a second attempt (the one killed mid-run;
+    // replacement workers get fresh indices, so the fault fires once).
+    let retried: Vec<&str> = report
+        .statuses
+        .iter()
+        .enumerate()
+        .filter_map(|(i, s)| match s {
+            JobStatus::Done { summary: Some(sm), .. } if sm.attempts > 1 => {
+                Some(g.get(i).id.as_str())
+            }
+            _ => None,
+        })
+        .collect();
+    assert_eq!(retried.len(), 1, "exactly one job was reassigned: {retried:?}");
+
+    // The recovered run's tables are identical to the sequential run.
+    let seq = in_process_report(&dir);
+    assert_eq!(summaries(&g, &report), summaries(&g, &seq));
+
+    // Success cleared the fault ledger; every train cell is persisted.
+    let m = RunManifest::load(&dir.join("run_manifest.json"));
+    assert!(m.faults.is_empty(), "ledger not cleared: {:?}", m.faults);
+    assert_eq!(m.jobs.len(), 6, "all six train cells persisted");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn hung_worker_loses_its_lease_and_the_job_is_reassigned() {
+    let dir = tmp_dir("hang");
+    let g = grid_graph();
+    let mut opts = dist_opts(&dir, 2, "mock_log.txt");
+    // Worker 0 stops heartbeating and sleeps forever on its 2nd
+    // assignment: only lease expiry — not EOF — can detect this.
+    opts.grid.fault = Some("0:hang@2".to_string());
+    opts.grid.lease_ms = 600;
+    let report = must_run(try_execute(&g, &opts).unwrap());
+    report.require_ok(&g).unwrap();
+    let seq = in_process_report(&dir);
+    assert_eq!(summaries(&g, &report), summaries(&g, &seq));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn panic_and_garble_faults_are_contained() {
+    for (name, fault) in [("panic", "0:panic@2"), ("garble", "0:garble@2")] {
+        let dir = tmp_dir(name);
+        let g = grid_graph();
+        let mut opts = dist_opts(&dir, 2, "mock_log.txt");
+        opts.grid.fault = Some(fault.to_string());
+        let report = must_run(try_execute(&g, &opts).unwrap());
+        report.require_ok(&g).unwrap_or_else(|e| panic!("{fault}: {e:#}"));
+        let seq = in_process_report(&dir);
+        assert_eq!(summaries(&g, &report), summaries(&g, &seq), "{fault}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[test]
+fn restarted_coordinator_resumes_from_the_manifest_without_rerunning() {
+    let dir = tmp_dir("resume");
+    let g = grid_graph();
+
+    // Run 1: a single worker, so its first assignment is deterministically
+    // pre-a (plan order). It dies with no retry budget, the a-family never
+    // completes, a replacement finishes the b-family — then the
+    // "coordinator" goes away. Everything it knows survives only in
+    // run_manifest.json.
+    let mut first = dist_opts(&dir, 1, "log_run1.txt");
+    first.grid.fault = Some("0:sigkill@1".to_string());
+    first.retry = RetryPolicy { max_attempts: 1, backoff_base_ms: 0, backoff_max_ms: 0 };
+    let r1 = must_run(try_execute(&g, &first).unwrap());
+    assert!(r1.require_ok(&g).is_err(), "the killed family must not complete");
+    let (ran1, _, failed1, skipped1) = r1.counts();
+    assert_eq!((ran1, failed1, skipped1), (3, 1, 4), "b-family completed, a-family died");
+    let mid = RunManifest::load(&dir.join("run_manifest.json"));
+    assert_eq!(mid.jobs.len(), 2, "b0/b1 cells persisted before the crash");
+    assert!(mid.faults.contains_key("pre-a"), "the post-mortem is in the ledger");
+
+    // Run 2: a fresh coordinator, same manifest, no fault. Only the
+    // unfinished jobs may execute.
+    let second = dist_opts(&dir, 2, "log_run2.txt");
+    let r2 = must_run(try_execute(&g, &second).unwrap());
+    r2.require_ok(&g).unwrap();
+    let (ran2, resumed2, _, _) = r2.counts();
+    assert_eq!((ran2, resumed2), (5, 3), "b-family resumed/elided, a-family ran");
+    assert_eq!(
+        logged_ids(&dir.join("log_run2.txt")),
+        vec!["a0", "a1", "a2", "a3", "pre-a"],
+        "completed jobs were not re-run"
+    );
+
+    // The recovered grid still matches the sequential ground truth, and
+    // pre-a's completion cleared its ledger entry.
+    let seq = in_process_report(&dir);
+    assert_eq!(summaries(&g, &r2), summaries(&g, &seq));
+    assert!(RunManifest::load(&dir.join("run_manifest.json")).faults.is_empty());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn unspawnable_workers_degrade_to_the_in_process_pool() {
+    let dir = tmp_dir("nospawn");
+    let g = grid_graph();
+    let mut opts = dist_opts(&dir, 2, "mock_log.txt");
+    opts.grid.worker_cmd = Some(vec!["/nonexistent/grades-worker".to_string()]);
+
+    // try_execute reports why…
+    match try_execute(&g, &opts).unwrap() {
+        Dispatch::Fallback(why) => assert!(why.contains("spawn"), "unexpected reason: {why}"),
+        Dispatch::Ran(_) => panic!("no worker binary exists — this must fall back"),
+    }
+
+    // …and the public entry point silently completes on the pool.
+    let runner = MockJobRunner::new(SETTINGS, BackendChoice::Host);
+    let report = execute(&g, &opts, &runner).unwrap();
+    report.require_ok(&g).unwrap();
+    assert!(
+        !dir.join("mock_log.txt").exists(),
+        "no worker process ever ran a job"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn graphs_with_eval_jobs_are_not_distributable() {
+    let dir = tmp_dir("evalgate");
+    let mut g = JobGraph::new();
+    let a = g.add(train("a")).unwrap();
+    g.add(JobSpec::score("a/eval", "fake-cfg", EvalKind::LmSuites, a)).unwrap();
+    let opts = dist_opts(&dir, 2, "mock_log.txt");
+    match try_execute(&g, &opts).unwrap() {
+        Dispatch::Fallback(_) => {}
+        Dispatch::Ran(_) => panic!("eval graphs need in-memory weight handoff"),
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

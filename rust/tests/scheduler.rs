@@ -9,7 +9,7 @@
 //! training — rides on the same determinism argument: each job's
 //! trajectory depends only on its spec, which these tests pin down.)
 
-use std::collections::{BTreeMap, HashSet};
+use std::collections::{BTreeMap, HashMap, HashSet};
 use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Result};
@@ -22,8 +22,8 @@ use grades::coordinator::warmstart::BaseCheckpoint;
 use grades::runtime::backend::BackendChoice;
 use grades::exp::plan::{EvalKind, JobGraph, JobKind, JobSpec};
 use grades::exp::scheduler::{
-    execute, job_settings, EvalPayload, JobRunner, JobStatus, JobSummary, RunManifest,
-    RunnerOutput, SchedulerOptions,
+    execute, job_settings, EvalPayload, JobRunner, JobStatus, JobSummary, RetryPolicy,
+    RunManifest, RunnerOutput, SchedulerOptions,
 };
 use grades::exp::JobResult;
 
@@ -82,6 +82,7 @@ fn fake_summary(spec: &JobSpec, r: &JobResult) -> JobSummary {
         accuracies: r.accuracies.clone(),
         frozen_series: Vec::new(),
         tower_gabs: None,
+        attempts: 1,
     }
 }
 
@@ -92,6 +93,8 @@ struct MockRunner {
     log: Mutex<Vec<String>>,
     panic_on: HashSet<String>,
     fail_on: HashSet<String>,
+    /// id → number of *remaining* transient failures before it succeeds.
+    flaky: Mutex<HashMap<String, usize>>,
 }
 
 impl MockRunner {
@@ -113,6 +116,12 @@ impl JobRunner for MockRunner {
         }
         if self.fail_on.contains(&spec.id) {
             bail!("mock failure in {}", spec.id);
+        }
+        if let Some(left) = self.flaky.lock().unwrap().get_mut(&spec.id) {
+            if *left > 0 {
+                *left -= 1;
+                bail!("mock transient failure in {}", spec.id);
+            }
         }
         if spec.warm_from.is_some() && warm.is_none() {
             bail!("{}: warm checkpoint was not delivered", spec.id);
@@ -458,5 +467,78 @@ fn failed_jobs_are_not_persisted_and_retry_on_resume() {
     let retry = MockRunner::default();
     execute(&g, &sopts, &retry).unwrap().require_ok(&g).unwrap();
     assert_eq!(retry.started(), vec!["flaky".to_string()]);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn transient_failures_are_retried_within_the_run() {
+    let dir = std::env::temp_dir().join("grades_sched_flaky_test");
+    std::fs::remove_dir_all(&dir).ok();
+    let manifest = dir.join("run_manifest.json");
+    let sopts = SchedulerOptions {
+        jobs: 2,
+        manifest_path: Some(manifest.clone()),
+        retry: RetryPolicy { max_attempts: 3, backoff_base_ms: 1, backoff_max_ms: 4 },
+        ..Default::default()
+    };
+    let mut g = JobGraph::new();
+    let flaky = g.add(train("flaky")).unwrap();
+    g.add(train("steady")).unwrap();
+
+    // Fails twice, then succeeds — within the 3-attempt budget.
+    let runner = MockRunner {
+        flaky: Mutex::new([("flaky".to_string(), 2)].into_iter().collect()),
+        ..Default::default()
+    };
+    let report = execute(&g, &sopts, &runner).unwrap();
+    report.require_ok(&g).unwrap();
+    assert_eq!(
+        runner.started().iter().filter(|id| *id == "flaky").count(),
+        3,
+        "two failed attempts plus the success"
+    );
+    // The attempt count is recorded on the summary and in the manifest,
+    // and a successful completion clears the fault ledger.
+    match &report.statuses[flaky] {
+        JobStatus::Done { summary: Some(s), .. } => assert_eq!(s.attempts, 3),
+        _ => panic!("flaky job did not complete with a summary"),
+    }
+    let m = RunManifest::load(&manifest);
+    assert_eq!(m.jobs["flaky"].attempts, 3);
+    assert!(m.faults.is_empty(), "success must clear the fault ledger");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn retry_budget_exhaustion_fails_the_job_and_records_the_ledger() {
+    let dir = std::env::temp_dir().join("grades_sched_budget_test");
+    std::fs::remove_dir_all(&dir).ok();
+    let manifest = dir.join("run_manifest.json");
+    let sopts = SchedulerOptions {
+        jobs: 1,
+        manifest_path: Some(manifest.clone()),
+        retry: RetryPolicy { max_attempts: 2, backoff_base_ms: 0, backoff_max_ms: 0 },
+        ..Default::default()
+    };
+    let mut g = JobGraph::new();
+    let doomed = g.add(train("doomed")).unwrap();
+    let dep = g.add(train("dependent").after(doomed)).unwrap();
+    let runner = MockRunner {
+        fail_on: ["doomed".to_string()].into_iter().collect(),
+        ..Default::default()
+    };
+    let report = execute(&g, &sopts, &runner).unwrap();
+    assert_eq!(
+        runner.started().iter().filter(|id| *id == "doomed").count(),
+        2,
+        "the budget bounds the attempts"
+    );
+    assert!(matches!(report.statuses[doomed], JobStatus::Failed(_)));
+    assert!(matches!(report.statuses[dep], JobStatus::Skipped(_)));
+    // The exhausted job leaves a post-mortem in the manifest's ledger.
+    let m = RunManifest::load(&manifest);
+    let rec = m.faults.get("doomed").expect("exhausted job leaves a fault record");
+    assert_eq!(rec.attempts, 2);
+    assert!(rec.last_error.contains("mock failure"), "ledger keeps the error: {}", rec.last_error);
     std::fs::remove_dir_all(&dir).ok();
 }
