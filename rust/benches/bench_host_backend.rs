@@ -10,7 +10,11 @@
 //! the per-matrix freeze steps disagree, so CI catches a physics drift
 //! between the engines, not just a slowdown.
 //!
-//! `--quick` shortens the measured loops (CI smoke mode).
+//! `--quick` shortens the measured loops (CI smoke mode). `--gate`
+//! additionally compares every `*_steps_per_sec` number against the
+//! committed baseline in `artifacts/bench_baselines/` and fails on a
+//! >10% regression (self-skips with a note when no baseline exists —
+//! the gate never invents numbers).
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -24,6 +28,7 @@ use grades::data;
 use grades::runtime::artifact::{Bundle, Client};
 use grades::runtime::backend::Backend;
 use grades::runtime::host_backend::HostBackend;
+use grades::runtime::host_kernels::{self as kernels, SimdLevel};
 use grades::runtime::session::Session;
 use grades::util::json::{self, Json};
 use grades::util::timer::Timer;
@@ -31,23 +36,34 @@ use grades::util::timer::Timer;
 const CONFIG: &str = "lm-tiny-fp";
 
 fn steps_per_sec(backend: &dyn Backend, iters: usize) -> Result<f64> {
+    let m = backend.manifest();
+    steps_per_sec_plan(backend, iters, &StepPlan::all_active(m.n_components))
+}
+
+fn steps_per_sec_plan(backend: &dyn Backend, iters: usize, plan: &StepPlan) -> Result<f64> {
     let cfg = RepoConfig::by_name(CONFIG)?;
     let mut ds = data::build_lm(&cfg, backend.manifest())?;
     let batch = ds.train.next_batch();
     let m = backend.manifest();
     let mut ctrl = vec![1f32; m.ctrl_len];
     ctrl[1] = 1e-4;
-    let full = StepPlan::all_active(m.n_components);
+    for (ci, c) in ctrl[m.ctrl_mask_offset..m.ctrl_mask_offset + m.n_components]
+        .iter_mut()
+        .enumerate()
+    {
+        *c = if plan.omits(ci) { 0.0 } else { 1.0 };
+    }
+    let lowered = backend.lower_plan(plan);
     let mut session = Session::new(backend);
     session.init(1)?;
     for t in 0..3 {
         ctrl[0] = (t + 1) as f32;
-        session.train_step(&batch, &ctrl, &full)?;
+        session.train_step(&batch, &ctrl, &lowered)?;
     }
     let t0 = Timer::new();
     for t in 0..iters {
         ctrl[0] = (t + 4) as f32;
-        session.train_step(&batch, &ctrl, &full)?;
+        session.train_step(&batch, &ctrl, &lowered)?;
     }
     Ok(iters as f64 / t0.secs())
 }
@@ -73,6 +89,7 @@ fn grades_run(
 
 fn main() -> Result<()> {
     let quick = std::env::args().any(|a| a == "--quick");
+    let gate = std::env::args().any(|a| a == "--gate");
     let iters = if quick { 8 } else { 30 };
     let traj_steps = if quick { 12 } else { 30 };
     let mut report: BTreeMap<String, Json> = BTreeMap::new();
@@ -84,6 +101,56 @@ fn main() -> Result<()> {
     println!("## bench_host_backend ({CONFIG})\n");
     println!("host  backend: {host_sps:8.2} steps/s");
     report.insert("host_steps_per_sec".into(), Json::Num(host_sps));
+
+    // --- host steps/sec trajectory over the freeze progression ---
+    // Three plan shapes bracket a GradES run: all components active,
+    // attention frozen+omitted, and everything omitted with sweep
+    // truncation granted (forward + head backward + masked update — the
+    // floor a fully frozen model converges to).
+    {
+        let m = host.manifest();
+        let n = m.n_components;
+        let all: Vec<usize> = (0..n).collect();
+        let dense = steps_per_sec_plan(&host, iters, &StepPlan::all_active(n))?;
+        let attn = steps_per_sec_plan(
+            &host,
+            iters,
+            &StepPlan::omitting(n, &m.components_where(|c| c.group == "attention")),
+        )?;
+        let opt_only =
+            steps_per_sec_plan(&host, iters, &StepPlan::omitting(n, &all).with_truncation())?;
+        println!("host  trajectory: dense {dense:8.2} | attn-frozen {attn:8.2} | optimizer-only {opt_only:8.2} steps/s");
+        report.insert("dense_steps_per_sec".into(), Json::Num(dense));
+        report.insert("attn_frozen_steps_per_sec".into(), Json::Num(attn));
+        report.insert("optimizer_only_steps_per_sec".into(), Json::Num(opt_only));
+    }
+
+    // --- SIMD + threads A/B on the dense step ---
+    // In-process comparison via the kernel-layer overrides: the scalar
+    // 1-thread floor vs the best SIMD level on 4 workers. Results are
+    // bitwise identical by construction; only wall clock moves.
+    {
+        let n = host.manifest().n_components;
+        let dense = StepPlan::all_active(n);
+        kernels::set_simd_override(Some(SimdLevel::Scalar));
+        kernels::set_thread_override(Some(1));
+        let scalar_1t = steps_per_sec_plan(&host, iters, &dense)?;
+        let level = kernels::best_available();
+        kernels::set_simd_override(Some(level));
+        kernels::set_thread_override(Some(4));
+        let simd_4t = steps_per_sec_plan(&host, iters, &dense)?;
+        kernels::set_simd_override(None);
+        kernels::set_thread_override(None);
+        println!(
+            "host  dense A/B: scalar/1t {scalar_1t:8.2} | {}/4t {simd_4t:8.2} steps/s ({:.2}x)",
+            level.as_str(),
+            simd_4t / scalar_1t
+        );
+        report.insert("scalar_1t_steps_per_sec".into(), Json::Num(scalar_1t));
+        report.insert("simd_4t_steps_per_sec".into(), Json::Num(simd_4t));
+        report.insert("simd_speedup_vs_scalar_1t".into(), Json::Num(simd_4t / scalar_1t));
+        report.insert("simd_level".into(), Json::Str(level.as_str().into()));
+    }
 
     let art = repo_root().join("artifacts").join(CONFIG);
     let loaded = if art.join("manifest.json").exists() {
@@ -145,7 +212,41 @@ fn main() -> Result<()> {
     }
 
     let out = repo_root().join("BENCH_host_backend.json");
-    std::fs::write(&out, json::write(&Json::Obj(report)))?;
+    std::fs::write(&out, json::write(&Json::Obj(report.clone())))?;
     println!("wrote {}", out.display());
+
+    // --- regression gate against the committed baseline ---
+    if gate {
+        let base_path = repo_root().join("artifacts").join("bench_baselines").join(
+            "BENCH_host_backend.json",
+        );
+        if !base_path.exists() {
+            println!(
+                "gate: no committed baseline at {} — skipping (commit a known-good \
+                 BENCH_host_backend.json there to arm the gate)",
+                base_path.display()
+            );
+            return Ok(());
+        }
+        let baseline = json::parse(&std::fs::read_to_string(&base_path)?)?;
+        let Json::Obj(base) = baseline else {
+            anyhow::bail!("gate: baseline {} is not a JSON object", base_path.display());
+        };
+        let mut checked = 0usize;
+        for (key, bval) in &base {
+            if !key.ends_with("_steps_per_sec") {
+                continue;
+            }
+            let Some(cur) = report.get(key) else { continue };
+            let (b, c) = (bval.as_f64()?, cur.as_f64()?);
+            checked += 1;
+            println!("gate: {key}: {c:8.2} vs baseline {b:8.2} ({:+.1}%)", (c / b - 1.0) * 100.0);
+            ensure!(
+                c >= 0.9 * b,
+                "gate: {key} regressed >10%: {c:.2} steps/s vs baseline {b:.2}"
+            );
+        }
+        println!("gate: {checked} steps/sec gauges within 10% of baseline");
+    }
     Ok(())
 }

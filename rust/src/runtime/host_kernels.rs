@@ -1,0 +1,1081 @@
+//! The host engine's math core: one cache-blocked, 8-wide-lane
+//! microkernel behind every matmul variant and hot reduction, with
+//! runtime-dispatched SIMD (SSE2/AVX2 via `std::arch`) and a scalar
+//! fallback that emulates the exact same lane-split order.
+//!
+//! # The lane-split determinism contract
+//!
+//! Every reduction of length-`n` f32 streams accumulates element `j`
+//! into f64 lane `j mod 8` and collapses the eight lanes in one fixed
+//! tree — [`reduce8`]: `((l0+l4)+(l2+l6)) + ((l1+l5)+(l3+l7))`. The
+//! AVX2 kernel holds the lanes in two `__m256d` accumulators, the SSE2
+//! kernel in four `__m128d`, and the scalar fallback in a `[f64; 8]` —
+//! all three perform the identical sequence of IEEE f64 operations per
+//! lane (widen-then-multiply-then-add, never fused), so **scalar, SSE2
+//! and AVX2 results are bitwise identical**. Threading partitions work
+//! at whole-output-element granularity, so **every
+//! `GRADES_HOST_THREADS` count is bitwise identical** too. The property
+//! suite (`rust/tests/properties.rs`) and the in-module tests pin both
+//! invariants.
+//!
+//! This fixed lane order is a *different* (faster) reduction order than
+//! the pre-kernel serial loops — a one-time, intentional trajectory
+//! change (see `artifacts/golden/README.md`).
+//!
+//! # Dispatch
+//!
+//! | `GRADES_HOST_SIMD` | x86_64 + AVX2 | x86_64 (no AVX2) | other |
+//! |---|---|---|---|
+//! | unset / `auto` / `1` | AVX2 | SSE2 | scalar |
+//! | `0` | scalar | scalar | scalar |
+//!
+//! Thread count comes from `GRADES_HOST_THREADS` (default 1) and only
+//! engages above a work floor (`threads_for`); both knobs have
+//! process-global test/bench overrides ([`set_simd_override`],
+//! [`set_thread_override`]) that never exceed what the CPU supports.
+//!
+//! ```
+//! use grades::runtime::host_kernels::{matmul, matmul_with, SimdLevel};
+//! let a = vec![1.0f32, 2.0, 3.0, 4.0]; // [2,2] row-major
+//! let b = vec![5.0f32, 6.0, 7.0, 8.0]; // [2,2]
+//! let c = matmul(&a, &b, 2, 2, 2);
+//! assert_eq!(c, vec![19.0, 22.0, 43.0, 50.0]);
+//! // the scalar fallback is bitwise identical to the dispatched path
+//! assert_eq!(c, matmul_with(SimdLevel::Scalar, 1, &a, &b, 2, 2, 2));
+//! ```
+
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Accumulator lanes per reduction: element `j` lands in lane `j % 8`.
+pub const LANES: usize = 8;
+
+// ---------------------------------------------------------------------------
+// SIMD level selection
+// ---------------------------------------------------------------------------
+
+/// A SIMD dispatch level. Ordered: `Scalar < Sse2 < Avx2`, so clamping
+/// a requested level to [`best_available`] is a `min`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum SimdLevel {
+    /// Portable fallback emulating the 8-lane split in plain Rust.
+    Scalar,
+    /// 128-bit `std::arch` kernels (x86_64 baseline — always available there).
+    Sse2,
+    /// 256-bit `std::arch` kernels (runtime-detected).
+    Avx2,
+}
+
+impl SimdLevel {
+    /// Lower-case name for logs and bench reports.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Sse2 => "sse2",
+            SimdLevel::Avx2 => "avx2",
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn best_available_impl() -> SimdLevel {
+    if std::arch::is_x86_feature_detected!("avx2") {
+        SimdLevel::Avx2
+    } else {
+        SimdLevel::Sse2
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn best_available_impl() -> SimdLevel {
+    SimdLevel::Scalar
+}
+
+/// The widest kernel this CPU can run (cached; the detection itself is
+/// a one-time CPUID behind `is_x86_feature_detected`).
+pub fn best_available() -> SimdLevel {
+    static L: OnceLock<SimdLevel> = OnceLock::new();
+    *L.get_or_init(best_available_impl)
+}
+
+/// Every level runnable on this CPU, narrowest first — what the
+/// determinism property tests sweep.
+pub fn available_levels() -> Vec<SimdLevel> {
+    let mut levels = vec![SimdLevel::Scalar];
+    #[cfg(target_arch = "x86_64")]
+    {
+        levels.push(SimdLevel::Sse2);
+        if best_available() == SimdLevel::Avx2 {
+            levels.push(SimdLevel::Avx2);
+        }
+    }
+    levels
+}
+
+/// `GRADES_HOST_SIMD` with the `GRADES_HOST_THREADS`-style warn-once
+/// validation: `0` forces the scalar fallback, `1`/`auto`/unset pick
+/// the best detected level, anything else warns once and auto-detects.
+fn env_simd() -> SimdLevel {
+    static L: OnceLock<SimdLevel> = OnceLock::new();
+    *L.get_or_init(|| match std::env::var("GRADES_HOST_SIMD") {
+        Err(_) => best_available(),
+        Ok(v) => match v.trim() {
+            "" | "auto" => best_available(),
+            "0" => SimdLevel::Scalar,
+            "1" => {
+                if best_available() == SimdLevel::Scalar {
+                    eprintln!(
+                        "[host] GRADES_HOST_SIMD=1: no SIMD kernels for this target; \
+                         using the scalar fallback (results are bitwise identical)"
+                    );
+                }
+                best_available()
+            }
+            other => {
+                eprintln!(
+                    "[host] ignoring GRADES_HOST_SIMD={other:?}: expected 0, 1 or auto; \
+                     using the auto-detected SIMD level"
+                );
+                best_available()
+            }
+        },
+    })
+}
+
+/// Process-global override slot: 0 = none, else `SimdLevel as u8 + 1`.
+static SIMD_OVERRIDE: AtomicU8 = AtomicU8::new(0);
+/// Process-global thread override: 0 = none.
+static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Force a dispatch level for this process (benches A/B the scalar
+/// fallback against the SIMD path with this), or `None` to restore the
+/// `GRADES_HOST_SIMD` behavior. Requests wider than the CPU supports
+/// are clamped to [`best_available`] — never an illegal instruction.
+/// Purely a wall-clock knob: results are bitwise identical either way.
+pub fn set_simd_override(level: Option<SimdLevel>) {
+    let v = match level {
+        None => 0,
+        Some(l) => l.min(best_available()) as u8 + 1,
+    };
+    SIMD_OVERRIDE.store(v, Ordering::Relaxed);
+}
+
+/// The level the dispatched entry points (`matmul`, `dot8`, …) run at:
+/// the [`set_simd_override`] value if set, else `GRADES_HOST_SIMD`.
+pub fn simd_level() -> SimdLevel {
+    match SIMD_OVERRIDE.load(Ordering::Relaxed) {
+        1 => SimdLevel::Scalar,
+        2 => SimdLevel::Sse2,
+        3 => SimdLevel::Avx2,
+        _ => env_simd(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Threading
+// ---------------------------------------------------------------------------
+
+/// Worker count for the blocked kernels: `GRADES_HOST_THREADS`, with
+/// the `GRADES_JOBS`-style warn-once validation. Accepted values: a
+/// positive integer; unset/empty means 1 (serial — the host engine is a
+/// correctness oracle first, and tiny configs lose more to per-call
+/// spawn overhead than they gain). Results are bitwise identical for
+/// every value, so this is purely a wall-clock knob.
+pub fn host_threads() -> usize {
+    match THREAD_OVERRIDE.load(Ordering::Relaxed) {
+        0 => env_threads(),
+        n => n,
+    }
+}
+
+/// Force the worker count for this process (`None` restores the
+/// `GRADES_HOST_THREADS` behavior; `Some(0)` is treated as `Some(1)`).
+pub fn set_thread_override(threads: Option<usize>) {
+    THREAD_OVERRIDE.store(threads.map(|n| n.max(1)).unwrap_or(0), Ordering::Relaxed);
+}
+
+fn env_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| match std::env::var("GRADES_HOST_THREADS") {
+        Err(_) => 1,
+        Ok(v) if v.trim().is_empty() => 1,
+        Ok(v) => match v.trim().parse::<usize>() {
+            Ok(n) if n >= 1 => n,
+            _ => {
+                eprintln!(
+                    "[host] ignoring GRADES_HOST_THREADS={v:?}: expected a positive \
+                     integer worker count; using the serial kernel loops"
+                );
+                1
+            }
+        },
+    })
+}
+
+/// Below this many fused multiply-adds a kernel stays serial even with
+/// threads configured: scoped-thread spawn overhead (~tens of µs) would
+/// eat the win on micro shapes.
+const PAR_MIN_FMAS: usize = 1 << 18;
+
+/// [`host_threads`] gated on the work size: serial under the
+/// `PAR_MIN_FMAS = 2^18` floor.
+pub fn threads_for(work: usize) -> usize {
+    if work < PAR_MIN_FMAS {
+        1
+    } else {
+        host_threads()
+    }
+}
+
+/// Split `out` into contiguous row chunks and run `body(first_row, chunk)`
+/// on up to `threads` scoped workers. Every output element is written by
+/// exactly one worker running the same per-element computation as the
+/// serial path, so results are bitwise identical for every thread count.
+fn par_row_chunks<T: Send, F>(out: &mut [T], row_len: usize, threads: usize, body: F)
+where
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let rows = if row_len == 0 { 0 } else { out.len() / row_len };
+    let t = threads.min(rows).max(1);
+    if t <= 1 {
+        body(0, out);
+        return;
+    }
+    let chunk_rows = rows.div_ceil(t);
+    std::thread::scope(|s| {
+        let mut rest = out;
+        let mut row0 = 0usize;
+        while !rest.is_empty() {
+            let take = (chunk_rows * row_len).min(rest.len());
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(take);
+            rest = tail;
+            let body = &body;
+            let r0 = row0;
+            s.spawn(move || body(r0, head));
+            row0 += take / row_len;
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Lane kernels: scalar fallback
+// ---------------------------------------------------------------------------
+
+/// Collapse the 8 lane accumulators in the one fixed tree every kernel
+/// and every thread count shares: `((l0+l4)+(l2+l6)) + ((l1+l5)+(l3+l7))`.
+#[inline(always)]
+pub fn reduce8(l: &[f64; LANES]) -> f64 {
+    ((l[0] + l[4]) + (l[2] + l[6])) + ((l[1] + l[5]) + (l[3] + l[7]))
+}
+
+fn dot8_lanes_scalar(a: &[f32], b: &[f32]) -> [f64; LANES] {
+    debug_assert_eq!(a.len(), b.len());
+    let mut lanes = [0f64; LANES];
+    let main = a.len() - a.len() % LANES;
+    let (am, at) = a.split_at(main);
+    let (bm, bt) = b.split_at(main);
+    for (ac, bc) in am.chunks_exact(LANES).zip(bm.chunks_exact(LANES)) {
+        for l in 0..LANES {
+            lanes[l] += ac[l] as f64 * bc[l] as f64;
+        }
+    }
+    for (l, (&av, &bv)) in at.iter().zip(bt.iter()).enumerate() {
+        lanes[l] += av as f64 * bv as f64;
+    }
+    lanes
+}
+
+fn dot3_lanes_scalar(a: &[f32], b: &[f32], c: &[f32]) -> [f64; LANES] {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), c.len());
+    let mut lanes = [0f64; LANES];
+    let main = a.len() - a.len() % LANES;
+    for j in (0..main).step_by(LANES) {
+        for l in 0..LANES {
+            lanes[l] += (a[j + l] as f64 * b[j + l] as f64) * c[j + l] as f64;
+        }
+    }
+    for j in main..a.len() {
+        lanes[j % LANES] += (a[j] as f64 * b[j] as f64) * c[j] as f64;
+    }
+    lanes
+}
+
+fn abs_lanes_scalar(a: &[f32]) -> [f64; LANES] {
+    let mut lanes = [0f64; LANES];
+    let main = a.len() - a.len() % LANES;
+    let (am, at) = a.split_at(main);
+    for ac in am.chunks_exact(LANES) {
+        for l in 0..LANES {
+            lanes[l] += ac[l].abs() as f64;
+        }
+    }
+    for (l, &av) in at.iter().enumerate() {
+        lanes[l] += av.abs() as f64;
+    }
+    lanes
+}
+
+fn absdiff_lanes_scalar(a: &[f32], b: &[f32]) -> [f64; LANES] {
+    debug_assert_eq!(a.len(), b.len());
+    let mut lanes = [0f64; LANES];
+    let main = a.len() - a.len() % LANES;
+    let (am, at) = a.split_at(main);
+    let (bm, bt) = b.split_at(main);
+    for (ac, bc) in am.chunks_exact(LANES).zip(bm.chunks_exact(LANES)) {
+        for l in 0..LANES {
+            // f32 subtract first (exact |a-b| in f32), then widen —
+            // the SIMD kernels do the identical op order
+            lanes[l] += (ac[l] - bc[l]).abs() as f64;
+        }
+    }
+    for (l, (&av, &bv)) in at.iter().zip(bt.iter()).enumerate() {
+        lanes[l] += (av - bv).abs() as f64;
+    }
+    lanes
+}
+
+// ---------------------------------------------------------------------------
+// Lane kernels: SSE2 (x86_64 baseline)
+// ---------------------------------------------------------------------------
+//
+// Lane layout per 8-element step `j`: acc01 = lanes {0,1}, acc23 =
+// {2,3}, acc45 = {4,5}, acc67 = {6,7}; widen with cvtps_pd (low pair)
+// and movehl (high pair), multiply, then add — never an FMA, matching
+// the scalar fallback op-for-op.
+
+#[cfg(target_arch = "x86_64")]
+fn dot8_lanes_sse2(a: &[f32], b: &[f32]) -> [f64; LANES] {
+    use std::arch::x86_64::*;
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let main = n - n % LANES;
+    let mut lanes = [0f64; LANES];
+    unsafe {
+        let (ap, bp) = (a.as_ptr(), b.as_ptr());
+        let mut acc01 = _mm_setzero_pd();
+        let mut acc23 = _mm_setzero_pd();
+        let mut acc45 = _mm_setzero_pd();
+        let mut acc67 = _mm_setzero_pd();
+        let mut j = 0usize;
+        while j < main {
+            let av0 = _mm_loadu_ps(ap.add(j));
+            let av1 = _mm_loadu_ps(ap.add(j + 4));
+            let bv0 = _mm_loadu_ps(bp.add(j));
+            let bv1 = _mm_loadu_ps(bp.add(j + 4));
+            acc01 = _mm_add_pd(acc01, _mm_mul_pd(_mm_cvtps_pd(av0), _mm_cvtps_pd(bv0)));
+            acc23 = _mm_add_pd(
+                acc23,
+                _mm_mul_pd(
+                    _mm_cvtps_pd(_mm_movehl_ps(av0, av0)),
+                    _mm_cvtps_pd(_mm_movehl_ps(bv0, bv0)),
+                ),
+            );
+            acc45 = _mm_add_pd(acc45, _mm_mul_pd(_mm_cvtps_pd(av1), _mm_cvtps_pd(bv1)));
+            acc67 = _mm_add_pd(
+                acc67,
+                _mm_mul_pd(
+                    _mm_cvtps_pd(_mm_movehl_ps(av1, av1)),
+                    _mm_cvtps_pd(_mm_movehl_ps(bv1, bv1)),
+                ),
+            );
+            j += LANES;
+        }
+        _mm_storeu_pd(lanes.as_mut_ptr(), acc01);
+        _mm_storeu_pd(lanes.as_mut_ptr().add(2), acc23);
+        _mm_storeu_pd(lanes.as_mut_ptr().add(4), acc45);
+        _mm_storeu_pd(lanes.as_mut_ptr().add(6), acc67);
+    }
+    for (l, j) in (main..n).enumerate() {
+        lanes[l] += a[j] as f64 * b[j] as f64;
+    }
+    lanes
+}
+
+#[cfg(target_arch = "x86_64")]
+fn dot3_lanes_sse2(a: &[f32], b: &[f32], c: &[f32]) -> [f64; LANES] {
+    use std::arch::x86_64::*;
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), c.len());
+    let n = a.len();
+    let main = n - n % LANES;
+    let mut lanes = [0f64; LANES];
+    unsafe {
+        let (ap, bp, cp) = (a.as_ptr(), b.as_ptr(), c.as_ptr());
+        let mut acc01 = _mm_setzero_pd();
+        let mut acc23 = _mm_setzero_pd();
+        let mut acc45 = _mm_setzero_pd();
+        let mut acc67 = _mm_setzero_pd();
+        let mut j = 0usize;
+        while j < main {
+            for (acc, off, hi) in [
+                (&mut acc01, 0usize, false),
+                (&mut acc23, 0, true),
+                (&mut acc45, 4, false),
+                (&mut acc67, 4, true),
+            ] {
+                let av = _mm_loadu_ps(ap.add(j + off));
+                let bv = _mm_loadu_ps(bp.add(j + off));
+                let cv = _mm_loadu_ps(cp.add(j + off));
+                let (aw, bw, cw) = if hi {
+                    (
+                        _mm_cvtps_pd(_mm_movehl_ps(av, av)),
+                        _mm_cvtps_pd(_mm_movehl_ps(bv, bv)),
+                        _mm_cvtps_pd(_mm_movehl_ps(cv, cv)),
+                    )
+                } else {
+                    (_mm_cvtps_pd(av), _mm_cvtps_pd(bv), _mm_cvtps_pd(cv))
+                };
+                *acc = _mm_add_pd(*acc, _mm_mul_pd(_mm_mul_pd(aw, bw), cw));
+            }
+            j += LANES;
+        }
+        _mm_storeu_pd(lanes.as_mut_ptr(), acc01);
+        _mm_storeu_pd(lanes.as_mut_ptr().add(2), acc23);
+        _mm_storeu_pd(lanes.as_mut_ptr().add(4), acc45);
+        _mm_storeu_pd(lanes.as_mut_ptr().add(6), acc67);
+    }
+    for (l, j) in (main..n).enumerate() {
+        lanes[l] += (a[j] as f64 * b[j] as f64) * c[j] as f64;
+    }
+    lanes
+}
+
+#[cfg(target_arch = "x86_64")]
+fn abs_lanes_sse2(a: &[f32]) -> [f64; LANES] {
+    use std::arch::x86_64::*;
+    let n = a.len();
+    let main = n - n % LANES;
+    let mut lanes = [0f64; LANES];
+    unsafe {
+        let ap = a.as_ptr();
+        let sign = _mm_set1_ps(-0.0);
+        let mut acc01 = _mm_setzero_pd();
+        let mut acc23 = _mm_setzero_pd();
+        let mut acc45 = _mm_setzero_pd();
+        let mut acc67 = _mm_setzero_pd();
+        let mut j = 0usize;
+        while j < main {
+            let av0 = _mm_andnot_ps(sign, _mm_loadu_ps(ap.add(j)));
+            let av1 = _mm_andnot_ps(sign, _mm_loadu_ps(ap.add(j + 4)));
+            acc01 = _mm_add_pd(acc01, _mm_cvtps_pd(av0));
+            acc23 = _mm_add_pd(acc23, _mm_cvtps_pd(_mm_movehl_ps(av0, av0)));
+            acc45 = _mm_add_pd(acc45, _mm_cvtps_pd(av1));
+            acc67 = _mm_add_pd(acc67, _mm_cvtps_pd(_mm_movehl_ps(av1, av1)));
+            j += LANES;
+        }
+        _mm_storeu_pd(lanes.as_mut_ptr(), acc01);
+        _mm_storeu_pd(lanes.as_mut_ptr().add(2), acc23);
+        _mm_storeu_pd(lanes.as_mut_ptr().add(4), acc45);
+        _mm_storeu_pd(lanes.as_mut_ptr().add(6), acc67);
+    }
+    for (l, j) in (main..n).enumerate() {
+        lanes[l] += a[j].abs() as f64;
+    }
+    lanes
+}
+
+#[cfg(target_arch = "x86_64")]
+fn absdiff_lanes_sse2(a: &[f32], b: &[f32]) -> [f64; LANES] {
+    use std::arch::x86_64::*;
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let main = n - n % LANES;
+    let mut lanes = [0f64; LANES];
+    unsafe {
+        let (ap, bp) = (a.as_ptr(), b.as_ptr());
+        let sign = _mm_set1_ps(-0.0);
+        let mut acc01 = _mm_setzero_pd();
+        let mut acc23 = _mm_setzero_pd();
+        let mut acc45 = _mm_setzero_pd();
+        let mut acc67 = _mm_setzero_pd();
+        let mut j = 0usize;
+        while j < main {
+            let d0 = _mm_andnot_ps(
+                sign,
+                _mm_sub_ps(_mm_loadu_ps(ap.add(j)), _mm_loadu_ps(bp.add(j))),
+            );
+            let d1 = _mm_andnot_ps(
+                sign,
+                _mm_sub_ps(_mm_loadu_ps(ap.add(j + 4)), _mm_loadu_ps(bp.add(j + 4))),
+            );
+            acc01 = _mm_add_pd(acc01, _mm_cvtps_pd(d0));
+            acc23 = _mm_add_pd(acc23, _mm_cvtps_pd(_mm_movehl_ps(d0, d0)));
+            acc45 = _mm_add_pd(acc45, _mm_cvtps_pd(d1));
+            acc67 = _mm_add_pd(acc67, _mm_cvtps_pd(_mm_movehl_ps(d1, d1)));
+            j += LANES;
+        }
+        _mm_storeu_pd(lanes.as_mut_ptr(), acc01);
+        _mm_storeu_pd(lanes.as_mut_ptr().add(2), acc23);
+        _mm_storeu_pd(lanes.as_mut_ptr().add(4), acc45);
+        _mm_storeu_pd(lanes.as_mut_ptr().add(6), acc67);
+    }
+    for (l, j) in (main..n).enumerate() {
+        lanes[l] += (a[j] - b[j]).abs() as f64;
+    }
+    lanes
+}
+
+// ---------------------------------------------------------------------------
+// Lane kernels: AVX2
+// ---------------------------------------------------------------------------
+//
+// Lane layout per 8-element step: acc_lo = lanes {0..3} (the low 128
+// bits of the f32 load), acc_hi = lanes {4..7}. Widen → multiply → add,
+// never an FMA — identical IEEE op sequence per lane as scalar/SSE2.
+
+/// # Safety
+/// Requires AVX2 (callers go through the [`best_available`]-clamped
+/// dispatch, which only selects this after runtime detection).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot8_lanes_avx2_impl(a: &[f32], b: &[f32]) -> [f64; LANES] {
+    use std::arch::x86_64::*;
+    let n = a.len();
+    let main = n - n % LANES;
+    let mut lanes = [0f64; LANES];
+    let (ap, bp) = (a.as_ptr(), b.as_ptr());
+    let mut acc_lo = _mm256_setzero_pd();
+    let mut acc_hi = _mm256_setzero_pd();
+    let mut j = 0usize;
+    while j < main {
+        let av = _mm256_loadu_ps(ap.add(j));
+        let bv = _mm256_loadu_ps(bp.add(j));
+        let alo = _mm256_cvtps_pd(_mm256_castps256_ps128(av));
+        let blo = _mm256_cvtps_pd(_mm256_castps256_ps128(bv));
+        let ahi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(av));
+        let bhi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(bv));
+        acc_lo = _mm256_add_pd(acc_lo, _mm256_mul_pd(alo, blo));
+        acc_hi = _mm256_add_pd(acc_hi, _mm256_mul_pd(ahi, bhi));
+        j += LANES;
+    }
+    _mm256_storeu_pd(lanes.as_mut_ptr(), acc_lo);
+    _mm256_storeu_pd(lanes.as_mut_ptr().add(4), acc_hi);
+    for (l, jj) in (main..n).enumerate() {
+        lanes[l] += a[jj] as f64 * b[jj] as f64;
+    }
+    lanes
+}
+
+/// # Safety
+/// Requires AVX2 (dispatch-gated, see [`dot8_lanes_avx2_impl`]).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot3_lanes_avx2_impl(a: &[f32], b: &[f32], c: &[f32]) -> [f64; LANES] {
+    use std::arch::x86_64::*;
+    let n = a.len();
+    let main = n - n % LANES;
+    let mut lanes = [0f64; LANES];
+    let (ap, bp, cp) = (a.as_ptr(), b.as_ptr(), c.as_ptr());
+    let mut acc_lo = _mm256_setzero_pd();
+    let mut acc_hi = _mm256_setzero_pd();
+    let mut j = 0usize;
+    while j < main {
+        let av = _mm256_loadu_ps(ap.add(j));
+        let bv = _mm256_loadu_ps(bp.add(j));
+        let cv = _mm256_loadu_ps(cp.add(j));
+        let alo = _mm256_cvtps_pd(_mm256_castps256_ps128(av));
+        let blo = _mm256_cvtps_pd(_mm256_castps256_ps128(bv));
+        let clo = _mm256_cvtps_pd(_mm256_castps256_ps128(cv));
+        let ahi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(av));
+        let bhi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(bv));
+        let chi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(cv));
+        acc_lo = _mm256_add_pd(acc_lo, _mm256_mul_pd(_mm256_mul_pd(alo, blo), clo));
+        acc_hi = _mm256_add_pd(acc_hi, _mm256_mul_pd(_mm256_mul_pd(ahi, bhi), chi));
+        j += LANES;
+    }
+    _mm256_storeu_pd(lanes.as_mut_ptr(), acc_lo);
+    _mm256_storeu_pd(lanes.as_mut_ptr().add(4), acc_hi);
+    for (l, jj) in (main..n).enumerate() {
+        lanes[l] += (a[jj] as f64 * b[jj] as f64) * c[jj] as f64;
+    }
+    lanes
+}
+
+/// # Safety
+/// Requires AVX2 (dispatch-gated, see [`dot8_lanes_avx2_impl`]).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn abs_lanes_avx2_impl(a: &[f32]) -> [f64; LANES] {
+    use std::arch::x86_64::*;
+    let n = a.len();
+    let main = n - n % LANES;
+    let mut lanes = [0f64; LANES];
+    let ap = a.as_ptr();
+    let sign = _mm256_set1_ps(-0.0);
+    let mut acc_lo = _mm256_setzero_pd();
+    let mut acc_hi = _mm256_setzero_pd();
+    let mut j = 0usize;
+    while j < main {
+        let av = _mm256_andnot_ps(sign, _mm256_loadu_ps(ap.add(j)));
+        acc_lo = _mm256_add_pd(acc_lo, _mm256_cvtps_pd(_mm256_castps256_ps128(av)));
+        acc_hi = _mm256_add_pd(acc_hi, _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(av)));
+        j += LANES;
+    }
+    _mm256_storeu_pd(lanes.as_mut_ptr(), acc_lo);
+    _mm256_storeu_pd(lanes.as_mut_ptr().add(4), acc_hi);
+    for (l, jj) in (main..n).enumerate() {
+        lanes[l] += a[jj].abs() as f64;
+    }
+    lanes
+}
+
+/// # Safety
+/// Requires AVX2 (dispatch-gated, see [`dot8_lanes_avx2_impl`]).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn absdiff_lanes_avx2_impl(a: &[f32], b: &[f32]) -> [f64; LANES] {
+    use std::arch::x86_64::*;
+    let n = a.len();
+    let main = n - n % LANES;
+    let mut lanes = [0f64; LANES];
+    let (ap, bp) = (a.as_ptr(), b.as_ptr());
+    let sign = _mm256_set1_ps(-0.0);
+    let mut acc_lo = _mm256_setzero_pd();
+    let mut acc_hi = _mm256_setzero_pd();
+    let mut j = 0usize;
+    while j < main {
+        let dv = _mm256_andnot_ps(
+            sign,
+            _mm256_sub_ps(_mm256_loadu_ps(ap.add(j)), _mm256_loadu_ps(bp.add(j))),
+        );
+        acc_lo = _mm256_add_pd(acc_lo, _mm256_cvtps_pd(_mm256_castps256_ps128(dv)));
+        acc_hi = _mm256_add_pd(acc_hi, _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(dv)));
+        j += LANES;
+    }
+    _mm256_storeu_pd(lanes.as_mut_ptr(), acc_lo);
+    _mm256_storeu_pd(lanes.as_mut_ptr().add(4), acc_hi);
+    for (l, jj) in (main..n).enumerate() {
+        lanes[l] += (a[jj] - b[jj]).abs() as f64;
+    }
+    lanes
+}
+
+// safe wrappers (the dispatch guarantees the feature is present)
+#[cfg(target_arch = "x86_64")]
+fn dot8_lanes_avx2(a: &[f32], b: &[f32]) -> [f64; LANES] {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert!(best_available() == SimdLevel::Avx2);
+    unsafe { dot8_lanes_avx2_impl(a, b) }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn dot3_lanes_avx2(a: &[f32], b: &[f32], c: &[f32]) -> [f64; LANES] {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), c.len());
+    debug_assert!(best_available() == SimdLevel::Avx2);
+    unsafe { dot3_lanes_avx2_impl(a, b, c) }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn abs_lanes_avx2(a: &[f32]) -> [f64; LANES] {
+    debug_assert!(best_available() == SimdLevel::Avx2);
+    unsafe { abs_lanes_avx2_impl(a) }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn absdiff_lanes_avx2(a: &[f32], b: &[f32]) -> [f64; LANES] {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert!(best_available() == SimdLevel::Avx2);
+    unsafe { absdiff_lanes_avx2_impl(a, b) }
+}
+
+// ---------------------------------------------------------------------------
+// Reduction entry points
+// ---------------------------------------------------------------------------
+
+fn dot8_lanes(level: SimdLevel, a: &[f32], b: &[f32]) -> [f64; LANES] {
+    match level {
+        SimdLevel::Scalar => dot8_lanes_scalar(a, b),
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse2 => dot8_lanes_sse2(a, b),
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => dot8_lanes_avx2(a, b),
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => dot8_lanes_scalar(a, b),
+    }
+}
+
+fn dot3_lanes(level: SimdLevel, a: &[f32], b: &[f32], c: &[f32]) -> [f64; LANES] {
+    match level {
+        SimdLevel::Scalar => dot3_lanes_scalar(a, b, c),
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse2 => dot3_lanes_sse2(a, b, c),
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => dot3_lanes_avx2(a, b, c),
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => dot3_lanes_scalar(a, b, c),
+    }
+}
+
+fn abs_lanes(level: SimdLevel, a: &[f32]) -> [f64; LANES] {
+    match level {
+        SimdLevel::Scalar => abs_lanes_scalar(a),
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse2 => abs_lanes_sse2(a),
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => abs_lanes_avx2(a),
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => abs_lanes_scalar(a),
+    }
+}
+
+fn absdiff_lanes(level: SimdLevel, a: &[f32], b: &[f32]) -> [f64; LANES] {
+    match level {
+        SimdLevel::Scalar => absdiff_lanes_scalar(a, b),
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse2 => absdiff_lanes_sse2(a, b),
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => absdiff_lanes_avx2(a, b),
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => absdiff_lanes_scalar(a, b),
+    }
+}
+
+/// Lane-split dot product `Σ aⱼ·bⱼ` in f64 (the microkernel's reduction,
+/// dispatched at [`simd_level`]).
+pub fn dot8(a: &[f32], b: &[f32]) -> f64 {
+    dot8_with(simd_level(), a, b)
+}
+
+/// [`dot8`] at an explicit level (the determinism tests sweep these).
+pub fn dot8_with(level: SimdLevel, a: &[f32], b: &[f32]) -> f64 {
+    reduce8(&dot8_lanes(level, a, b))
+}
+
+/// Lane-split triple product `Σ (aⱼ·bⱼ)·cⱼ` in f64 (RMSNorm backward's
+/// `Σ dy·scale·x`).
+pub fn dot3_8(a: &[f32], b: &[f32], c: &[f32]) -> f64 {
+    dot3_8_with(simd_level(), a, b, c)
+}
+
+/// [`dot3_8`] at an explicit level.
+pub fn dot3_8_with(level: SimdLevel, a: &[f32], b: &[f32], c: &[f32]) -> f64 {
+    reduce8(&dot3_lanes(level, a, b, c))
+}
+
+/// Lane-split L1 norm `Σ |aⱼ|` in f64 (Eq. 1 `‖∇W‖₁` and the global
+/// gradient norm).
+pub fn abs_sum8(a: &[f32]) -> f64 {
+    abs_sum8_with(simd_level(), a)
+}
+
+/// [`abs_sum8`] at an explicit level.
+pub fn abs_sum8_with(level: SimdLevel, a: &[f32]) -> f64 {
+    reduce8(&abs_lanes(level, a))
+}
+
+/// Lane-split L1 distance `Σ |aⱼ − bⱼ|` in f64, subtracting in f32
+/// first like the compiled graphs (Eq. 1 `‖∇Wₜ − ∇Wₜ₋₁‖₁`).
+pub fn abs_diff_sum8(a: &[f32], b: &[f32]) -> f64 {
+    abs_diff_sum8_with(simd_level(), a, b)
+}
+
+/// [`abs_diff_sum8`] at an explicit level.
+pub fn abs_diff_sum8_with(level: SimdLevel, a: &[f32], b: &[f32]) -> f64 {
+    reduce8(&absdiff_lanes(level, a, b))
+}
+
+// ---------------------------------------------------------------------------
+// The gemm microkernel + packing
+// ---------------------------------------------------------------------------
+
+/// Output rows per cache block: one block of packed right-hand rows
+/// (`J_BLOCK · kdim` f32s — ≤48 KiB at the tiny configs' largest kdim)
+/// stays L1/L2-hot while the left-hand rows stream past it.
+const J_BLOCK: usize = 32;
+
+/// Exact (no FP ops) tiled transpose of a row-major `[rows, cols]`
+/// matrix into `[cols, rows]` — the packing step that turns every
+/// matmul variant into the one row·row microkernel.
+pub fn transpose(src: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    debug_assert_eq!(src.len(), rows * cols);
+    const TILE: usize = 32;
+    let mut out = vec![0f32; rows * cols];
+    for r0 in (0..rows).step_by(TILE) {
+        for c0 in (0..cols).step_by(TILE) {
+            for r in r0..(r0 + TILE).min(rows) {
+                for c in c0..(c0 + TILE).min(cols) {
+                    out[c * rows + r] = src[r * cols + c];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// `out[i, j] = Σₓ l[i, x]·r[j, x]` for `l: [rows_l, kdim]`,
+/// `r: [rows_r, kdim]` — the single shared microkernel every matmul
+/// variant reduces to after packing. Blocked over `J_BLOCK` right-hand
+/// rows; threaded over left-hand rows; each output element is one
+/// lane-split [`dot8_with`], so blocking and threading never change a
+/// bit.
+fn gemm(
+    level: SimdLevel,
+    threads: usize,
+    l: &[f32],
+    r: &[f32],
+    rows_l: usize,
+    rows_r: usize,
+    kdim: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(l.len(), rows_l * kdim);
+    debug_assert_eq!(r.len(), rows_r * kdim);
+    let mut out = vec![0f32; rows_l * rows_r];
+    par_row_chunks(&mut out, rows_r, threads, |row0, chunk| match level {
+        SimdLevel::Scalar => gemm_block(dot8_lanes_scalar, l, r, rows_r, kdim, row0, chunk),
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse2 => gemm_block(dot8_lanes_sse2, l, r, rows_r, kdim, row0, chunk),
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => gemm_block(dot8_lanes_avx2, l, r, rows_r, kdim, row0, chunk),
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => gemm_block(dot8_lanes_scalar, l, r, rows_r, kdim, row0, chunk),
+    });
+    out
+}
+
+#[inline(always)]
+fn gemm_block<F>(dot: F, l: &[f32], r: &[f32], rows_r: usize, kdim: usize, row0: usize, chunk: &mut [f32])
+where
+    F: Fn(&[f32], &[f32]) -> [f64; LANES],
+{
+    for jb in (0..rows_r).step_by(J_BLOCK) {
+        let jend = (jb + J_BLOCK).min(rows_r);
+        for (il, orow) in chunk.chunks_mut(rows_r).enumerate() {
+            let i = row0 + il;
+            let lrow = &l[i * kdim..(i + 1) * kdim];
+            for (j, o) in orow[jb..jend].iter_mut().enumerate() {
+                let rrow = &r[(jb + j) * kdim..(jb + j + 1) * kdim];
+                *o = reduce8(&dot(lrow, rrow)) as f32;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Matmul entry points (the six variants, one microkernel)
+// ---------------------------------------------------------------------------
+
+/// `out[m,n] = a[m,k] @ b[k,n]` (dispatched level + work-gated threads).
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    matmul_with(simd_level(), threads_for(m * k * n), a, b, m, k, n)
+}
+
+/// [`matmul`] with an explicit worker count (tests assert bitwise
+/// thread-count invariance through the `_t` entry points).
+pub fn matmul_t(threads: usize, a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    matmul_with(simd_level(), threads, a, b, m, k, n)
+}
+
+/// [`matmul`] with an explicit level and worker count: packs `bᵀ`
+/// (exactly — transposition performs no FP math) and runs the shared
+/// row·row microkernel.
+pub fn matmul_with(
+    level: SimdLevel,
+    threads: usize,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
+    let bt = transpose(b, k, n);
+    gemm(level, threads, a, &bt, m, n, k)
+}
+
+/// `out[k,n] = aᵀ[k,m] @ b[m,n]` for `a: [m,k]` — weight gradients.
+pub fn matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    matmul_tn_with(simd_level(), threads_for(m * k * n), a, b, m, k, n)
+}
+
+/// [`matmul_tn`] with an explicit worker count.
+pub fn matmul_tn_t(threads: usize, a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    matmul_tn_with(simd_level(), threads, a, b, m, k, n)
+}
+
+/// [`matmul_tn`] with an explicit level and worker count: packs both
+/// `aᵀ` and `bᵀ`, then the shared microkernel contracts over `m`.
+pub fn matmul_tn_with(
+    level: SimdLevel,
+    threads: usize,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
+    let at = transpose(a, m, k);
+    let bt = transpose(b, m, n);
+    gemm(level, threads, &at, &bt, k, n, m)
+}
+
+/// `out[m,k] = a[m,n] @ bᵀ[n,k]` for `b: [k,n]` — input gradients.
+/// Both operands are already row-major over the contraction axis, so no
+/// packing at all: the microkernel runs on them directly.
+pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    matmul_nt_with(simd_level(), threads_for(m * n * k), a, b, m, n, k)
+}
+
+/// [`matmul_nt`] with an explicit worker count.
+pub fn matmul_nt_t(threads: usize, a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    matmul_nt_with(simd_level(), threads, a, b, m, n, k)
+}
+
+/// [`matmul_nt`] with an explicit level and worker count.
+pub fn matmul_nt_with(
+    level: SimdLevel,
+    threads: usize,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+) -> Vec<f32> {
+    gemm(level, threads, a, b, m, k, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.gauss() as f32).collect()
+    }
+
+    fn naive_matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f64> {
+        let mut out = vec![0f64; m * n];
+        for i in 0..m {
+            for x in 0..k {
+                for j in 0..n {
+                    out[i * n + j] += a[i * k + x] as f64 * b[x * n + j] as f64;
+                }
+            }
+        }
+        out
+    }
+
+    fn assert_close(got: &[f32], want: &[f64]) {
+        for (g, w) in got.iter().zip(want.iter()) {
+            let rel = (*g as f64 - w).abs() / w.abs().max(1.0);
+            assert!(rel < 1e-5, "kernel vs naive: {g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn microkernel_matches_naive_f64_matmul() {
+        let mut rng = Rng::new(41);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (8, 16, 8), (13, 33, 11)] {
+            let a = randv(&mut rng, m * k);
+            let b = randv(&mut rng, k * n);
+            assert_close(&matmul(&a, &b, m, k, n), &naive_matmul(&a, &b, m, k, n));
+            // nt: out[m,k'] = a'[m,n'] @ b'ᵀ for b' [k', n'] equals
+            // naive a' @ (b'ᵀ) — reuse naive via explicit transpose
+            let bt = transpose(&b, k, n); // [n, k]
+            assert_close(&matmul_nt(&a, &bt, m, k, n), &naive_matmul(&a, &b, m, k, n));
+            // tn: aᵀ @ c for c [m, n]
+            let c = randv(&mut rng, m * n);
+            let at = transpose(&a, m, k); // [k, m]
+            assert_close(&matmul_tn(&a, &c, m, k, n), &naive_matmul(&at, &c, k, m, n));
+        }
+    }
+
+    #[test]
+    fn all_levels_and_thread_counts_are_bitwise_identical() {
+        let mut rng = Rng::new(77);
+        let levels = available_levels();
+        for &(m, k, n) in &[(1, 1, 1), (2, 7, 3), (8, 8, 8), (13, 9, 11), (5, 33, 17)] {
+            let a = randv(&mut rng, m * k);
+            let b = randv(&mut rng, k * n);
+            let bnt = randv(&mut rng, n * k); // [n, k] view for nt
+            let btn = randv(&mut rng, m * n); // [m, n] view for tn
+            let base = matmul_with(SimdLevel::Scalar, 1, &a, &b, m, k, n);
+            let base_tn = matmul_tn_with(SimdLevel::Scalar, 1, &a, &btn, m, k, n);
+            let base_nt = matmul_nt_with(SimdLevel::Scalar, 1, &a, &bnt, m, k, n);
+            for &level in &levels {
+                for threads in [1, 2, 4] {
+                    let bits = |x: &[f32], y: &[f32]| {
+                        x.iter().zip(y).all(|(p, q)| p.to_bits() == q.to_bits())
+                    };
+                    assert!(
+                        bits(&base, &matmul_with(level, threads, &a, &b, m, k, n)),
+                        "matmul {level:?} x{threads} diverged"
+                    );
+                    assert!(
+                        bits(&base_tn, &matmul_tn_with(level, threads, &a, &btn, m, k, n)),
+                        "matmul_tn {level:?} x{threads} diverged"
+                    );
+                    assert!(
+                        bits(&base_nt, &matmul_nt_with(level, threads, &a, &bnt, m, k, n)),
+                        "matmul_nt {level:?} x{threads} diverged"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reductions_are_bitwise_identical_across_levels() {
+        let mut rng = Rng::new(91);
+        for n in [0usize, 1, 7, 8, 9, 64, 129] {
+            let a = randv(&mut rng, n);
+            let b = randv(&mut rng, n);
+            let c = randv(&mut rng, n);
+            for &level in &available_levels() {
+                assert_eq!(
+                    dot8_with(SimdLevel::Scalar, &a, &b).to_bits(),
+                    dot8_with(level, &a, &b).to_bits(),
+                    "dot8 {level:?} n={n}"
+                );
+                assert_eq!(
+                    dot3_8_with(SimdLevel::Scalar, &a, &b, &c).to_bits(),
+                    dot3_8_with(level, &a, &b, &c).to_bits(),
+                    "dot3_8 {level:?} n={n}"
+                );
+                assert_eq!(
+                    abs_sum8_with(SimdLevel::Scalar, &a).to_bits(),
+                    abs_sum8_with(level, &a).to_bits(),
+                    "abs_sum8 {level:?} n={n}"
+                );
+                assert_eq!(
+                    abs_diff_sum8_with(SimdLevel::Scalar, &a, &b).to_bits(),
+                    abs_diff_sum8_with(level, &a, &b).to_bits(),
+                    "abs_diff_sum8 {level:?} n={n}"
+                );
+            }
+            // sanity anchors against plain f64 loops (order-insensitive
+            // tolerance — the lane split reorders the sum)
+            let naive: f64 = a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
+            assert!((dot8(&a, &b) - naive).abs() <= 1e-9 * naive.abs().max(1.0));
+            let nabs: f64 = a.iter().map(|&x| x.abs() as f64).sum();
+            assert!((abs_sum8(&a) - nabs).abs() <= 1e-9 * nabs.max(1.0));
+        }
+    }
+
+    #[test]
+    fn transpose_round_trips_exactly() {
+        let mut rng = Rng::new(13);
+        for &(r, c) in &[(1, 1), (3, 5), (32, 32), (33, 65), (7, 100)] {
+            let x = randv(&mut rng, r * c);
+            let t = transpose(&x, r, c);
+            assert_eq!(transpose(&t, c, r), x);
+            assert_eq!(t[0], x[0]);
+            if r > 1 && c > 1 {
+                assert_eq!(t[1 * r + 0], x[0 * c + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn overrides_clamp_and_restore() {
+        // requesting a wider level than the CPU has must clamp, never trap
+        set_simd_override(Some(SimdLevel::Avx2));
+        assert!(simd_level() <= best_available());
+        set_simd_override(Some(SimdLevel::Scalar));
+        assert_eq!(simd_level(), SimdLevel::Scalar);
+        set_simd_override(None);
+        set_thread_override(Some(0));
+        assert_eq!(host_threads(), 1);
+        set_thread_override(None);
+    }
+}

@@ -2,12 +2,14 @@
 //! step programs, with two engines — AOT HLO artifacts through PJRT
 //! (`artifact`, adapted from /opt/xla-example/load_hlo/) and the pure-Rust
 //! reference transformer (`host_backend`) that runs full GradES
-//! trajectories with no artifacts at all.
+//! trajectories with no artifacts at all, on the SIMD microkernel layer
+//! in `host_kernels`.
 
 pub mod artifact;
 pub mod async_eval;
 pub mod backend;
 pub mod host_backend;
+pub mod host_kernels;
 pub mod manifest;
 pub mod pipeline;
 pub mod session;

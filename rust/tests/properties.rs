@@ -516,6 +516,81 @@ fn prop_corruptions_always_produce_invalid_variant() {
 }
 
 #[test]
+fn prop_kernels_bitwise_identical_across_simd_levels_and_threads() {
+    // The host-kernel determinism contract, stated once and enforced
+    // forever: on randomized shapes, every available SIMD level and
+    // every thread count in {1, 2, 4} produces exactly the bits of the
+    // scalar lane-emulating fallback on 1 thread — for all three matmul
+    // forms and all four L1/dot reductions.
+    use grades::runtime::host_kernels as hk;
+    let levels = hk::available_levels();
+    let mut rng = Rng::new(0xce11);
+    for trial in 0..25 {
+        let (m, k, n) = (1 + rng.below(24), 1 + rng.below(24), 1 + rng.below(24));
+        let a: Vec<f32> = (0..m * k).map(|_| rng.gauss() as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.gauss() as f32).collect();
+        let c: Vec<f32> = (0..m * k).map(|_| rng.gauss() as f32).collect();
+        let base_mm = hk::matmul_with(hk::SimdLevel::Scalar, 1, &a, &b, m, k, n);
+        let base_tn = hk::matmul_tn_with(hk::SimdLevel::Scalar, 1, &a, &c, m, k, k);
+        let base_nt = hk::matmul_nt_with(hk::SimdLevel::Scalar, 1, &a, &c, m, k, m);
+        let base_dot = hk::dot8_with(hk::SimdLevel::Scalar, &a, &c);
+        let base_abs = hk::abs_sum8_with(hk::SimdLevel::Scalar, &a);
+        let base_ad = hk::abs_diff_sum8_with(hk::SimdLevel::Scalar, &a, &c);
+        let scale: Vec<f32> = (0..k).map(|_| rng.gauss() as f32).collect();
+        let base_d3 = hk::dot3_8_with(hk::SimdLevel::Scalar, &a[..k], &scale, &c[..k]);
+        for &level in &levels {
+            for threads in [1usize, 2, 4] {
+                let ctx = format!("trial {trial} {level:?}/{threads}t ({m}x{k}x{n})");
+                let mm = hk::matmul_with(level, threads, &a, &b, m, k, n);
+                assert!(
+                    mm.iter().zip(&base_mm).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "{ctx}: matmul diverged from scalar/1t"
+                );
+                let tn = hk::matmul_tn_with(level, threads, &a, &c, m, k, k);
+                assert!(
+                    tn.iter().zip(&base_tn).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "{ctx}: matmul_tn diverged from scalar/1t"
+                );
+                let nt = hk::matmul_nt_with(level, threads, &a, &c, m, k, m);
+                assert!(
+                    nt.iter().zip(&base_nt).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "{ctx}: matmul_nt diverged from scalar/1t"
+                );
+                assert_eq!(hk::dot8_with(level, &a, &c).to_bits(), base_dot.to_bits(), "{ctx}: dot8");
+                assert_eq!(
+                    hk::abs_sum8_with(level, &a).to_bits(),
+                    base_abs.to_bits(),
+                    "{ctx}: abs_sum8"
+                );
+                assert_eq!(
+                    hk::abs_diff_sum8_with(level, &a, &c).to_bits(),
+                    base_ad.to_bits(),
+                    "{ctx}: abs_diff_sum8"
+                );
+                assert_eq!(
+                    hk::dot3_8_with(level, &a[..k], &scale, &c[..k]).to_bits(),
+                    base_d3.to_bits(),
+                    "{ctx}: dot3_8"
+                );
+            }
+        }
+        // anchor: the lane-split result is a real matmul (vs naive f64)
+        let mut naive = vec![0f64; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                for j in 0..n {
+                    naive[i * n + j] += a[i * k + kk] as f64 * b[kk * n + j] as f64;
+                }
+            }
+        }
+        for (x, y) in base_mm.iter().zip(&naive) {
+            let rel = (*x as f64 - y).abs() / y.abs().max(1e-6);
+            assert!(rel < 1e-4, "trial {trial}: lane-split matmul drifted from naive f64");
+        }
+    }
+}
+
+#[test]
 fn prop_json_roundtrip_random_values() {
     let mut rng = Rng::new(10);
     fn random_json(rng: &mut Rng, depth: usize) -> json::Json {
