@@ -3,7 +3,8 @@
 //! differential tests bound. Emits `BENCH_host_backend.json` for the
 //! perf trajectory.
 //!
-//! Always measures the host engine (no artifacts needed). When
+//! Always measures the host engine (no artifacts needed), including a
+//! LoRA-engine steps/sec row on the same base shapes. When
 //! `artifacts/lm-tiny-fp` exists it also measures the XLA engine, runs
 //! the same GradES trajectory from shared initial parameters on both,
 //! reports per-step loss divergence — and **fails** (non-zero exit) if
@@ -35,14 +36,18 @@ use grades::util::timer::Timer;
 
 const CONFIG: &str = "lm-tiny-fp";
 
-fn steps_per_sec(backend: &dyn Backend, iters: usize) -> Result<f64> {
+fn steps_per_sec(backend: &dyn Backend, cfg: &RepoConfig, iters: usize) -> Result<f64> {
     let m = backend.manifest();
-    steps_per_sec_plan(backend, iters, &StepPlan::all_active(m.n_components))
+    steps_per_sec_plan(backend, cfg, iters, &StepPlan::all_active(m.n_components))
 }
 
-fn steps_per_sec_plan(backend: &dyn Backend, iters: usize, plan: &StepPlan) -> Result<f64> {
-    let cfg = RepoConfig::by_name(CONFIG)?;
-    let mut ds = data::build_lm(&cfg, backend.manifest())?;
+fn steps_per_sec_plan(
+    backend: &dyn Backend,
+    cfg: &RepoConfig,
+    iters: usize,
+    plan: &StepPlan,
+) -> Result<f64> {
+    let mut ds = data::build_lm(cfg, backend.manifest())?;
     let batch = ds.train.next_batch();
     let m = backend.manifest();
     let mut ctrl = vec![1f32; m.ctrl_len];
@@ -97,7 +102,7 @@ fn main() -> Result<()> {
 
     let cfg = RepoConfig::by_name(CONFIG)?;
     let host = HostBackend::for_config(&cfg)?;
-    let host_sps = steps_per_sec(&host, iters)?;
+    let host_sps = steps_per_sec(&host, &cfg, iters)?;
     println!("## bench_host_backend ({CONFIG})\n");
     println!("host  backend: {host_sps:8.2} steps/s");
     report.insert("host_steps_per_sec".into(), Json::Num(host_sps));
@@ -111,14 +116,15 @@ fn main() -> Result<()> {
         let m = host.manifest();
         let n = m.n_components;
         let all: Vec<usize> = (0..n).collect();
-        let dense = steps_per_sec_plan(&host, iters, &StepPlan::all_active(n))?;
+        let dense = steps_per_sec_plan(&host, &cfg, iters, &StepPlan::all_active(n))?;
         let attn = steps_per_sec_plan(
             &host,
+            &cfg,
             iters,
             &StepPlan::omitting(n, &m.components_where(|c| c.group == "attention")),
         )?;
         let opt_only =
-            steps_per_sec_plan(&host, iters, &StepPlan::omitting(n, &all).with_truncation())?;
+            steps_per_sec_plan(&host, &cfg, iters, &StepPlan::omitting(n, &all).with_truncation())?;
         println!("host  trajectory: dense {dense:8.2} | attn-frozen {attn:8.2} | optimizer-only {opt_only:8.2} steps/s");
         report.insert("dense_steps_per_sec".into(), Json::Num(dense));
         report.insert("attn_frozen_steps_per_sec".into(), Json::Num(attn));
@@ -134,11 +140,11 @@ fn main() -> Result<()> {
         let dense = StepPlan::all_active(n);
         kernels::set_simd_override(Some(SimdLevel::Scalar));
         kernels::set_thread_override(Some(1));
-        let scalar_1t = steps_per_sec_plan(&host, iters, &dense)?;
+        let scalar_1t = steps_per_sec_plan(&host, &cfg, iters, &dense)?;
         let level = kernels::best_available();
         kernels::set_simd_override(Some(level));
         kernels::set_thread_override(Some(4));
-        let simd_4t = steps_per_sec_plan(&host, iters, &dense)?;
+        let simd_4t = steps_per_sec_plan(&host, &cfg, iters, &dense)?;
         kernels::set_simd_override(None);
         kernels::set_thread_override(None);
         println!(
@@ -150,6 +156,24 @@ fn main() -> Result<()> {
         report.insert("simd_4t_steps_per_sec".into(), Json::Num(simd_4t));
         report.insert("simd_speedup_vs_scalar_1t".into(), Json::Num(simd_4t / scalar_1t));
         report.insert("simd_level".into(), Json::Str(level.as_str().into()));
+    }
+
+    // --- LoRA engine steps/sec ---
+    // Same base shapes, adapter-only optimizer on a frozen base: the
+    // step is dominated by the shared forward/backward, but the update
+    // and Eq. 1 statistics shrink to the adapter footprint, so the LoRA
+    // engine should never fall meaningfully behind the fp dense step.
+    {
+        let lcfg = RepoConfig::by_name("lm-tiny-lora")?;
+        let lora = HostBackend::for_config(&lcfg)?;
+        let n = lora.manifest().n_components;
+        let lora_sps = steps_per_sec_plan(&lora, &lcfg, iters, &StepPlan::all_active(n))?;
+        println!(
+            "host  lora engine: {lora_sps:8.2} steps/s ({:.2}x of fp dense)",
+            lora_sps / host_sps
+        );
+        report.insert("lora_steps_per_sec".into(), Json::Num(lora_sps));
+        report.insert("lora_over_fp_speedup".into(), Json::Num(lora_sps / host_sps));
     }
 
     let art = repo_root().join("artifacts").join(CONFIG);
@@ -172,7 +196,7 @@ fn main() -> Result<()> {
         report.insert("xla_available".into(), Json::Bool(false));
     }
     if let Some(bundle) = loaded {
-        let xla_sps = steps_per_sec(&bundle, iters)?;
+        let xla_sps = steps_per_sec(&bundle, &cfg, iters)?;
         println!("xla   backend: {xla_sps:8.2} steps/s ({:.2}x of host)", xla_sps / host_sps);
         report.insert("xla_available".into(), Json::Bool(true));
         report.insert("xla_steps_per_sec".into(), Json::Num(xla_sps));

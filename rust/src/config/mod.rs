@@ -41,6 +41,18 @@ pub struct ModelConfig {
     pub d_ff: usize,
     /// Maximum (== compiled) sequence length.
     pub max_seq: usize,
+    /// (`[vlm]`) Image patches per example P (0 for pure LMs).
+    pub n_patches: usize,
+    /// (`[vlm]`) Flattened per-patch feature width.
+    pub patch_dim: usize,
+    /// (`[vlm]`) Vision-tower residual width D_v.
+    pub d_vision: usize,
+    /// (`[vlm]`) Vision-tower block count.
+    pub n_vision_layers: usize,
+    /// (`[vlm]`) Vision-tower head count (D_v must divide evenly).
+    pub n_vision_heads: usize,
+    /// (`[vlm]`) Vision-tower SwiGLU hidden width.
+    pub d_vision_ff: usize,
 }
 
 /// Training hyperparameters (`[train]`) — batch shape, optimizer and its
@@ -65,6 +77,10 @@ pub struct TrainConfig {
     pub eps: f64,
     /// SGD momentum.
     pub momentum: f64,
+    /// LoRA rank r (adapters are A∈R^{d_in×r}, B∈R^{r×d_out}).
+    pub lora_rank: usize,
+    /// LoRA α; merged weight is W + (α/r)·A·B.
+    pub lora_alpha: f64,
 }
 
 /// Training-run hyperparameters (`[run]`).
@@ -177,6 +193,7 @@ impl RepoConfig {
         let data = doc.table_or_empty("data");
         let model = doc.table_or_empty("model");
         let train = doc.table_or_empty("train");
+        let vlm = doc.table_or_empty("vlm");
         Ok(RepoConfig {
             name,
             path,
@@ -188,6 +205,13 @@ impl RepoConfig {
                 n_heads: get_usize(&model, "n_heads", 1),
                 d_ff: get_usize(&model, "d_ff", 0),
                 max_seq: get_usize(&model, "max_seq", 0),
+                // [vlm] defaults mirror python/compile/configs.py
+                n_patches: get_usize(&vlm, "n_patches", 0),
+                patch_dim: get_usize(&vlm, "patch_dim", 0),
+                d_vision: get_usize(&vlm, "d_vision", 0),
+                n_vision_layers: get_usize(&vlm, "n_vision_layers", 0),
+                n_vision_heads: get_usize(&vlm, "n_vision_heads", 1),
+                d_vision_ff: get_usize(&vlm, "d_vision_ff", 0),
             },
             train: TrainConfig {
                 batch_size: get_usize(&train, "batch_size", 0),
@@ -199,6 +223,8 @@ impl RepoConfig {
                 beta2: get_f64(&train, "beta2", 0.999),
                 eps: get_f64(&train, "eps", 1e-8),
                 momentum: get_f64(&train, "momentum", 0.9),
+                lora_rank: get_usize(&train, "lora_rank", 4),
+                lora_alpha: get_f64(&train, "lora_alpha", 8.0),
             },
             run: RunConfig {
                 total_steps: get_usize(&run, "total_steps", 200),
@@ -280,6 +306,27 @@ mod tests {
         let c = RepoConfig::by_name("vlm-tiny-fp").unwrap();
         assert!(!c.grades.tau_vision.is_nan());
         assert!(c.grades.tau_vision < c.grades.tau_language + 1.0);
+    }
+
+    #[test]
+    fn vlm_table_is_typed() {
+        let c = RepoConfig::by_name("vlm-tiny-fp").unwrap();
+        assert_eq!(c.model.kind, "vlm");
+        assert_eq!((c.model.n_patches, c.model.patch_dim), (16, 12));
+        assert_eq!((c.model.d_vision, c.model.n_vision_layers), (48, 2));
+        assert_eq!((c.model.n_vision_heads, c.model.d_vision_ff), (4, 96));
+        // LM configs keep the zero/one defaults
+        let lm = RepoConfig::by_name("lm-tiny-fp").unwrap();
+        assert_eq!(lm.model.n_patches, 0);
+        assert_eq!(lm.model.n_vision_heads, 1);
+    }
+
+    #[test]
+    fn lora_config_reads_rank_and_alpha() {
+        let c = RepoConfig::by_name("lm-tiny-lora").unwrap();
+        assert_eq!(c.train.method, "lora");
+        assert_eq!(c.train.lora_rank, 4);
+        assert!((c.train.lora_alpha - 8.0).abs() < 1e-12);
     }
 
     #[test]

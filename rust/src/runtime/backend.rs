@@ -11,11 +11,12 @@
 //!   AOT-compiled HLO artifacts executed through PJRT, state resident on
 //!   device between steps.
 //! * **Host** ([`crate::runtime::host_backend::HostBackend`]) — a pure-Rust
-//!   reference transformer mirroring `python/compile/model.py` for the
-//!   tiny LM configs. No Python toolchain, no artifacts, no PJRT: full
-//!   GradES trajectories (freeze decisions included) run in tier-1
-//!   `cargo test`, and the XLA path becomes something we differentially
-//!   verify (`rust/tests/differential.rs`) instead of trust.
+//!   reference engine mirroring `python/compile/model.py` / `lora.py`
+//!   across every `lm`/`vlm` × `fp`/`lora` config cell. No Python
+//!   toolchain, no artifacts, no PJRT: full GradES trajectories (freeze
+//!   decisions included) run in tier-1 `cargo test`, and the XLA path
+//!   becomes something we differentially verify
+//!   (`rust/tests/differential.rs`) instead of trust.
 //!
 //! [`Session`](crate::runtime::session::Session) is written against
 //! `&dyn Backend`, so the trainer, the async-eval runtime, the experiment

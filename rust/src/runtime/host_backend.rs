@@ -2,8 +2,23 @@
 //! (the paper's 7-matrix layer anatomy) with full forward + backward,
 //! freeze-masked AdamW/SGD updates, the ctrl-vector protocol and the
 //! per-matrix gradient-statistics metrics prefix — mirroring
-//! `python/compile/model.py` / `steps.py` / `layout.py` for the tiny
-//! full-parameter LM configs.
+//! `python/compile/model.py` / `lora.py` / `steps.py` / `layout.py` for
+//! every config family the paper trains:
+//!
+//! * **LM fp** — full-parameter decoder-only LM (`lm_logits`).
+//! * **LM LoRA** — frozen base weights with trainable rank-`r` (A, B)
+//!   adapter pairs per monitored matrix; the forward/backward graph runs
+//!   on the merged weight `W + (α/r)·A·B` (`merge_lora`), Eq. 1 stats
+//!   sum over the (A, B) pair, and the masked optimizer touches adapters
+//!   only — base weights carry *no* gradient entry at all (`jax.grad`
+//!   over the trainable dict), not a zero one.
+//! * **VLM** (fp or LoRA) — the LLaVA-style two-tower graph
+//!   (`vlm_logits`): patch-embed + *non-causal* vision tower, RMS-norm +
+//!   projection into `P` prefix rows, then the causal language tower
+//!   over `P+T` rows with the loss on the `T` text positions. Vision
+//!   components come first in the registry and carry `tower="vision"`,
+//!   exactly like the compiled manifest, so `GradesMonitor` freeze keys
+//!   line up across backends.
 //!
 //! Purpose: make the GradES freeze/stop logic executable *everywhere*.
 //! With this backend, `cargo test -q` runs complete training
@@ -64,9 +79,6 @@
 //! come from the repo's own deterministic RNG, not JAX's threefry, so
 //! cross-backend comparisons start from an XLA-initialized state
 //! shipped through `state_to_host`/`state_from_host`.
-//!
-//! LoRA and VLM configs are not implemented here (the XLA path covers
-//! them); `HostBackend::for_config` reports that explicitly.
 
 use anyhow::{ensure, Result};
 
@@ -83,8 +95,7 @@ const METRIC_PAD: usize = 4;
 /// `[step, lr, wd_scale, reserved]` (layout.py CTRL_PAD).
 const CTRL_PAD: usize = 4;
 
-/// Init family per tensor (layout.py `ParamSpec.init`; the LoRA kinds
-/// never occur in the host backend's fp-only layouts).
+/// Init family per tensor (layout.py `ParamSpec.init`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Init {
     /// 0.02 · N(0,1) — embeddings.
@@ -95,6 +106,10 @@ enum Init {
     Ones,
     /// 0.02 · N(0,1) — the untied LM head.
     Head,
+    /// 0.05 · N(0,1) — LoRA A adapters.
+    LoraA,
+    /// All zeros — LoRA B adapters (draws still burned, like `Ones`).
+    LoraB,
 }
 
 /// One flat-state tensor: its slice of the state plus optimizer/prev
@@ -107,7 +122,10 @@ struct HostSpec {
     offset: usize,
     component: Option<usize>,
     init: Init,
-    /// AdamW: `[m, v]` offsets; SGD: `[mom]`.
+    /// Whether the optimizer touches this tensor (layout.py: LoRA base
+    /// weights are frozen — no opt slots, no gradients, ever).
+    trainable: bool,
+    /// AdamW: `[m, v]` offsets; SGD: `[mom]`. Empty when untrainable.
     opt_offsets: Vec<usize>,
     /// Prev-grad slot (monitored tensors only — the Eq. 1 carry).
     prev_offset: Option<usize>,
@@ -145,8 +163,51 @@ struct Dims {
     l: usize,
     /// Vocab size V.
     v: usize,
-    /// Positional-table length (max_seq).
+    /// Positional-table length (max_seq; VLMs: max_seq + n_patches).
     s: usize,
+}
+
+/// Vision-tower dimensions (VLM configs only).
+#[derive(Clone, Copy)]
+struct VisDims {
+    /// Patches per example P.
+    p: usize,
+    /// Flattened patch feature width.
+    pd: usize,
+    /// Vision residual width D_v.
+    dv: usize,
+    /// Vision head count.
+    vh: usize,
+    /// Vision SwiGLU hidden width.
+    vf: usize,
+    /// Vision layer count.
+    vl: usize,
+}
+
+/// Spec indices of the VLM-only tensors plus the vision tower's layers.
+struct VlmIdx {
+    vis_in: usize,
+    vis_pos: usize,
+    vis_ln_f: usize,
+    vis_proj: usize,
+    layers: Vec<LayerIdx>,
+    dims: VisDims,
+}
+
+/// One LoRA-adapted matmul site: the frozen base weight and its
+/// trainable adapter pair, all as spec indices.
+struct LoraSite {
+    base: usize,
+    a: usize,
+    b: usize,
+}
+
+/// LoRA bookkeeping: `sites[c]` adapts component `c`'s base matrix with
+/// `W + scale·A@B` (lora.py `merge_lora`; scale = α/r).
+struct Lora {
+    rank: usize,
+    scale: f32,
+    sites: Vec<LoraSite>,
 }
 
 /// Optimizer family + constants (f32, matching the compiled kernels).
@@ -157,9 +218,10 @@ enum Opt {
     Sgd { momentum: f32 },
 }
 
-/// The pure-Rust engine for one fp LM config. Stateless across calls:
-/// every program is a function from (state, inputs) to outputs, exactly
-/// like the compiled executables.
+/// The pure-Rust engine for one config — any `kind` (`lm`/`vlm`) ×
+/// `method` (`fp`/`lora`) cell. Stateless across calls: every program is
+/// a function from (state, inputs) to outputs, exactly like the
+/// compiled executables.
 pub struct HostBackend {
     manifest: Manifest,
     specs: Vec<HostSpec>,
@@ -171,12 +233,72 @@ pub struct HostBackend {
     ln_f: usize,
     lm_head: usize,
     layers: Vec<LayerIdx>,
+    /// Spec idx → the component owning that matmul site. Equals
+    /// `spec.component` for fp layouts; under LoRA it additionally maps
+    /// each *base* weight (whose own `component` is `None`) to the
+    /// component of its adapter pair, so plan/freeze lookups work from
+    /// the forward graph's weight indices in both methods.
+    wcomp: Vec<Option<usize>>,
+    /// LoRA adapter bookkeeping (`None` for fp).
+    lora: Option<Lora>,
+    /// Vision tower (`None` for pure LMs).
+    vlm: Option<VlmIdx>,
+}
+
+/// A spec before offsets are assigned: `(name, shape, init, component)`.
+type SpecSeed = (String, Vec<usize>, Init, Option<usize>);
+
+/// Append one transformer tower's per-layer specs + components in
+/// layout.py `_tower_specs` order (ln1, q/k/v/o, ln2, gate/up/down).
+fn push_tower(
+    prefix: &str,
+    tower: &str,
+    n_layers: usize,
+    d: usize,
+    d_ff: usize,
+    specs: &mut Vec<SpecSeed>,
+    components: &mut Vec<Component>,
+) {
+    for layer in 0..n_layers {
+        specs.push((format!("{prefix}.{layer}.ln1"), vec![d], Init::Ones, None));
+        for kind in ["q", "k", "v", "o"] {
+            let cidx = components.len();
+            let name = format!("{prefix}.{layer}.attn.{kind}");
+            components.push(Component {
+                idx: cidx,
+                name: format!("{tower}.{layer}.{kind}"),
+                layer,
+                kind: kind.to_string(),
+                group: "attention".into(),
+                tower: tower.into(),
+                n_params: d * d,
+                tensors: vec![name.clone()],
+            });
+            specs.push((name, vec![d, d], Init::Matrix, Some(cidx)));
+        }
+        specs.push((format!("{prefix}.{layer}.ln2"), vec![d], Init::Ones, None));
+        for kind in ["gate", "up", "down"] {
+            let cidx = components.len();
+            let name = format!("{prefix}.{layer}.mlp.{kind}");
+            let shape = if kind == "down" { vec![d_ff, d] } else { vec![d, d_ff] };
+            components.push(Component {
+                idx: cidx,
+                name: format!("{tower}.{layer}.{kind}"),
+                layer,
+                kind: kind.to_string(),
+                group: "mlp".into(),
+                tower: tower.into(),
+                n_params: d * d_ff,
+                tensors: vec![name.clone()],
+            });
+            specs.push((name, shape, Init::Matrix, Some(cidx)));
+        }
+    }
 }
 
 impl HostBackend {
-    /// Build the engine for a `configs/*.toml` config. Only `kind = "lm"`
-    /// + `method = "fp"` layouts exist in pure Rust; LoRA/VLM configs get
-    /// a pointer at the XLA path.
+    /// Build the engine for a `configs/*.toml` config — any
+    /// `lm`/`vlm` × `fp`/`lora` cell.
     pub fn for_config(cfg: &RepoConfig) -> Result<Self> {
         Self::from_parts(&cfg.name, &cfg.model, &cfg.train)
     }
@@ -185,15 +307,13 @@ impl HostBackend {
     /// this to make micro-sized engines without a config file).
     pub fn from_parts(name: &str, model: &ModelConfig, train: &TrainConfig) -> Result<Self> {
         ensure!(
-            model.kind == "lm",
-            "host backend supports kind=\"lm\" only; config {name:?} is {:?} — build \
-             artifacts (`make artifacts`) and use --backend xla",
+            model.kind == "lm" || model.kind == "vlm",
+            "unknown model kind {:?} in config {name:?} (expected \"lm\" or \"vlm\")",
             model.kind
         );
         ensure!(
-            train.method == "fp",
-            "host backend supports method=\"fp\" only; config {name:?} is {:?} — build \
-             artifacts (`make artifacts`) and use --backend xla",
+            train.method == "fp" || train.method == "lora",
+            "unknown train method {:?} in config {name:?} (expected \"fp\" or \"lora\")",
             train.method
         );
         ensure!(
@@ -208,59 +328,84 @@ impl HostBackend {
             "unknown optimizer {:?}",
             train.optimizer
         );
+        let is_vlm = model.kind == "vlm";
+        let is_lora = train.method == "lora";
+        if is_vlm {
+            ensure!(
+                model.n_patches > 0
+                    && model.patch_dim > 0
+                    && model.d_vision > 0
+                    && model.n_vision_layers > 0
+                    && model.d_vision_ff > 0,
+                "config {name:?} is kind=\"vlm\" but its [vlm] table is incomplete \
+                 (n_patches/patch_dim/d_vision/n_vision_layers/d_vision_ff)"
+            );
+            ensure!(
+                model.n_vision_heads > 0 && model.d_vision % model.n_vision_heads == 0,
+                "d_vision % n_vision_heads != 0"
+            );
+        }
+        if is_lora {
+            ensure!(train.lora_rank > 0, "config {name:?}: lora_rank must be positive");
+        }
 
         let (d, ff) = (model.d_model, model.d_ff);
-        // --- specs + components in layout.py order ---
-        let mut specs: Vec<(String, Vec<usize>, Init, Option<usize>)> = Vec::new();
+        // --- specs + components in layout.py order (vision tower first) ---
+        let mut specs: Vec<SpecSeed> = Vec::new();
         let mut components = Vec::new();
-        specs.push(("tok_emb".into(), vec![model.vocab_size, d], Init::Embed, None));
-        specs.push(("pos_emb".into(), vec![model.max_seq, d], Init::Embed, None));
-        for layer in 0..model.n_layers {
-            specs.push((format!("lang.{layer}.ln1"), vec![d], Init::Ones, None));
-            for kind in ["q", "k", "v", "o"] {
-                let cidx = components.len();
-                let name = format!("lang.{layer}.attn.{kind}");
-                components.push(Component {
-                    idx: cidx,
-                    name: format!("language.{layer}.{kind}"),
-                    layer,
-                    kind: kind.to_string(),
-                    group: "attention".into(),
-                    tower: "language".into(),
-                    n_params: d * d,
-                    tensors: vec![name.clone()],
-                });
-                specs.push((name, vec![d, d], Init::Matrix, Some(cidx)));
-            }
-            specs.push((format!("lang.{layer}.ln2"), vec![d], Init::Ones, None));
-            for kind in ["gate", "up", "down"] {
-                let cidx = components.len();
-                let name = format!("lang.{layer}.mlp.{kind}");
-                let shape = if kind == "down" { vec![ff, d] } else { vec![d, ff] };
-                components.push(Component {
-                    idx: cidx,
-                    name: format!("language.{layer}.{kind}"),
-                    layer,
-                    kind: kind.to_string(),
-                    group: "mlp".into(),
-                    tower: "language".into(),
-                    n_params: d * ff,
-                    tensors: vec![name.clone()],
-                });
-                specs.push((name, shape, Init::Matrix, Some(cidx)));
-            }
+        if is_vlm {
+            specs.push(("vis_in".into(), vec![model.patch_dim, model.d_vision], Init::Matrix, None));
+            specs.push(("vis_pos".into(), vec![model.n_patches, model.d_vision], Init::Embed, None));
+            push_tower(
+                "vis",
+                "vision",
+                model.n_vision_layers,
+                model.d_vision,
+                model.d_vision_ff,
+                &mut specs,
+                &mut components,
+            );
+            specs.push(("vis_ln_f".into(), vec![model.d_vision], Init::Ones, None));
+            specs.push(("vis_proj".into(), vec![model.d_vision, d], Init::Matrix, None));
         }
+        specs.push(("tok_emb".into(), vec![model.vocab_size, d], Init::Embed, None));
+        let total_seq = model.max_seq + if is_vlm { model.n_patches } else { 0 };
+        specs.push(("pos_emb".into(), vec![total_seq, d], Init::Embed, None));
+        push_tower("lang", "language", model.n_layers, d, ff, &mut specs, &mut components);
         specs.push(("ln_f".into(), vec![d], Init::Ones, None));
         specs.push(("lm_head".into(), vec![d, model.vocab_size], Init::Head, None));
 
-        // --- offsets: [metrics | params | opt slot(s) | prev grads] ---
+        // --- LoRA: base specs lose trainability + monitoring; adapter
+        // pairs append in component order (layout.py lora_param_specs) ---
+        let mut trainable = vec![!is_lora; specs.len()];
+        if is_lora {
+            let r = train.lora_rank;
+            for seed in specs.iter_mut() {
+                seed.3 = None;
+            }
+            for c in components.iter_mut() {
+                let wname = c.tensors[0].clone();
+                let shape = &specs.iter().find(|s| s.0 == wname).expect("base spec").1;
+                let (d_in, d_out) = (shape[0], shape[1]);
+                c.tensors = vec![format!("{wname}.lora_a"), format!("{wname}.lora_b")];
+                c.n_params = r * (d_in + d_out);
+                specs.push((format!("{wname}.lora_a"), vec![d_in, r], Init::LoraA, Some(c.idx)));
+                specs.push((format!("{wname}.lora_b"), vec![r, d_out], Init::LoraB, Some(c.idx)));
+                trainable.push(true);
+                trainable.push(true);
+            }
+        }
+
+        // --- offsets: [metrics | params (all) | opt slot(s) (trainable)
+        //               | prev grads (trainable ∧ monitored)] ---
         let n_c = components.len();
         let metrics_len = METRIC_PAD + 2 * n_c;
         let ctrl_len = CTRL_PAD + n_c;
         let mut off = metrics_len;
         let mut host_specs: Vec<HostSpec> = specs
             .iter()
-            .map(|(name, shape, init, comp)| {
+            .zip(trainable.iter())
+            .map(|((name, shape, init, comp), &tr)| {
                 let size: usize = shape.iter().product();
                 let s = HostSpec {
                     name: name.clone(),
@@ -269,6 +414,7 @@ impl HostBackend {
                     offset: off,
                     component: *comp,
                     init: *init,
+                    trainable: tr,
                     opt_offsets: Vec::new(),
                     prev_offset: None,
                 };
@@ -279,12 +425,14 @@ impl HostBackend {
         let n_opt_slots = if train.optimizer == "adamw" { 2 } else { 1 };
         for _slot in 0..n_opt_slots {
             for s in host_specs.iter_mut() {
-                s.opt_offsets.push(off);
-                off += s.size;
+                if s.trainable {
+                    s.opt_offsets.push(off);
+                    off += s.size;
+                }
             }
         }
         for s in host_specs.iter_mut() {
-            if s.component.is_some() {
+            if s.trainable && s.component.is_some() {
                 s.prev_offset = Some(off);
                 off += s.size;
             }
@@ -297,9 +445,79 @@ impl HostBackend {
             per_component_fwd.insert(c.name.clone(), 2.0 * c.n_params as f64);
         }
         let comp_total: f64 = per_component_fwd.values().sum();
-        let attn_quad = 4.0 * (train.seq_len * d * model.n_layers) as f64;
+        let lang_attn_quad = 4.0 * (train.seq_len * d * model.n_layers) as f64;
+        let vis_attn_quad = if is_vlm {
+            4.0 * (model.n_patches * model.d_vision * model.n_vision_layers) as f64
+        } else {
+            0.0
+        };
         let head = 2.0 * (d * model.vocab_size) as f64;
-        let fwd_per_token = comp_total + attn_quad + head;
+        let embed_proj = if is_vlm {
+            2.0 * (model.patch_dim * model.d_vision) as f64 + 2.0 * (model.d_vision * d) as f64
+        } else {
+            0.0
+        };
+        let fwd_per_token = comp_total + lang_attn_quad + vis_attn_quad + head + embed_proj;
+
+        // spec-index lookups for the hot loops (resolved before the
+        // manifest literal takes ownership of `components`)
+        let idx_of = |n: &str| host_specs.iter().position(|s| s.name == n).expect("spec");
+        let layer_idx = |prefix: &str, l: usize| LayerIdx {
+            ln1: idx_of(&format!("{prefix}.{l}.ln1")),
+            wq: idx_of(&format!("{prefix}.{l}.attn.q")),
+            wk: idx_of(&format!("{prefix}.{l}.attn.k")),
+            wv: idx_of(&format!("{prefix}.{l}.attn.v")),
+            wo: idx_of(&format!("{prefix}.{l}.attn.o")),
+            ln2: idx_of(&format!("{prefix}.{l}.ln2")),
+            wg: idx_of(&format!("{prefix}.{l}.mlp.gate")),
+            wu: idx_of(&format!("{prefix}.{l}.mlp.up")),
+            wd: idx_of(&format!("{prefix}.{l}.mlp.down")),
+        };
+        let layers: Vec<LayerIdx> = (0..model.n_layers).map(|l| layer_idx("lang", l)).collect();
+        let vlm = if is_vlm {
+            Some(VlmIdx {
+                vis_in: idx_of("vis_in"),
+                vis_pos: idx_of("vis_pos"),
+                vis_ln_f: idx_of("vis_ln_f"),
+                vis_proj: idx_of("vis_proj"),
+                layers: (0..model.n_vision_layers).map(|l| layer_idx("vis", l)).collect(),
+                dims: VisDims {
+                    p: model.n_patches,
+                    pd: model.patch_dim,
+                    dv: model.d_vision,
+                    vh: model.n_vision_heads,
+                    vf: model.d_vision_ff,
+                    vl: model.n_vision_layers,
+                },
+            })
+        } else {
+            None
+        };
+        let mut wcomp: Vec<Option<usize>> = host_specs.iter().map(|s| s.component).collect();
+        let lora = if is_lora {
+            let sites: Vec<LoraSite> = components
+                .iter()
+                .map(|c| {
+                    let a = idx_of(&c.tensors[0]);
+                    let b = idx_of(&c.tensors[1]);
+                    let wname = c.tensors[0].trim_end_matches(".lora_a");
+                    let base = idx_of(wname);
+                    wcomp[base] = Some(c.idx);
+                    LoraSite { base, a, b }
+                })
+                .collect();
+            Some(Lora {
+                rank: train.lora_rank,
+                scale: (train.lora_alpha / train.lora_rank as f64) as f32,
+                sites,
+            })
+        } else {
+            None
+        };
+        let tok_emb = idx_of("tok_emb");
+        let pos_emb = idx_of("pos_emb");
+        let ln_f = idx_of("ln_f");
+        let lm_head = idx_of("lm_head");
 
         let params: Vec<ParamInfo> = host_specs
             .iter()
@@ -307,22 +525,24 @@ impl HostBackend {
                 name: s.name.clone(),
                 shape: s.shape.clone(),
                 offset: s.offset,
-                trainable: true,
+                trainable: s.trainable,
                 component: s.component,
             })
             .collect();
         let n_params_total: usize = host_specs.iter().map(|s| s.size).sum();
+        let n_params_trainable: usize =
+            host_specs.iter().filter(|s| s.trainable).map(|s| s.size).sum();
         let manifest = Manifest {
             name: name.to_string(),
-            kind: "lm".into(),
-            method: "fp".into(),
+            kind: model.kind.clone(),
+            method: train.method.clone(),
             optimizer: train.optimizer.clone(),
             kernel_impl: "host".into(),
             batch_size: train.batch_size,
             seq_len: train.seq_len,
             vocab_size: model.vocab_size,
-            n_patches: 0,
-            patch_dim: 0,
+            n_patches: model.n_patches,
+            patch_dim: model.patch_dim,
             state_len,
             metrics_len,
             ctrl_len,
@@ -333,39 +553,18 @@ impl HostBackend {
             components,
             params,
             n_params_total,
-            n_params_trainable: n_params_total,
+            n_params_trainable,
             flops: FlopsInfo {
                 fwd_per_token,
                 bwd_dx_per_token: fwd_per_token,
                 per_component_fwd,
-                attn_quadratic_per_token: attn_quad,
+                attn_quadratic_per_token: lang_attn_quad + vis_attn_quad,
                 head_per_token: head,
             },
             executables: std::collections::BTreeMap::new(),
             variants: std::collections::BTreeMap::new(),
         };
 
-        // spec-index lookups for the hot loops (resolved before the
-        // struct literal so the borrow of `host_specs` ends first)
-        let idx_of = |n: &str| host_specs.iter().position(|s| s.name == n).expect("spec");
-        let layers: Vec<LayerIdx> = (0..model.n_layers)
-            .map(|l| LayerIdx {
-                ln1: idx_of(&format!("lang.{l}.ln1")),
-                wq: idx_of(&format!("lang.{l}.attn.q")),
-                wk: idx_of(&format!("lang.{l}.attn.k")),
-                wv: idx_of(&format!("lang.{l}.attn.v")),
-                wo: idx_of(&format!("lang.{l}.attn.o")),
-                ln2: idx_of(&format!("lang.{l}.ln2")),
-                wg: idx_of(&format!("lang.{l}.mlp.gate")),
-                wu: idx_of(&format!("lang.{l}.mlp.up")),
-                wd: idx_of(&format!("lang.{l}.mlp.down")),
-            })
-            .collect();
-        let tok_emb = idx_of("tok_emb");
-        let pos_emb = idx_of("pos_emb");
-        let ln_f = idx_of("ln_f");
-        let lm_head = idx_of("lm_head");
-        drop(idx_of);
         let opt = if train.optimizer == "adamw" {
             Opt::AdamW {
                 b1: train.beta1 as f32,
@@ -390,12 +589,15 @@ impl HostBackend {
                 f: ff,
                 l: model.n_layers,
                 v: model.vocab_size,
-                s: model.max_seq,
+                s: total_seq,
             },
             opt,
             weight_decay: train.weight_decay as f32,
             specs: host_specs,
             manifest,
+            wcomp,
+            lora,
+            vlm,
         })
     }
 
@@ -412,12 +614,157 @@ impl HostBackend {
 
     // -- forward ----------------------------------------------------------
 
-    fn forward(&self, state: &[f32], tokens: &[i32]) -> Fwd {
-        let Dims { b, t, d, h, hd, f, l, v, .. } = self.dims;
+    /// `lora.py merge_lora`: one merged `W + (α/r)·A@B` per component.
+    /// Empty for fp layouts (every weight reads straight from state).
+    fn merged_weights(&self, state: &[f32]) -> Vec<Vec<f32>> {
+        let Some(lora) = &self.lora else { return Vec::new() };
+        lora.sites
+            .iter()
+            .map(|site| {
+                let base = &self.specs[site.base];
+                let (din, dout) = (base.shape[0], base.shape[1]);
+                let ab =
+                    matmul(self.param(state, site.a), self.param(state, site.b), din, lora.rank, dout);
+                let w = self.param(state, site.base);
+                w.iter().zip(ab.iter()).map(|(&wi, &abi)| wi + lora.scale * abi).collect()
+            })
+            .collect()
+    }
+
+    /// The weight the forward/backward graph multiplies by for spec
+    /// `idx`: the merged adapter form when LoRA owns it, else the raw
+    /// parameter slice.
+    fn weight<'s>(&self, state: &'s [f32], merged: &'s [Vec<f32>], idx: usize) -> &'s [f32] {
+        if !merged.is_empty() {
+            if let Some(ci) = self.wcomp[idx] {
+                return &merged[ci];
+            }
+        }
+        self.param(state, idx)
+    }
+
+    /// One transformer tower (pre-norm attention + SwiGLU blocks) over
+    /// `x: [b·t, d]`. Returns `(xs, layers)` with `xs[i]` = layer `i`'s
+    /// input and `xs[n]` the tower output.
+    #[allow(clippy::too_many_arguments)]
+    fn tower_fwd(
+        &self,
+        state: &[f32],
+        merged: &[Vec<f32>],
+        layers_idx: &[LayerIdx],
+        mut x: Vec<f32>,
+        b: usize,
+        t: usize,
+        d: usize,
+        h: usize,
+        f: usize,
+        causal: bool,
+    ) -> (Vec<Vec<f32>>, Vec<LayerFwd>) {
         let m = b * t;
-        // embeddings
+        let hd = d / h;
+        let l = layers_idx.len();
+        let mut xs = Vec::with_capacity(l + 1);
+        let mut layers = Vec::with_capacity(l);
+        for lr in layers_idx {
+            let (h1, r1) = rms_norm(&x, self.param(state, lr.ln1), m, d);
+            let q = matmul(&h1, self.weight(state, merged, lr.wq), m, d, d);
+            let k = matmul(&h1, self.weight(state, merged, lr.wk), m, d, d);
+            let vv = matmul(&h1, self.weight(state, merged, lr.wv), m, d, d);
+            let (probs, ctx) = attention_fwd(&q, &k, &vv, b, t, h, hd, causal);
+            let attn_out = matmul(&ctx, self.weight(state, merged, lr.wo), m, d, d);
+            let mut x_mid = x.clone();
+            for i in 0..m * d {
+                x_mid[i] += attn_out[i];
+            }
+            let (h2, r2) = rms_norm(&x_mid, self.param(state, lr.ln2), m, d);
+            let gate_pre = matmul(&h2, self.weight(state, merged, lr.wg), m, d, f);
+            let up = matmul(&h2, self.weight(state, merged, lr.wu), m, d, f);
+            let mut act = vec![0f32; m * f];
+            for i in 0..m * f {
+                act[i] = silu(gate_pre[i]) * up[i];
+            }
+            let mlp_out = matmul(&act, self.weight(state, merged, lr.wd), m, f, d);
+            let mut x_out = x_mid.clone();
+            for i in 0..m * d {
+                x_out[i] += mlp_out[i];
+            }
+            xs.push(std::mem::replace(&mut x, x_out));
+            layers.push(LayerFwd { h1, r1, q, k, v: vv, probs, ctx, x_mid, h2, r2, gate_pre, up, act });
+        }
+        xs.push(x);
+        (xs, layers)
+    }
+
+    fn forward(&self, state: &[f32], tokens: &[i32], patches: &[f32]) -> Fwd {
+        let Dims { b, t, d, h, f, v, .. } = self.dims;
+        let merged = self.merged_weights(state);
         let tok = self.param(state, self.tok_emb);
         let pos = self.param(state, self.pos_emb);
+
+        if let Some(vlm) = &self.vlm {
+            // model.py vlm_logits: patch embed → non-causal vision tower
+            // → final norm → projection → prefix rows before the text
+            // embeddings in one causal language stream.
+            let VisDims { p, pd, dv, vh, vf, .. } = vlm.dims;
+            let mv = b * p;
+            let mut xv = matmul(patches, self.weight(state, &merged, vlm.vis_in), mv, pd, dv);
+            let vpos = self.param(state, vlm.vis_pos);
+            for bi in 0..b {
+                for pi in 0..p {
+                    let row = bi * p + pi;
+                    for di in 0..dv {
+                        xv[row * dv + di] += vpos[pi * dv + di];
+                    }
+                }
+            }
+            let (vxs, vlayers) =
+                self.tower_fwd(state, &merged, &vlm.layers, xv, b, p, dv, vh, vf, false);
+            let (hv, rv) =
+                rms_norm(vxs.last().unwrap(), self.param(state, vlm.vis_ln_f), mv, dv);
+            let prefix = matmul(&hv, self.weight(state, &merged, vlm.vis_proj), mv, dv, d);
+
+            // concat([prefix, tok_emb[tokens]]) + pos_emb[:p+t]
+            let pt = p + t;
+            let mut x = vec![0f32; b * pt * d];
+            for bi in 0..b {
+                for ri in 0..pt {
+                    let row = bi * pt + ri;
+                    for di in 0..d {
+                        let src = if ri < p {
+                            prefix[(bi * p + ri) * d + di]
+                        } else {
+                            let id = tokens[bi * t + (ri - p)] as usize;
+                            tok[id * d + di]
+                        };
+                        x[row * d + di] = src + pos[ri * d + di];
+                    }
+                }
+            }
+            let (xs, layers) = self.tower_fwd(state, &merged, &self.layers, x, b, pt, d, h, f, true);
+            let (hf, rf) = rms_norm(xs.last().unwrap(), self.param(state, self.ln_f), b * pt, d);
+            // logits over the text rows only
+            let mut hft = vec![0f32; b * t * d];
+            for bi in 0..b {
+                for ti in 0..t {
+                    let src = (bi * pt + p + ti) * d;
+                    let dst = (bi * t + ti) * d;
+                    hft[dst..dst + d].copy_from_slice(&hf[src..src + d]);
+                }
+            }
+            let logits = matmul(&hft, self.weight(state, &merged, self.lm_head), b * t, d, v);
+            return Fwd {
+                xs,
+                layers,
+                hf,
+                rf,
+                hft: Some(hft),
+                logits,
+                vis: Some(VisFwd { xs: vxs, layers: vlayers, hv, rv }),
+                merged,
+            };
+        }
+
+        let m = b * t;
         let mut x = vec![0f32; m * d];
         for bi in 0..b {
             for ti in 0..t {
@@ -428,39 +775,10 @@ impl HostBackend {
                 }
             }
         }
-        let mut xs = Vec::with_capacity(l + 1);
-        let mut layers = Vec::with_capacity(l);
-        for li in 0..l {
-            let lr = &self.layers[li];
-            let (h1, r1) = rms_norm(&x, self.param(state, lr.ln1), m, d);
-            let q = matmul(&h1, self.param(state, lr.wq), m, d, d);
-            let k = matmul(&h1, self.param(state, lr.wk), m, d, d);
-            let vv = matmul(&h1, self.param(state, lr.wv), m, d, d);
-            let (probs, ctx) = attention_fwd(&q, &k, &vv, b, t, h, hd);
-            let attn_out = matmul(&ctx, self.param(state, lr.wo), m, d, d);
-            let mut x_mid = x.clone();
-            for i in 0..m * d {
-                x_mid[i] += attn_out[i];
-            }
-            let (h2, r2) = rms_norm(&x_mid, self.param(state, lr.ln2), m, d);
-            let gate_pre = matmul(&h2, self.param(state, lr.wg), m, d, f);
-            let up = matmul(&h2, self.param(state, lr.wu), m, d, f);
-            let mut act = vec![0f32; m * f];
-            for i in 0..m * f {
-                act[i] = silu(gate_pre[i]) * up[i];
-            }
-            let mlp_out = matmul(&act, self.param(state, lr.wd), m, f, d);
-            let mut x_out = x_mid.clone();
-            for i in 0..m * d {
-                x_out[i] += mlp_out[i];
-            }
-            xs.push(std::mem::replace(&mut x, x_out));
-            layers.push(LayerFwd { h1, r1, q, k, v: vv, probs, ctx, x_mid, h2, r2, gate_pre, up, act });
-        }
-        let (hf, rf) = rms_norm(&x, self.param(state, self.ln_f), m, d);
-        let logits = matmul(&hf, self.param(state, self.lm_head), m, d, v);
-        xs.push(x);
-        Fwd { xs, layers, hf, rf, logits }
+        let (xs, layers) = self.tower_fwd(state, &merged, &self.layers, x, b, t, d, h, f, true);
+        let (hf, rf) = rms_norm(xs.last().unwrap(), self.param(state, self.ln_f), m, d);
+        let logits = matmul(&hf, self.weight(state, &merged, self.lm_head), m, d, v);
+        Fwd { xs, layers, hf, rf, hft: None, logits, vis: None, merged }
     }
 
     /// `(loss_sum, count)` over one batch, the `eval_step` reduction.
@@ -564,22 +882,44 @@ impl HostBackend {
         let n_c = self.manifest.n_components;
         let chunks = self.spec_chunks(threads);
         let nch = chunks.len();
-        let n_slots = self.specs[0].opt_offsets.len();
+        let n_slots = match self.opt {
+            Opt::AdamW { .. } => 2,
+            Opt::Sgd { .. } => 1,
+        };
 
         // Window geometry per chunk. Each state region ([params | opt
         // slot(s) | prev]) is laid out in spec order, so a contiguous
-        // spec run owns one contiguous window per region, and the slot
-        // windows mirror the param window's local coordinates exactly.
-        let geom: Vec<(usize, usize, usize, usize)> = chunks
+        // spec run owns one contiguous window per region. Opt slots only
+        // cover *trainable* specs (LoRA base weights have none), so the
+        // slot windows get their own start/len — and because every slot
+        // repeats the same trainable layout, one slot-relative
+        // coordinate indexes both `m` and `v`.
+        struct Geom {
+            p0: usize,
+            plen: usize,
+            o0: usize,
+            olen: usize,
+            prev0: usize,
+            prevlen: usize,
+        }
+        let geom: Vec<Geom> = chunks
             .iter()
             .map(|r| {
                 let first = &self.specs[r.start];
                 let last = &self.specs[r.end - 1];
                 let p0 = first.offset;
                 let plen = last.offset + last.size - p0;
+                let mut o0 = 0usize;
+                let mut olen = 0usize;
                 let mut prev0 = 0usize;
                 let mut prevlen = 0usize;
                 for sp in &self.specs[r.start..r.end] {
+                    if let Some(&oo) = sp.opt_offsets.first() {
+                        if olen == 0 {
+                            o0 = oo;
+                        }
+                        olen = oo + sp.size - o0;
+                    }
                     if let Some(po) = sp.prev_offset {
                         if prevlen == 0 {
                             prev0 = po;
@@ -587,22 +927,21 @@ impl HostBackend {
                         prevlen = po + sp.size - prev0;
                     }
                 }
-                (p0, plen, prev0, prevlen)
+                Geom { p0, plen, o0, olen, prev0, prevlen }
             })
             .collect();
+        let slot_stride = self.specs.iter().map(|sp| if sp.trainable { sp.size } else { 0 }).sum::<usize>();
         let mut ranges: Vec<(usize, usize)> = Vec::with_capacity(nch * (2 + n_slots));
-        for &(p0, plen, _, _) in &geom {
-            ranges.push((p0, plen));
+        for g in &geom {
+            ranges.push((g.p0, g.plen));
         }
         for slot in 0..n_slots {
-            for (r, &(p0, plen, _, _)) in chunks.iter().zip(geom.iter()) {
-                let off0 = self.specs[r.start].opt_offsets[slot];
-                debug_assert_eq!(off0 - self.specs[r.start].offset, off0 - p0);
-                ranges.push((off0, plen));
+            for g in &geom {
+                ranges.push((g.o0 + slot * slot_stride, g.olen));
             }
         }
-        for &(_, _, prev0, prevlen) in &geom {
-            ranges.push((prev0, prevlen));
+        for g in &geom {
+            ranges.push((g.prev0, g.prevlen));
         }
 
         // Carve `ns` into those disjoint windows (ascending order: the
@@ -628,8 +967,9 @@ impl HostBackend {
         {
             outs.push(ChunkOut {
                 specs: chunks[i].clone(),
-                p0: geom[i].0,
-                prev0: geom[i].2,
+                p0: geom[i].p0,
+                o0: geom[i].o0,
+                prev0: geom[i].prev0,
                 params: pw,
                 m: mw,
                 v: vw,
@@ -690,8 +1030,10 @@ impl HostBackend {
         for idx in out.specs.clone() {
             let spec = &self.specs[idx];
             let Some(g) = &grads[idx] else { continue };
+            debug_assert!(spec.trainable, "gradient for an untrainable spec");
             let mval = spec.component.map_or(1.0, |ci| mask[ci]);
             let lo = spec.offset - out.p0;
+            let olo = spec.opt_offsets[0] - out.o0;
             let mut st = SpecStats { gnorm: kernels::abs_sum8(g), dsum: 0.0 };
             // Eq. 1 statistics + prev-grad carry (frozen components keep
             // their stale prev, exactly like the compiled graph)
@@ -724,8 +1066,8 @@ impl HostBackend {
                         let v_hat = vn / bc2;
                         let pn = p - lr * (m_hat / (v_hat.sqrt() + eps) + wd * p);
                         out.params[lo + i] = mval * pn + (1.0 - mval) * p;
-                        out.m[lo + i] = mval * mn + (1.0 - mval) * m0;
-                        vwin[lo + i] = mval * vn + (1.0 - mval) * v0;
+                        out.m[olo + i] = mval * mn + (1.0 - mval) * m0;
+                        vwin[olo + i] = mval * vn + (1.0 - mval) * v0;
                     }
                 }
                 Opt::Sgd { momentum } => {
@@ -737,7 +1079,7 @@ impl HostBackend {
                         let momn = momentum * mom0 + gi;
                         let pn = p - lr * (momn + wd * p);
                         out.params[lo + i] = mval * pn + (1.0 - mval) * p;
-                        out.m[lo + i] = mval * momn + (1.0 - mval) * mom0;
+                        out.m[olo + i] = mval * momn + (1.0 - mval) * mom0;
                     }
                 }
             }
@@ -746,60 +1088,84 @@ impl HostBackend {
         stats
     }
 
-    /// Full backward pass. Returns per-spec gradients of the *mean* loss.
-    /// The plan's omitted components skip their dW matmul (their entry
-    /// stays `None`; gradients still flow *through* the weights, as with
-    /// `stop_gradient`). When the plan grants truncation, a fully
-    /// omitted layer *prefix* additionally truncates the sweep: its norm
-    /// scales and the embeddings get no gradient (the AutoFreeze-style
-    /// whole-layer rule — see the module docs).
-    fn backward(
+    /// dW for the matrix weight at spec `widx` given its input
+    /// `x: [m, din]` and output gradient `dy: [m, dout]`. Under fp the
+    /// gradient lands on the weight itself; under LoRA it lands on the
+    /// site's A/B adapters (`d(x·(W + s·A·B))`: dA = s·xᵀ(dy·Bᵀ),
+    /// dB = s·(x·A)ᵀ·dy — the r-sized intermediate order, never forming
+    /// a d_in×d_out product) and the base weight stays `None`. Omitted
+    /// components and untrainable weights get nothing.
+    #[allow(clippy::too_many_arguments)]
+    fn dw_site(
         &self,
         state: &[f32],
-        fwd: &Fwd,
-        dlogits: Vec<f32>,
-        tokens: &[i32],
+        grads: &mut [Option<Vec<f32>>],
         plan: &StepPlan,
-    ) -> Vec<Option<Vec<f32>>> {
-        let Dims { b, t, d, h, hd, f, l, v, s, .. } = self.dims;
-        let m = b * t;
-        let mut grads: Vec<Option<Vec<f32>>> = (0..self.specs.len()).map(|_| None).collect();
-        let omits =
-            |spec_idx: usize| self.specs[spec_idx].component.map_or(false, |c| plan.omits(c));
-        // Sweep truncation (opt-in capability on the plan): layers
-        // 0..trunc have all seven components omitted, so no *component*
-        // below layer `trunc` needs a gradient and the sweep stops above
-        // them — holding their norm scales and the embeddings for the
-        // step, the documented rider semantics.
-        let trunc = if plan.truncates() {
-            self.layers
-                .iter()
-                .take_while(|lr| {
-                    [lr.wq, lr.wk, lr.wv, lr.wo, lr.wg, lr.wu, lr.wd]
-                        .iter()
-                        .all(|&ix| omits(ix))
-                })
-                .count()
-        } else {
-            0
-        };
-
-        // head + final norm
-        grads[self.lm_head] = Some(matmul_tn(&fwd.hf, &dlogits, m, d, v));
-        let dhf = matmul_nt(&dlogits, self.param(state, self.lm_head), m, v, d);
-        let (g_lnf, mut dx) =
-            rms_backward(&fwd.xs[l], &fwd.rf, self.param(state, self.ln_f), &dhf, m, d);
-        grads[self.ln_f] = Some(g_lnf);
-
-        for li in (trunc..l).rev() {
-            let lr = &self.layers[li];
-            let lf = &fwd.layers[li];
-            // SwiGLU MLP: x_out = x_mid + (silu(h2·Wg) ⊙ (h2·Wu))·Wd
-            let d_mlp_out = &dx;
-            if !omits(lr.wd) {
-                grads[lr.wd] = Some(matmul_tn(&lf.act, d_mlp_out, m, f, d));
+        widx: usize,
+        x: &[f32],
+        dy: &[f32],
+        m: usize,
+        din: usize,
+        dout: usize,
+    ) {
+        if let Some(lora) = &self.lora {
+            let Some(ci) = self.wcomp[widx] else { return };
+            if plan.omits(ci) {
+                return;
             }
-            let d_act = matmul_nt(d_mlp_out, self.param(state, lr.wd), m, d, f);
+            let site = &lora.sites[ci];
+            let (r, sc) = (lora.rank, lora.scale);
+            let tmp = matmul_nt(dy, self.param(state, site.b), m, dout, r);
+            let mut da = matmul_tn(x, &tmp, m, din, r);
+            for g in da.iter_mut() {
+                *g *= sc;
+            }
+            let xa = matmul(x, self.param(state, site.a), m, din, r);
+            let mut db = matmul_tn(&xa, dy, m, r, dout);
+            for g in db.iter_mut() {
+                *g *= sc;
+            }
+            grads[site.a] = Some(da);
+            grads[site.b] = Some(db);
+            return;
+        }
+        let spec = &self.specs[widx];
+        if !spec.trainable || spec.component.map_or(false, |c| plan.omits(c)) {
+            return;
+        }
+        grads[widx] = Some(matmul_tn(x, dy, m, din, dout));
+    }
+
+    /// One tower's backward sweep (layers `trunc..` in reverse), writing
+    /// per-site gradients via [`Self::dw_site`] and returning the
+    /// gradient at the tower input.
+    #[allow(clippy::too_many_arguments)]
+    fn tower_bwd(
+        &self,
+        state: &[f32],
+        merged: &[Vec<f32>],
+        layers_idx: &[LayerIdx],
+        xs: &[Vec<f32>],
+        lfs: &[LayerFwd],
+        mut dx: Vec<f32>,
+        grads: &mut [Option<Vec<f32>>],
+        plan: &StepPlan,
+        trunc: usize,
+        b: usize,
+        t: usize,
+        d: usize,
+        h: usize,
+        f: usize,
+        causal: bool,
+    ) -> Vec<f32> {
+        let m = b * t;
+        let hd = d / h;
+        for li in (trunc..layers_idx.len()).rev() {
+            let lr = &layers_idx[li];
+            let lf = &lfs[li];
+            // SwiGLU MLP: x_out = x_mid + (silu(h2·Wg) ⊙ (h2·Wu))·Wd
+            self.dw_site(state, grads, plan, lr.wd, &lf.act, &dx, m, f, d);
+            let d_act = matmul_nt(&dx, self.weight(state, merged, lr.wd), m, d, f);
             let mut d_gp = vec![0f32; m * f];
             let mut d_up = vec![0f32; m * f];
             for i in 0..m * f {
@@ -808,75 +1174,186 @@ impl HostBackend {
                 d_up[i] = d_act[i] * z * sg; // silu(z) = z·σ(z)
                 d_gp[i] = d_act[i] * lf.up[i] * sg * (1.0 + z * (1.0 - sg));
             }
-            if !omits(lr.wg) {
-                grads[lr.wg] = Some(matmul_tn(&lf.h2, &d_gp, m, d, f));
-            }
-            if !omits(lr.wu) {
-                grads[lr.wu] = Some(matmul_tn(&lf.h2, &d_up, m, d, f));
-            }
-            let mut dh2 = matmul_nt(&d_gp, self.param(state, lr.wg), m, f, d);
-            let dh2b = matmul_nt(&d_up, self.param(state, lr.wu), m, f, d);
+            self.dw_site(state, grads, plan, lr.wg, &lf.h2, &d_gp, m, d, f);
+            self.dw_site(state, grads, plan, lr.wu, &lf.h2, &d_up, m, d, f);
+            let mut dh2 = matmul_nt(&d_gp, self.weight(state, merged, lr.wg), m, f, d);
+            let dh2b = matmul_nt(&d_up, self.weight(state, merged, lr.wu), m, f, d);
             for i in 0..m * d {
                 dh2[i] += dh2b[i];
             }
             let (g_ln2, dxm_norm) =
                 rms_backward(&lf.x_mid, &lf.r2, self.param(state, lr.ln2), &dh2, m, d);
-            grads[lr.ln2] = Some(g_ln2);
+            if self.specs[lr.ln2].trainable {
+                grads[lr.ln2] = Some(g_ln2);
+            }
             let mut dx_mid = dx; // residual branch
             for i in 0..m * d {
                 dx_mid[i] += dxm_norm[i];
             }
 
             // attention: x_mid = x_in + (softmax(qkᵀ/√hd)·v)·Wo
-            let d_attn_out = &dx_mid;
-            if !omits(lr.wo) {
-                grads[lr.wo] = Some(matmul_tn(&lf.ctx, d_attn_out, m, d, d));
-            }
-            let dctx = matmul_nt(d_attn_out, self.param(state, lr.wo), m, d, d);
-            let (dq, dk, dv) = attention_bwd(&lf.q, &lf.k, &lf.v, &lf.probs, &dctx, b, t, h, hd);
-            if !omits(lr.wq) {
-                grads[lr.wq] = Some(matmul_tn(&lf.h1, &dq, m, d, d));
-            }
-            if !omits(lr.wk) {
-                grads[lr.wk] = Some(matmul_tn(&lf.h1, &dk, m, d, d));
-            }
-            if !omits(lr.wv) {
-                grads[lr.wv] = Some(matmul_tn(&lf.h1, &dv, m, d, d));
-            }
-            let mut dh1 = matmul_nt(&dq, self.param(state, lr.wq), m, d, d);
-            let dh1b = matmul_nt(&dk, self.param(state, lr.wk), m, d, d);
-            let dh1c = matmul_nt(&dv, self.param(state, lr.wv), m, d, d);
+            self.dw_site(state, grads, plan, lr.wo, &lf.ctx, &dx_mid, m, d, d);
+            let dctx = matmul_nt(&dx_mid, self.weight(state, merged, lr.wo), m, d, d);
+            let (dq, dk, dv) =
+                attention_bwd(&lf.q, &lf.k, &lf.v, &lf.probs, &dctx, b, t, h, hd, causal);
+            self.dw_site(state, grads, plan, lr.wq, &lf.h1, &dq, m, d, d);
+            self.dw_site(state, grads, plan, lr.wk, &lf.h1, &dk, m, d, d);
+            self.dw_site(state, grads, plan, lr.wv, &lf.h1, &dv, m, d, d);
+            let mut dh1 = matmul_nt(&dq, self.weight(state, merged, lr.wq), m, d, d);
+            let dh1b = matmul_nt(&dk, self.weight(state, merged, lr.wk), m, d, d);
+            let dh1c = matmul_nt(&dv, self.weight(state, merged, lr.wv), m, d, d);
             for i in 0..m * d {
                 dh1[i] += dh1b[i] + dh1c[i];
             }
             let (g_ln1, dxin_norm) =
-                rms_backward(&fwd.xs[li], &lf.r1, self.param(state, lr.ln1), &dh1, m, d);
-            grads[lr.ln1] = Some(g_ln1);
+                rms_backward(&xs[li], &lf.r1, self.param(state, lr.ln1), &dh1, m, d);
+            if self.specs[lr.ln1].trainable {
+                grads[lr.ln1] = Some(g_ln1);
+            }
             for i in 0..m * d {
                 dx_mid[i] += dxin_norm[i];
             }
             dx = dx_mid;
         }
+        dx
+    }
 
-        // embeddings (rows past T in pos_emb get zero gradient; the
-        // optimizer still visits them — weight decay applies, as on XLA).
-        // A truncated sweep never reaches them: they ride along held.
-        if trunc == 0 {
+    /// Full backward pass. Returns per-spec gradients of the *mean* loss.
+    /// The plan's omitted components skip their dW matmul (their entry
+    /// stays `None`; gradients still flow *through* the weights, as with
+    /// `stop_gradient`). When the plan grants truncation, a fully
+    /// omitted layer *prefix* additionally truncates the sweep: its norm
+    /// scales and the embeddings get no gradient (the AutoFreeze-style
+    /// whole-layer rule — see the module docs). A VLM truncates only if
+    /// the *whole vision tower* is also omitted: the vision gradients
+    /// enter through the language tower's prefix rows, so any live
+    /// vision component needs the sweep to reach the bottom.
+    fn backward(
+        &self,
+        state: &[f32],
+        fwd: &Fwd,
+        dlogits: Vec<f32>,
+        tokens: &[i32],
+        patches: &[f32],
+        plan: &StepPlan,
+    ) -> Vec<Option<Vec<f32>>> {
+        let Dims { b, t, d, h, f, l, v, s, .. } = self.dims;
+        let merged = &fwd.merged;
+        let mut grads: Vec<Option<Vec<f32>>> = (0..self.specs.len()).map(|_| None).collect();
+        let omits = |spec_idx: usize| self.wcomp[spec_idx].map_or(false, |c| plan.omits(c));
+        let all_omitted = |lr: &LayerIdx| {
+            [lr.wq, lr.wk, lr.wv, lr.wo, lr.wg, lr.wu, lr.wd].iter().all(|&ix| omits(ix))
+        };
+        // Sweep truncation (opt-in capability on the plan): layers
+        // 0..trunc have all seven components omitted, so no *component*
+        // below layer `trunc` needs a gradient and the sweep stops above
+        // them — holding their norm scales and the embeddings (and, for
+        // a VLM, the vision tower) for the step, the documented rider
+        // semantics.
+        let trunc = if plan.truncates()
+            && self.vlm.as_ref().map_or(true, |vlm| vlm.layers.iter().all(&all_omitted))
+        {
+            self.layers.iter().take_while(|lr| all_omitted(lr)).count()
+        } else {
+            0
+        };
+
+        // head + final norm (VLM: logits cover the text rows only; the
+        // prefix rows reach ln_f with zero gradient from the head)
+        let p = self.vlm.as_ref().map_or(0, |vlm| vlm.dims.p);
+        let pt = p + t;
+        let hft = fwd.hft.as_deref().unwrap_or(&fwd.hf);
+        self.dw_site(state, &mut grads, plan, self.lm_head, hft, &dlogits, b * t, d, v);
+        let dhft = matmul_nt(&dlogits, self.weight(state, merged, self.lm_head), b * t, v, d);
+        let dhf = if p > 0 {
+            let mut full = vec![0f32; b * pt * d];
+            for bi in 0..b {
+                for ti in 0..t {
+                    let src = (bi * t + ti) * d;
+                    let dst = (bi * pt + p + ti) * d;
+                    full[dst..dst + d].copy_from_slice(&dhft[src..src + d]);
+                }
+            }
+            full
+        } else {
+            dhft
+        };
+        let (g_lnf, dx) =
+            rms_backward(&fwd.xs[l], &fwd.rf, self.param(state, self.ln_f), &dhf, b * pt, d);
+        if self.specs[self.ln_f].trainable {
+            grads[self.ln_f] = Some(g_lnf);
+        }
+
+        let dx = self.tower_bwd(
+            state, merged, &self.layers, &fwd.xs, &fwd.layers, dx, &mut grads, plan, trunc, b,
+            pt, d, h, f, true,
+        );
+        if trunc > 0 {
+            return grads;
+        }
+
+        // embeddings (rows past the batch's sequence in pos_emb get zero
+        // gradient; the optimizer still visits them — weight decay
+        // applies, as on XLA). Under LoRA they are frozen base weights.
+        if self.specs[self.tok_emb].trainable {
             let mut g_tok = vec![0f32; self.specs[self.tok_emb].size];
             let mut g_pos = vec![0f32; self.specs[self.pos_emb].size];
             debug_assert_eq!(g_pos.len(), s * d);
             for bi in 0..b {
-                for ti in 0..t {
-                    let row = bi * t + ti;
-                    let id = tokens[row] as usize;
+                for ri in 0..pt {
+                    let row = bi * pt + ri;
                     for di in 0..d {
-                        g_tok[id * d + di] += dx[row * d + di];
-                        g_pos[ti * d + di] += dx[row * d + di];
+                        let g = dx[row * d + di];
+                        if ri >= p {
+                            let id = tokens[bi * t + (ri - p)] as usize;
+                            g_tok[id * d + di] += g;
+                        }
+                        g_pos[ri * d + di] += g;
                     }
                 }
             }
             grads[self.tok_emb] = Some(g_tok);
             grads[self.pos_emb] = Some(g_pos);
+        }
+
+        // vision chain: prefix-row gradients → projection → final norm
+        // → tower → patch embed (model.py vlm_logits, reversed)
+        if let Some(vlm) = &self.vlm {
+            let vis = fwd.vis.as_ref().expect("vlm forward cache");
+            let VisDims { p, pd, dv, vh, vf, vl } = vlm.dims;
+            let mv = b * p;
+            let mut dprefix = vec![0f32; mv * d];
+            for bi in 0..b {
+                for pi in 0..p {
+                    let src = (bi * pt + pi) * d;
+                    let dst = (bi * p + pi) * d;
+                    dprefix[dst..dst + d].copy_from_slice(&dx[src..src + d]);
+                }
+            }
+            self.dw_site(state, &mut grads, plan, vlm.vis_proj, &vis.hv, &dprefix, mv, dv, d);
+            let dhv = matmul_nt(&dprefix, self.weight(state, merged, vlm.vis_proj), mv, d, dv);
+            let (g_vlnf, dxv) =
+                rms_backward(&vis.xs[vl], &vis.rv, self.param(state, vlm.vis_ln_f), &dhv, mv, dv);
+            if self.specs[vlm.vis_ln_f].trainable {
+                grads[vlm.vis_ln_f] = Some(g_vlnf);
+            }
+            let dxv = self.tower_bwd(
+                state, merged, &vlm.layers, &vis.xs, &vis.layers, dxv, &mut grads, plan, 0, b, p,
+                dv, vh, vf, false,
+            );
+            self.dw_site(state, &mut grads, plan, vlm.vis_in, patches, &dxv, mv, pd, dv);
+            if self.specs[vlm.vis_pos].trainable {
+                let mut g_vpos = vec![0f32; self.specs[vlm.vis_pos].size];
+                for bi in 0..b {
+                    for pi in 0..p {
+                        let row = bi * p + pi;
+                        for di in 0..dv {
+                            g_vpos[pi * dv + di] += dxv[row * dv + di];
+                        }
+                    }
+                }
+                grads[vlm.vis_pos] = Some(g_vpos);
+            }
         }
         grads
     }
@@ -899,14 +1376,30 @@ struct LayerFwd {
     act: Vec<f32>,
 }
 
-/// Whole-network forward cache. `xs[l]` is layer `l`'s input; `xs[L]` the
-/// final residual stream.
+/// Whole-network forward cache. `xs[l]` is language layer `l`'s input;
+/// `xs[L]` the final residual stream (over `P+T` rows for a VLM).
 struct Fwd {
     xs: Vec<Vec<f32>>,
     layers: Vec<LayerFwd>,
     hf: Vec<f32>,
     rf: Vec<f32>,
+    /// VLM only: the text rows of `hf`, regathered to `[B·T, D]` — the
+    /// head's actual input.
+    hft: Option<Vec<f32>>,
     logits: Vec<f32>,
+    /// VLM only: the vision tower's forward cache.
+    vis: Option<VisFwd>,
+    /// LoRA only: per-component merged `W + (α/r)·A·B` (else empty).
+    merged: Vec<Vec<f32>>,
+}
+
+/// The vision tower's forward cache (`xs`/`layers` as in [`Fwd`], plus
+/// the post-norm activations feeding the projection).
+struct VisFwd {
+    xs: Vec<Vec<f32>>,
+    layers: Vec<LayerFwd>,
+    hv: Vec<f32>,
+    rv: Vec<f32>,
 }
 
 // ---------------------------------------------------------------------------
@@ -924,15 +1417,17 @@ struct SpecStats {
 }
 
 /// One update worker's write windows into the next state: a contiguous
-/// run of specs plus a mutable window into each state region. Slot
-/// offsets mirror param offsets region-relatively, so a single local
-/// coordinate (`spec.offset - p0`) indexes `params`, `m` and `v` alike;
-/// `prev` uses its own `poff - prev0` base.
+/// run of specs plus a mutable window into each state region. The opt
+/// slots repeat one trainable-spec layout, so a single slot-relative
+/// coordinate (`spec.opt_offsets[0] - o0`) indexes `m` and `v` alike;
+/// `params` uses `spec.offset - p0` and `prev` its own `poff - prev0`.
 struct ChunkOut<'a> {
     /// Spec indices this worker owns.
     specs: std::ops::Range<usize>,
     /// Absolute state offset of `params[0]`.
     p0: usize,
+    /// Absolute state offset of `m[0]` (meaningless when `m` is empty).
+    o0: usize,
     /// Absolute state offset of `prev[0]` (meaningless when `prev` is empty).
     prev0: usize,
     params: &'a mut [f32],
@@ -1036,9 +1531,11 @@ fn rms_backward(
     (dscale.into_iter().map(|v| v as f32).collect(), dx)
 }
 
-/// Causal multi-head attention forward over already-projected q/k/v
-/// (`[B·T, D]`, heads interleaved). Returns `(probs [B,H,T,T], ctx
-/// [B·T, D])`; masked scores are exactly the python graph's `-1e9`.
+/// Multi-head attention forward over already-projected q/k/v (`[B·T,
+/// D]`, heads interleaved) — causal for language towers, unmasked for
+/// the vision tower. Returns `(probs [B,H,T,T], ctx [B·T, D])`; masked
+/// scores are exactly the python graph's `-1e9`.
+#[allow(clippy::too_many_arguments)]
 fn attention_fwd(
     q: &[f32],
     k: &[f32],
@@ -1047,6 +1544,7 @@ fn attention_fwd(
     t: usize,
     h: usize,
     hd: usize,
+    causal: bool,
 ) -> (Vec<f32>, Vec<f32>) {
     let d = h * hd;
     let inv_sqrt = 1.0 / (hd as f64).sqrt();
@@ -1058,9 +1556,10 @@ fn attention_fwd(
         for hh in 0..h {
             let base = (bi * h + hh) * t * t;
             for t1 in 0..t {
+                let limit = if causal { t1 + 1 } else { t };
                 let qrow = &q[(bi * t + t1) * d + hh * hd..(bi * t + t1) * d + (hh + 1) * hd];
                 for (t2, sc) in scores.iter_mut().enumerate() {
-                    if t2 > t1 {
+                    if t2 >= limit {
                         *sc = -1e9;
                         continue;
                     }
@@ -1081,7 +1580,7 @@ fn attention_fwd(
                     *p *= inv;
                 }
                 crow.fill(0.0);
-                for t2 in 0..=t1 {
+                for t2 in 0..limit {
                     let p = prow[t2] as f64;
                     if p == 0.0 {
                         continue;
@@ -1103,6 +1602,7 @@ fn attention_fwd(
 }
 
 /// Attention backward: `(dq, dk, dv)` from the context gradient.
+#[allow(clippy::too_many_arguments)]
 fn attention_bwd(
     q: &[f32],
     k: &[f32],
@@ -1113,6 +1613,7 @@ fn attention_bwd(
     t: usize,
     h: usize,
     hd: usize,
+    causal: bool,
 ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
     let d = h * hd;
     let inv_sqrt = 1.0 / (hd as f64).sqrt();
@@ -1124,12 +1625,13 @@ fn attention_bwd(
         for hh in 0..h {
             let base = (bi * h + hh) * t * t;
             for t1 in 0..t {
+                let limit = if causal { t1 + 1 } else { t };
                 let prow = &probs[base + t1 * t..base + (t1 + 1) * t];
                 let dcrow =
                     &dctx[(bi * t + t1) * d + hh * hd..(bi * t + t1) * d + (hh + 1) * hd];
                 // dprobs[t2] = dctx · v[t2]; dv[t2] += probs · dctx
                 let mut dot = 0f64; // Σ dprobs·probs (softmax backward)
-                for t2 in 0..=t1 {
+                for t2 in 0..limit {
                     let vrow = &v[(bi * t + t2) * d + hh * hd..(bi * t + t2) * d + (hh + 1) * hd];
                     let acc = kernels::dot8(dcrow, vrow);
                     dprobs[t2] = acc;
@@ -1146,7 +1648,7 @@ fn attention_bwd(
                 // dscores = probs ⊙ (dprobs − Σ dprobs·probs), then the
                 // 1/√hd chain into q and k
                 let qrow_base = (bi * t + t1) * d + hh * hd;
-                for t2 in 0..=t1 {
+                for t2 in 0..limit {
                     let ds = prow[t2] as f64 * (dprobs[t2] - dot) * inv_sqrt;
                     if ds == 0.0 {
                         continue;
@@ -1205,6 +1707,17 @@ impl Backend for HostBackend {
                     }
                     out.fill(1.0);
                 }
+                Init::LoraA => {
+                    for o in out.iter_mut() {
+                        *o = 0.05 * rng.gauss() as f32;
+                    }
+                }
+                Init::LoraB => {
+                    for _ in 0..spec.size {
+                        rng.gauss();
+                    }
+                    out.fill(0.0);
+                }
             }
         }
         Ok(BackendState::new(state))
@@ -1217,6 +1730,14 @@ impl Backend for HostBackend {
         }
         for &tgt in &batch.targets {
             ensure!(tgt < v, "target id {tgt} outside vocab 0..{v} (use < 0 for masked)");
+        }
+        if let Some(vlm) = &self.vlm {
+            let want = self.dims.b * vlm.dims.p * vlm.dims.pd;
+            ensure!(
+                batch.patches.len() == want,
+                "vlm batch carries {} patch floats, layout wants {want} (B·P·patch_dim)",
+                batch.patches.len()
+            );
         }
         let bytes = batch.nbytes();
         Ok(UploadedBatch::new(batch.clone(), bytes))
@@ -1254,12 +1775,12 @@ impl Backend for HostBackend {
         let wd = self.weight_decay * c[2];
         let mask = &c[m.ctrl_mask_offset..m.ctrl_mask_offset + n_c];
 
-        let fwd = self.forward(s, &batch.tokens);
+        let fwd = self.forward(s, &batch.tokens, &batch.patches);
         let (loss_sum, count, dlogits) = self.loss_grad(&fwd.logits, &batch.targets);
         // Omitted components come back as `None` gradients, so the
         // stats/carry/update loop below skips them wholesale — their
         // state bits stay identical, exactly like the masked update.
-        let grads = self.backward(s, &fwd, dlogits, &batch.tokens, plan);
+        let grads = self.backward(s, &fwd, dlogits, &batch.tokens, &batch.patches, plan);
 
         let mut ns = s.clone();
         // Thread the optimizer + Eq. 1 stats over the same pool as the
@@ -1293,7 +1814,7 @@ impl Backend for HostBackend {
     fn eval_step(&self, state: &BackendState, io: &UploadedBatch) -> Result<(f64, f64)> {
         let s = state.downcast::<Vec<f32>>()?;
         let batch = io.downcast::<Batch>()?;
-        let fwd = self.forward(s, &batch.tokens);
+        let fwd = self.forward(s, &batch.tokens, &batch.patches);
         let (loss, count) = self.loss_of(&fwd.logits, &batch.targets);
         Ok((loss as f64, count as f64))
     }
@@ -1301,7 +1822,7 @@ impl Backend for HostBackend {
     fn eval_rows(&self, state: &BackendState, io: &UploadedBatch) -> Result<Vec<(f64, f64)>> {
         let s = state.downcast::<Vec<f32>>()?;
         let batch = io.downcast::<Batch>()?;
-        let fwd = self.forward(s, &batch.tokens);
+        let fwd = self.forward(s, &batch.tokens, &batch.patches);
         let Dims { b, t, v, .. } = self.dims;
         let mut out = Vec::with_capacity(b);
         for bi in 0..b {
@@ -1350,28 +1871,65 @@ mod tests {
         micro_layers(optimizer, 1)
     }
 
-    fn micro_layers(optimizer: &str, n_layers: usize) -> HostBackend {
-        let model = ModelConfig {
-            kind: "lm".into(),
+    fn micro_model(kind: &str, n_layers: usize) -> ModelConfig {
+        ModelConfig {
+            kind: kind.into(),
             vocab_size: 16,
             d_model: 8,
             n_layers,
             n_heads: 2,
             d_ff: 12,
             max_seq: 6,
-        };
-        let train = TrainConfig {
+            n_patches: 0,
+            patch_dim: 0,
+            d_vision: 0,
+            n_vision_layers: 0,
+            n_vision_heads: 1,
+            d_vision_ff: 0,
+        }
+    }
+
+    fn micro_train(optimizer: &str, method: &str) -> TrainConfig {
+        TrainConfig {
             batch_size: 2,
             seq_len: 4,
             optimizer: optimizer.into(),
-            method: "fp".into(),
+            method: method.into(),
             weight_decay: 0.01,
             beta1: 0.9,
             beta2: 0.999,
             eps: 1e-8,
             momentum: 0.9,
-        };
+            lora_rank: 3,
+            lora_alpha: 6.0,
+        }
+    }
+
+    fn micro_layers(optimizer: &str, n_layers: usize) -> HostBackend {
+        let model = micro_model("lm", n_layers);
+        let train = micro_train(optimizer, "fp");
         HostBackend::from_parts("lm-micro", &model, &train).unwrap()
+    }
+
+    /// Micro LoRA engine: the lm micro shapes with rank-3 adapters.
+    fn micro_lora(optimizer: &str) -> HostBackend {
+        let model = micro_model("lm", 1);
+        let train = micro_train(optimizer, "lora");
+        HostBackend::from_parts("lm-micro-lora", &model, &train).unwrap()
+    }
+
+    /// Micro two-tower VLM: 3 patches of width 5 through a 1-layer
+    /// vision tower (D_v=6) feeding the 1-layer language micro.
+    fn micro_vlm(optimizer: &str) -> HostBackend {
+        let mut model = micro_model("vlm", 1);
+        model.n_patches = 3;
+        model.patch_dim = 5;
+        model.d_vision = 6;
+        model.n_vision_layers = 1;
+        model.n_vision_heads = 2;
+        model.d_vision_ff = 8;
+        let train = micro_train(optimizer, "fp");
+        HostBackend::from_parts("vlm-micro", &model, &train).unwrap()
     }
 
     fn all_active(be: &HostBackend) -> StepPlan {
@@ -1387,10 +1945,11 @@ mod tests {
         let m = be.manifest();
         let mut rng = Rng::new(seed);
         let n = m.batch_size * m.seq_len;
+        let np = m.batch_size * m.n_patches * m.patch_dim;
         Batch {
             tokens: (0..n).map(|_| rng.below(m.vocab_size) as i32).collect(),
             targets: (0..n).map(|_| rng.below(m.vocab_size) as i32).collect(),
-            patches: Vec::new(),
+            patches: (0..np).map(|_| rng.gauss() as f32 * 0.5).collect(),
         }
     }
 
@@ -1434,13 +1993,86 @@ mod tests {
     }
 
     #[test]
-    fn lora_and_vlm_configs_are_rejected_with_a_hint() {
-        let lora = RepoConfig::by_name("lm-tiny-lora").unwrap();
-        let err = HostBackend::for_config(&lora).unwrap_err().to_string();
-        assert!(err.contains("--backend xla"), "{err}");
-        let vlm = RepoConfig::by_name("vlm-tiny-fp").unwrap();
-        let err = HostBackend::for_config(&vlm).unwrap_err().to_string();
-        assert!(err.contains("--backend xla"), "{err}");
+    fn lora_layout_matches_the_compiled_artifact_numbers() {
+        // layout.py lora_param_specs over lm-tiny-fp's shapes, rank 4:
+        // adapters 8·4·(64+64) + 6·4·(64+128) = 8704; base weights keep
+        // their offsets but lose opt slots and monitoring.
+        let be = HostBackend::for_config(&RepoConfig::by_name("lm-tiny-lora").unwrap()).unwrap();
+        let m = be.manifest();
+        assert_eq!((m.kind.as_str(), m.method.as_str()), ("lm", "lora"));
+        assert_eq!(m.n_components, 14);
+        assert_eq!(m.metrics_len, 32);
+        assert_eq!(m.n_params_total, 118080 + 8704);
+        assert_eq!(m.n_params_trainable, 8704);
+        // [metrics | params | adamw m+v over adapters | prev over adapters]
+        assert_eq!(m.state_len, 32 + 126784 + 2 * 8704 + 8704);
+        assert_eq!(m.params.len(), 22 + 28);
+        // components monitor the (A, B) pair, not the base weight
+        let c0 = &m.components[0];
+        assert_eq!(c0.name, "language.0.q");
+        assert_eq!(c0.tensors, vec!["lang.0.attn.q.lora_a", "lang.0.attn.q.lora_b"]);
+        assert_eq!(c0.n_params, 4 * (64 + 64));
+        // base weights: no component, no opt slots, no prev carry
+        let base = &be.specs[be.layers[0].wq];
+        assert!(!base.trainable && base.component.is_none());
+        assert!(base.opt_offsets.is_empty() && base.prev_offset.is_none());
+        assert!(m.param("lang.0.attn.q").unwrap().component.is_none());
+        // adapters: trainable, component-tagged, monitored
+        let a = &be.specs[be.lora.as_ref().unwrap().sites[0].a];
+        assert_eq!(a.shape, vec![64, 4]);
+        assert!(a.trainable && a.component == Some(0) && a.prev_offset.is_some());
+        assert_eq!(be.lora.as_ref().unwrap().scale, 2.0); // α=8 / r=4
+    }
+
+    #[test]
+    fn vlm_layout_matches_the_compiled_artifact_numbers() {
+        // layout.py base_param_specs for vlm-tiny-fp: the vision tower's
+        // specs precede the language tower's, components count both.
+        let be = HostBackend::for_config(&RepoConfig::by_name("vlm-tiny-fp").unwrap()).unwrap();
+        let m = be.manifest();
+        assert_eq!((m.kind.as_str(), m.method.as_str()), ("vlm", "fp"));
+        assert_eq!(m.n_components, 28);
+        assert_eq!(m.metrics_len, 4 + 2 * 28);
+        assert_eq!(m.ctrl_len, 4 + 28);
+        assert_eq!((m.n_patches, m.patch_dim), (16, 12));
+        assert_eq!(m.n_params_total, 168816);
+        assert_eq!(m.state_len, 60 + 168816 + 2 * 168816 + 128000);
+        assert_eq!(m.components[0].name, "vision.0.q");
+        assert_eq!(m.components[0].tower, "vision");
+        assert_eq!(m.components[14].name, "language.0.q");
+        assert_eq!(m.components[27].name, "language.1.down");
+        assert_eq!(m.param("vis_in").unwrap().shape, vec![12, 48]);
+        assert_eq!(m.param("vis_proj").unwrap().shape, vec![48, 64]);
+        // pos_emb covers prefix + text rows
+        assert_eq!(m.param("pos_emb").unwrap().shape, vec![32 + 16, 64]);
+        // spec order: all vision specs before tok_emb (layout.py)
+        let vis_proj = m.param("vis_proj").unwrap().offset;
+        assert!(vis_proj < m.param("tok_emb").unwrap().offset);
+    }
+
+    #[test]
+    fn vlm_lora_layout_adapts_both_towers() {
+        let model = {
+            let mut mc = micro_model("vlm", 1);
+            mc.n_patches = 3;
+            mc.patch_dim = 5;
+            mc.d_vision = 6;
+            mc.n_vision_layers = 1;
+            mc.n_vision_heads = 2;
+            mc.d_vision_ff = 8;
+            mc
+        };
+        let be =
+            HostBackend::from_parts("vlm-micro-lora", &model, &micro_train("adamw", "lora"))
+                .unwrap();
+        let m = be.manifest();
+        assert_eq!(m.n_components, 14);
+        // vision q site: A (6×3), B (3×6); language q site: A (8×3), B (3×8)
+        assert_eq!(m.components[0].n_params, 3 * (6 + 6));
+        assert_eq!(m.components[7].n_params, 3 * (8 + 8));
+        let lora = be.lora.as_ref().unwrap();
+        assert_eq!(lora.sites.len(), 14);
+        assert!(m.params.iter().all(|p| p.trainable == p.name.contains(".lora_")));
     }
 
     #[test]
@@ -1466,32 +2098,74 @@ mod tests {
         // tensor family. f64 loss accumulation keeps FD noise ≈1e-6; the
         // analytic/FD agreement required here is ~1%.
         let be = micro("adamw");
-        let state = be.state_to_host(&be.init_state(3).unwrap()).unwrap();
-        let batch = micro_batch(&be, 99);
+        let checked = fd_gradcheck(&be, 3, 99);
+        assert!(checked >= 12, "gradcheck sampled too few informative entries ({checked})");
+    }
+
+    /// Central finite differences against the analytic gradient for every
+    /// spec that has one, from a fresh seed-`seed` init; returns how many
+    /// informative entries were checked.
+    fn fd_gradcheck(be: &HostBackend, seed: i32, batch_seed: u64) -> usize {
+        let state = be.state_to_host(&be.init_state(seed).unwrap()).unwrap();
+        fd_gradcheck_from(be, &state, batch_seed)
+    }
+
+    #[test]
+    fn lora_gradients_match_finite_differences_and_base_grads_are_absent() {
+        // The adapter chain rule (dA = s·xᵀ(dy·Bᵀ), dB = s·(x·A)ᵀ·dy)
+        // against FD on the *full* loss; every base weight's grad entry
+        // must be exactly `None` — layout.py gives them no state either.
+        let be = micro_lora("adamw");
+        // B initializes to zero, which would zero every dA signal — take
+        // a few real steps first so the adapters are in general position.
+        let m = be.manifest();
+        let batch = micro_batch(&be, 55);
+        let io = be.upload_batch(&batch).unwrap();
+        let mut s = be.init_state(13).unwrap();
+        for t in 1..=3 {
+            let ctrl = be.upload_ctrl(&full_ctrl(m, t as f32, 5e-2)).unwrap();
+            s = be.train_step(&s, &io, &ctrl, &all_active(&be)).unwrap();
+        }
+        let warm = be.state_to_host(&s).unwrap();
+        let checked = fd_gradcheck_from(&be, &warm, 55);
+        assert!(checked >= 12, "lora gradcheck sampled too few informative entries ({checked})");
+    }
+
+    /// [`fd_gradcheck`] from an explicit state. Specs with no gradient
+    /// (frozen LoRA base weights) assert exact absence instead — a `None`
+    /// entry, never a zero tensor.
+    fn fd_gradcheck_from(be: &HostBackend, state: &[f32], batch_seed: u64) -> usize {
+        let batch = micro_batch(be, batch_seed);
         let loss_of = |s: &[f32]| -> f64 {
-            let fwd = be.forward(s, &batch.tokens);
+            let fwd = be.forward(s, &batch.tokens, &batch.patches);
             let (l, c, _) = be.loss_grad(&fwd.logits, &batch.targets);
             l as f64 / (c as f64).max(1.0)
         };
-        let fwd = be.forward(&state, &batch.tokens);
+        let fwd = be.forward(state, &batch.tokens, &batch.patches);
         let (_, _, dlogits) = be.loss_grad(&fwd.logits, &batch.targets);
-        let grads = be.backward(&state, &fwd, dlogits, &batch.tokens, &all_active(&be));
+        let grads = be.backward(state, &fwd, dlogits, &batch.tokens, &batch.patches, &all_active(be));
         let mut rng = Rng::new(5);
         let mut checked = 0usize;
         for (idx, spec) in be.specs.iter().enumerate() {
-            let g = grads[idx].as_ref().expect("all tensors have grads in the full graph");
+            let Some(g) = grads[idx].as_ref() else {
+                assert!(
+                    !spec.trainable,
+                    "trainable spec {} missing its gradient in the full graph",
+                    spec.name
+                );
+                continue;
+            };
+            assert!(spec.trainable, "untrainable spec {} got a gradient", spec.name);
             for _ in 0..4 {
                 let i = rng.below(spec.size);
                 let eps = 2e-3f32;
-                let mut sp = state.clone();
+                let mut sp = state.to_vec();
                 sp[spec.offset + i] += eps;
-                let mut sm = state.clone();
+                let mut sm = state.to_vec();
                 sm[spec.offset + i] -= eps;
-                // the realized (f32-rounded) step, not the nominal eps
                 let h = (sp[spec.offset + i] - sm[spec.offset + i]) as f64;
                 let fd = (loss_of(&sp) - loss_of(&sm)) / h;
                 let an = g[i] as f64;
-                // only test entries with signal above the FD noise floor
                 if fd.abs() < 1e-3 && an.abs() < 1e-3 {
                     continue;
                 }
@@ -1504,7 +2178,29 @@ mod tests {
                 checked += 1;
             }
         }
-        assert!(checked >= 12, "gradcheck sampled too few informative entries ({checked})");
+        checked
+    }
+
+    #[test]
+    fn vlm_gradients_match_finite_differences_across_the_tower_boundary() {
+        // Covers the patch embed (vis_in/vis_pos), the non-causal vision
+        // tower, the vis_proj cross-tower boundary and the language side
+        // in one sweep — every spec is trainable under fp, so every one
+        // must carry a gradient.
+        let be = micro_vlm("adamw");
+        let checked = fd_gradcheck(&be, 19, 77);
+        assert!(checked >= 12, "vlm gradcheck sampled too few informative entries ({checked})");
+        // and the boundary tensors specifically made the cut
+        let state = be.state_to_host(&be.init_state(19).unwrap()).unwrap();
+        let batch = micro_batch(&be, 77);
+        let fwd = be.forward(&state, &batch.tokens, &batch.patches);
+        let (_, _, dlogits) = be.loss_grad(&fwd.logits, &batch.targets);
+        let grads =
+            be.backward(&state, &fwd, dlogits, &batch.tokens, &batch.patches, &all_active(&be));
+        let vlm = be.vlm.as_ref().unwrap();
+        for idx in [vlm.vis_in, vlm.vis_pos, vlm.vis_proj, vlm.vis_ln_f, vlm.layers[0].wq] {
+            assert!(grads[idx].is_some(), "vlm spec {} has no gradient", be.specs[idx].name);
+        }
     }
 
     #[test]
@@ -1783,8 +2479,16 @@ mod tests {
         // masked path; both optimizer families are covered. (Matmul
         // thread/SIMD invariance lives in `host_kernels::tests` and
         // `tests/properties.rs`.)
-        for optimizer in ["adamw", "sgd"] {
-            let be = micro(optimizer);
+        let engines: Vec<(&str, HostBackend)> = vec![
+            ("adamw", micro("adamw")),
+            ("sgd", micro("sgd")),
+            // LoRA's opt/prev regions skip the untrainable base specs, so
+            // its chunk windows exercise the trainable-aware geometry
+            ("lora-adamw", micro_lora("adamw")),
+            ("lora-sgd", micro_lora("sgd")),
+            ("vlm-adamw", micro_vlm("adamw")),
+        ];
+        for (optimizer, be) in &engines {
             let m = be.manifest();
             let batch = micro_batch(&be, 9);
             let s0 = be.init_state(5).unwrap();
@@ -1792,9 +2496,10 @@ mod tests {
             let mut ctrl = full_ctrl(m, 1.0, 1e-2);
             ctrl[m.ctrl_mask_offset] = 0.0; // freeze component 0
             let mask = &ctrl[m.ctrl_mask_offset..m.ctrl_mask_offset + m.n_components];
-            let fwd = be.forward(&s, &batch.tokens);
+            let fwd = be.forward(&s, &batch.tokens, &batch.patches);
             let (_, _, dlogits) = be.loss_grad(&fwd.logits, &batch.targets);
-            let grads = be.backward(&s, &fwd, dlogits, &batch.tokens, &all_active(&be));
+            let grads =
+                be.backward(&s, &fwd, dlogits, &batch.tokens, &batch.patches, &all_active(&be));
 
             let mut base = s.clone();
             let (gn1, gd1, ga1) =
@@ -1882,5 +2587,167 @@ mod tests {
         let back = be.state_from_host(&host).unwrap();
         assert_eq!(be.state_to_host(&back).unwrap(), host);
         assert!(be.state_from_host(&host[1..]).is_err());
+    }
+
+    #[test]
+    fn lora_training_moves_only_adapters_and_reduces_loss() {
+        let be = micro_lora("adamw");
+        let m = be.manifest();
+        let batch = micro_batch(&be, 12);
+        let io = be.upload_batch(&batch).unwrap();
+        let s0 = be.init_state(4).unwrap();
+        let init = be.state_to_host(&s0).unwrap();
+        let mut state = s0;
+        let mut first = f32::NAN;
+        let mut last = f32::NAN;
+        for t in 1..=40 {
+            let ctrl = be.upload_ctrl(&full_ctrl(m, t as f32, 5e-2)).unwrap();
+            state = be.train_step(&state, &io, &ctrl, &all_active(&be)).unwrap();
+            let metrics = be.probe(&state).unwrap();
+            let loss = metrics[0] / metrics[1].max(1.0);
+            assert!(loss.is_finite());
+            if t == 1 {
+                first = loss;
+            }
+            last = loss;
+        }
+        assert!(last < first - 0.2, "lora loss must fall on a repeated batch: {first} -> {last}");
+        let after = be.state_to_host(&state).unwrap();
+        // lora.py: the frozen base never moves — bit-identical to init
+        for spec in be.specs.iter().filter(|sp| !sp.trainable) {
+            assert_eq!(
+                init[spec.offset..spec.offset + spec.size],
+                after[spec.offset..spec.offset + spec.size],
+                "frozen base weight {} moved",
+                spec.name
+            );
+        }
+        // every adapter moved (B leaves zero on the first step)
+        for site in &be.lora.as_ref().unwrap().sites {
+            for &idx in &[site.a, site.b] {
+                let sp = &be.specs[idx];
+                assert_ne!(
+                    init[sp.offset..sp.offset + sp.size],
+                    after[sp.offset..sp.offset + sp.size],
+                    "adapter {} never moved",
+                    sp.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn vlm_train_step_writes_metrics_and_reduces_loss() {
+        let be = micro_vlm("adamw");
+        let m = be.manifest();
+        let batch = micro_batch(&be, 14);
+        let io = be.upload_batch(&batch).unwrap();
+        let mut state = be.init_state(6).unwrap();
+        let mut first = f32::NAN;
+        let mut last = f32::NAN;
+        for t in 1..=30 {
+            let ctrl = be.upload_ctrl(&full_ctrl(m, t as f32, 1e-2)).unwrap();
+            state = be.train_step(&state, &io, &ctrl, &all_active(&be)).unwrap();
+            let metrics = be.probe(&state).unwrap();
+            let loss = metrics[0] / metrics[1].max(1.0);
+            assert!(loss.is_finite());
+            assert!(metrics[2] > 0.0, "global gnorm recorded");
+            if t == 1 {
+                first = loss;
+            }
+            last = loss;
+        }
+        assert!(last < first - 0.3, "vlm loss must fall on a repeated batch: {first} -> {last}");
+    }
+
+    #[test]
+    fn vlm_upload_batch_rejects_wrong_patch_count() {
+        let be = micro_vlm("adamw");
+        let mut batch = micro_batch(&be, 3);
+        batch.patches.pop();
+        let err = be.upload_batch(&batch).unwrap_err().to_string();
+        assert!(err.contains("patch"), "{err}");
+    }
+
+    #[test]
+    fn new_family_plan_elision_equals_masked_dense_bitwise() {
+        // PR 5's central elision guarantee, extended to the new layouts:
+        // omitting frozen components skips exactly their dW/update math,
+        // so the planned state matches the masked dense state bit-for-bit
+        // past the metrics prefix. For LoRA the omission must gate the
+        // *adapter pair*; for the VLM it must reach the vision tower.
+        for (label, be, warmup) in [
+            ("lora", micro_lora("adamw"), 2usize),
+            ("vlm", micro_vlm("adamw"), 0usize),
+        ] {
+            let m = be.manifest();
+            let batch = micro_batch(&be, 21);
+            let io = be.upload_batch(&batch).unwrap();
+            let mut s0 = be.init_state(8).unwrap();
+            // LoRA: step off the all-zero B init so omission has bits to
+            // wrongly move if the gating were broken
+            for t in 0..warmup {
+                let ctrl = be.upload_ctrl(&full_ctrl(m, (t + 1) as f32, 5e-2)).unwrap();
+                s0 = be.train_step(&s0, &io, &ctrl, &all_active(&be)).unwrap();
+            }
+            // one component from each tower/group that exists
+            let omitted: Vec<usize> = vec![0, m.n_components - 1];
+            let mut masked = full_ctrl(m, 9.0, 1e-3);
+            for &c in &omitted {
+                masked[m.ctrl_mask_offset + c] = 0.0;
+            }
+            let ctrl = be.upload_ctrl(&masked).unwrap();
+            let dense = be.train_step(&s0, &io, &ctrl, &all_active(&be)).unwrap();
+            let planned = be
+                .train_step(&s0, &io, &ctrl, &StepPlan::omitting(m.n_components, &omitted))
+                .unwrap();
+            let hd = be.state_to_host(&dense).unwrap();
+            let hp = be.state_to_host(&planned).unwrap();
+            assert_eq!(
+                hd[m.metrics_len..],
+                hp[m.metrics_len..],
+                "{label}: planned state diverged from masked dense"
+            );
+            for &c in &omitted {
+                assert!(hd[m.gdiff_offset + c] > 0.0, "{label}: dense stats missing");
+                assert_eq!(hp[m.gdiff_offset + c], 0.0, "{label}: planned stats leaked");
+            }
+        }
+    }
+
+    #[test]
+    fn merged_weights_match_the_adapter_graph() {
+        // merge_lora semantics: W + (α/r)·A·B. Spot-check one site in
+        // f64 against the engine's merged buffer.
+        let be = micro_lora("adamw");
+        let m = be.manifest();
+        let batch = micro_batch(&be, 33);
+        let io = be.upload_batch(&batch).unwrap();
+        let mut s = be.init_state(17).unwrap();
+        for t in 1..=2 {
+            let ctrl = be.upload_ctrl(&full_ctrl(m, t as f32, 5e-2)).unwrap();
+            s = be.train_step(&s, &io, &ctrl, &all_active(&be)).unwrap();
+        }
+        let host = be.state_to_host(&s).unwrap();
+        let merged = be.merged_weights(&host);
+        let lora = be.lora.as_ref().unwrap();
+        assert_eq!(merged.len(), lora.sites.len());
+        let site = &lora.sites[0];
+        let (base, a, b) = (&be.specs[site.base], &be.specs[site.a], &be.specs[site.b]);
+        let (din, r, dout) = (base.shape[0], lora.rank, base.shape[1]);
+        for i in 0..din {
+            for j in 0..dout {
+                let mut acc = 0f64;
+                for k in 0..r {
+                    acc += host[a.offset + i * r + k] as f64 * host[b.offset + k * dout + j] as f64;
+                }
+                let want = host[base.offset + i * dout + j] as f64 + lora.scale as f64 * acc;
+                let got = merged[0][i * dout + j] as f64;
+                assert!(
+                    (want - got).abs() <= 1e-5 * want.abs().max(1.0),
+                    "merged[{i},{j}]: {got} vs {want}"
+                );
+            }
+        }
     }
 }

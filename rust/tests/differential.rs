@@ -13,9 +13,12 @@
 //!   the paper's actual subject, must not depend on the engine,
 //! * single-step state updates agree elementwise.
 //!
-//! Artifact-gated like `integration.rs`: set `GRADES_ARTIFACTS=1` after
-//! `make artifacts`. Without artifacts every test skips and tier-1 stays
-//! green (the host-only trajectory coverage lives in
+//! Every test sweeps the model-family grid: full-parameter LM, LoRA
+//! adapters, and the two-tower VLM. Artifact-gated like
+//! `integration.rs`: set `GRADES_ARTIFACTS=1` after `make artifacts`.
+//! Without artifacts every test skips, and a family whose artifact
+//! directory is missing is skipped individually, so tier-1 stays green
+//! (the host-only trajectory coverage lives in
 //! `rust/tests/host_backend.rs`).
 
 use std::sync::Arc;
@@ -28,35 +31,46 @@ use grades::data;
 use grades::runtime::artifact::{Bundle, Client};
 use grades::runtime::backend::Backend;
 use grades::runtime::host_backend::HostBackend;
-use grades::runtime::session::Session;
+use grades::runtime::manifest::Manifest;
+use grades::runtime::session::{Batch, Session};
 
-const CONFIG: &str = "lm-tiny-fp";
+/// One config per engine family: full-parameter LM, LoRA adapters on a
+/// frozen base, and the two-tower VLM. The freeze-step identity must
+/// hold on all three — GradES monitors different component sets
+/// (adapters; per-tower matrices) in each.
+const FAMILIES: &[&str] = &["lm-tiny-fp", "lm-tiny-lora", "vlm-tiny-fp"];
 
 fn artifacts_enabled() -> bool {
     matches!(std::env::var("GRADES_ARTIFACTS"), Ok(v) if !v.is_empty() && v != "0")
 }
 
-/// (bundle, host engine) for the shared config, or None when gated off.
-fn engines() -> Option<(Bundle, HostBackend)> {
+/// (bundle, host engine) for one config, or None when gated off or this
+/// family's artifact was not compiled.
+fn engines(config: &str) -> Option<(Bundle, HostBackend)> {
     if !artifacts_enabled() {
         eprintln!("skipping: set GRADES_ARTIFACTS=1 (after `make artifacts`) to run differential tests");
         return None;
     }
-    let dir = grades::config::repo_root().join("artifacts").join(CONFIG);
+    let dir = grades::config::repo_root().join("artifacts").join(config);
     if !dir.join("manifest.json").exists() {
-        eprintln!("skipping: artifacts/{CONFIG} missing (run `make artifacts`)");
+        eprintln!("skipping {config}: artifacts/{config} missing (run `make artifacts`)");
         return None;
     }
     let client = Client::cpu().expect("PJRT CPU client");
     let bundle = Bundle::load(&client, &dir).expect("bundle");
-    let cfg = RepoConfig::by_name(CONFIG).expect("config");
+    let cfg = RepoConfig::by_name(config).expect("config");
     let host = HostBackend::for_config(&cfg).expect("host backend");
     // the layout contract that makes states interchangeable
     assert_eq!(host.manifest().state_len, bundle.manifest.state_len);
     assert_eq!(host.manifest().metrics_len, bundle.manifest.metrics_len);
     assert_eq!(host.manifest().ctrl_len, bundle.manifest.ctrl_len);
+    assert_eq!(host.manifest().n_components, bundle.manifest.n_components);
+    for (h, x) in host.manifest().components.iter().zip(&bundle.manifest.components) {
+        assert_eq!((h.name.as_str(), h.tower.as_str()), (x.name.as_str(), x.tower.as_str()));
+    }
     for (h, x) in host.manifest().params.iter().zip(&bundle.manifest.params) {
         assert_eq!((h.name.as_str(), h.offset), (x.name.as_str(), x.offset), "layout drift");
+        assert_eq!(h.trainable, x.trainable, "trainability drift on {}", h.name);
     }
     Some((bundle, host))
 }
@@ -65,9 +79,24 @@ fn rel_close(a: f64, b: f64, rtol: f64) -> bool {
     (a - b).abs() <= rtol * a.abs().max(b.abs()).max(1e-8)
 }
 
+/// A deterministic batch stream both backends replay identically: the
+/// LM path materialises batches from the seeded iterator, the VLM path
+/// uses the packed scene batches directly.
+fn batch_pool(cfg: &RepoConfig, m: &Manifest, n: usize) -> (Vec<Batch>, Vec<Batch>) {
+    if m.is_vlm() {
+        let ds = data::build_vlm(cfg, m).unwrap();
+        (ds.train, ds.val)
+    } else {
+        let mut ds = data::build_lm(cfg, m).unwrap();
+        let train = (0..n.max(1)).map(|_| ds.train.next_batch()).collect();
+        (train, ds.val)
+    }
+}
+
 /// Shared-parameter warm start: both backends start from the *XLA*
 /// init's parameters (init RNGs differ across backends by design; the
-/// paper's subject is the trajectory from shared weights).
+/// paper's subject is the trajectory from shared weights). Mapping by
+/// tensor name also covers LoRA adapters and both VLM towers.
 fn shared_start(bundle: &Bundle) -> Arc<BaseCheckpoint> {
     let mut s = Session::new(bundle);
     s.init(42).unwrap();
@@ -80,13 +109,19 @@ fn run_grades(
     steps: usize,
     warm: Arc<BaseCheckpoint>,
 ) -> TrainOutcome {
-    let mut ds = data::build_lm(cfg, backend.manifest()).unwrap();
-    let val: Vec<_> = ds.val.iter().take(2).cloned().collect();
+    let (train, val) = batch_pool(cfg, backend.manifest(), steps);
+    let val: Vec<_> = val.iter().take(2).cloned().collect();
     let mut opts = TrainerOptions::from_config(cfg, StoppingMethod::GradEs);
     opts.total_steps = steps;
     opts.probe_every = 1;
     opts.warm_start = Some(warm);
-    trainer::run(backend, cfg, &opts, || ds.train.next_batch(), &val).unwrap()
+    let mut i = 0usize;
+    let next = || {
+        let b = train[i % train.len()].clone();
+        i += 1;
+        b
+    };
+    trainer::run(backend, cfg, &opts, next, &val).unwrap()
 }
 
 fn assert_trajectories_agree(x: &TrainOutcome, h: &TrainOutcome, rtol: f64, label: &str) {
@@ -120,97 +155,118 @@ fn assert_trajectories_agree(x: &TrainOutcome, h: &TrainOutcome, rtol: f64, labe
 
 #[test]
 fn single_step_state_updates_agree_elementwise() {
-    let Some((bundle, host)) = engines() else { return };
-    let cfg = RepoConfig::by_name(CONFIG).unwrap();
-    let m = &bundle.manifest;
-    let mut xs = Session::new(&bundle);
-    xs.init(7).unwrap();
-    let start = xs.state_to_host().unwrap();
-    let mut hs = Session::new(&host);
-    hs.state_from_host(&start).unwrap();
+    for config in FAMILIES {
+        let Some((bundle, host)) = engines(config) else { continue };
+        let cfg = RepoConfig::by_name(config).unwrap();
+        let m = &bundle.manifest;
+        let mut xs = Session::new(&bundle);
+        xs.init(7).unwrap();
+        let start = xs.state_to_host().unwrap();
+        let mut hs = Session::new(&host);
+        hs.state_from_host(&start).unwrap();
 
-    let mut ds = data::build_lm(&cfg, m).unwrap();
-    let batch = ds.train.next_batch();
-    let mut ctrl = vec![0f32; m.ctrl_len];
-    ctrl[0] = 1.0;
-    ctrl[1] = 1e-3;
-    ctrl[2] = 1.0;
-    for c in ctrl.iter_mut().skip(m.ctrl_mask_offset) {
-        *c = 1.0;
-    }
-    let full = StepPlan::all_active(m.n_components);
-    xs.train_step(&batch, &ctrl, &full).unwrap();
-    hs.train_step(&batch, &ctrl, &full).unwrap();
-    let sx = xs.state_to_host().unwrap();
-    let sh = hs.state_to_host().unwrap();
+        let (train, _) = batch_pool(&cfg, m, 1);
+        let batch = train[0].clone();
+        let mut ctrl = vec![0f32; m.ctrl_len];
+        ctrl[0] = 1.0;
+        ctrl[1] = 1e-3;
+        ctrl[2] = 1.0;
+        for c in ctrl.iter_mut().skip(m.ctrl_mask_offset) {
+            *c = 1.0;
+        }
+        let full = StepPlan::all_active(m.n_components);
+        xs.train_step(&batch, &ctrl, &full).unwrap();
+        hs.train_step(&batch, &ctrl, &full).unwrap();
+        let sx = xs.state_to_host().unwrap();
+        let sh = hs.state_to_host().unwrap();
 
-    // loss / count / gnorm / gdiff in the metrics prefix
-    assert!(rel_close(sx[0] as f64, sh[0] as f64, 1e-3), "loss_sum {} vs {}", sx[0], sh[0]);
-    assert_eq!(sx[1], sh[1], "token counts are exact on both backends");
-    assert!(rel_close(sx[2] as f64, sh[2] as f64, 1e-2), "gnorm {} vs {}", sx[2], sh[2]);
-    for c in 0..m.n_components {
-        let (a, b) = (sx[m.gdiff_offset + c] as f64, sh[m.gdiff_offset + c] as f64);
-        assert!(rel_close(a, b, 2e-2), "gdiff[{c}] {a} vs {b}");
+        // loss / count / gnorm / gdiff in the metrics prefix
+        assert!(
+            rel_close(sx[0] as f64, sh[0] as f64, 1e-3),
+            "{config}: loss_sum {} vs {}",
+            sx[0],
+            sh[0]
+        );
+        assert_eq!(sx[1], sh[1], "{config}: token counts are exact on both backends");
+        assert!(
+            rel_close(sx[2] as f64, sh[2] as f64, 1e-2),
+            "{config}: gnorm {} vs {}",
+            sx[2],
+            sh[2]
+        );
+        for c in 0..m.n_components {
+            let (a, b) = (sx[m.gdiff_offset + c] as f64, sh[m.gdiff_offset + c] as f64);
+            assert!(rel_close(a, b, 2e-2), "{config}: gdiff[{c}] {a} vs {b}");
+        }
+        // params + opt state + prev grads, elementwise
+        let mut max_dev = 0f32;
+        for (a, b) in sx[m.metrics_len..].iter().zip(&sh[m.metrics_len..]) {
+            max_dev = max_dev.max((a - b).abs());
+        }
+        assert!(max_dev < 2e-3, "{config}: state deviates elementwise by {max_dev}");
     }
-    // params + opt state + prev grads, elementwise
-    let mut max_dev = 0f32;
-    for (a, b) in sx[m.metrics_len..].iter().zip(&sh[m.metrics_len..]) {
-        max_dev = max_dev.max((a - b).abs());
-    }
-    assert!(max_dev < 2e-3, "state deviates elementwise by {max_dev}");
 }
 
 #[test]
 fn grades_trajectory_losses_close_and_freeze_steps_identical() {
-    let Some((bundle, host)) = engines() else { return };
-    let mut cfg = RepoConfig::by_name(CONFIG).unwrap();
-    // generous τ after a short grace: every component converges right
-    // after ⌈αT⌉ on *both* backends (metric values sit far below τ, so
-    // the crossing step can't flip on float noise) — freezing and the
-    // attn-frozen variant swap exercised end to end
-    cfg.grades.alpha = 0.2;
-    cfg.grades.tau = 5.0;
-    let warm = shared_start(&bundle);
-    let x = run_grades(&bundle, &cfg, 30, warm.clone());
-    let h = run_grades(&host, &cfg, 30, warm);
-    assert_trajectories_agree(&x, &h, 5e-3, "tau=5.0");
-    assert!(x.freeze.all_frozen(), "generous tau must freeze everything");
+    for config in FAMILIES {
+        let Some((bundle, host)) = engines(config) else { continue };
+        let mut cfg = RepoConfig::by_name(config).unwrap();
+        // generous τ after a short grace: every component converges right
+        // after ⌈αT⌉ on *both* backends (metric values sit far below τ, so
+        // the crossing step can't flip on float noise) — freezing and the
+        // frozen-component elision swap exercised end to end
+        cfg.grades.alpha = 0.2;
+        cfg.grades.tau = 5.0;
+        cfg.grades.tau_vision = f64::NAN;
+        cfg.grades.tau_language = f64::NAN;
+        let warm = shared_start(&bundle);
+        let x = run_grades(&bundle, &cfg, 30, warm.clone());
+        let h = run_grades(&host, &cfg, 30, warm);
+        assert_trajectories_agree(&x, &h, 5e-3, &format!("{config} tau=5.0"));
+        assert!(x.freeze.all_frozen(), "{config}: generous tau must freeze everything");
+    }
 }
 
 #[test]
 fn grades_trajectory_with_config_tau_agrees() {
-    // The config's own τ (realistic: little-to-no freezing in 30 steps);
-    // freeze sets must still match exactly — typically both empty, and
-    // any disagreement means the gradient statistics diverged.
-    let Some((bundle, host)) = engines() else { return };
-    let cfg = RepoConfig::by_name(CONFIG).unwrap();
-    let warm = shared_start(&bundle);
-    let x = run_grades(&bundle, &cfg, 30, warm.clone());
-    let h = run_grades(&host, &cfg, 30, warm);
-    assert_trajectories_agree(&x, &h, 5e-3, "config tau");
+    // The config's own τ (realistic: little-to-no freezing in 30 steps;
+    // the VLM config adds per-tower thresholds); freeze sets must still
+    // match exactly — typically both empty, and any disagreement means
+    // the gradient statistics diverged.
+    for config in FAMILIES {
+        let Some((bundle, host)) = engines(config) else { continue };
+        let cfg = RepoConfig::by_name(config).unwrap();
+        let warm = shared_start(&bundle);
+        let x = run_grades(&bundle, &cfg, 30, warm.clone());
+        let h = run_grades(&host, &cfg, 30, warm);
+        assert_trajectories_agree(&x, &h, 5e-3, &format!("{config} config tau"));
+    }
 }
 
 #[test]
 fn eval_agrees_on_identical_states() {
-    let Some((bundle, host)) = engines() else { return };
-    let cfg = RepoConfig::by_name(CONFIG).unwrap();
-    let mut xs = Session::new(&bundle);
-    xs.init(21).unwrap();
-    let state = xs.state_to_host().unwrap();
-    let mut hs = Session::new(&host);
-    hs.state_from_host(&state).unwrap();
-    let ds = data::build_lm(&cfg, &bundle.manifest).unwrap();
-    for b in ds.val.iter().take(3) {
-        let (lx, cx) = xs.eval_batch(b).unwrap();
-        let (lh, ch) = hs.eval_batch(b).unwrap();
-        assert_eq!(cx, ch);
-        assert!(rel_close(lx, lh, 1e-3), "eval loss {lx} vs {lh}");
-        // per-row scoring path too
-        let rx = xs.eval_rows(b).unwrap();
-        let rh = hs.eval_rows(b).unwrap();
-        for ((la, ca), (lb, cb)) in rx.iter().zip(&rh) {
-            assert_eq!(ca, cb);
-            assert!(rel_close(*la, *lb, 2e-3), "row loss {la} vs {lb}");
+    for config in FAMILIES {
+        let Some((bundle, host)) = engines(config) else { continue };
+        let cfg = RepoConfig::by_name(config).unwrap();
+        let mut xs = Session::new(&bundle);
+        xs.init(21).unwrap();
+        let state = xs.state_to_host().unwrap();
+        let mut hs = Session::new(&host);
+        hs.state_from_host(&state).unwrap();
+        let (_, val) = batch_pool(&cfg, &bundle.manifest, 1);
+        for b in val.iter().take(3) {
+            let (lx, cx) = xs.eval_batch(b).unwrap();
+            let (lh, ch) = hs.eval_batch(b).unwrap();
+            assert_eq!(cx, ch);
+            assert!(rel_close(lx, lh, 1e-3), "{config}: eval loss {lx} vs {lh}");
+            // per-row scoring path too
+            let rx = xs.eval_rows(b).unwrap();
+            let rh = hs.eval_rows(b).unwrap();
+            for ((la, ca), (lb, cb)) in rx.iter().zip(&rh) {
+                assert_eq!(ca, cb);
+                assert!(rel_close(*la, *lb, 2e-3), "{config}: row loss {la} vs {lb}");
+            }
         }
     }
 }

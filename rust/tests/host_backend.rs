@@ -482,15 +482,31 @@ fn golden_trajectory(config: &str) -> String {
     let b = backend(config);
     let mut cfg = RepoConfig::by_name(config).unwrap();
     // fixed golden settings, independent of the config file's own τ/α so
-    // config tweaks don't silently invalidate fixtures
+    // config tweaks don't silently invalidate fixtures (the tower
+    // overrides too: one τ for every component)
     cfg.grades.alpha = 0.25;
     cfg.grades.tau = 0.05;
-    let mut ds = data::build_lm(&cfg, b.manifest()).unwrap();
-    let val: Vec<_> = ds.val.iter().take(2).cloned().collect();
+    cfg.grades.tau_vision = f64::NAN;
+    cfg.grades.tau_language = f64::NAN;
     let mut opts = TrainerOptions::from_config(&cfg, StoppingMethod::GradEs);
     opts.total_steps = 12;
     opts.probe_every = 1;
-    let o = trainer::run(&b, &cfg, &opts, || ds.train.next_batch(), &val).unwrap();
+    let o = if b.manifest().is_vlm() {
+        let ds = data::build_vlm(&cfg, b.manifest()).unwrap();
+        let val: Vec<_> = ds.val.iter().take(2).cloned().collect();
+        let train = ds.train;
+        let mut i = 0usize;
+        let next = || {
+            let batch = train[i % train.len()].clone();
+            i += 1;
+            batch
+        };
+        trainer::run(&b, &cfg, &opts, next, &val).unwrap()
+    } else {
+        let mut ds = data::build_lm(&cfg, b.manifest()).unwrap();
+        let val: Vec<_> = ds.val.iter().take(2).cloned().collect();
+        trainer::run(&b, &cfg, &opts, || ds.train.next_batch(), &val).unwrap()
+    };
     trace_of(&o)
 }
 
@@ -531,4 +547,179 @@ fn golden_trajectory_lm_tiny_fp() {
 #[test]
 fn golden_trajectory_lm_tiny_sgd() {
     check_golden("lm-tiny-sgd");
+}
+
+#[test]
+fn golden_trajectory_lm_tiny_lora() {
+    check_golden("lm-tiny-lora");
+}
+
+#[test]
+fn golden_trajectory_vlm_tiny_fp() {
+    check_golden("vlm-tiny-fp");
+}
+
+// ---------------------------------------------------------------------------
+// LoRA + VLM trajectory ports
+// ---------------------------------------------------------------------------
+
+#[test]
+fn trainer_grades_lora_trajectory_freezes_adapters_and_holds_base() {
+    // A full GradES fine-tune on the LoRA layout: Eq. 1 statistics come
+    // from the adapter pairs, the freeze walk covers all 14 components,
+    // and the frozen base weights end the run bit-identical to init.
+    let b = backend("lm-tiny-lora");
+    let mut cfg = RepoConfig::by_name("lm-tiny-lora").unwrap();
+    cfg.grades.alpha = 0.2;
+    cfg.grades.tau = 1e9; // every component converges at the first probe
+    let mut ds = data::build_lm(&cfg, b.manifest()).unwrap();
+    let mut opts = TrainerOptions::from_config(&cfg, StoppingMethod::GradEs);
+    opts.total_steps = 25;
+    opts.final_validation = false;
+    let trained =
+        trainer::run_and_keep(&b, &cfg, &opts, || ds.train.next_batch(), &[]).unwrap();
+    let o = &trained.outcome;
+    assert_eq!(o.stop_cause, StopCause::AllComponentsFrozen);
+    assert!(o.freeze.all_frozen());
+    assert_eq!(o.freeze.events.len(), b.manifest().n_components);
+    assert!(o.log.final_train_loss().is_finite());
+    // the frozen base never moves: bit-identical to the seed init
+    let init = b.state_to_host(&b.init_state(opts.seed).unwrap()).unwrap();
+    let after = trained.session.state_to_host().unwrap();
+    for p in b.manifest().params.iter().filter(|p| !p.trainable) {
+        assert_eq!(
+            init[p.offset..p.offset + p.size()],
+            after[p.offset..p.offset + p.size()],
+            "frozen base weight {} moved during a LoRA run",
+            p.name
+        );
+    }
+    // while the adapters did train before their freeze step
+    let a0 = b.manifest().param(&b.manifest().components[0].tensors[0]).unwrap();
+    assert_ne!(
+        init[a0.offset..a0.offset + a0.size()],
+        after[a0.offset..a0.offset + a0.size()],
+        "adapter {} never moved",
+        a0.name
+    );
+}
+
+#[test]
+fn trainer_grades_vlm_trajectory_freezes_both_towers() {
+    // End-to-end GradES on the two-tower VLM: scene batches (patches
+    // included), 28 per-tower components in the freeze walk, and the
+    // same early-termination shape as the LM run.
+    let b = backend("vlm-tiny-fp");
+    let mut cfg = RepoConfig::by_name("vlm-tiny-fp").unwrap();
+    cfg.grades.alpha = 0.2;
+    cfg.grades.tau = 1e9;
+    cfg.grades.tau_vision = f64::NAN;
+    cfg.grades.tau_language = f64::NAN;
+    let ds = data::build_vlm(&cfg, b.manifest()).unwrap();
+    let train = ds.train;
+    let mut i = 0usize;
+    let mut opts = TrainerOptions::from_config(&cfg, StoppingMethod::GradEs);
+    opts.total_steps = 25;
+    opts.final_validation = false;
+    let next = || {
+        let batch = train[i % train.len()].clone();
+        i += 1;
+        batch
+    };
+    let o = trainer::run(&b, &cfg, &opts, next, &[]).unwrap();
+    assert_eq!(o.stop_cause, StopCause::AllComponentsFrozen);
+    assert!(o.freeze.all_frozen());
+    assert_eq!(o.freeze.events.len(), 28);
+    assert!(o.log.final_train_loss().is_finite());
+    // both towers appear among the frozen components
+    let m = b.manifest();
+    for tower in ["vision", "language"] {
+        assert!(
+            o.freeze.events.iter().any(|e| m.components[e.component].tower == tower),
+            "no freeze event from the {tower} tower"
+        );
+    }
+}
+
+#[test]
+fn vlm_planned_and_dense_grades_trajectories_agree() {
+    // The freeze-aware elision gate on the VLM layout: per-matrix dW
+    // elision across both towers must leave every loss bit and freeze
+    // decision unchanged.
+    let b = backend("vlm-tiny-fp");
+    let mut cfg = RepoConfig::by_name("vlm-tiny-fp").unwrap();
+    cfg.grades.alpha = 0.25;
+    cfg.grades.tau = 0.05;
+    cfg.grades.tau_vision = f64::NAN;
+    cfg.grades.tau_language = f64::NAN;
+    let run_with = |elide: bool| {
+        let ds = data::build_vlm(&cfg, b.manifest()).unwrap();
+        let val: Vec<_> = ds.val.iter().take(2).cloned().collect();
+        let train = ds.train;
+        let mut i = 0usize;
+        let next = || {
+            let batch = train[i % train.len()].clone();
+            i += 1;
+            batch
+        };
+        let mut opts = TrainerOptions::from_config(&cfg, StoppingMethod::GradEs);
+        opts.total_steps = 10;
+        opts.probe_every = 1;
+        opts.elide_frozen = elide;
+        trainer::run(&b, &cfg, &opts, next, &val).unwrap()
+    };
+    let dense = run_with(false);
+    let planned = run_with(true);
+    assert_eq!(dense.steps_run, planned.steps_run);
+    assert_eq!(dense.stop_cause, planned.stop_cause);
+    assert_eq!(dense.final_val_loss.to_bits(), planned.final_val_loss.to_bits());
+    for (a, c) in dense.log.records.iter().zip(&planned.log.records) {
+        assert_eq!(a.loss.to_bits(), c.loss.to_bits(), "loss diverged at step {}", a.step);
+    }
+    assert_eq!(dense.freeze.events.len(), planned.freeze.events.len());
+    for (e1, e2) in dense.freeze.events.iter().zip(&planned.freeze.events) {
+        assert_eq!((e1.step, e1.component, e1.frozen), (e2.step, e2.component, e2.frozen));
+    }
+}
+
+#[test]
+fn vlm_mc_scoring_runs_on_the_host_backend() {
+    // The Table 2/3 harness end to end on the host engine: pack a scene
+    // suite against the VLM manifest and score an untrained model.
+    let b = backend("vlm-tiny-fp");
+    let cfg = RepoConfig::by_name("vlm-tiny-fp").unwrap();
+    let ds = data::build_vlm(&cfg, b.manifest()).unwrap();
+    let suites = benchmarks::vlm_suites(&ds.scene_cfg, &ds.vocab, 0x33, 6);
+    let mut s = Session::new(&b);
+    s.init(13).unwrap();
+    let packed = harness::PackedSuite::pack(b.manifest(), &suites[0]).unwrap();
+    let acc = packed.score(&s).unwrap();
+    assert!((0.0..=100.0).contains(&acc), "accuracy {acc}");
+}
+
+#[test]
+fn lora_warm_start_maps_base_tensors_across_layouts() {
+    // The paper's fine-tuning setting: an fp pretrain checkpoint applied
+    // to the LoRA layout maps every *base* tensor by name (different
+    // offsets) and leaves the fresh adapters alone.
+    let fp = backend("lm-tiny-fp");
+    let lora = backend("lm-tiny-lora");
+    let mut s = Session::new(&fp);
+    s.init(11).unwrap();
+    let ck = BaseCheckpoint::from_state(fp.manifest(), &s.state_to_host().unwrap()).unwrap();
+    let mut s2 = Session::new(&lora);
+    s2.init(12).unwrap();
+    let fresh = s2.state_to_host().unwrap();
+    let applied = ck.apply(&mut s2).unwrap();
+    // every fp tensor exists in the lora layout; the 28 adapters don't
+    assert_eq!(applied, fp.manifest().params.len());
+    let host = s2.state_to_host().unwrap();
+    let w = lora.manifest().param("lang.0.attn.q").unwrap();
+    assert_eq!(ck.params["lang.0.attn.q"], host[w.offset..w.offset + w.size()].to_vec());
+    let a = lora.manifest().param("lang.0.attn.q.lora_a").unwrap();
+    assert_eq!(
+        fresh[a.offset..a.offset + a.size()],
+        host[a.offset..a.offset + a.size()],
+        "adapter init must survive the warm start"
+    );
 }

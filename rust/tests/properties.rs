@@ -4,15 +4,19 @@
 //! are randomized sweeps driven by the repo's own deterministic RNG — same
 //! shape: generate many random instances, assert the invariant on each.
 
-use grades::config::{EsConfig, GradesConfig};
+use grades::config::{EsConfig, GradesConfig, RepoConfig};
 use grades::coordinator::classic_es::ClassicEs;
 use grades::coordinator::flops::FlopsCounter;
 use grades::coordinator::freeze::{FreezeReason, FreezeState};
 use grades::coordinator::grades::GradesMonitor;
 use grades::coordinator::lr::CosineSchedule;
+use grades::coordinator::scheduler::StepPlan;
+use grades::data;
 use grades::data::batcher::{eval_batches, pack_rows, BatchIter};
 use grades::data::corpus::{generate, GrammarGen};
 use grades::data::vocab::{Vocab, EOS};
+use grades::runtime::host_backend::HostBackend;
+use grades::runtime::session::Session;
 use grades::util::json;
 use grades::util::rng::Rng;
 
@@ -586,6 +590,140 @@ fn prop_kernels_bitwise_identical_across_simd_levels_and_threads() {
         for (x, y) in base_mm.iter().zip(&naive) {
             let rel = (*x as f64 - y).abs() / y.abs().max(1e-6);
             assert!(rel < 1e-4, "trial {trial}: lane-split matmul drifted from naive f64");
+        }
+    }
+}
+
+#[test]
+fn prop_merged_weight_eval_matches_f64_adapter_fold() {
+    // lora.py merge semantics as a property: on *random* adapters (the
+    // init puts B at 0, which would make the fold a no-op) the LoRA
+    // engine's merged-weight eval equals a full-parameter engine
+    // evaluating weights folded independently in f64 — the adapter form
+    // x@W + s·(x@A)@B collapses into one matrix without moving the loss
+    // beyond the f32 rounding of the fold itself.
+    let mut rng = Rng::new(0x10a);
+    for trial in 0..5 {
+        let mut cfg = RepoConfig::by_name("lm-tiny-lora").unwrap();
+        cfg.train.lora_rank = 1 + rng.below(6);
+        cfg.train.lora_alpha = (1 + rng.below(12)) as f64;
+        let mut fp_cfg = RepoConfig::by_name("lm-tiny-lora").unwrap();
+        fp_cfg.train.method = "fp".into();
+        let lb = HostBackend::for_config(&cfg).unwrap();
+        let fb = HostBackend::for_config(&fp_cfg).unwrap();
+        let (ml, mf) = (lb.manifest(), fb.manifest());
+        // the monitored component grids coincide, so the metric
+        // prefixes — and with them the base-weight offsets — do too
+        assert_eq!(ml.metrics_len, mf.metrics_len);
+        assert_eq!(ml.n_components, mf.n_components);
+
+        let mut ls = Session::new(&lb);
+        ls.init(100 + trial as i32).unwrap();
+        let mut host_l = ls.state_to_host().unwrap();
+        for p in &ml.params {
+            if p.name.ends_with(".lora_a") || p.name.ends_with(".lora_b") {
+                for i in 0..p.size() {
+                    host_l[p.offset + i] = (rng.gauss() * 0.2) as f32;
+                }
+            }
+        }
+        ls.state_from_host(&host_l).unwrap();
+
+        // fp state: copy every base tensor, then fold the adapters in f64
+        let mut host_f = vec![0f32; mf.state_len];
+        let scale = cfg.train.lora_alpha / cfg.train.lora_rank as f64;
+        for pf in &mf.params {
+            let pl = ml.param(&pf.name).unwrap();
+            assert_eq!(
+                (pl.offset, &pl.shape),
+                (pf.offset, &pf.shape),
+                "base layouts diverge at {}",
+                pf.name
+            );
+            host_f[pf.offset..pf.offset + pf.size()]
+                .copy_from_slice(&host_l[pl.offset..pl.offset + pl.size()]);
+            let (Some(pa), Some(pb)) = (
+                ml.param(&format!("{}.lora_a", pf.name)),
+                ml.param(&format!("{}.lora_b", pf.name)),
+            ) else {
+                continue;
+            };
+            let (dout, r) = (pf.shape[1], pa.shape[1]);
+            for i in 0..pf.shape[0] {
+                for j in 0..dout {
+                    let mut acc = 0f64;
+                    for k in 0..r {
+                        acc += host_l[pa.offset + i * r + k] as f64
+                            * host_l[pb.offset + k * dout + j] as f64;
+                    }
+                    let w = host_l[pl.offset + i * dout + j] as f64 + scale * acc;
+                    host_f[pf.offset + i * dout + j] = w as f32;
+                }
+            }
+        }
+        let mut fsess = Session::new(&fb);
+        fsess.state_from_host(&host_f).unwrap();
+
+        let ds = data::build_lm(&cfg, ml).unwrap();
+        for b in ds.val.iter().take(2) {
+            let (la, ca) = ls.eval_batch(b).unwrap();
+            let (lf, cf) = fsess.eval_batch(b).unwrap();
+            assert_eq!(ca, cf, "trial {trial}: token counts diverge");
+            let rel = (la - lf).abs() / la.abs().max(lf.abs()).max(1e-8);
+            assert!(
+                rel < 2e-3,
+                "trial {trial} (r={}, α={}): merged eval {la} vs f64 fold {lf}",
+                cfg.train.lora_rank,
+                cfg.train.lora_alpha
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_plan_elision_bitwise_on_random_freeze_streams() {
+    // The per-step elision contract on the new engine families: for
+    // *random* (even non-monotone, i.e. unfreezing) omitted sets, a
+    // plan that skips frozen components' backward work must reproduce
+    // the dense graph under the same ctrl mask bit for bit — params,
+    // optimizer slots, prev-grads, and the metric prefix alike.
+    let mut rng = Rng::new(0xe115);
+    for config in ["lm-tiny-lora", "vlm-tiny-fp"] {
+        let cfg = RepoConfig::by_name(config).unwrap();
+        let be = HostBackend::for_config(&cfg).unwrap();
+        let m = be.manifest();
+        let n = m.n_components;
+        let batches: Vec<_> = if m.is_vlm() {
+            data::build_vlm(&cfg, m).unwrap().train
+        } else {
+            let mut ds = data::build_lm(&cfg, m).unwrap();
+            (0..6).map(|_| ds.train.next_batch()).collect()
+        };
+        let mut planned = Session::new(&be);
+        planned.init(5).unwrap();
+        let mut dense = Session::new(&be);
+        dense.init(5).unwrap();
+        for t in 0..5usize {
+            let omitted: Vec<usize> = (0..n).filter(|_| rng.chance(0.4)).collect();
+            let mut ctrl = vec![0f32; m.ctrl_len];
+            ctrl[0] = 1.0;
+            ctrl[1] = 2e-3;
+            ctrl[2] = 1.0;
+            for c in 0..n {
+                ctrl[m.ctrl_mask_offset + c] = if omitted.contains(&c) { 0.0 } else { 1.0 };
+            }
+            let b = &batches[t % batches.len()];
+            planned.train_step(b, &ctrl, &StepPlan::omitting(n, &omitted)).unwrap();
+            dense.train_step(b, &ctrl, &StepPlan::all_active(n)).unwrap();
+            let sp = planned.state_to_host().unwrap();
+            let sd = dense.state_to_host().unwrap();
+            let diverged = sp.iter().zip(&sd).position(|(a, b)| a.to_bits() != b.to_bits());
+            assert!(
+                diverged.is_none(),
+                "{config}: step {t} ({} omitted) diverges at state[{}]",
+                omitted.len(),
+                diverged.unwrap()
+            );
         }
     }
 }
