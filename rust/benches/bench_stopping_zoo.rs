@@ -1,0 +1,134 @@
+//! Stopping-method zoo head-to-head — every `StoppingMethod` on the same
+//! config, forced onto the pure-Rust host backend so the bench runs
+//! artifact-free (and therefore in CI). Emits `BENCH_stopping_zoo.json`
+//! with per-method wall clock, steps, accuracy and validation passes,
+//! asserts the validation-free methods (GradES, EB criterion) really
+//! issued **zero** validation passes, and verifies `--jobs 1` and
+//! `--jobs 4` render byte-identical zoo tables. `--quick` shortens the
+//! runs (CI smoke mode).
+
+use std::collections::BTreeMap;
+
+use anyhow::{ensure, Result};
+use grades::config::repo_root;
+use grades::coordinator::trainer::{StoppingMethod, ALL_METHODS};
+use grades::exp::ablation::{zoo_row, zoo_table_header};
+use grades::exp::plan::{EvalKind, JobGraph, JobSpec};
+use grades::exp::{scheduler, ExpOptions};
+use grades::runtime::backend::BackendChoice;
+use grades::util::json::{self, Json};
+use grades::util::timer::Timer;
+
+const CONFIG: &str = "lm-tiny-fp";
+const CONC_WORKERS: usize = 4;
+
+fn zoo_graph() -> Result<JobGraph> {
+    let mut g = JobGraph::new();
+    for method in ALL_METHODS {
+        g.add(JobSpec::train(
+            format!("zoo/{CONFIG}/{}", method.label()),
+            CONFIG,
+            method,
+            EvalKind::LmSuites,
+        ))?;
+    }
+    Ok(g)
+}
+
+/// Render the zoo table for a report. With `redact_wall` the wall-clock
+/// column is blanked — that form is the byte-identity comparand (every
+/// other cell is deterministic on the host backend; wall clock is real
+/// time and legitimately differs between runs).
+fn render(graph: &JobGraph, report: &scheduler::RunReport, redact_wall: bool) -> Result<String> {
+    let mut t = zoo_table_header();
+    for id in 0..graph.len() {
+        let mut row = zoo_row(CONFIG, report.result(id)?);
+        if redact_wall {
+            row[2] = "-".to_string();
+        }
+        t.row(row);
+    }
+    Ok(t.render())
+}
+
+fn main() -> Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (steps, questions) = if quick { (40, 8) } else { (120, 16) };
+    let mut opts = ExpOptions::quick(steps, questions);
+    opts.out_dir = repo_root().join("results").join("bench");
+    opts.backend = BackendChoice::Host; // artifact-free by construction
+    let runner = scheduler::DeviceRunner::new(&opts);
+    let sopts = |jobs: usize| scheduler::SchedulerOptions {
+        jobs,
+        manifest_path: None, // no resume: every pass runs every method
+        resume: false,
+        backend: BackendChoice::Host,
+        ..Default::default()
+    };
+    let graph = zoo_graph()?;
+
+    let t = Timer::new();
+    let seq = scheduler::execute(&graph, &sopts(1), &runner)?;
+    let seq_wall = t.secs();
+    seq.require_ok(&graph)?;
+
+    // --- the headline claim: gradient-signal methods never validate ---
+    for (id, method) in ALL_METHODS.iter().enumerate() {
+        let r = seq.result(id)?;
+        let passes = r.outcome.async_eval.issued;
+        if matches!(method, StoppingMethod::GradEs | StoppingMethod::EbCriterion) {
+            ensure!(
+                passes == 0,
+                "{} issued {passes} validation passes; expected 0",
+                method.label()
+            );
+        }
+    }
+
+    // --- scheduler A/B: jobs=1 and jobs=N tables must be byte-identical ---
+    let t = Timer::new();
+    let conc = scheduler::execute(&graph, &sopts(CONC_WORKERS), &runner)?;
+    let conc_wall = t.secs();
+    conc.require_ok(&graph)?;
+    let (a, b) = (render(&graph, &seq, true)?, render(&graph, &conc, true)?);
+    ensure!(a == b, "jobs=1 and jobs={CONC_WORKERS} zoo tables diverged:\n{a}\nvs\n{b}");
+
+    let shown = render(&graph, &seq, false)?;
+    println!(
+        "## Stopping-method zoo ({CONFIG}, host backend, {steps} steps)\n\n{shown}\n\
+         seq {seq_wall:.2}s | {CONC_WORKERS} workers {conc_wall:.2}s | tables identical"
+    );
+
+    let mut methods = Vec::new();
+    for (id, method) in ALL_METHODS.iter().enumerate() {
+        let r = seq.result(id)?;
+        let avg = r.accuracies.last().map(|x| x.1).unwrap_or(f64::NAN);
+        let mut m = BTreeMap::new();
+        m.insert("method".to_string(), Json::Str(method.label().to_string()));
+        m.insert("wall_secs".to_string(), Json::Num(r.outcome.wall_secs));
+        m.insert("monitor_secs".to_string(), Json::Num(r.outcome.monitor_secs));
+        m.insert("validation_secs".to_string(), Json::Num(r.outcome.validation_secs));
+        m.insert("steps_run".to_string(), Json::Num(r.outcome.steps_run as f64));
+        m.insert(
+            "val_passes".to_string(),
+            Json::Num(r.outcome.async_eval.issued as f64),
+        );
+        m.insert("avg_acc".to_string(), Json::Num(avg));
+        m.insert(
+            "frozen".to_string(),
+            Json::Num(r.outcome.freeze.n_frozen() as f64),
+        );
+        methods.push(Json::Obj(m));
+    }
+    let mut top = BTreeMap::new();
+    top.insert("config".to_string(), Json::Str(CONFIG.to_string()));
+    top.insert("steps".to_string(), Json::Num(steps as f64));
+    top.insert("seq_wall_secs".to_string(), Json::Num(seq_wall));
+    top.insert("conc_wall_secs".to_string(), Json::Num(conc_wall));
+    top.insert("identical_tables".to_string(), Json::Bool(true));
+    top.insert("methods".to_string(), Json::Arr(methods));
+    let out = repo_root().join("BENCH_stopping_zoo.json");
+    std::fs::write(&out, json::write(&Json::Obj(top)))?;
+    println!("wrote {}", out.display());
+    Ok(())
+}

@@ -1,6 +1,6 @@
 //! Typed run configuration, loaded from the same `configs/*.toml` files the
 //! AOT exporter reads (python consumes `[model]`/`[train]`/`[vlm]`; rust consumes
-//! those plus `[run]`/`[grades]`/`[es]`/`[data]`).
+//! those plus `[run]`/`[grades]`/`[eb]`/`[spectral]`/`[ies]`/`[es]`/`[data]`).
 
 pub mod toml;
 
@@ -20,6 +20,10 @@ fn get_usize(t: &Table, k: &str, default: usize) -> usize {
 
 fn get_str(t: &Table, k: &str, default: &str) -> String {
     t.get(k).and_then(|v| v.as_str().ok()).unwrap_or(default).to_string()
+}
+
+fn get_bool(t: &Table, k: &str, default: bool) -> bool {
+    t.get(k).and_then(|v| v.as_bool().ok()).unwrap_or(default)
 }
 
 /// Model shapes (`[model]`) — previously consumed only by the Python
@@ -123,6 +127,58 @@ pub struct GradesConfig {
     pub granularity: String,
 }
 
+/// Evidence-based stopping criterion settings (`[eb]`, Mahsereci & Lassner
+/// arXiv:1703.09580 adapted to per-component freezing).
+#[derive(Debug, Clone)]
+pub struct EbConfig {
+    /// Carry an exact per-component gradient-variance slot in the host
+    /// layout (`gvar`). Off by default: the layout (and every golden
+    /// trajectory pinned to it) stays byte-identical, and the EB monitor
+    /// estimates evidence from the Gdiff/Gabs scalars instead.
+    pub gvar: bool,
+    /// Grace-period fraction: no freeze decisions before ⌈alpha·T⌉.
+    pub alpha: f64,
+    /// Freeze component `c` once its evidence `e[c]` exceeds this margin
+    /// (the EB criterion's threshold; 0.0 = the paper's stopping point).
+    pub margin: f64,
+    /// Consecutive above-margin observations required before freezing.
+    pub patience: usize,
+}
+
+/// Spectral stopping settings (`[spectral]`, Marchenko–Pastur edge test on
+/// per-component weight spectra, arXiv:2510.16074).
+#[derive(Debug, Clone)]
+pub struct SpectralConfig {
+    /// Grace-period fraction: no spectrum scans before ⌈alpha·T⌉.
+    pub alpha: f64,
+    /// Scan every ⌈interval_frac·T⌉ steps (spectra need a weight pull,
+    /// so the cadence is coarser than the gradient-probe cadence).
+    pub interval_frac: f64,
+    /// Freeze when the relative spectral drift between consecutive scans
+    /// falls below this threshold.
+    pub tau: f64,
+    /// Consecutive sub-τ scans required before freezing.
+    pub patience: usize,
+}
+
+/// Instance-dependent early stopping settings (`[ies]`, per-sample
+/// loss-rank exclusion, arXiv:2502.07547).
+#[derive(Debug, Clone)]
+pub struct IesConfig {
+    /// Grace-period fraction: no exclusions before ⌈alpha·T⌉.
+    pub alpha: f64,
+    /// Check every ⌈check_interval_frac·T⌉ steps.
+    pub check_interval_frac: f64,
+    /// Fraction of active rows (lowest per-token loss first) that become
+    /// exclusion candidates at each check.
+    pub drop_frac: f64,
+    /// Consecutive candidacies required before a row is excluded.
+    pub patience: usize,
+    /// Stop training once this fraction of all distinct rows seen has
+    /// been excluded.
+    pub stop_frac: f64,
+}
+
 /// Classic validation-loss early stopping (`[es]`, the paper's +ES baseline).
 #[derive(Debug, Clone)]
 pub struct EsConfig {
@@ -163,6 +219,12 @@ pub struct RepoConfig {
     pub run: RunConfig,
     /// `[grades]` — monitor thresholds and extensions.
     pub grades: GradesConfig,
+    /// `[eb]` — evidence-based stopping settings.
+    pub eb: EbConfig,
+    /// `[spectral]` — spectral stopping settings.
+    pub spectral: SpectralConfig,
+    /// `[ies]` — instance-dependent early-stopping settings.
+    pub ies: IesConfig,
     /// `[es]` — classic early-stopping baseline settings.
     pub es: EsConfig,
     /// `[data]` — synthetic-corpus settings.
@@ -189,6 +251,9 @@ impl RepoConfig {
 
         let run = doc.table_or_empty("run");
         let grades = doc.table_or_empty("grades");
+        let eb = doc.table_or_empty("eb");
+        let spectral = doc.table_or_empty("spectral");
+        let ies = doc.table_or_empty("ies");
         let es = doc.table_or_empty("es");
         let data = doc.table_or_empty("data");
         let model = doc.table_or_empty("model");
@@ -241,6 +306,25 @@ impl RepoConfig {
                 patience: get_usize(&grades, "patience", 0),
                 unfreeze_factor: get_f64(&grades, "unfreeze_factor", 0.0),
                 granularity: get_str(&grades, "granularity", "matrix"),
+            },
+            eb: EbConfig {
+                gvar: get_bool(&eb, "gvar", false),
+                alpha: get_f64(&eb, "alpha", 0.25),
+                margin: get_f64(&eb, "margin", 0.0),
+                patience: get_usize(&eb, "patience", 2),
+            },
+            spectral: SpectralConfig {
+                alpha: get_f64(&spectral, "alpha", 0.25),
+                interval_frac: get_f64(&spectral, "interval_frac", 0.05),
+                tau: get_f64(&spectral, "tau", 0.05),
+                patience: get_usize(&spectral, "patience", 1),
+            },
+            ies: IesConfig {
+                alpha: get_f64(&ies, "alpha", 0.25),
+                check_interval_frac: get_f64(&ies, "check_interval_frac", 0.05),
+                drop_frac: get_f64(&ies, "drop_frac", 0.25),
+                patience: get_usize(&ies, "patience", 1),
+                stop_frac: get_f64(&ies, "stop_frac", 0.9),
             },
             es: EsConfig {
                 check_interval_frac: get_f64(&es, "check_interval_frac", 0.05),
@@ -338,5 +422,31 @@ mod tests {
         let c = RepoConfig::load(&p).unwrap();
         assert_eq!(c.grades.granularity, "matrix");
         assert_eq!(c.run.total_steps, 200);
+        // stopping-zoo tables default sensibly when absent
+        assert!(!c.eb.gvar);
+        assert_eq!(c.eb.patience, 2);
+        assert!((c.spectral.tau - 0.05).abs() < 1e-12);
+        assert!((c.ies.drop_frac - 0.25).abs() < 1e-12);
+        assert!((c.ies.stop_frac - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zoo_tables_are_typed() {
+        let dir = std::env::temp_dir().join("grades_cfg_zoo_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("zoo.toml");
+        std::fs::write(
+            &p,
+            "name = \"zoo\"\n[eb]\ngvar = true\nmargin = 0.1\n[spectral]\ntau = 0.02\n\
+             patience = 3\n[ies]\ndrop_frac = 0.5\nstop_frac = 0.8\n",
+        )
+        .unwrap();
+        let c = RepoConfig::load(&p).unwrap();
+        assert!(c.eb.gvar);
+        assert!((c.eb.margin - 0.1).abs() < 1e-12);
+        assert!((c.spectral.tau - 0.02).abs() < 1e-12);
+        assert_eq!(c.spectral.patience, 3);
+        assert!((c.ies.drop_frac - 0.5).abs() < 1e-12);
+        assert!((c.ies.stop_frac - 0.8).abs() < 1e-12);
     }
 }

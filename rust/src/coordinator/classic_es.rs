@@ -48,9 +48,12 @@ impl ClassicEs {
         es
     }
 
-    /// Is step `t` a validation checkpoint?
+    /// Is step `t` a validation checkpoint? Step 0 is never one: the
+    /// model has not been updated yet, and a check there would burn a
+    /// patience-window slot (and a full validation pass) on the
+    /// untrained model.
     pub fn due(&self, t: usize) -> bool {
-        self.enabled && t % self.check_interval == 0
+        self.enabled && t > 0 && t % self.check_interval == 0
     }
 
     /// Record a validation loss; returns true when training should stop.
@@ -89,6 +92,16 @@ mod tests {
         assert_eq!(es.check_interval, 10);
         assert!(es.due(10));
         assert!(!es.due(11));
+    }
+
+    #[test]
+    fn step_zero_is_never_due() {
+        // Regression: `0 % k == 0` made the rule demand a validation
+        // pass before the first optimizer step, consuming one patience
+        // slot on the untrained model.
+        let es = ClassicEs::new(&cfg(), 200);
+        assert!(!es.due(0));
+        assert!(es.due(es.check_interval));
     }
 
     #[test]

@@ -1,0 +1,198 @@
+//! Evidence-based stopping — Mahsereci & Lassner's validation-free EB
+//! criterion (arXiv:1703.09580) adapted to per-component freezing.
+//!
+//! The original criterion stops *all* of training once the mini-batch
+//! gradient is statistically indistinguishable from sampling noise:
+//! with per-parameter gradient mean `g_k` and variance estimate `Σ̂_k`,
+//! stop when the evidence
+//!
+//! ```text
+//! e = 1 − (1/|D|) Σ_k g_k² / Σ̂_k  >  0
+//! ```
+//!
+//! Here the test runs *per monitored component* (GradES granularity), so
+//! a converged projection matrix freezes while the rest keeps training —
+//! and like GradES it needs **zero validation passes**: every input is a
+//! statistic the train step already produces.
+//!
+//! Two evidence estimators, picked by the layout:
+//!
+//! * **Exact** (`[eb] gvar = true`): the host layout carries a gvar
+//!   block, `gvar[c] = Σ_k g_k² / (½(g_k − g_k^prev)² + ε)` with the
+//!   step-local difference ½(g−prev)² as the variance proxy, and
+//!   `e[c] = 1 − gvar[c]/n_params(c)`.
+//! * **Fallback** (any pre-existing layout): only the Eq. 1 scalars
+//!   exist, so the per-parameter ratio is approximated from them as
+//!   `e[c] = 1 − 2·(Gabs[c]/Gdiff[c])²`. Both agree on the stopping
+//!   point: once the gradient is pure noise, consecutive draws are
+//!   independent and `E|g − prev|² = 2·E g²`, driving either estimate
+//!   to ≈ 0 from below.
+
+use crate::config::EbConfig;
+use crate::coordinator::freeze::{FreezeReason, FreezeState};
+use crate::runtime::manifest::Manifest;
+
+/// Per-component EB evidence test over the probed gradient statistics.
+pub struct EbCriterion {
+    /// The `[eb]` settings this criterion runs under.
+    pub cfg: EbConfig,
+    grace_steps: usize,
+    above_count: Vec<usize>,
+    /// Component parameter counts (the evidence normalizer).
+    n_params: Vec<usize>,
+    /// False for runs under other methods (observe() is then a no-op).
+    pub enabled: bool,
+}
+
+impl EbCriterion {
+    /// Criterion over the manifest's components for a `total_steps` run.
+    pub fn new(cfg: &EbConfig, manifest: &Manifest, total_steps: usize) -> Self {
+        EbCriterion {
+            grace_steps: ((total_steps as f64) * cfg.alpha).ceil() as usize,
+            above_count: vec![0; manifest.n_components],
+            n_params: manifest.components.iter().map(|c| c.n_params).collect(),
+            cfg: cfg.clone(),
+            enabled: true,
+        }
+    }
+
+    /// ⌈alpha·T⌉ — no freeze decisions before this step.
+    pub fn grace_steps(&self) -> usize {
+        self.grace_steps
+    }
+
+    /// Component `c`'s evidence from a probed metrics prefix: exact from
+    /// the gvar block when the layout has one, otherwise the Gdiff/Gabs
+    /// fallback. Large negative while the gradient carries signal,
+    /// crossing 0 as it degenerates to noise.
+    pub fn evidence(&self, manifest: &Manifest, metrics: &[f32], c: usize) -> f64 {
+        if let Some(go) = manifest.gvar_offset {
+            let n = self.n_params[c].max(1) as f64;
+            1.0 - metrics[go + c] as f64 / n
+        } else {
+            let gabs = metrics[manifest.gabs_offset + c] as f64;
+            let gdiff = (metrics[manifest.gdiff_offset + c] as f64).max(1e-30);
+            let r = gabs / gdiff;
+            1.0 - 2.0 * r * r
+        }
+    }
+
+    /// Observe step `t`'s metrics; freeze every component whose evidence
+    /// has exceeded the margin for `patience + 1` consecutive probes.
+    /// Returns the number of components newly frozen.
+    pub fn observe(
+        &mut self,
+        t: usize,
+        manifest: &Manifest,
+        metrics: &[f32],
+        freeze: &mut FreezeState,
+    ) -> usize {
+        if !self.enabled || t <= self.grace_steps {
+            return 0;
+        }
+        let mut newly = 0usize;
+        for c in 0..freeze.n() {
+            if freeze.is_frozen(c) {
+                continue;
+            }
+            // an elided/omitted component probes all-zero stats — no
+            // observation, not evidence of convergence
+            if metrics[manifest.gabs_offset + c] == 0.0
+                && metrics[manifest.gdiff_offset + c] == 0.0
+            {
+                continue;
+            }
+            let e = self.evidence(manifest, metrics, c);
+            if e > self.cfg.margin {
+                self.above_count[c] += 1;
+                if self.above_count[c] > self.cfg.patience {
+                    freeze.freeze(c, t, FreezeReason::Evidence, e);
+                    newly += 1;
+                }
+            } else {
+                self.above_count[c] = 0;
+            }
+        }
+        newly
+    }
+
+    /// Stop when every monitored component is frozen (as in Alg. 1).
+    pub fn should_terminate(&self, freeze: &FreezeState) -> bool {
+        self.enabled && freeze.n() > 0 && freeze.all_frozen()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::grades::tests::fake_manifest;
+
+    fn cfg(margin: f64, alpha: f64, patience: usize) -> EbConfig {
+        EbConfig { gvar: false, alpha, margin, patience }
+    }
+
+    fn metrics(m: &Manifest, gdiff: f32, gabs: f32) -> Vec<f32> {
+        let mut out = vec![0f32; m.metrics_len];
+        for c in 0..m.n_components {
+            out[m.gdiff_offset + c] = gdiff;
+            out[m.gabs_offset + c] = gabs;
+        }
+        out
+    }
+
+    #[test]
+    fn fallback_evidence_is_negative_while_signal_dominates() {
+        let m = fake_manifest(1);
+        let eb = EbCriterion::new(&cfg(0.0, 0.0, 0), &m, 100);
+        // signal regime: the gradient barely changes step to step
+        let mx = metrics(&m, 0.1, 1.0);
+        assert!(eb.evidence(&m, &mx, 0) < 0.0);
+        // noise regime: |g − prev| ≈ √2·|g| ⇒ evidence ≈ 0; push past it
+        let mx = metrics(&m, 2.0, 1.0);
+        assert!(eb.evidence(&m, &mx, 0) > 0.0);
+    }
+
+    #[test]
+    fn exact_evidence_uses_the_gvar_block() {
+        let mut m = fake_manifest(1);
+        let n = m.n_components;
+        m.gvar_offset = Some(m.metrics_len);
+        m.metrics_len += n;
+        let mut mx = metrics(&m, 1.0, 1.0);
+        mx.resize(m.metrics_len, 0.0);
+        // gvar sum = 2·n_params ⇒ e = 1 − 2 = −1 (signal); = 0.5·n_params ⇒ 0.5
+        let np = m.components[0].n_params as f32;
+        let eb = EbCriterion::new(&cfg(0.0, 0.0, 0), &m, 100);
+        mx[m.gvar_offset.unwrap()] = 2.0 * np;
+        assert!((eb.evidence(&m, &mx, 0) - (-1.0)).abs() < 1e-9);
+        mx[m.gvar_offset.unwrap()] = 0.5 * np;
+        assert!((eb.evidence(&m, &mx, 0) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn grace_period_and_patience_gate_freezing() {
+        let m = fake_manifest(1);
+        let mut eb = EbCriterion::new(&cfg(0.0, 0.5, 1), &m, 100);
+        let mut fs = FreezeState::new(m.n_components);
+        let noisy = metrics(&m, 2.0, 1.0);
+        assert_eq!(eb.observe(50, &m, &noisy, &mut fs), 0); // grace
+        assert_eq!(eb.observe(51, &m, &noisy, &mut fs), 0); // patience 1
+        assert_eq!(eb.observe(52, &m, &noisy, &mut fs), m.n_components);
+        assert!(eb.should_terminate(&fs));
+    }
+
+    #[test]
+    fn signal_resets_patience_and_elided_stats_are_skipped() {
+        let m = fake_manifest(1);
+        let mut eb = EbCriterion::new(&cfg(0.0, 0.0, 1), &m, 100);
+        let mut fs = FreezeState::new(m.n_components);
+        let noisy = metrics(&m, 2.0, 1.0);
+        let signal = metrics(&m, 0.1, 1.0);
+        let zeros = metrics(&m, 0.0, 0.0);
+        assert_eq!(eb.observe(1, &m, &noisy, &mut fs), 0);
+        assert_eq!(eb.observe(2, &m, &signal, &mut fs), 0); // reset
+        assert_eq!(eb.observe(3, &m, &zeros, &mut fs), 0); // no observation
+        assert_eq!(eb.observe(4, &m, &noisy, &mut fs), 0); // count = 1 again
+        assert_eq!(eb.observe(5, &m, &noisy, &mut fs), m.n_components);
+    }
+}

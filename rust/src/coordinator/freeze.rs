@@ -19,6 +19,12 @@ pub enum FreezeReason {
     /// metric rebounded above `unfreeze_factor · τ`. (Unfreeze events
     /// used to be mislabeled `Converged` — the freeze-side reason.)
     Reactivated,
+    /// The EB criterion's evidence bound crossed its margin (the
+    /// gradient signal is indistinguishable from sampling noise).
+    Evidence,
+    /// The component's weight spectrum stopped drifting relative to its
+    /// Marchenko–Pastur bulk (spectral stopping).
+    Spectral,
 }
 
 impl FreezeReason {
@@ -29,6 +35,8 @@ impl FreezeReason {
             FreezeReason::LayerRule => "layer-rule",
             FreezeReason::Manual => "manual",
             FreezeReason::Reactivated => "reactivated",
+            FreezeReason::Evidence => "evidence",
+            FreezeReason::Spectral => "spectral",
         }
     }
 }

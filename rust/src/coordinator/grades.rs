@@ -16,6 +16,7 @@
 use crate::config::GradesConfig;
 use crate::coordinator::freeze::{layer_groups, FreezeReason, FreezeState};
 use crate::runtime::manifest::Manifest;
+use anyhow::{bail, Result};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 /// Which gradient statistic drives freezing decisions.
@@ -38,15 +39,20 @@ pub enum Metric {
 }
 
 impl Metric {
-    /// Parse a `[grades] metric` string. Unknown values fall back to the
-    /// paper's default, [`Metric::L1Diff`] — the single source of truth
+    /// Parse a `[grades] metric` string — the single source of truth
     /// for metric spellings (the monitor and the step planner's
     /// unfreeze-liveness gate must never disagree on what `l1_abs` is).
-    pub fn parse(s: &str) -> Metric {
+    /// Unknown values are a hard config error: a typo like `l1diff_rel`
+    /// used to fall back silently to [`Metric::L1Diff`] and change the
+    /// experiment being run.
+    pub fn parse(s: &str) -> Result<Metric> {
         match s {
-            "l1_abs" => Metric::L1Abs,
-            "l1_diff_rel" => Metric::L1DiffRel,
-            _ => Metric::L1Diff,
+            "l1_diff" => Ok(Metric::L1Diff),
+            "l1_abs" => Ok(Metric::L1Abs),
+            "l1_diff_rel" => Ok(Metric::L1DiffRel),
+            other => bail!(
+                "unknown [grades] metric {other:?} (expected l1_diff, l1_abs or l1_diff_rel)"
+            ),
         }
     }
 }
@@ -76,15 +82,19 @@ pub struct GradesMonitor {
 
 impl GradesMonitor {
     /// Monitor over the manifest's components for a `total_steps` run.
-    pub fn new(cfg: &GradesConfig, manifest: &Manifest, total_steps: usize) -> Self {
-        let metric = Metric::parse(&cfg.metric);
-        // per-component τ with tower overrides (paper Table 10)
+    /// Errors on an unknown `[grades] metric` spelling.
+    pub fn new(cfg: &GradesConfig, manifest: &Manifest, total_steps: usize) -> Result<Self> {
+        let metric = Metric::parse(&cfg.metric)?;
+        // Per-component τ with tower overrides (paper Table 10). Both
+        // overrides are VLM-only: tower labels on an LM manifest are
+        // incidental and must not let a stray `tau_vision`/`tau_language`
+        // key retarget τ.
         let taus = manifest
             .components
             .iter()
             .map(|c| {
                 let t = match c.tower.as_str() {
-                    "vision" if !cfg.tau_vision.is_nan() => cfg.tau_vision,
+                    "vision" if !cfg.tau_vision.is_nan() && manifest.is_vlm() => cfg.tau_vision,
                     "language" if !cfg.tau_language.is_nan() && manifest.is_vlm() => {
                         cfg.tau_language
                     }
@@ -93,7 +103,7 @@ impl GradesMonitor {
                 t
             })
             .collect();
-        GradesMonitor {
+        Ok(GradesMonitor {
             metric,
             grace_steps: ((total_steps as f64) * cfg.alpha).ceil() as usize,
             taus,
@@ -105,7 +115,7 @@ impl GradesMonitor {
             baseline_n: 0,
             cfg: cfg.clone(),
             enabled: true,
-        }
+        })
     }
 
     /// A disabled monitor (baseline methods run the same trainer loop).
@@ -120,7 +130,8 @@ impl GradesMonitor {
             unfreeze_factor: 0.0,
             granularity: "matrix".into(),
         };
-        let mut m = Self::new(&cfg, manifest, usize::MAX);
+        let mut m = Self::new(&cfg, manifest, usize::MAX)
+            .expect("disabled-monitor config is statically valid");
         m.enabled = false;
         m
     }
@@ -298,6 +309,7 @@ pub(crate) mod tests {
             n_components: n,
             gdiff_offset: 4,
             gabs_offset: 4 + n,
+            gvar_offset: None,
             ctrl_mask_offset: 4,
             components,
             params: vec![],
@@ -337,7 +349,7 @@ pub(crate) mod tests {
     #[test]
     fn grace_period_blocks_freezing() {
         let m = fake_manifest(1);
-        let mut mon = GradesMonitor::new(&cfg(1.0, 0.5), &m, 100);
+        let mut mon = GradesMonitor::new(&cfg(1.0, 0.5), &m, 100).unwrap();
         let mut fs = FreezeState::new(m.n_components);
         let metrics = metrics_with_gdiff(&m, &vec![0.0001; m.n_components]);
         assert_eq!(mon.observe(50, &m, &metrics, 1.0, &mut fs), 0); // t <= 50
@@ -348,7 +360,7 @@ pub(crate) mod tests {
     #[test]
     fn only_sub_tau_components_freeze() {
         let m = fake_manifest(1);
-        let mut mon = GradesMonitor::new(&cfg(0.5, 0.0), &m, 100);
+        let mut mon = GradesMonitor::new(&cfg(0.5, 0.0), &m, 100).unwrap();
         let mut fs = FreezeState::new(m.n_components);
         let mut vals = vec![1.0f32; m.n_components];
         vals[2] = 0.1;
@@ -364,7 +376,7 @@ pub(crate) mod tests {
         let m = fake_manifest(1);
         let mut c = cfg(0.5, 0.0);
         c.patience = 2;
-        let mut mon = GradesMonitor::new(&c, &m, 100);
+        let mut mon = GradesMonitor::new(&c, &m, 100).unwrap();
         let mut fs = FreezeState::new(m.n_components);
         let metrics = metrics_with_gdiff(&m, &vec![0.1; m.n_components]);
         assert_eq!(mon.observe(1, &m, &metrics, 1.0, &mut fs), 0);
@@ -377,7 +389,7 @@ pub(crate) mod tests {
         let m = fake_manifest(1);
         let mut c = cfg(0.5, 0.0);
         c.patience = 1;
-        let mut mon = GradesMonitor::new(&c, &m, 100);
+        let mut mon = GradesMonitor::new(&c, &m, 100).unwrap();
         let mut fs = FreezeState::new(m.n_components);
         let low = metrics_with_gdiff(&m, &vec![0.1; m.n_components]);
         let high = metrics_with_gdiff(&m, &vec![2.0; m.n_components]);
@@ -392,7 +404,7 @@ pub(crate) mod tests {
         let m = fake_manifest(2);
         let mut c = cfg(0.5, 0.0);
         c.granularity = "layer".into();
-        let mut mon = GradesMonitor::new(&c, &m, 100);
+        let mut mon = GradesMonitor::new(&c, &m, 100).unwrap();
         let mut fs = FreezeState::new(m.n_components);
         // layer 0 fully below τ except component 3; layer 1 fully below
         let mut vals = vec![0.1f32; m.n_components];
@@ -413,7 +425,7 @@ pub(crate) mod tests {
         let mut c = cfg(0.5, 0.0);
         c.granularity = "layer".into();
         c.patience = 0;
-        let mut mon = GradesMonitor::new(&c, &m, 100);
+        let mut mon = GradesMonitor::new(&c, &m, 100).unwrap();
         let mut fs = FreezeState::new(m.n_components);
         // step 1: layer 0 almost ready (comp 3 high) → nothing freezes
         let mut vals = vec![0.1f32; m.n_components];
@@ -441,11 +453,43 @@ pub(crate) mod tests {
     }
 
     #[test]
+    fn unknown_metric_is_a_hard_error() {
+        // Regression: `l1diff_rel` (note the missing underscore) used to
+        // silently select L1Diff and change the experiment being run.
+        assert!(Metric::parse("l1diff_rel").is_err());
+        assert!(Metric::parse("").is_err());
+        let m = fake_manifest(1);
+        let mut c = cfg(0.5, 0.0);
+        c.metric = "l1diff_rel".into();
+        assert!(GradesMonitor::new(&c, &m, 100).is_err());
+    }
+
+    #[test]
+    fn tower_tau_overrides_require_vlm_manifest() {
+        // Regression: tau_vision used to apply without the is_vlm() guard
+        // tau_language had, so a stray key retargeted τ on an LM manifest
+        // that happened to carry a vision-labelled component.
+        let mut m = fake_manifest(1);
+        m.components[0].tower = "vision".into();
+        let mut c = cfg(0.5, 0.0);
+        c.tau_vision = 9.0;
+        c.tau_language = 7.0;
+        let mon = GradesMonitor::new(&c, &m, 100).unwrap();
+        for i in 0..m.n_components {
+            assert_eq!(mon.tau(i), 0.5, "LM manifest must ignore tower overrides");
+        }
+        m.kind = "vlm".into();
+        let mon = GradesMonitor::new(&c, &m, 100).unwrap();
+        assert_eq!(mon.tau(0), 9.0);
+        assert_eq!(mon.tau(1), 7.0);
+    }
+
+    #[test]
     fn l1_abs_metric_selects_gabs() {
         let m = fake_manifest(1);
         let mut c = cfg(0.5, 0.0);
         c.metric = "l1_abs".into();
-        let mon = GradesMonitor::new(&c, &m, 10);
+        let mon = GradesMonitor::new(&c, &m, 10).unwrap();
         let mut metrics = vec![0f32; m.metrics_len];
         metrics[m.gabs_offset] = 7.0;
         assert_eq!(mon.metric_values(&m, &metrics)[0], 7.0);

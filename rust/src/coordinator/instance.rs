@@ -1,0 +1,285 @@
+//! Instance-dependent early stopping — per-sample loss-rank exclusion
+//! (arXiv:2502.07547), the natural dual of GradES's per-matrix exclusion.
+//!
+//! Where GradES stops *parameters* that have converged, instance-ES stops
+//! *training examples* the model has mastered: on a check cadence the
+//! current batch is scored per row, the lowest-loss fraction become
+//! exclusion candidates, and rows that stay candidates for `patience + 1`
+//! consecutive checks are excluded — their targets are masked to the
+//! ignore index, so they stop contributing to the loss and every
+//! gradient, exactly like a frozen matrix stops contributing dW work.
+//! Training stops once `stop_frac` of all distinct rows seen are
+//! excluded.
+//!
+//! Rows are identified by a hash of their token content, so sources that
+//! recycle batches (`FixedCycle`, epoch wrap-around) accumulate per-row
+//! statistics across epochs without any side channel through the data
+//! pipeline. [`MaskingSource`] packages the same exclusion set as a
+//! [`BatchSource`] combinator for pipelines that want masking applied on
+//! the producer side (e.g. under a `Prefetcher`) instead of in the
+//! trainer loop.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::{Arc, Mutex};
+
+use crate::config::IesConfig;
+use crate::runtime::pipeline::BatchSource;
+use crate::runtime::session::Batch;
+
+/// Stable identity of one training row: FNV-1a over its token ids.
+pub fn row_key(tokens: &[i32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &t in tokens {
+        h ^= t as u32 as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The shared set of excluded row keys (the trainer's rule and a
+/// [`MaskingSource`] both hold a handle).
+pub type Exclusions = Arc<Mutex<HashSet<u64>>>;
+
+/// Mask every excluded row of `batch` in place (targets → the loss's
+/// ignore index −1). Returns how many rows were masked.
+pub fn mask_batch(batch: &mut Batch, seq_len: usize, excluded: &HashSet<u64>) -> usize {
+    let rows = batch.tokens.len() / seq_len.max(1);
+    let mut masked = 0usize;
+    for r in 0..rows {
+        let tok = &batch.tokens[r * seq_len..(r + 1) * seq_len];
+        if excluded.contains(&row_key(tok)) {
+            batch.targets[r * seq_len..(r + 1) * seq_len].fill(-1);
+            masked += 1;
+        }
+    }
+    masked
+}
+
+/// Per-sample loss-rank exclusion state.
+pub struct InstanceEs {
+    /// The `[ies]` settings this rule runs under.
+    pub cfg: IesConfig,
+    grace_steps: usize,
+    /// Steps between exclusion checks (⌈check_interval_frac·T⌉).
+    pub check_interval: usize,
+    excluded: Exclusions,
+    candidate_streak: HashMap<u64, usize>,
+    seen: HashSet<u64>,
+    /// Exclusion checks run so far (each scores one batch per row).
+    pub checks_run: usize,
+    /// False for runs under other methods (everything is then a no-op).
+    pub enabled: bool,
+}
+
+impl InstanceEs {
+    /// Rule over a `total_steps` budget.
+    pub fn new(cfg: &IesConfig, total_steps: usize) -> Self {
+        let check_interval =
+            ((total_steps as f64) * cfg.check_interval_frac).ceil().max(1.0) as usize;
+        InstanceEs {
+            grace_steps: ((total_steps as f64) * cfg.alpha).ceil() as usize,
+            check_interval,
+            excluded: Arc::new(Mutex::new(HashSet::new())),
+            candidate_streak: HashMap::new(),
+            seen: HashSet::new(),
+            checks_run: 0,
+            cfg: cfg.clone(),
+            enabled: true,
+        }
+    }
+
+    /// ⌈alpha·T⌉ — no exclusions before this step.
+    pub fn grace_steps(&self) -> usize {
+        self.grace_steps
+    }
+
+    /// Is step `t` an exclusion-check step?
+    pub fn due(&self, t: usize) -> bool {
+        self.enabled && t > self.grace_steps && t % self.check_interval == 0
+    }
+
+    /// Record the distinct rows of a batch (the `stop_frac` denominator).
+    pub fn note_rows(&mut self, batch: &Batch, seq_len: usize) {
+        if !self.enabled {
+            return;
+        }
+        let rows = batch.tokens.len() / seq_len.max(1);
+        for r in 0..rows {
+            self.seen.insert(row_key(&batch.tokens[r * seq_len..(r + 1) * seq_len]));
+        }
+    }
+
+    /// Score one batch: `rows[r] = (loss_sum, token_count)` per row (from
+    /// `Session::eval_rows`). The lowest-mean-loss `drop_frac` of still-
+    /// active rows become candidates; rows candidate for `patience + 1`
+    /// consecutive checks are excluded. Returns newly excluded rows.
+    pub fn observe(&mut self, rows: &[(f64, f64)], batch: &Batch, seq_len: usize) -> usize {
+        if !self.enabled {
+            return 0;
+        }
+        self.checks_run += 1;
+        let mut excluded = self.excluded.lock().unwrap();
+        // (mean loss, key) over active rows, deterministically ordered
+        let mut active: Vec<(f64, u64)> = Vec::with_capacity(rows.len());
+        for (r, &(loss, count)) in rows.iter().enumerate() {
+            let key = row_key(&batch.tokens[r * seq_len..(r + 1) * seq_len]);
+            if !excluded.contains(&key) && count > 0.0 {
+                active.push((loss / count, key));
+            }
+        }
+        active.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n_cand = ((active.len() as f64) * self.cfg.drop_frac).floor() as usize;
+        let candidates: HashSet<u64> = active[..n_cand].iter().map(|&(_, k)| k).collect();
+        let mut newly = 0usize;
+        for &(_, key) in &active {
+            if candidates.contains(&key) {
+                let streak = self.candidate_streak.entry(key).or_insert(0);
+                *streak += 1;
+                if *streak > self.cfg.patience {
+                    excluded.insert(key);
+                    newly += 1;
+                }
+            } else {
+                self.candidate_streak.remove(&key);
+            }
+        }
+        newly
+    }
+
+    /// Mask this batch's excluded rows in place; returns rows masked.
+    pub fn mask(&self, batch: &mut Batch, seq_len: usize) -> usize {
+        if !self.enabled {
+            return 0;
+        }
+        mask_batch(batch, seq_len, &self.excluded.lock().unwrap())
+    }
+
+    /// Rows excluded so far.
+    pub fn n_excluded(&self) -> usize {
+        self.excluded.lock().unwrap().len()
+    }
+
+    /// Excluded fraction of all distinct rows seen (0 before any data).
+    pub fn excluded_fraction(&self) -> f64 {
+        if self.seen.is_empty() {
+            0.0
+        } else {
+            self.n_excluded() as f64 / self.seen.len() as f64
+        }
+    }
+
+    /// Stop once `stop_frac` of the distinct rows seen are excluded.
+    pub fn should_stop(&self) -> bool {
+        self.enabled && !self.seen.is_empty() && self.excluded_fraction() >= self.cfg.stop_frac
+    }
+
+    /// A handle to the exclusion set, for composing a [`MaskingSource`]
+    /// over the same run.
+    pub fn exclusions(&self) -> Exclusions {
+        Arc::clone(&self.excluded)
+    }
+}
+
+/// [`BatchSource`] combinator: passes the inner source through, masking
+/// every excluded row's targets. Lets instance-ES compose with any
+/// pipeline topology — the masking then happens on the producer side
+/// (e.g. inside a `Prefetcher` worker) instead of the trainer loop.
+pub struct MaskingSource<S> {
+    inner: S,
+    exclusions: Exclusions,
+    seq_len: usize,
+}
+
+impl<S: BatchSource> MaskingSource<S> {
+    /// Wrap `inner`, masking rows whose keys appear in `exclusions`.
+    pub fn new(inner: S, exclusions: Exclusions, seq_len: usize) -> Self {
+        MaskingSource { inner, exclusions, seq_len }
+    }
+}
+
+impl<S: BatchSource> BatchSource for MaskingSource<S> {
+    fn next_batch(&mut self) -> Batch {
+        let mut b = self.inner.next_batch();
+        mask_batch(&mut b, self.seq_len, &self.exclusions.lock().unwrap());
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const T: usize = 4;
+
+    fn cfg(drop_frac: f64, patience: usize, stop_frac: f64) -> IesConfig {
+        IesConfig { alpha: 0.0, check_interval_frac: 0.1, drop_frac, patience, stop_frac }
+    }
+
+    fn batch(rows: &[[i32; T]]) -> Batch {
+        Batch {
+            tokens: rows.concat(),
+            targets: rows.concat(),
+            patches: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn lowest_loss_rows_are_excluded_after_patience() {
+        let mut ies = InstanceEs::new(&cfg(0.25, 1, 1.0), 100);
+        let b = batch(&[[1, 2, 3, 4], [5, 6, 7, 8], [9, 10, 11, 12], [13, 14, 15, 16]]);
+        ies.note_rows(&b, T);
+        // row 0 is easiest (lowest mean loss): candidate both checks
+        let rows = vec![(0.4, 4.0), (4.0, 4.0), (4.4, 4.0), (4.8, 4.0)];
+        assert_eq!(ies.observe(&rows, &b, T), 0); // streak 1
+        assert_eq!(ies.observe(&rows, &b, T), 1); // streak 2 > patience
+        assert_eq!(ies.n_excluded(), 1);
+        let mut masked = b.clone();
+        assert_eq!(ies.mask(&mut masked, T), 1);
+        assert!(masked.targets[..T].iter().all(|&t| t == -1));
+        assert_eq!(&masked.targets[T..], &b.targets[T..]);
+        assert_eq!(masked.tokens, b.tokens, "tokens must stay intact");
+    }
+
+    #[test]
+    fn rank_shuffle_resets_the_streak() {
+        let mut ies = InstanceEs::new(&cfg(0.25, 1, 1.0), 100);
+        let b = batch(&[[1, 2, 3, 4], [5, 6, 7, 8], [9, 10, 11, 12], [13, 14, 15, 16]]);
+        ies.note_rows(&b, T);
+        let r0_low = vec![(0.4, 4.0), (4.0, 4.0), (4.4, 4.0), (4.8, 4.0)];
+        let r1_low = vec![(4.0, 4.0), (0.4, 4.0), (4.4, 4.0), (4.8, 4.0)];
+        assert_eq!(ies.observe(&r0_low, &b, T), 0);
+        assert_eq!(ies.observe(&r1_low, &b, T), 0); // row 0 streak reset
+        assert_eq!(ies.observe(&r0_low, &b, T), 0); // row 1 reset, row 0 streak 1
+        assert_eq!(ies.n_excluded(), 0);
+    }
+
+    #[test]
+    fn stop_fires_at_the_excluded_fraction() {
+        let mut ies = InstanceEs::new(&cfg(0.5, 0, 0.5), 100);
+        let b = batch(&[[1, 2, 3, 4], [5, 6, 7, 8], [9, 10, 11, 12], [13, 14, 15, 16]]);
+        ies.note_rows(&b, T);
+        let rows = vec![(0.4, 4.0), (0.8, 4.0), (4.4, 4.0), (4.8, 4.0)];
+        assert!(!ies.should_stop());
+        assert_eq!(ies.observe(&rows, &b, T), 2); // patience 0: immediate
+        assert!((ies.excluded_fraction() - 0.5).abs() < 1e-12);
+        assert!(ies.should_stop());
+    }
+
+    #[test]
+    fn masking_source_composes_with_any_inner_source() {
+        use crate::runtime::pipeline::FnSource;
+        let mut ies = InstanceEs::new(&cfg(0.5, 0, 1.0), 100);
+        let b = batch(&[[1, 2, 3, 4], [5, 6, 7, 8]]);
+        ies.note_rows(&b, T);
+        ies.observe(&[(0.1, 4.0), (9.0, 4.0)], &b, T); // excludes row 0
+        let inner = b.clone();
+        let mut src = MaskingSource::new(
+            FnSource(move || inner.clone()),
+            ies.exclusions(),
+            T,
+        );
+        let out = src.next_batch();
+        assert!(out.targets[..T].iter().all(|&t| t == -1));
+        assert_eq!(&out.targets[T..], &b.targets[T..]);
+    }
+}

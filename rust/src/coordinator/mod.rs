@@ -1,13 +1,17 @@
 //! The paper's L3 contribution: GradES monitoring + freeze coordination,
-//! the classic-ES baseline, and the training event loop that composes them
+//! the stopping-method zoo (classic ES, evidence-based, spectral,
+//! instance-dependent), and the training event loop that composes them
 //! with the AOT runtime.
 
 pub mod classic_es;
+pub mod eb;
 pub mod flops;
 pub mod freeze;
 pub mod grades;
+pub mod instance;
 pub mod lr;
 pub mod metrics;
 pub mod scheduler;
+pub mod spectral;
 pub mod trainer;
 pub mod warmstart;

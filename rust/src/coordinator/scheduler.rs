@@ -192,13 +192,17 @@ impl StepPlanner {
     /// an omitted component reports `Gabs = 0`, which would starve the
     /// rebound signal and make unfreezing impossible. Correctness over
     /// savings, warn-free: the run simply plans all-active.
-    pub fn for_run(manifest: &Manifest, grades: &GradesConfig, enabled: bool) -> Self {
+    pub fn for_run(
+        manifest: &Manifest,
+        grades: &GradesConfig,
+        enabled: bool,
+    ) -> anyhow::Result<Self> {
         // parsed through the monitor's own metric table so the two can
         // never disagree on which spellings mean Gabs-monitoring
         let unfreeze_live = grades.unfreeze_factor > 0.0
-            && crate::coordinator::grades::Metric::parse(&grades.metric)
+            && crate::coordinator::grades::Metric::parse(&grades.metric)?
                 == crate::coordinator::grades::Metric::L1Abs;
-        Self::new(manifest, enabled && !unfreeze_live)
+        Ok(Self::new(manifest, enabled && !unfreeze_live))
     }
 
     /// Derive step `t`'s plan: omit exactly the frozen components.
@@ -461,13 +465,13 @@ mod tests {
         let mut fs = FreezeState::new(m.n_components);
         fs.freeze(0, 1, FreezeReason::Converged, 0.0);
         // unfreeze can only fire on the l1_abs metric: elision off
-        let mut live = StepPlanner::for_run(&m, &grades_cfg("l1_abs", 2.0), true);
+        let mut live = StepPlanner::for_run(&m, &grades_cfg("l1_abs", 2.0), true).unwrap();
         assert!(live.plan(2, &fs).is_all_active());
         // with the default metric the unfreeze rule never fires: elide
-        let mut diff = StepPlanner::for_run(&m, &grades_cfg("l1_diff", 2.0), true);
+        let mut diff = StepPlanner::for_run(&m, &grades_cfg("l1_diff", 2.0), true).unwrap();
         assert!(diff.plan(2, &fs).omits(0));
         // and unfreeze disabled entirely: elide
-        let mut off = StepPlanner::for_run(&m, &grades_cfg("l1_abs", 0.0), true);
+        let mut off = StepPlanner::for_run(&m, &grades_cfg("l1_abs", 0.0), true).unwrap();
         assert!(off.plan(2, &fs).omits(0));
     }
 

@@ -1,0 +1,322 @@
+//! Spectral stopping — a per-component Marchenko–Pastur edge test on the
+//! weight matrices themselves (arXiv:2510.16074 adapted to GradES's
+//! per-matrix granularity).
+//!
+//! Random-matrix theory says an m×n matrix of pure i.i.d. noise has a
+//! singular spectrum whose squared values fill the Marchenko–Pastur bulk
+//! `[σ²(1−√γ)², σ²(1+√γ)²]` with aspect ratio `γ = min(m,n)/max(m,n)`.
+//! Training pushes information into a handful of *spikes* above the bulk
+//! edge `λ₊`; once a component's spectrum stops moving — the spikes have
+//! stabilized and the bulk is static — further updates to that matrix are
+//! noise-shaping, and it can freeze.
+//!
+//! Unlike GradES/EB this signal lives in the **weights**, not the
+//! gradients, so scans pull the state to the host on their own (coarser)
+//! cadence; the freeze decisions feed the same [`FreezeState`], so
+//! `StepPlan` elision and backward truncation apply unchanged. Like
+//! GradES it needs zero validation passes.
+//!
+//! The eigensolver is a dependency-free cyclic Jacobi iteration on the
+//! Gram matrix of the smaller side — components are at most a few hundred
+//! wide in the host configs, and LoRA components reduce to r×r Grams.
+
+use crate::config::SpectralConfig;
+use crate::coordinator::freeze::{FreezeReason, FreezeState};
+use crate::runtime::manifest::Manifest;
+
+/// Eigenvalues of a symmetric matrix (row-major, n×n) by cyclic Jacobi
+/// rotations, ascending. Deterministic: fixed sweep order, fixed cap.
+pub fn sym_eigenvalues(a: &[f64], n: usize) -> Vec<f64> {
+    debug_assert_eq!(a.len(), n * n);
+    let mut a = a.to_vec();
+    if n == 0 {
+        return Vec::new();
+    }
+    let frob: f64 = a.iter().map(|x| x * x).sum::<f64>().sqrt();
+    let tol = 1e-12 * frob.max(1e-300);
+    for _sweep in 0..64 {
+        let mut off = 0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                off += a[p * n + q] * a[p * n + q];
+            }
+        }
+        if off.sqrt() <= tol {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = a[p * n + q];
+                if apq.abs() <= tol / (n as f64) {
+                    continue;
+                }
+                let app = a[p * n + p];
+                let aqq = a[q * n + q];
+                // classic Jacobi rotation angle
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                for k in 0..n {
+                    let akp = a[k * n + p];
+                    let akq = a[k * n + q];
+                    a[k * n + p] = c * akp - s * akq;
+                    a[k * n + q] = s * akp + c * akq;
+                }
+                for k in 0..n {
+                    let apk = a[p * n + k];
+                    let aqk = a[q * n + k];
+                    a[p * n + k] = c * apk - s * aqk;
+                    a[q * n + k] = s * apk + c * aqk;
+                }
+            }
+        }
+    }
+    let mut eigs: Vec<f64> = (0..n).map(|i| a[i * n + i]).collect();
+    eigs.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    eigs
+}
+
+/// Eigenvalues of the (scaled) Gram matrix of a row-major `rows`×`cols`
+/// weight, computed on the smaller side: `X·Xᵀ/cols` when `rows ≤ cols`,
+/// `Xᵀ·X/rows` otherwise — the sample-covariance normalization the MP
+/// law is stated for. Returns `(eigenvalues ascending, aspect ratio γ)`.
+pub fn gram_spectrum(w: &[f32], rows: usize, cols: usize) -> (Vec<f64>, f64) {
+    debug_assert_eq!(w.len(), rows * cols);
+    let (k, l, transpose) = if rows <= cols { (rows, cols, false) } else { (cols, rows, true) };
+    let gamma = k as f64 / l as f64;
+    let mut g = vec![0f64; k * k];
+    for i in 0..k {
+        for j in i..k {
+            let mut s = 0f64;
+            if transpose {
+                // columns i,j of X: stride `cols`
+                for r in 0..rows {
+                    s += w[r * cols + i] as f64 * w[r * cols + j] as f64;
+                }
+            } else {
+                for c in 0..cols {
+                    s += w[i * cols + c] as f64 * w[j * cols + c] as f64;
+                }
+            }
+            s /= l as f64;
+            g[i * k + j] = s;
+            g[j * k + i] = s;
+        }
+    }
+    (sym_eigenvalues(&g, k), gamma)
+}
+
+/// Marchenko–Pastur bulk edge `λ₊ = σ̂²(1+√γ)²` with the robust noise
+/// estimate `σ̂² = median(λ)` (spikes are a small minority, so the
+/// median sits inside the bulk).
+pub fn mp_edge(eigs: &[f64], gamma: f64) -> f64 {
+    if eigs.is_empty() {
+        return 0.0;
+    }
+    let mid = eigs.len() / 2;
+    let median = if eigs.len() % 2 == 1 {
+        eigs[mid]
+    } else {
+        0.5 * (eigs[mid - 1] + eigs[mid])
+    };
+    median * (1.0 + gamma.sqrt()).powi(2)
+}
+
+/// Per-component spectral-drift stopping over weight pulls on a coarse
+/// scan cadence.
+pub struct SpectralEs {
+    /// The `[spectral]` settings this rule runs under.
+    pub cfg: SpectralConfig,
+    grace_steps: usize,
+    /// Steps between spectrum scans (⌈interval_frac·T⌉).
+    pub scan_interval: usize,
+    below_count: Vec<usize>,
+    /// Last scan's concatenated per-tensor spectrum, per component.
+    prev: Vec<Option<Vec<f64>>>,
+    /// Spike count above the MP edge at the last scan, per component
+    /// (reporting only — the learned-signal dimensionality).
+    pub spikes: Vec<usize>,
+    /// Spectrum scans executed so far.
+    pub scans_run: usize,
+    /// False for runs under other methods (scan() is then a no-op).
+    pub enabled: bool,
+}
+
+impl SpectralEs {
+    /// Rule over the manifest's components for a `total_steps` run.
+    pub fn new(cfg: &SpectralConfig, manifest: &Manifest, total_steps: usize) -> Self {
+        let scan_interval =
+            ((total_steps as f64) * cfg.interval_frac).ceil().max(1.0) as usize;
+        SpectralEs {
+            grace_steps: ((total_steps as f64) * cfg.alpha).ceil() as usize,
+            scan_interval,
+            below_count: vec![0; manifest.n_components],
+            prev: vec![None; manifest.n_components],
+            spikes: vec![0; manifest.n_components],
+            scans_run: 0,
+            cfg: cfg.clone(),
+            enabled: true,
+        }
+    }
+
+    /// ⌈alpha·T⌉ — no scans before this step.
+    pub fn grace_steps(&self) -> usize {
+        self.grace_steps
+    }
+
+    /// Is step `t` a spectrum-scan step? (After the grace period, every
+    /// `scan_interval` steps — weight pulls are too costly for every-step
+    /// cadence.)
+    pub fn due(&self, t: usize) -> bool {
+        self.enabled && t > self.grace_steps && t % self.scan_interval == 0
+    }
+
+    /// Scan the host state at step `t`: per unfrozen component, compute
+    /// the concatenated Gram spectrum of its tensors, count MP spikes,
+    /// and freeze once the relative spectral drift between consecutive
+    /// scans stays below τ for `patience + 1` scans. Returns the number
+    /// of components newly frozen.
+    pub fn scan(
+        &mut self,
+        t: usize,
+        manifest: &Manifest,
+        state: &[f32],
+        freeze: &mut FreezeState,
+    ) -> usize {
+        if !self.enabled {
+            return 0;
+        }
+        self.scans_run += 1;
+        let mut newly = 0usize;
+        for c in 0..freeze.n() {
+            if freeze.is_frozen(c) {
+                continue;
+            }
+            let mut spectrum = Vec::new();
+            let mut spikes = 0usize;
+            for p in manifest.params.iter().filter(|p| p.component == Some(c)) {
+                if p.shape.len() != 2 {
+                    continue;
+                }
+                let (rows, cols) = (p.shape[0], p.shape[1]);
+                let w = &state[p.offset..p.offset + rows * cols];
+                let (eigs, gamma) = gram_spectrum(w, rows, cols);
+                let edge = mp_edge(&eigs, gamma);
+                spikes += eigs.iter().filter(|&&e| e > edge).count();
+                spectrum.extend(eigs);
+            }
+            self.spikes[c] = spikes;
+            let drift = match &self.prev[c] {
+                Some(prev) if prev.len() == spectrum.len() && !prev.is_empty() => {
+                    let num: f64 =
+                        prev.iter().zip(&spectrum).map(|(a, b)| (a - b).abs()).sum();
+                    let den: f64 = prev.iter().map(|a| a.abs()).sum::<f64>().max(1e-30);
+                    Some(num / den)
+                }
+                _ => None,
+            };
+            self.prev[c] = Some(spectrum);
+            match drift {
+                Some(d) if d < self.cfg.tau => {
+                    self.below_count[c] += 1;
+                    if self.below_count[c] > self.cfg.patience {
+                        freeze.freeze(c, t, FreezeReason::Spectral, d);
+                        newly += 1;
+                    }
+                }
+                Some(_) => self.below_count[c] = 0,
+                None => {}
+            }
+        }
+        newly
+    }
+
+    /// Stop when every monitored component is frozen (as in Alg. 1).
+    pub fn should_terminate(&self, freeze: &FreezeState) -> bool {
+        self.enabled && freeze.n() > 0 && freeze.all_frozen()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::ParamInfo;
+
+    #[test]
+    fn jacobi_matches_analytic_eigenvalues() {
+        // [[2,1],[1,2]] has eigenvalues 1 and 3
+        let e = sym_eigenvalues(&[2.0, 1.0, 1.0, 2.0], 2);
+        assert!((e[0] - 1.0).abs() < 1e-9 && (e[1] - 3.0).abs() < 1e-9);
+        // diagonal passes through
+        let e = sym_eigenvalues(&[5.0, 0.0, 0.0, -2.0], 2);
+        assert!((e[0] + 2.0).abs() < 1e-12 && (e[1] - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gram_spectrum_handles_both_orientations() {
+        // X = [[1,0,0],[0,2,0]] (2×3): XXᵀ/3 = diag(1/3, 4/3)
+        let w = [1.0f32, 0.0, 0.0, 0.0, 2.0, 0.0];
+        let (e, gamma) = gram_spectrum(&w, 2, 3);
+        assert!((gamma - 2.0 / 3.0).abs() < 1e-12);
+        assert!((e[0] - 1.0 / 3.0).abs() < 1e-9 && (e[1] - 4.0 / 3.0).abs() < 1e-9);
+        // transposed layout must give the same spectrum
+        let wt = [1.0f32, 0.0, 0.0, 2.0, 0.0, 0.0];
+        let (et, gt) = gram_spectrum(&wt, 3, 2);
+        assert!((gt - gamma).abs() < 1e-12);
+        for (a, b) in e.iter().zip(&et) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn static_spectrum_freezes_and_drifting_spectrum_does_not() {
+        let manifest = spectral_manifest();
+        let cfg = SpectralConfig { alpha: 0.0, interval_frac: 0.1, tau: 0.05, patience: 0 };
+        let mut sp = SpectralEs::new(&cfg, &manifest, 10);
+        let mut fs = FreezeState::new(1);
+        let mut state = vec![0f32; 4 + 16];
+        for (i, v) in state[4..].iter_mut().enumerate() {
+            *v = (i as f32 * 0.37).sin();
+        }
+        assert_eq!(sp.scan(1, &manifest, &state, &mut fs), 0); // first scan: baseline
+        assert_eq!(sp.scan(2, &manifest, &state, &mut fs), 1); // static ⇒ freeze
+        assert!(fs.is_frozen(0));
+        assert!(sp.should_terminate(&fs));
+
+        // drifting weights never freeze
+        let mut sp = SpectralEs::new(&cfg, &manifest, 10);
+        let mut fs = FreezeState::new(1);
+        sp.scan(1, &manifest, &state, &mut fs);
+        for v in state[4..].iter_mut() {
+            *v *= 2.0; // spectrum scales ×4 ⇒ drift ≫ τ
+        }
+        assert_eq!(sp.scan(2, &manifest, &state, &mut fs), 0);
+        assert!(!fs.is_frozen(0));
+    }
+
+    #[test]
+    fn cadence_respects_grace_and_interval() {
+        let manifest = spectral_manifest();
+        let cfg = SpectralConfig { alpha: 0.5, interval_frac: 0.1, tau: 0.05, patience: 0 };
+        let sp = SpectralEs::new(&cfg, &manifest, 100);
+        assert!(!sp.due(50)); // grace
+        assert!(!sp.due(55)); // off-cadence
+        assert!(sp.due(60));
+    }
+
+    fn spectral_manifest() -> Manifest {
+        let mut m = crate::coordinator::grades::tests::fake_manifest(1);
+        // one monitored 4×4 tensor at offset 4 for component 0
+        m.n_components = 1;
+        m.components.truncate(1);
+        m.params = vec![ParamInfo {
+            name: "w".into(),
+            shape: vec![4, 4],
+            offset: 4,
+            trainable: true,
+            component: Some(0),
+        }];
+        m
+    }
+}

@@ -1,10 +1,14 @@
 //! The training event loop — Algorithm 1 end to end.
 //!
 //! One `Trainer::run` drives: batch sampling, ctrl assembly (LR schedule +
-//! freeze mask), the AOT train step, the metrics probe, the GradES monitor,
-//! the classic-ES baseline, the step planner, FLOPs accounting and
-//! per-step logging. All six paper methods are this one loop with
-//! different `StoppingMethod` (the fp/lora split lives in the artifact).
+//! freeze mask), the AOT train step, the metrics probe, the stopping
+//! rule, the step planner, FLOPs accounting and per-step logging. Every
+//! method in the stopping zoo is this one loop with a different
+//! [`StoppingMethod`] (the fp/lora split lives in the artifact): the
+//! GradES monitor and the EB criterion read the probed gradient
+//! statistics, spectral stopping pulls the weights on its own scan
+//! cadence, classic ES runs validation passes, and instance-ES scores
+//! the incoming batch per row and masks mastered examples out.
 //!
 //! Compute elision is plan-driven: each step the [`StepPlanner`] derives
 //! a [`StepPlan`](crate::coordinator::scheduler::StepPlan) (omit every
@@ -36,9 +40,12 @@ use anyhow::Result;
 
 use crate::config::RepoConfig;
 use crate::coordinator::classic_es::ClassicEs;
+use crate::coordinator::eb::EbCriterion;
 use crate::coordinator::flops::FlopsCounter;
 use crate::coordinator::freeze::FreezeState;
 use crate::coordinator::grades::GradesMonitor;
+use crate::coordinator::instance::InstanceEs;
+use crate::coordinator::spectral::SpectralEs;
 use crate::coordinator::lr::CosineSchedule;
 use crate::coordinator::metrics::MetricsLog;
 use crate::coordinator::scheduler::{PlanStats, StepPlanner};
@@ -50,7 +57,8 @@ use crate::runtime::pipeline::{
 use crate::runtime::session::{Batch, Session, UploadedBatch};
 use crate::util::timer::Timer;
 
-/// Which of the paper's stopping rules a run trains under.
+/// Which stopping rule a run trains under — the paper's three plus the
+/// related-work zoo (evidence-based, spectral, instance-dependent).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum StoppingMethod {
     /// Train all T steps (the paper's "Full Parameter"/"LoRA" baselines).
@@ -59,7 +67,24 @@ pub enum StoppingMethod {
     ClassicEs,
     /// Gradient-based component early stopping (+GradES).
     GradEs,
+    /// Evidence-based stopping from local gradient statistics
+    /// (Mahsereci & Lassner; zero validation passes, like GradES).
+    EbCriterion,
+    /// Marchenko–Pastur spectral stopping on the weight matrices.
+    SpectralEs,
+    /// Instance-dependent ES: per-sample loss-rank exclusion.
+    InstanceEs,
 }
+
+/// Every method, in the zoo's canonical report order.
+pub const ALL_METHODS: [StoppingMethod; 6] = [
+    StoppingMethod::None,
+    StoppingMethod::ClassicEs,
+    StoppingMethod::GradEs,
+    StoppingMethod::EbCriterion,
+    StoppingMethod::SpectralEs,
+    StoppingMethod::InstanceEs,
+];
 
 impl StoppingMethod {
     /// The short id used in job ids, file names and the run manifest.
@@ -68,6 +93,9 @@ impl StoppingMethod {
             StoppingMethod::None => "base",
             StoppingMethod::ClassicEs => "es",
             StoppingMethod::GradEs => "grades",
+            StoppingMethod::EbCriterion => "eb",
+            StoppingMethod::SpectralEs => "spectral",
+            StoppingMethod::InstanceEs => "ies",
         }
     }
 
@@ -77,6 +105,9 @@ impl StoppingMethod {
             "base" | "none" => Some(Self::None),
             "es" => Some(Self::ClassicEs),
             "grades" => Some(Self::GradEs),
+            "eb" => Some(Self::EbCriterion),
+            "spectral" => Some(Self::SpectralEs),
+            "ies" => Some(Self::InstanceEs),
             _ => None,
         }
     }
@@ -91,6 +122,8 @@ pub enum StopCause {
     AllComponentsFrozen,
     /// Classic ES: validation loss stalled for `patience` checks.
     ValidationPatience,
+    /// Instance-ES: enough training rows were excluded as mastered.
+    SamplesExhausted,
 }
 
 /// Everything one training run reports back to its driver.
@@ -170,12 +203,64 @@ impl TrainerOptions {
             total_steps: cfg.run.total_steps,
             seed: cfg.run.seed as i32,
             probe_every: 1,
-            elide_frozen: method == StoppingMethod::GradEs,
+            elide_frozen: matches!(
+                method,
+                StoppingMethod::GradEs
+                    | StoppingMethod::EbCriterion
+                    | StoppingMethod::SpectralEs
+            ),
             truncate_frozen_prefix: false,
             final_validation: true,
             warm_start: None,
             pipeline: PipelineOptions::default(),
             async_eval: AsyncEvalOptions::default(),
+        }
+    }
+}
+
+/// The per-component freeze rule driving a run, dispatched per method.
+/// All three share the freeze/plan machinery — they differ only in the
+/// signal that decides a component has converged.
+enum Monitor {
+    /// Eq. 1 Gdiff threshold test (also the disabled stand-in).
+    Grades(GradesMonitor),
+    /// Evidence-based test over the same probed statistics.
+    Eb(EbCriterion),
+    /// Marchenko–Pastur test over weight spectra on a scan cadence.
+    Spectral(SpectralEs),
+}
+
+impl Monitor {
+    fn grace_steps(&self) -> usize {
+        match self {
+            Monitor::Grades(g) => g.grace_steps(),
+            Monitor::Eb(e) => e.grace_steps(),
+            Monitor::Spectral(s) => s.grace_steps(),
+        }
+    }
+
+    /// Feed one probed metrics prefix. Spectral stopping ignores probes —
+    /// its signal comes from `SpectralEs::scan` on its own cadence.
+    fn observe(
+        &mut self,
+        t: usize,
+        m: &crate::runtime::manifest::Manifest,
+        metrics: &[f32],
+        lr_scale: f64,
+        freeze: &mut FreezeState,
+    ) -> usize {
+        match self {
+            Monitor::Grades(g) => g.observe(t, m, metrics, lr_scale, freeze),
+            Monitor::Eb(e) => e.observe(t, m, metrics, freeze),
+            Monitor::Spectral(_) => 0,
+        }
+    }
+
+    fn should_terminate(&self, freeze: &FreezeState) -> bool {
+        match self {
+            Monitor::Grades(g) => g.should_terminate(freeze),
+            Monitor::Eb(e) => e.should_terminate(freeze),
+            Monitor::Spectral(s) => s.should_terminate(freeze),
         }
     }
 }
@@ -248,18 +333,33 @@ pub fn run_source_and_keep<'b>(
 
     let schedule = CosineSchedule::new(cfg.run.lr, cfg.run.warmup_frac, opts.total_steps);
     let mut monitor = match opts.method {
-        StoppingMethod::GradEs => GradesMonitor::new(&cfg.grades, m, opts.total_steps),
-        _ => GradesMonitor::disabled(m),
+        StoppingMethod::GradEs => {
+            Monitor::Grades(GradesMonitor::new(&cfg.grades, m, opts.total_steps)?)
+        }
+        StoppingMethod::EbCriterion => {
+            Monitor::Eb(EbCriterion::new(&cfg.eb, m, opts.total_steps))
+        }
+        StoppingMethod::SpectralEs => {
+            Monitor::Spectral(SpectralEs::new(&cfg.spectral, m, opts.total_steps))
+        }
+        _ => Monitor::Grades(GradesMonitor::disabled(m)),
     };
     let mut es = match opts.method {
         StoppingMethod::ClassicEs => ClassicEs::new(&cfg.es, opts.total_steps),
         _ => ClassicEs::disabled(&cfg.es),
     };
+    // Instance-ES sits outside the Monitor dispatch: its unit of exclusion
+    // is a training row, not a component, and it needs the raw batch
+    // before upload — so it owns the batch path below.
+    let mut ies = match opts.method {
+        StoppingMethod::InstanceEs => Some(InstanceEs::new(&cfg.ies, opts.total_steps)),
+        _ => None,
+    };
     let mut freeze = FreezeState::new(m.n_components);
     // Freeze-aware step planning: omit every frozen component's dW work,
     // unless dynamic unfreezing needs the frozen components' statistics
     // kept live (see `StepPlanner::for_run`).
-    let mut planner = StepPlanner::for_run(m, &cfg.grades, opts.elide_frozen);
+    let mut planner = StepPlanner::for_run(m, &cfg.grades, opts.elide_frozen)?;
     planner.truncate = opts.truncate_frozen_prefix;
     if opts.truncate_frozen_prefix && !planner.enabled {
         // the GRADES_JOBS-style rule: never stay silent about an
@@ -304,12 +404,29 @@ pub fn run_source_and_keep<'b>(
         // construction for this step's executed graph.
         let plan = planner.plan(t, &freeze);
         debug_assert!(plan.is_sound(&freeze));
-        let io = match staged.take() {
-            Some(io) => io,
-            None => session.upload_batch(&source.next_batch())?,
+        let io = if let Some(rule) = ies.as_mut() {
+            // Instance-ES path: score and mask the batch *before* upload.
+            // Upload-ahead staging is bypassed — a staged batch would be
+            // masked against the exclusion set of one check earlier.
+            debug_assert!(staged.is_none());
+            let mut b = source.next_batch();
+            rule.note_rows(&b, m.seq_len);
+            if rule.due(t) {
+                let mt = Timer::new();
+                let rows = session.eval_rows(&b)?;
+                rule.observe(&rows, &b, m.seq_len);
+                monitor_secs += mt.secs();
+            }
+            rule.mask(&mut b, m.seq_len);
+            session.upload_batch(&b)?
+        } else {
+            match staged.take() {
+                Some(io) => io,
+                None => session.upload_batch(&source.next_batch())?,
+            }
         };
         let realized = session.train_step_uploaded(io, &ctrl, &plan)?;
-        if opts.pipeline.upload_ahead && t < opts.total_steps {
+        if opts.pipeline.upload_ahead && ies.is_none() && t < opts.total_steps {
             // PJRT dispatch is asynchronous: step t may still be executing
             // on device while this host→device copy proceeds. If the run
             // stops early the staged batch is dropped unused — metrics and
@@ -328,8 +445,23 @@ pub fn run_source_and_keep<'b>(
             monitor_secs += mt.secs();
             log.record(t, schedule.lr(t) as f64, freeze.frozen_fraction(), m, &metrics);
         }
+        if let Monitor::Spectral(sp) = &mut monitor {
+            // Spectral scans run on their own (sparser) cadence: each one
+            // pulls the weights to host and eigendecomposes per-component
+            // Gram matrices, so they are far costlier than a probe.
+            if sp.due(t) {
+                let mt = Timer::new();
+                let state = session.state_to_host()?;
+                sp.scan(t, m, &state, &mut freeze);
+                monitor_secs += mt.secs();
+            }
+        }
         if monitor.should_terminate(&freeze) {
             stop_cause = StopCause::AllComponentsFrozen;
+            break;
+        }
+        if ies.as_ref().map_or(false, |r| r.should_stop()) {
+            stop_cause = StopCause::SamplesExhausted;
             break;
         }
         if let Some(cache) = &val_cache {

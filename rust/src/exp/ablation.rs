@@ -1,7 +1,10 @@
 //! Tables 6 & 7 — the τ × α ablation grid (accuracy and training time),
 //! plus two design-choice ablations DESIGN.md calls out: the convergence
 //! metric (Eq. 1 l1_diff vs §3.1 l1_abs) and freeze granularity
-//! (matrix-level GradES vs layer-level AutoFreeze-style).
+//! (matrix-level GradES vs layer-level AutoFreeze-style) — and the
+//! stopping-method zoo, a head-to-head of every
+//! [`StoppingMethod`](crate::coordinator::trainer::StoppingMethod) on
+//! the same config (wall clock, accuracy, validation passes, freezing).
 //!
 //! The grid is a [`plan::ablation_plan`] job graph run by the scheduler:
 //! all cells share one compiled bundle, one set of dataset rows and one
@@ -14,7 +17,7 @@
 
 use anyhow::Result;
 
-use super::{plan, scheduler, write_result, ExpOptions, JobResult};
+use super::{method_label, plan, scheduler, write_result, ExpOptions, JobResult};
 use crate::report::table::{pct, secs, Table};
 
 /// τ grid of Tables 6/7.
@@ -85,9 +88,56 @@ pub fn run(opts: &ExpOptions, config_name: &str) -> Result<()> {
         gran_t.render()
     );
 
-    println!("\n{t6}\n{t7}\n{extra}");
+    // ---- stopping-method zoo: every method head-to-head ----
+    let mut zoo_t = zoo_table_header();
+    for (_, id) in &slots.zoo {
+        zoo_t.row(zoo_row(config_name, report.result(*id)?));
+    }
+    let zoo = format!(
+        "## Stopping-method zoo — every method head-to-head ({config_name})\n\n{}",
+        zoo_t.render()
+    );
+
+    println!("\n{t6}\n{t7}\n{extra}\n{zoo}");
     write_result(opts, "table6_ablation_accuracy.md", &t6)?;
     write_result(opts, "table7_ablation_time.md", &t7)?;
     write_result(opts, "ablation_design_choices.md", &extra)?;
+    write_result(opts, "stopping_zoo.md", &zoo)?;
     Ok(())
+}
+
+/// Header of the zoo comparison table (shared with `bench_stopping_zoo`).
+pub fn zoo_table_header() -> Table {
+    Table::new(vec![
+        "Method",
+        "Avg. acc (%)",
+        "Time (s)",
+        "Val passes",
+        "Steps",
+        "Frozen",
+        "Stop cause",
+    ])
+}
+
+/// One zoo table row from a finished job (shared with
+/// `bench_stopping_zoo`). Validation passes are the async-eval `issued`
+/// counter — the column where GradES and the EB criterion read 0.
+pub fn zoo_row(config_name: &str, r: &JobResult) -> Vec<String> {
+    let (avg, wall, steps) = cell(r);
+    let am = if config_name.contains("lora") { "lora" } else { "fp" };
+    let cause = match r.outcome.stop_cause {
+        crate::coordinator::trainer::StopCause::BudgetExhausted => "budget",
+        crate::coordinator::trainer::StopCause::AllComponentsFrozen => "frozen",
+        crate::coordinator::trainer::StopCause::ValidationPatience => "patience",
+        crate::coordinator::trainer::StopCause::SamplesExhausted => "instances",
+    };
+    vec![
+        method_label(am, r.method),
+        pct(avg),
+        secs(wall),
+        r.outcome.async_eval.issued.to_string(),
+        steps.to_string(),
+        format!("{}/{}", r.outcome.freeze.n_frozen(), r.outcome.freeze.n()),
+        cause.to_string(),
+    ]
 }

@@ -155,6 +155,7 @@ pub fn mock_summary(spec: &JobSpec, settings: &str, backend: BackendChoice) -> J
         accuracies: vec![("Suite".to_string(), acc), ("Avg.".to_string(), acc)],
         frozen_series: vec![(1, 0.0), (steps_run, 0.5)],
         tower_gabs: None,
+        val_checks: 0,
         attempts: 1,
     }
 }

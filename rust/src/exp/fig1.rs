@@ -110,15 +110,57 @@ pub fn run(opts: &ExpOptions, config_name: &str, layer: usize) -> Result<()> {
             true,
         )
     );
+    // --- EB overlay: the evidence the EB criterion would read from the
+    // same probes, e = 1 − 2·(Gabs/Gdiff)² per group mean. Negative while
+    // the gradient carries signal, crossing 0 (the stop line) as it
+    // degenerates to sampling noise — rendered linear, not log.
+    let ev_pts = |idxs: &[usize]| -> Vec<(f64, f64)> {
+        outcome
+            .log
+            .records
+            .iter()
+            .map(|r| {
+                let e = idxs
+                    .iter()
+                    .map(|&i| {
+                        let ratio = r.gabs[i] as f64 / (r.gdiff[i] as f64).max(1e-30);
+                        1.0 - 2.0 * ratio * ratio
+                    })
+                    .sum::<f64>()
+                    / idxs.len().max(1) as f64;
+                (r.step as f64, e)
+            })
+            .collect()
+    };
+    let zero_line: Vec<(f64, f64)> =
+        outcome.log.records.iter().map(|r| (r.step as f64, 0.0)).collect();
+    let feb = format!(
+        "## EB-criterion overlay — evidence per group ({config_name})\n\n\
+         Mahsereci–Lassner evidence from the same Eq. 1 probes GradES reads \
+         (fallback estimate, no gvar block): stop once a component's curve \
+         crosses 0.\n\n```\n{}```\n",
+        ascii_chart(
+            "EB evidence 1 - 2(|g|/|dg|)^2 (linear y)",
+            &[
+                ("attention", ev_pts(&attn)),
+                ("mlp", ev_pts(&mlp)),
+                ("e=0", zero_line),
+            ],
+            72,
+            14,
+            false,
+        )
+    );
     outcome.log.write_group_mean_csv(
         &opts.out_dir.join("fig4a_groups.csv"),
         &m,
         &[("attention", attn), ("mlp", mlp)],
     )?;
 
-    println!("\n{f1}\n{f4a}");
+    println!("\n{f1}\n{f4a}\n{feb}");
     write_result(opts, "fig1_components.md", &f1)?;
     write_result(opts, "fig4a_groups.md", &f4a)?;
+    write_result(opts, "fig_eb_evidence.md", &feb)?;
     outcome.log.write_loss_csv(&opts.out_dir.join(format!("{config_name}_loss.csv")))?;
     Ok(())
 }

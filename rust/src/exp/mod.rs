@@ -136,12 +136,14 @@ pub struct JobResult {
 /// Paper-style method label for a (artifact-method, stopping) pair.
 pub fn method_label(artifact_method: &str, stopping: StoppingMethod) -> String {
     let base = if artifact_method == "lora" { "LoRA" } else { "Full Parameter" };
+    let short = if artifact_method == "lora" { "LoRA" } else { "FP" };
     match stopping {
         StoppingMethod::None => base.to_string(),
-        StoppingMethod::ClassicEs => format!("{}+ES", if artifact_method == "lora" { "LoRA" } else { "FP" }),
-        StoppingMethod::GradEs => {
-            format!("{}+GradES", if artifact_method == "lora" { "LoRA" } else { "FP" })
-        }
+        StoppingMethod::ClassicEs => format!("{short}+ES"),
+        StoppingMethod::GradEs => format!("{short}+GradES"),
+        StoppingMethod::EbCriterion => format!("{short}+EB"),
+        StoppingMethod::SpectralEs => format!("{short}+SpectralES"),
+        StoppingMethod::InstanceEs => format!("{short}+IES"),
     }
 }
 

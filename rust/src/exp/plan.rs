@@ -16,7 +16,7 @@
 use anyhow::{bail, ensure, Result};
 
 use crate::config::RepoConfig;
-use crate::coordinator::trainer::StoppingMethod;
+use crate::coordinator::trainer::{StoppingMethod, ALL_METHODS};
 
 /// Index of a job inside its [`JobGraph`].
 pub type JobId = usize;
@@ -546,12 +546,16 @@ pub struct AblationSlots {
     pub metric: Vec<(String, JobId)>,
     /// (granularity name, job) pairs.
     pub granularity: Vec<(String, JobId)>,
+    /// (method label, job) pairs — the stopping-method zoo, one job per
+    /// [`StoppingMethod`] on the same config.
+    pub zoo: Vec<(String, JobId)>,
 }
 
-/// The τ×α grid plus the metric / granularity design ablations, all on
-/// one config with GradES stopping. Every cell shares the config's
-/// compiled bundle, dataset rows and device-resident suites through the
-/// scheduler's per-config caches.
+/// The τ×α grid, the metric / granularity design ablations, and the
+/// stopping-method zoo (every [`StoppingMethod`] head-to-head), all on
+/// one config. Every cell shares the config's compiled bundle, dataset
+/// rows and device-resident suites through the scheduler's per-config
+/// caches.
 pub fn ablation_plan(
     config_name: &str,
     taus: &[f64],
@@ -596,7 +600,15 @@ pub fn ablation_plan(
             )?,
         ));
     }
-    Ok((g, AblationSlots { grid, metric, granularity }))
+    let mut zoo = Vec::new();
+    for method in ALL_METHODS {
+        let id = format!("ablation/{config_name}/zoo/{}", method.label());
+        zoo.push((
+            method.label().to_string(),
+            g.add(JobSpec::train(id, config_name, method, EvalKind::LmSuites))?,
+        ));
+    }
+    Ok((g, AblationSlots { grid, metric, granularity, zoo }))
 }
 
 /// Figures 1 & 4a: a single monitor-off run probing every step. The job
@@ -717,9 +729,14 @@ mod tests {
         let alphas = [0.1, 0.3, 0.5];
         let (g, slots) = ablation_plan("lm-tiny-fp", &taus, &alphas).unwrap();
         assert_eq!(slots.grid.len(), 6);
-        assert_eq!(g.len(), 6 + 2 + 2);
+        assert_eq!(slots.zoo.len(), ALL_METHODS.len());
+        assert_eq!(g.len(), 6 + 2 + 2 + 6);
         g.validate().unwrap();
         assert_eq!(g.get(slots.grid[1]).id, "ablation/lm-tiny-fp/tau=0.01,alpha=0.3");
+        assert_eq!(g.get(slots.zoo[3].1).id, "ablation/lm-tiny-fp/zoo/eb");
+        // every method appears exactly once, in canonical order
+        let labels: Vec<&str> = slots.zoo.iter().map(|(l, _)| l.as_str()).collect();
+        assert_eq!(labels, vec!["base", "es", "grades", "eb", "spectral", "ies"]);
         // no dependencies anywhere: the whole grid is ready at once
         assert!(g.jobs.iter().all(|j| j.deps.is_empty()));
     }

@@ -169,10 +169,11 @@ impl RetryPolicy {
 /// trying to resume from it.
 pub fn job_settings(spec: &JobSpec, global: &str, choice: BackendChoice) -> String {
     format!(
-        "{global}|steps={:?}|probe={:?}|be={}",
+        "{global}|steps={:?}|probe={:?}|be={}|m={}",
         spec.steps,
         spec.probe_every,
-        choice.resolve(&spec.config).label()
+        choice.resolve(&spec.config).label(),
+        spec.method.label()
     )
 }
 
@@ -298,6 +299,9 @@ pub struct JobSummary {
     /// VLM only: (vision, language) mean |∇W|₁ series — the Figure 4b
     /// series, precomputed so a resumed run can still render the chart.
     pub tower_gabs: Option<(Vec<(f64, f64)>, Vec<(f64, f64)>)>,
+    /// Validation passes the run issued (0 for every validation-free
+    /// method — the stopping-zoo table's headline column).
+    pub val_checks: usize,
     /// How many attempts the job took to complete (1 = first try; > 1
     /// means the bounded retry path re-ran it after failures).
     pub attempts: usize,
@@ -308,6 +312,7 @@ fn stop_cause_str(c: StopCause) -> &'static str {
         StopCause::BudgetExhausted => "budget",
         StopCause::AllComponentsFrozen => "frozen",
         StopCause::ValidationPatience => "patience",
+        StopCause::SamplesExhausted => "instances",
     }
 }
 
@@ -316,6 +321,7 @@ fn parse_stop_cause(s: &str) -> Result<StopCause> {
         "budget" => Ok(StopCause::BudgetExhausted),
         "frozen" => Ok(StopCause::AllComponentsFrozen),
         "patience" => Ok(StopCause::ValidationPatience),
+        "instances" => Ok(StopCause::SamplesExhausted),
         other => bail!("unknown stop cause {other:?}"),
     }
 }
@@ -408,6 +414,7 @@ impl JobSummary {
             accuracies: r.accuracies.clone(),
             frozen_series,
             tower_gabs,
+            val_checks: o.async_eval.issued,
             attempts: 1,
         }
     }
@@ -460,7 +467,10 @@ impl JobSummary {
                 ..Default::default()
             },
             timings: Default::default(),
-            async_eval: Default::default(),
+            async_eval: crate::runtime::async_eval::AsyncEvalStats {
+                issued: self.val_checks,
+                ..Default::default()
+            },
         };
         Ok(JobResult {
             config: self.config.clone(),
@@ -521,6 +531,7 @@ impl JobSummary {
             t.insert("language".to_string(), series_to_json(lang));
             m.insert("tower_gabs".to_string(), Json::Obj(t));
         }
+        m.insert("val_checks".to_string(), Json::Num(self.val_checks as f64));
         m.insert("attempts".to_string(), Json::Num(self.attempts as f64));
         Json::Obj(m)
     }
@@ -601,6 +612,12 @@ impl JobSummary {
             accuracies,
             frozen_series,
             tower_gabs,
+            // pre-zoo manifests lack the counter; 0 keeps them loadable
+            // (their methods' tables never rendered it)
+            val_checks: match j.opt("val_checks") {
+                Some(v) => v.as_usize()?,
+                None => 0,
+            },
             // pre-retry manifests lack the field; one attempt is what
             // their jobs took
             attempts: match j.opt("attempts") {
@@ -1726,6 +1743,7 @@ mod tests {
             accuracies: vec![("AgreeDet".into(), 61.5), ("Avg.".into(), 58.25)],
             frozen_series: vec![(10, 0.0), (120, 0.9)],
             tower_gabs: None,
+            val_checks: 2,
             attempts: 1,
         }
     }
@@ -1908,12 +1926,12 @@ mod tests {
             JobSpec::train("x", "c", StoppingMethod::GradEs, EvalKind::None).with_steps(40);
         assert_eq!(
             job_settings(&spec, "G", BackendChoice::Host),
-            "G|steps=Some(40)|probe=None|be=host"
+            "G|steps=Some(40)|probe=None|be=host|m=grades"
         );
         let plain = JobSpec::train("y", "c", StoppingMethod::GradEs, EvalKind::None);
         assert_eq!(
             job_settings(&plain, "", BackendChoice::Xla),
-            "|steps=None|probe=None|be=xla"
+            "|steps=None|probe=None|be=xla|m=grades"
         );
         // a host cell can never satisfy an xla run's expectation
         assert_ne!(

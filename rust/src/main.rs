@@ -99,7 +99,7 @@ fn exp_options(args: &Args) -> Result<ExpOptions> {
 fn cmd_train(args: &Args) -> Result<()> {
     let config = args.get("config").ok_or_else(|| anyhow!("--config required"))?;
     let method = StoppingMethod::parse(args.get("method").unwrap_or("grades"))
-        .ok_or_else(|| anyhow!("--method must be base|es|grades"))?;
+        .ok_or_else(|| anyhow!("--method must be base|es|grades|eb|spectral|ies"))?;
     let cfg = RepoConfig::by_name(config)?;
     // `auto` (the default) runs the compiled artifacts when they exist
     // and the pure-Rust host backend otherwise; `--backend host|xla`

@@ -300,12 +300,27 @@ impl HostBackend {
     /// Build the engine for a `configs/*.toml` config — any
     /// `lm`/`vlm` × `fp`/`lora` cell.
     pub fn for_config(cfg: &RepoConfig) -> Result<Self> {
-        Self::from_parts(&cfg.name, &cfg.model, &cfg.train)
+        Self::from_parts_gvar(&cfg.name, &cfg.model, &cfg.train, cfg.eb.gvar)
     }
 
     /// Build from raw `[model]`/`[train]` tables (tests and benches use
-    /// this to make micro-sized engines without a config file).
+    /// this to make micro-sized engines without a config file). The
+    /// layout carries no gradient-variance block — byte-identical to
+    /// every pre-zoo engine.
     pub fn from_parts(name: &str, model: &ModelConfig, train: &TrainConfig) -> Result<Self> {
+        Self::from_parts_gvar(name, model, train, false)
+    }
+
+    /// [`HostBackend::from_parts`] with an optional per-component
+    /// gradient-variance (`gvar`) block appended to the metrics prefix —
+    /// the exact EB-criterion statistic (`[eb] gvar = true`). Off, the
+    /// layout is bitwise-identical to `from_parts`.
+    pub fn from_parts_gvar(
+        name: &str,
+        model: &ModelConfig,
+        train: &TrainConfig,
+        gvar: bool,
+    ) -> Result<Self> {
         ensure!(
             model.kind == "lm" || model.kind == "vlm",
             "unknown model kind {:?} in config {name:?} (expected \"lm\" or \"vlm\")",
@@ -399,7 +414,7 @@ impl HostBackend {
         // --- offsets: [metrics | params (all) | opt slot(s) (trainable)
         //               | prev grads (trainable ∧ monitored)] ---
         let n_c = components.len();
-        let metrics_len = METRIC_PAD + 2 * n_c;
+        let metrics_len = METRIC_PAD + 2 * n_c + if gvar { n_c } else { 0 };
         let ctrl_len = CTRL_PAD + n_c;
         let mut off = metrics_len;
         let mut host_specs: Vec<HostSpec> = specs
@@ -549,6 +564,7 @@ impl HostBackend {
             n_components: n_c,
             gdiff_offset: METRIC_PAD,
             gabs_offset: METRIC_PAD + n_c,
+            gvar_offset: gvar.then_some(METRIC_PAD + 2 * n_c),
             ctrl_mask_offset: CTRL_PAD,
             components,
             params,
@@ -865,8 +881,9 @@ impl HostBackend {
     /// a gradient, fanned out over up to `threads` scoped workers. `ns`
     /// starts as a copy of `s`; each worker owns one contiguous run of
     /// specs and writes its disjoint windows of every state region.
-    /// Returns `(gnorm, gdiff, gabs)` folded in spec order on the calling
-    /// thread — bitwise identical for every thread count.
+    /// Returns `(gnorm, gdiff, gabs, gvar)` folded in spec order on the
+    /// calling thread — bitwise identical for every thread count (`gvar`
+    /// is all-zero unless the layout carries a gvar block).
     #[allow(clippy::too_many_arguments)]
     fn apply_updates(
         &self,
@@ -878,7 +895,7 @@ impl HostBackend {
         t_step: f32,
         lr: f32,
         wd: f32,
-    ) -> (f64, Vec<f32>, Vec<f32>) {
+    ) -> (f64, Vec<f32>, Vec<f32>, Vec<f32>) {
         let n_c = self.manifest.n_components;
         let chunks = self.spec_chunks(threads);
         let nch = chunks.len();
@@ -1000,15 +1017,17 @@ impl HostBackend {
         let mut gnorm = 0f64;
         let mut gdiff = vec![0f32; n_c];
         let mut gabs = vec![0f32; n_c];
+        let mut gvar = vec![0f32; n_c];
         for (idx, st) in stats.into_iter().flatten() {
             let spec = &self.specs[idx];
             gnorm += st.gnorm;
             if let (Some(_), Some(ci)) = (spec.prev_offset, spec.component) {
                 gdiff[ci] += st.dsum as f32;
                 gabs[ci] += st.gnorm as f32;
+                gvar[ci] += st.vsum as f32;
             }
         }
-        (gnorm, gdiff, gabs)
+        (gnorm, gdiff, gabs, gvar)
     }
 
     /// One worker's share of [`Self::apply_updates`]: the same
@@ -1034,12 +1053,21 @@ impl HostBackend {
             let mval = spec.component.map_or(1.0, |ci| mask[ci]);
             let lo = spec.offset - out.p0;
             let olo = spec.opt_offsets[0] - out.o0;
-            let mut st = SpecStats { gnorm: kernels::abs_sum8(g), dsum: 0.0 };
+            let mut st = SpecStats { gnorm: kernels::abs_sum8(g), dsum: 0.0, vsum: 0.0 };
             // Eq. 1 statistics + prev-grad carry (frozen components keep
             // their stale prev, exactly like the compiled graph)
             if let Some(poff) = spec.prev_offset {
                 let prev = &s[poff..poff + spec.size];
                 st.dsum = kernels::abs_diff_sum8(g, prev);
+                if self.manifest.gvar_offset.is_some() {
+                    const EPS: f64 = 1e-12;
+                    let mut v = 0f64;
+                    for (&gi, &pi) in g.iter().zip(prev.iter()) {
+                        let (gi, di) = (gi as f64, (gi - pi) as f64);
+                        v += gi * gi / (0.5 * di * di + EPS);
+                    }
+                    st.vsum = v;
+                }
                 let plo = poff - out.prev0;
                 let nprev = &mut out.prev[plo..plo + spec.size];
                 for (i, (&gi, &pi)) in g.iter().zip(prev.iter()).enumerate() {
@@ -1414,6 +1442,11 @@ struct SpecStats {
     gnorm: f64,
     /// Σ|g − prev| over the spec (monitored specs only; 0 otherwise).
     dsum: f64,
+    /// EB-criterion statistic Σ g²/(½(g−prev)² + ε) — the per-parameter
+    /// signal-to-variance ratio with ½(g−prev)² as the step-local
+    /// batch-variance proxy. Computed only when the layout carries a
+    /// gvar block; 0 otherwise.
+    vsum: f64,
 }
 
 /// One update worker's write windows into the next state: a contiguous
@@ -1794,7 +1827,7 @@ impl Backend for HostBackend {
             .map(|(_, sp)| sp.size)
             .sum();
         let threads = kernels::threads_for(active * 4);
-        let (gnorm, gdiff, gabs) =
+        let (gnorm, gdiff, gabs, gvar) =
             self.apply_updates(threads, &mut ns, s, &grads, mask, t_step, lr, wd);
         // metrics prefix, rebuilt from zeros every step like steps.py
         ns[0] = loss_sum;
@@ -1803,6 +1836,9 @@ impl Backend for HostBackend {
         ns[3] = 0.0;
         ns[m.gdiff_offset..m.gdiff_offset + n_c].copy_from_slice(&gdiff);
         ns[m.gabs_offset..m.gabs_offset + n_c].copy_from_slice(&gabs);
+        if let Some(go) = m.gvar_offset {
+            ns[go..go + n_c].copy_from_slice(&gvar);
+        }
         Ok(BackendState::new(ns))
     }
 
@@ -2229,6 +2265,36 @@ mod tests {
     }
 
     #[test]
+    fn gvar_layout_is_opt_in_and_fills_per_component() {
+        let model = micro_model("lm", 1);
+        let train = micro_train("adamw", "fp");
+        let be = HostBackend::from_parts_gvar("lm-micro-gvar", &model, &train, true).unwrap();
+        let m = be.manifest();
+        let n_c = m.n_components;
+        assert_eq!(m.gvar_offset, Some(METRIC_PAD + 2 * n_c));
+        assert_eq!(m.metrics_len, METRIC_PAD + 3 * n_c);
+        // without the flag the layout is bitwise-unchanged — `[eb] gvar`
+        // is an explicit upgrade, not a default migration
+        let plain = HostBackend::from_parts("lm-micro", &model, &train).unwrap();
+        assert_eq!(plain.manifest().gvar_offset, None);
+        assert_eq!(plain.manifest().metrics_len, METRIC_PAD + 2 * n_c);
+
+        let batch = micro_batch(&be, 4);
+        let io = be.upload_batch(&batch).unwrap();
+        let mut state = be.init_state(3).unwrap();
+        for t in 1..=2 {
+            let ctrl = be.upload_ctrl(&full_ctrl(m, t as f32, 1e-2)).unwrap();
+            state = be.train_step(&state, &io, &ctrl, &all_active(&be)).unwrap();
+        }
+        let metrics = be.probe(&state).unwrap();
+        let go = m.gvar_offset.unwrap();
+        for c in 0..n_c {
+            let v = metrics[go + c];
+            assert!(v.is_finite() && v > 0.0, "component {c}: gvar = {v}");
+        }
+    }
+
+    #[test]
     fn freeze_mask_keeps_component_bits_identical() {
         let be = micro("adamw");
         let m = be.manifest();
@@ -2502,11 +2568,11 @@ mod tests {
                 be.backward(&s, &fwd, dlogits, &batch.tokens, &batch.patches, &all_active(&be));
 
             let mut base = s.clone();
-            let (gn1, gd1, ga1) =
+            let (gn1, gd1, ga1, _) =
                 be.apply_updates(1, &mut base, &s, &grads, mask, 1.0, 1e-2, 1e-2);
             for threads in [2, 3, 8] {
                 let mut ns = s.clone();
-                let (gn, gd, ga) =
+                let (gn, gd, ga, _) =
                     be.apply_updates(threads, &mut ns, &s, &grads, mask, 1.0, 1e-2, 1e-2);
                 assert_eq!(gn.to_bits(), gn1.to_bits(), "{optimizer}/{threads} gnorm");
                 assert!(gd.iter().zip(&gd1).all(|(x, y)| x.to_bits() == y.to_bits()));

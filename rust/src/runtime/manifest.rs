@@ -102,6 +102,11 @@ pub struct Manifest {
     pub gdiff_offset: usize,
     /// Offset of the Gabs block inside the metrics prefix.
     pub gabs_offset: usize,
+    /// Offset of the per-component gradient-variance block (EB criterion
+    /// statistic), when the layout carries one (`[eb] gvar = true`).
+    /// `None` on every pre-existing artifact — the EB monitor then falls
+    /// back to its Gdiff/Gabs evidence estimate.
+    pub gvar_offset: Option<usize>,
     /// Offset of the freeze mask inside the ctrl vector.
     pub ctrl_mask_offset: usize,
     /// Monitored components, in index order.
@@ -212,6 +217,7 @@ impl Manifest {
             n_components: j.get("n_components")?.as_usize()?,
             gdiff_offset: metrics.get("gdiff_offset")?.as_usize()?,
             gabs_offset: metrics.get("gabs_offset")?.as_usize()?,
+            gvar_offset: metrics.opt("gvar_offset").map(|v| v.as_usize()).transpose()?,
             ctrl_mask_offset: j.get("ctrl")?.get("mask_offset")?.as_usize()?,
             components,
             params,

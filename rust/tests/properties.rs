@@ -79,6 +79,7 @@ fn manifest(n_layers: usize) -> grades::runtime::manifest::Manifest {
         n_components: n,
         gdiff_offset: 4,
         gabs_offset: 4 + n,
+        gvar_offset: None,
         ctrl_mask_offset: 4,
         components,
         params: vec![],
@@ -113,7 +114,7 @@ fn drive_plan_soundness(granularity: &str, seed: u64) {
             cfg.metric = "l1_abs".into();
             cfg.unfreeze_factor = 1.5;
         }
-        let mut mon = GradesMonitor::new(&cfg, &m, 100);
+        let mut mon = GradesMonitor::new(&cfg, &m, 100).unwrap();
         let mut fs = FreezeState::new(n);
         // note: the *raw* planner (elision unconditionally on) — the
         // soundness property must hold even when frozen components can
@@ -171,7 +172,7 @@ fn prop_monitor_never_freezes_during_grace_period() {
         let m = manifest(1 + rng.below(4));
         let alpha = rng.f64();
         let total = 50 + rng.below(500);
-        let mut mon = GradesMonitor::new(&grades_cfg(1e9, alpha, 0), &m, total);
+        let mut mon = GradesMonitor::new(&grades_cfg(1e9, alpha, 0), &m, total).unwrap();
         let mut fs = FreezeState::new(m.n_components);
         let metrics = vec![0f32; m.metrics_len]; // all zero → below any τ
         let grace = mon.grace_steps();
@@ -193,7 +194,7 @@ fn prop_frozen_set_is_monotone_without_unfreeze() {
     let mut rng = Rng::new(2);
     for _ in 0..30 {
         let m = manifest(2);
-        let mut mon = GradesMonitor::new(&grades_cfg(rng.f64() * 5.0, 0.0, rng.below(3)), &m, 100);
+        let mut mon = GradesMonitor::new(&grades_cfg(rng.f64() * 5.0, 0.0, rng.below(3)), &m, 100).unwrap();
         let mut fs = FreezeState::new(m.n_components);
         let mut prev_frozen = 0;
         for t in 1..=60 {
@@ -221,7 +222,7 @@ fn prop_tau_zero_never_freezes_anything() {
     for _ in 0..30 {
         let m = manifest(1 + rng.below(3));
         let alpha = rng.f64() * 0.5;
-        let mut mon = GradesMonitor::new(&grades_cfg(0.0, alpha, rng.below(3)), &m, 80);
+        let mut mon = GradesMonitor::new(&grades_cfg(0.0, alpha, rng.below(3)), &m, 80).unwrap();
         let mut fs = FreezeState::new(m.n_components);
         for t in 1..=80 {
             let mut metrics = vec![0f32; m.metrics_len];
@@ -244,7 +245,7 @@ fn prop_tau_infinite_freezes_everything_at_first_eligible_step() {
         let m = manifest(1 + rng.below(3));
         let total = 20 + rng.below(60);
         let alpha = rng.f64() * 0.8;
-        let mut mon = GradesMonitor::new(&grades_cfg(f64::INFINITY, alpha, 0), &m, total);
+        let mut mon = GradesMonitor::new(&grades_cfg(f64::INFINITY, alpha, 0), &m, total).unwrap();
         let mut fs = FreezeState::new(m.n_components);
         let first_eligible = mon.grace_steps() + 1;
         for t in 1..=first_eligible {
@@ -338,7 +339,7 @@ fn prop_candidate_bitmap_matches_naive_rescan() {
             cfg.granularity = "layer".into();
         }
         let total = 60;
-        let mut mon = GradesMonitor::new(&cfg, &m, total);
+        let mut mon = GradesMonitor::new(&cfg, &m, total).unwrap();
         let mut fs = FreezeState::new(m.n_components);
         let layers: Vec<Vec<usize>> = (0..n_layers)
             .map(|l| m.components_where(|c| c.layer == l))

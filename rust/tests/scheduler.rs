@@ -82,6 +82,7 @@ fn fake_summary(spec: &JobSpec, r: &JobResult) -> JobSummary {
         accuracies: r.accuracies.clone(),
         frozen_series: Vec::new(),
         tower_gabs: None,
+        val_checks: 0,
         attempts: 1,
     }
 }
