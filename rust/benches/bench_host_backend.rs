@@ -11,11 +11,18 @@
 //! the per-matrix freeze steps disagree, so CI catches a physics drift
 //! between the engines, not just a slowdown.
 //!
+//! Alongside the engine rows it measures two kernel-layer microbenches
+//! — an attention-bound pass (fused attention fwd+bwd) and an MLP-bound
+//! pass (gate/up/down matmuls + SwiGLU fwd+bwd) — so regressions in
+//! either kernel family show up even when full-step timing hides them.
+//!
 //! `--quick` shortens the measured loops (CI smoke mode). `--gate`
 //! additionally compares every `*_steps_per_sec` number against the
 //! committed baseline in `artifacts/bench_baselines/` and fails on a
 //! >10% regression (self-skips with a note when no baseline exists —
-//! the gate never invents numbers).
+//! the gate never invents numbers). `--write-baseline` rewrites that
+//! committed file with the numbers just measured (gate format), for
+//! recording a real CI-class baseline on the gate's own hardware.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -95,6 +102,7 @@ fn grades_run(
 fn main() -> Result<()> {
     let quick = std::env::args().any(|a| a == "--quick");
     let gate = std::env::args().any(|a| a == "--gate");
+    let write_baseline = std::env::args().any(|a| a == "--write-baseline");
     let iters = if quick { 8 } else { 30 };
     let traj_steps = if quick { 12 } else { 30 };
     let mut report: BTreeMap<String, Json> = BTreeMap::new();
@@ -156,6 +164,79 @@ fn main() -> Result<()> {
         report.insert("simd_4t_steps_per_sec".into(), Json::Num(simd_4t));
         report.insert("simd_speedup_vs_scalar_1t".into(), Json::Num(simd_4t / scalar_1t));
         report.insert("simd_level".into(), Json::Str(level.as_str().into()));
+    }
+
+    // --- kernel microbenches: attention-bound and MLP-bound rows ---
+    // Direct kernel-layer loops (no optimizer, no data pipeline) so the
+    // fused-attention and SwiGLU/matmul paths are measured in isolation:
+    // one "step" is a full forward + backward through the block. Shapes
+    // are larger than lm-tiny so the kernels, not the glue, dominate.
+    {
+        use grades::runtime::host_arena::{buf_raw, buf_zeroed};
+        use grades::util::rng::Rng;
+        let mut rng = Rng::new(0xbe7c);
+        let mut randv = |n: usize| -> Vec<f32> { (0..n).map(|_| rng.gauss() as f32).collect() };
+        let reps = if quick { 20 } else { 200 };
+
+        let (b, t, h, hd) = (2usize, 64usize, 4usize, 16usize);
+        let d = h * hd;
+        let (q, k, v) = (randv(b * t * d), randv(b * t * d), randv(b * t * d));
+        let dctx = randv(b * t * d);
+        let attn_pass = || {
+            let mut ctx_hm = buf_raw(b * h * t * hd);
+            let mut stats = buf_raw(b * h * 2 * t);
+            let mut scratch = buf_raw(b * h * t);
+            kernels::fused_attention_fwd(
+                &q, &k, &v, b, t, h, hd, true, &mut ctx_hm, &mut stats, &mut scratch,
+            );
+            let mut ctx = buf_raw(b * t * d);
+            kernels::gather_heads(&ctx_hm, b, t, h, hd, &mut ctx);
+            let mut dq = buf_zeroed(b * h * t * hd);
+            let mut dk = buf_zeroed(b * h * t * hd);
+            let mut dv = buf_zeroed(b * h * t * hd);
+            let mut bscr = buf_raw(b * h * 2 * t);
+            kernels::fused_attention_bwd(
+                &q, &k, &v, &stats, &dctx, b, t, h, hd, true, &mut dq, &mut dk, &mut dv,
+                &mut bscr,
+            );
+        };
+        attn_pass(); // warm the arena pools before timing
+        let t0 = Timer::new();
+        for _ in 0..reps {
+            attn_pass();
+        }
+        let attn_ps = reps as f64 / t0.secs();
+
+        let (m, f) = (b * t, 4 * d);
+        let x = randv(m * d);
+        let (wg, wu, wdn) = (randv(d * f), randv(d * f), randv(f * d));
+        let dout = randv(m * d);
+        let mlp_pass = || {
+            let gp = kernels::matmul(&x, &wg, m, d, f);
+            let upv = kernels::matmul(&x, &wu, m, d, f);
+            let mut sig = buf_raw(m * f);
+            let mut act = buf_raw(m * f);
+            kernels::swiglu_fwd(&gp, &upv, &mut sig, &mut act);
+            let y = kernels::matmul(&act, &wdn, m, f, d);
+            let d_act = kernels::matmul_nt(&dout, &wdn, m, d, f);
+            let mut dgp = buf_raw(m * f);
+            let mut dup = buf_raw(m * f);
+            kernels::swiglu_bwd(&d_act, &gp, &upv, &sig, &mut dgp, &mut dup);
+            y
+        };
+        let _warm = mlp_pass();
+        let t0 = Timer::new();
+        for _ in 0..reps {
+            let _ = mlp_pass();
+        }
+        let mlp_ps = reps as f64 / t0.secs();
+
+        println!(
+            "host  microbench: attention-bound {attn_ps:8.2} | mlp-bound {mlp_ps:8.2} passes/s \
+             (b={b} t={t} h={h} hd={hd} f={f})"
+        );
+        report.insert("attention_bound_steps_per_sec".into(), Json::Num(attn_ps));
+        report.insert("mlp_bound_steps_per_sec".into(), Json::Num(mlp_ps));
     }
 
     // --- LoRA engine steps/sec ---
@@ -238,6 +319,36 @@ fn main() -> Result<()> {
     let out = repo_root().join("BENCH_host_backend.json");
     std::fs::write(&out, json::write(&Json::Obj(report.clone())))?;
     println!("wrote {}", out.display());
+
+    // --- record a real baseline in the gate's format ---
+    if write_baseline {
+        let base_path = repo_root()
+            .join("artifacts")
+            .join("bench_baselines")
+            .join("BENCH_host_backend.json");
+        let mut base: BTreeMap<String, Json> = BTreeMap::new();
+        for (key, val) in &report {
+            if key.ends_with("_steps_per_sec") {
+                base.insert(key.clone(), val.clone());
+            }
+        }
+        base.insert(
+            "note".into(),
+            Json::Str(
+                "Recorded by `bench_host_backend --write-baseline`: raw measured steps/sec \
+                 on the recording host. The --gate check fails on a >10% regression against \
+                 these numbers, so re-record on the machine the gate runs on."
+                    .into(),
+            ),
+        );
+        if let Some(level) = report.get("simd_level") {
+            base.insert("simd_level".into(), level.clone());
+        }
+        base.insert("quick".into(), Json::Bool(quick));
+        std::fs::create_dir_all(base_path.parent().unwrap())?;
+        std::fs::write(&base_path, json::write(&Json::Obj(base)))?;
+        println!("wrote baseline {}", base_path.display());
+    }
 
     // --- regression gate against the committed baseline ---
     if gate {

@@ -57,17 +57,23 @@
 //! trajectory-changing choice, which is why it is never granted by
 //! default. An all-active plan reproduces the dense path bitwise.
 //!
-//! All matmuls, the Eq. 1 L1 reductions and the hot dot products run on
-//! the SIMD microkernel layer in
-//! [`host_kernels`](super::host_kernels): one cache-blocked, 8-lane
-//! f64-accumulating row·row kernel, runtime-dispatched over
-//! scalar/SSE2/AVX2 (`GRADES_HOST_SIMD`) and fanned out over
-//! `GRADES_HOST_THREADS` scoped workers. The lane-split reduction order
-//! is fixed, so results are **bitwise identical for every SIMD level
-//! and every thread count** (asserted here and in
-//! `rust/tests/properties.rs`). The freeze-masked optimizer update and
-//! gdiff/gabs statistics thread over the same pool, partitioned at
-//! whole-tensor granularity.
+//! All matmuls, the fused attention passes, the SwiGLU/softmax
+//! elementwise math, the Eq. 1 L1 reductions and the hot dot products
+//! run on the SIMD microkernel layer in
+//! [`host_kernels`](super::host_kernels): a cache-blocked, 8-lane
+//! f64-accumulating row·row kernel plus the row-blocked fused-attention
+//! and vectorized-exp family, runtime-dispatched over scalar/SSE2/AVX2
+//! (`GRADES_HOST_SIMD`) and fanned out over `GRADES_HOST_THREADS`
+//! scoped workers (attention over `(batch, head)` pairs). The
+//! lane-split reduction order is fixed, so results are **bitwise
+//! identical for every SIMD level and every thread count** (asserted
+//! here and in `rust/tests/properties.rs`). The freeze-masked optimizer
+//! update and gdiff/gabs statistics thread over the same pool,
+//! partitioned at whole-tensor granularity. Every activation, gradient
+//! and packing buffer is carved from the step-scoped workspace arena in
+//! [`host_arena`](super::host_arena) (`GRADES_HOST_ARENA=0` opt-out),
+//! so the steady-state training loop performs zero per-step heap
+//! growth — with no effect on results, bitwise.
 //!
 //! # Where it may diverge numerically
 //!
@@ -83,7 +89,8 @@
 use anyhow::{ensure, Result};
 
 use super::backend::{Backend, BackendState, CtrlBuf, UploadedBatch};
-use super::host_kernels::{self as kernels, matmul, matmul_nt, matmul_tn};
+use super::host_arena::{buf_raw, buf_zeroed, Buf};
+use super::host_kernels::{self as kernels};
 use super::manifest::{Component, FlopsInfo, Manifest, ParamInfo};
 use super::session::Batch;
 use crate::config::{ModelConfig, RepoConfig, TrainConfig};
@@ -632,7 +639,7 @@ impl HostBackend {
 
     /// `lora.py merge_lora`: one merged `W + (α/r)·A@B` per component.
     /// Empty for fp layouts (every weight reads straight from state).
-    fn merged_weights(&self, state: &[f32]) -> Vec<Vec<f32>> {
+    fn merged_weights(&self, state: &[f32]) -> Vec<Buf> {
         let Some(lora) = &self.lora else { return Vec::new() };
         lora.sites
             .iter()
@@ -640,9 +647,13 @@ impl HostBackend {
                 let base = &self.specs[site.base];
                 let (din, dout) = (base.shape[0], base.shape[1]);
                 let ab =
-                    matmul(self.param(state, site.a), self.param(state, site.b), din, lora.rank, dout);
+                    mm(self.param(state, site.a), self.param(state, site.b), din, lora.rank, dout);
                 let w = self.param(state, site.base);
-                w.iter().zip(ab.iter()).map(|(&wi, &abi)| wi + lora.scale * abi).collect()
+                let mut out = buf_raw(w.len());
+                for ((o, &wi), &abi) in out.iter_mut().zip(w.iter()).zip(ab.iter()) {
+                    *o = wi + lora.scale * abi;
+                }
+                out
             })
             .collect()
     }
@@ -650,10 +661,10 @@ impl HostBackend {
     /// The weight the forward/backward graph multiplies by for spec
     /// `idx`: the merged adapter form when LoRA owns it, else the raw
     /// parameter slice.
-    fn weight<'s>(&self, state: &'s [f32], merged: &'s [Vec<f32>], idx: usize) -> &'s [f32] {
+    fn weight<'s>(&self, state: &'s [f32], merged: &'s [Buf], idx: usize) -> &'s [f32] {
         if !merged.is_empty() {
             if let Some(ci) = self.wcomp[idx] {
-                return &merged[ci];
+                return &merged[ci][..];
             }
         }
         self.param(state, idx)
@@ -666,16 +677,16 @@ impl HostBackend {
     fn tower_fwd(
         &self,
         state: &[f32],
-        merged: &[Vec<f32>],
+        merged: &[Buf],
         layers_idx: &[LayerIdx],
-        mut x: Vec<f32>,
+        mut x: Buf,
         b: usize,
         t: usize,
         d: usize,
         h: usize,
         f: usize,
         causal: bool,
-    ) -> (Vec<Vec<f32>>, Vec<LayerFwd>) {
+    ) -> (Vec<Buf>, Vec<LayerFwd>) {
         let m = b * t;
         let hd = d / h;
         let l = layers_idx.len();
@@ -683,29 +694,54 @@ impl HostBackend {
         let mut layers = Vec::with_capacity(l);
         for lr in layers_idx {
             let (h1, r1) = rms_norm(&x, self.param(state, lr.ln1), m, d);
-            let q = matmul(&h1, self.weight(state, merged, lr.wq), m, d, d);
-            let k = matmul(&h1, self.weight(state, merged, lr.wk), m, d, d);
-            let vv = matmul(&h1, self.weight(state, merged, lr.wv), m, d, d);
-            let (probs, ctx) = attention_fwd(&q, &k, &vv, b, t, h, hd, causal);
-            let attn_out = matmul(&ctx, self.weight(state, merged, lr.wo), m, d, d);
+            let q = mm(&h1, self.weight(state, merged, lr.wq), m, d, d);
+            let k = mm(&h1, self.weight(state, merged, lr.wk), m, d, d);
+            let vv = mm(&h1, self.weight(state, merged, lr.wv), m, d, d);
+            // fused attention: head-major context + per-row (max, 1/Σ)
+            // stats — backward replays the probabilities from these, so
+            // no T×T probability matrix is ever stored
+            let mut ctx_hm = buf_raw(b * h * t * hd);
+            let mut att_stats = buf_raw(b * h * 2 * t);
+            let mut scratch = buf_raw(b * h * t);
+            kernels::fused_attention_fwd(
+                &q, &k, &vv, b, t, h, hd, causal, &mut ctx_hm, &mut att_stats, &mut scratch,
+            );
+            let mut ctx = buf_raw(m * d);
+            kernels::gather_heads(&ctx_hm, b, t, h, hd, &mut ctx);
+            let attn_out = mm(&ctx, self.weight(state, merged, lr.wo), m, d, d);
             let mut x_mid = x.clone();
             for i in 0..m * d {
                 x_mid[i] += attn_out[i];
             }
             let (h2, r2) = rms_norm(&x_mid, self.param(state, lr.ln2), m, d);
-            let gate_pre = matmul(&h2, self.weight(state, merged, lr.wg), m, d, f);
-            let up = matmul(&h2, self.weight(state, merged, lr.wu), m, d, f);
-            let mut act = vec![0f32; m * f];
-            for i in 0..m * f {
-                act[i] = silu(gate_pre[i]) * up[i];
-            }
-            let mlp_out = matmul(&act, self.weight(state, merged, lr.wd), m, f, d);
+            let gate_pre = mm(&h2, self.weight(state, merged, lr.wg), m, d, f);
+            let up = mm(&h2, self.weight(state, merged, lr.wu), m, d, f);
+            // SwiGLU with the sigmoid stashed for backward
+            let mut sig = buf_raw(m * f);
+            let mut act = buf_raw(m * f);
+            kernels::swiglu_fwd(&gate_pre, &up, &mut sig, &mut act);
+            let mlp_out = mm(&act, self.weight(state, merged, lr.wd), m, f, d);
             let mut x_out = x_mid.clone();
             for i in 0..m * d {
                 x_out[i] += mlp_out[i];
             }
             xs.push(std::mem::replace(&mut x, x_out));
-            layers.push(LayerFwd { h1, r1, q, k, v: vv, probs, ctx, x_mid, h2, r2, gate_pre, up, act });
+            layers.push(LayerFwd {
+                h1,
+                r1,
+                q,
+                k,
+                v: vv,
+                att_stats,
+                ctx,
+                x_mid,
+                h2,
+                r2,
+                gate_pre,
+                up,
+                sig,
+                act,
+            });
         }
         xs.push(x);
         (xs, layers)
@@ -723,7 +759,7 @@ impl HostBackend {
             // embeddings in one causal language stream.
             let VisDims { p, pd, dv, vh, vf, .. } = vlm.dims;
             let mv = b * p;
-            let mut xv = matmul(patches, self.weight(state, &merged, vlm.vis_in), mv, pd, dv);
+            let mut xv = mm(patches, self.weight(state, &merged, vlm.vis_in), mv, pd, dv);
             let vpos = self.param(state, vlm.vis_pos);
             for bi in 0..b {
                 for pi in 0..p {
@@ -737,11 +773,12 @@ impl HostBackend {
                 self.tower_fwd(state, &merged, &vlm.layers, xv, b, p, dv, vh, vf, false);
             let (hv, rv) =
                 rms_norm(vxs.last().unwrap(), self.param(state, vlm.vis_ln_f), mv, dv);
-            let prefix = matmul(&hv, self.weight(state, &merged, vlm.vis_proj), mv, dv, d);
+            let prefix = mm(&hv, self.weight(state, &merged, vlm.vis_proj), mv, dv, d);
 
-            // concat([prefix, tok_emb[tokens]]) + pos_emb[:p+t]
+            // concat([prefix, tok_emb[tokens]]) + pos_emb[:p+t] — every
+            // row is written below, so the carve can stay raw
             let pt = p + t;
-            let mut x = vec![0f32; b * pt * d];
+            let mut x = buf_raw(b * pt * d);
             for bi in 0..b {
                 for ri in 0..pt {
                     let row = bi * pt + ri;
@@ -758,8 +795,8 @@ impl HostBackend {
             }
             let (xs, layers) = self.tower_fwd(state, &merged, &self.layers, x, b, pt, d, h, f, true);
             let (hf, rf) = rms_norm(xs.last().unwrap(), self.param(state, self.ln_f), b * pt, d);
-            // logits over the text rows only
-            let mut hft = vec![0f32; b * t * d];
+            // logits over the text rows only (every row written → raw)
+            let mut hft = buf_raw(b * t * d);
             for bi in 0..b {
                 for ti in 0..t {
                     let src = (bi * pt + p + ti) * d;
@@ -767,7 +804,7 @@ impl HostBackend {
                     hft[dst..dst + d].copy_from_slice(&hf[src..src + d]);
                 }
             }
-            let logits = matmul(&hft, self.weight(state, &merged, self.lm_head), b * t, d, v);
+            let logits = mm(&hft, self.weight(state, &merged, self.lm_head), b * t, d, v);
             return Fwd {
                 xs,
                 layers,
@@ -781,7 +818,7 @@ impl HostBackend {
         }
 
         let m = b * t;
-        let mut x = vec![0f32; m * d];
+        let mut x = buf_raw(m * d);
         for bi in 0..b {
             for ti in 0..t {
                 let row = bi * t + ti;
@@ -793,7 +830,7 @@ impl HostBackend {
         }
         let (xs, layers) = self.tower_fwd(state, &merged, &self.layers, x, b, t, d, h, f, true);
         let (hf, rf) = rms_norm(xs.last().unwrap(), self.param(state, self.ln_f), m, d);
-        let logits = matmul(&hf, self.weight(state, &merged, self.lm_head), m, d, v);
+        let logits = mm(&hf, self.weight(state, &merged, self.lm_head), m, d, v);
         Fwd { xs, layers, hf, rf, hft: None, logits, vis: None, merged }
     }
 
@@ -823,12 +860,13 @@ impl HostBackend {
     /// The loss value is bit-identical to `nll`'s (same max, same
     /// ascending summation), which `eval_step_matches_probe_loss…`
     /// pins.
-    fn loss_grad(&self, logits: &[f32], targets: &[i32]) -> (f32, f32, Vec<f32>) {
+    fn loss_grad(&self, logits: &[f32], targets: &[i32]) -> (f32, f32, Buf) {
         let v = self.dims.v;
         let m = targets.len();
         let count = targets.iter().filter(|&&t| t >= 0).count() as f32;
         let denom = count.max(1.0) as f64;
-        let mut dlogits = vec![0f32; m * v];
+        // masked rows never get written, so the carve must be zeroed
+        let mut dlogits = buf_zeroed(m * v);
         let mut loss = 0f64;
         let mut exps = vec![0f64; v];
         for (row, &tgt) in targets.iter().enumerate() {
@@ -890,7 +928,7 @@ impl HostBackend {
         threads: usize,
         ns: &mut [f32],
         s: &[f32],
-        grads: &[Option<Vec<f32>>],
+        grads: &[Option<Buf>],
         mask: &[f32],
         t_step: f32,
         lr: f32,
@@ -1039,7 +1077,7 @@ impl HostBackend {
         &self,
         out: &mut ChunkOut<'_>,
         s: &[f32],
-        grads: &[Option<Vec<f32>>],
+        grads: &[Option<Buf>],
         mask: &[f32],
         t_step: f32,
         lr: f32,
@@ -1127,7 +1165,7 @@ impl HostBackend {
     fn dw_site(
         &self,
         state: &[f32],
-        grads: &mut [Option<Vec<f32>>],
+        grads: &mut [Option<Buf>],
         plan: &StepPlan,
         widx: usize,
         x: &[f32],
@@ -1143,13 +1181,13 @@ impl HostBackend {
             }
             let site = &lora.sites[ci];
             let (r, sc) = (lora.rank, lora.scale);
-            let tmp = matmul_nt(dy, self.param(state, site.b), m, dout, r);
-            let mut da = matmul_tn(x, &tmp, m, din, r);
+            let tmp = mm_nt(dy, self.param(state, site.b), m, dout, r);
+            let mut da = mm_tn(x, &tmp, m, din, r);
             for g in da.iter_mut() {
                 *g *= sc;
             }
-            let xa = matmul(x, self.param(state, site.a), m, din, r);
-            let mut db = matmul_tn(&xa, dy, m, r, dout);
+            let xa = mm(x, self.param(state, site.a), m, din, r);
+            let mut db = mm_tn(&xa, dy, m, r, dout);
             for g in db.iter_mut() {
                 *g *= sc;
             }
@@ -1161,7 +1199,7 @@ impl HostBackend {
         if !spec.trainable || spec.component.map_or(false, |c| plan.omits(c)) {
             return;
         }
-        grads[widx] = Some(matmul_tn(x, dy, m, din, dout));
+        grads[widx] = Some(mm_tn(x, dy, m, din, dout));
     }
 
     /// One tower's backward sweep (layers `trunc..` in reverse), writing
@@ -1171,12 +1209,12 @@ impl HostBackend {
     fn tower_bwd(
         &self,
         state: &[f32],
-        merged: &[Vec<f32>],
+        merged: &[Buf],
         layers_idx: &[LayerIdx],
-        xs: &[Vec<f32>],
+        xs: &[Buf],
         lfs: &[LayerFwd],
-        mut dx: Vec<f32>,
-        grads: &mut [Option<Vec<f32>>],
+        mut dx: Buf,
+        grads: &mut [Option<Buf>],
         plan: &StepPlan,
         trunc: usize,
         b: usize,
@@ -1185,27 +1223,23 @@ impl HostBackend {
         h: usize,
         f: usize,
         causal: bool,
-    ) -> Vec<f32> {
+    ) -> Buf {
         let m = b * t;
         let hd = d / h;
         for li in (trunc..layers_idx.len()).rev() {
             let lr = &layers_idx[li];
             let lf = &lfs[li];
-            // SwiGLU MLP: x_out = x_mid + (silu(h2·Wg) ⊙ (h2·Wu))·Wd
+            // SwiGLU MLP: x_out = x_mid + (silu(h2·Wg) ⊙ (h2·Wu))·Wd,
+            // with σ(gate_pre) read back from the forward's stash
             self.dw_site(state, grads, plan, lr.wd, &lf.act, &dx, m, f, d);
-            let d_act = matmul_nt(&dx, self.weight(state, merged, lr.wd), m, d, f);
-            let mut d_gp = vec![0f32; m * f];
-            let mut d_up = vec![0f32; m * f];
-            for i in 0..m * f {
-                let z = lf.gate_pre[i];
-                let sg = sigmoid(z);
-                d_up[i] = d_act[i] * z * sg; // silu(z) = z·σ(z)
-                d_gp[i] = d_act[i] * lf.up[i] * sg * (1.0 + z * (1.0 - sg));
-            }
+            let d_act = mm_nt(&dx, self.weight(state, merged, lr.wd), m, d, f);
+            let mut d_gp = buf_raw(m * f);
+            let mut d_up = buf_raw(m * f);
+            kernels::swiglu_bwd(&d_act, &lf.gate_pre, &lf.up, &lf.sig, &mut d_gp, &mut d_up);
             self.dw_site(state, grads, plan, lr.wg, &lf.h2, &d_gp, m, d, f);
             self.dw_site(state, grads, plan, lr.wu, &lf.h2, &d_up, m, d, f);
-            let mut dh2 = matmul_nt(&d_gp, self.weight(state, merged, lr.wg), m, f, d);
-            let dh2b = matmul_nt(&d_up, self.weight(state, merged, lr.wu), m, f, d);
+            let mut dh2 = mm_nt(&d_gp, self.weight(state, merged, lr.wg), m, f, d);
+            let dh2b = mm_nt(&d_up, self.weight(state, merged, lr.wu), m, f, d);
             for i in 0..m * d {
                 dh2[i] += dh2b[i];
             }
@@ -1219,17 +1253,43 @@ impl HostBackend {
                 dx_mid[i] += dxm_norm[i];
             }
 
-            // attention: x_mid = x_in + (softmax(qkᵀ/√hd)·v)·Wo
+            // attention: x_mid = x_in + (softmax(qkᵀ/√hd)·v)·Wo; the
+            // fused backward replays the probabilities from the stashed
+            // per-row stats and accumulates head-major (zeroed carves)
             self.dw_site(state, grads, plan, lr.wo, &lf.ctx, &dx_mid, m, d, d);
-            let dctx = matmul_nt(&dx_mid, self.weight(state, merged, lr.wo), m, d, d);
-            let (dq, dk, dv) =
-                attention_bwd(&lf.q, &lf.k, &lf.v, &lf.probs, &dctx, b, t, h, hd, causal);
+            let dctx = mm_nt(&dx_mid, self.weight(state, merged, lr.wo), m, d, d);
+            let mut dq_hm = buf_zeroed(b * h * t * hd);
+            let mut dk_hm = buf_zeroed(b * h * t * hd);
+            let mut dv_hm = buf_zeroed(b * h * t * hd);
+            let mut scratch = buf_raw(b * h * 2 * t);
+            kernels::fused_attention_bwd(
+                &lf.q,
+                &lf.k,
+                &lf.v,
+                &lf.att_stats,
+                &dctx,
+                b,
+                t,
+                h,
+                hd,
+                causal,
+                &mut dq_hm,
+                &mut dk_hm,
+                &mut dv_hm,
+                &mut scratch,
+            );
+            let mut dq = buf_raw(m * d);
+            let mut dk = buf_raw(m * d);
+            let mut dv = buf_raw(m * d);
+            kernels::gather_heads(&dq_hm, b, t, h, hd, &mut dq);
+            kernels::gather_heads(&dk_hm, b, t, h, hd, &mut dk);
+            kernels::gather_heads(&dv_hm, b, t, h, hd, &mut dv);
             self.dw_site(state, grads, plan, lr.wq, &lf.h1, &dq, m, d, d);
             self.dw_site(state, grads, plan, lr.wk, &lf.h1, &dk, m, d, d);
             self.dw_site(state, grads, plan, lr.wv, &lf.h1, &dv, m, d, d);
-            let mut dh1 = matmul_nt(&dq, self.weight(state, merged, lr.wq), m, d, d);
-            let dh1b = matmul_nt(&dk, self.weight(state, merged, lr.wk), m, d, d);
-            let dh1c = matmul_nt(&dv, self.weight(state, merged, lr.wv), m, d, d);
+            let mut dh1 = mm_nt(&dq, self.weight(state, merged, lr.wq), m, d, d);
+            let dh1b = mm_nt(&dk, self.weight(state, merged, lr.wk), m, d, d);
+            let dh1c = mm_nt(&dv, self.weight(state, merged, lr.wv), m, d, d);
             for i in 0..m * d {
                 dh1[i] += dh1b[i] + dh1c[i];
             }
@@ -1260,14 +1320,14 @@ impl HostBackend {
         &self,
         state: &[f32],
         fwd: &Fwd,
-        dlogits: Vec<f32>,
+        dlogits: Buf,
         tokens: &[i32],
         patches: &[f32],
         plan: &StepPlan,
-    ) -> Vec<Option<Vec<f32>>> {
+    ) -> Vec<Option<Buf>> {
         let Dims { b, t, d, h, f, l, v, s, .. } = self.dims;
         let merged = &fwd.merged;
-        let mut grads: Vec<Option<Vec<f32>>> = (0..self.specs.len()).map(|_| None).collect();
+        let mut grads: Vec<Option<Buf>> = (0..self.specs.len()).map(|_| None).collect();
         let omits = |spec_idx: usize| self.wcomp[spec_idx].map_or(false, |c| plan.omits(c));
         let all_omitted = |lr: &LayerIdx| {
             [lr.wq, lr.wk, lr.wv, lr.wo, lr.wg, lr.wu, lr.wd].iter().all(|&ix| omits(ix))
@@ -1292,9 +1352,10 @@ impl HostBackend {
         let pt = p + t;
         let hft = fwd.hft.as_deref().unwrap_or(&fwd.hf);
         self.dw_site(state, &mut grads, plan, self.lm_head, hft, &dlogits, b * t, d, v);
-        let dhft = matmul_nt(&dlogits, self.weight(state, merged, self.lm_head), b * t, v, d);
+        let dhft = mm_nt(&dlogits, self.weight(state, merged, self.lm_head), b * t, v, d);
         let dhf = if p > 0 {
-            let mut full = vec![0f32; b * pt * d];
+            // only the text rows are written; prefix rows must read zero
+            let mut full = buf_zeroed(b * pt * d);
             for bi in 0..b {
                 for ti in 0..t {
                     let src = (bi * t + ti) * d;
@@ -1324,8 +1385,8 @@ impl HostBackend {
         // gradient; the optimizer still visits them — weight decay
         // applies, as on XLA). Under LoRA they are frozen base weights.
         if self.specs[self.tok_emb].trainable {
-            let mut g_tok = vec![0f32; self.specs[self.tok_emb].size];
-            let mut g_pos = vec![0f32; self.specs[self.pos_emb].size];
+            let mut g_tok = buf_zeroed(self.specs[self.tok_emb].size);
+            let mut g_pos = buf_zeroed(self.specs[self.pos_emb].size);
             debug_assert_eq!(g_pos.len(), s * d);
             for bi in 0..b {
                 for ri in 0..pt {
@@ -1350,7 +1411,8 @@ impl HostBackend {
             let vis = fwd.vis.as_ref().expect("vlm forward cache");
             let VisDims { p, pd, dv, vh, vf, vl } = vlm.dims;
             let mv = b * p;
-            let mut dprefix = vec![0f32; mv * d];
+            // every prefix row is copied below → raw carve
+            let mut dprefix = buf_raw(mv * d);
             for bi in 0..b {
                 for pi in 0..p {
                     let src = (bi * pt + pi) * d;
@@ -1359,7 +1421,7 @@ impl HostBackend {
                 }
             }
             self.dw_site(state, &mut grads, plan, vlm.vis_proj, &vis.hv, &dprefix, mv, dv, d);
-            let dhv = matmul_nt(&dprefix, self.weight(state, merged, vlm.vis_proj), mv, d, dv);
+            let dhv = mm_nt(&dprefix, self.weight(state, merged, vlm.vis_proj), mv, d, dv);
             let (g_vlnf, dxv) =
                 rms_backward(&vis.xs[vl], &vis.rv, self.param(state, vlm.vis_ln_f), &dhv, mv, dv);
             if self.specs[vlm.vis_ln_f].trainable {
@@ -1371,7 +1433,7 @@ impl HostBackend {
             );
             self.dw_site(state, &mut grads, plan, vlm.vis_in, patches, &dxv, mv, pd, dv);
             if self.specs[vlm.vis_pos].trainable {
-                let mut g_vpos = vec![0f32; self.specs[vlm.vis_pos].size];
+                let mut g_vpos = buf_zeroed(self.specs[vlm.vis_pos].size);
                 for bi in 0..b {
                     for pi in 0..p {
                         let row = bi * p + pi;
@@ -1388,46 +1450,51 @@ impl HostBackend {
 }
 
 /// One layer's cached forward activations (what backward consumes).
+/// Every buffer is an arena carve; instead of the old `[B,H,T,T]`
+/// probability matrix, `att_stats` stores two floats per query row —
+/// the softmax `(max, 1/Σ)` the fused backward replays from.
 struct LayerFwd {
-    h1: Vec<f32>,
-    r1: Vec<f32>,
-    q: Vec<f32>,
-    k: Vec<f32>,
-    v: Vec<f32>,
-    probs: Vec<f32>,
-    ctx: Vec<f32>,
-    x_mid: Vec<f32>,
-    h2: Vec<f32>,
-    r2: Vec<f32>,
-    gate_pre: Vec<f32>,
-    up: Vec<f32>,
-    act: Vec<f32>,
+    h1: Buf,
+    r1: Buf,
+    q: Buf,
+    k: Buf,
+    v: Buf,
+    att_stats: Buf,
+    ctx: Buf,
+    x_mid: Buf,
+    h2: Buf,
+    r2: Buf,
+    gate_pre: Buf,
+    up: Buf,
+    /// σ(gate_pre), stashed so backward never recomputes the sigmoid.
+    sig: Buf,
+    act: Buf,
 }
 
 /// Whole-network forward cache. `xs[l]` is language layer `l`'s input;
 /// `xs[L]` the final residual stream (over `P+T` rows for a VLM).
 struct Fwd {
-    xs: Vec<Vec<f32>>,
+    xs: Vec<Buf>,
     layers: Vec<LayerFwd>,
-    hf: Vec<f32>,
-    rf: Vec<f32>,
+    hf: Buf,
+    rf: Buf,
     /// VLM only: the text rows of `hf`, regathered to `[B·T, D]` — the
     /// head's actual input.
-    hft: Option<Vec<f32>>,
-    logits: Vec<f32>,
+    hft: Option<Buf>,
+    logits: Buf,
     /// VLM only: the vision tower's forward cache.
     vis: Option<VisFwd>,
     /// LoRA only: per-component merged `W + (α/r)·A·B` (else empty).
-    merged: Vec<Vec<f32>>,
+    merged: Vec<Buf>,
 }
 
 /// The vision tower's forward cache (`xs`/`layers` as in [`Fwd`], plus
 /// the post-norm activations feeding the projection).
 struct VisFwd {
-    xs: Vec<Vec<f32>>,
+    xs: Vec<Buf>,
     layers: Vec<LayerFwd>,
-    hv: Vec<f32>,
-    rv: Vec<f32>,
+    hv: Buf,
+    rv: Buf,
 }
 
 // ---------------------------------------------------------------------------
@@ -1497,15 +1564,45 @@ fn carve<'a>(buf: &'a mut [f32], ranges: &[(usize, usize)]) -> Vec<&'a mut [f32]
 // ---------------------------------------------------------------------------
 // Math helpers (f32 storage, f64 accumulation)
 // ---------------------------------------------------------------------------
-// The matmuls, thread-pool plumbing and L1 reductions live in
-// `host_kernels`; what stays here is the transformer-shaped glue.
+// The matmuls, fused attention, SwiGLU elementwise kernels, thread-pool
+// plumbing and L1 reductions live in `host_kernels`; what stays here is
+// the transformer-shaped glue. The `mm*` wrappers below are the
+// `matmul*` entry points with every pack buffer and output carved from
+// the workspace arena instead of freshly allocated.
 
-fn sigmoid(z: f32) -> f32 {
-    1.0 / (1.0 + (-z).exp())
+/// `a[m,k] @ b[k,n]`, arena-carved (see [`kernels::matmul`]).
+fn mm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Buf {
+    let level = kernels::simd_level();
+    let threads = kernels::threads_for(m * k * n);
+    let mut bt = buf_raw(k * n);
+    kernels::transpose_into(b, k, n, &mut bt);
+    let mut out = buf_raw(m * n);
+    kernels::gemm_into(level, threads, a, &bt, m, n, k, &mut out);
+    out
 }
 
-fn silu(z: f32) -> f32 {
-    z * sigmoid(z)
+/// `aᵀ[k,m] @ b[m,n]` for `a: [m,k]` — weight gradients, arena-carved
+/// (see [`kernels::matmul_tn`]).
+fn mm_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Buf {
+    let level = kernels::simd_level();
+    let threads = kernels::threads_for(m * k * n);
+    let mut at = buf_raw(m * k);
+    kernels::transpose_into(a, m, k, &mut at);
+    let mut bt = buf_raw(m * n);
+    kernels::transpose_into(b, m, n, &mut bt);
+    let mut out = buf_raw(k * n);
+    kernels::gemm_into(level, threads, &at, &bt, k, n, m, &mut out);
+    out
+}
+
+/// `a[m,n] @ bᵀ[n,k]` for `b: [k,n]` — input gradients, arena-carved
+/// (see [`kernels::matmul_nt`]; no packing at all).
+fn mm_nt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Buf {
+    let level = kernels::simd_level();
+    let threads = kernels::threads_for(m * n * k);
+    let mut out = buf_raw(m * k);
+    kernels::gemm_into(level, threads, a, b, m, k, n, &mut out);
+    out
 }
 
 fn log_sum_exp(row: &[f32]) -> f64 {
@@ -1519,10 +1616,11 @@ fn nll(row: &[f32], target: usize) -> f64 {
 }
 
 /// Pre-RMSNorm: `y = x · rsqrt(mean(x²) + 1e-6) · scale`. Returns the
-/// normalized rows and the per-row rsqrt (cached for backward).
-fn rms_norm(x: &[f32], scale: &[f32], m: usize, d: usize) -> (Vec<f32>, Vec<f32>) {
-    let mut y = vec![0f32; m * d];
-    let mut r = vec![0f32; m];
+/// normalized rows and the per-row rsqrt (cached for backward), both
+/// carved from the arena (every element is written below).
+fn rms_norm(x: &[f32], scale: &[f32], m: usize, d: usize) -> (Buf, Buf) {
+    let mut y = buf_raw(m * d);
+    let mut r = buf_raw(m);
     for i in 0..m {
         let row = &x[i * d..(i + 1) * d];
         let ms: f64 = kernels::dot8(row, row) / d as f64;
@@ -1536,7 +1634,8 @@ fn rms_norm(x: &[f32], scale: &[f32], m: usize, d: usize) -> (Vec<f32>, Vec<f32>
     (y, r)
 }
 
-/// RMSNorm backward: `(dscale, dx)` for upstream `dy`.
+/// RMSNorm backward: `(dscale, dx)` for upstream `dy`. The f64 dscale
+/// accumulator is a (small) fresh vector; the f32 outputs are carved.
 fn rms_backward(
     x: &[f32],
     r: &[f32],
@@ -1544,9 +1643,9 @@ fn rms_backward(
     dy: &[f32],
     m: usize,
     d: usize,
-) -> (Vec<f32>, Vec<f32>) {
+) -> (Buf, Buf) {
     let mut dscale = vec![0f64; d];
-    let mut dx = vec![0f32; m * d];
+    let mut dx = buf_raw(m * d);
     for i in 0..m {
         let xrow = &x[i * d..(i + 1) * d];
         let dyrow = &dy[i * d..(i + 1) * d];
@@ -1561,143 +1660,11 @@ fn rms_backward(
             dxrow[di] = (ri * scale[di] as f64 * dyrow[di] as f64 - c * xrow[di] as f64) as f32;
         }
     }
-    (dscale.into_iter().map(|v| v as f32).collect(), dx)
-}
-
-/// Multi-head attention forward over already-projected q/k/v (`[B·T,
-/// D]`, heads interleaved) — causal for language towers, unmasked for
-/// the vision tower. Returns `(probs [B,H,T,T], ctx [B·T, D])`; masked
-/// scores are exactly the python graph's `-1e9`.
-#[allow(clippy::too_many_arguments)]
-fn attention_fwd(
-    q: &[f32],
-    k: &[f32],
-    v: &[f32],
-    b: usize,
-    t: usize,
-    h: usize,
-    hd: usize,
-    causal: bool,
-) -> (Vec<f32>, Vec<f32>) {
-    let d = h * hd;
-    let inv_sqrt = 1.0 / (hd as f64).sqrt();
-    let mut probs = vec![0f32; b * h * t * t];
-    let mut ctx = vec![0f32; b * t * d];
-    let mut scores = vec![0f32; t];
-    let mut crow = vec![0f64; hd];
-    for bi in 0..b {
-        for hh in 0..h {
-            let base = (bi * h + hh) * t * t;
-            for t1 in 0..t {
-                let limit = if causal { t1 + 1 } else { t };
-                let qrow = &q[(bi * t + t1) * d + hh * hd..(bi * t + t1) * d + (hh + 1) * hd];
-                for (t2, sc) in scores.iter_mut().enumerate() {
-                    if t2 >= limit {
-                        *sc = -1e9;
-                        continue;
-                    }
-                    let krow = &k[(bi * t + t2) * d + hh * hd..(bi * t + t2) * d + (hh + 1) * hd];
-                    *sc = (kernels::dot8(qrow, krow) * inv_sqrt) as f32;
-                }
-                // softmax over the full row (masked entries underflow to 0)
-                let max = scores.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-                let mut sum = 0f64;
-                let prow = &mut probs[base + t1 * t..base + (t1 + 1) * t];
-                for (p, &sc) in prow.iter_mut().zip(scores.iter()) {
-                    let e = (sc - max).exp();
-                    *p = e;
-                    sum += e as f64;
-                }
-                let inv = (1.0 / sum) as f32;
-                for p in prow.iter_mut() {
-                    *p *= inv;
-                }
-                crow.fill(0.0);
-                for t2 in 0..limit {
-                    let p = prow[t2] as f64;
-                    if p == 0.0 {
-                        continue;
-                    }
-                    let vrow = &v[(bi * t + t2) * d + hh * hd..(bi * t + t2) * d + (hh + 1) * hd];
-                    for (c, &vv) in crow.iter_mut().zip(vrow.iter()) {
-                        *c += p * vv as f64;
-                    }
-                }
-                let out =
-                    &mut ctx[(bi * t + t1) * d + hh * hd..(bi * t + t1) * d + (hh + 1) * hd];
-                for (o, &c) in out.iter_mut().zip(crow.iter()) {
-                    *o = c as f32;
-                }
-            }
-        }
+    let mut ds = buf_raw(d);
+    for (o, &v) in ds.iter_mut().zip(dscale.iter()) {
+        *o = v as f32;
     }
-    (probs, ctx)
-}
-
-/// Attention backward: `(dq, dk, dv)` from the context gradient.
-#[allow(clippy::too_many_arguments)]
-fn attention_bwd(
-    q: &[f32],
-    k: &[f32],
-    v: &[f32],
-    probs: &[f32],
-    dctx: &[f32],
-    b: usize,
-    t: usize,
-    h: usize,
-    hd: usize,
-    causal: bool,
-) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
-    let d = h * hd;
-    let inv_sqrt = 1.0 / (hd as f64).sqrt();
-    let mut dq = vec![0f32; b * t * d];
-    let mut dk = vec![0f32; b * t * d];
-    let mut dv = vec![0f32; b * t * d];
-    let mut dprobs = vec![0f64; t];
-    for bi in 0..b {
-        for hh in 0..h {
-            let base = (bi * h + hh) * t * t;
-            for t1 in 0..t {
-                let limit = if causal { t1 + 1 } else { t };
-                let prow = &probs[base + t1 * t..base + (t1 + 1) * t];
-                let dcrow =
-                    &dctx[(bi * t + t1) * d + hh * hd..(bi * t + t1) * d + (hh + 1) * hd];
-                // dprobs[t2] = dctx · v[t2]; dv[t2] += probs · dctx
-                let mut dot = 0f64; // Σ dprobs·probs (softmax backward)
-                for t2 in 0..limit {
-                    let vrow = &v[(bi * t + t2) * d + hh * hd..(bi * t + t2) * d + (hh + 1) * hd];
-                    let acc = kernels::dot8(dcrow, vrow);
-                    dprobs[t2] = acc;
-                    dot += acc * prow[t2] as f64;
-                    let p = prow[t2];
-                    if p != 0.0 {
-                        let dvrow = &mut dv
-                            [(bi * t + t2) * d + hh * hd..(bi * t + t2) * d + (hh + 1) * hd];
-                        for (dvv, &dc) in dvrow.iter_mut().zip(dcrow.iter()) {
-                            *dvv += p * dc;
-                        }
-                    }
-                }
-                // dscores = probs ⊙ (dprobs − Σ dprobs·probs), then the
-                // 1/√hd chain into q and k
-                let qrow_base = (bi * t + t1) * d + hh * hd;
-                for t2 in 0..limit {
-                    let ds = prow[t2] as f64 * (dprobs[t2] - dot) * inv_sqrt;
-                    if ds == 0.0 {
-                        continue;
-                    }
-                    let krow_base = (bi * t + t2) * d + hh * hd;
-                    for di in 0..hd {
-                        dq[qrow_base + di] =
-                            (dq[qrow_base + di] as f64 + ds * k[krow_base + di] as f64) as f32;
-                        dk[krow_base + di] =
-                            (dk[krow_base + di] as f64 + ds * q[qrow_base + di] as f64) as f32;
-                    }
-                }
-            }
-        }
-    }
-    (dq, dk, dv)
+    (ds, dx)
 }
 
 // ---------------------------------------------------------------------------
@@ -1753,7 +1720,7 @@ impl Backend for HostBackend {
                 }
             }
         }
-        Ok(BackendState::new(state))
+        Ok(BackendState::new(Buf::from_vec(state)))
     }
 
     fn upload_batch(&self, batch: &Batch) -> Result<UploadedBatch> {
@@ -1793,7 +1760,7 @@ impl Backend for HostBackend {
         ctrl: &CtrlBuf,
         plan: &StepPlan,
     ) -> Result<BackendState> {
-        let s = state.downcast::<Vec<f32>>()?;
+        let s = state.downcast::<Buf>()?;
         let batch = io.downcast::<Batch>()?;
         let c = &ctrl.host;
         let m = &self.manifest;
@@ -1843,12 +1810,12 @@ impl Backend for HostBackend {
     }
 
     fn probe(&self, state: &BackendState) -> Result<Vec<f32>> {
-        let s = state.downcast::<Vec<f32>>()?;
+        let s = state.downcast::<Buf>()?;
         Ok(s[..self.manifest.metrics_len].to_vec())
     }
 
     fn eval_step(&self, state: &BackendState, io: &UploadedBatch) -> Result<(f64, f64)> {
-        let s = state.downcast::<Vec<f32>>()?;
+        let s = state.downcast::<Buf>()?;
         let batch = io.downcast::<Batch>()?;
         let fwd = self.forward(s, &batch.tokens, &batch.patches);
         let (loss, count) = self.loss_of(&fwd.logits, &batch.targets);
@@ -1856,7 +1823,7 @@ impl Backend for HostBackend {
     }
 
     fn eval_rows(&self, state: &BackendState, io: &UploadedBatch) -> Result<Vec<(f64, f64)>> {
-        let s = state.downcast::<Vec<f32>>()?;
+        let s = state.downcast::<Buf>()?;
         let batch = io.downcast::<Batch>()?;
         let fwd = self.forward(s, &batch.tokens, &batch.patches);
         let Dims { b, t, v, .. } = self.dims;
@@ -1879,7 +1846,7 @@ impl Backend for HostBackend {
     }
 
     fn state_to_host(&self, state: &BackendState) -> Result<Vec<f32>> {
-        Ok(state.downcast::<Vec<f32>>()?.clone())
+        Ok(state.downcast::<Buf>()?.to_vec())
     }
 
     fn state_from_host(&self, host: &[f32]) -> Result<BackendState> {
@@ -1889,7 +1856,7 @@ impl Backend for HostBackend {
             host.len(),
             self.manifest.state_len
         );
-        Ok(BackendState::new(host.to_vec()))
+        Ok(BackendState::new(Buf::from_slice(host)))
     }
 }
 

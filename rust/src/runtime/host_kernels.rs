@@ -789,9 +789,18 @@ const J_BLOCK: usize = 32;
 /// matrix into `[cols, rows]` — the packing step that turns every
 /// matmul variant into the one row·row microkernel.
 pub fn transpose(src: &[f32], rows: usize, cols: usize) -> Vec<f32> {
-    debug_assert_eq!(src.len(), rows * cols);
-    const TILE: usize = 32;
     let mut out = vec![0f32; rows * cols];
+    transpose_into(src, rows, cols, &mut out);
+    out
+}
+
+/// [`transpose`] into a caller-provided buffer (the host backend's
+/// workspace arena carves packing scratch through this — every element
+/// of `out` is written).
+pub fn transpose_into(src: &[f32], rows: usize, cols: usize, out: &mut [f32]) {
+    debug_assert_eq!(src.len(), rows * cols);
+    debug_assert_eq!(out.len(), rows * cols);
+    const TILE: usize = 32;
     for r0 in (0..rows).step_by(TILE) {
         for c0 in (0..cols).step_by(TILE) {
             for r in r0..(r0 + TILE).min(rows) {
@@ -801,7 +810,6 @@ pub fn transpose(src: &[f32], rows: usize, cols: usize) -> Vec<f32> {
             }
         }
     }
-    out
 }
 
 /// `out[i, j] = Σₓ l[i, x]·r[j, x]` for `l: [rows_l, kdim]`,
@@ -819,10 +827,30 @@ fn gemm(
     rows_r: usize,
     kdim: usize,
 ) -> Vec<f32> {
+    let mut out = vec![0f32; rows_l * rows_r];
+    gemm_into(level, threads, l, r, rows_l, rows_r, kdim, &mut out);
+    out
+}
+
+/// The packed microkernel (`out[i, j] = Σₓ l[i, x]·r[j, x]`) into a
+/// caller-provided buffer — what the host backend's arena-carved matmul
+/// wrappers call. Every element of `out` is written; results are
+/// bitwise identical for every level/thread count, as with [`matmul`].
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_into(
+    level: SimdLevel,
+    threads: usize,
+    l: &[f32],
+    r: &[f32],
+    rows_l: usize,
+    rows_r: usize,
+    kdim: usize,
+    out: &mut [f32],
+) {
     debug_assert_eq!(l.len(), rows_l * kdim);
     debug_assert_eq!(r.len(), rows_r * kdim);
-    let mut out = vec![0f32; rows_l * rows_r];
-    par_row_chunks(&mut out, rows_r, threads, |row0, chunk| match level {
+    debug_assert_eq!(out.len(), rows_l * rows_r);
+    par_row_chunks(out, rows_r, threads, |row0, chunk| match level {
         SimdLevel::Scalar => gemm_block(dot8_lanes_scalar, l, r, rows_r, kdim, row0, chunk),
         #[cfg(target_arch = "x86_64")]
         SimdLevel::Sse2 => gemm_block(dot8_lanes_sse2, l, r, rows_r, kdim, row0, chunk),
@@ -831,7 +859,6 @@ fn gemm(
         #[cfg(not(target_arch = "x86_64"))]
         _ => gemm_block(dot8_lanes_scalar, l, r, rows_r, kdim, row0, chunk),
     });
-    out
 }
 
 #[inline(always)]
@@ -932,6 +959,604 @@ pub fn matmul_nt_with(
     k: usize,
 ) -> Vec<f32> {
     gemm(level, threads, a, b, m, k, n)
+}
+
+// ---------------------------------------------------------------------------
+// Elementwise kernels: deterministic exp, sigmoid, SwiGLU, softmax
+// ---------------------------------------------------------------------------
+//
+// These are *elementwise*, so the determinism argument is simpler than
+// the reductions': every lane runs the identical IEEE op sequence
+// (min/max clamp → magic-number round → Cody–Waite reduce → Horner
+// polynomial → exponent-bits scale), and elementwise IEEE ops have no
+// ordering freedom — scalar, SSE2 and AVX2 agree bit-for-bit by
+// construction. The SIMD paths exist purely for speed.
+//
+// `vexp` replaces libm's `exp` in the attention softmax and the SwiGLU
+// sigmoid (a one-time, intentional trajectory change — see
+// `artifacts/golden/README.md`). The loss path (`log_sum_exp`, the
+// fused loss/softmax in `loss_grad`) stays on libm f64 `exp`.
+
+/// Clamp ceiling: keeps `round(x·log₂e) ≤ 127`, so the exponent-bits
+/// scale below never overflows into inf/NaN territory.
+const EXP_HI: f32 = 88.02;
+/// Clamp floor: results below this saturate near the smallest normal.
+const EXP_LO: f32 = -87.336_54;
+/// log₂(e), f32-rounded.
+const EXP_LOG2EF: f32 = 1.442_695;
+/// Cody–Waite ln2 split, high part (exactly representable).
+const EXP_C1: f32 = 0.693_359_375;
+/// Cody–Waite ln2 split, low part.
+const EXP_C2: f32 = -2.121_944_4e-4;
+/// Degree-5 minimax polynomial for expᵣ on the reduced range.
+const EXP_P: [f32; 6] = [
+    1.987_569_1e-4,
+    1.398_199_9e-3,
+    8.333_452e-3,
+    4.166_579_6e-2,
+    1.666_666_5e-1,
+    5.000_000_1e-1,
+];
+/// 1.5·2²³ — adding and subtracting this rounds `|x| < 2²²` to the
+/// nearest integer in f32 (round-to-nearest-even), with the integer
+/// also recoverable from the low mantissa bits.
+const EXP_MAGIC: f32 = 12_582_912.0;
+
+/// One element of [`vexp_inplace`] — the scalar twin of the SIMD
+/// kernels, op-for-op: SIMD-semantics min/max (`a < b ? a : b`), the
+/// magic-number rounding, two-term Cody–Waite reduction, Horner
+/// evaluation and the `(n+127) << 23` exponent-bits scale.
+#[inline(always)]
+fn vexp1(x: f32) -> f32 {
+    let x = if x < EXP_HI { x } else { EXP_HI };
+    let x = if x > EXP_LO { x } else { EXP_LO };
+    let z = x * EXP_LOG2EF + EXP_MAGIC;
+    let n = z - EXP_MAGIC;
+    let r = x - n * EXP_C1;
+    let r = r - n * EXP_C2;
+    let mut y = EXP_P[0];
+    y = y * r + EXP_P[1];
+    y = y * r + EXP_P[2];
+    y = y * r + EXP_P[3];
+    y = y * r + EXP_P[4];
+    y = y * r + EXP_P[5];
+    let r2 = r * r;
+    y = y * r2 + r + 1.0;
+    let ni = n as i32;
+    let pow2 = f32::from_bits(((ni + 127) << 23) as u32);
+    y * pow2
+}
+
+#[cfg(target_arch = "x86_64")]
+fn vexp_sse2(xs: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let n = xs.len();
+    let main = n - n % 4;
+    unsafe {
+        let hi = _mm_set1_ps(EXP_HI);
+        let lo = _mm_set1_ps(EXP_LO);
+        let log2ef = _mm_set1_ps(EXP_LOG2EF);
+        let magic = _mm_set1_ps(EXP_MAGIC);
+        let c1 = _mm_set1_ps(EXP_C1);
+        let c2 = _mm_set1_ps(EXP_C2);
+        let one = _mm_set1_ps(1.0);
+        let bias = _mm_set1_epi32(127);
+        let p = xs.as_mut_ptr();
+        let mut j = 0usize;
+        while j < main {
+            let mut x = _mm_loadu_ps(p.add(j));
+            x = _mm_min_ps(x, hi);
+            x = _mm_max_ps(x, lo);
+            let z = _mm_add_ps(_mm_mul_ps(x, log2ef), magic);
+            let nf = _mm_sub_ps(z, magic);
+            let mut r = _mm_sub_ps(x, _mm_mul_ps(nf, c1));
+            r = _mm_sub_ps(r, _mm_mul_ps(nf, c2));
+            let mut y = _mm_set1_ps(EXP_P[0]);
+            y = _mm_add_ps(_mm_mul_ps(y, r), _mm_set1_ps(EXP_P[1]));
+            y = _mm_add_ps(_mm_mul_ps(y, r), _mm_set1_ps(EXP_P[2]));
+            y = _mm_add_ps(_mm_mul_ps(y, r), _mm_set1_ps(EXP_P[3]));
+            y = _mm_add_ps(_mm_mul_ps(y, r), _mm_set1_ps(EXP_P[4]));
+            y = _mm_add_ps(_mm_mul_ps(y, r), _mm_set1_ps(EXP_P[5]));
+            let r2 = _mm_mul_ps(r, r);
+            y = _mm_add_ps(_mm_add_ps(_mm_mul_ps(y, r2), r), one);
+            let ni = _mm_cvttps_epi32(nf);
+            let pow2 = _mm_castsi128_ps(_mm_slli_epi32::<23>(_mm_add_epi32(ni, bias)));
+            _mm_storeu_ps(p.add(j), _mm_mul_ps(y, pow2));
+            j += 4;
+        }
+    }
+    for v in &mut xs[main..] {
+        *v = vexp1(*v);
+    }
+}
+
+/// # Safety
+/// Requires AVX2 (callers go through the [`best_available`]-clamped
+/// dispatch, which only selects this after runtime detection).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn vexp_avx2_impl(xs: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let n = xs.len();
+    let main = n - n % 8;
+    let hi = _mm256_set1_ps(EXP_HI);
+    let lo = _mm256_set1_ps(EXP_LO);
+    let log2ef = _mm256_set1_ps(EXP_LOG2EF);
+    let magic = _mm256_set1_ps(EXP_MAGIC);
+    let c1 = _mm256_set1_ps(EXP_C1);
+    let c2 = _mm256_set1_ps(EXP_C2);
+    let one = _mm256_set1_ps(1.0);
+    let bias = _mm256_set1_epi32(127);
+    let p = xs.as_mut_ptr();
+    let mut j = 0usize;
+    while j < main {
+        let mut x = _mm256_loadu_ps(p.add(j));
+        x = _mm256_min_ps(x, hi);
+        x = _mm256_max_ps(x, lo);
+        let z = _mm256_add_ps(_mm256_mul_ps(x, log2ef), magic);
+        let nf = _mm256_sub_ps(z, magic);
+        let mut r = _mm256_sub_ps(x, _mm256_mul_ps(nf, c1));
+        r = _mm256_sub_ps(r, _mm256_mul_ps(nf, c2));
+        let mut y = _mm256_set1_ps(EXP_P[0]);
+        y = _mm256_add_ps(_mm256_mul_ps(y, r), _mm256_set1_ps(EXP_P[1]));
+        y = _mm256_add_ps(_mm256_mul_ps(y, r), _mm256_set1_ps(EXP_P[2]));
+        y = _mm256_add_ps(_mm256_mul_ps(y, r), _mm256_set1_ps(EXP_P[3]));
+        y = _mm256_add_ps(_mm256_mul_ps(y, r), _mm256_set1_ps(EXP_P[4]));
+        y = _mm256_add_ps(_mm256_mul_ps(y, r), _mm256_set1_ps(EXP_P[5]));
+        let r2 = _mm256_mul_ps(r, r);
+        y = _mm256_add_ps(_mm256_add_ps(_mm256_mul_ps(y, r2), r), one);
+        let ni = _mm256_cvttps_epi32(nf);
+        let pow2 = _mm256_castsi256_ps(_mm256_slli_epi32::<23>(_mm256_add_epi32(ni, bias)));
+        _mm256_storeu_ps(p.add(j), _mm256_mul_ps(y, pow2));
+        j += 8;
+    }
+    for v in &mut xs[main..] {
+        *v = vexp1(*v);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn vexp_avx2(xs: &mut [f32]) {
+    debug_assert!(best_available() == SimdLevel::Avx2);
+    unsafe { vexp_avx2_impl(xs) }
+}
+
+/// Elementwise `exp` over a slice, in place, at the dispatched level.
+/// ~1 ulp polynomial accuracy on the softmax/sigmoid range; clamps to
+/// `[-87.34, 88.02]`. Bitwise identical across every level (elementwise
+/// IEEE ops have no ordering freedom).
+pub fn vexp_inplace(xs: &mut [f32]) {
+    vexp_inplace_with(simd_level(), xs)
+}
+
+/// [`vexp_inplace`] at an explicit level (the determinism tests sweep
+/// these).
+pub fn vexp_inplace_with(level: SimdLevel, xs: &mut [f32]) {
+    match level {
+        SimdLevel::Scalar => {
+            for v in xs.iter_mut() {
+                *v = vexp1(*v);
+            }
+        }
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse2 => vexp_sse2(xs),
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => vexp_avx2(xs),
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => {
+            for v in xs.iter_mut() {
+                *v = vexp1(*v);
+            }
+        }
+    }
+}
+
+/// Elementwise logistic sigmoid `σ(z) = 1/(1 + exp(−z))`, in place.
+/// The negate/add/divide steps are single IEEE ops (level-independent);
+/// the exp runs on [`vexp_inplace_with`].
+pub fn sigmoid_inplace_with(level: SimdLevel, zs: &mut [f32]) {
+    for z in zs.iter_mut() {
+        *z = -*z;
+    }
+    vexp_inplace_with(level, zs);
+    for z in zs.iter_mut() {
+        *z = 1.0 / (1.0 + *z);
+    }
+}
+
+/// SwiGLU forward at the dispatched level — see [`swiglu_fwd_with`].
+pub fn swiglu_fwd(gate_pre: &[f32], up: &[f32], sig: &mut [f32], act: &mut [f32]) {
+    swiglu_fwd_with(simd_level(), gate_pre, up, sig, act)
+}
+
+/// SwiGLU gate product: `sig = σ(gate_pre)`, `act = (gate_pre · sig) ·
+/// up` (silu(g) ⊙ up, the forward's exact association). `sig` is
+/// returned so backward never recomputes the sigmoid.
+pub fn swiglu_fwd_with(
+    level: SimdLevel,
+    gate_pre: &[f32],
+    up: &[f32],
+    sig: &mut [f32],
+    act: &mut [f32],
+) {
+    debug_assert_eq!(gate_pre.len(), up.len());
+    debug_assert_eq!(gate_pre.len(), sig.len());
+    debug_assert_eq!(gate_pre.len(), act.len());
+    sig.copy_from_slice(gate_pre);
+    sigmoid_inplace_with(level, sig);
+    for i in 0..gate_pre.len() {
+        act[i] = gate_pre[i] * sig[i] * up[i];
+    }
+}
+
+/// SwiGLU backward from the stashed forward sigmoid: `d_up = d_act·z·σ`
+/// and `d_gp = d_act·up·σ·(1 + z·(1−σ))`. Purely single-op f32
+/// elementwise math — no level parameter because no op here has a
+/// SIMD-vs-scalar degree of freedom.
+pub fn swiglu_bwd(
+    d_act: &[f32],
+    gate_pre: &[f32],
+    up: &[f32],
+    sig: &[f32],
+    d_gp: &mut [f32],
+    d_up: &mut [f32],
+) {
+    debug_assert_eq!(d_act.len(), gate_pre.len());
+    debug_assert_eq!(d_act.len(), sig.len());
+    for i in 0..d_act.len() {
+        let z = gate_pre[i];
+        let sg = sig[i];
+        d_up[i] = d_act[i] * z * sg; // silu(z) = z·σ(z)
+        d_gp[i] = d_act[i] * up[i] * sg * (1.0 + z * (1.0 - sg));
+    }
+}
+
+/// In-place softmax over one score row: exact f32 max, `vexp(x − max)`,
+/// serial ascending f64 sum (block-size invariant by construction), and
+/// an `inv = (1/Σ) as f32` normalize at the dispatched level. Returns
+/// `(max, inv)` — the two floats the fused attention stashes per query
+/// row so backward can replay the identical probabilities.
+pub fn softmax_row_with(level: SimdLevel, row: &mut [f32]) -> (f32, f32) {
+    let mut max = f32::NEG_INFINITY;
+    for &x in row.iter() {
+        if x > max {
+            max = x;
+        }
+    }
+    for x in row.iter_mut() {
+        *x -= max;
+    }
+    vexp_inplace_with(level, row);
+    let mut sum = 0f64;
+    for &e in row.iter() {
+        sum += e as f64;
+    }
+    let inv = (1.0 / sum) as f32;
+    for x in row.iter_mut() {
+        *x *= inv;
+    }
+    (max, inv)
+}
+
+// ---------------------------------------------------------------------------
+// Fused row-blocked attention
+// ---------------------------------------------------------------------------
+//
+// qkᵀ → masked softmax → ·v in one pass per query row: the score buffer
+// is one row of `limit ≤ T` floats (`limit = t1+1` causal, `T` for the
+// vision tower), so the `T×T` per-head score matrix is never
+// materialized — masked positions are never *computed* rather than
+// computed-then-zeroed. Forward stashes `(max, 1/Σ)` per query row
+// (2 floats instead of `T` probabilities); backward replays the exact
+// forward op sequence from those stats, so the recomputed probabilities
+// are bit-identical to what forward used.
+//
+// Work is threaded over (batch, head) pairs: each pair owns a disjoint
+// head-major slice of every output/scratch buffer, and every row is
+// computed by the identical per-row op sequence regardless of which
+// worker runs it — bitwise identical for every thread count, like the
+// gemm. The caller carves all buffers (the backend's workspace arena);
+// workers never allocate pool-visible memory.
+
+/// Resolve the lane-dot kernel once per call site (the fused attention
+/// loops dispatch per row pair, not per element).
+fn dot8_fn(level: SimdLevel) -> fn(&[f32], &[f32]) -> [f64; LANES] {
+    match level {
+        SimdLevel::Scalar => dot8_lanes_scalar,
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse2 => dot8_lanes_sse2,
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => dot8_lanes_avx2,
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => dot8_lanes_scalar,
+    }
+}
+
+/// Split several parallel buffers into per-worker chunks of whole
+/// (batch, head) pairs and run `body(first_pair, n_pairs, chunks)` on
+/// scoped workers. `bufs[i]` holds `pairs` rows of `row_lens[i]`
+/// elements; every pair is processed by the same per-pair computation,
+/// so the partition never changes a bit.
+fn par_pairs<F>(pairs: usize, threads: usize, bufs: Vec<&mut [f32]>, row_lens: &[usize], body: F)
+where
+    F: Fn(usize, usize, Vec<&mut [f32]>) + Sync,
+{
+    debug_assert_eq!(bufs.len(), row_lens.len());
+    let t = threads.min(pairs).max(1);
+    if t <= 1 {
+        body(0, pairs, bufs);
+        return;
+    }
+    let chunk = pairs.div_ceil(t);
+    std::thread::scope(|s| {
+        let mut rest = bufs;
+        let mut p0 = 0usize;
+        while p0 < pairs {
+            let take = chunk.min(pairs - p0);
+            let mut heads = Vec::with_capacity(rest.len());
+            let mut tails = Vec::with_capacity(rest.len());
+            for (bi, buf) in rest.into_iter().enumerate() {
+                let (head, tail) = buf.split_at_mut(take * row_lens[bi]);
+                heads.push(head);
+                tails.push(tail);
+            }
+            rest = tails;
+            let body = &body;
+            let first = p0;
+            s.spawn(move || body(first, take, heads));
+            p0 += take;
+        }
+    });
+}
+
+/// Fused attention forward at the dispatched level and work-gated
+/// thread count — see [`fused_attention_fwd_with`].
+#[allow(clippy::too_many_arguments)]
+pub fn fused_attention_fwd(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    b: usize,
+    t: usize,
+    h: usize,
+    hd: usize,
+    causal: bool,
+    ctx_hm: &mut [f32],
+    stats: &mut [f32],
+    scratch: &mut [f32],
+) {
+    let threads = threads_for(b * h * t * t * hd);
+    fused_attention_fwd_with(simd_level(), threads, q, k, v, b, t, h, hd, causal, ctx_hm, stats, scratch)
+}
+
+/// Fused attention forward over already-projected `q`/`k`/`v`
+/// (`[B·T, H·hd]`, heads interleaved). Writes:
+///
+/// * `ctx_hm: [B·H, T·hd]` — the context rows, **head-major** (use
+///   [`gather_heads`] to interleave for the output projection),
+/// * `stats: [B·H, 2·T]` — per query row `(max, inv)`, the softmax
+///   replay stats backward consumes,
+/// * `scratch: [B·H, T]` — per-pair score-row workspace (contents
+///   unspecified on return).
+///
+/// Scores are lane-split [`dot8_with`] products × `1/√hd`; the softmax
+/// runs [`softmax_row_with`] over the `limit` unmasked positions only;
+/// the `·v` contraction accumulates one f64 lane per head dim. Bitwise
+/// identical across every SIMD level and thread count.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_attention_fwd_with(
+    level: SimdLevel,
+    threads: usize,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    b: usize,
+    t: usize,
+    h: usize,
+    hd: usize,
+    causal: bool,
+    ctx_hm: &mut [f32],
+    stats: &mut [f32],
+    scratch: &mut [f32],
+) {
+    let d = h * hd;
+    debug_assert_eq!(q.len(), b * t * d);
+    debug_assert_eq!(k.len(), b * t * d);
+    debug_assert_eq!(v.len(), b * t * d);
+    debug_assert_eq!(ctx_hm.len(), b * h * t * hd);
+    debug_assert_eq!(stats.len(), b * h * 2 * t);
+    debug_assert_eq!(scratch.len(), b * h * t);
+    let pairs = b * h;
+    let inv_sqrt = 1.0 / (hd as f64).sqrt();
+    let dotf = dot8_fn(level);
+    par_pairs(
+        pairs,
+        threads,
+        vec![ctx_hm, stats, scratch],
+        &[t * hd, 2 * t, t],
+        |first, take, bufs| {
+            let [ctx_c, st_c, sc_c]: [&mut [f32]; 3] = bufs.try_into().unwrap();
+            let mut crow = vec![0f64; hd];
+            for local in 0..take {
+                let pair = first + local;
+                let (bi, hh) = (pair / h, pair % h);
+                let ctx_rows = &mut ctx_c[local * t * hd..(local + 1) * t * hd];
+                let st_rows = &mut st_c[local * 2 * t..(local + 1) * 2 * t];
+                let srow_full = &mut sc_c[local * t..(local + 1) * t];
+                for t1 in 0..t {
+                    let limit = if causal { t1 + 1 } else { t };
+                    let qrow = &q[(bi * t + t1) * d + hh * hd..][..hd];
+                    let srow = &mut srow_full[..limit];
+                    for (t2, sc) in srow.iter_mut().enumerate() {
+                        let krow = &k[(bi * t + t2) * d + hh * hd..][..hd];
+                        *sc = (reduce8(&dotf(qrow, krow)) * inv_sqrt) as f32;
+                    }
+                    let (mx, inv) = softmax_row_with(level, srow);
+                    st_rows[2 * t1] = mx;
+                    st_rows[2 * t1 + 1] = inv;
+                    crow.fill(0.0);
+                    for (t2, &p) in srow.iter().enumerate() {
+                        let p = p as f64;
+                        let vrow = &v[(bi * t + t2) * d + hh * hd..][..hd];
+                        for (c, &vv) in crow.iter_mut().zip(vrow.iter()) {
+                            *c += p * vv as f64;
+                        }
+                    }
+                    let out = &mut ctx_rows[t1 * hd..(t1 + 1) * hd];
+                    for (o, &c) in out.iter_mut().zip(crow.iter()) {
+                        *o = c as f32;
+                    }
+                }
+            }
+        },
+    );
+}
+
+/// Fused attention backward at the dispatched level and work-gated
+/// thread count — see [`fused_attention_bwd_with`].
+#[allow(clippy::too_many_arguments)]
+pub fn fused_attention_bwd(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    stats: &[f32],
+    dctx: &[f32],
+    b: usize,
+    t: usize,
+    h: usize,
+    hd: usize,
+    causal: bool,
+    dq_hm: &mut [f32],
+    dk_hm: &mut [f32],
+    dv_hm: &mut [f32],
+    scratch: &mut [f32],
+) {
+    let threads = threads_for(b * h * t * t * hd);
+    fused_attention_bwd_with(
+        simd_level(), threads, q, k, v, stats, dctx, b, t, h, hd, causal, dq_hm, dk_hm, dv_hm,
+        scratch,
+    )
+}
+
+/// Fused attention backward: recomputes each query row's probabilities
+/// by replaying the forward's exact op sequence (scores → subtract the
+/// stashed `max` → [`vexp_inplace_with`] → scale by the stashed `inv`),
+/// then applies the softmax/score chain rule. Inputs `q`/`k`/`v`/`dctx`
+/// are interleaved `[B·T, H·hd]`; outputs `dq_hm`/`dk_hm`/`dv_hm` are
+/// head-major `[B·H, T·hd]` accumulation buffers the **caller zeroes**;
+/// `scratch` is `[B·H, 2·T]` per-pair workspace (probability row +
+/// dprobs row, contents unspecified on return). Bitwise identical
+/// across every SIMD level and thread count.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_attention_bwd_with(
+    level: SimdLevel,
+    threads: usize,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    stats: &[f32],
+    dctx: &[f32],
+    b: usize,
+    t: usize,
+    h: usize,
+    hd: usize,
+    causal: bool,
+    dq_hm: &mut [f32],
+    dk_hm: &mut [f32],
+    dv_hm: &mut [f32],
+    scratch: &mut [f32],
+) {
+    let d = h * hd;
+    debug_assert_eq!(q.len(), b * t * d);
+    debug_assert_eq!(dctx.len(), b * t * d);
+    debug_assert_eq!(stats.len(), b * h * 2 * t);
+    debug_assert_eq!(dq_hm.len(), b * h * t * hd);
+    debug_assert_eq!(dk_hm.len(), b * h * t * hd);
+    debug_assert_eq!(dv_hm.len(), b * h * t * hd);
+    debug_assert_eq!(scratch.len(), b * h * 2 * t);
+    let pairs = b * h;
+    let inv_sqrt = 1.0 / (hd as f64).sqrt();
+    let dotf = dot8_fn(level);
+    par_pairs(
+        pairs,
+        threads,
+        vec![dq_hm, dk_hm, dv_hm, scratch],
+        &[t * hd, t * hd, t * hd, 2 * t],
+        |first, take, bufs| {
+            let [dq_c, dk_c, dv_c, sc_c]: [&mut [f32]; 4] = bufs.try_into().unwrap();
+            for local in 0..take {
+                let pair = first + local;
+                let (bi, hh) = (pair / h, pair % h);
+                let st = &stats[pair * 2 * t..][..2 * t];
+                let (srow_full, drow_full) =
+                    sc_c[local * 2 * t..(local + 1) * 2 * t].split_at_mut(t);
+                for t1 in 0..t {
+                    let limit = if causal { t1 + 1 } else { t };
+                    let qrow = &q[(bi * t + t1) * d + hh * hd..][..hd];
+                    // replay the forward probabilities bit-exactly
+                    let srow = &mut srow_full[..limit];
+                    for (t2, sc) in srow.iter_mut().enumerate() {
+                        let krow = &k[(bi * t + t2) * d + hh * hd..][..hd];
+                        *sc = (reduce8(&dotf(qrow, krow)) * inv_sqrt) as f32;
+                    }
+                    let (mx, inv) = (st[2 * t1], st[2 * t1 + 1]);
+                    for x in srow.iter_mut() {
+                        *x -= mx;
+                    }
+                    vexp_inplace_with(level, srow);
+                    for x in srow.iter_mut() {
+                        *x *= inv;
+                    }
+                    // dprobs[t2] = dctx · v[t2]; dv[t2] += probs · dctx
+                    let dcrow = &dctx[(bi * t + t1) * d + hh * hd..][..hd];
+                    let drow = &mut drow_full[..limit];
+                    let mut dot = 0f64; // Σ dprobs·probs (softmax backward)
+                    for t2 in 0..limit {
+                        let vrow = &v[(bi * t + t2) * d + hh * hd..][..hd];
+                        let acc = reduce8(&dotf(dcrow, vrow));
+                        drow[t2] = acc as f32;
+                        dot += acc * srow[t2] as f64;
+                        let p = srow[t2];
+                        let dvrow = &mut dv_c[local * t * hd + t2 * hd..][..hd];
+                        for (dvv, &dc) in dvrow.iter_mut().zip(dcrow.iter()) {
+                            *dvv += p * dc;
+                        }
+                    }
+                    // dscores = probs ⊙ (dprobs − Σ dprobs·probs), then
+                    // the 1/√hd chain into q and k
+                    for t2 in 0..limit {
+                        let ds = srow[t2] as f64 * (drow[t2] as f64 - dot) * inv_sqrt;
+                        let krow = &k[(bi * t + t2) * d + hh * hd..][..hd];
+                        let dkrow = &mut dk_c[local * t * hd + t2 * hd..][..hd];
+                        let dqrow = &mut dq_c[local * t * hd + t1 * hd..][..hd];
+                        for di in 0..hd {
+                            dqrow[di] = (dqrow[di] as f64 + ds * krow[di] as f64) as f32;
+                            dkrow[di] = (dkrow[di] as f64 + ds * qrow[di] as f64) as f32;
+                        }
+                    }
+                }
+            }
+        },
+    );
+}
+
+/// Regather a head-major `[B·H, T·hd]` buffer (what the fused attention
+/// kernels write) into the interleaved `[B·T, H·hd]` layout the
+/// projection matmuls consume. Pure copy — no FP ops.
+pub fn gather_heads(hm: &[f32], b: usize, t: usize, h: usize, hd: usize, out: &mut [f32]) {
+    let d = h * hd;
+    debug_assert_eq!(hm.len(), b * h * t * hd);
+    debug_assert_eq!(out.len(), b * t * d);
+    for bi in 0..b {
+        for hh in 0..h {
+            let base = (bi * h + hh) * t * hd;
+            for t1 in 0..t {
+                let src = base + t1 * hd;
+                let dst = (bi * t + t1) * d + hh * hd;
+                out[dst..dst + hd].copy_from_slice(&hm[src..src + hd]);
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -1077,5 +1702,296 @@ mod tests {
         set_thread_override(Some(0));
         assert_eq!(host_threads(), 1);
         set_thread_override(None);
+    }
+
+    #[test]
+    fn vexp_matches_libm_exp_and_is_bitwise_identical_across_levels() {
+        let mut rng = Rng::new(433);
+        // sweep the softmax/sigmoid working range plus the clamp edges
+        // and awkward lengths (SIMD main loop + scalar tail)
+        for &n in &[1usize, 3, 8, 9, 31, 257] {
+            let mut base: Vec<f32> =
+                (0..n).map(|_| (rng.gauss() * 20.0) as f32).collect();
+            base[0] = 0.0;
+            if n > 4 {
+                base[1] = 100.0; // above EXP_HI: clamps, stays finite
+                base[2] = -100.0; // below EXP_LO: tiny, not zero/NaN
+                base[3] = 88.0;
+                base[4] = -87.0;
+            }
+            let mut scalar = base.clone();
+            vexp_inplace_with(SimdLevel::Scalar, &mut scalar);
+            assert_eq!(scalar[0], 1.0, "vexp(0) must be exactly 1");
+            for (x, e) in base.iter().zip(scalar.iter()) {
+                assert!(e.is_finite() && *e > 0.0, "vexp({x}) = {e}");
+                if *x >= -80.0 && *x <= 80.0 {
+                    let want = (*x as f64).exp();
+                    let rel = (*e as f64 - want).abs() / want;
+                    assert!(rel < 1e-5, "vexp({x}) = {e}, libm {want}");
+                }
+            }
+            for level in available_levels() {
+                let mut got = base.clone();
+                vexp_inplace_with(level, &mut got);
+                for (s, g) in scalar.iter().zip(got.iter()) {
+                    assert_eq!(s.to_bits(), g.to_bits(), "level {level:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn softmax_and_swiglu_are_bitwise_identical_across_levels() {
+        let mut rng = Rng::new(577);
+        for &n in &[1usize, 7, 64, 129] {
+            let row = randv(&mut rng, n);
+            let g = randv(&mut rng, n);
+            let u = randv(&mut rng, n);
+            let mut srow = row.clone();
+            let (mx, inv) = softmax_row_with(SimdLevel::Scalar, &mut srow);
+            let sum: f64 = srow.iter().map(|&p| p as f64).sum();
+            assert!((sum - 1.0).abs() < 1e-4, "softmax sums to 1, got {sum}");
+            let mut sig0 = vec![0f32; n];
+            let mut act0 = vec![0f32; n];
+            swiglu_fwd_with(SimdLevel::Scalar, &g, &u, &mut sig0, &mut act0);
+            for i in 0..n {
+                let want = {
+                    let z = g[i] as f64;
+                    z / (1.0 + (-z).exp()) * u[i] as f64
+                };
+                let rel = (act0[i] as f64 - want).abs() / want.abs().max(1.0);
+                assert!(rel < 1e-5, "swiglu: {} vs {want}", act0[i]);
+            }
+            for level in available_levels() {
+                let mut s2 = row.clone();
+                let (m2, i2) = softmax_row_with(level, &mut s2);
+                assert_eq!(mx.to_bits(), m2.to_bits());
+                assert_eq!(inv.to_bits(), i2.to_bits());
+                assert!(srow.iter().zip(s2.iter()).all(|(a, b)| a.to_bits() == b.to_bits()));
+                let mut sig = vec![0f32; n];
+                let mut act = vec![0f32; n];
+                swiglu_fwd_with(level, &g, &u, &mut sig, &mut act);
+                assert!(sig0.iter().zip(sig.iter()).all(|(a, b)| a.to_bits() == b.to_bits()));
+                assert!(act0.iter().zip(act.iter()).all(|(a, b)| a.to_bits() == b.to_bits()));
+            }
+        }
+    }
+
+    /// f64 reference attention in the interleaved `[B·T, H·hd]` layout.
+    #[allow(clippy::too_many_arguments)]
+    fn naive_attention_f64(
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        b: usize,
+        t: usize,
+        h: usize,
+        hd: usize,
+        causal: bool,
+    ) -> Vec<f64> {
+        let d = h * hd;
+        let mut out = vec![0f64; b * t * d];
+        let inv_sqrt = 1.0 / (hd as f64).sqrt();
+        for bi in 0..b {
+            for hh in 0..h {
+                for t1 in 0..t {
+                    let limit = if causal { t1 + 1 } else { t };
+                    let mut scores = vec![0f64; limit];
+                    for (t2, s) in scores.iter_mut().enumerate() {
+                        for di in 0..hd {
+                            *s += q[(bi * t + t1) * d + hh * hd + di] as f64
+                                * k[(bi * t + t2) * d + hh * hd + di] as f64;
+                        }
+                        *s *= inv_sqrt;
+                    }
+                    let max = scores.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                    let mut sum = 0f64;
+                    for s in scores.iter_mut() {
+                        *s = (*s - max).exp();
+                        sum += *s;
+                    }
+                    for s in scores.iter_mut() {
+                        *s /= sum;
+                    }
+                    for (t2, p) in scores.iter().enumerate() {
+                        for di in 0..hd {
+                            out[(bi * t + t1) * d + hh * hd + di] +=
+                                p * v[(bi * t + t2) * d + hh * hd + di] as f64;
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Run the fused forward and gather into the interleaved layout.
+    #[allow(clippy::too_many_arguments)]
+    fn fused_fwd(
+        level: SimdLevel,
+        threads: usize,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        b: usize,
+        t: usize,
+        h: usize,
+        hd: usize,
+        causal: bool,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let mut ctx_hm = vec![0f32; b * h * t * hd];
+        let mut stats = vec![0f32; b * h * 2 * t];
+        let mut scratch = vec![0f32; b * h * t];
+        fused_attention_fwd_with(
+            level, threads, q, k, v, b, t, h, hd, causal, &mut ctx_hm, &mut stats, &mut scratch,
+        );
+        let mut ctx = vec![0f32; b * t * h * hd];
+        gather_heads(&ctx_hm, b, t, h, hd, &mut ctx);
+        (ctx, stats)
+    }
+
+    #[test]
+    fn fused_attention_matches_naive_f64_attention() {
+        let mut rng = Rng::new(691);
+        for &(b, t, h, hd) in &[(1, 1, 1, 4), (2, 5, 2, 3), (1, 9, 3, 8)] {
+            for &causal in &[true, false] {
+                let d = h * hd;
+                let q = randv(&mut rng, b * t * d);
+                let k = randv(&mut rng, b * t * d);
+                let v = randv(&mut rng, b * t * d);
+                let (ctx, _) = fused_fwd(simd_level(), 1, &q, &k, &v, b, t, h, hd, causal);
+                let want = naive_attention_f64(&q, &k, &v, b, t, h, hd, causal);
+                for (g, w) in ctx.iter().zip(want.iter()) {
+                    let rel = (*g as f64 - w).abs() / w.abs().max(1.0);
+                    assert!(rel < 1e-4, "fused vs naive: {g} vs {w} (causal={causal})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_attention_is_bitwise_identical_across_levels_and_threads() {
+        let mut rng = Rng::new(733);
+        let (b, t, h, hd) = (2, 7, 3, 5);
+        let d = h * hd;
+        let q = randv(&mut rng, b * t * d);
+        let k = randv(&mut rng, b * t * d);
+        let v = randv(&mut rng, b * t * d);
+        for &causal in &[true, false] {
+            let (ctx0, st0) = fused_fwd(SimdLevel::Scalar, 1, &q, &k, &v, b, t, h, hd, causal);
+            let dctx = randv(&mut rng, b * t * d);
+            let mut dq0 = vec![0f32; b * h * t * hd];
+            let mut dk0 = vec![0f32; b * h * t * hd];
+            let mut dv0 = vec![0f32; b * h * t * hd];
+            let mut sc = vec![0f32; b * h * 2 * t];
+            fused_attention_bwd_with(
+                SimdLevel::Scalar, 1, &q, &k, &v, &st0, &dctx, b, t, h, hd, causal, &mut dq0,
+                &mut dk0, &mut dv0, &mut sc,
+            );
+            for level in available_levels() {
+                for threads in [1usize, 2, 4] {
+                    let (ctx, st) = fused_fwd(level, threads, &q, &k, &v, b, t, h, hd, causal);
+                    assert!(
+                        ctx0.iter().zip(ctx.iter()).all(|(a, x)| a.to_bits() == x.to_bits()),
+                        "fwd ctx diverged at {level:?}/{threads}t"
+                    );
+                    assert!(
+                        st0.iter().zip(st.iter()).all(|(a, x)| a.to_bits() == x.to_bits()),
+                        "fwd stats diverged at {level:?}/{threads}t"
+                    );
+                    let mut dq = vec![0f32; b * h * t * hd];
+                    let mut dk = vec![0f32; b * h * t * hd];
+                    let mut dv = vec![0f32; b * h * t * hd];
+                    fused_attention_bwd_with(
+                        level, threads, &q, &k, &v, &st, &dctx, b, t, h, hd, causal, &mut dq,
+                        &mut dk, &mut dv, &mut sc,
+                    );
+                    for (name, a0, a) in [("dq", &dq0, &dq), ("dk", &dk0, &dk), ("dv", &dv0, &dv)]
+                    {
+                        assert!(
+                            a0.iter().zip(a.iter()).all(|(x, y)| x.to_bits() == y.to_bits()),
+                            "bwd {name} diverged at {level:?}/{threads}t"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_attention_backward_passes_finite_differences() {
+        // loss = Σ ctx ⊙ W for fixed random W, so dctx = W; check dq/dk/dv
+        // against central differences through the fused forward.
+        let mut rng = Rng::new(797);
+        let (b, t, h, hd) = (1, 4, 2, 3);
+        let d = h * hd;
+        let q = randv(&mut rng, b * t * d);
+        let k = randv(&mut rng, b * t * d);
+        let v = randv(&mut rng, b * t * d);
+        let w = randv(&mut rng, b * t * d);
+        for &causal in &[true, false] {
+            let (_, stats) = fused_fwd(SimdLevel::Scalar, 1, &q, &k, &v, b, t, h, hd, causal);
+            let mut dq_hm = vec![0f32; b * h * t * hd];
+            let mut dk_hm = vec![0f32; b * h * t * hd];
+            let mut dv_hm = vec![0f32; b * h * t * hd];
+            let mut sc = vec![0f32; b * h * 2 * t];
+            fused_attention_bwd_with(
+                SimdLevel::Scalar, 1, &q, &k, &v, &stats, &w, b, t, h, hd, causal, &mut dq_hm,
+                &mut dk_hm, &mut dv_hm, &mut sc,
+            );
+            let mut dq = vec![0f32; b * t * d];
+            let mut dk = vec![0f32; b * t * d];
+            let mut dv = vec![0f32; b * t * d];
+            gather_heads(&dq_hm, b, t, h, hd, &mut dq);
+            gather_heads(&dk_hm, b, t, h, hd, &mut dk);
+            gather_heads(&dv_hm, b, t, h, hd, &mut dv);
+            let loss = |q: &[f32], k: &[f32], v: &[f32]| -> f64 {
+                let (ctx, _) = fused_fwd(SimdLevel::Scalar, 1, q, k, v, b, t, h, hd, causal);
+                ctx.iter().zip(w.iter()).map(|(c, wi)| *c as f64 * *wi as f64).sum()
+            };
+            let eps = 1e-2f32;
+            for (name, xs, grad) in
+                [("dq", &q, &dq), ("dk", &k, &dk), ("dv", &v, &dv)]
+            {
+                for i in 0..xs.len() {
+                    let mut plus = xs.to_vec();
+                    let mut minus = xs.to_vec();
+                    plus[i] += eps;
+                    minus[i] -= eps;
+                    let fd = match name {
+                        "dq" => (loss(&plus, &k, &v) - loss(&minus, &k, &v)) / (2.0 * eps as f64),
+                        "dk" => (loss(&q, &plus, &v) - loss(&q, &minus, &v)) / (2.0 * eps as f64),
+                        _ => (loss(&q, &k, &plus) - loss(&q, &k, &minus)) / (2.0 * eps as f64),
+                    };
+                    let an = grad[i] as f64;
+                    assert!(
+                        (fd - an).abs() <= 2e-2 * fd.abs().max(1.0),
+                        "{name}[{i}]: fd {fd} vs analytic {an} (causal={causal})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gather_heads_inverts_the_head_major_layout() {
+        let (b, t, h, hd) = (2, 3, 4, 5);
+        let d = h * hd;
+        let inter: Vec<f32> = (0..b * t * d).map(|i| i as f32).collect();
+        // scatter to head-major by the documented index map, then gather
+        let mut hm = vec![0f32; b * h * t * hd];
+        for bi in 0..b {
+            for hh in 0..h {
+                for t1 in 0..t {
+                    for di in 0..hd {
+                        hm[((bi * h + hh) * t + t1) * hd + di] =
+                            inter[(bi * t + t1) * d + hh * hd + di];
+                    }
+                }
+            }
+        }
+        let mut back = vec![0f32; b * t * d];
+        gather_heads(&hm, b, t, h, hd, &mut back);
+        assert_eq!(inter, back);
     }
 }

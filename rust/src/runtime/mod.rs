@@ -8,6 +8,7 @@
 pub mod artifact;
 pub mod async_eval;
 pub mod backend;
+pub mod host_arena;
 pub mod host_backend;
 pub mod host_kernels;
 pub mod manifest;

@@ -214,6 +214,14 @@ pub struct StepTimings {
     pub eval_secs: f64,
     /// Forward-only eval executions.
     pub evals: usize,
+    /// Host-engine workspace bytes served from the arena's free lists
+    /// during train steps (see `runtime::host_arena`). Zero on the XLA
+    /// engine and with `GRADES_HOST_ARENA=0`.
+    pub arena_carved_bytes: u64,
+    /// Host-engine workspace bytes freshly allocated during train
+    /// steps. After the first step this stays flat — steady-state steps
+    /// carve everything (a host test pins the delta to zero).
+    pub arena_fresh_bytes: u64,
 }
 
 impl StepTimings {
@@ -232,6 +240,8 @@ impl StepTimings {
         self.probes += o.probes;
         self.eval_secs += o.eval_secs;
         self.evals += o.evals;
+        self.arena_carved_bytes += o.arena_carved_bytes;
+        self.arena_fresh_bytes += o.arena_fresh_bytes;
     }
 
     /// Mean host→device bandwidth (GB/s); NaN when nothing was uploaded.
@@ -256,6 +266,8 @@ impl StepTimings {
         m.insert("probes".into(), Json::Num(self.probes as f64));
         m.insert("eval_secs".into(), Json::Num(self.eval_secs));
         m.insert("evals".into(), Json::Num(self.evals as f64));
+        m.insert("arena_carved_bytes".into(), Json::Num(self.arena_carved_bytes as f64));
+        m.insert("arena_fresh_bytes".into(), Json::Num(self.arena_fresh_bytes as f64));
         Json::Obj(m)
     }
 }

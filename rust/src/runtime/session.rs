@@ -232,13 +232,17 @@ impl<'b> Session<'b> {
             *cache = Some(buf);
         }
         let ctrl_buf = cache.as_ref().expect("ctrl cache populated above");
+        let (carved0, fresh0) = super::host_arena::arena_counters();
         let et = Timer::new();
         let next = self.backend.train_step(state, &io, ctrl_buf, &realized)?;
+        let (carved1, fresh1) = super::host_arena::arena_counters();
         {
             let mut tm = self.timings.borrow_mut();
             tm.exec_secs += et.secs();
             tm.execs += 1;
             tm.dw_elided += realized.n_omitted();
+            tm.arena_carved_bytes += carved1 - carved0;
+            tm.arena_fresh_bytes += fresh1 - fresh0;
         }
         drop(cache);
         self.state = Some(next);

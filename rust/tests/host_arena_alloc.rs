@@ -1,0 +1,137 @@
+//! The zero-allocation acceptance test for the host engine's workspace
+//! arena (`runtime::host_arena`), in its own test binary because it
+//! installs a process-wide counting `#[global_allocator]` and reads
+//! process-global counters — a single `#[test]` keeps concurrent test
+//! threads from polluting the per-step deltas. (Integration tests are
+//! compiled with `cfg(test)`, so the counting allocator never exists in
+//! the shipped library.)
+//!
+//! What it pins, on a real `Session` training loop:
+//!
+//! 1. after a short warm-up, every steady-state train step serves *all*
+//!    of its workspace from the arena's free lists — the fresh-bytes
+//!    counter stays exactly flat, and total heap traffic per step
+//!    collapses to a small residue (batch/ctrl staging, a few f64
+//!    scratch vectors) far below the first step's;
+//! 2. `StepTimings` surfaces the same accounting (`arena_carved_bytes`
+//!    / `arena_fresh_bytes`);
+//! 3. with the arena disabled (`GRADES_HOST_ARENA=0` semantics via the
+//!    test override), every step allocates its full workspace fresh.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use grades::config::RepoConfig;
+use grades::coordinator::scheduler::StepPlan;
+use grades::data;
+use grades::runtime::backend::Backend;
+use grades::runtime::host_arena;
+use grades::runtime::host_backend::HostBackend;
+use grades::runtime::session::Session;
+
+/// Counts cumulative allocated bytes (allocations only — frees don't
+/// subtract, so the counter is monotone and deltas measure traffic,
+/// not footprint).
+struct CountingAlloc;
+
+static ALLOCATED_BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATED_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if new_size > layout.size() {
+            ALLOCATED_BYTES.fetch_add((new_size - layout.size()) as u64, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+fn allocated() -> u64 {
+    ALLOCATED_BYTES.load(Ordering::Relaxed)
+}
+
+#[test]
+fn steady_state_train_steps_stop_heap_growth() {
+    let cfg = RepoConfig::by_name("lm-tiny-fp").unwrap();
+    let b = HostBackend::for_config(&cfg).unwrap();
+    let m = b.manifest();
+    let mut ds = data::build_lm(&cfg, m).unwrap();
+    let batch = ds.train.next_batch();
+    let plan = StepPlan::all_active(m.n_components);
+    let ctrl = |t: f32| {
+        let mut c = vec![0f32; m.ctrl_len];
+        c[0] = t;
+        c[1] = 1e-3;
+        c[2] = 1.0;
+        for x in c.iter_mut().skip(m.ctrl_mask_offset) {
+            *x = 1.0;
+        }
+        c
+    };
+
+    host_arena::set_arena_override(Some(true));
+    let mut s = Session::new(&b);
+    s.init(5).unwrap();
+
+    // Step 1 populates the pools: the full workspace is fresh.
+    let (_, f0) = host_arena::arena_counters();
+    let a0 = allocated();
+    s.train_step(&batch, &ctrl(1.0), &plan).unwrap();
+    let (_, f1) = host_arena::arena_counters();
+    let step1_fresh = f1 - f0;
+    let step1_alloc = allocated() - a0;
+    assert!(step1_fresh > 0, "first step must build its workspace fresh");
+
+    // Warm-up: peak live counts per buffer size can still grow a little.
+    for t in 2..=3 {
+        s.train_step(&batch, &ctrl(t as f32), &plan).unwrap();
+    }
+
+    // Steady state: zero fresh arena bytes, and total heap traffic per
+    // step (batch/ctrl staging, small f64 scratch, Rc bookkeeping) far
+    // below the first step's workspace build.
+    for t in 4..=8 {
+        let (_, fa) = host_arena::arena_counters();
+        let aa = allocated();
+        s.train_step(&batch, &ctrl(t as f32), &plan).unwrap();
+        let (_, fb) = host_arena::arena_counters();
+        assert_eq!(fb - fa, 0, "step {t} allocated fresh arena bytes");
+        let step_alloc = allocated() - aa;
+        assert!(
+            step_alloc * 4 < step1_alloc,
+            "step {t} heap traffic {step_alloc}B is not far below step 1's {step1_alloc}B"
+        );
+    }
+
+    // The timings surface carries the same accounting.
+    let tm = s.timings();
+    assert!(tm.arena_carved_bytes > 0, "steady-state carves must be visible in StepTimings");
+    assert!(
+        tm.arena_fresh_bytes >= step1_fresh,
+        "StepTimings must account the step-1 workspace build"
+    );
+
+    // Disabled arena: the same step allocates its whole workspace fresh.
+    host_arena::set_arena_override(Some(false));
+    let (_, fa) = host_arena::arena_counters();
+    s.train_step(&batch, &ctrl(9.0), &plan).unwrap();
+    let (_, fb) = host_arena::arena_counters();
+    assert!(
+        fb - fa >= step1_fresh,
+        "disabled arena must allocate every buffer fresh ({}B < {}B)",
+        fb - fa,
+        step1_fresh
+    );
+    host_arena::set_arena_override(None);
+}

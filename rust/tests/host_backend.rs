@@ -540,6 +540,22 @@ fn check_golden(config: &str) {
 }
 
 #[test]
+fn arena_on_off_trajectories_are_bitwise_identical() {
+    // The workspace arena only changes where bytes live, never a single
+    // arithmetic op — a full GradES trajectory (losses, gnorm, gdiff
+    // bits, freeze events, final val) must not move by a bit. Toggling
+    // the process-global override mid-suite is safe for the tests
+    // running concurrently for exactly the same reason.
+    use grades::runtime::host_arena;
+    host_arena::set_arena_override(Some(true));
+    let on = golden_trajectory("lm-tiny-fp");
+    host_arena::set_arena_override(Some(false));
+    let off = golden_trajectory("lm-tiny-fp");
+    host_arena::set_arena_override(None);
+    assert_eq!(on, off, "arena on/off changed the trajectory");
+}
+
+#[test]
 fn golden_trajectory_lm_tiny_fp() {
     check_golden("lm-tiny-fp");
 }

@@ -596,6 +596,148 @@ fn prop_kernels_bitwise_identical_across_simd_levels_and_threads() {
 }
 
 #[test]
+fn prop_fused_attention_and_elementwise_kernels_bitwise_identical() {
+    // The PR-10 extension of the contract above to the second kernel
+    // family: row-blocked fused attention (forward + backward, causal
+    // and non-causal) and the softmax/SwiGLU elementwise kernels, swept
+    // over SIMD levels × threads {1, 2, 4} × arena on/off — everything
+    // bitwise equal to the scalar/1-thread/arena-on result, anchored
+    // against a naive f64 attention and a naive f64 silu·up.
+    use grades::runtime::host_arena::{self, buf_raw, buf_zeroed};
+    use grades::runtime::host_kernels as hk;
+    fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+        a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+    let levels = hk::available_levels();
+    let mut rng = Rng::new(0xa77e);
+    for trial in 0..8 {
+        let (b, t, h, hd) =
+            (1 + rng.below(2), 1 + rng.below(9), 1 + rng.below(3), 1 + rng.below(8));
+        let d = h * hd;
+        let q: Vec<f32> = (0..b * t * d).map(|_| rng.gauss() as f32).collect();
+        let k: Vec<f32> = (0..b * t * d).map(|_| rng.gauss() as f32).collect();
+        let v: Vec<f32> = (0..b * t * d).map(|_| rng.gauss() as f32).collect();
+        let dctx: Vec<f32> = (0..b * t * d).map(|_| rng.gauss() as f32).collect();
+        for causal in [false, true] {
+            // one full fwd+bwd at an explicit level/thread/arena choice,
+            // with every buffer carved so arena-on runs exercise recycled
+            // (stale-content) storage
+            let run = |level: hk::SimdLevel, threads: usize, arena: bool| {
+                host_arena::set_arena_override(Some(arena));
+                let mut ctx = buf_raw(b * h * t * hd);
+                let mut stats = buf_raw(b * h * 2 * t);
+                let mut scratch = buf_raw(b * h * t);
+                hk::fused_attention_fwd_with(
+                    level, threads, &q, &k, &v, b, t, h, hd, causal, &mut ctx, &mut stats,
+                    &mut scratch,
+                );
+                let mut gathered = buf_raw(b * t * d);
+                hk::gather_heads(&ctx, b, t, h, hd, &mut gathered);
+                let mut dq = buf_zeroed(b * h * t * hd);
+                let mut dk = buf_zeroed(b * h * t * hd);
+                let mut dv = buf_zeroed(b * h * t * hd);
+                let mut bscr = buf_raw(b * h * 2 * t);
+                hk::fused_attention_bwd_with(
+                    level, threads, &q, &k, &v, &stats, &dctx, b, t, h, hd, causal, &mut dq,
+                    &mut dk, &mut dv, &mut bscr,
+                );
+                host_arena::set_arena_override(None);
+                (gathered.to_vec(), stats.to_vec(), dq.to_vec(), dk.to_vec(), dv.to_vec())
+            };
+            let base = run(hk::SimdLevel::Scalar, 1, true);
+            // anchor: the fused forward is a real attention (vs naive f64)
+            let mut naive = vec![0f64; b * t * d];
+            for bi in 0..b {
+                for hh in 0..h {
+                    for t1 in 0..t {
+                        let limit = if causal { t1 + 1 } else { t };
+                        let mut scores = vec![0f64; limit];
+                        for (t2, s) in scores.iter_mut().enumerate() {
+                            for di in 0..hd {
+                                *s += q[(bi * t + t1) * d + hh * hd + di] as f64
+                                    * k[(bi * t + t2) * d + hh * hd + di] as f64;
+                            }
+                            *s /= (hd as f64).sqrt();
+                        }
+                        let mx = scores.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                        let sum: f64 = scores.iter().map(|s| (s - mx).exp()).sum();
+                        for (t2, s) in scores.iter().enumerate() {
+                            let p = (s - mx).exp() / sum;
+                            for di in 0..hd {
+                                naive[(bi * t + t1) * d + hh * hd + di] +=
+                                    p * v[(bi * t + t2) * d + hh * hd + di] as f64;
+                            }
+                        }
+                    }
+                }
+            }
+            for (x, y) in base.0.iter().zip(&naive) {
+                assert!(
+                    (*x as f64 - y).abs() < 1e-4 * y.abs().max(1.0),
+                    "trial {trial} causal={causal}: fused attention drifted from naive f64"
+                );
+            }
+            for &level in &levels {
+                for threads in [1usize, 2, 4] {
+                    for arena in [true, false] {
+                        let got = run(level, threads, arena);
+                        let ctx = format!(
+                            "trial {trial} {level:?}/{threads}t arena={arena} causal={causal} \
+                             (b={b} t={t} h={h} hd={hd})"
+                        );
+                        assert!(bits_eq(&got.0, &base.0), "{ctx}: ctx diverged");
+                        assert!(bits_eq(&got.1, &base.1), "{ctx}: softmax stats diverged");
+                        assert!(bits_eq(&got.2, &base.2), "{ctx}: dq diverged");
+                        assert!(bits_eq(&got.3, &base.3), "{ctx}: dk diverged");
+                        assert!(bits_eq(&got.4, &base.4), "{ctx}: dv diverged");
+                    }
+                }
+            }
+        }
+        // elementwise family: SwiGLU fwd+bwd and the vexp-backed softmax
+        // are single-op f32 math — bitwise across levels by construction,
+        // pinned here anyway
+        let n = 1 + rng.below(70);
+        let gate: Vec<f32> = (0..n).map(|_| (rng.gauss() * 2.0) as f32).collect();
+        let up: Vec<f32> = (0..n).map(|_| rng.gauss() as f32).collect();
+        let dact: Vec<f32> = (0..n).map(|_| rng.gauss() as f32).collect();
+        let swig = |level: hk::SimdLevel| {
+            let (mut sig, mut act) = (vec![0f32; n], vec![0f32; n]);
+            hk::swiglu_fwd_with(level, &gate, &up, &mut sig, &mut act);
+            let (mut dgp, mut dup) = (vec![0f32; n], vec![0f32; n]);
+            hk::swiglu_bwd(&dact, &gate, &up, &sig, &mut dgp, &mut dup);
+            (sig, act, dgp, dup)
+        };
+        let sbase = swig(hk::SimdLevel::Scalar);
+        for i in 0..n {
+            let z = gate[i] as f64;
+            let want = z / (1.0 + (-z).exp()) * up[i] as f64;
+            assert!(
+                (sbase.1[i] as f64 - want).abs() < 1e-5 * want.abs().max(1.0),
+                "trial {trial}: swiglu forward drifted from f64 silu·up"
+            );
+        }
+        let row: Vec<f32> = (0..1 + rng.below(40)).map(|_| (rng.gauss() * 3.0) as f32).collect();
+        let mut rbase = row.clone();
+        let stats_base = hk::softmax_row_with(hk::SimdLevel::Scalar, &mut rbase);
+        let psum: f64 = rbase.iter().map(|&x| x as f64).sum();
+        assert!((psum - 1.0).abs() < 1e-4, "trial {trial}: softmax row does not sum to 1");
+        for &level in &levels {
+            let got = swig(level);
+            assert!(bits_eq(&got.0, &sbase.0), "trial {trial} {level:?}: sigmoid diverged");
+            assert!(bits_eq(&got.1, &sbase.1), "trial {trial} {level:?}: swiglu act diverged");
+            assert!(bits_eq(&got.2, &sbase.2), "trial {trial} {level:?}: d_gate diverged");
+            assert!(bits_eq(&got.3, &sbase.3), "trial {trial} {level:?}: d_up diverged");
+            let mut r = row.clone();
+            let st = hk::softmax_row_with(level, &mut r);
+            assert_eq!(st.0.to_bits(), stats_base.0.to_bits(), "{level:?}: softmax max");
+            assert_eq!(st.1.to_bits(), stats_base.1.to_bits(), "{level:?}: softmax inv");
+            assert!(bits_eq(&r, &rbase), "trial {trial} {level:?}: softmax probs diverged");
+        }
+    }
+}
+
+#[test]
 fn prop_merged_weight_eval_matches_f64_adapter_fold() {
     // lora.py merge semantics as a property: on *random* adapters (the
     // init puts B at 0, which would make the fold a no-op) the LoRA
